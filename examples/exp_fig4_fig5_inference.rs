@@ -1,0 +1,20 @@
+//! Regenerates paper Figs. 4+5 (inference trajectories + batch adaptation).
+//! Usage: cargo run --release --example exp_fig4_fig5_inference -- [quick|full] [preset]
+use dynamix::{config::Scale, harness, runtime::ArtifactStore};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
+    let store = Arc::new(ArtifactStore::open_default()?);
+    match std::env::args().nth(2) {
+        Some(preset) => {
+            harness::fig4_fig5_inference(store, &preset, scale)?;
+        }
+        None => {
+            for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
+                harness::fig4_fig5_inference(store.clone(), preset, scale)?;
+            }
+        }
+    }
+    Ok(())
+}

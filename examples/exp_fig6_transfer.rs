@@ -1,0 +1,12 @@
+//! Regenerates paper Fig. 6 (policy transfer across model families).
+//! Usage: cargo run --release --example exp_fig6_transfer -- [quick|full]
+use dynamix::{config::Scale, harness, runtime::ArtifactStore};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
+    let store = Arc::new(ArtifactStore::open_default()?);
+    harness::fig6_transfer(store.clone(), "transfer-vgg16-src", "transfer-vgg19-dst", scale)?;
+    harness::fig6_transfer(store, "transfer-resnet34-src", "transfer-resnet50-dst", scale)?;
+    Ok(())
+}

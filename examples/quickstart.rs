@@ -1,0 +1,55 @@
+//! Quickstart: the smallest end-to-end DYNAMIX loop.
+//!
+//! Builds a 4-worker simulated cluster training `vgg11_mini` (SGD) on the
+//! synthetic CIFAR-10 stand-in, runs a few PPO decision cycles, and prints
+//! what the arbitrator decides. Requires `make artifacts` first.
+//!
+//!     cargo run --release --example quickstart
+
+use dynamix::config::ExperimentConfig;
+use dynamix::coordinator::Coordinator;
+use dynamix::metrics::RunRecord;
+use dynamix::runtime::ArtifactStore;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::open_default()?);
+    println!(
+        "loaded manifest: {} artifacts, models: {:?}",
+        store.manifest.artifacts.len(),
+        store.manifest.models.keys().collect::<Vec<_>>()
+    );
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "quickstart".into();
+    cfg.cluster.n_workers = 4;
+    cfg.batch.initial = 64;
+    cfg.rl.k = 3;
+    cfg.steps_per_episode = 8;
+
+    // 1. Train the PPO arbitrator for two short episodes.
+    let mut coord = Coordinator::new(cfg, store)?;
+    println!("\n--- RL training (2 episodes) ---");
+    for r in coord.train_rl(2)? {
+        println!(
+            "episode {}: mean_return={:+.2} final_eval_acc={:.3} sim_time={:.0}s",
+            r.episode, r.mean_return, r.final_eval_acc, r.sim_time
+        );
+    }
+
+    // 2. Deploy the learned policy greedily.
+    println!("\n--- inference (frozen policy) ---");
+    let mut record = RunRecord::new("quickstart");
+    let summary = coord.run_inference(8, &mut record)?;
+    for p in &record.points {
+        println!(
+            "cycle@iter {:3}  sim_t={:6.1}s  train_acc={:.3}  eval_acc={:.3}  batch={:.0}±{:.0}",
+            p.iter, p.sim_time, p.train_acc, p.eval_acc, p.batch_mean, p.batch_std
+        );
+    }
+    println!(
+        "\nfinal eval acc {:.3} after {} iterations ({:.0} simulated seconds)",
+        summary.final_eval_acc, summary.total_iters, summary.total_sim_time
+    );
+    Ok(())
+}

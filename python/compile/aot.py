@@ -1,0 +1,213 @@
+"""AOT compiler: lower every DYNAMIX computation to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards. Python never runs on the decision/training path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Emits ``artifacts/manifest.json`` describing every artifact's I/O schema so
+the Rust runtime needs no hardcoded shape knowledge.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--subset smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, policy, train_step
+
+# Batch-bucket ladder: XLA shapes are static, DYNAMIX batch sizes are
+# dynamic. Every per-worker batch in [32,1024] (all action deltas are
+# multiples of 25... clamped) and every fused-global batch (sum over <=32
+# workers) maps to the smallest bucket >= B, tail masked. All multiples of
+# 32 so the Pallas M-tile never needs masking.
+BUCKETS = [32, 64, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048, 3072, 4096, 6144, 8192, 12288, 16384, 24576, 32768]
+EVAL_BATCH = 1024
+
+# (model, optimizer) combos the paper's experiments exercise (§VI).
+TRAIN_COMBOS = [
+    ("vgg11_mini", "sgd"),
+    ("vgg11_mini", "adam"),
+    ("vgg16_mini", "sgd"),
+    ("vgg19_mini", "sgd"),
+    ("resnet34_mini", "sgd"),
+    ("resnet50_mini", "sgd"),
+]
+
+SMOKE_COMBOS = [("vgg11_mini", "sgd")]
+SMOKE_BUCKETS = [32, 64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_schema(specs):
+    return [
+        {"shape": list(s.shape), "dtype": s.dtype.name}
+        for s in specs
+    ]
+
+
+def _out_schema(fn, specs):
+    outs = jax.eval_shape(fn, *specs)
+    flat, _ = jax.tree.flatten(outs)
+    return [{"shape": list(s.shape), "dtype": s.dtype.name} for s in flat]
+
+
+def _write(out_dir, name, fn, specs, meta, manifest, t0):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry = dict(meta)
+    entry["file"] = f"{name}.hlo.txt"
+    entry["inputs"] = _spec_schema(specs)
+    entry["outputs"] = _out_schema(fn, specs)
+    entry["hlo_bytes"] = len(text)
+    entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+    manifest["artifacts"][name] = entry
+    print(f"[aot {time.time()-t0:7.1f}s] {name}: {len(text)} bytes", flush=True)
+
+
+def build(out_dir: str, subset: str = "full") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    combos = SMOKE_COMBOS if subset == "smoke" else TRAIN_COMBOS
+    buckets = SMOKE_BUCKETS if subset == "smoke" else BUCKETS
+
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "state_dim": policy.STATE_DIM,
+        "n_actions": policy.N_ACTIONS,
+        "max_workers": policy.MAX_WORKERS,
+        "ppo_minibatch": policy.MINIBATCH,
+        "buckets": buckets,
+        "eval_batch": EVAL_BATCH,
+        "feature_dim": models.FEATURE_DIM,
+        "models": {
+            name: {
+                "family": cfg.family,
+                "depth": cfg.depth,
+                "width": cfg.width,
+                "num_classes": cfg.num_classes,
+                "feature_dim": cfg.feature_dim,
+                "param_count": models.param_count(cfg),
+                "dataset": cfg.dataset,
+            }
+            for name, cfg in models.MODEL_ZOO.items()
+        },
+        "policy_param_count": policy.policy_param_count(),
+        "artifacts": {},
+    }
+
+    # --- train steps: one artifact per (model, optimizer, bucket) ---
+    for model_name, opt in combos:
+        cfg = models.MODEL_ZOO[model_name]
+        fn = train_step.make_train_step(cfg, opt)
+        for bucket in buckets:
+            specs = train_step.train_step_specs(cfg, opt, bucket)
+            _write(
+                out_dir,
+                f"train_{model_name}_{opt}_b{bucket}",
+                fn,
+                specs,
+                {
+                    "kind": "train_step",
+                    "model": model_name,
+                    "optimizer": opt,
+                    "bucket": bucket,
+                    "param_count": models.param_count(cfg),
+                },
+                manifest,
+                t0,
+            )
+
+    # --- eval steps: one per model ---
+    for model_name in sorted({m for m, _ in combos}):
+        cfg = models.MODEL_ZOO[model_name]
+        fn = train_step.make_eval_step(cfg)
+        specs = train_step.eval_step_specs(cfg, EVAL_BATCH)
+        _write(
+            out_dir,
+            f"eval_{model_name}",
+            fn,
+            specs,
+            {
+                "kind": "eval_step",
+                "model": model_name,
+                "bucket": EVAL_BATCH,
+                "param_count": models.param_count(cfg),
+            },
+            manifest,
+            t0,
+        )
+
+    # --- policy artifacts ---
+    _write(
+        out_dir, "policy_forward", policy.make_policy_forward(),
+        policy.forward_specs(), {"kind": "policy_forward"}, manifest, t0,
+    )
+    _write(
+        out_dir, "policy_update", policy.make_policy_update(),
+        policy.update_specs(), {"kind": "policy_update"}, manifest, t0,
+    )
+    _write(
+        out_dir, "policy_update_simple", policy.make_policy_update_simple(),
+        policy.update_specs(), {"kind": "policy_update_simple"}, manifest, t0,
+    )
+
+    # --- initial parameter snapshots (seeded) so Rust never re-derives
+    #     init logic: raw little-endian f32, one file per model + policy ---
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+
+    for model_name in sorted({m for m, _ in combos}):
+        cfg = models.MODEL_ZOO[model_name]
+        for seed in range(4):
+            flat, _ = ravel_pytree(models.init_params(cfg, seed=seed))
+            np.asarray(flat, dtype="<f4").tofile(
+                os.path.join(out_dir, f"init_{model_name}_seed{seed}.f32")
+            )
+    for seed in range(4):
+        flat, _ = ravel_pytree(policy.init_policy_params(seed=seed))
+        np.asarray(flat, dtype="<f4").tofile(
+            os.path.join(out_dir, f"init_policy_seed{seed}.f32")
+        )
+    manifest["init_seeds"] = 4
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts in {time.time()-t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--subset", choices=["full", "smoke"], default="full")
+    args = ap.parse_args()
+    build(args.out_dir, args.subset)
+
+
+if __name__ == "__main__":
+    main()

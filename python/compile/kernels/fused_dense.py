@@ -1,0 +1,168 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation.
+
+This is the compute hot spot of every model in the zoo (the mini VGG /
+ResNet families are dense stacks). The kernel is written TPU-shaped even
+though this environment executes it under ``interpret=True`` on the CPU
+PJRT plugin (real Mosaic lowering emits a TPU custom-call the CPU client
+cannot run — see DESIGN.md §Hardware-Adaptation):
+
+ * the (M,K)x(K,N) product is tiled into MXU-aligned blocks; block sizes
+   adapt down for the mini models but the schedule is the one a full-size
+   deployment would use (128x128x128 blocks, K innermost "arbitrary" axis);
+ * the accumulator lives in the output block across the K grid axis —
+   revisiting the same output block for every k step is the Pallas idiom
+   for a VMEM-resident accumulator;
+ * bias add + activation are fused into the K-epilogue so the activation
+   never round-trips to HBM between the matmul and the nonlinearity.
+
+Autodiff: ``pallas_call`` has no automatic transpose, so ``fused_dense``
+carries a ``jax.custom_vjp`` whose backward pass reuses the same tiled
+matmul kernel for dx = g_act @ W^T and dW = x^T @ g_act (g_act = upstream
+grad masked by the activation derivative) — the production answer, not an
+interpret-mode workaround.
+"""
+
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned target tile. The mini models have K,N in {10..128}; the block
+# picker clamps to the actual dim so interpret-mode tracing stays cheap,
+# while full-size dims tile at 128 (the MXU systolic array edge).
+TILE = 128
+# Contraction (K) axis tiles at 512: K never affects MXU face utilization,
+# and a larger K block quarters the sequential accumulation loop that
+# dominates the backward dW = x^T @ g matmul, whose K is the *batch* axis
+# (up to 32768). 512x128 f32 operand tiles stay VMEM-friendly.
+K_TILE = 512
+# Batch (M) axis tiles at 512 — every batch bucket in the ladder is a
+# multiple of 32 (the paper's minimum batch size), so the block picker
+# always finds an exact divisor and no M masking is needed. 512 rows x
+# 128 cols x f32 = 256 KiB per x-tile: well inside VMEM with double
+# buffering, and it keeps the grid small (interpret-mode grid steps lower
+# to XLA while-loop iterations, which dominated the step cost at large
+# buckets before this change — see EXPERIMENTS.md §Perf).
+M_TILE = 512
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target, preferring target."""
+    if dim % target == 0:
+        return target
+    for cand in (256, 128, 96, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Grid = (M/bm, N/bn, K/bk). K is the innermost, sequential axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@partial(jax.jit, static_argnames=("activation", "interpret"))
+def fused_dense_fwd_kernel(x, w, b, activation: str = "relu", interpret: bool = True):
+    """Raw kernel invocation (no VJP). x:[M,K] w:[K,N] b:[N] -> [M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = _block(m, M_TILE), _block(k, K_TILE), _block(n, TILE)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def matmul_kernel(a, b, interpret: bool = True):
+    """Tiled matmul (linear, no bias) on the same schedule; used by bwd."""
+    zero_bias = jnp.zeros((b.shape[1],), jnp.float32)
+    return fused_dense_fwd_kernel(a, b, zero_bias, activation="linear", interpret=interpret)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_dense(x, w, b, activation: str = "relu"):
+    """Differentiable fused dense layer y = act(x @ w + b).
+
+    Forward and both backward matmuls run on the Pallas tiled kernel.
+    """
+    return fused_dense_fwd_kernel(x, w, b, activation=activation)
+
+
+def _fused_dense_fwd(x, w, b, activation):
+    y = fused_dense_fwd_kernel(x, w, b, activation=activation)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "relu":
+        # d relu: pass gradient only where the fused output was positive.
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul_kernel(g, w.T)          # [M,N] @ [N,K] -> [M,K]
+    dw = matmul_kernel(x.T, g)          # [K,M] @ [M,N] -> [K,N]
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int) -> dict:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §Perf).
+
+    Returns bytes for the x tile, w tile, bias tile and output accumulator
+    at the block shapes the picker would choose, plus the total. Used by
+    EXPERIMENTS.md §Perf to document the HBM<->VMEM schedule against the
+    16 MiB/core VMEM budget of a TPUv4-class part.
+    """
+    bm, bk, bn = _block(m, M_TILE), _block(k, K_TILE), _block(n, TILE)
+    f32 = 4
+    x_t, w_t, b_t, o_t = bm * bk * f32, bk * bn * f32, bn * f32, bm * bn * f32
+    return {
+        "block": (bm, bk, bn),
+        "x_tile": x_t,
+        "w_tile": w_t,
+        "bias_tile": b_t,
+        "acc_tile": o_t,
+        "total": x_t + w_t + b_t + o_t,
+    }
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """Fraction of MXU lanes the chosen blocks fill (128x128 systolic array).
+
+    A block of (bm, bk)x(bk, bn) issues bm x bn x bk MACs against a
+    128x128x8-per-cycle array; utilization is the fill of the 128x128 face.
+    """
+    bm, bk, bn = _block(m, M_TILE), _block(k, K_TILE), _block(n, TILE)
+    return min(bm, 128) * min(bn, 128) / (128.0 * 128.0)

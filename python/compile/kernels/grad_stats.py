@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: fused gradient-moment reduction.
+
+DYNAMIX's RL state vector (paper §IV-B) carries sigma_norm and sigma_norm^2
+— the normalized standard deviation / variance of the gradient — so every
+train step must reduce the full flat gradient to its first two moments.
+Doing this with two separate jnp reductions reads the gradient from HBM
+twice; this kernel computes (sum, sum of squares) in a single VMEM pass.
+
+TPU shape: the flat vector is viewed as [P/1024, 1024] (8x128 vreg-aligned
+rows), the grid walks row blocks sequentially, and both partial moments
+accumulate into scalar outputs — revisiting the same (1,1) output block per
+grid step is the Pallas idiom for a carried accumulator. On GPU this would
+be a warp-shuffle tree; on TPU it is a sublane reduction, which is why the
+inner tile is 1024 = 8 sublanes x 128 lanes.
+
+The caller zero-pads the gradient to a multiple of CHUNK; zero padding is
+moment-neutral.
+"""
+
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1024  # 8 sublanes x 128 lanes
+ROWS_PER_BLOCK = 8
+
+
+def padded_len(n: int) -> int:
+    """Length the caller must zero-pad a flat vector of ``n`` entries to."""
+    block = CHUNK * ROWS_PER_BLOCK
+    return ((n + block - 1) // block) * block
+
+
+def _moments_kernel(g_ref, s_ref, ss_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    blk = g_ref[...]
+    s_ref[...] += jnp.sum(blk, dtype=jnp.float32)[None]
+    ss_ref[...] += jnp.sum(blk * blk, dtype=jnp.float32)[None]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def grad_moments(g_flat, interpret: bool = True):
+    """(sum, sum_sq) of a zero-padded flat f32 vector via one fused pass.
+
+    ``g_flat`` must have length padded_len(true_len); returns two f32
+    scalars shaped [1].
+    """
+    n = g_flat.shape[0]
+    block = CHUNK * ROWS_PER_BLOCK
+    assert n % block == 0, f"grad_moments input {n} not padded to {block}"
+    rows = n // CHUNK
+    g2d = g_flat.reshape(rows, CHUNK)
+    nblocks = rows // ROWS_PER_BLOCK
+    s, ss = pl.pallas_call(
+        _moments_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((ROWS_PER_BLOCK, CHUNK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2d)
+    return s[0], ss[0]
+
+
+def normalized_grad_stats(g_flat_padded, n_valid, interpret: bool = True):
+    """sigma_norm and sigma_norm^2 (paper §IV-B) from the fused moments.
+
+    The gradient is RMS-normalized (the scale adaptive optimizers divide
+    out), then sigma_norm = std(g)/ (rms + eps). Matches
+    ref.normalized_grad_stats_ref.
+    """
+    s, ss = grad_moments(g_flat_padded, interpret=interpret)
+    n = jnp.asarray(n_valid, jnp.float32)
+    mean = s / n
+    var = jnp.maximum(ss / n - mean * mean, 0.0)
+    rms = jnp.sqrt(ss / n)
+    eps = 1e-8
+    sigma_norm = jnp.sqrt(var) / (rms + eps)
+    return sigma_norm, sigma_norm * sigma_norm
+
+
+def vmem_footprint_bytes() -> dict:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §Perf)."""
+    f32 = 4
+    g_tile = ROWS_PER_BLOCK * CHUNK * f32
+    return {"g_tile": g_tile, "accumulators": 2 * f32, "total": g_tile + 2 * f32}

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(see python/tests/test_kernels.py). They are also used by the L2 model code
+when ``DYNAMIX_NO_PALLAS=1`` is set, which gives a kernel-free lowering used
+to A/B the Pallas path during debugging.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_dense_ref(x, w, b, activation: str = "relu"):
+    """Reference for the fused matmul + bias + activation kernel.
+
+    x: [M, K] f32, w: [K, N] f32, b: [N] f32 -> [M, N] f32.
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "linear":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def matmul_ref(a, b):
+    """Plain tiled-matmul reference (used by the custom-VJP backward)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def grad_stats_ref(g, n_valid=None):
+    """Reference for the fused gradient-moment reduction kernel.
+
+    Given a flat (possibly zero-padded) gradient vector ``g``, return
+    ``(sum, sum_of_squares)``. Padding entries are zeros so they do not
+    contribute to either moment.
+    """
+    del n_valid  # zero padding means full-vector sums are already correct
+    s = jnp.sum(g, dtype=jnp.float32)
+    ss = jnp.sum(g * g, dtype=jnp.float32)
+    return s, ss
+
+
+def normalized_grad_stats_ref(g, n_valid):
+    """The paper's sigma_norm / sigma_norm^2 statistics (Section IV-B).
+
+    Gradients are RMS-normalized (the scale adaptive optimizers divide out),
+    then sigma_norm is the standard deviation of the normalized gradient and
+    sigma_norm^2 its variance:
+
+        rms        = sqrt(E[g^2])
+        sigma_norm = std(g) / (rms + eps)
+    """
+    s, ss = grad_stats_ref(g)
+    n = jnp.asarray(n_valid, jnp.float32)
+    mean = s / n
+    var = jnp.maximum(ss / n - mean * mean, 0.0)
+    rms = jnp.sqrt(ss / n)
+    eps = 1e-8
+    sigma_norm = jnp.sqrt(var) / (rms + eps)
+    return sigma_norm, sigma_norm * sigma_norm

@@ -1,0 +1,182 @@
+"""L2 PPO policy network + update steps (paper §IV-A), AOT-lowered for Rust.
+
+The centralized arbitrator runs one shared-parameter policy over per-worker
+states (pi_theta(a | s_i, s_global)). Three artifacts:
+
+ * ``policy_forward``       — states[W,S] -> (logits[W,A], values[W]);
+   W = MAX_WORKERS so one PJRT call scores every worker per decision cycle.
+ * ``policy_update``        — the clipped-surrogate PPO minibatch step
+   (Eq. 1) with entropy bonus, value loss, and Adam, over flat theta.
+ * ``policy_update_simple`` — the paper's §IV-A "simplified" variant
+   (cumulative-reward policy gradient, no clipping / no advantage
+   baseline); kept as a first-class artifact so the ablation bench can
+   compare the two (DESIGN.md §6).
+
+The network is a 2x64 tanh MLP with separate logit/value heads — small
+enough that plain jnp is the right tool (the Pallas kernel earns its keep
+on the model hot path, not on a 16-feature MLP; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+STATE_DIM = 16       # see rust/src/rl/state.rs — kept in the manifest
+N_ACTIONS = 5        # {-100, -25, 0, +25, +100}
+MAX_WORKERS = 32     # forward batch; rust masks unused rows
+MINIBATCH = 256      # update minibatch; rust pads + masks
+HIDDEN = 64
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def init_policy_params(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    dims = [STATE_DIM, HIDDEN, HIDDEN]
+    params = {}
+    for i in range(2):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(1.0 / dims[i])
+        params[f"fc{i}"] = {
+            "w": jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32) * scale,
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+    key, k1 = jax.random.split(key)
+    key, k2 = jax.random.split(key)
+    # Near-zero heads: initial policy ~uniform, initial value ~0.
+    params["pi"] = {
+        "w": jax.random.normal(k1, (HIDDEN, N_ACTIONS), jnp.float32) * 0.01,
+        "b": jnp.zeros((N_ACTIONS,), jnp.float32),
+    }
+    params["vf"] = {
+        "w": jax.random.normal(k2, (HIDDEN, 1), jnp.float32) * 0.01,
+        "b": jnp.zeros((1,), jnp.float32),
+    }
+    return params
+
+
+def policy_param_count() -> int:
+    flat, _ = ravel_pytree(init_policy_params())
+    return int(flat.shape[0])
+
+
+def _trunk(params, states):
+    h = states
+    for i in range(2):
+        p = params[f"fc{i}"]
+        h = jnp.tanh(h @ p["w"] + p["b"])
+    logits = h @ params["pi"]["w"] + params["pi"]["b"]
+    values = (h @ params["vf"]["w"] + params["vf"]["b"])[:, 0]
+    return logits, values
+
+
+def make_policy_forward():
+    template = init_policy_params()
+    _, unravel = ravel_pytree(template)
+
+    def fwd(theta, states):
+        logits, values = _trunk(unravel(theta), states)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return logp, values
+
+    return fwd
+
+
+def _adam(theta, m, v, step, grads, lr):
+    new_step = step + 1.0
+    t = new_step[0]
+    new_m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    new_v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    m_hat = new_m / (1.0 - ADAM_B1**t)
+    v_hat = new_v / (1.0 - ADAM_B2**t)
+    return theta - lr[0] * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS), new_m, new_v, new_step
+
+
+def make_policy_update():
+    """Clipped-surrogate PPO minibatch step (paper Eq. 1) + Adam."""
+    template = init_policy_params()
+    _, unravel = ravel_pytree(template)
+
+    def update(
+        theta, m, v, step, states, actions, old_logp, adv, ret, mask, lr,
+        clip_eps, ent_coef, vf_coef,
+    ):
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def loss_fn(th):
+            logits, values = _trunk(unravel(th), states)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+            ratio = jnp.exp(logp - old_logp)
+            clipped = jnp.clip(ratio, 1.0 - clip_eps[0], 1.0 + clip_eps[0])
+            pg = -jnp.sum(jnp.minimum(ratio * adv, clipped * adv) * mask) / denom
+            v_loss = jnp.sum(jnp.square(values - ret) * mask) / denom
+            entropy = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, -1) * mask) / denom
+            loss = pg + vf_coef[0] * v_loss - ent_coef[0] * entropy
+            approx_kl = jnp.sum((old_logp - logp) * mask) / denom
+            return loss, (pg, v_loss, entropy, approx_kl)
+
+        (loss, (pg, v_loss, entropy, kl)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(theta)
+        theta2, m2, v2, step2 = _adam(theta, m, v, step, grads, lr)
+        return theta2, m2, v2, step2, loss, pg, v_loss, entropy, kl
+
+    return update
+
+
+def make_policy_update_simple():
+    """Paper §IV-A simplification: raw cumulative-return policy gradient.
+
+    No clipping, no learned baseline — loss = -E[logpi(a|s) * G] with an
+    entropy bonus for exploration parity with the clipped variant. Keeps
+    the same I/O signature (old_logp / adv / clip_eps are accepted and
+    ignored) so the Rust driver can swap variants without special cases.
+    """
+    template = init_policy_params()
+    _, unravel = ravel_pytree(template)
+
+    def update(
+        theta, m, v, step, states, actions, old_logp, adv, ret, mask, lr,
+        clip_eps, ent_coef, vf_coef,
+    ):
+        del old_logp, adv, clip_eps
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def loss_fn(th):
+            logits, values = _trunk(unravel(th), states)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+            pg = -jnp.sum(logp * ret * mask) / denom
+            v_loss = jnp.sum(jnp.square(values - ret) * mask) / denom
+            entropy = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, -1) * mask) / denom
+            loss = pg + vf_coef[0] * v_loss - ent_coef[0] * entropy
+            return loss, (pg, v_loss, entropy, jnp.float32(0.0))
+
+        (loss, (pg, v_loss, entropy, kl)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(theta)
+        theta2, m2, v2, step2 = _adam(theta, m, v, step, grads, lr)
+        return theta2, m2, v2, step2, loss, pg, v_loss, entropy, kl
+
+    return update
+
+
+def forward_specs():
+    p = policy_param_count()
+    S = jax.ShapeDtypeStruct
+    return (S((p,), jnp.float32), S((MAX_WORKERS, STATE_DIM), jnp.float32))
+
+
+def update_specs():
+    p = policy_param_count()
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    B = MINIBATCH
+    return (
+        S((p,), f32), S((p,), f32), S((p,), f32), S((1,), f32),
+        S((B, STATE_DIM), f32), S((B,), i32), S((B,), f32), S((B,), f32),
+        S((B,), f32), S((B,), f32), S((1,), f32), S((1,), f32), S((1,), f32),
+        S((1,), f32),
+    )

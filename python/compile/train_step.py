@@ -1,0 +1,126 @@
+"""L2 train/eval steps lowered to HLO for the Rust runtime.
+
+One artifact per (model, optimizer, batch-bucket). The signature is uniform
+across optimizers so the Rust trainer is optimizer-agnostic:
+
+  inputs : params[P] m[P|1] v[P|1] step[1] x[B,D] y[B]i32 mask[B] lr[1]
+  outputs: params' m' v' step' loss acc correct[B] sigma_norm sigma_norm2
+           grad_l2
+
+ * ``correct`` is the per-sample masked correctness vector — the Rust
+   trainer slices it into per-worker shard ranges to recover each worker's
+   batch accuracy from the fused-global execution (DESIGN.md §Fused-global).
+ * sigma_norm / sigma_norm^2 are the paper's §IV-B gradient-normalization
+   statistics, produced by the L1 ``grad_stats`` Pallas kernel.
+ * SGD artifacts use momentum (the paper's CIFAR baselines); ``m`` carries
+   the momentum buffer and ``v`` is a [1] dummy kept for signature
+   uniformity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import models
+from .kernels.grad_stats import normalized_grad_stats, padded_len
+
+SGD_MOMENTUM = 0.9
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def _grad_statistics(grads_flat):
+    n = grads_flat.shape[0]
+    pad = padded_len(n) - n
+    gp = jnp.pad(grads_flat, (0, pad))
+    return normalized_grad_stats(gp, n)
+
+
+def make_train_step(cfg: models.ModelConfig, optimizer: str):
+    """Build the jittable train step over flat parameters."""
+    template = models.init_params(cfg)
+    _, unravel = ravel_pytree(template)
+
+    def step_fn(params_flat, m, v, step, x, y, mask, lr):
+        def loss_fn(pf):
+            return models.masked_loss_and_metrics(cfg, unravel(pf), x, y, mask)
+
+        (loss, (acc, correct)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_flat
+        )
+        sigma_norm, sigma_norm2 = _grad_statistics(grads)
+        grad_l2 = jnp.sqrt(jnp.sum(grads * grads))
+        lr_s = lr[0]
+        new_step = step + 1.0
+        if optimizer == "sgd":
+            new_m = SGD_MOMENTUM * m + grads
+            new_params = params_flat - lr_s * new_m
+            new_v = v
+        elif optimizer == "adam":
+            t = new_step[0]
+            new_m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+            new_v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+            m_hat = new_m / (1.0 - ADAM_B1**t)
+            v_hat = new_v / (1.0 - ADAM_B2**t)
+            new_params = params_flat - lr_s * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+        else:
+            raise ValueError(optimizer)
+        return (
+            new_params,
+            new_m,
+            new_v,
+            new_step,
+            loss,
+            acc,
+            correct,
+            sigma_norm,
+            sigma_norm2,
+            grad_l2,
+        )
+
+    return step_fn
+
+
+def make_eval_step(cfg: models.ModelConfig):
+    """Eval step: (params[P], x[E,D], y[E], mask[E]) -> (loss, acc)."""
+    template = models.init_params(cfg)
+    _, unravel = ravel_pytree(template)
+
+    def eval_fn(params_flat, x, y, mask):
+        loss, (acc, _) = models.masked_loss_and_metrics(
+            cfg, unravel(params_flat), x, y, mask
+        )
+        return loss, acc
+
+    return eval_fn
+
+
+def train_step_specs(cfg: models.ModelConfig, optimizer: str, bucket: int):
+    """ShapeDtypeStructs for lowering a (cfg, optimizer, bucket) artifact."""
+    p = models.param_count(cfg)
+    opt_dim = p  # momentum buffer for sgd, first moment for adam
+    v_dim = p if optimizer == "adam" else 1
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return (
+        S((p,), f32),            # params
+        S((opt_dim,), f32),      # m
+        S((v_dim,), f32),        # v
+        S((1,), f32),            # step
+        S((bucket, cfg.feature_dim), f32),  # x
+        S((bucket,), i32),       # y
+        S((bucket,), f32),       # mask
+        S((1,), f32),            # lr
+    )
+
+
+def eval_step_specs(cfg: models.ModelConfig, eval_batch: int):
+    p = models.param_count(cfg)
+    S = jax.ShapeDtypeStruct
+    return (
+        S((p,), jnp.float32),
+        S((eval_batch, cfg.feature_dim), jnp.float32),
+        S((eval_batch,), jnp.int32),
+        S((eval_batch,), jnp.float32),
+    )

@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the repro contract: the kernel must
+match ref.py under assert_allclose for every (M, K, N) the models can
+produce, including non-tile-aligned dims the block picker must handle.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_dense import (
+    fused_dense,
+    fused_dense_fwd_kernel,
+    matmul_kernel,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.grad_stats import (
+    CHUNK,
+    ROWS_PER_BLOCK,
+    grad_moments,
+    normalized_grad_stats,
+    padded_len,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# --- fused_dense forward -------------------------------------------------
+
+dims_m = st.sampled_from([32, 64, 96, 128, 192, 256])
+dims_k = st.sampled_from([10, 16, 64, 100, 128, 192])
+dims_n = st.sampled_from([10, 16, 64, 100, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims_m, k=dims_k, n=dims_n, act=st.sampled_from(["relu", "linear"]))
+def test_fused_dense_matches_ref(m, k, n, act):
+    x, w, b = _rand(m, k), _rand(k, n), _rand(n)
+    got = fused_dense_fwd_kernel(x, w, b, activation=act)
+    want = ref.fused_dense_ref(x, w, b, act)
+    # K-blocked accumulation reorders the summation vs the monolithic
+    # reference dot; tolerance reflects f32 reassociation, not a bug.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims_m, k=dims_k, n=dims_n)
+def test_matmul_kernel_matches_ref(m, k, n):
+    a, b = _rand(m, k), _rand(k, n)
+    np.testing.assert_allclose(
+        matmul_kernel(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=2e-5
+    )
+
+
+def test_fused_dense_zero_bias_linear_is_matmul():
+    x, w = _rand(64, 128), _rand(128, 64)
+    got = fused_dense_fwd_kernel(x, w, np.zeros(64, np.float32), activation="linear")
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_dense_relu_clamps_negative():
+    x = -np.abs(_rand(32, 64))
+    w = np.eye(64, dtype=np.float32)
+    b = np.zeros(64, np.float32)
+    got = fused_dense_fwd_kernel(x, w, b, activation="relu")
+    assert float(jnp.min(got)) == 0.0
+
+
+# --- fused_dense custom VJP ----------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([32, 64]), k=dims_k, n=st.sampled_from([10, 64, 128]),
+       act=st.sampled_from(["relu", "linear"]))
+def test_fused_dense_grads_match_ref(m, k, n, act):
+    x, w, b = _rand(m, k), _rand(k, n), _rand(n)
+
+    def f(x, w, b):
+        return jnp.sum(jnp.sin(fused_dense(x, w, b, act)))
+
+    def fr(x, w, b):
+        return jnp.sum(jnp.sin(ref.fused_dense_ref(x, w, b, act)))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_dense_relu_grad_zero_in_dead_region():
+    # All-negative pre-activations -> relu kills every gradient.
+    x = -np.abs(_rand(32, 64)) - 1.0
+    w = np.eye(64, dtype=np.float32)
+    b = np.zeros(64, np.float32) - 1.0
+
+    def f(w):
+        return jnp.sum(fused_dense(x, w, b, "relu"))
+
+    g = jax.grad(f)(w)
+    np.testing.assert_allclose(g, np.zeros_like(w), atol=1e-7)
+
+
+# --- grad_stats ------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=60000), scale=st.sampled_from([1e-3, 1.0, 30.0]))
+def test_grad_moments_matches_ref(n, scale):
+    g = np.zeros(padded_len(n), np.float32)
+    g[:n] = RNG.standard_normal(n).astype(np.float32) * scale
+    s, ss = grad_moments(jnp.asarray(g))
+    rs, rss = ref.grad_stats_ref(jnp.asarray(g))
+    np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(ss, rss, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=2, max_value=40000))
+def test_normalized_grad_stats_matches_ref(n):
+    g = np.zeros(padded_len(n), np.float32)
+    g[:n] = RNG.standard_normal(n).astype(np.float32)
+    sn, sn2 = normalized_grad_stats(jnp.asarray(g), n)
+    rn, rn2 = ref.normalized_grad_stats_ref(jnp.asarray(g), n)
+    np.testing.assert_allclose(sn, rn, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sn2, rn2, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_stats_padding_is_neutral():
+    n = 1000
+    base = RNG.standard_normal(n).astype(np.float32)
+    g1 = np.zeros(padded_len(n), np.float32)
+    g1[:n] = base
+    # Same values inside a much larger padded buffer.
+    g2 = np.zeros(padded_len(n) + CHUNK * ROWS_PER_BLOCK * 3, np.float32)
+    g2[:n] = base
+    s1 = grad_moments(jnp.asarray(g1))
+    s2 = grad_moments(jnp.asarray(g2))
+    np.testing.assert_allclose(s1[0], s2[0], rtol=1e-5)
+    np.testing.assert_allclose(s1[1], s2[1], rtol=1e-5)
+
+
+def test_sigma_norm_scale_invariant():
+    # RMS normalization makes sigma_norm invariant to gradient scale —
+    # the property that lets the RL state compare across optimizers.
+    n = 5000
+    g = np.zeros(padded_len(n), np.float32)
+    g[:n] = RNG.standard_normal(n).astype(np.float32)
+    a, _ = normalized_grad_stats(jnp.asarray(g), n)
+    b, _ = normalized_grad_stats(jnp.asarray(g * 100.0), n)
+    np.testing.assert_allclose(a, b, rtol=1e-3)
+
+
+def test_padded_len_properties():
+    block = CHUNK * ROWS_PER_BLOCK
+    for n in [1, block - 1, block, block + 1, 12345, 10 * block]:
+        p = padded_len(n)
+        assert p >= n and p % block == 0 and p - n < block
+
+
+# --- perf-model helpers -----------------------------------------------------
+
+def test_vmem_footprint_within_budget():
+    # Full-size tiles must fit VMEM with generous room for double
+    # buffering (16 MiB/core on TPUv4-class parts).
+    fp = vmem_footprint_bytes(1024, 512, 512)
+    assert fp["total"] <= 2 * 1024 * 1024, fp
+    assert fp["block"] == (512, 512, 128)
+
+
+def test_mxu_utilization_full_tiles():
+    # M tile >= 128 saturates the 128x128 systolic-array face.
+    assert mxu_utilization_estimate(1024, 128, 128) == pytest.approx(1.0)
+    # Tiny N (the 10-way head) underfills lanes, as expected.
+    assert mxu_utilization_estimate(1024, 128, 10) < 0.1

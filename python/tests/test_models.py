@@ -1,0 +1,150 @@
+"""L2 correctness: model zoo shapes, masking semantics, training dynamics."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile import models, train_step
+
+RNG = np.random.default_rng(1)
+
+
+def _batch(cfg, b):
+    x = RNG.standard_normal((b, cfg.feature_dim)).astype(np.float32)
+    y = RNG.integers(0, cfg.num_classes, b).astype(np.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(models.MODEL_ZOO))
+def test_forward_shapes(name):
+    cfg = models.MODEL_ZOO[name]
+    params = models.init_params(cfg)
+    x, _ = _batch(cfg, 32)
+    logits = models.forward(cfg, params, x)
+    assert logits.shape == (32, cfg.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_family_depth_ladder():
+    z = models.MODEL_ZOO
+    assert z["vgg11_mini"].depth < z["vgg16_mini"].depth < z["vgg19_mini"].depth
+    assert z["resnet34_mini"].depth < z["resnet50_mini"].depth
+    assert models.param_count(z["vgg16_mini"]) > models.param_count(z["vgg11_mini"])
+
+
+def test_param_count_matches_ravel():
+    cfg = models.MODEL_ZOO["resnet34_mini"]
+    flat, _ = ravel_pytree(models.init_params(cfg))
+    assert flat.shape[0] == models.param_count(cfg)
+
+
+def test_init_deterministic_per_seed():
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    a, _ = ravel_pytree(models.init_params(cfg, seed=3))
+    b, _ = ravel_pytree(models.init_params(cfg, seed=3))
+    c, _ = ravel_pytree(models.init_params(cfg, seed=4))
+    assert bool(jnp.all(a == b))
+    assert not bool(jnp.all(a == c))
+
+
+def test_mask_zero_rows_do_not_affect_loss_or_grad():
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    params = models.init_params(cfg)
+    x, y = _batch(cfg, 64)
+    mask_full = np.ones(64, np.float32)
+    mask_half = mask_full.copy()
+    mask_half[32:] = 0.0
+
+    def loss32(p):
+        return models.masked_loss_and_metrics(cfg, p, x[:32], y[:32], mask_full[:32])[0]
+
+    def loss_masked(p):
+        # 64-row batch where rows 32.. are *garbage* but masked out.
+        xg = x.copy()
+        xg[32:] = 1e6
+        return models.masked_loss_and_metrics(cfg, p, xg, y, mask_half)[0]
+
+    l1, l2 = loss32(params), loss_masked(params)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    g1 = ravel_pytree(jax.grad(loss32)(params))[0]
+    g2 = ravel_pytree(jax.grad(loss_masked)(params))[0]
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_correct_vector_respects_mask_and_slices():
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    params = models.init_params(cfg)
+    x, y = _batch(cfg, 64)
+    mask = np.ones(64, np.float32)
+    mask[48:] = 0.0
+    _, (acc, correct) = models.masked_loss_and_metrics(cfg, params, x, y, mask)
+    assert correct.shape == (64,)
+    assert bool(jnp.all(correct[48:] == 0.0))
+    np.testing.assert_allclose(jnp.sum(correct) / 48.0, acc, rtol=1e-6)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "adam"])
+def test_train_step_decreases_loss(opt):
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    fn = jax.jit(train_step.make_train_step(cfg, opt))
+    p = ravel_pytree(models.init_params(cfg))[0]
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p) if opt == "adam" else jnp.zeros((1,), jnp.float32)
+    step = jnp.zeros((1,), jnp.float32)
+    lr = jnp.asarray([0.05 if opt == "sgd" else 0.003], jnp.float32)
+
+    # Learnable toy task: y determined by sign pattern of x projections.
+    x, y = _batch(cfg, 128)
+    proto = RNG.standard_normal((cfg.num_classes, cfg.feature_dim)).astype(np.float32)
+    y = np.argmax(x @ proto.T, axis=1).astype(np.int32)
+    mask = np.ones(128, np.float32)
+
+    losses = []
+    for _ in range(30):
+        p, m, v, step, loss, acc, correct, sn, sn2, gl2 = fn(p, m, v, step, x, y, mask, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+    assert float(step[0]) == 30.0
+    assert np.isfinite(losses).all()
+
+
+def test_train_step_outputs_schema():
+    cfg = models.MODEL_ZOO["resnet34_mini"]
+    specs = train_step.train_step_specs(cfg, "sgd", 64)
+    outs = jax.eval_shape(train_step.make_train_step(cfg, "sgd"), *specs)
+    pc = models.param_count(cfg)
+    shapes = [tuple(o.shape) for o in outs]
+    assert shapes == [
+        (pc,), (pc,), (1,), (1,), (), (), (64,), (), (), (),
+    ]
+
+
+def test_eval_step_matches_train_metrics():
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    p = ravel_pytree(models.init_params(cfg))[0]
+    x, y = _batch(cfg, 256)
+    mask = np.ones(256, np.float32)
+    loss, acc = train_step.make_eval_step(cfg)(p, x, y, mask)
+    loss2, (acc2, _) = models.masked_loss_and_metrics(
+        cfg, models.init_params(cfg), x, y, mask
+    )
+    np.testing.assert_allclose(loss, loss2, rtol=1e-6)
+    np.testing.assert_allclose(acc, acc2, rtol=1e-6)
+
+
+def test_adam_and_sgd_diverge():
+    cfg = models.MODEL_ZOO["vgg11_mini"]
+    x, y = _batch(cfg, 32)
+    mask = np.ones(32, np.float32)
+    outs = {}
+    for opt in ["sgd", "adam"]:
+        fn = train_step.make_train_step(cfg, opt)
+        p = ravel_pytree(models.init_params(cfg))[0]
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p) if opt == "adam" else jnp.zeros((1,), jnp.float32)
+        r = fn(p, m, v, jnp.zeros((1,), jnp.float32), x, y, mask,
+               jnp.asarray([0.01], jnp.float32))
+        outs[opt] = np.asarray(r[0])
+    assert not np.allclose(outs["sgd"], outs["adam"])

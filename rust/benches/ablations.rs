@@ -1,0 +1,65 @@
+//! Design-choice ablations (DESIGN.md §6), timing side:
+//!  * clipped PPO vs the paper's simplified update;
+//!  * temporal-aggregation window k (decision overhead amortization);
+//!  * fused policy_forward for N workers vs N separate calls.
+//!
+//!     cargo bench --bench ablations
+
+use dynamix::config::{PpoVariant, RlConfig};
+use dynamix::rl::agent::PpoAgent;
+use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
+use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
+use dynamix::runtime::ArtifactStore;
+use dynamix::sysmetrics::WindowSummary;
+use dynamix::util::bench::bench;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::open_default()?);
+    let builder = StateBuilder::default();
+    let summary = WindowSummary { acc_mean: 0.5, iter_time_mean: 0.1, ..Default::default() };
+    let global = GlobalState { n_workers: 16, ..Default::default() };
+
+    println!("== PPO variant update cost ==");
+    let trajs: Vec<Trajectory> = (0..16)
+        .map(|w| {
+            let mut t = Trajectory::default();
+            for i in 0..20 {
+                t.push(Transition {
+                    state: builder.build(&summary, 64 + i, &global),
+                    action: (w + i) % 5,
+                    logp: -1.6,
+                    value: 0.1,
+                    reward: 0.5,
+                });
+            }
+            t
+        })
+        .collect();
+    let batch = UpdateBatch::from_trajectories(&trajs, 0.99, 0.95);
+    for variant in [PpoVariant::Clipped, PpoVariant::Simplified] {
+        let mut agent = PpoAgent::new(
+            store.clone(),
+            RlConfig { variant, update_epochs: 1, ..Default::default() },
+            0,
+        )?;
+        bench(&format!("update/{variant:?}"), 2, 10, || {
+            agent.update(&batch).unwrap();
+        });
+    }
+
+    println!("\n== fused forward (32 workers, 1 call) vs 32 single-row calls ==");
+    let mut agent = PpoAgent::new(store.clone(), RlConfig::default(), 0)?;
+    let states: Vec<StateVector> = (0..32)
+        .map(|w| builder.build(&summary, 64 + w * 8, &global))
+        .collect();
+    bench("forward/fused32", 5, 40, || {
+        agent.act(&states, false).unwrap();
+    });
+    bench("forward/32x1", 2, 10, || {
+        for s in &states {
+            agent.act(std::slice::from_ref(s), false).unwrap();
+        }
+    });
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! §VI-H hot path: the arbitrator decision cycle.
+//! state assembly -> policy_forward -> action sampling, plus the PPO
+//! minibatch update. The overhead claim (decision < 0.1% of iteration
+//! time) is checked against the measured train_step cost.
+//!
+//!     cargo bench --bench decision_cycle
+
+use dynamix::config::RlConfig;
+use dynamix::rl::agent::PpoAgent;
+use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
+use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
+use dynamix::runtime::ArtifactStore;
+use dynamix::sysmetrics::WindowSummary;
+use dynamix::util::bench::bench;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::open_default()?);
+
+    println!("== state vector assembly ==");
+    let builder = StateBuilder::default();
+    let summary = WindowSummary {
+        acc_mean: 0.6,
+        acc_std: 0.05,
+        acc_gain: 0.4,
+        iter_time_mean: 0.12,
+        throughput_mean: 9.0,
+        retransmissions: 40.0,
+        cpu_time_ratio: 2.4,
+        mem_util: 0.5,
+        sigma_norm: 0.9,
+        sigma_norm2: 0.81,
+        loss_mean: 1.4,
+        iters: 5,
+    };
+    let global = GlobalState {
+        loss: 1.4,
+        eval_acc: 0.6,
+        eval_trend: 0.01,
+        progress: 0.4,
+        n_workers: 16,
+    };
+    bench("state_build/16workers", 100, 1000, || {
+        for w in 0..16 {
+            std::hint::black_box(builder.build(&summary, 128 + w, &global));
+        }
+    });
+
+    println!("\n== policy inference (one fused call scores all workers) ==");
+    for n in [8usize, 16, 32] {
+        let mut agent = PpoAgent::new(store.clone(), RlConfig::default(), 0)?;
+        let states: Vec<StateVector> = (0..n)
+            .map(|w| builder.build(&summary, 64 + w * 16, &global))
+            .collect();
+        bench(&format!("policy_forward/{n}workers"), 5, 50, || {
+            agent.act(&states, false).unwrap();
+        });
+    }
+
+    println!("\n== PPO update (one epoch over 16x20 transitions) ==");
+    let mut agent = PpoAgent::new(store.clone(), RlConfig { update_epochs: 1, ..Default::default() }, 0)?;
+    let trajs: Vec<Trajectory> = (0..16)
+        .map(|w| {
+            let mut t = Trajectory::default();
+            for i in 0..20 {
+                t.push(Transition {
+                    state: builder.build(&summary, 64 + i, &global),
+                    action: (w + i) % 5,
+                    logp: -1.6,
+                    value: 0.1,
+                    reward: 0.5,
+                });
+            }
+            t
+        })
+        .collect();
+    let batch = UpdateBatch::from_trajectories(&trajs, 0.99, 0.95);
+    bench("policy_update/320x1epoch", 2, 10, || {
+        agent.update(&batch).unwrap();
+    });
+    Ok(())
+}

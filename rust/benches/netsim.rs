@@ -1,0 +1,45 @@
+//! Network + cluster simulator cost: these run every simulated iteration,
+//! so they must be orders of magnitude below the PJRT step cost.
+//!
+//!     cargo bench --bench netsim
+
+use dynamix::cluster::{profiles, SimCluster};
+use dynamix::config::{ClusterPreset, Topology};
+use dynamix::netsim::NetworkSim;
+use dynamix::util::bench::bench;
+
+fn main() {
+    println!("== collective cost model evaluations ==");
+    for n in [8usize, 16, 32] {
+        let profs = profiles(ClusterPreset::OscA100, n, 0);
+        let mut net = NetworkSim::new(0);
+        bench(&format!("ring_allreduce/{n}nodes"), 100, 2000, || {
+            std::hint::black_box(net.sync(Topology::RingAllReduce, &profs, 37 << 20));
+        });
+        let mut net = NetworkSim::new(0);
+        bench(&format!("param_server2/{n}nodes"), 100, 2000, || {
+            std::hint::black_box(net.sync(Topology::ParameterServer { servers: 2 }, &profs, 37 << 20));
+        });
+    }
+
+    println!("\n== cluster compute phase + clock advance ==");
+    for n in [8usize, 32] {
+        let mut c = SimCluster::new(ClusterPreset::FabricHetero, n, 0);
+        let batches = vec![256usize; n];
+        bench(&format!("compute_phase/{n}nodes"), 100, 2000, || {
+            let out = c.compute_phase(&batches);
+            c.advance_iteration(&out, 0.01);
+        });
+    }
+
+    println!("\n== synthetic data generation (batch assembly input) ==");
+    let d = dynamix::data::SyntheticDataset::new(10, 128, 50_000, 0);
+    let mut x = vec![0.0f32; 128];
+    bench("sample_into/1", 1000, 20000, || {
+        std::hint::black_box(d.sample_into(123, &mut x));
+    });
+    let idx: Vec<u64> = (0..1024).collect();
+    bench("batch/1024", 3, 30, || {
+        std::hint::black_box(d.batch(&idx));
+    });
+}

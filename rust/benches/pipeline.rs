@@ -1,0 +1,37 @@
+//! End-to-end iteration pipeline: data assembly + fused PJRT step +
+//! simulators + window accounting — the paper's Table-level throughput.
+//!
+//!     cargo bench --bench pipeline
+
+use dynamix::config::ExperimentConfig;
+use dynamix::runtime::ArtifactStore;
+use dynamix::trainer::BspTrainer;
+use dynamix::util::bench::{bench, throughput};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::open_default()?);
+    for (workers, batch) in [(4usize, 64usize), (16, 64), (16, 256)] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.n_workers = workers;
+        cfg.batch.initial = batch;
+        let mut t = BspTrainer::new(&cfg, store.clone())?;
+        // Warm the bucket executable.
+        t.iterate()?;
+        let global = workers * batch;
+        let r = bench(&format!("bsp_iteration/{workers}w-b{batch}"), 1, 8, || {
+            t.iterate().unwrap();
+        });
+        println!("    -> {:.0} samples/s global batch {global}", throughput(&r, global));
+    }
+
+    println!("\n== eval step ==");
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.n_workers = 4;
+    let mut t = BspTrainer::new(&cfg, store)?;
+    t.eval()?;
+    bench("eval/1024", 1, 10, || {
+        t.eval().unwrap();
+    });
+    Ok(())
+}

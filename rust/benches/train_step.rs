@@ -1,0 +1,63 @@
+//! L3 hot path: the PJRT train-step execution across the bucket ladder.
+//! Regenerates the per-iteration compute-cost column used to calibrate the
+//! cluster simulator, and the padding-overhead ablation (same 100 valid
+//! samples at growing buckets).
+//!
+//!     cargo bench --bench train_step
+
+use dynamix::runtime::ArtifactStore;
+use dynamix::trainer::ModelRuntime;
+use dynamix::util::bench::{bench, throughput};
+use dynamix::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::open_default()?);
+    let fd = store.manifest.feature_dim;
+    let mut rng = Rng::new(0);
+
+    println!("== train_step cost across buckets (vgg11_mini / sgd) ==");
+    for bucket in [32usize, 128, 512, 1024, 4096] {
+        let mut rt = ModelRuntime::new(
+            store.clone(),
+            "vgg11_mini",
+            dynamix::config::Optimizer::Sgd,
+            0.05,
+            0,
+        )?;
+        let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+        let r = bench(&format!("train_step/b{bucket}"), 2, 8, || {
+            rt.train_step(&xs, &ys, bucket, bucket).unwrap();
+        });
+        println!("    -> {:.0} samples/s", throughput(&r, bucket));
+    }
+
+    println!("\n== padding overhead: 100 valid samples in growing buckets ==");
+    for bucket in [128usize, 192, 256, 512] {
+        let mut rt = ModelRuntime::new(
+            store.clone(),
+            "vgg11_mini",
+            dynamix::config::Optimizer::Sgd,
+            0.05,
+            0,
+        )?;
+        let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+        bench(&format!("pad100/b{bucket}"), 2, 8, || {
+            rt.train_step(&xs, &ys, 100, bucket).unwrap();
+        });
+    }
+
+    println!("\n== optimizer comparison at b256 ==");
+    for opt in [dynamix::config::Optimizer::Sgd, dynamix::config::Optimizer::Adam] {
+        let mut rt = ModelRuntime::new(store.clone(), "vgg11_mini", opt, 0.01, 0)?;
+        let bucket = 256;
+        let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+        bench(&format!("train_step/{}-b256", opt.as_str()), 2, 8, || {
+            rt.train_step(&xs, &ys, bucket, bucket).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! Baseline batch-size policies (paper §VI-B + related-work heuristics).
+//!
+//! * [`StaticPolicy`]       — the paper's primary baseline: a fixed batch
+//!   size for the whole run (Fig. 2, Table I "Static Batch Size").
+//! * [`LinearScalingPolicy`] — Goyal et al. [9]: batch fixed at
+//!   `base × n_workers` (the "scale the batch with the cluster" rule).
+//! * [`SmithSchedulePolicy`] — Smith et al. [32]: increase the batch size
+//!   at fixed milestones instead of decaying the learning rate.
+//! * [`GnsHeuristicPolicy`]  — gradient-noise-scale heuristic: grow the
+//!   batch when the measured gradient noise (σ_norm) is high, shrink when
+//!   low — the strongest non-RL adaptive comparator we ablate against.
+//!
+//! All implement [`BatchPolicy`] over the same `BspTrainer`, so baseline
+//! and DYNAMIX runs share every other moving part.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{mean_std_usize, ConvergenceDetector, RunRecord, TracePoint};
+use crate::runtime::ArtifactStore;
+use crate::sysmetrics::WindowSummary;
+use crate::trainer::BspTrainer;
+use std::sync::Arc;
+
+/// A non-RL batch-size controller, consulted every k iterations.
+pub trait BatchPolicy {
+    fn name(&self) -> String;
+
+    /// Decide every worker's next batch size. `windows[w]` is worker w's
+    /// just-finished k-iteration summary; `cycle` counts decision points.
+    fn adjust(
+        &mut self,
+        cycle: usize,
+        batches: &mut [usize],
+        windows: &[WindowSummary],
+        min: usize,
+        max: usize,
+    );
+}
+
+/// Fixed batch size (paper's static baseline).
+pub struct StaticPolicy(pub usize);
+
+impl BatchPolicy for StaticPolicy {
+    fn name(&self) -> String {
+        format!("static-{}", self.0)
+    }
+
+    fn adjust(&mut self, _c: usize, batches: &mut [usize], _w: &[WindowSummary], min: usize, max: usize) {
+        let b = self.0.clamp(min, max);
+        batches.iter_mut().for_each(|x| *x = b);
+    }
+}
+
+/// Linear scaling rule: per-worker batch = base (global = base × N).
+/// Kept distinct from Static for sweep labelling.
+pub struct LinearScalingPolicy {
+    pub base: usize,
+}
+
+impl BatchPolicy for LinearScalingPolicy {
+    fn name(&self) -> String {
+        format!("linear-scaling-{}", self.base)
+    }
+
+    fn adjust(&mut self, _c: usize, batches: &mut [usize], _w: &[WindowSummary], min: usize, max: usize) {
+        let b = self.base.clamp(min, max);
+        batches.iter_mut().for_each(|x| *x = b);
+    }
+}
+
+/// Smith et al.: multiply batch by `factor` every `every` cycles.
+pub struct SmithSchedulePolicy {
+    pub initial: usize,
+    pub factor: usize,
+    pub every: usize,
+}
+
+impl BatchPolicy for SmithSchedulePolicy {
+    fn name(&self) -> String {
+        format!("smith-x{}-every{}", self.factor, self.every)
+    }
+
+    fn adjust(&mut self, cycle: usize, batches: &mut [usize], _w: &[WindowSummary], min: usize, max: usize) {
+        let doublings = cycle / self.every.max(1);
+        let b = (self.initial * self.factor.pow(doublings as u32)).clamp(min, max);
+        batches.iter_mut().for_each(|x| *x = b);
+    }
+}
+
+/// Gradient-noise-scale heuristic: σ_norm high -> gradients are noisy ->
+/// a larger batch is statistically efficient; σ_norm low -> shrink to buy
+/// more updates per epoch. Deadband avoids thrash.
+pub struct GnsHeuristicPolicy {
+    pub high: f64,
+    pub low: f64,
+    pub step: usize,
+}
+
+impl Default for GnsHeuristicPolicy {
+    fn default() -> Self {
+        GnsHeuristicPolicy {
+            high: 1.05,
+            low: 0.95,
+            step: 64,
+        }
+    }
+}
+
+impl BatchPolicy for GnsHeuristicPolicy {
+    fn name(&self) -> String {
+        "gns-heuristic".into()
+    }
+
+    fn adjust(&mut self, _c: usize, batches: &mut [usize], windows: &[WindowSummary], min: usize, max: usize) {
+        for (b, w) in batches.iter_mut().zip(windows) {
+            if w.sigma_norm > self.high {
+                *b = (*b + self.step).min(max);
+            } else if w.sigma_norm < self.low {
+                *b = b.saturating_sub(self.step).max(min);
+            }
+        }
+    }
+}
+
+/// Summary of one baseline run (mirrors `InferenceSummary`).
+#[derive(Clone, Debug)]
+pub struct BaselineSummary {
+    pub policy: String,
+    pub final_eval_acc: f64,
+    pub best_eval_acc: f64,
+    pub convergence_time: Option<f64>,
+    pub total_sim_time: f64,
+    pub total_iters: usize,
+}
+
+/// Drive a [`BatchPolicy`] over a fresh trainer for `max_cycles` decision
+/// cycles of `k` iterations, recording the trajectory exactly like the
+/// DYNAMIX inference runner (so Fig. 2/4 overlays are apples-to-apples).
+pub fn run_baseline(
+    cfg: &ExperimentConfig,
+    store: Arc<ArtifactStore>,
+    policy: &mut dyn BatchPolicy,
+    max_cycles: usize,
+    record: &mut RunRecord,
+) -> anyhow::Result<BaselineSummary> {
+    let mut trainer = BspTrainer::new(cfg, store)?;
+    trainer.calibrate()?;
+    trainer.reset_episode(cfg.train.seed, cfg.batch.initial)?;
+    // Apply the policy's initial choice before the first iteration.
+    let init_windows: Vec<WindowSummary> = vec![WindowSummary::default(); trainer.n_workers()];
+    let mut batches = trainer.batches.clone();
+    policy.adjust(0, &mut batches, &init_windows, cfg.batch.min, cfg.batch.max);
+    trainer.batches = batches;
+
+    let mut detector = ConvergenceDetector::new(cfg.train.target_acc, 2);
+    let k = cfg.rl.k;
+    let mut final_eval = 0.0;
+    for cycle in 0..max_cycles {
+        let mut last_acc = 0.0;
+        let mut last_loss = 0.0;
+        for _ in 0..k {
+            let out = trainer.iterate()?;
+            last_acc = out.acc;
+            last_loss = out.loss;
+        }
+        let (_, eval_acc) = trainer.eval()?;
+        final_eval = eval_acc;
+        let windows: Vec<WindowSummary> =
+            trainer.windows.iter_mut().map(|w| w.finish()).collect();
+        let (bm, bs) = mean_std_usize(&trainer.batches);
+        record.push(TracePoint {
+            iter: trainer.iter,
+            sim_time: trainer.cluster.clock,
+            train_acc: last_acc,
+            eval_acc,
+            loss: last_loss,
+            batch_mean: bm,
+            batch_std: bs,
+            global_batch: trainer.batches.iter().sum(),
+        });
+        detector.observe(eval_acc, trainer.cluster.clock);
+        if detector.converged() {
+            break;
+        }
+        let mut batches = trainer.batches.clone();
+        policy.adjust(cycle + 1, &mut batches, &windows, cfg.batch.min, cfg.batch.max);
+        trainer.batches = batches;
+    }
+    record.final_eval_acc = final_eval;
+    record.convergence_time = detector.time();
+    Ok(BaselineSummary {
+        policy: policy.name(),
+        final_eval_acc: final_eval,
+        best_eval_acc: record.best_eval_acc(),
+        convergence_time: detector.time(),
+        total_sim_time: trainer.cluster.clock,
+        total_iters: trainer.iter,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 4;
+        c.batch.initial = 64;
+        c.rl.k = 2;
+        c
+    }
+
+    fn store() -> Arc<ArtifactStore> {
+        Arc::new(ArtifactStore::open_default().unwrap())
+    }
+
+    #[test]
+    fn static_policy_pins_batches() {
+        let mut p = StaticPolicy(128);
+        let mut b = vec![64, 96, 32];
+        p.adjust(3, &mut b, &[], 32, 1024);
+        assert_eq!(b, vec![128; 3]);
+        // Clamped when out of range.
+        let mut p = StaticPolicy(4096);
+        p.adjust(0, &mut b, &[], 32, 1024);
+        assert_eq!(b, vec![1024; 3]);
+    }
+
+    #[test]
+    fn smith_schedule_doubles_on_milestones() {
+        let mut p = SmithSchedulePolicy { initial: 64, factor: 2, every: 3 };
+        let mut b = vec![64];
+        p.adjust(0, &mut b, &[], 32, 1024);
+        assert_eq!(b[0], 64);
+        p.adjust(3, &mut b, &[], 32, 1024);
+        assert_eq!(b[0], 128);
+        p.adjust(9, &mut b, &[], 32, 1024);
+        assert_eq!(b[0], 512);
+        p.adjust(90, &mut b, &[], 32, 1024);
+        assert_eq!(b[0], 1024, "clamped at max");
+    }
+
+    #[test]
+    fn gns_heuristic_tracks_noise() {
+        let mut p = GnsHeuristicPolicy::default();
+        let mut b = vec![128, 128];
+        let noisy = WindowSummary { sigma_norm: 1.5, ..Default::default() };
+        let quiet = WindowSummary { sigma_norm: 0.2, ..Default::default() };
+        p.adjust(0, &mut b, &[noisy, quiet], 32, 1024);
+        assert_eq!(b, vec![192, 64]);
+        // Bounds hold under repeated pressure.
+        for _ in 0..50 {
+            let w = vec![
+                WindowSummary { sigma_norm: 1.5, ..Default::default() },
+                WindowSummary { sigma_norm: 0.2, ..Default::default() },
+            ];
+            p.adjust(0, &mut b, &w, 32, 1024);
+        }
+        assert_eq!(b, vec![1024, 32]);
+    }
+
+    #[test]
+    fn run_baseline_end_to_end_records_trace() {
+        let c = cfg();
+        let mut record = RunRecord::new("static-64");
+        let mut p = StaticPolicy(64);
+        let s = run_baseline(&c, store(), &mut p, 4, &mut record).unwrap();
+        assert_eq!(s.policy, "static-64");
+        assert_eq!(record.points.len(), 4);
+        assert!(s.total_iters == 8, "4 cycles x k=2: {}", s.total_iters);
+        assert!(record.points.windows(2).all(|w| w[0].sim_time < w[1].sim_time));
+    }
+}

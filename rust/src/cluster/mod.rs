@@ -1,0 +1,383 @@
+//! Heterogeneous-cluster simulator.
+//!
+//! Substitutes the paper's three physical testbeds (Lambda A100, OSC
+//! A100-PCIE, FABRIC RTX3090/T4 — DESIGN.md substitution table). DYNAMIX's
+//! decisions consume *relative* timing and contention signals, so the
+//! simulator models exactly those:
+//!
+//! * per-worker **speed profile** (samples/sec at reference batch),
+//!   calibrated so the 1.0 profile matches a measured real PJRT step;
+//! * a **background-load process** per worker — an Ornstein–Uhlenbeck
+//!   contention level in [0,1] plus Poisson bursts — standing in for
+//!   multi-tenant/spot interference (paper §I, §II-B);
+//! * a **memory model**: activation + parameter footprint per batch, used
+//!   to refuse batch sizes that would OOM a worker (paper §IV-C
+//!   "maintains hardware compatibility by avoiding memory overflows");
+//! * the BSP **iteration clock**: per-iteration wall time is
+//!   `max_i(compute_i) + sync + barrier`, the straggler structure that
+//!   motivates the whole paper.
+
+use crate::config::ClusterPreset;
+use crate::util::rng::Rng;
+
+/// Static capability description of one worker.
+#[derive(Clone, Debug)]
+pub struct WorkerProfile {
+    /// Relative throughput multiplier (1.0 = reference GPU).
+    pub speed: f64,
+    /// Device memory in MiB (for the OOM rule).
+    pub mem_mib: f64,
+    /// NIC bandwidth in Gbit/s.
+    pub bandwidth_gbps: f64,
+    /// One-way link latency in ms.
+    pub latency_ms: f64,
+    /// OU contention parameters: mean level, reversion rate, volatility.
+    pub load_mean: f64,
+    pub load_rate: f64,
+    pub load_vol: f64,
+    /// Poisson burst rate (events per simulated second) and burst size.
+    pub burst_rate: f64,
+    pub burst_level: f64,
+}
+
+impl WorkerProfile {
+    fn a100() -> Self {
+        WorkerProfile {
+            speed: 1.0,
+            mem_mib: 24_000.0,
+            bandwidth_gbps: 25.0,
+            latency_ms: 0.15,
+            load_mean: 0.05,
+            load_rate: 0.5,
+            load_vol: 0.05,
+            burst_rate: 0.005,
+            burst_level: 0.3,
+        }
+    }
+
+    fn a100_osc() -> Self {
+        // Shared HPC fabric: same GPU, more contention + latency.
+        WorkerProfile {
+            mem_mib: 40_000.0,
+            latency_ms: 0.3,
+            load_mean: 0.10,
+            load_vol: 0.08,
+            burst_rate: 0.01,
+            ..Self::a100()
+        }
+    }
+
+    fn rtx3090() -> Self {
+        WorkerProfile {
+            speed: 0.75,
+            mem_mib: 24_000.0,
+            bandwidth_gbps: 10.0,
+            latency_ms: 1.0,
+            load_mean: 0.12,
+            load_rate: 0.4,
+            load_vol: 0.1,
+            burst_rate: 0.01,
+            burst_level: 0.35,
+        }
+    }
+
+    fn t4() -> Self {
+        WorkerProfile {
+            speed: 0.28,
+            mem_mib: 16_000.0,
+            bandwidth_gbps: 10.0,
+            latency_ms: 1.2,
+            load_mean: 0.15,
+            load_rate: 0.4,
+            load_vol: 0.12,
+            burst_rate: 0.015,
+            burst_level: 0.4,
+        }
+    }
+
+    fn spot(rng: &mut Rng) -> Self {
+        WorkerProfile {
+            speed: rng.uniform_range(0.3, 1.2),
+            mem_mib: 16_000.0,
+            bandwidth_gbps: rng.uniform_range(5.0, 25.0),
+            latency_ms: rng.uniform_range(0.2, 2.0),
+            load_mean: rng.uniform_range(0.1, 0.3),
+            load_rate: 0.3,
+            load_vol: 0.15,
+            burst_rate: 0.03,
+            burst_level: 0.5,
+        }
+    }
+}
+
+/// Build the worker profile set for a preset.
+pub fn profiles(preset: ClusterPreset, n_workers: usize, seed: u64) -> Vec<WorkerProfile> {
+    let mut rng = Rng::new(seed ^ 0xC1A5);
+    (0..n_workers)
+        .map(|i| match preset {
+            ClusterPreset::UniformA100 => WorkerProfile::a100(),
+            ClusterPreset::OscA100 => WorkerProfile::a100_osc(),
+            // FABRIC §VI-G: first half RTX3090, second half T4.
+            ClusterPreset::FabricHetero => {
+                if i < n_workers / 2 {
+                    WorkerProfile::rtx3090()
+                } else {
+                    WorkerProfile::t4()
+                }
+            }
+            ClusterPreset::SpotMarket => WorkerProfile::spot(&mut rng),
+        })
+        .collect()
+}
+
+/// Evolving state of one simulated worker.
+#[derive(Clone, Debug)]
+struct WorkerState {
+    profile: WorkerProfile,
+    /// Current contention level in [0, 0.95].
+    load: f64,
+    rng: Rng,
+}
+
+impl WorkerState {
+    /// Advance the OU load process by `dt` simulated seconds.
+    fn advance(&mut self, dt: f64) {
+        let p = &self.profile;
+        let drift = p.load_rate * (p.load_mean - self.load) * dt;
+        let diffusion = p.load_vol * dt.sqrt() * self.rng.normal();
+        self.load += drift + diffusion;
+        // Poisson bursts (multi-tenant neighbours arriving).
+        let bursts = self.rng.poisson(p.burst_rate * dt);
+        if bursts > 0 {
+            self.load += p.burst_level;
+        }
+        self.load = self.load.clamp(0.0, 0.95);
+    }
+}
+
+/// Per-sample compute cost model, calibrated from real PJRT step timing.
+///
+/// `base_us_per_sample` is measured once on the reference profile (see
+/// `trainer::calibrate`); everything else scales it.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeCostModel {
+    pub base_us_per_sample: f64,
+    /// Fixed per-iteration launch/framework overhead in microseconds.
+    pub fixed_us: f64,
+}
+
+impl Default for ComputeCostModel {
+    fn default() -> Self {
+        // Representative of the mini models on the reference profile; the
+        // trainer overwrites this with a measured value at startup.
+        ComputeCostModel {
+            base_us_per_sample: 120.0,
+            fixed_us: 1_500.0,
+        }
+    }
+}
+
+/// Memory model: does `batch` fit on a worker? (paper §IV-C OOM rule)
+///
+/// footprint = params + optimizer state + activations(batch). Coefficients
+/// reflect the full-size models the paper runs (so the 16 GiB T4 actually
+/// binds at large batches, as it does in §VI-G).
+pub fn batch_fits(profile: &WorkerProfile, param_count: usize, batch: usize) -> bool {
+    let param_mib = (param_count * 4 * 3) as f64 / (1024.0 * 1024.0);
+    // Full-size VGG-class activation footprint: ~12 MiB per sample.
+    let act_mib = batch as f64 * 12.0;
+    param_mib + act_mib < profile.mem_mib * 0.9
+}
+
+/// The simulated cluster: load processes + the BSP clock.
+pub struct SimCluster {
+    workers: Vec<WorkerState>,
+    pub cost: ComputeCostModel,
+    /// Simulated wall-clock (seconds since run start).
+    pub clock: f64,
+    /// Per-iteration barrier overhead (scheduler + kernel launch), seconds.
+    pub barrier_s: f64,
+}
+
+/// Per-worker outcome of one simulated BSP iteration.
+#[derive(Clone, Debug)]
+pub struct ComputeOutcome {
+    /// Compute seconds this worker spent on its local batch.
+    pub compute_s: f64,
+    /// Contention level during the iteration (feeds sysmetrics).
+    pub load: f64,
+    /// Effective speed (profile speed × (1 - load)).
+    pub effective_speed: f64,
+}
+
+impl SimCluster {
+    pub fn new(preset: ClusterPreset, n_workers: usize, seed: u64) -> Self {
+        let profs = profiles(preset, n_workers, seed);
+        let root = Rng::new(seed ^ 0xC1C0);
+        let workers = profs
+            .into_iter()
+            .enumerate()
+            .map(|(i, profile)| WorkerState {
+                load: profile.load_mean,
+                profile,
+                rng: root.split(i as u64),
+            })
+            .collect();
+        SimCluster {
+            workers,
+            cost: ComputeCostModel::default(),
+            clock: 0.0,
+            barrier_s: 0.002,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn profile(&self, w: usize) -> &WorkerProfile {
+        &self.workers[w].profile
+    }
+
+    /// Largest batch that fits worker `w` for a model of `param_count`.
+    pub fn max_batch(&self, w: usize, param_count: usize, cap: usize) -> usize {
+        let mut hi = cap;
+        while hi > 32 && !batch_fits(&self.workers[w].profile, param_count, hi) {
+            hi -= 32;
+        }
+        hi
+    }
+
+    /// Simulate the compute phase of one BSP iteration.
+    ///
+    /// `batches[w]` is worker w's local batch size. Returns per-worker
+    /// outcomes; does NOT advance the clock (the trainer combines compute
+    /// with the netsim sync phase first).
+    pub fn compute_phase(&mut self, batches: &[usize]) -> Vec<ComputeOutcome> {
+        assert_eq!(batches.len(), self.workers.len());
+        batches
+            .iter()
+            .zip(self.workers.iter_mut())
+            .map(|(&b, ws)| {
+                let effective_speed = ws.profile.speed * (1.0 - ws.load);
+                let us =
+                    self.cost.fixed_us + b as f64 * self.cost.base_us_per_sample / effective_speed.max(0.05);
+                ComputeOutcome {
+                    compute_s: us / 1e6,
+                    load: ws.load,
+                    effective_speed,
+                }
+            })
+            .collect()
+    }
+
+    /// Advance the BSP clock by one iteration: slowest worker + sync +
+    /// barrier; evolves every worker's load process by that span.
+    pub fn advance_iteration(&mut self, outcomes: &[ComputeOutcome], sync_s: f64) -> f64 {
+        let compute_max = outcomes
+            .iter()
+            .map(|o| o.compute_s)
+            .fold(0.0f64, f64::max);
+        let dt = compute_max + sync_s + self.barrier_s;
+        for ws in &mut self.workers {
+            ws.advance(dt);
+        }
+        self.clock += dt;
+        dt
+    }
+
+    /// Reset clock + load processes (new episode), keeping profiles.
+    pub fn reset(&mut self, seed: u64) {
+        let root = Rng::new(seed ^ 0xC1C0);
+        for (i, ws) in self.workers.iter_mut().enumerate() {
+            ws.load = ws.profile.load_mean;
+            ws.rng = root.split(i as u64);
+        }
+        self.clock = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_expected_structure() {
+        let u = profiles(ClusterPreset::UniformA100, 4, 0);
+        assert!(u.iter().all(|p| (p.speed - 1.0).abs() < 1e-9));
+        let f = profiles(ClusterPreset::FabricHetero, 8, 0);
+        assert!(f[0].speed > f[7].speed, "3090 should beat T4");
+        assert_eq!(f.iter().filter(|p| p.speed > 0.5).count(), 4);
+        let s1 = profiles(ClusterPreset::SpotMarket, 8, 1);
+        let s2 = profiles(ClusterPreset::SpotMarket, 8, 1);
+        assert!((s1[3].speed - s2[3].speed).abs() < 1e-12, "deterministic");
+    }
+
+    #[test]
+    fn hetero_cluster_has_stragglers() {
+        let mut c = SimCluster::new(ClusterPreset::FabricHetero, 8, 0);
+        let out = c.compute_phase(&vec![128; 8]);
+        let fast = out[0].compute_s;
+        let slow = out[7].compute_s;
+        assert!(slow > fast * 1.8, "T4 {slow} vs 3090 {fast}");
+    }
+
+    #[test]
+    fn clock_advances_by_straggler() {
+        let mut c = SimCluster::new(ClusterPreset::FabricHetero, 8, 0);
+        let out = c.compute_phase(&vec![256; 8]);
+        let max_c = out.iter().map(|o| o.compute_s).fold(0.0f64, f64::max);
+        let dt = c.advance_iteration(&out, 0.01);
+        assert!((dt - (max_c + 0.01 + c.barrier_s)).abs() < 1e-12);
+        assert!((c.clock - dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_process_stays_bounded_and_moves() {
+        let mut c = SimCluster::new(ClusterPreset::SpotMarket, 4, 3);
+        let mut loads = Vec::new();
+        for _ in 0..500 {
+            let out = c.compute_phase(&vec![64; 4]);
+            loads.push(out[0].load);
+            c.advance_iteration(&out, 0.001);
+        }
+        assert!(loads.iter().all(|&l| (0.0..=0.95).contains(&l)));
+        let lo = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = loads.iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi - lo > 0.02, "load process frozen: [{lo},{hi}]");
+    }
+
+    #[test]
+    fn memory_model_binds_on_t4_at_large_batch() {
+        let t4 = WorkerProfile::t4();
+        let a100 = WorkerProfile::a100();
+        let pc = 10_000_000;
+        assert!(batch_fits(&t4, pc, 64));
+        assert!(!batch_fits(&t4, pc, 1024 + 256), "T4 should OOM above cap");
+        assert!(batch_fits(&a100, pc, 1024));
+    }
+
+    #[test]
+    fn max_batch_monotone_in_memory() {
+        let c = SimCluster::new(ClusterPreset::FabricHetero, 8, 0);
+        let pc = 10_000_000;
+        let fast = c.max_batch(0, pc, 4096);
+        let slow = c.max_batch(7, pc, 4096);
+        assert!(fast >= slow);
+        assert!(slow >= 32);
+    }
+
+    #[test]
+    fn reset_restores_clock_and_determinism() {
+        let mut c = SimCluster::new(ClusterPreset::OscA100, 4, 9);
+        let o1: Vec<f64> = {
+            let out = c.compute_phase(&vec![128; 4]);
+            c.advance_iteration(&out, 0.0);
+            out.iter().map(|o| o.compute_s).collect()
+        };
+        c.reset(9);
+        assert_eq!(c.clock, 0.0);
+        let o2: Vec<f64> = c.compute_phase(&vec![128; 4]).iter().map(|o| o.compute_s).collect();
+        assert_eq!(o1, o2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Distributed leader/worker deployment over the TCP protocol.
+//!
+//! This is the paper's Fig. 1 deployed across real processes: each worker
+//! process owns a PJRT runtime and trains a model replica on its shard for
+//! `k` iterations per cycle, measures its own (real) iteration times and
+//! training statistics, and reports its state vector to the leader; the
+//! leader runs the PPO arbitrator and pushes batch-size actions back.
+//! Algorithm 1's lifecycle (register -> welcome -> state/action cycles ->
+//! shutdown) maps 1:1 onto `comm::Msg`.
+//!
+//! Demo-mode caveat (documented in DESIGN.md): workers run *local* SGD on
+//! their own replicas — the gradient all-reduce data plane is exercised by
+//! the simulator path (`trainer::BspTrainer`), which is mathematically
+//! exact; this mode exercises the coordination plane (real sockets, real
+//! per-process PJRT compute, real latencies for the §VI-H overhead story).
+
+use crate::comm::{Msg, TcpTransport, Transport};
+use crate::config::{presets, Scale};
+use crate::rl::action::BatchRule;
+use crate::rl::agent::PpoAgent;
+use crate::rl::reward::RewardParams;
+use crate::rl::state::{GlobalState, StateBuilder};
+use crate::runtime::ArtifactStore;
+use crate::sysmetrics::{SysSample, WindowAggregator};
+use crate::trainer::ModelRuntime;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Run the leader: accept the preset's worker count, drive
+/// `steps_per_episode` decision cycles, broadcast shutdown.
+pub fn serve(bind: &str, preset: &str, scale: Scale) -> anyhow::Result<()> {
+    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let (n, cycles) = (cfg.cluster.n_workers, cfg.steps_per_episode);
+    serve_n(bind, preset, scale, n, cycles)
+}
+
+/// [`serve`] with explicit worker count + cycle budget (demo/test sizes).
+pub fn serve_n(
+    bind: &str,
+    preset: &str,
+    scale: Scale,
+    n_workers: usize,
+    cycles: usize,
+) -> anyhow::Result<()> {
+    let mut cfg = presets::scaled(presets::by_name(preset)?, scale);
+    cfg.cluster.n_workers = n_workers;
+    cfg.steps_per_episode = cycles;
+    let store = Arc::new(ArtifactStore::open_default()?);
+    let mut agent = PpoAgent::new(store, cfg.rl.clone(), cfg.train.seed)?;
+    let rule = BatchRule {
+        min: cfg.batch.min,
+        max: cfg.batch.max,
+    };
+
+    let listener = TcpListener::bind(bind)?;
+    println!("[leader] listening on {bind}; waiting for {} workers", cfg.cluster.n_workers);
+    let mut transports: Vec<TcpTransport> = Vec::new();
+    let mut batches: Vec<usize> = Vec::new();
+    while transports.len() < cfg.cluster.n_workers {
+        let (stream, peer) = listener.accept()?;
+        let mut t = TcpTransport::new(stream)?;
+        match t.recv()? {
+            Msg::Register { worker, max_batch } => {
+                println!("[leader] worker {worker} registered from {peer} (max_batch={max_batch})");
+                t.send(&Msg::Welcome {
+                    worker,
+                    k: cfg.rl.k as u32,
+                    initial_batch: cfg.batch.initial as u32,
+                })?;
+                transports.push(t);
+                batches.push(cfg.batch.initial.min(max_batch as usize));
+            }
+            other => anyhow::bail!("expected Register, got {other:?}"),
+        }
+    }
+
+    for cycle in 0..cfg.steps_per_episode as u32 {
+        // Collect one StateReport per worker (BSP-style barrier).
+        let mut states = Vec::with_capacity(transports.len());
+        let mut rewards = Vec::with_capacity(transports.len());
+        for t in transports.iter_mut() {
+            match t.recv()? {
+                Msg::StateReport { state, reward, .. } => {
+                    states.push(state);
+                    rewards.push(reward);
+                }
+                other => anyhow::bail!("expected StateReport, got {other:?}"),
+            }
+        }
+        let samples = agent.act(&states, false)?;
+        for (w, t) in transports.iter_mut().enumerate() {
+            let new_batch = rule.apply(batches[w], samples[w].action, None);
+            let delta = new_batch as i32 - batches[w] as i32;
+            batches[w] = new_batch;
+            t.send(&Msg::Action {
+                worker: w as u32,
+                cycle,
+                delta,
+                new_batch: new_batch as u32,
+            })?;
+        }
+        let mean_r: f64 = rewards.iter().sum::<f64>() / rewards.len().max(1) as f64;
+        println!(
+            "[leader] cycle {cycle}: mean_reward={mean_r:+.3} batches={batches:?}"
+        );
+    }
+    // Drain the final pipelined report from each worker, then shut down —
+    // avoids a send-after-close race on the worker side (Algorithm 1 l.33).
+    for t in transports.iter_mut() {
+        let _ = t.recv()?;
+        t.send(&Msg::Shutdown)?;
+    }
+    println!("[leader] done");
+    Ok(())
+}
+
+/// Run one worker: connect, register, train k real iterations per cycle on
+/// a local replica, report state, apply actions, exit on Shutdown.
+pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow::Result<()> {
+    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let store = Arc::new(ArtifactStore::open_default()?);
+    let info = store.manifest.model(&cfg.train.model)?.clone();
+    let dataset = crate::data::by_name(&info.dataset, info.feature_dim, cfg.train.seed)?;
+    let mut sampler = crate::data::ShardSampler::new(
+        worker_id as usize % cfg.cluster.n_workers,
+        cfg.cluster.n_workers,
+        dataset.train_size,
+        cfg.train.seed,
+    );
+    let mut runtime = ModelRuntime::new(
+        store.clone(),
+        &cfg.train.model,
+        cfg.train.optimizer,
+        cfg.train.lr,
+        cfg.train.seed,
+    )?;
+
+    let mut t = TcpTransport::new(TcpStream::connect(addr)?)?;
+    t.send(&Msg::Register {
+        worker: worker_id,
+        max_batch: cfg.batch.max as u32,
+    })?;
+    let (k, mut batch) = match t.recv()? {
+        Msg::Welcome { k, initial_batch, .. } => (k as usize, initial_batch as usize),
+        other => anyhow::bail!("expected Welcome, got {other:?}"),
+    };
+
+    let builder = StateBuilder::default();
+    let reward = RewardParams::default();
+    let mut window = WindowAggregator::default();
+    let mut idx = Vec::new();
+    let mut cycle = 0u32;
+    let t_start = std::time::Instant::now();
+    loop {
+        // k real local training iterations at the current batch size.
+        for _ in 0..k {
+            let bucket = store.manifest.bucket_for(batch)?;
+            let mut xs = vec![0.0f32; bucket * info.feature_dim];
+            let mut ys = vec![0i32; bucket];
+            sampler.next_indices(batch, &mut idx);
+            for (r, &i) in idx.iter().enumerate() {
+                ys[r] = dataset
+                    .sample_into(i, &mut xs[r * info.feature_dim..(r + 1) * info.feature_dim]);
+            }
+            let m = runtime.train_step(&xs, &ys, batch, bucket)?;
+            window.push_iteration(
+                m.acc,
+                m.loss,
+                m.exec_seconds,
+                0.0, // no fabric in single-host demo mode
+                0,
+                SysSample { cpu_time_ratio: 1.0, mem_util: 0.2 },
+                m.sigma_norm,
+                m.sigma_norm2,
+            );
+        }
+        let summary = window.finish();
+        let global = GlobalState {
+            loss: summary.loss_mean,
+            eval_acc: summary.acc_mean,
+            eval_trend: 0.0,
+            progress: cycle as f64 / cfg.steps_per_episode as f64,
+            n_workers: cfg.cluster.n_workers,
+        };
+        let state = builder.build(&summary, batch, &global);
+        let r = reward.compute(&summary, batch);
+        t.send(&Msg::StateReport {
+            worker: worker_id,
+            cycle,
+            state,
+            reward: r,
+            sim_clock: t_start.elapsed().as_secs_f64(),
+        })?;
+        match t.recv()? {
+            Msg::Action { new_batch, .. } => {
+                batch = new_batch as usize;
+            }
+            Msg::Shutdown => break,
+            other => anyhow::bail!("expected Action/Shutdown, got {other:?}"),
+        }
+        cycle += 1;
+    }
+    println!("[worker {worker_id}] shut down cleanly after {cycle} cycles");
+    Ok(())
+}

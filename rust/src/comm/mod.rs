@@ -1,0 +1,298 @@
+//! Worker <-> arbitrator communication layer.
+//!
+//! The paper uses gRPC (§V); this build is offline, so the wire layer is a
+//! hand-rolled, versioned, length-prefixed binary protocol with the same
+//! message schema and the same state-up / action-down cycle. Two
+//! transports implement the common [`Transport`] trait:
+//!
+//! * [`TcpTransport`] — real sockets, used by the distributed
+//!   leader/worker example (`examples/distributed.rs`) and the §VI-H
+//!   overhead measurement;
+//! * [`ChannelTransport`] — in-process `mpsc`, used by the simulator and
+//!   tests (zero-copy of the same encode/decode path so framing bugs
+//!   cannot hide in sim mode).
+//!
+//! Encoding: little-endian, `u32` frame length, then `u16` proto version,
+//! `u8` message tag, payload. All floats are f64 bit patterns.
+
+pub mod leader;
+pub mod wire;
+
+use crate::rl::state::StateVector;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use wire::{Decoder, Encoder};
+
+pub const PROTO_VERSION: u16 = 1;
+
+/// Protocol messages (paper Fig. 1: state up, action down, lifecycle).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker announces itself and its capabilities.
+    Register { worker: u32, max_batch: u32 },
+    /// Arbitrator acknowledges registration.
+    Welcome { worker: u32, k: u32, initial_batch: u32 },
+    /// Worker's k-iteration window state report (§III-C cycle).
+    StateReport {
+        worker: u32,
+        cycle: u32,
+        state: StateVector,
+        reward: f64,
+        sim_clock: f64,
+    },
+    /// Arbitrator's batch-size adjustment for one worker (§IV-C).
+    Action { worker: u32, cycle: u32, delta: i32, new_batch: u32 },
+    /// BSP barrier marker (used by the distributed example).
+    Barrier { cycle: u32 },
+    /// Graceful shutdown broadcast (Algorithm 1 line 33).
+    Shutdown,
+}
+
+const TAG_REGISTER: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_STATE: u8 = 3;
+const TAG_ACTION: u8 = 4;
+const TAG_BARRIER: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+impl Msg {
+    /// Encode to a length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u16(PROTO_VERSION);
+        match self {
+            Msg::Register { worker, max_batch } => {
+                e.u8(TAG_REGISTER);
+                e.u32(*worker);
+                e.u32(*max_batch);
+            }
+            Msg::Welcome { worker, k, initial_batch } => {
+                e.u8(TAG_WELCOME);
+                e.u32(*worker);
+                e.u32(*k);
+                e.u32(*initial_batch);
+            }
+            Msg::StateReport { worker, cycle, state, reward, sim_clock } => {
+                e.u8(TAG_STATE);
+                e.u32(*worker);
+                e.u32(*cycle);
+                e.u8(state.0.len() as u8);
+                for &f in &state.0 {
+                    e.f64(f as f64);
+                }
+                e.f64(*reward);
+                e.f64(*sim_clock);
+            }
+            Msg::Action { worker, cycle, delta, new_batch } => {
+                e.u8(TAG_ACTION);
+                e.u32(*worker);
+                e.u32(*cycle);
+                e.i32(*delta);
+                e.u32(*new_batch);
+            }
+            Msg::Barrier { cycle } => {
+                e.u8(TAG_BARRIER);
+                e.u32(*cycle);
+            }
+            Msg::Shutdown => {
+                e.u8(TAG_SHUTDOWN);
+            }
+        }
+        e.frame()
+    }
+
+    /// Decode one frame body (without the length prefix).
+    pub fn decode(body: &[u8]) -> anyhow::Result<Msg> {
+        let mut d = Decoder::new(body);
+        let ver = d.u16()?;
+        anyhow::ensure!(ver == PROTO_VERSION, "protocol version {ver} != {PROTO_VERSION}");
+        let tag = d.u8()?;
+        let msg = match tag {
+            TAG_REGISTER => Msg::Register { worker: d.u32()?, max_batch: d.u32()? },
+            TAG_WELCOME => Msg::Welcome { worker: d.u32()?, k: d.u32()?, initial_batch: d.u32()? },
+            TAG_STATE => {
+                let worker = d.u32()?;
+                let cycle = d.u32()?;
+                let n = d.u8()? as usize;
+                let mut state = Vec::with_capacity(n);
+                for _ in 0..n {
+                    state.push(d.f64()? as f32);
+                }
+                Msg::StateReport {
+                    worker,
+                    cycle,
+                    state: StateVector(state),
+                    reward: d.f64()?,
+                    sim_clock: d.f64()?,
+                }
+            }
+            TAG_ACTION => Msg::Action {
+                worker: d.u32()?,
+                cycle: d.u32()?,
+                delta: d.i32()?,
+                new_batch: d.u32()?,
+            },
+            TAG_BARRIER => Msg::Barrier { cycle: d.u32()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            t => anyhow::bail!("unknown message tag {t}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Bidirectional message transport.
+pub trait Transport: Send {
+    fn send(&mut self, msg: &Msg) -> anyhow::Result<()>;
+    fn recv(&mut self) -> anyhow::Result<Msg>;
+}
+
+/// Framed TCP transport.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> anyhow::Result<Self> {
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Msg) -> anyhow::Result<()> {
+        let frame = msg.encode();
+        self.stream.write_all(&frame)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Msg> {
+        let mut len_buf = [0u8; 4];
+        self.stream.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        anyhow::ensure!(len <= 1 << 20, "frame too large: {len}");
+        let mut body = vec![0u8; len];
+        self.stream.read_exact(&mut body)?;
+        Msg::decode(&body)
+    }
+}
+
+/// In-process transport over std mpsc, running the same encode/decode.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+/// Create a connected pair of in-process transports.
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (tx_a, rx_b) = mpsc::channel();
+    let (tx_b, rx_a) = mpsc::channel();
+    (
+        ChannelTransport { tx: tx_a, rx: rx_a },
+        ChannelTransport { tx: tx_b, rx: rx_b },
+    )
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Msg) -> anyhow::Result<()> {
+        // Same serialized bytes as TCP so the codec is always exercised.
+        self.tx
+            .send(msg.encode())
+            .map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Msg> {
+        let frame = self.rx.recv().map_err(|_| anyhow::anyhow!("peer closed"))?;
+        anyhow::ensure!(frame.len() >= 4, "short frame");
+        let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+        anyhow::ensure!(frame.len() == len + 4, "frame length mismatch");
+        Msg::decode(&frame[4..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Register { worker: 3, max_batch: 1024 },
+            Msg::Welcome { worker: 3, k: 5, initial_batch: 128 },
+            Msg::StateReport {
+                worker: 3,
+                cycle: 17,
+                state: StateVector(vec![0.5; 16]),
+                reward: -1.25,
+                sim_clock: 99.5,
+            },
+            Msg::Action { worker: 3, cycle: 17, delta: -25, new_batch: 103 },
+            Msg::Barrier { cycle: 42 },
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_messages() {
+        for msg in sample_msgs() {
+            let frame = msg.encode();
+            let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+            assert_eq!(len + 4, frame.len());
+            let decoded = Msg::decode(&frame[4..]).unwrap();
+            assert_eq!(decoded, msg);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_version_and_tag() {
+        let mut frame = Msg::Shutdown.encode();
+        frame[4] = 99; // version low byte
+        assert!(Msg::decode(&frame[4..]).is_err());
+        let mut frame = Msg::Shutdown.encode();
+        frame[6] = 200; // tag
+        assert!(Msg::decode(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut frame = Msg::Barrier { cycle: 1 }.encode();
+        frame.push(0);
+        assert!(Msg::decode(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn channel_transport_roundtrip() {
+        let (mut a, mut b) = channel_pair();
+        for msg in sample_msgs() {
+            a.send(&msg).unwrap();
+            assert_eq!(b.recv().unwrap(), msg);
+            b.send(&msg).unwrap();
+            assert_eq!(a.recv().unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn tcp_transport_roundtrip() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            loop {
+                let m = t.recv().unwrap();
+                if m == Msg::Shutdown {
+                    t.send(&m).unwrap();
+                    break;
+                }
+                t.send(&m).unwrap(); // echo
+            }
+        });
+        let mut c = TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        for msg in sample_msgs() {
+            c.send(&msg).unwrap();
+            assert_eq!(c.recv().unwrap(), msg);
+        }
+        h.join().unwrap();
+    }
+}

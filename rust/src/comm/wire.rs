@@ -1,0 +1,154 @@
+//! Little-endian binary encoder/decoder with length-prefixed framing.
+
+/// Append-only encoder; `frame()` prepends the u32 length.
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::with_capacity(64) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Finish: [len:u32][body].
+    pub fn frame(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.buf.len() + 4);
+        out.extend_from_slice(&(self.buf.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        out
+    }
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bounds-checked decoder over a frame body.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Decoder { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "frame underrun");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn i32(&mut self) -> anyhow::Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Assert the frame was fully consumed.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes in frame");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut e = Encoder::new();
+        e.u8(7);
+        e.u16(300);
+        e.u32(70_000);
+        e.i32(-5);
+        e.u64(1 << 40);
+        e.f64(-2.5);
+        e.bytes(b"hello");
+        let frame = e.frame();
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        let mut d = Decoder::new(&frame[4..4 + len]);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 300);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.i32().unwrap(), -5);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f64().unwrap(), -2.5);
+        assert_eq!(d.bytes().unwrap(), b"hello");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn underrun_detected() {
+        let mut d = Decoder::new(&[1, 2]);
+        assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn trailing_detected() {
+        let d = Decoder::new(&[1]);
+        assert!(d.finish().is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! Experiment configuration system.
+//!
+//! Configs are plain structs with JSON load/save (the offline build has no
+//! serde; see `util::json`). Every paper experiment has a named preset in
+//! [`presets`], so harness binaries are `dynamix exp --preset fig4-vgg11-sgd
+//! --scale quick` rather than hand-assembled flag soup. A `Scale` knob
+//! shrinks episode/step counts for CI while preserving every structural
+//! parameter (worker counts, k, reward coefficients).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Optimizer family; selects both the train-step artifact and the paper's
+/// reward variant (the eta gradient-stability penalty applies to adaptive
+/// optimizers only, §IV-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+impl Optimizer {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "sgd",
+            Optimizer::Adam => "adam",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "sgd" => Ok(Optimizer::Sgd),
+            "adam" => Ok(Optimizer::Adam),
+            _ => anyhow::bail!("unknown optimizer {s:?}"),
+        }
+    }
+
+    /// Adaptive optimizers get the sigma_norm penalty in the reward.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, Optimizer::Adam)
+    }
+}
+
+/// Gradient-synchronization topology (paper §VI: Ring All-Reduce on the
+/// primary/OSC testbeds, BytePS parameter server on FABRIC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    RingAllReduce,
+    /// BytePS-style parameter server with `servers` server nodes.
+    ParameterServer { servers: usize },
+}
+
+impl Topology {
+    pub fn as_str(&self) -> String {
+        match self {
+            Topology::RingAllReduce => "ring".into(),
+            Topology::ParameterServer { servers } => format!("ps{servers}"),
+        }
+    }
+}
+
+/// Cluster heterogeneity preset (DESIGN.md substitution table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterPreset {
+    /// Lambda primary testbed: near-uniform A100 nodes, mild jitter.
+    UniformA100,
+    /// OSC: uniform A100-PCIE with moderate shared-fabric contention.
+    OscA100,
+    /// FABRIC: 4 fast (RTX3090-like) + 4 slow (T4-like) workers, noisy net.
+    FabricHetero,
+    /// Spot-market style: large speed spread + load bursts (stress preset).
+    SpotMarket,
+}
+
+impl ClusterPreset {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClusterPreset::UniformA100 => "uniform_a100",
+            ClusterPreset::OscA100 => "osc_a100",
+            ClusterPreset::FabricHetero => "fabric_hetero",
+            ClusterPreset::SpotMarket => "spot_market",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "uniform_a100" => ClusterPreset::UniformA100,
+            "osc_a100" => ClusterPreset::OscA100,
+            "fabric_hetero" => ClusterPreset::FabricHetero,
+            "spot_market" => ClusterPreset::SpotMarket,
+            _ => anyhow::bail!("unknown cluster preset {s:?}"),
+        })
+    }
+}
+
+/// PPO variant (paper §IV-A describes both; DESIGN.md §6 ablates them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PpoVariant {
+    /// Clipped surrogate + GAE (Eq. 1) — default.
+    Clipped,
+    /// The paper's simplification: cumulative-reward policy gradient.
+    Simplified,
+}
+
+/// Training-workload half of an experiment.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub optimizer: Optimizer,
+    pub lr: f32,
+    /// Root seed; model init uses `seed % init_seeds` snapshot.
+    pub seed: u64,
+    /// Convergence target on eval accuracy (run stops when sustained).
+    pub target_acc: f64,
+    /// Hard cap on global iterations per run/episode.
+    pub max_steps: usize,
+    /// Evaluate every `eval_every` global iterations.
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "vgg11_mini".into(),
+            optimizer: Optimizer::Sgd,
+            lr: 0.05,
+            seed: 0,
+            target_acc: 0.80,
+            max_steps: 400,
+            eval_every: 10,
+        }
+    }
+}
+
+/// RL half (paper §IV).
+#[derive(Clone, Debug)]
+pub struct RlConfig {
+    /// Temporal aggregation window: iterations per decision cycle (§III-C).
+    pub k: usize,
+    pub gamma: f64,
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    /// PPO epochs over the trajectory buffer per policy update.
+    pub update_epochs: usize,
+    pub variant: PpoVariant,
+    // Reward coefficients (§IV-D).
+    pub alpha: f64,
+    pub beta: f64,
+    pub delta: f64,
+    pub eta: f64,
+    /// GAE lambda.
+    pub gae_lambda: f64,
+    /// Feature ablation switches (DESIGN.md §6).
+    pub use_network_features: bool,
+    pub use_grad_stats_features: bool,
+}
+
+impl Default for RlConfig {
+    fn default() -> Self {
+        RlConfig {
+            k: 5,
+            gamma: 0.99,
+            lr: 3e-4,
+            clip_eps: 0.2,
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+            update_epochs: 4,
+            variant: PpoVariant::Clipped,
+            alpha: 2.0,
+            beta: 0.5,
+            delta: 0.05,
+            eta: 0.1,
+            gae_lambda: 0.95,
+            use_network_features: true,
+            use_grad_stats_features: true,
+        }
+    }
+}
+
+/// Cluster + network half.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_workers: usize,
+    pub preset: ClusterPreset,
+    pub topology: Topology,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_workers: 16,
+            preset: ClusterPreset::UniformA100,
+            topology: Topology::RingAllReduce,
+            seed: 0,
+        }
+    }
+}
+
+/// Batch-size constraints (paper §IV-C).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    pub initial: usize,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            initial: 128,
+            min: 32,
+            max: 1024,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub train: TrainConfig,
+    pub rl: RlConfig,
+    pub cluster: ClusterConfig,
+    pub batch: BatchConfig,
+    /// RL-training episodes (§VI-C: 20).
+    pub episodes: usize,
+    /// Decision cycles per episode (≈ paper's "steps per episode").
+    pub steps_per_episode: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            train: TrainConfig::default(),
+            rl: RlConfig::default(),
+            cluster: ClusterConfig::default(),
+            batch: BatchConfig::default(),
+            episodes: 20,
+            steps_per_episode: 100,
+        }
+    }
+}
+
+/// Effort scale for experiment harnesses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: minutes, preserves structure not asymptotics.
+    Quick,
+    /// Paper-shaped: what EXPERIMENTS.md reports.
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "quick" => Ok(Scale::Quick),
+            "full" => Ok(Scale::Full),
+            _ => anyhow::bail!("unknown scale {s:?} (quick|full)"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate cross-field invariants; call before running.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cluster.n_workers >= 1 && self.cluster.n_workers <= 32,
+            "n_workers {} outside [1,32] (policy_forward artifact is compiled for 32)",
+            self.cluster.n_workers);
+        anyhow::ensure!(self.batch.min >= 32, "min batch below paper floor 32");
+        anyhow::ensure!(self.batch.max <= 1024, "max batch above paper cap 1024");
+        anyhow::ensure!(self.batch.initial >= self.batch.min && self.batch.initial <= self.batch.max,
+            "initial batch outside [min,max]");
+        anyhow::ensure!(self.rl.k >= 1, "k must be >= 1");
+        anyhow::ensure!((0.0..=1.0).contains(&self.rl.gamma), "gamma outside [0,1]");
+        anyhow::ensure!(self.train.max_steps >= self.rl.k, "max_steps < k");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::jobj! {
+            "name" => self.name.clone(),
+            "model" => self.train.model.clone(),
+            "optimizer" => self.train.optimizer.as_str(),
+            "lr" => self.train.lr as f64,
+            "seed" => self.train.seed as f64,
+            "target_acc" => self.train.target_acc,
+            "max_steps" => self.train.max_steps,
+            "eval_every" => self.train.eval_every,
+            "k" => self.rl.k,
+            "gamma" => self.rl.gamma,
+            "rl_lr" => self.rl.lr as f64,
+            "clip_eps" => self.rl.clip_eps as f64,
+            "ent_coef" => self.rl.ent_coef as f64,
+            "vf_coef" => self.rl.vf_coef as f64,
+            "update_epochs" => self.rl.update_epochs,
+            "variant" => match self.rl.variant { PpoVariant::Clipped => "clipped", PpoVariant::Simplified => "simplified" },
+            "alpha" => self.rl.alpha,
+            "beta" => self.rl.beta,
+            "delta" => self.rl.delta,
+            "eta" => self.rl.eta,
+            "gae_lambda" => self.rl.gae_lambda,
+            "use_network_features" => self.rl.use_network_features,
+            "use_grad_stats_features" => self.rl.use_grad_stats_features,
+            "n_workers" => self.cluster.n_workers,
+            "preset" => self.cluster.preset.as_str(),
+            "topology" => self.cluster.topology.as_str(),
+            "cluster_seed" => self.cluster.seed as f64,
+            "batch_initial" => self.batch.initial,
+            "batch_min" => self.batch.min,
+            "batch_max" => self.batch.max,
+            "episodes" => self.episodes,
+            "steps_per_episode" => self.steps_per_episode,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let mut c = ExperimentConfig::default();
+        let s = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+        let f = |k: &str| v.get(k).and_then(Json::as_f64);
+        let u = |k: &str| v.get(k).and_then(Json::as_usize);
+        let b = |k: &str| v.get(k).and_then(Json::as_bool);
+        if let Some(x) = s("name") { c.name = x; }
+        if let Some(x) = s("model") { c.train.model = x; }
+        if let Some(x) = s("optimizer") { c.train.optimizer = Optimizer::parse(&x)?; }
+        if let Some(x) = f("lr") { c.train.lr = x as f32; }
+        if let Some(x) = f("seed") { c.train.seed = x as u64; }
+        if let Some(x) = f("target_acc") { c.train.target_acc = x; }
+        if let Some(x) = u("max_steps") { c.train.max_steps = x; }
+        if let Some(x) = u("eval_every") { c.train.eval_every = x; }
+        if let Some(x) = u("k") { c.rl.k = x; }
+        if let Some(x) = f("gamma") { c.rl.gamma = x; }
+        if let Some(x) = f("rl_lr") { c.rl.lr = x as f32; }
+        if let Some(x) = f("clip_eps") { c.rl.clip_eps = x as f32; }
+        if let Some(x) = f("ent_coef") { c.rl.ent_coef = x as f32; }
+        if let Some(x) = f("vf_coef") { c.rl.vf_coef = x as f32; }
+        if let Some(x) = u("update_epochs") { c.rl.update_epochs = x; }
+        if let Some(x) = s("variant") {
+            c.rl.variant = match x.as_str() {
+                "clipped" => PpoVariant::Clipped,
+                "simplified" => PpoVariant::Simplified,
+                _ => anyhow::bail!("unknown variant {x:?}"),
+            };
+        }
+        if let Some(x) = f("alpha") { c.rl.alpha = x; }
+        if let Some(x) = f("beta") { c.rl.beta = x; }
+        if let Some(x) = f("delta") { c.rl.delta = x; }
+        if let Some(x) = f("eta") { c.rl.eta = x; }
+        if let Some(x) = f("gae_lambda") { c.rl.gae_lambda = x; }
+        if let Some(x) = b("use_network_features") { c.rl.use_network_features = x; }
+        if let Some(x) = b("use_grad_stats_features") { c.rl.use_grad_stats_features = x; }
+        if let Some(x) = u("n_workers") { c.cluster.n_workers = x; }
+        if let Some(x) = s("preset") { c.cluster.preset = ClusterPreset::parse(&x)?; }
+        if let Some(x) = s("topology") {
+            c.cluster.topology = if x == "ring" {
+                Topology::RingAllReduce
+            } else if let Some(n) = x.strip_prefix("ps") {
+                Topology::ParameterServer { servers: n.parse()? }
+            } else {
+                anyhow::bail!("unknown topology {x:?}")
+            };
+        }
+        if let Some(x) = f("cluster_seed") { c.cluster.seed = x as u64; }
+        if let Some(x) = u("batch_initial") { c.batch.initial = x; }
+        if let Some(x) = u("batch_min") { c.batch.min = x; }
+        if let Some(x) = u("batch_max") { c.batch.max = x; }
+        if let Some(x) = u("episodes") { c.episodes = x; }
+        if let Some(x) = u("steps_per_episode") { c.steps_per_episode = x; }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+pub mod presets;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let mut c = ExperimentConfig::default();
+        c.name = "t".into();
+        c.train.optimizer = Optimizer::Adam;
+        c.cluster.topology = Topology::ParameterServer { servers: 2 };
+        c.rl.variant = PpoVariant::Simplified;
+        c.cluster.n_workers = 8;
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.train.optimizer, Optimizer::Adam);
+        assert_eq!(c2.cluster.topology, Topology::ParameterServer { servers: 2 });
+        assert_eq!(c2.rl.variant, PpoVariant::Simplified);
+        assert_eq!(c2.cluster.n_workers, 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 64;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.batch.initial = 8;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.batch.max = 4096;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn optimizer_and_preset_parse() {
+        assert_eq!(Optimizer::parse("adam").unwrap(), Optimizer::Adam);
+        assert!(Optimizer::parse("lamb").is_err());
+        assert_eq!(
+            ClusterPreset::parse("fabric_hetero").unwrap(),
+            ClusterPreset::FabricHetero
+        );
+    }
+}

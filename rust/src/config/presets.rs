@@ -1,0 +1,181 @@
+//! Named experiment presets: one per paper table/figure configuration.
+//!
+//! The preset encodes everything structural; [`scaled`] then shrinks only
+//! effort knobs (episodes, steps, max_steps) for `Scale::Quick` runs.
+
+use super::*;
+
+/// Paper §VI-C step counts per episode: VGG11-SGD 100, VGG11-Adam 70,
+/// ResNet34-SGD 120 (each step here = one k-iteration decision cycle).
+fn base(name: &str, model: &str, opt: Optimizer, lr: f32, steps: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = name.into();
+    c.train.model = model.into();
+    c.train.optimizer = opt;
+    c.train.lr = lr;
+    c.steps_per_episode = steps;
+    c.train.max_steps = steps * c.rl.k;
+    // CIFAR-100-family models converge to lower absolute accuracy.
+    if model.starts_with("resnet") {
+        c.train.target_acc = 0.60;
+    }
+    c
+}
+
+/// All named presets. Returns an error listing valid names on a miss.
+pub fn by_name(name: &str) -> anyhow::Result<ExperimentConfig> {
+    let c = match name {
+        // --- primary testbed configs (Figs 3-5): 16 workers, ring ---
+        "vgg11-sgd" => base(name, "vgg11_mini", Optimizer::Sgd, 0.05, 100),
+        "vgg11-adam" => {
+            let mut c = base(name, "vgg11_mini", Optimizer::Adam, 0.002, 70);
+            c.rl.eta = 0.1;
+            c
+        }
+        "resnet34-sgd" => base(name, "resnet34_mini", Optimizer::Sgd, 0.02, 120),
+
+        // --- scalability (Table I): vgg16 on OSC at 8/16/32 nodes ---
+        "scal-8" | "scal-16" | "scal-32" => {
+            let n: usize = name.strip_prefix("scal-").unwrap().parse()?;
+            let mut c = base(name, "vgg16_mini", Optimizer::Sgd, 0.05, 100);
+            c.cluster.preset = ClusterPreset::OscA100;
+            c.cluster.n_workers = n;
+            c
+        }
+
+        // --- policy transfer (Fig 6) ---
+        "transfer-vgg16-src" => {
+            let mut c = base(name, "vgg16_mini", Optimizer::Sgd, 0.05, 100);
+            c.cluster.preset = ClusterPreset::OscA100;
+            c.cluster.n_workers = 16;
+            c
+        }
+        "transfer-vgg19-dst" => {
+            let mut c = base(name, "vgg19_mini", Optimizer::Sgd, 0.05, 100);
+            c.cluster.preset = ClusterPreset::OscA100;
+            c.cluster.n_workers = 16;
+            c
+        }
+        "transfer-resnet34-src" => {
+            let mut c = base(name, "resnet34_mini", Optimizer::Sgd, 0.02, 120);
+            c.cluster.preset = ClusterPreset::OscA100;
+            c.cluster.n_workers = 32;
+            c
+        }
+        "transfer-resnet50-dst" => {
+            let mut c = base(name, "resnet50_mini", Optimizer::Sgd, 0.02, 120);
+            c.cluster.preset = ClusterPreset::OscA100;
+            c.cluster.n_workers = 32;
+            c
+        }
+
+        // --- BytePS / FABRIC heterogeneous (§VI-G): 8 workers, PS ---
+        "byteps-hetero" => {
+            let mut c = base(name, "vgg11_mini", Optimizer::Sgd, 0.05, 100);
+            c.cluster.preset = ClusterPreset::FabricHetero;
+            c.cluster.n_workers = 8;
+            c.cluster.topology = Topology::ParameterServer { servers: 2 };
+            c.train.target_acc = 0.75;
+            c
+        }
+
+        // --- ablation presets (DESIGN.md §6) ---
+        "ablate-simplified-ppo" => {
+            let mut c = base(name, "vgg11_mini", Optimizer::Sgd, 0.05, 100);
+            c.rl.variant = PpoVariant::Simplified;
+            c
+        }
+        "ablate-no-network-state" => {
+            let mut c = base(name, "vgg11_mini", Optimizer::Sgd, 0.05, 100);
+            c.rl.use_network_features = false;
+            c
+        }
+        "ablate-no-grad-stats" => {
+            let mut c = base(name, "vgg11_mini", Optimizer::Sgd, 0.05, 100);
+            c.rl.use_grad_stats_features = false;
+            c
+        }
+        _ => anyhow::bail!(
+            "unknown preset {name:?}; valid: vgg11-sgd vgg11-adam resnet34-sgd \
+             scal-8 scal-16 scal-32 transfer-vgg16-src transfer-vgg19-dst \
+             transfer-resnet34-src transfer-resnet50-dst byteps-hetero \
+             ablate-simplified-ppo ablate-no-network-state ablate-no-grad-stats"
+        ),
+    };
+    c.validate()?;
+    Ok(c)
+}
+
+/// Apply an effort scale to a preset: `Quick` shrinks episodes/steps for
+/// CI; `Full` is the paper-shaped run recorded in EXPERIMENTS.md.
+pub fn scaled(mut c: ExperimentConfig, scale: Scale) -> ExperimentConfig {
+    match scale {
+        Scale::Full => c,
+        Scale::Quick => {
+            c.episodes = c.episodes.min(6);
+            c.steps_per_episode = c.steps_per_episode.min(30);
+            c.train.max_steps = c.steps_per_episode * c.rl.k;
+            c
+        }
+    }
+}
+
+/// Every preset name (for CLI help / sweep-all harnesses).
+pub const ALL: &[&str] = &[
+    "vgg11-sgd",
+    "vgg11-adam",
+    "resnet34-sgd",
+    "scal-8",
+    "scal-16",
+    "scal-32",
+    "transfer-vgg16-src",
+    "transfer-vgg19-dst",
+    "transfer-resnet34-src",
+    "transfer-resnet50-dst",
+    "byteps-hetero",
+    "ablate-simplified-ppo",
+    "ablate-no-network-state",
+    "ablate-no-grad-stats",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for name in ALL {
+            let c = by_name(name).unwrap();
+            c.validate().unwrap();
+            assert_eq!(&c.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_lists_valid_names() {
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("vgg11-sgd"));
+    }
+
+    #[test]
+    fn scalability_presets_vary_workers() {
+        assert_eq!(by_name("scal-8").unwrap().cluster.n_workers, 8);
+        assert_eq!(by_name("scal-32").unwrap().cluster.n_workers, 32);
+    }
+
+    #[test]
+    fn quick_scale_shrinks_only_effort() {
+        let full = by_name("vgg11-sgd").unwrap();
+        let quick = scaled(full.clone(), Scale::Quick);
+        assert!(quick.episodes <= 6 && quick.steps_per_episode <= 30);
+        assert_eq!(quick.cluster.n_workers, full.cluster.n_workers);
+        assert_eq!(quick.rl.k, full.rl.k);
+    }
+
+    #[test]
+    fn byteps_preset_uses_ps_topology() {
+        let c = by_name("byteps-hetero").unwrap();
+        assert!(matches!(c.cluster.topology, Topology::ParameterServer { .. }));
+        assert_eq!(c.cluster.preset, ClusterPreset::FabricHetero);
+    }
+}

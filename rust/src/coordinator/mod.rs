@@ -1,0 +1,337 @@
+//! The DYNAMIX arbitrator (paper §III-C, §V, Algorithm 1).
+//!
+//! Ties the BSP trainer to the PPO agent in the paper's cyclic protocol:
+//! train `k` iterations per worker, aggregate each worker's window into a
+//! state vector, score all workers with one `policy_forward` call, apply
+//! the batch-size deltas under the [32,1024] + memory constraints, repeat.
+//!
+//! Credit assignment follows Algorithm 1: the reward for the action taken
+//! at cycle `c` is computed from the *next* window (the k iterations run
+//! under the adjusted batch sizes), so each transition is (s_c, a_c,
+//! r_{c+1}). An episode of `steps_per_episode` decision steps therefore
+//! spans `steps_per_episode + 1` windows.
+//!
+//! Two modes:
+//! * [`Coordinator::train_rl`]       — episodic PPO training (§VI-C):
+//!   model/cluster reset each episode, exploration on, policy updated from
+//!   the episode's trajectories.
+//! * [`Coordinator::run_inference`]  — frozen-policy deployment (§VI-D):
+//!   greedy actions, runs to convergence or the step cap, records the
+//!   trajectory.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{mean_std, mean_std_usize, median, ConvergenceDetector, RunRecord, TracePoint};
+use crate::rl::action::BatchRule;
+use crate::rl::agent::{PpoAgent, UpdateStats};
+use crate::rl::reward::RewardParams;
+use crate::rl::state::{GlobalState, StateBuilder, StateVector};
+use crate::rl::trajectory::{Trajectory, Transition, UpdateBatch};
+use crate::runtime::ArtifactStore;
+use crate::trainer::BspTrainer;
+use std::sync::Arc;
+
+/// Outcome of one k-iteration decision cycle (pre-action snapshot).
+#[derive(Clone, Debug)]
+pub struct CycleOutcome {
+    pub states: Vec<StateVector>,
+    pub rewards: Vec<f64>,
+    pub sim_clock: f64,
+    pub train_acc: f64,
+    pub eval_acc: f64,
+    pub loss: f64,
+}
+
+/// Per-episode summary (feeds Fig. 3).
+#[derive(Clone, Debug)]
+pub struct EpisodeResult {
+    pub episode: usize,
+    /// Cumulative reward per worker.
+    pub worker_returns: Vec<f64>,
+    pub mean_return: f64,
+    pub median_return: f64,
+    pub final_train_acc: f64,
+    pub final_eval_acc: f64,
+    pub sim_time: f64,
+    pub update: UpdateStats,
+}
+
+/// Inference-run summary (feeds Fig. 4/5, Tables).
+#[derive(Clone, Debug)]
+pub struct InferenceSummary {
+    pub final_eval_acc: f64,
+    pub best_eval_acc: f64,
+    pub convergence_time: Option<f64>,
+    pub total_sim_time: f64,
+    pub total_iters: usize,
+    /// (cycle, per-worker batch mean, std) trace for Fig. 5.
+    pub batch_trace: Vec<(usize, f64, f64)>,
+}
+
+pub struct Coordinator {
+    pub trainer: BspTrainer,
+    pub agent: PpoAgent,
+    pub cfg: ExperimentConfig,
+    state_builder: StateBuilder,
+    reward: RewardParams,
+    rule: BatchRule,
+    eval_history: Vec<f64>,
+    calibrated: bool,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ExperimentConfig, store: Arc<ArtifactStore>) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let mut trainer = BspTrainer::new(&cfg, store.clone())?;
+        trainer.calibrate()?;
+        let agent = PpoAgent::new(store, cfg.rl.clone(), cfg.train.seed)?;
+        let state_builder = StateBuilder {
+            use_network_features: cfg.rl.use_network_features,
+            use_grad_stats_features: cfg.rl.use_grad_stats_features,
+            iter_time_ref: 0.1, // recalibrated from the first window
+        };
+        let reward = RewardParams {
+            alpha: cfg.rl.alpha,
+            beta: cfg.rl.beta,
+            delta: cfg.rl.delta,
+            eta: cfg.rl.eta,
+            adaptive: cfg.train.optimizer.is_adaptive(),
+            iter_time_ref: 0.1,
+        };
+        let rule = BatchRule {
+            min: cfg.batch.min,
+            max: cfg.batch.max,
+        };
+        Ok(Coordinator {
+            trainer,
+            agent,
+            cfg,
+            state_builder,
+            reward,
+            rule,
+            eval_history: Vec::new(),
+            calibrated: false,
+        })
+    }
+
+    /// Run k training iterations and summarize every worker's window.
+    fn run_cycle(&mut self, progress: f64) -> anyhow::Result<CycleOutcome> {
+        let k = self.cfg.rl.k;
+        let mut last_acc = 0.0;
+        let mut last_loss = 0.0;
+        for _ in 0..k {
+            let out = self.trainer.iterate()?;
+            last_acc = out.acc;
+            last_loss = out.loss;
+        }
+        let (_, eval_acc) = self.trainer.eval()?;
+        self.eval_history.push(eval_acc);
+        let eval_trend = if self.eval_history.len() >= 2 {
+            let n = self.eval_history.len();
+            self.eval_history[n - 1] - self.eval_history[n - 2]
+        } else {
+            0.0
+        };
+        let global = GlobalState {
+            loss: last_loss,
+            eval_acc,
+            eval_trend,
+            progress,
+            n_workers: self.trainer.n_workers(),
+        };
+        let n = self.trainer.n_workers();
+        let mut states = Vec::with_capacity(n);
+        let mut rewards = Vec::with_capacity(n);
+        for w in 0..n {
+            let summary = self.trainer.windows[w].finish();
+            if !self.calibrated && summary.iter_time_mean > 0.0 {
+                // First window defines the iteration-time reference for
+                // both the state feature and the reward's beta term.
+                self.state_builder.iter_time_ref = summary.iter_time_mean;
+                self.reward.iter_time_ref = summary.iter_time_mean;
+                self.calibrated = true;
+            }
+            rewards.push(self.reward.compute(&summary, self.trainer.batches[w]));
+            states.push(self.state_builder.build(&summary, self.trainer.batches[w], &global));
+        }
+        Ok(CycleOutcome {
+            states,
+            rewards,
+            sim_clock: self.trainer.cluster.clock,
+            train_acc: last_acc,
+            eval_acc,
+            loss: last_loss,
+        })
+    }
+
+    /// Apply one action per worker under batch + memory constraints.
+    fn apply_actions(&mut self, actions: &[usize]) {
+        let max = self.cfg.batch.max;
+        for (w, &a) in actions.iter().enumerate() {
+            let cap = self.trainer.mem_cap(w, max);
+            self.trainer.batches[w] = self.rule.apply(self.trainer.batches[w], a, Some(cap));
+        }
+    }
+
+    /// Episodic PPO training (§VI-C). Returns one result per episode.
+    pub fn train_rl(&mut self, episodes: usize) -> anyhow::Result<Vec<EpisodeResult>> {
+        let steps = self.cfg.steps_per_episode;
+        let mut results = Vec::with_capacity(episodes);
+        for ep in 0..episodes {
+            let seed = self.cfg.train.seed ^ (ep as u64).wrapping_mul(0x9E37_79B9);
+            self.trainer.reset_episode(seed, self.cfg.batch.initial)?;
+            self.eval_history.clear();
+            self.calibrated = false;
+
+            let n = self.trainer.n_workers();
+            let mut trajs: Vec<Trajectory> = vec![Trajectory::default(); n];
+            // Window 0: state only (no action taken yet).
+            let mut cycle = self.run_cycle(0.0)?;
+            let mut pending: Option<Vec<crate::rl::agent::ActionSample>> = None;
+            let mut last = cycle.clone();
+
+            for step in 0..steps {
+                let samples = self.agent.act(&cycle.states, true)?;
+                self.apply_actions(&samples.iter().map(|s| s.action).collect::<Vec<_>>());
+                let next = self.run_cycle((step + 1) as f64 / steps as f64)?;
+                for w in 0..n {
+                    trajs[w].push(Transition {
+                        state: cycle.states[w].clone(),
+                        action: samples[w].action,
+                        logp: samples[w].logp,
+                        value: samples[w].value,
+                        reward: next.rewards[w],
+                    });
+                }
+                pending = Some(samples);
+                last = next.clone();
+                cycle = next;
+            }
+            drop(pending);
+
+            let batch = UpdateBatch::from_trajectories(&trajs, self.cfg.rl.gamma, self.cfg.rl.gae_lambda);
+            let update = self.agent.update(&batch)?;
+            let worker_returns: Vec<f64> = trajs.iter().map(|t| t.total_reward()).collect();
+            let (mean_return, _) = mean_std(&worker_returns);
+            results.push(EpisodeResult {
+                episode: ep,
+                median_return: median(&worker_returns),
+                mean_return,
+                worker_returns,
+                final_train_acc: last.train_acc,
+                final_eval_acc: last.eval_acc,
+                sim_time: last.sim_clock,
+                update,
+            });
+        }
+        Ok(results)
+    }
+
+    /// Frozen-policy inference run (§VI-D): greedy actions until the
+    /// convergence target is sustained or `max_cycles` elapse.
+    pub fn run_inference(
+        &mut self,
+        max_cycles: usize,
+        record: &mut RunRecord,
+    ) -> anyhow::Result<InferenceSummary> {
+        self.trainer
+            .reset_episode(self.cfg.train.seed, self.cfg.batch.initial)?;
+        self.eval_history.clear();
+        self.calibrated = false;
+        let mut detector = ConvergenceDetector::new(self.cfg.train.target_acc, 2);
+        let mut batch_trace = Vec::new();
+        let mut cycle = self.run_cycle(0.0)?;
+        let mut final_eval = cycle.eval_acc;
+
+        for step in 0..max_cycles {
+            let (bm, bs) = mean_std_usize(&self.trainer.batches);
+            batch_trace.push((step, bm, bs));
+            record.push(TracePoint {
+                iter: self.trainer.iter,
+                sim_time: cycle.sim_clock,
+                train_acc: cycle.train_acc,
+                eval_acc: cycle.eval_acc,
+                loss: cycle.loss,
+                batch_mean: bm,
+                batch_std: bs,
+                global_batch: self.trainer.batches.iter().sum(),
+            });
+            detector.observe(cycle.eval_acc, cycle.sim_clock);
+            final_eval = cycle.eval_acc;
+            if detector.converged() {
+                break;
+            }
+            let samples = self.agent.act(&cycle.states, false)?;
+            self.apply_actions(&samples.iter().map(|s| s.action).collect::<Vec<_>>());
+            cycle = self.run_cycle((step + 1) as f64 / max_cycles as f64)?;
+        }
+
+        record.final_eval_acc = final_eval;
+        record.convergence_time = detector.time();
+        Ok(InferenceSummary {
+            final_eval_acc: final_eval,
+            best_eval_acc: record.best_eval_acc(),
+            convergence_time: detector.time(),
+            total_sim_time: self.trainer.cluster.clock,
+            total_iters: self.trainer.iter,
+            batch_trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 4;
+        c.batch.initial = 64;
+        c.rl.k = 2;
+        c.steps_per_episode = 4;
+        c.train.max_steps = 100;
+        c.train.eval_every = 2;
+        c
+    }
+
+    fn store() -> Arc<ArtifactStore> {
+        Arc::new(ArtifactStore::open_default().unwrap())
+    }
+
+    #[test]
+    fn train_rl_produces_episode_results() {
+        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let results = c.train_rl(2).unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.worker_returns.len(), 4);
+            assert!(r.mean_return.is_finite());
+            assert!(r.update.minibatches > 0);
+            assert!(r.sim_time > 0.0);
+            assert!((0.0..=1.0).contains(&r.final_eval_acc));
+        }
+    }
+
+    #[test]
+    fn inference_records_trace_and_respects_constraints() {
+        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let mut record = RunRecord::new("test");
+        let summary = c.run_inference(5, &mut record).unwrap();
+        assert!(!record.points.is_empty());
+        assert!(summary.total_iters > 0);
+        assert!(!summary.batch_trace.is_empty());
+        for &b in &c.trainer.batches {
+            assert!((32..=1024).contains(&b), "batch {b} out of range");
+        }
+    }
+
+    #[test]
+    fn episodes_reset_cleanly() {
+        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let r1 = c.train_rl(1).unwrap();
+        let r2 = c.train_rl(1).unwrap();
+        // Fresh episode each time: sim time restarts rather than
+        // accumulating across calls.
+        assert!(r2[0].sim_time < r1[0].sim_time * 3.0);
+    }
+}

@@ -1,0 +1,487 @@
+//! Experiment harness: one regenerator per paper table/figure.
+//!
+//! Each function reproduces the *procedure* of one §VI experiment on the
+//! simulated testbed and returns a JSON summary (also written under
+//! `runs/`). The `examples/exp_*.rs` binaries are thin CLI wrappers.
+//!
+//! | fn                 | paper artifact |
+//! |--------------------|----------------|
+//! | [`fig2_baselines`] | Fig. 2 static-batch trajectories |
+//! | [`fig3_rl_training`] | Fig. 3 cumulative-reward curves (+ policy snapshots) |
+//! | [`fig4_fig5_inference`] | Fig. 4 accuracy trajectories, Fig. 5 batch adaptation |
+//! | [`table1_scalability`] | Table I 8/16/32-node scalability |
+//! | [`fig6_transfer`] | Fig. 6 policy transfer |
+//! | [`byteps_integration`] | §VI-G parameter-server + heterogeneous GPUs |
+//! | [`overhead_analysis`] | §VI-H decision-overhead study |
+
+use crate::baselines::{run_baseline, StaticPolicy};
+use crate::config::{presets, ExperimentConfig, Scale};
+use crate::coordinator::Coordinator;
+use crate::metrics::RunRecord;
+use crate::runtime::ArtifactStore;
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Where run records land (`$DYNAMIX_RUNS` or `<repo>/runs`).
+pub fn runs_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DYNAMIX_RUNS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"))
+}
+
+fn save(json: &Json, rel: &str) -> anyhow::Result<PathBuf> {
+    let path = runs_dir().join(rel);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, json.to_string())?;
+    Ok(path)
+}
+
+/// Policy snapshot location for a preset (shared across harnesses).
+pub fn policy_path(preset: &str) -> PathBuf {
+    runs_dir().join("policies").join(format!("{preset}.theta.f32"))
+}
+
+/// Decision-cycle budget for an inference/baseline run at a given scale.
+fn cycle_budget(cfg: &ExperimentConfig, scale: Scale) -> usize {
+    match scale {
+        Scale::Full => cfg.steps_per_episode * 2,
+        Scale::Quick => cfg.steps_per_episode.min(30),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — static batch baselines
+// ---------------------------------------------------------------------------
+
+/// Paper Fig. 2: convergence trajectories of BSP training under fixed
+/// batch sizes. Sweeps the paper's (model, optimizer, batch) grid, several
+/// seeds each; records every trajectory and the summary grid.
+pub fn fig2_baselines(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+    // (panel, preset, batch sizes) following Fig. 2a-2h.
+    let grid: Vec<(&str, &str, Vec<usize>)> = vec![
+        ("vgg11-sgd", "vgg11-sgd", vec![32, 64]),
+        ("vgg11-adam", "vgg11-adam", vec![32, 64]),
+        ("resnet34-sgd", "resnet34-sgd", vec![32, 64, 128, 256]),
+    ];
+    let seeds: &[u64] = match scale {
+        Scale::Full => &[0, 1, 2],
+        Scale::Quick => &[0],
+    };
+    let mut rows = Vec::new();
+    for (panel, preset, batches) in grid {
+        let base_cfg = presets::scaled(presets::by_name(preset)?, scale);
+        for &b in &batches {
+            for &seed in seeds {
+                let mut cfg = base_cfg.clone();
+                cfg.train.seed = seed;
+                cfg.batch.initial = b;
+                let mut record = RunRecord::new(&format!("fig2-{panel}-b{b}-s{seed}"));
+                let mut policy = StaticPolicy(b);
+                let cycles = cycle_budget(&cfg, scale);
+                let s = run_baseline(&cfg, store.clone(), &mut policy, cycles, &mut record)?;
+                record
+                    .save_json(&runs_dir().join("fig2").join(format!("{}.json", record.name)))?;
+                println!(
+                    "[fig2] {panel} b={b} seed={seed}: final={:.3} best={:.3} conv={:?} sim_t={:.0}s",
+                    s.final_eval_acc, s.best_eval_acc, s.convergence_time, s.total_sim_time
+                );
+                rows.push(crate::jobj! {
+                    "panel" => panel,
+                    "batch" => b,
+                    "seed" => seed as f64,
+                    "final_acc" => s.final_eval_acc,
+                    "best_acc" => s.best_eval_acc,
+                    "conv_time" => s.convergence_time.unwrap_or(-1.0),
+                    "sim_time" => s.total_sim_time,
+                });
+            }
+        }
+    }
+    let out = crate::jobj! { "experiment" => "fig2", "rows" => Json::Arr(rows) };
+    save(&out, "fig2/summary.json")?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — RL agent training
+// ---------------------------------------------------------------------------
+
+/// Paper Fig. 3: train the PPO agent; record per-episode mean/median
+/// cumulative rewards; snapshot the trained policy for Figs. 4-6.
+pub fn fig3_rl_training(
+    store: Arc<ArtifactStore>,
+    preset: &str,
+    scale: Scale,
+) -> anyhow::Result<Json> {
+    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let episodes = cfg.episodes;
+    let mut coord = Coordinator::new(cfg, store)?;
+    let results = coord.train_rl(episodes)?;
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            println!(
+                "[fig3:{preset}] ep {:2}: mean_R={:+.2} median_R={:+.2} acc={:.3} kl={:.4}",
+                r.episode, r.mean_return, r.median_return, r.final_eval_acc, r.update.approx_kl
+            );
+            crate::jobj! {
+                "episode" => r.episode,
+                "mean_return" => r.mean_return,
+                "median_return" => r.median_return,
+                "final_train_acc" => r.final_train_acc,
+                "final_eval_acc" => r.final_eval_acc,
+                "sim_time" => r.sim_time,
+                "entropy" => r.update.entropy as f64,
+                "approx_kl" => r.update.approx_kl as f64,
+            }
+        })
+        .collect();
+    let ppath = policy_path(preset);
+    std::fs::create_dir_all(ppath.parent().unwrap())?;
+    coord.agent.save_theta(&ppath)?;
+    let out = crate::jobj! {
+        "experiment" => "fig3",
+        "preset" => preset,
+        "episodes" => Json::Arr(rows),
+        "policy_file" => ppath.to_string_lossy().to_string(),
+    };
+    save(&out, &format!("fig3/{preset}.json"))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 + Fig. 5 — inference trajectories + batch adaptation dynamics
+// ---------------------------------------------------------------------------
+
+/// Paper Figs. 4/5: deploy the trained policy greedily, compare against
+/// the two reference static baselines, and record the batch-size
+/// adaptation trace (mean ± std across workers).
+pub fn fig4_fig5_inference(
+    store: Arc<ArtifactStore>,
+    preset: &str,
+    scale: Scale,
+) -> anyhow::Result<Json> {
+    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let cycles = cycle_budget(&cfg, scale);
+
+    // DYNAMIX run (uses the fig3 policy snapshot; trains briefly if absent).
+    let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+    let ppath = policy_path(preset);
+    if ppath.exists() {
+        coord.agent.load_theta_file(&ppath)?;
+    } else {
+        println!("[fig4:{preset}] no policy snapshot; training a short one");
+        coord.train_rl(cfg.episodes.min(4))?;
+    }
+    let mut dyn_record = RunRecord::new(&format!("fig4-{preset}-dynamix"));
+    let dyn_summary = coord.run_inference(cycles, &mut dyn_record)?;
+    dyn_record.save_json(&runs_dir().join("fig4").join(format!("{}.json", dyn_record.name)))?;
+
+    // Static baselines at the paper's reference batch sizes.
+    let mut baseline_rows = Vec::new();
+    for b in [32usize, 64] {
+        let mut bcfg = cfg.clone();
+        bcfg.batch.initial = b;
+        let mut record = RunRecord::new(&format!("fig4-{preset}-static{b}"));
+        let mut policy = StaticPolicy(b);
+        let s = run_baseline(&bcfg, store.clone(), &mut policy, cycles, &mut record)?;
+        record.save_json(&runs_dir().join("fig4").join(format!("{}.json", record.name)))?;
+        baseline_rows.push(crate::jobj! {
+            "batch" => b,
+            "final_acc" => s.final_eval_acc,
+            "best_acc" => s.best_eval_acc,
+            "conv_time" => s.convergence_time.unwrap_or(-1.0),
+            "sim_time" => s.total_sim_time,
+        });
+        println!(
+            "[fig4:{preset}] static-{b}: final={:.3} conv={:?}",
+            s.final_eval_acc, s.convergence_time
+        );
+    }
+
+    // Fig. 5 trace: per-cycle batch mean/std.
+    let trace: Vec<Json> = dyn_summary
+        .batch_trace
+        .iter()
+        .map(|(c, m, s)| crate::jobj! { "cycle" => *c, "mean" => *m, "std" => *s })
+        .collect();
+
+    println!(
+        "[fig4:{preset}] DYNAMIX: final={:.3} best={:.3} conv={:?} sim_t={:.0}s",
+        dyn_summary.final_eval_acc,
+        dyn_summary.best_eval_acc,
+        dyn_summary.convergence_time,
+        dyn_summary.total_sim_time
+    );
+
+    let out = crate::jobj! {
+        "experiment" => "fig4_fig5",
+        "preset" => preset,
+        "dynamix" => crate::jobj! {
+            "final_acc" => dyn_summary.final_eval_acc,
+            "best_acc" => dyn_summary.best_eval_acc,
+            "conv_time" => dyn_summary.convergence_time.unwrap_or(-1.0),
+            "sim_time" => dyn_summary.total_sim_time,
+        },
+        "static_baselines" => Json::Arr(baseline_rows),
+        "batch_trace" => Json::Arr(trace),
+    };
+    save(&out, &format!("fig4/{preset}-summary.json"))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table I — scalability
+// ---------------------------------------------------------------------------
+
+/// Paper Table I: VGG16/CIFAR-10/SGD at 8/16/32 nodes on the OSC profile.
+/// For each scale: best static config from a batch sweep vs DYNAMIX.
+pub fn table1_scalability(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+    let mut rows = Vec::new();
+    for preset in ["scal-8", "scal-16", "scal-32"] {
+        let cfg = presets::scaled(presets::by_name(preset)?, scale);
+        let cycles = cycle_budget(&cfg, scale);
+
+        // Static sweep (the paper reports the best per scale).
+        let sweep: &[usize] = &[64, 128, 256];
+        let mut best: Option<(usize, f64, f64)> = None; // (batch, acc, time)
+        for &b in sweep {
+            let mut bcfg = cfg.clone();
+            bcfg.batch.initial = b;
+            let mut record = RunRecord::new(&format!("table1-{preset}-static{b}"));
+            let mut pol = StaticPolicy(b);
+            let s = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut record)?;
+            let time = s.convergence_time.unwrap_or(s.total_sim_time);
+            println!(
+                "[table1:{preset}] static-{b}: acc={:.3} time={:.0}s",
+                s.final_eval_acc, time
+            );
+            let better = match best {
+                None => true,
+                Some((_, acc, t)) => {
+                    s.final_eval_acc > acc + 0.01
+                        || ((s.final_eval_acc - acc).abs() <= 0.01 && time < t)
+                }
+            };
+            if better {
+                best = Some((b, s.final_eval_acc, time));
+            }
+        }
+        let (best_b, static_acc, static_time) = best.unwrap();
+
+        // DYNAMIX: reuse the vgg16 transfer-source policy if present.
+        let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+        let ppath = policy_path("transfer-vgg16-src");
+        if ppath.exists() {
+            coord.agent.load_theta_file(&ppath)?;
+        } else {
+            coord.train_rl(cfg.episodes.min(4))?;
+        }
+        let mut record = RunRecord::new(&format!("table1-{preset}-dynamix"));
+        let s = coord.run_inference(cycles, &mut record)?;
+        record.save_json(&runs_dir().join("table1").join(format!("{}.json", record.name)))?;
+        let dyn_time = s.convergence_time.unwrap_or(s.total_sim_time);
+        println!(
+            "[table1:{preset}] DYNAMIX: acc={:.3} time={:.0}s (static best b={best_b} acc={static_acc:.3} time={static_time:.0}s)",
+            s.best_eval_acc, dyn_time
+        );
+        rows.push(crate::jobj! {
+            "nodes" => cfg.cluster.n_workers,
+            "static_batch" => best_b,
+            "static_acc" => static_acc,
+            "static_time" => static_time,
+            "dynamix_acc" => s.best_eval_acc,
+            "dynamix_time" => dyn_time,
+            "time_reduction" => 1.0 - dyn_time / static_time.max(1e-9),
+        });
+    }
+    let out = crate::jobj! { "experiment" => "table1", "rows" => Json::Arr(rows) };
+    save(&out, "table1/summary.json")?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — policy transfer
+// ---------------------------------------------------------------------------
+
+/// Paper Fig. 6: train on the source architecture, deploy unchanged on the
+/// deeper family member; compare with the target's tuned static baseline.
+pub fn fig6_transfer(
+    store: Arc<ArtifactStore>,
+    src_preset: &str,
+    dst_preset: &str,
+    scale: Scale,
+) -> anyhow::Result<Json> {
+    // 1. source policy (train if fig3 didn't already).
+    let src_cfg = presets::scaled(presets::by_name(src_preset)?, scale);
+    let ppath = policy_path(src_preset);
+    if !ppath.exists() {
+        println!("[fig6] training source policy {src_preset}");
+        let mut coord = Coordinator::new(src_cfg.clone(), store.clone())?;
+        coord.train_rl(src_cfg.episodes)?;
+        std::fs::create_dir_all(ppath.parent().unwrap())?;
+        coord.agent.save_theta(&ppath)?;
+    }
+
+    // 2. transferred inference on the destination model.
+    let dst_cfg = presets::scaled(presets::by_name(dst_preset)?, scale);
+    let cycles = cycle_budget(&dst_cfg, scale);
+    let mut coord = Coordinator::new(dst_cfg.clone(), store.clone())?;
+    coord.agent.load_theta_file(&ppath)?;
+    let mut record = RunRecord::new(&format!("fig6-{src_preset}-to-{dst_preset}"));
+    let s = coord.run_inference(cycles, &mut record)?;
+    record.save_json(&runs_dir().join("fig6").join(format!("{}.json", record.name)))?;
+    let dyn_time = s.convergence_time.unwrap_or(s.total_sim_time);
+
+    // 3. tuned static baseline on the destination.
+    let mut best: Option<(usize, f64, f64)> = None;
+    for &b in &[32usize, 64, 128] {
+        let mut bcfg = dst_cfg.clone();
+        bcfg.batch.initial = b;
+        let mut rec = RunRecord::new(&format!("fig6-{dst_preset}-static{b}"));
+        let mut pol = StaticPolicy(b);
+        let bs = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut rec)?;
+        let t = bs.convergence_time.unwrap_or(bs.total_sim_time);
+        let better = match best {
+            None => true,
+            Some((_, acc, bt)) => {
+                bs.final_eval_acc > acc + 0.01
+                    || ((bs.final_eval_acc - acc).abs() <= 0.01 && t < bt)
+            }
+        };
+        if better {
+            best = Some((b, bs.final_eval_acc, t));
+        }
+    }
+    let (bb, bacc, btime) = best.unwrap();
+    println!(
+        "[fig6] {src_preset}->{dst_preset}: transferred acc={:.3} time={:.0}s vs static-{bb} acc={bacc:.3} time={btime:.0}s",
+        s.best_eval_acc, dyn_time
+    );
+    let out = crate::jobj! {
+        "experiment" => "fig6",
+        "source" => src_preset,
+        "target" => dst_preset,
+        "transferred_acc" => s.best_eval_acc,
+        "transferred_time" => dyn_time,
+        "static_batch" => bb,
+        "static_acc" => bacc,
+        "static_time" => btime,
+    };
+    save(&out, &format!("fig6/{src_preset}-to-{dst_preset}.json"))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// §VI-G — BytePS / parameter-server integration
+// ---------------------------------------------------------------------------
+
+/// Paper §VI-G: heterogeneous 8-GPU cluster (4 RTX3090-like + 4 T4-like)
+/// under a parameter-server topology; static-64 vs DYNAMIX.
+pub fn byteps_integration(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+    let cfg = presets::scaled(presets::by_name("byteps-hetero")?, scale);
+    let cycles = cycle_budget(&cfg, scale);
+
+    let mut bcfg = cfg.clone();
+    bcfg.batch.initial = 64;
+    let mut record = RunRecord::new("byteps-static64");
+    let mut pol = StaticPolicy(64);
+    let base = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut record)?;
+    record.save_json(&runs_dir().join("byteps").join("static64.json"))?;
+    let base_time = base.convergence_time.unwrap_or(base.total_sim_time);
+
+    let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+    let ppath = policy_path("byteps-hetero");
+    if ppath.exists() {
+        coord.agent.load_theta_file(&ppath)?;
+    } else {
+        coord.train_rl(cfg.episodes.min(6))?;
+        std::fs::create_dir_all(ppath.parent().unwrap())?;
+        coord.agent.save_theta(&ppath)?;
+    }
+    let mut drec = RunRecord::new("byteps-dynamix");
+    let s = coord.run_inference(cycles, &mut drec)?;
+    drec.save_json(&runs_dir().join("byteps").join("dynamix.json"))?;
+    let dyn_time = s.convergence_time.unwrap_or(s.total_sim_time);
+
+    println!(
+        "[byteps] static-64 acc={:.3} t={:.0}s | DYNAMIX acc={:.3} t={:.0}s (Δacc={:+.1}pp, time {:+.0}%)",
+        base.final_eval_acc,
+        base_time,
+        s.best_eval_acc,
+        dyn_time,
+        (s.best_eval_acc - base.final_eval_acc) * 100.0,
+        (dyn_time / base_time.max(1e-9) - 1.0) * 100.0
+    );
+    let out = crate::jobj! {
+        "experiment" => "byteps",
+        "static_acc" => base.final_eval_acc,
+        "static_time" => base_time,
+        "dynamix_acc" => s.best_eval_acc,
+        "dynamix_time" => dyn_time,
+    };
+    save(&out, "byteps/summary.json")?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// §VI-H — overhead analysis
+// ---------------------------------------------------------------------------
+
+/// Paper §VI-H: decision-making overhead (state aggregation + policy
+/// inference + action distribution) as a fraction of iteration time.
+/// Both sides are REAL wall-clock on this host.
+pub fn overhead_analysis(store: Arc<ArtifactStore>, cycles: usize) -> anyhow::Result<Json> {
+    let mut cfg = presets::by_name("vgg11-sgd")?;
+    cfg.cluster.n_workers = 16;
+    cfg.batch.initial = 128;
+    let mut coord = Coordinator::new(cfg, store)?;
+    let mut record = RunRecord::new("overhead");
+    coord.run_inference(cycles, &mut record)?;
+
+    let exec_total = coord.trainer.runtime.exec_seconds_total;
+    let exec_count = coord.trainer.runtime.exec_count.max(1);
+    let infer: Vec<f64> = coord.agent.inference_seconds.clone();
+    let (infer_mean, _) = crate::metrics::mean_std(&infer);
+    let iter_mean = exec_total / exec_count as f64;
+    // One decision per k iterations: amortize.
+    let k = coord.cfg.rl.k as f64;
+    let overhead_frac = infer_mean / (iter_mean * k);
+    println!(
+        "[overhead] iter={:.2}ms decision={:.3}ms amortized_overhead={:.4}% (n={})",
+        iter_mean * 1e3,
+        infer_mean * 1e3,
+        overhead_frac * 100.0,
+        infer.len()
+    );
+    let out = crate::jobj! {
+        "experiment" => "overhead",
+        "iter_mean_s" => iter_mean,
+        "decision_mean_s" => infer_mean,
+        "overhead_fraction" => overhead_frac,
+        "decisions" => infer.len(),
+    };
+    save(&out, "overhead/summary.json")?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_budget_scales() {
+        let cfg = presets::by_name("vgg11-sgd").unwrap();
+        assert!(cycle_budget(&cfg, Scale::Quick) <= 30);
+        assert_eq!(cycle_budget(&cfg, Scale::Full), cfg.steps_per_episode * 2);
+    }
+
+    #[test]
+    fn policy_path_is_under_runs() {
+        assert!(policy_path("x").to_string_lossy().contains("policies"));
+    }
+}

@@ -1,0 +1,22 @@
+//! DYNAMIX: RL-based adaptive batch size optimization for distributed ML.
+//!
+//! Reproduction of Dai, He & Wang (cs.LG 2025). Three-layer stack:
+//! this Rust crate is the L3 coordinator (RL arbitrator + BSP trainer +
+//! cluster/network simulators); L2 is a JAX model zoo AOT-lowered to HLO
+//! text; L1 is a set of Pallas kernels inside that HLO. Python never runs
+//! at runtime — `runtime` loads `artifacts/*.hlo.txt` via PJRT.
+
+pub mod util;
+pub mod config;
+pub mod runtime;
+pub mod data;
+pub mod cluster;
+pub mod netsim;
+pub mod sysmetrics;
+pub mod comm;
+pub mod rl;
+pub mod trainer;
+pub mod coordinator;
+pub mod baselines;
+pub mod metrics;
+pub mod harness;

@@ -1,0 +1,213 @@
+//! `dynamix` CLI: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         — manifest + model zoo summary
+//!   train-rl   --preset P [...]  — Fig. 3 episodic PPO training
+//!   infer      --preset P [...]  — Fig. 4/5 frozen-policy run
+//!   baseline   --preset P --batch B — static-batch run
+//!   exp        --which fig2|fig3|fig4|table1|fig6|byteps|overhead|all
+//!   serve      --bind ADDR       — distributed leader (TCP protocol)
+//!   worker     --connect ADDR --id N — distributed worker
+//!
+//! Argument parsing is hand-rolled (offline build, no clap); see
+//! `Args::parse`.
+
+use dynamix::config::{presets, Scale};
+use dynamix::harness;
+use dynamix::runtime::ArtifactStore;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Minimal `--key value` argument parser.
+struct Args {
+    cmd: String,
+    kv: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = BTreeMap::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let val = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    i += 1;
+                    rest[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                kv.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { cmd, kv }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+const HELP: &str = "dynamix — RL-based adaptive batch size optimization (paper reproduction)
+
+USAGE: dynamix <command> [--key value ...]
+
+COMMANDS:
+  info                      show manifest / model zoo / artifact summary
+  train-rl  --preset P [--scale quick|full]
+  infer     --preset P [--scale quick|full]
+  baseline  --preset P --batch B [--scale quick|full] [--cycles N]
+  exp       --which fig2|fig3|fig4|table1|fig6|byteps|overhead|all
+            [--scale quick|full]
+  serve     --bind 127.0.0.1:7077 --preset P   (distributed leader)
+  worker    --connect 127.0.0.1:7077 --preset P --id N
+  help
+
+PRESETS: vgg11-sgd vgg11-adam resnet34-sgd scal-{8,16,32}
+         transfer-{vgg16-src,vgg19-dst,resnet34-src,resnet50-dst}
+         byteps-hetero ablate-*
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "info" => info(),
+        "train-rl" => {
+            let store = Arc::new(ArtifactStore::open_default()?);
+            let preset = args.get_or("preset", "vgg11-sgd");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            harness::fig3_rl_training(store, &preset, scale)?;
+            Ok(())
+        }
+        "infer" => {
+            let store = Arc::new(ArtifactStore::open_default()?);
+            let preset = args.get_or("preset", "vgg11-sgd");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            harness::fig4_fig5_inference(store, &preset, scale)?;
+            Ok(())
+        }
+        "baseline" => {
+            let store = Arc::new(ArtifactStore::open_default()?);
+            let preset = args.get_or("preset", "vgg11-sgd");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            let batch: usize = args.get_or("batch", "64").parse()?;
+            let mut cfg = presets::scaled(presets::by_name(&preset)?, scale);
+            cfg.batch.initial = batch;
+            let cycles: usize = args
+                .get_or("cycles", &format!("{}", cfg.steps_per_episode))
+                .parse()?;
+            let mut record =
+                dynamix::metrics::RunRecord::new(&format!("{preset}-static{batch}"));
+            let mut policy = dynamix::baselines::StaticPolicy(batch);
+            let s =
+                dynamix::baselines::run_baseline(&cfg, store, &mut policy, cycles, &mut record)?;
+            println!(
+                "{}: final_acc={:.3} conv_time={:?} sim_time={:.0}s iters={}",
+                s.policy, s.final_eval_acc, s.convergence_time, s.total_sim_time, s.total_iters
+            );
+            Ok(())
+        }
+        "exp" => {
+            let store = Arc::new(ArtifactStore::open_default()?);
+            let which = args.get_or("which", "all");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            run_experiments(store, &which, scale)
+        }
+        "serve" => {
+            let bind = args.get_or("bind", "127.0.0.1:7077");
+            let preset = args.get_or("preset", "vgg11-sgd");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            dynamix::comm::leader::serve(&bind, &preset, scale)
+        }
+        "worker" => {
+            let addr = args.get_or("connect", "127.0.0.1:7077");
+            let preset = args.get_or("preset", "vgg11-sgd");
+            let scale = Scale::parse(&args.get_or("scale", "quick"))?;
+            let id: u32 = args.get_or("id", "0").parse()?;
+            dynamix::comm::leader::worker(&addr, &preset, scale, id)
+        }
+        other => anyhow::bail!("unknown command {other:?}; try `dynamix help`"),
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    let m = &store.manifest;
+    println!("DYNAMIX artifact store: {:?}", m.dir);
+    println!(
+        "  state_dim={} n_actions={} max_workers={} ppo_minibatch={}",
+        m.state_dim, m.n_actions, m.max_workers, m.ppo_minibatch
+    );
+    println!("  buckets: {:?}", m.buckets);
+    println!("  models:");
+    for (name, info) in &m.models {
+        println!(
+            "    {name:16} family={:8} depth={:2} params={:7} dataset={}",
+            info.family, info.depth, info.param_count, info.dataset
+        );
+    }
+    println!("  artifacts: {}", m.artifacts.len());
+    let kinds: BTreeMap<&str, usize> =
+        m.artifacts.values().fold(Default::default(), |mut acc, a| {
+            *acc.entry(a.kind.as_str()).or_default() += 1;
+            acc
+        });
+    for (k, n) in kinds {
+        println!("    {k}: {n}");
+    }
+    Ok(())
+}
+
+fn run_experiments(store: Arc<ArtifactStore>, which: &str, scale: Scale) -> anyhow::Result<()> {
+    let all = which == "all";
+    if all || which == "fig2" {
+        harness::fig2_baselines(store.clone(), scale)?;
+    }
+    if all || which == "fig3" {
+        for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
+            harness::fig3_rl_training(store.clone(), preset, scale)?;
+        }
+    }
+    if all || which == "fig4" || which == "fig5" {
+        for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
+            harness::fig4_fig5_inference(store.clone(), preset, scale)?;
+        }
+    }
+    if all || which == "table1" {
+        harness::table1_scalability(store.clone(), scale)?;
+    }
+    if all || which == "fig6" {
+        harness::fig6_transfer(store.clone(), "transfer-vgg16-src", "transfer-vgg19-dst", scale)?;
+        harness::fig6_transfer(
+            store.clone(),
+            "transfer-resnet34-src",
+            "transfer-resnet50-dst",
+            scale,
+        )?;
+    }
+    if all || which == "byteps" {
+        harness::byteps_integration(store.clone(), scale)?;
+    }
+    if all || which == "overhead" {
+        harness::overhead_analysis(store, 10)?;
+    }
+    Ok(())
+}

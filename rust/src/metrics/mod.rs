@@ -1,0 +1,305 @@
+//! Run recording + convergence measurement.
+//!
+//! Every experiment harness produces a [`RunRecord`]: the accuracy/loss
+//! trajectory against *simulated* cluster time, batch-size traces, and the
+//! convergence summary the paper's tables report (final accuracy,
+//! time-to-convergence). Records serialize to JSON (plots) and CSV
+//! (eyeballing) under `runs/`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One sampled point of a training run.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub sim_time: f64,
+    pub train_acc: f64,
+    pub eval_acc: f64,
+    pub loss: f64,
+    /// Mean per-worker batch size at this point.
+    pub batch_mean: f64,
+    /// Std of per-worker batch sizes.
+    pub batch_std: f64,
+    pub global_batch: usize,
+}
+
+/// A full run: config echo + trajectory + summary.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+    pub final_eval_acc: f64,
+    /// Simulated seconds to reach the convergence target (None = never).
+    pub convergence_time: Option<f64>,
+    pub total_sim_time: f64,
+    pub total_iters: usize,
+    /// Free-form extras (episode rewards, overhead stats, ...).
+    pub extra: BTreeMap<String, Json>,
+}
+
+impl RunRecord {
+    pub fn new(name: &str) -> Self {
+        RunRecord {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.total_sim_time = p.sim_time;
+        self.total_iters = p.iter;
+        self.points.push(p);
+    }
+
+    /// Best eval accuracy seen (the paper reports final/converged acc).
+    pub fn best_eval_acc(&self) -> f64 {
+        self.points.iter().map(|p| p.eval_acc).fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                crate::jobj! {
+                    "iter" => p.iter,
+                    "sim_time" => p.sim_time,
+                    "train_acc" => p.train_acc,
+                    "eval_acc" => p.eval_acc,
+                    "loss" => p.loss,
+                    "batch_mean" => p.batch_mean,
+                    "batch_std" => p.batch_std,
+                    "global_batch" => p.global_batch,
+                }
+            })
+            .collect();
+        let mut obj = crate::jobj! {
+            "name" => self.name.clone(),
+            "final_eval_acc" => self.final_eval_acc,
+            "total_sim_time" => self.total_sim_time,
+            "total_iters" => self.total_iters,
+            "points" => Json::Arr(points),
+        };
+        if let Json::Obj(m) = &mut obj {
+            m.insert(
+                "convergence_time".into(),
+                match self.convergence_time {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            );
+            for (k, v) in &self.extra {
+                m.insert(k.clone(), v.clone());
+            }
+        }
+        obj
+    }
+
+    pub fn save_json(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::from(
+            "iter,sim_time,train_acc,eval_acc,loss,batch_mean,batch_std,global_batch\n",
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.3},{:.4},{:.4},{:.4},{:.1},{:.1},{}\n",
+                p.iter,
+                p.sim_time,
+                p.train_acc,
+                p.eval_acc,
+                p.loss,
+                p.batch_mean,
+                p.batch_std,
+                p.global_batch
+            ));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Convergence detector: target accuracy sustained over `patience`
+/// consecutive eval points (filters single-eval noise spikes).
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    pub target_acc: f64,
+    pub patience: usize,
+    hits: usize,
+    streak_start: Option<f64>,
+    latched: bool,
+}
+
+impl ConvergenceDetector {
+    pub fn new(target_acc: f64, patience: usize) -> Self {
+        ConvergenceDetector {
+            target_acc,
+            patience: patience.max(1),
+            hits: 0,
+            streak_start: None,
+            latched: false,
+        }
+    }
+
+    /// Feed one eval point; returns Some(time) once converged (time =
+    /// first eval of the sustained streak). Latches after convergence.
+    pub fn observe(&mut self, eval_acc: f64, sim_time: f64) -> Option<f64> {
+        if self.latched {
+            return self.streak_start;
+        }
+        if eval_acc >= self.target_acc {
+            if self.hits == 0 {
+                self.streak_start = Some(sim_time);
+            }
+            self.hits += 1;
+            if self.hits >= self.patience {
+                self.latched = true;
+                return self.streak_start;
+            }
+            None
+        } else {
+            self.hits = 0;
+            self.streak_start = None;
+            None
+        }
+    }
+
+    pub fn converged(&self) -> bool {
+        self.latched
+    }
+
+    pub fn time(&self) -> Option<f64> {
+        if self.latched {
+            self.streak_start
+        } else {
+            None
+        }
+    }
+}
+
+/// Mean/std of a slice (population std).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Mean/std over usize slices (batch-size traces).
+pub fn mean_std_usize(xs: &[usize]) -> (f64, f64) {
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    mean_std(&v)
+}
+
+/// Median of a slice (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(iter: usize, t: f64, acc: f64) -> TracePoint {
+        TracePoint {
+            iter,
+            sim_time: t,
+            train_acc: acc,
+            eval_acc: acc,
+            loss: 1.0 - acc,
+            batch_mean: 128.0,
+            batch_std: 10.0,
+            global_batch: 512,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_to_json() {
+        let mut r = RunRecord::new("test");
+        r.push(point(1, 0.5, 0.3));
+        r.push(point(2, 1.0, 0.5));
+        r.final_eval_acc = 0.5;
+        r.convergence_time = Some(1.0);
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("test"));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("convergence_time").unwrap().as_f64(), Some(1.0));
+        assert!(Json::parse(&j.to_string()).is_ok());
+        assert_eq!(r.best_eval_acc(), 0.5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = RunRecord::new("csv");
+        r.push(point(1, 0.5, 0.3));
+        let path = std::env::temp_dir().join("dynamix_metrics_test.csv");
+        r.save_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iter,sim_time"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn convergence_requires_sustained_target() {
+        let mut d = ConvergenceDetector::new(0.8, 2);
+        assert!(d.observe(0.85, 10.0).is_none(), "one hit not enough");
+        assert_eq!(d.observe(0.82, 20.0), Some(10.0), "streak start time");
+        assert!(d.converged());
+        assert_eq!(d.observe(0.1, 30.0), Some(10.0), "latched");
+    }
+
+    #[test]
+    fn convergence_resets_on_dip() {
+        let mut d = ConvergenceDetector::new(0.8, 2);
+        d.observe(0.85, 10.0);
+        d.observe(0.5, 20.0);
+        assert!(!d.converged());
+        d.observe(0.9, 30.0);
+        assert_eq!(d.observe(0.9, 40.0), Some(30.0));
+    }
+
+    #[test]
+    fn never_converges_below_target() {
+        let mut d = ConvergenceDetector::new(0.99, 1);
+        for i in 0..10 {
+            assert!(d.observe(0.5, i as f64).is_none());
+        }
+        assert_eq!(d.time(), None);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert_eq!((m, s), (3.0, 1.0));
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        let (m, _) = mean_std_usize(&[32, 64, 96]);
+        assert_eq!(m, 64.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[]), 0.0);
+    }
+}

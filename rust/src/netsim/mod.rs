@@ -1,0 +1,261 @@
+//! Gradient-synchronization network simulator.
+//!
+//! Models the two topologies the paper evaluates (§VI): decentralized
+//! **Ring All-Reduce** (primary + OSC testbeds) and a BytePS-style
+//! **parameter server** (§VI-G), with an alpha-beta collective cost model
+//! plus a congestion/retransmission process. This produces the
+//! network-level RL state features (throughput, retransmissions) whose
+//! coupling to batch size — larger batches → fewer syncs → less exposure
+//! to congestion — is the signal the paper's state design exploits (§IV-B).
+//!
+//! Cost model (alpha = latency term, beta = byte term):
+//!   ring:  t = 2(N-1)·alpha + 2·(N-1)/N · bytes / min_bw
+//!   ps:    t = 2·alpha + 2 · bytes · (N/servers) / bw   (incast at servers)
+//! Congestion multiplies the effective bandwidth by (1 - c); cross-traffic
+//! follows an OU process shared across links (a congested fabric slows
+//! everyone, which is what the retransmission counters observe).
+
+use crate::cluster::WorkerProfile;
+use crate::config::Topology;
+use crate::util::rng::Rng;
+
+/// Result of simulating one synchronization round.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncOutcome {
+    /// Wall time of the collective in seconds.
+    pub time_s: f64,
+    /// Total TCP retransmissions observed across the round.
+    pub retransmissions: u64,
+    /// Achieved goodput in Gbit/s (bytes moved / time).
+    pub throughput_gbps: f64,
+    /// Congestion level in [0,1) during the round.
+    pub congestion: f64,
+}
+
+/// Network fabric simulator with a shared congestion process.
+pub struct NetworkSim {
+    rng: Rng,
+    /// OU congestion level in [0, 0.9].
+    congestion: f64,
+    pub congestion_mean: f64,
+    pub congestion_rate: f64,
+    pub congestion_vol: f64,
+    /// Retransmissions per (GiB moved × unit congestion).
+    pub retx_per_gib: f64,
+}
+
+impl NetworkSim {
+    pub fn new(seed: u64) -> Self {
+        NetworkSim {
+            rng: Rng::new(seed ^ 0x4E75),
+            congestion: 0.05,
+            congestion_mean: 0.05,
+            congestion_rate: 0.3,
+            congestion_vol: 0.04,
+            retx_per_gib: 900.0,
+        }
+    }
+
+    /// A noisier fabric (FABRIC testbed / §VI-G heterogeneous cluster).
+    pub fn noisy(seed: u64) -> Self {
+        NetworkSim {
+            congestion: 0.15,
+            congestion_mean: 0.15,
+            congestion_vol: 0.08,
+            retx_per_gib: 2_500.0,
+            ..Self::new(seed)
+        }
+    }
+
+    /// Advance the shared congestion process by `dt` seconds.
+    pub fn advance(&mut self, dt: f64) {
+        let drift = self.congestion_rate * (self.congestion_mean - self.congestion) * dt;
+        let diffusion = self.congestion_vol * dt.sqrt() * self.rng.normal();
+        self.congestion = (self.congestion + drift + diffusion).clamp(0.0, 0.9);
+    }
+
+    pub fn congestion(&self) -> f64 {
+        self.congestion
+    }
+
+    /// Simulate one gradient synchronization of `grad_bytes` per worker.
+    pub fn sync(
+        &mut self,
+        topology: Topology,
+        profiles: &[WorkerProfile],
+        grad_bytes: usize,
+    ) -> SyncOutcome {
+        let n = profiles.len();
+        if n <= 1 {
+            return SyncOutcome {
+                time_s: 0.0,
+                retransmissions: 0,
+                throughput_gbps: 0.0,
+                congestion: self.congestion,
+            };
+        }
+        // The slowest NIC and the largest latency bound the collective.
+        let min_bw_gbps = profiles
+            .iter()
+            .map(|p| p.bandwidth_gbps)
+            .fold(f64::INFINITY, f64::min);
+        let max_lat_s = profiles
+            .iter()
+            .map(|p| p.latency_ms / 1e3)
+            .fold(0.0f64, f64::max);
+        let eff_bw_bytes = min_bw_gbps * (1.0 - self.congestion) * 1e9 / 8.0;
+
+        let (alpha_terms, bytes_on_wire) = match topology {
+            Topology::RingAllReduce => {
+                // reduce-scatter + all-gather: 2(N-1) hops of bytes/N.
+                let hops = 2.0 * (n as f64 - 1.0);
+                (hops * max_lat_s, hops / n as f64 * grad_bytes as f64)
+            }
+            Topology::ParameterServer { servers } => {
+                let s = servers.max(1) as f64;
+                // push + pull; server NICs shared by N/s workers (incast).
+                (2.0 * max_lat_s, 2.0 * grad_bytes as f64 * (n as f64 / s))
+            }
+        };
+        let transfer_s = bytes_on_wire / eff_bw_bytes;
+        let time_s = alpha_terms + transfer_s;
+
+        // Retransmissions scale with bytes moved and congestion.
+        let gib = bytes_on_wire * n as f64 / (1024.0 * 1024.0 * 1024.0);
+        let lambda = self.retx_per_gib * gib * self.congestion;
+        let retransmissions = self.rng.poisson(lambda);
+        // Retransmitted segments add tail latency (~1.5 KB each + RTO slop).
+        let retx_penalty = retransmissions as f64 * 1_500.0 / eff_bw_bytes * 4.0;
+        let time_s = time_s + retx_penalty;
+
+        SyncOutcome {
+            time_s,
+            retransmissions,
+            throughput_gbps: if time_s > 0.0 {
+                bytes_on_wire * 8.0 / 1e9 / time_s
+            } else {
+                0.0
+            },
+            congestion: self.congestion,
+        }
+    }
+
+    /// Reset the congestion process (new episode).
+    pub fn reset(&mut self, seed: u64) {
+        *self = if self.congestion_mean > 0.1 {
+            Self::noisy(seed)
+        } else {
+            Self::new(seed)
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::profiles;
+    use crate::config::ClusterPreset;
+
+    fn uniform(n: usize) -> Vec<WorkerProfile> {
+        profiles(ClusterPreset::UniformA100, n, 0)
+    }
+
+    #[test]
+    fn single_worker_needs_no_sync() {
+        let mut net = NetworkSim::new(0);
+        let o = net.sync(Topology::RingAllReduce, &uniform(1), 1 << 20);
+        assert_eq!(o.time_s, 0.0);
+        assert_eq!(o.retransmissions, 0);
+    }
+
+    #[test]
+    fn ring_time_grows_sublinearly_with_workers() {
+        // Ring moves 2(N-1)/N bytes — asymptotically constant per worker.
+        let mut net = NetworkSim::new(0);
+        net.congestion_vol = 0.0; // deterministic
+        let t8 = net.sync(Topology::RingAllReduce, &uniform(8), 100 << 20).time_s;
+        let t32 = net.sync(Topology::RingAllReduce, &uniform(32), 100 << 20).time_s;
+        assert!(t32 > t8, "latency terms grow");
+        assert!(t32 < t8 * 2.0, "transfer term must not grow linearly");
+    }
+
+    #[test]
+    fn ps_incast_slower_than_ring_at_scale() {
+        let mut net = NetworkSim::new(0);
+        net.congestion_vol = 0.0;
+        let profs = uniform(16);
+        let ring = net.sync(Topology::RingAllReduce, &profs, 100 << 20).time_s;
+        let ps = net
+            .sync(Topology::ParameterServer { servers: 2 }, &profs, 100 << 20)
+            .time_s;
+        assert!(ps > ring, "ps {ps} vs ring {ring}");
+    }
+
+    #[test]
+    fn more_servers_relieve_incast() {
+        let mut net = NetworkSim::new(0);
+        net.congestion_vol = 0.0;
+        let profs = uniform(16);
+        let ps1 = net.sync(Topology::ParameterServer { servers: 1 }, &profs, 50 << 20).time_s;
+        let ps4 = net.sync(Topology::ParameterServer { servers: 4 }, &profs, 50 << 20).time_s;
+        assert!(ps4 < ps1);
+    }
+
+    #[test]
+    fn congestion_slows_and_retransmits() {
+        let mut a = NetworkSim::new(1);
+        a.congestion = 0.0;
+        a.congestion_vol = 0.0;
+        let mut b = NetworkSim::new(1);
+        b.congestion = 0.6;
+        b.congestion_vol = 0.0;
+        let profs = uniform(8);
+        let oa = a.sync(Topology::RingAllReduce, &profs, 200 << 20);
+        let ob = b.sync(Topology::RingAllReduce, &profs, 200 << 20);
+        assert!(ob.time_s > oa.time_s * 1.5);
+        assert!(ob.retransmissions > oa.retransmissions);
+        assert!(ob.throughput_gbps < oa.throughput_gbps);
+    }
+
+    #[test]
+    fn congestion_process_bounded_and_mean_reverting() {
+        let mut net = NetworkSim::new(2);
+        for _ in 0..200 {
+            net.advance(0.5);
+            assert!((0.0..=0.9).contains(&net.congestion()));
+        }
+        // Push far above mean; it must decay back.
+        net.congestion = 0.85;
+        net.congestion_vol = 0.0;
+        for _ in 0..100 {
+            net.advance(1.0);
+        }
+        assert!(net.congestion() < 0.3);
+    }
+
+    #[test]
+    fn hetero_fabric_bound_by_slowest_nic() {
+        let mut net = NetworkSim::new(3);
+        net.congestion_vol = 0.0;
+        let fabric = profiles(ClusterPreset::FabricHetero, 8, 0);
+        let fast = uniform(8);
+        let tf = net.sync(Topology::RingAllReduce, &fabric, 100 << 20).time_s;
+        let tu = net.sync(Topology::RingAllReduce, &fast, 100 << 20).time_s;
+        assert!(tf > tu, "10G fabric must sync slower than 25G uniform");
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let run = |seed| {
+            let mut net = NetworkSim::new(seed);
+            let profs = uniform(8);
+            (0..10)
+                .map(|_| {
+                    net.advance(0.1);
+                    net.sync(Topology::RingAllReduce, &profs, 64 << 20).retransmissions
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

@@ -1,0 +1,91 @@
+//! Discrete action space + batch-size clamping (paper §IV-C).
+//!
+//! A = {-100, -25, 0, +25, +100}: ±100 for rapid early-phase adaptation,
+//! ±25 for fine-grained mid-training adjustment. The updated batch size is
+//! clamped to [min, max] ([32, 1024] in the paper) and additionally to the
+//! worker's memory ceiling (the §IV-C OOM rule).
+
+/// The paper's action deltas, in artifact logit order.
+pub const DELTAS: [i32; 5] = [-100, -25, 0, 25, 100];
+
+pub const N_ACTIONS: usize = DELTAS.len();
+
+/// Batch-size manager for one run: applies deltas under constraints.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchRule {
+    pub min: usize,
+    pub max: usize,
+}
+
+impl Default for BatchRule {
+    fn default() -> Self {
+        BatchRule { min: 32, max: 1024 }
+    }
+}
+
+impl BatchRule {
+    /// Apply action index `a` to `batch`, honoring [min, max] and an
+    /// optional per-worker memory cap.
+    pub fn apply(&self, batch: usize, a: usize, mem_cap: Option<usize>) -> usize {
+        let delta = DELTAS[a];
+        let raw = batch as i64 + delta as i64;
+        let hi = match mem_cap {
+            Some(c) => self.max.min(c.max(self.min)),
+            None => self.max,
+        };
+        raw.clamp(self.min as i64, hi as i64) as usize
+    }
+
+    /// The delta actually realized after clamping (for logging/comm).
+    pub fn realized_delta(&self, batch: usize, a: usize, mem_cap: Option<usize>) -> i32 {
+        self.apply(batch, a, mem_cap) as i32 - batch as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_order_matches_artifact_logits() {
+        // The policy artifact's 5 logits are in this exact order.
+        assert_eq!(DELTAS, [-100, -25, 0, 25, 100]);
+    }
+
+    #[test]
+    fn apply_respects_bounds() {
+        let r = BatchRule::default();
+        assert_eq!(r.apply(32, 0, None), 32, "floor");
+        assert_eq!(r.apply(1024, 4, None), 1024, "cap");
+        assert_eq!(r.apply(128, 1, None), 103);
+        assert_eq!(r.apply(128, 3, None), 153);
+        assert_eq!(r.apply(128, 2, None), 128, "no-op action");
+        assert_eq!(r.apply(100, 0, None), 32, "clamps to floor not below");
+    }
+
+    #[test]
+    fn memory_cap_binds() {
+        let r = BatchRule::default();
+        assert_eq!(r.apply(500, 4, Some(512)), 512);
+        assert_eq!(r.apply(500, 4, Some(16)), 32, "cap never below min");
+    }
+
+    #[test]
+    fn realized_delta_reflects_clamp() {
+        let r = BatchRule::default();
+        assert_eq!(r.realized_delta(128, 3, None), 25);
+        assert_eq!(r.realized_delta(1000, 4, None), 24, "clamped at 1024");
+        assert_eq!(r.realized_delta(32, 0, None), 0);
+    }
+
+    #[test]
+    fn every_batch_in_range_stays_in_range() {
+        let r = BatchRule::default();
+        for b in (32..=1024).step_by(7) {
+            for a in 0..N_ACTIONS {
+                let nb = r.apply(b, a, None);
+                assert!((r.min..=r.max).contains(&nb), "b={b} a={a} -> {nb}");
+            }
+        }
+    }
+}

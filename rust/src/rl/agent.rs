@@ -1,0 +1,331 @@
+//! The PPO arbitrator driver (paper §IV-A, Algorithm 1).
+//!
+//! Holds the policy parameters as literals and drives the two AOT policy
+//! artifacts: `policy_forward` (one call scores all <=32 workers per
+//! decision cycle) and `policy_update` / `policy_update_simple`
+//! (minibatched PPO epochs over the episode buffer). Everything here is
+//! Rust + PJRT — Python is compile-time only.
+
+use crate::config::{PpoVariant, RlConfig};
+use crate::rl::trajectory::UpdateBatch;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar1, ArtifactStore};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use xla::Literal;
+
+/// One worker's sampled decision.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionSample {
+    pub action: usize,
+    pub logp: f32,
+    pub value: f32,
+}
+
+/// Aggregate statistics of one policy update.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub loss: f32,
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub minibatches: usize,
+}
+
+/// PPO agent over the AOT policy artifacts.
+pub struct PpoAgent {
+    store: Arc<ArtifactStore>,
+    theta: Literal,
+    m: Literal,
+    v: Literal,
+    step: Literal,
+    pub cfg: RlConfig,
+    rng: Rng,
+    max_workers: usize,
+    state_dim: usize,
+    n_actions: usize,
+    minibatch: usize,
+    /// Decision-cycle latency log (seconds) for the §VI-H overhead study.
+    pub inference_seconds: Vec<f64>,
+}
+
+impl PpoAgent {
+    pub fn new(store: Arc<ArtifactStore>, cfg: RlConfig, seed: u64) -> anyhow::Result<Self> {
+        let man = &store.manifest;
+        let pc = man.policy_param_count;
+        let theta = lit_f32(&man.load_init_policy(seed)?, &[pc as i64])?;
+        let zeros = vec![0.0f32; pc];
+        Ok(PpoAgent {
+            theta,
+            m: lit_f32(&zeros, &[pc as i64])?,
+            v: lit_f32(&zeros, &[pc as i64])?,
+            step: lit_scalar1(0.0),
+            cfg,
+            rng: Rng::new(seed ^ 0xA6E7),
+            max_workers: man.max_workers,
+            state_dim: man.state_dim,
+            n_actions: man.n_actions,
+            minibatch: man.ppo_minibatch,
+            store,
+            inference_seconds: Vec::new(),
+        })
+    }
+
+    /// Restore policy parameters from a raw f32 snapshot (policy transfer,
+    /// §VI-F) and reset optimizer state.
+    pub fn load_theta(&mut self, theta: &[f32]) -> anyhow::Result<()> {
+        let pc = self.store.manifest.policy_param_count;
+        anyhow::ensure!(theta.len() == pc, "theta len {} != {pc}", theta.len());
+        self.theta = lit_f32(theta, &[pc as i64])?;
+        let zeros = vec![0.0f32; pc];
+        self.m = lit_f32(&zeros, &[pc as i64])?;
+        self.v = lit_f32(&zeros, &[pc as i64])?;
+        self.step = lit_scalar1(0.0);
+        Ok(())
+    }
+
+    /// Snapshot current policy parameters.
+    pub fn theta_snapshot(&self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.theta.to_vec::<f32>()?)
+    }
+
+    pub fn save_theta(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let theta = self.theta_snapshot()?;
+        let bytes: Vec<u8> = theta.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_theta_file(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} not f32-aligned");
+        let theta: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        self.load_theta(&theta)
+    }
+
+    /// Score every worker's state in one `policy_forward` call and sample
+    /// (explore=true) or take the argmax (greedy inference, §VI-D).
+    pub fn act(
+        &mut self,
+        states: &[crate::rl::state::StateVector],
+        explore: bool,
+    ) -> anyhow::Result<Vec<ActionSample>> {
+        anyhow::ensure!(
+            states.len() <= self.max_workers,
+            "{} workers > artifact max {}",
+            states.len(),
+            self.max_workers
+        );
+        let t0 = std::time::Instant::now();
+        let mut flat = vec![0.0f32; self.max_workers * self.state_dim];
+        for (w, s) in states.iter().enumerate() {
+            anyhow::ensure!(s.0.len() == self.state_dim, "bad state dim");
+            flat[w * self.state_dim..(w + 1) * self.state_dim].copy_from_slice(&s.0);
+        }
+        let states_lit = lit_f32(&flat, &[self.max_workers as i64, self.state_dim as i64])?;
+        let out = self.store.run("policy_forward", &[&self.theta, &states_lit])?;
+        let logp = out.vec_f32(0)?;
+        let values = out.vec_f32(1)?;
+
+        let mut samples = Vec::with_capacity(states.len());
+        for w in 0..states.len() {
+            let row = &logp[w * self.n_actions..(w + 1) * self.n_actions];
+            let action = if explore {
+                let probs: Vec<f64> = row.iter().map(|&l| (l as f64).exp()).collect();
+                self.rng.categorical(&probs)
+            } else {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
+            samples.push(ActionSample {
+                action,
+                logp: row[action],
+                value: values[w],
+            });
+        }
+        self.inference_seconds.push(t0.elapsed().as_secs_f64());
+        Ok(samples)
+    }
+
+    /// Run `cfg.update_epochs` PPO epochs over the batch in shuffled
+    /// minibatches of the artifact's compiled size (padded + masked).
+    pub fn update(&mut self, batch: &UpdateBatch) -> anyhow::Result<UpdateStats> {
+        if batch.is_empty() {
+            return Ok(UpdateStats::default());
+        }
+        let artifact = match self.cfg.variant {
+            PpoVariant::Clipped => "policy_update",
+            PpoVariant::Simplified => "policy_update_simple",
+        };
+        let mb = self.minibatch;
+        let lr = lit_scalar1(self.cfg.lr);
+        let clip = lit_scalar1(self.cfg.clip_eps);
+        let ent = lit_scalar1(self.cfg.ent_coef);
+        let vf = lit_scalar1(self.cfg.vf_coef);
+
+        let mut stats = UpdateStats::default();
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        for _ in 0..self.cfg.update_epochs {
+            self.rng.shuffle(&mut order);
+            for chunk in order.chunks(mb) {
+                let mut states = vec![0.0f32; mb * self.state_dim];
+                let mut actions = vec![0i32; mb];
+                let mut old_logp = vec![0.0f32; mb];
+                let mut adv = vec![0.0f32; mb];
+                let mut ret = vec![0.0f32; mb];
+                let mut mask = vec![0.0f32; mb];
+                for (row, &i) in chunk.iter().enumerate() {
+                    states[row * self.state_dim..(row + 1) * self.state_dim]
+                        .copy_from_slice(&batch.states[i].0);
+                    actions[row] = batch.actions[i] as i32;
+                    old_logp[row] = batch.old_logp[i];
+                    adv[row] = batch.advantages[i];
+                    ret[row] = batch.returns[i];
+                    mask[row] = 1.0;
+                }
+                let states_l = lit_f32(&states, &[mb as i64, self.state_dim as i64])?;
+                let actions_l = lit_i32(&actions, &[mb as i64])?;
+                let old_l = lit_f32(&old_logp, &[mb as i64])?;
+                let adv_l = lit_f32(&adv, &[mb as i64])?;
+                let ret_l = lit_f32(&ret, &[mb as i64])?;
+                let mask_l = lit_f32(&mask, &[mb as i64])?;
+                let mut out = self.store.run(
+                    artifact,
+                    &[
+                        &self.theta, &self.m, &self.v, &self.step, &states_l, &actions_l,
+                        &old_l, &adv_l, &ret_l, &mask_l, &lr, &clip, &ent, &vf,
+                    ],
+                )?;
+                stats.loss = out.scalar_f32(4)?;
+                stats.pg_loss = out.scalar_f32(5)?;
+                stats.v_loss = out.scalar_f32(6)?;
+                stats.entropy = out.scalar_f32(7)?;
+                stats.approx_kl = out.scalar_f32(8)?;
+                stats.minibatches += 1;
+                self.theta = out.take(0);
+                self.m = out.take(1);
+                self.v = out.take(2);
+                self.step = out.take(3);
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::state::{StateVector, STATE_DIM};
+    use crate::rl::trajectory::{Trajectory, Transition};
+
+    fn agent(variant: PpoVariant) -> PpoAgent {
+        let store = Arc::new(ArtifactStore::open_default().unwrap());
+        let mut cfg = RlConfig::default();
+        cfg.variant = variant;
+        cfg.update_epochs = 2;
+        // Test-sized learning rate: few minibatches, strong signal.
+        cfg.lr = 5e-3;
+        PpoAgent::new(store, cfg, 0).unwrap()
+    }
+
+    fn state(fill: f32) -> StateVector {
+        StateVector(vec![fill; STATE_DIM])
+    }
+
+    #[test]
+    fn act_returns_valid_samples_and_logs_latency() {
+        let mut a = agent(PpoVariant::Clipped);
+        let states: Vec<_> = (0..8).map(|i| state(i as f32 * 0.1)).collect();
+        let out = a.act(&states, true).unwrap();
+        assert_eq!(out.len(), 8);
+        for s in &out {
+            assert!(s.action < 5);
+            assert!(s.logp <= 0.0);
+            assert!(s.value.is_finite());
+        }
+        assert_eq!(a.inference_seconds.len(), 1);
+        // Greedy is deterministic.
+        let g1 = a.act(&states, false).unwrap();
+        let g2 = a.act(&states, false).unwrap();
+        assert_eq!(
+            g1.iter().map(|s| s.action).collect::<Vec<_>>(),
+            g2.iter().map(|s| s.action).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn update_moves_policy_toward_rewarded_action() {
+        let mut a = agent(PpoVariant::Clipped);
+        let probe = vec![state(0.2)];
+        // Build a trajectory that always rewards action 4 (+100).
+        for _ in 0..12 {
+            let mut tr = Trajectory::default();
+            for _ in 0..32 {
+                let s = state(0.2);
+                let sample = a.act(&[s.clone()], true).unwrap()[0];
+                let reward = if sample.action == 4 { 2.0 } else { -1.0 };
+                tr.push(Transition {
+                    state: s,
+                    action: sample.action,
+                    logp: sample.logp,
+                    value: sample.value,
+                    reward,
+                });
+            }
+            let batch = UpdateBatch::from_trajectories(&[tr], 0.99, 0.95);
+            let stats = a.update(&batch).unwrap();
+            assert!(stats.minibatches > 0);
+            assert!(stats.loss.is_finite());
+        }
+        let probs = a.act(&probe, true).unwrap();
+        // After training, greedy action should be 4 with high probability.
+        let greedy = a.act(&probe, false).unwrap()[0];
+        assert_eq!(greedy.action, 4, "policy failed to learn (logp {probs:?})");
+    }
+
+    #[test]
+    fn simplified_variant_also_updates() {
+        let mut a = agent(PpoVariant::Simplified);
+        let mut tr = Trajectory::default();
+        for _ in 0..16 {
+            let s = state(0.1);
+            let sample = a.act(&[s.clone()], true).unwrap()[0];
+            tr.push(Transition {
+                state: s,
+                action: sample.action,
+                logp: sample.logp,
+                value: sample.value,
+                reward: 1.0,
+            });
+        }
+        let t0 = a.theta_snapshot().unwrap();
+        let batch = UpdateBatch::from_trajectories(&[tr], 0.99, 0.95);
+        a.update(&batch).unwrap();
+        let t1 = a.theta_snapshot().unwrap();
+        assert_ne!(t0, t1);
+    }
+
+    #[test]
+    fn theta_roundtrip_via_file() {
+        let a = agent(PpoVariant::Clipped);
+        let path = std::env::temp_dir().join("dynamix_theta_test.f32");
+        a.save_theta(&path).unwrap();
+        let mut b = agent(PpoVariant::Clipped);
+        b.load_theta_file(&path).unwrap();
+        assert_eq!(a.theta_snapshot().unwrap(), b.theta_snapshot().unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn act_rejects_too_many_workers() {
+        let mut a = agent(PpoVariant::Clipped);
+        let states: Vec<_> = (0..33).map(|_| state(0.0)).collect();
+        assert!(a.act(&states, true).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Reinforcement-learning core (paper §IV).
+//!
+//! * [`state`]      — the multi-dimensional state representation (§IV-B):
+//!   per-worker network / system / training-statistics features plus the
+//!   BSP-shared global features, normalized into the 16-dim vector the
+//!   `policy_forward` artifact was compiled for.
+//! * [`action`]     — the discrete action space A = {-100,-25,0,+25,+100}
+//!   with [32,1024] clamping (§IV-C).
+//! * [`reward`]     — the SGD and adaptive-optimizer reward functions
+//!   (§IV-D).
+//! * [`trajectory`] — per-worker rollout buffers + GAE.
+//! * [`agent`]      — the PPO arbitrator driver: batched policy inference
+//!   and minibatched updates through the AOT policy artifacts. Python is
+//!   never involved; the policy's parameters live in this process as
+//!   literals fed to `policy_forward` / `policy_update`.
+
+pub mod action;
+pub mod agent;
+pub mod reward;
+pub mod state;
+pub mod trajectory;

@@ -1,0 +1,132 @@
+//! Reward functions (paper §IV-D).
+//!
+//! SGD regime:
+//!   r = Ā + α·max(0, ΔA) − β·T_iter − δ·(log2(B) − 5)
+//! Adaptive-optimizer regime adds the gradient-normalization stability
+//! penalty:
+//!   r -= η·(σ²_norm + σ_norm)
+//!
+//! T_iter is normalized by a per-run reference time so β has consistent
+//! meaning across models/clusters (the paper trains one agent per
+//! configuration, which implicitly does the same).
+
+use crate::sysmetrics::WindowSummary;
+
+/// Reward coefficients + regime switch.
+#[derive(Clone, Copy, Debug)]
+pub struct RewardParams {
+    pub alpha: f64,
+    pub beta: f64,
+    pub delta: f64,
+    pub eta: f64,
+    /// Apply the η penalty (adaptive optimizers, §IV-D).
+    pub adaptive: bool,
+    /// Reference iteration time for T_iter normalization (seconds).
+    pub iter_time_ref: f64,
+}
+
+impl Default for RewardParams {
+    fn default() -> Self {
+        RewardParams {
+            alpha: 2.0,
+            beta: 0.5,
+            delta: 0.05,
+            eta: 0.1,
+            adaptive: false,
+            iter_time_ref: 0.1,
+        }
+    }
+}
+
+impl RewardParams {
+    /// Compute the reward for one worker's k-iteration window (§IV-D).
+    pub fn compute(&self, w: &WindowSummary, batch: usize) -> f64 {
+        let t_norm = w.iter_time_mean / self.iter_time_ref.max(1e-9);
+        let mut r = w.acc_mean + self.alpha * w.acc_gain.max(0.0)
+            - self.beta * t_norm
+            - self.delta * ((batch.max(1) as f64).log2() - 5.0);
+        if self.adaptive {
+            r -= self.eta * (w.sigma_norm2 + w.sigma_norm);
+        }
+        r
+    }
+}
+
+/// Discounted return of a reward sequence: G_t = Σ γ^i r_{t+i}.
+pub fn discounted_returns(rewards: &[f64], gamma: f64) -> Vec<f64> {
+    let mut out = vec![0.0; rewards.len()];
+    let mut acc = 0.0;
+    for i in (0..rewards.len()).rev() {
+        acc = rewards[i] + gamma * acc;
+        out[i] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(acc: f64, gain: f64, t: f64, sn: f64) -> WindowSummary {
+        WindowSummary {
+            acc_mean: acc,
+            acc_gain: gain,
+            iter_time_mean: t,
+            sigma_norm: sn,
+            sigma_norm2: sn * sn,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_value_matches_formula() {
+        let p = RewardParams::default();
+        // acc .5, gain 1.0, t = ref, batch 32 (log2-5 = 0)
+        let r = p.compute(&window(0.5, 1.0, 0.1, 0.0), 32);
+        assert!((r - (0.5 + 2.0 * 1.0 - 0.5 * 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_gain_is_neutral() {
+        let p = RewardParams::default();
+        let r0 = p.compute(&window(0.5, 0.0, 0.1, 0.0), 32);
+        let rneg = p.compute(&window(0.5, -2.0, 0.1, 0.0), 32);
+        assert_eq!(r0, rneg, "max(0, ΔA) must ignore drops");
+    }
+
+    #[test]
+    fn slower_iterations_penalized() {
+        let p = RewardParams::default();
+        let fast = p.compute(&window(0.5, 0.0, 0.05, 0.0), 128);
+        let slow = p.compute(&window(0.5, 0.0, 0.5, 0.0), 128);
+        assert!(fast > slow);
+    }
+
+    #[test]
+    fn log_batch_regularizer_centered_at_32() {
+        let p = RewardParams::default();
+        let at32 = p.compute(&window(0.5, 0.0, 0.1, 0.0), 32);
+        let at1024 = p.compute(&window(0.5, 0.0, 0.1, 0.0), 1024);
+        // log2(1024)-5 = 5 -> penalty δ*5
+        assert!((at32 - at1024 - 0.05 * 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_penalty_only_when_adaptive() {
+        let mut p = RewardParams::default();
+        let w = window(0.5, 0.0, 0.1, 0.8);
+        let r_sgd = p.compute(&w, 32);
+        p.adaptive = true;
+        let r_adam = p.compute(&w, 32);
+        assert!((r_sgd - r_adam - 0.1 * (0.64 + 0.8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discounted_returns_basic() {
+        let g = discounted_returns(&[1.0, 1.0, 1.0], 0.5);
+        assert!((g[2] - 1.0).abs() < 1e-12);
+        assert!((g[1] - 1.5).abs() < 1e-12);
+        assert!((g[0] - 1.75).abs() < 1e-12);
+        assert!(discounted_returns(&[], 0.9).is_empty());
+    }
+}

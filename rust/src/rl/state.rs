@@ -1,0 +1,185 @@
+//! State representation (paper §IV-B).
+//!
+//! 16 features, fixed normalization (documented per-feature below) so the
+//! policy sees inputs in roughly [-3, 3] regardless of cluster size or
+//! model. Layout is frozen into the AOT `policy_forward` artifact
+//! (manifest `state_dim` = [`STATE_DIM`]); changing it requires
+//! `make artifacts`.
+
+use crate::sysmetrics::WindowSummary;
+
+pub const STATE_DIM: usize = 16;
+
+/// Feature indices (kept public for the ablation benches).
+pub mod idx {
+    pub const THROUGHPUT: usize = 0;      // network: goodput
+    pub const RETX: usize = 1;            // network: retransmissions
+    pub const CPU_RATIO: usize = 2;       // system: cpu time ratio
+    pub const MEM_UTIL: usize = 3;        // system: memory utilization
+    pub const ACC_MEAN: usize = 4;        // training: mean batch accuracy
+    pub const ACC_STD: usize = 5;         // training: accuracy std
+    pub const ACC_GAIN: usize = 6;        // training: sliding-window ΔA
+    pub const ITER_TIME: usize = 7;       // training: mean iteration time
+    pub const SIGMA_NORM: usize = 8;      // optimizer: sigma_norm
+    pub const SIGMA_NORM2: usize = 9;     // optimizer: sigma_norm^2
+    pub const LOG_BATCH: usize = 10;      // control: log2 batch size
+    pub const PROGRESS: usize = 11;       // control: training progress
+    pub const GLOBAL_LOSS: usize = 12;    // global: shared loss level
+    pub const GLOBAL_ACC: usize = 13;     // global: eval accuracy
+    pub const GLOBAL_TREND: usize = 14;   // global: eval accuracy trend
+    pub const SCALE: usize = 15;          // global: cluster size
+}
+
+/// A normalized state vector (length [`STATE_DIM`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateVector(pub Vec<f32>);
+
+/// Global (BSP-shared) training signals (§IV-B "global state").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GlobalState {
+    pub loss: f64,
+    pub eval_acc: f64,
+    /// Eval-accuracy delta over the last two evaluations.
+    pub eval_trend: f64,
+    pub progress: f64,
+    pub n_workers: usize,
+}
+
+/// Builder carrying the normalization constants + ablation switches.
+#[derive(Clone, Debug)]
+pub struct StateBuilder {
+    pub use_network_features: bool,
+    pub use_grad_stats_features: bool,
+    /// Reference iteration time for normalization (seconds). Calibrated
+    /// once per run from the first window so the feature is ~1 at start.
+    pub iter_time_ref: f64,
+}
+
+impl Default for StateBuilder {
+    fn default() -> Self {
+        StateBuilder {
+            use_network_features: true,
+            use_grad_stats_features: true,
+            iter_time_ref: 0.1,
+        }
+    }
+}
+
+fn clamp3(x: f64) -> f32 {
+    x.clamp(-3.0, 3.0) as f32
+}
+
+impl StateBuilder {
+    /// Build one worker's state vector from its window summary, its
+    /// current batch size, and the shared global state.
+    pub fn build(
+        &self,
+        w: &WindowSummary,
+        batch: usize,
+        global: &GlobalState,
+    ) -> StateVector {
+        let mut s = vec![0.0f32; STATE_DIM];
+        if self.use_network_features {
+            // 25 Gbps-class NIC -> ~[0,1.2]; log1p retx compresses bursts.
+            s[idx::THROUGHPUT] = clamp3(w.throughput_mean / 25.0);
+            s[idx::RETX] = clamp3((1.0 + w.retransmissions).ln() / 10.0);
+        }
+        s[idx::CPU_RATIO] = clamp3(w.cpu_time_ratio / 4.0);
+        s[idx::MEM_UTIL] = clamp3(w.mem_util);
+        s[idx::ACC_MEAN] = clamp3(w.acc_mean);
+        s[idx::ACC_STD] = clamp3(w.acc_std * 5.0);
+        s[idx::ACC_GAIN] = clamp3(w.acc_gain / 3.0);
+        s[idx::ITER_TIME] = clamp3(w.iter_time_mean / self.iter_time_ref.max(1e-6));
+        if self.use_grad_stats_features {
+            s[idx::SIGMA_NORM] = clamp3(w.sigma_norm);
+            s[idx::SIGMA_NORM2] = clamp3(w.sigma_norm2);
+        }
+        s[idx::LOG_BATCH] = clamp3((batch.max(1) as f64).log2() / 10.0);
+        s[idx::PROGRESS] = clamp3(global.progress);
+        s[idx::GLOBAL_LOSS] = clamp3(global.loss / 5.0);
+        s[idx::GLOBAL_ACC] = clamp3(global.eval_acc);
+        s[idx::GLOBAL_TREND] = clamp3(global.eval_trend * 20.0);
+        s[idx::SCALE] = clamp3(global.n_workers as f64 / 32.0);
+        StateVector(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary() -> WindowSummary {
+        WindowSummary {
+            acc_mean: 0.6,
+            acc_std: 0.05,
+            acc_gain: 1.2,
+            iter_time_mean: 0.2,
+            throughput_mean: 12.0,
+            retransmissions: 150.0,
+            cpu_time_ratio: 2.5,
+            mem_util: 0.4,
+            sigma_norm: 0.9,
+            sigma_norm2: 0.81,
+            loss_mean: 1.8,
+            iters: 5,
+        }
+    }
+
+    fn global() -> GlobalState {
+        GlobalState {
+            loss: 1.8,
+            eval_acc: 0.55,
+            eval_trend: 0.01,
+            progress: 0.3,
+            n_workers: 16,
+        }
+    }
+
+    #[test]
+    fn builds_bounded_vector() {
+        let b = StateBuilder::default();
+        let s = b.build(&summary(), 256, &global());
+        assert_eq!(s.0.len(), STATE_DIM);
+        assert!(s.0.iter().all(|v| v.is_finite() && (-3.0..=3.0).contains(v)));
+        assert!(s.0[idx::LOG_BATCH] > 0.0);
+        assert!((s.0[idx::SCALE] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn network_ablation_zeroes_features() {
+        let mut b = StateBuilder::default();
+        b.use_network_features = false;
+        let s = b.build(&summary(), 256, &global());
+        assert_eq!(s.0[idx::THROUGHPUT], 0.0);
+        assert_eq!(s.0[idx::RETX], 0.0);
+        assert_ne!(s.0[idx::ACC_MEAN], 0.0);
+    }
+
+    #[test]
+    fn grad_stats_ablation_zeroes_features() {
+        let mut b = StateBuilder::default();
+        b.use_grad_stats_features = false;
+        let s = b.build(&summary(), 256, &global());
+        assert_eq!(s.0[idx::SIGMA_NORM], 0.0);
+        assert_eq!(s.0[idx::SIGMA_NORM2], 0.0);
+    }
+
+    #[test]
+    fn batch_size_monotone_in_feature() {
+        let b = StateBuilder::default();
+        let lo = b.build(&summary(), 32, &global()).0[idx::LOG_BATCH];
+        let hi = b.build(&summary(), 1024, &global()).0[idx::LOG_BATCH];
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn extreme_inputs_clamped() {
+        let mut w = summary();
+        w.retransmissions = 1e12;
+        w.acc_gain = -1e9;
+        let b = StateBuilder::default();
+        let s = b.build(&w, 1024, &global());
+        assert!(s.0.iter().all(|v| (-3.0..=3.0).contains(v)));
+        assert_eq!(s.0[idx::ACC_GAIN], -3.0);
+    }
+}

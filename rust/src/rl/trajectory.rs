@@ -1,0 +1,182 @@
+//! Rollout storage + Generalized Advantage Estimation.
+//!
+//! One [`Trajectory`] per worker per episode (the centralized agent
+//! produces node-specific actions from shared parameters, §IV-A; the
+//! overall objective sums per-node surrogate losses, so the update buffer
+//! simply concatenates all workers' transitions).
+
+use super::state::StateVector;
+
+/// One transition of one worker.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: StateVector,
+    pub action: usize,
+    pub logp: f32,
+    pub value: f32,
+    pub reward: f64,
+}
+
+/// Per-worker episode rollout.
+#[derive(Clone, Debug, Default)]
+pub struct Trajectory {
+    pub steps: Vec<Transition>,
+}
+
+impl Trajectory {
+    pub fn push(&mut self, t: Transition) {
+        self.steps.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn total_reward(&self) -> f64 {
+        self.steps.iter().map(|t| t.reward).sum()
+    }
+
+    /// GAE(γ, λ) advantages + discounted-return targets.
+    ///
+    /// Episodes terminate at the buffer end (bootstrap value 0), matching
+    /// the episodic protocol of §VI-C where each episode ends after a
+    /// fixed step count.
+    pub fn gae(&self, gamma: f64, lambda: f64) -> (Vec<f64>, Vec<f64>) {
+        let n = self.steps.len();
+        let mut adv = vec![0.0; n];
+        let mut gae = 0.0;
+        for i in (0..n).rev() {
+            let next_v = if i + 1 < n {
+                self.steps[i + 1].value as f64
+            } else {
+                0.0
+            };
+            let delta = self.steps[i].reward + gamma * next_v - self.steps[i].value as f64;
+            gae = delta + gamma * lambda * gae;
+            adv[i] = gae;
+        }
+        let ret: Vec<f64> = adv
+            .iter()
+            .zip(&self.steps)
+            .map(|(a, t)| a + t.value as f64)
+            .collect();
+        (adv, ret)
+    }
+}
+
+/// Flattened multi-worker update batch with normalized advantages.
+#[derive(Debug, Default)]
+pub struct UpdateBatch {
+    pub states: Vec<StateVector>,
+    pub actions: Vec<usize>,
+    pub old_logp: Vec<f32>,
+    pub advantages: Vec<f32>,
+    pub returns: Vec<f32>,
+}
+
+impl UpdateBatch {
+    /// Build from all workers' trajectories; advantages are normalized to
+    /// zero mean / unit std across the whole batch (standard PPO practice;
+    /// the paper's simplified variant ignores the advantage column).
+    pub fn from_trajectories(trajs: &[Trajectory], gamma: f64, lambda: f64) -> UpdateBatch {
+        let mut b = UpdateBatch::default();
+        for tr in trajs {
+            let (adv, ret) = tr.gae(gamma, lambda);
+            for (i, t) in tr.steps.iter().enumerate() {
+                b.states.push(t.state.clone());
+                b.actions.push(t.action);
+                b.old_logp.push(t.logp);
+                b.advantages.push(adv[i] as f32);
+                b.returns.push(ret[i] as f32);
+            }
+        }
+        // Normalize advantages.
+        let n = b.advantages.len();
+        if n > 1 {
+            let mean: f32 = b.advantages.iter().sum::<f32>() / n as f32;
+            let var: f32 =
+                b.advantages.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n as f32;
+            let std = var.sqrt().max(1e-6);
+            for a in &mut b.advantages {
+                *a = (*a - mean) / std;
+            }
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traj(rewards: &[f64], values: &[f32]) -> Trajectory {
+        let mut t = Trajectory::default();
+        for (i, (&r, &v)) in rewards.iter().zip(values).enumerate() {
+            t.push(Transition {
+                state: StateVector(vec![i as f32; 16]),
+                action: i % 5,
+                logp: -1.6,
+                value: v,
+                reward: r,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // gamma=1, lambda=1 -> advantage = (sum of future rewards) - V.
+        let t = traj(&[1.0, 2.0, 3.0], &[0.5, 0.5, 0.5]);
+        let (adv, ret) = t.gae(1.0, 1.0);
+        assert!((adv[0] - (6.0 - 0.5)).abs() < 1e-9);
+        assert!((adv[2] - (3.0 - 0.5)).abs() < 1e-9);
+        for (a, r, tr) in adv.iter().zip(&ret).zip(&t.steps).map(|((a, r), t)| (a, r, t)) {
+            assert!((r - (a + tr.value as f64)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gae_lambda_zero_is_td_error() {
+        let t = traj(&[1.0, 1.0], &[0.3, 0.7]);
+        let (adv, _) = t.gae(0.9, 0.0);
+        // 1e-6 tolerance: stored values are f32.
+        assert!((adv[0] - (1.0 + 0.9 * 0.7 - 0.3)).abs() < 1e-6);
+        assert!((adv[1] - (1.0 + 0.0 - 0.7)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_batch_concatenates_and_normalizes() {
+        let t1 = traj(&[1.0, 2.0], &[0.0, 0.0]);
+        let t2 = traj(&[5.0], &[0.0]);
+        let b = UpdateBatch::from_trajectories(&[t1, t2], 0.99, 0.95);
+        assert_eq!(b.len(), 3);
+        let mean: f32 = b.advantages.iter().sum::<f32>() / 3.0;
+        let var: f32 = b.advantages.iter().map(|a| (a - mean).powi(2)).sum::<f32>() / 3.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn total_reward_sums() {
+        let t = traj(&[1.0, -2.0, 0.5], &[0.0; 3]);
+        assert!((t.total_reward() + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_is_safe() {
+        let b = UpdateBatch::from_trajectories(&[], 0.99, 0.95);
+        assert!(b.is_empty());
+    }
+}

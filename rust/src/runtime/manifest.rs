@@ -1,0 +1,328 @@
+//! `artifacts/manifest.json` parsing.
+//!
+//! The manifest is the single source of truth for artifact I/O schemas:
+//! the Rust side never hardcodes parameter counts or buffer shapes — it
+//! sizes everything from here, so a Python-side model change only requires
+//! `make artifacts`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Metadata for one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub model: Option<String>,
+    pub optimizer: Option<String>,
+    pub bucket: Option<usize>,
+    pub param_count: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Static description of one model in the zoo.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub family: String,
+    pub depth: usize,
+    pub width: usize,
+    pub num_classes: usize,
+    pub feature_dim: usize,
+    pub param_count: usize,
+    pub dataset: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<usize>,
+    pub eval_batch: usize,
+    pub state_dim: usize,
+    pub n_actions: usize,
+    pub max_workers: usize,
+    pub ppo_minibatch: usize,
+    pub feature_dim: usize,
+    pub policy_param_count: usize,
+    pub init_seeds: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn io_specs(v: &Json) -> anyhow::Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("io spec not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(IoSpec {
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                    .collect::<anyhow::Result<_>>()?,
+                dtype: s
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("missing dtype"))?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}; run `make artifacts` first"))?;
+        let v = Json::parse(&text)?;
+        let need_u = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {k}"))
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?
+        {
+            let gu = |k: &str| {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("model {name} missing {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    family: m.get("family").and_then(Json::as_str).unwrap_or("").into(),
+                    depth: gu("depth")?,
+                    width: gu("width")?,
+                    num_classes: gu("num_classes")?,
+                    feature_dim: gu("feature_dim")?,
+                    param_count: gu("param_count")?,
+                    dataset: m.get("dataset").and_then(Json::as_str).unwrap_or("").into(),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("artifact {name} missing kind"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?
+                        .to_string(),
+                    model: a.get("model").and_then(Json::as_str).map(str::to_string),
+                    optimizer: a.get("optimizer").and_then(Json::as_str).map(str::to_string),
+                    bucket: a.get("bucket").and_then(Json::as_usize),
+                    param_count: a.get("param_count").and_then(Json::as_usize),
+                    inputs: io_specs(a.get("inputs").unwrap_or(&Json::Null))?,
+                    outputs: io_specs(a.get("outputs").unwrap_or(&Json::Null))?,
+                },
+            );
+        }
+
+        let buckets: Vec<usize> = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing buckets"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow::anyhow!("bad bucket")))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets not sorted");
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            buckets,
+            eval_batch: need_u("eval_batch")?,
+            state_dim: need_u("state_dim")?,
+            n_actions: need_u("n_actions")?,
+            max_workers: need_u("max_workers")?,
+            ppo_minibatch: need_u("ppo_minibatch")?,
+            feature_dim: need_u("feature_dim")?,
+            policy_param_count: need_u("policy_param_count")?,
+            init_seeds: v.get("init_seeds").and_then(Json::as_usize).unwrap_or(0),
+            models,
+            artifacts,
+        })
+    }
+
+    /// Smallest bucket >= n, or an error if n exceeds the ladder.
+    pub fn bucket_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "batch {n} exceeds largest bucket {}",
+                    self.buckets.last().copied().unwrap_or(0)
+                )
+            })
+    }
+
+    /// Artifact name for a train step.
+    pub fn train_artifact(&self, model: &str, optimizer: &str, bucket: usize) -> String {
+        format!("train_{model}_{optimizer}_b{bucket}")
+    }
+
+    /// Artifact name for an eval step.
+    pub fn eval_artifact(&self, model: &str) -> String {
+        format!("eval_{model}")
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))
+    }
+
+    /// Load a seeded init-parameter snapshot (raw little-endian f32).
+    pub fn load_init_params(&self, model: &str, seed: u64) -> anyhow::Result<Vec<f32>> {
+        let seed = if self.init_seeds > 0 {
+            seed % self.init_seeds as u64
+        } else {
+            0
+        };
+        let path = self.dir.join(format!("init_{model}_seed{seed}.f32"));
+        read_f32_file(&path)
+    }
+
+    /// Load a seeded policy init snapshot.
+    pub fn load_init_policy(&self, seed: u64) -> anyhow::Result<Vec<f32>> {
+        let seed = if self.init_seeds > 0 {
+            seed % self.init_seeds as u64
+        } else {
+            0
+        };
+        let path = self.dir.join(format!("init_policy_seed{seed}.f32"));
+        read_f32_file(&path)
+    }
+}
+
+fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Default artifacts dir: `$DYNAMIX_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DYNAMIX_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = manifest();
+        assert_eq!(m.state_dim, 16);
+        assert_eq!(m.n_actions, 5);
+        assert!(m.artifacts.len() >= 7);
+        assert!(m.models.contains_key("vgg11_mini"));
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_upper() {
+        let m = manifest();
+        assert_eq!(m.bucket_for(1).unwrap(), 32);
+        assert_eq!(m.bucket_for(32).unwrap(), 32);
+        assert_eq!(m.bucket_for(33).unwrap(), 64);
+        let &last = m.buckets.last().unwrap();
+        assert_eq!(m.bucket_for(last).unwrap(), last);
+        assert!(m.bucket_for(last + 1).is_err());
+    }
+
+    #[test]
+    fn train_artifact_schema_consistent() {
+        let m = manifest();
+        let name = m.train_artifact("vgg11_mini", "sgd", 32);
+        let a = m.artifact(&name).unwrap();
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.inputs.len(), 8);
+        assert_eq!(a.outputs.len(), 10);
+        let pc = m.model("vgg11_mini").unwrap().param_count;
+        assert_eq!(a.inputs[0].elements(), pc);
+        assert_eq!(a.outputs[0].elements(), pc);
+        // x input is [bucket, feature_dim]
+        assert_eq!(a.inputs[4].shape, vec![32, m.feature_dim]);
+        // correct vector is [bucket]
+        assert_eq!(a.outputs[6].shape, vec![32]);
+    }
+
+    #[test]
+    fn init_snapshots_load_and_match_param_count() {
+        let m = manifest();
+        let p = m.load_init_params("vgg11_mini", 0).unwrap();
+        assert_eq!(p.len(), m.model("vgg11_mini").unwrap().param_count);
+        assert!(p.iter().all(|x| x.is_finite()));
+        // seed wrap-around: seed init_seeds maps to seed 0
+        let p2 = m.load_init_params("vgg11_mini", m.init_seeds as u64).unwrap();
+        assert_eq!(p, p2);
+        let pol = m.load_init_policy(1).unwrap();
+        assert_eq!(pol.len(), m.policy_param_count);
+    }
+
+    #[test]
+    fn missing_artifact_is_informative() {
+        let m = manifest();
+        let err = m.artifact("train_nope_sgd_b32").unwrap_err().to_string();
+        assert!(err.contains("train_nope_sgd_b32"));
+    }
+}

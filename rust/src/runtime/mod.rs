@@ -1,0 +1,47 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The hot path is
+//! `ArtifactStore::get(name)` (lazy compile + cache) followed by
+//! `Executable::run(&[Literal])`. On the CPU PJRT plugin "device" memory
+//! is host memory, so literal-based execution costs a memcpy per argument
+//! — negligible against the train-step compute (measured in
+//! EXPERIMENTS.md §Perf; the buffer-resident alternative is documented in
+//! DESIGN.md §Perf and was rejected because tuple-rooted executables
+//! return a single tuple buffer through this PJRT API).
+
+mod manifest;
+mod store;
+
+pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelInfo};
+pub use store::{ArtifactStore, Outputs};
+
+use xla::Literal;
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    let l = Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(l)
+    } else {
+        Ok(l.reshape(dims)?)
+    }
+}
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    let l = Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(l)
+    } else {
+        Ok(l.reshape(dims)?)
+    }
+}
+
+/// Scalar-as-[1] f32 literal (the AOT signature convention for lr/step...).
+pub fn lit_scalar1(v: f32) -> Literal {
+    Literal::vec1(&[v])
+}

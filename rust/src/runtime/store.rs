@@ -1,0 +1,236 @@
+//! Lazy-compiling executable store over the PJRT CPU client.
+//!
+//! Compiling an HLO module takes O(100ms..s); the bucket ladder times six
+//! (model, optimizer) combos would make eager startup ~a minute. The store
+//! compiles on first use and caches `Arc<PjRtLoadedExecutable>` forever
+//! (executables are immutable). A `Mutex<HashMap>` is fine: the hot loop
+//! hits the cache once per iteration and the critical section is a clone.
+
+use super::manifest::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Decomposed outputs of a tuple-rooted executable run.
+pub struct Outputs(pub Vec<Literal>);
+
+impl std::fmt::Debug for Outputs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Outputs({} literals)", self.0.len())
+    }
+}
+
+impl Outputs {
+    /// f32 vector at output index `i`.
+    pub fn vec_f32(&self, i: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.0[i].to_vec::<f32>()?)
+    }
+
+    /// Scalar f32 at output index `i` (accepts [] or [1] shapes).
+    pub fn scalar_f32(&self, i: usize) -> anyhow::Result<f32> {
+        let v = self.0[i].to_vec::<f32>()?;
+        anyhow::ensure!(!v.is_empty(), "output {i} empty");
+        Ok(v[0])
+    }
+
+    /// Move the literal at index `i` out (for carrying state across steps).
+    pub fn take(&mut self, i: usize) -> Literal {
+        std::mem::replace(&mut self.0[i], Literal::vec1::<f32>(&[]))
+    }
+}
+
+/// Compile-and-cache store for every artifact in the manifest.
+pub struct ArtifactStore {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    /// (artifact, compile_seconds) log for EXPERIMENTS.md §Perf.
+    compile_log: Mutex<Vec<(String, f64)>>,
+}
+
+impl ArtifactStore {
+    /// Open the store over `dir` (must contain manifest.json).
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(ArtifactStore {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_log: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Open at the default artifacts location.
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(&super::manifest::default_artifacts_dir())
+    }
+
+    /// Get (lazily compiling) the executable for `name`.
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.lock().unwrap().push((name.to_string(), dt));
+        // Racing compilers of the same artifact: last wins, both valid.
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with literal args; decompose the tuple root.
+    /// Accepts owned literals or references (`&[&Literal]`).
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> anyhow::Result<Outputs> {
+        let meta_inputs = self.manifest.artifact(name)?.inputs.len();
+        anyhow::ensure!(
+            args.len() == meta_inputs,
+            "{name}: {} args given, manifest says {meta_inputs}",
+            args.len()
+        );
+        let exe = self.get(name)?;
+        let result = exe
+            .execute(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} outputs: {e}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} outputs: {e}"))?;
+        let n_out = self.manifest.artifact(name)?.outputs.len();
+        anyhow::ensure!(
+            parts.len() == n_out,
+            "{name}: {} outputs, manifest says {n_out}",
+            parts.len()
+        );
+        Ok(Outputs(parts))
+    }
+
+    /// Number of executables compiled so far (for tests/overhead reports).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Snapshot of the compile log: (artifact, seconds).
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, lit_i32, lit_scalar1};
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::open_default().expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn compiles_lazily_and_caches() {
+        let s = store();
+        assert_eq!(s.compiled_count(), 0);
+        let _e1 = s.get("policy_forward").unwrap();
+        assert_eq!(s.compiled_count(), 1);
+        let _e2 = s.get("policy_forward").unwrap();
+        assert_eq!(s.compiled_count(), 1);
+        assert_eq!(s.compile_log().len(), 1);
+    }
+
+    #[test]
+    fn run_train_step_decreases_loss_on_fixed_batch() {
+        let s = store();
+        let m = &s.manifest;
+        let name = m.train_artifact("vgg11_mini", "sgd", 32);
+        let pc = m.model("vgg11_mini").unwrap().param_count;
+        let fd = m.feature_dim;
+
+        let mut params = lit_f32(&m.load_init_params("vgg11_mini", 0).unwrap(), &[pc as i64]).unwrap();
+        let mut mom = lit_f32(&vec![0.0; pc], &[pc as i64]).unwrap();
+        let mut vv = lit_scalar1(0.0);
+        let mut step = lit_scalar1(0.0);
+
+        // Deterministic learnable batch: y = argmax over 10 fixed projections.
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x: Vec<f32> = (0..32 * fd).map(|_| rng.normal() as f32).collect();
+        let proto: Vec<f32> = (0..10 * fd).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..32)
+            .map(|i| {
+                (0..10)
+                    .max_by(|&a, &b| {
+                        let da: f32 = (0..fd).map(|j| x[i * fd + j] * proto[a * fd + j]).sum();
+                        let db: f32 = (0..fd).map(|j| x[i * fd + j] * proto[b * fd + j]).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap() as i32
+            })
+            .collect();
+        let xl = lit_f32(&x, &[32, fd as i64]).unwrap();
+        let yl = lit_i32(&y, &[32]).unwrap();
+        let mask = lit_f32(&vec![1.0; 32], &[32]).unwrap();
+        let lr = lit_scalar1(0.05);
+
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            let mut out = s
+                .run(&name, &[&params, &mom, &vv, &step, &xl, &yl, &mask, &lr])
+                .unwrap();
+            losses.push(out.scalar_f32(4).unwrap());
+            params = out.take(0);
+            mom = out.take(1);
+            vv = out.take(2);
+            step = out.take(3);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses[24] < losses[0] * 0.8,
+            "loss did not decrease: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn run_checks_arity() {
+        let s = store();
+        let empty: [&Literal; 0] = [];
+        let err = s.run("policy_forward", &empty).unwrap_err().to_string();
+        assert!(err.contains("manifest says"), "{err}");
+    }
+
+    #[test]
+    fn policy_forward_logprobs_normalized() {
+        let s = store();
+        let m = &s.manifest;
+        let theta = lit_f32(&m.load_init_policy(0).unwrap(), &[m.policy_param_count as i64]).unwrap();
+        let states = lit_f32(
+            &vec![0.1; m.max_workers * m.state_dim],
+            &[m.max_workers as i64, m.state_dim as i64],
+        )
+        .unwrap();
+        let out = s.run("policy_forward", &[theta, states]).unwrap();
+        let logp = out.vec_f32(0).unwrap();
+        assert_eq!(logp.len(), m.max_workers * m.n_actions);
+        for w in 0..m.max_workers {
+            let total: f32 = (0..m.n_actions)
+                .map(|a| logp[w * m.n_actions + a].exp())
+                .sum();
+            assert!((total - 1.0).abs() < 1e-4, "worker {w}: {total}");
+        }
+    }
+}

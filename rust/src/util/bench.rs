@@ -1,0 +1,121 @@
+//! Minimal criterion-style benchmark harness (offline build: no criterion).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`). Reports
+//! mean ± std, min, and p50 over timed iterations after warmup, in a
+//! stable greppable format:
+//!
+//! ```text
+//! bench <name>: mean 12.345 ms ± 0.678 (min 11.9, p50 12.2, n=20)
+//! ```
+//!
+//! Also emits a JSON line per benchmark when `DYNAMIX_BENCH_JSON` is set,
+//! so EXPERIMENTS.md tables can be regenerated mechanically.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub n: usize,
+}
+
+/// Run `f` `n` times (after `warmup` untimed runs) and report statistics.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, n: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: sorted[0],
+        p50_s: sorted[n / 2],
+        n,
+    };
+    report(&result);
+    result
+}
+
+fn unit(mean_s: f64) -> (f64, &'static str) {
+    if mean_s >= 1.0 {
+        (1.0, "s")
+    } else if mean_s >= 1e-3 {
+        (1e3, "ms")
+    } else {
+        (1e6, "us")
+    }
+}
+
+fn report(r: &BenchResult) {
+    let (scale, u) = unit(r.mean_s);
+    println!(
+        "bench {}: mean {:.3} {u} ± {:.3} (min {:.3}, p50 {:.3}, n={})",
+        r.name,
+        r.mean_s * scale,
+        r.std_s * scale,
+        r.min_s * scale,
+        r.p50_s * scale,
+        r.n
+    );
+    if std::env::var("DYNAMIX_BENCH_JSON").is_ok() {
+        println!(
+            "{}",
+            crate::jobj! {
+                "bench" => r.name.clone(),
+                "mean_s" => r.mean_s,
+                "std_s" => r.std_s,
+                "min_s" => r.min_s,
+                "p50_s" => r.p50_s,
+                "n" => r.n,
+            }
+        );
+    }
+}
+
+/// Throughput helper: items/sec at the measured mean.
+pub fn throughput(r: &BenchResult, items: usize) -> f64 {
+    items as f64 / r.mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("test-sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.mean_s >= 0.002);
+        assert!(r.min_s <= r.p50_s);
+        assert_eq!(r.n, 3);
+    }
+
+    #[test]
+    fn throughput_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean_s: 0.5,
+            std_s: 0.0,
+            min_s: 0.5,
+            p50_s: 0.5,
+            n: 1,
+        };
+        assert_eq!(throughput(&r, 100), 200.0);
+    }
+}

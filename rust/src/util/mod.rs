@@ -1,0 +1,16 @@
+//! Self-contained utility substrate.
+//!
+//! The build environment is offline (only the `xla` crate and its
+//! dependency closure are vendored), so the usual ecosystem crates
+//! (serde/rand/etc.) are unavailable — these small, well-tested
+//! replacements keep the rest of the system dependency-free:
+//!
+//! * [`rng`]  — splitmix64-seeded xoshiro256++ PRNG with the exact
+//!   distributions the simulators need (uniform, normal, exponential,
+//!   poisson) and deterministic stream splitting.
+//! * [`json`] — a strict recursive-descent JSON parser + serializer used
+//!   for `artifacts/manifest.json`, experiment configs and run records.
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,206 @@
+//! Failure-injection tests: corrupted inputs, missing artifacts, protocol
+//! abuse, resource-pressure edge cases. The system must fail loudly and
+//! informatively, never hang or silently mis-train.
+
+use dynamix::comm::{channel_pair, Msg, Transport};
+use dynamix::config::{ClusterPreset, ExperimentConfig};
+use dynamix::rl::state::StateVector;
+use dynamix::runtime::{ArtifactStore, Manifest};
+use dynamix::trainer::BspTrainer;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn store() -> Arc<ArtifactStore> {
+    Arc::new(ArtifactStore::open_default().expect("run `make artifacts` first"))
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dynamix_fi_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_informative() {
+    let d = temp_dir("nomanifest");
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupted_manifest_rejected() {
+    let d = temp_dir("badmanifest");
+    std::fs::write(d.join("manifest.json"), "{ not json !").unwrap();
+    assert!(Manifest::load(&d).is_err());
+    // Valid JSON, wrong schema:
+    std::fs::write(d.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile_not_load() {
+    // Store opens fine (lazy compile), then fails with the artifact name
+    // when the file is gone.
+    let s = store();
+    let real_dir = s.manifest.dir.clone();
+    let d = temp_dir("missinghlo");
+    std::fs::copy(real_dir.join("manifest.json"), d.join("manifest.json")).unwrap();
+    // Copy init files but NO hlo files.
+    for entry in std::fs::read_dir(&real_dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "f32").unwrap_or(false) {
+            std::fs::copy(&p, d.join(p.file_name().unwrap())).unwrap();
+        }
+    }
+    let broken = ArtifactStore::open(&d).unwrap();
+    let err = match broken.get("policy_forward") {
+        Ok(_) => panic!("compile should fail without the hlo file"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("policy_forward") || err.contains(".hlo.txt"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn truncated_init_snapshot_rejected() {
+    let s = store();
+    let d = temp_dir("shortinit");
+    std::fs::copy(s.manifest.dir.join("manifest.json"), d.join("manifest.json")).unwrap();
+    std::fs::write(d.join("init_vgg11_mini_seed0.f32"), [0u8; 10]).unwrap();
+    let broken = ArtifactStore::open(&d).unwrap();
+    assert!(broken.manifest.load_init_params("vgg11_mini", 0).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn wire_rejects_corrupted_frames() {
+    let good = Msg::StateReport {
+        worker: 1,
+        cycle: 2,
+        state: StateVector(vec![0.5; 16]),
+        reward: 1.0,
+        sim_clock: 3.0,
+    }
+    .encode();
+    // Truncations at every prefix length must error, not panic.
+    for cut in 4..good.len() - 1 {
+        assert!(Msg::decode(&good[4..cut]).is_err(), "cut={cut}");
+    }
+    // Bit flips in the header region must error (version/tag corruption).
+    for i in 4..7 {
+        let mut bad = good.clone();
+        bad[i] ^= 0xFF;
+        assert!(Msg::decode(&bad[4..]).is_err(), "flip at {i}");
+    }
+}
+
+#[test]
+fn transport_peer_disconnect_is_an_error_not_a_hang() {
+    let (mut a, b) = channel_pair();
+    drop(b);
+    assert!(a.send(&Msg::Shutdown).is_err());
+    assert!(a.recv().is_err());
+}
+
+#[test]
+fn oversized_tcp_frame_rejected() {
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // Claim a 100 MiB frame.
+        s.write_all(&(100u32 << 20).to_le_bytes()).unwrap();
+        s.write_all(&[0u8; 64]).unwrap();
+    });
+    let mut t = dynamix::comm::TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+    let err = t.recv().unwrap_err().to_string();
+    assert!(err.contains("frame too large"), "{err}");
+    h.join().unwrap();
+}
+
+#[test]
+fn trainer_rejects_oversized_global_batch() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.n_workers = 4;
+    let mut t = BspTrainer::new(&cfg, store()).unwrap();
+    // Force a global batch beyond the bucket ladder.
+    let &max_bucket = t.runtime.manifest().buckets.last().unwrap();
+    t.batches = vec![max_bucket; 4];
+    let err = t.iterate().unwrap_err().to_string();
+    assert!(err.contains("exceeds largest bucket"), "{err}");
+}
+
+#[test]
+fn trainer_rejects_malformed_step_inputs() {
+    let s = store();
+    let mut rt = dynamix::trainer::ModelRuntime::new(
+        s,
+        "vgg11_mini",
+        dynamix::config::Optimizer::Sgd,
+        0.05,
+        0,
+    )
+    .unwrap();
+    let fd = rt.feature_dim;
+    // xs too short for the bucket.
+    assert!(rt.train_step(&vec![0.0; 31 * fd], &vec![0; 32], 32, 32).is_err());
+    // n_valid > bucket.
+    assert!(rt
+        .train_step(&vec![0.0; 32 * fd], &vec![0; 32], 64, 32)
+        .is_err());
+}
+
+#[test]
+fn spot_market_burst_load_never_stalls_clock() {
+    // Under the most hostile preset the BSP clock must strictly advance.
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.preset = ClusterPreset::SpotMarket;
+    cfg.cluster.n_workers = 6;
+    cfg.batch.initial = 64;
+    let mut t = BspTrainer::new(&cfg, store()).unwrap();
+    let mut prev = 0.0;
+    for _ in 0..10 {
+        let out = t.iterate().unwrap();
+        assert!(out.sim_clock > prev, "clock stalled");
+        assert!(out.sim_dt.is_finite() && out.sim_dt > 0.0);
+        prev = out.sim_clock;
+    }
+}
+
+#[test]
+fn agent_rejects_wrong_state_dim() {
+    let mut agent = dynamix::rl::agent::PpoAgent::new(
+        store(),
+        dynamix::config::RlConfig::default(),
+        0,
+    )
+    .unwrap();
+    let bad = vec![StateVector(vec![0.0; 7])];
+    assert!(agent.act(&bad, true).is_err());
+}
+
+#[test]
+fn agent_rejects_wrong_theta_len() {
+    let mut agent = dynamix::rl::agent::PpoAgent::new(
+        store(),
+        dynamix::config::RlConfig::default(),
+        0,
+    )
+    .unwrap();
+    assert!(agent.load_theta(&[0.0; 3]).is_err());
+}
+
+#[test]
+fn config_loading_rejects_garbage_files() {
+    let d = temp_dir("badcfg");
+    let p = d.join("cfg.json");
+    std::fs::write(&p, "not json").unwrap();
+    assert!(ExperimentConfig::load(&p).is_err());
+    std::fs::write(&p, r#"{"n_workers": 999}"#).unwrap();
+    assert!(ExperimentConfig::load(&p).is_err(), "validation must run on load");
+    std::fs::remove_dir_all(&d).ok();
+}

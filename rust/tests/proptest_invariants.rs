@@ -1,0 +1,342 @@
+//! Property-based tests over coordinator/substrate invariants.
+//!
+//! The offline build has no `proptest` crate, so this file carries a small
+//! seeded property harness (`check`): each property runs hundreds of
+//! randomized cases from a deterministic PRNG and reports the failing
+//! case's seed+inputs on violation. Same discipline, zero deps.
+
+use dynamix::comm::Msg;
+use dynamix::config::Topology;
+use dynamix::data::ShardSampler;
+use dynamix::metrics::ConvergenceDetector;
+use dynamix::netsim::NetworkSim;
+use dynamix::rl::action::{BatchRule, DELTAS, N_ACTIONS};
+use dynamix::rl::reward::{discounted_returns, RewardParams};
+use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
+use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
+use dynamix::sysmetrics::WindowSummary;
+use dynamix::util::json::Json;
+use dynamix::util::rng::Rng;
+
+/// Run `cases` randomized checks; panic with the case index on failure.
+fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xBEEF ^ case as u64);
+        f(&mut rng, case);
+    }
+    println!("property {name}: {cases} cases ok");
+}
+
+#[test]
+fn prop_batch_rule_closed_under_any_action_sequence() {
+    check("batch_rule_closed", 500, |rng, case| {
+        let rule = BatchRule { min: 32, max: 1024 };
+        let mut b = 32 + rng.below(993);
+        for step in 0..100 {
+            let a = rng.below(N_ACTIONS);
+            let cap = if rng.uniform() < 0.3 {
+                Some(32 + rng.below(1024))
+            } else {
+                None
+            };
+            b = rule.apply(b, a, cap);
+            assert!(
+                (rule.min..=rule.max).contains(&b),
+                "case {case} step {step}: batch {b} escaped [{},{}]",
+                rule.min,
+                rule.max
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_realized_delta_consistent_with_apply() {
+    check("realized_delta", 300, |rng, case| {
+        let rule = BatchRule { min: 32, max: 1024 };
+        let b = 32 + rng.below(993);
+        let a = rng.below(N_ACTIONS);
+        let applied = rule.apply(b, a, None);
+        let delta = rule.realized_delta(b, a, None);
+        assert_eq!(applied as i64, b as i64 + delta as i64, "case {case}");
+        // Realized delta never exceeds the commanded delta in magnitude.
+        assert!(delta.abs() <= DELTAS[a].abs(), "case {case}");
+    });
+}
+
+#[test]
+fn prop_shards_always_disjoint_and_exact() {
+    check("shards_disjoint", 60, |rng, case| {
+        let n_workers = 1 + rng.below(8);
+        let size = 64 + rng.below(1000);
+        let draw = size / n_workers;
+        if draw == 0 {
+            return;
+        }
+        let mut seen = vec![0u8; size];
+        for w in 0..n_workers {
+            let mut s = ShardSampler::new(w, n_workers, size, case as u64);
+            let mut idx = Vec::new();
+            s.next_indices(draw, &mut idx);
+            for &i in &idx {
+                seen[i as usize] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c <= 1),
+            "case {case}: overlap with n={n_workers} size={size}"
+        );
+    });
+}
+
+#[test]
+fn prop_sampler_epoch_is_permutation() {
+    check("sampler_permutation", 40, |rng, case| {
+        let size = 32 + rng.below(300);
+        let mut s = ShardSampler::new(0, 1, size, case as u64);
+        let mut idx = Vec::new();
+        s.next_indices(size, &mut idx);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        let expect: Vec<u64> = (0..size as u64).collect();
+        assert_eq!(sorted, expect, "case {case}");
+    });
+}
+
+#[test]
+fn prop_state_vector_always_bounded() {
+    check("state_bounded", 400, |rng, _case| {
+        let builder = StateBuilder {
+            use_network_features: rng.uniform() < 0.8,
+            use_grad_stats_features: rng.uniform() < 0.8,
+            iter_time_ref: rng.uniform_range(1e-4, 10.0),
+        };
+        let w = WindowSummary {
+            acc_mean: rng.uniform(),
+            acc_std: rng.uniform(),
+            acc_gain: rng.normal() * 100.0,
+            iter_time_mean: rng.exponential(0.5),
+            throughput_mean: rng.uniform_range(0.0, 100.0),
+            retransmissions: rng.exponential(1e-4),
+            cpu_time_ratio: rng.uniform_range(0.0, 64.0),
+            mem_util: rng.uniform_range(0.0, 2.0),
+            sigma_norm: rng.exponential(0.5),
+            sigma_norm2: rng.exponential(0.5),
+            loss_mean: rng.exponential(0.2),
+            iters: 5,
+        };
+        let g = GlobalState {
+            loss: rng.exponential(0.2),
+            eval_acc: rng.uniform(),
+            eval_trend: rng.normal(),
+            progress: rng.uniform(),
+            n_workers: 1 + rng.below(32),
+        };
+        let s = builder.build(&w, 32 + rng.below(993), &g);
+        assert_eq!(s.0.len(), dynamix::rl::state::STATE_DIM);
+        assert!(s.0.iter().all(|v| v.is_finite() && (-3.0..=3.0).contains(v)));
+    });
+}
+
+#[test]
+fn prop_reward_monotone_in_accuracy_and_time() {
+    check("reward_monotone", 200, |rng, case| {
+        let p = RewardParams {
+            adaptive: rng.uniform() < 0.5,
+            ..Default::default()
+        };
+        let base = WindowSummary {
+            acc_mean: rng.uniform_range(0.1, 0.8),
+            iter_time_mean: rng.uniform_range(0.01, 1.0),
+            sigma_norm: rng.uniform(),
+            sigma_norm2: rng.uniform(),
+            ..Default::default()
+        };
+        let batch = 32 + rng.below(993);
+        let r0 = p.compute(&base, batch);
+        let mut better_acc = base;
+        better_acc.acc_mean += 0.1;
+        assert!(p.compute(&better_acc, batch) > r0, "case {case}: acc up, reward down");
+        let mut slower = base;
+        slower.iter_time_mean *= 2.0;
+        assert!(p.compute(&slower, batch) < r0, "case {case}: slower, reward up");
+    });
+}
+
+#[test]
+fn prop_discounted_returns_bounds() {
+    check("returns_bounds", 200, |rng, case| {
+        let n = 1 + rng.below(50);
+        let rewards: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let gamma = rng.uniform();
+        let g = discounted_returns(&rewards, gamma);
+        assert_eq!(g.len(), n);
+        // |G_t| <= max|r| / (1-gamma) (geometric bound).
+        let rmax = rewards.iter().fold(0.0f64, |m, r| m.max(r.abs()));
+        let bound = rmax / (1.0 - gamma).max(1e-9) + 1e-9;
+        assert!(
+            g.iter().all(|x| x.abs() <= bound),
+            "case {case}: returns exceed geometric bound"
+        );
+        // Recurrence: G_t = r_t + gamma*G_{t+1}.
+        for i in 0..n - 1 {
+            assert!((g[i] - (rewards[i] + gamma * g[i + 1])).abs() < 1e-9, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_gae_zero_when_value_equals_return() {
+    // A perfect critic (values == discounted rewards-to-go) yields ~zero
+    // advantages for any gamma with lambda=1.
+    check("gae_perfect_critic", 100, |rng, case| {
+        let n = 2 + rng.below(30);
+        let rewards: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let gamma = rng.uniform_range(0.5, 1.0);
+        let returns = discounted_returns(&rewards, gamma);
+        let mut t = Trajectory::default();
+        for i in 0..n {
+            t.push(Transition {
+                state: StateVector(vec![0.0; 16]),
+                action: 0,
+                logp: -1.0,
+                value: returns[i] as f32,
+                reward: rewards[i],
+            });
+        }
+        let (adv, _) = t.gae(gamma, 1.0);
+        assert!(
+            adv.iter().all(|a| a.abs() < 1e-3),
+            "case {case}: nonzero advantage under perfect critic: {adv:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_update_batch_advantages_normalized() {
+    check("adv_normalized", 100, |rng, case| {
+        let n_trajs = 1 + rng.below(4);
+        let mut trajs = Vec::new();
+        for _ in 0..n_trajs {
+            let mut t = Trajectory::default();
+            for _ in 0..(2 + rng.below(20)) {
+                t.push(Transition {
+                    state: StateVector(vec![rng.normal() as f32; 16]),
+                    action: rng.below(5),
+                    logp: -1.6,
+                    value: rng.normal() as f32,
+                    reward: rng.normal(),
+                });
+            }
+            trajs.push(t);
+        }
+        let b = UpdateBatch::from_trajectories(&trajs, 0.99, 0.95);
+        if b.len() < 2 {
+            return;
+        }
+        let mean: f32 = b.advantages.iter().sum::<f32>() / b.len() as f32;
+        assert!(mean.abs() < 1e-3, "case {case}: adv mean {mean}");
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_random_messages() {
+    check("wire_roundtrip", 400, |rng, case| {
+        let msg = match rng.below(6) {
+            0 => Msg::Register { worker: rng.next_u64() as u32, max_batch: rng.next_u64() as u32 },
+            1 => Msg::Welcome {
+                worker: rng.next_u64() as u32,
+                k: rng.next_u64() as u32,
+                initial_batch: rng.next_u64() as u32,
+            },
+            2 => Msg::StateReport {
+                worker: rng.next_u64() as u32,
+                cycle: rng.next_u64() as u32,
+                state: StateVector((0..16).map(|_| rng.normal() as f32).collect()),
+                reward: rng.normal(),
+                sim_clock: rng.exponential(0.01),
+            },
+            3 => Msg::Action {
+                worker: rng.next_u64() as u32,
+                cycle: rng.next_u64() as u32,
+                delta: DELTAS[rng.below(5)],
+                new_batch: 32 + rng.below(993) as u32,
+            },
+            4 => Msg::Barrier { cycle: rng.next_u64() as u32 },
+            _ => Msg::Shutdown,
+        };
+        let frame = msg.encode();
+        let decoded = Msg::decode(&frame[4..]).unwrap();
+        assert_eq!(decoded, msg, "case {case}");
+    });
+}
+
+#[test]
+fn prop_netsim_time_positive_and_monotone_in_bytes() {
+    check("netsim_monotone", 100, |rng, case| {
+        let n = 2 + rng.below(31);
+        let profs = dynamix::cluster::profiles(dynamix::config::ClusterPreset::OscA100, n, 0);
+        let mut net = NetworkSim::new(case as u64);
+        net.congestion_vol = 0.0;
+        net.retx_per_gib = 0.0; // isolate the deterministic cost model
+        let small = rng.below(10 << 20) + 1;
+        let big = small * 4;
+        let topo = if rng.uniform() < 0.5 {
+            Topology::RingAllReduce
+        } else {
+            Topology::ParameterServer { servers: 1 + rng.below(4) }
+        };
+        let t_small = net.sync(topo, &profs, small).time_s;
+        let t_big = net.sync(topo, &profs, big).time_s;
+        assert!(t_small > 0.0 && t_big > t_small, "case {case}: {t_small} !< {t_big}");
+    });
+}
+
+#[test]
+fn prop_convergence_detector_latch_is_stable() {
+    check("detector_latch", 200, |rng, case| {
+        let target = rng.uniform_range(0.3, 0.9);
+        let mut d = ConvergenceDetector::new(target, 1 + rng.below(3));
+        let mut latched_time = None;
+        for i in 0..50 {
+            let acc = rng.uniform();
+            let t = i as f64;
+            if let Some(ct) = d.observe(acc, t) {
+                if let Some(prev) = latched_time {
+                    assert_eq!(prev, ct, "case {case}: latch moved");
+                }
+                latched_time = Some(ct);
+            }
+        }
+        if let Some(ct) = latched_time {
+            assert!(d.converged());
+            assert_eq!(d.time(), Some(ct));
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"x\"\n{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check("json_roundtrip", 300, |rng, case| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "case {case}: {text}");
+    });
+}
