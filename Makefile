@@ -1,0 +1,34 @@
+# DYNAMIX build entrypoints.
+#
+# The Rust crate is self-contained with the default pure-Rust backend:
+#   make build test          # no Python, no artifacts needed
+#
+# The XLA/PJRT backend additionally needs AOT artifacts + the `xla` crate:
+#   make artifacts           # python/compile/aot.py -> artifacts/
+#   (then enable the `backend-xla` feature; see rust/Cargo.toml)
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= $(CURDIR)/artifacts
+
+.PHONY: build test bench artifacts artifacts-smoke clean-artifacts
+
+build:
+	cd rust && $(CARGO) build --release
+
+test:
+	cd rust && $(CARGO) test -q
+
+bench:
+	cd rust && $(CARGO) bench
+
+# Full artifact set: every (model, optimizer, bucket) combo (§VI grid).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR)
+
+# Smoke subset: vgg11_mini/sgd at three buckets (fast CI for the xla path).
+artifacts-smoke:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --subset smoke
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

@@ -13,15 +13,14 @@
 use dynamix::config::presets;
 use dynamix::coordinator::Coordinator;
 use dynamix::metrics::RunRecord;
-use dynamix::runtime::ArtifactStore;
-use std::sync::Arc;
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let episodes: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
     let cycles: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(60);
 
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     let mut cfg = presets::by_name("vgg11-sgd")?;
     cfg.steps_per_episode = 40;
     cfg.train.max_steps = cfg.steps_per_episode * cfg.rl.k;

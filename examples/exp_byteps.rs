@@ -1,11 +1,11 @@
 //! Regenerates paper §VI-G (BytePS parameter-server + heterogeneous GPUs).
 //! Usage: cargo run --release --example exp_byteps -- [quick|full]
-use dynamix::{config::Scale, harness, runtime::ArtifactStore};
-use std::sync::Arc;
+use dynamix::{config::Scale, harness};
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     harness::byteps_integration(store, scale)?;
     Ok(())
 }

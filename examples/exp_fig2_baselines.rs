@@ -1,11 +1,11 @@
 //! Regenerates paper Fig. 2 (static-batch baseline trajectories).
 //! Usage: cargo run --release --example exp_fig2_baselines -- [quick|full]
-use dynamix::{config::Scale, harness, runtime::ArtifactStore};
-use std::sync::Arc;
+use dynamix::{config::Scale, harness};
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     harness::fig2_baselines(store, scale)?;
     Ok(())
 }

@@ -1,11 +1,11 @@
 //! Regenerates paper Figs. 4+5 (inference trajectories + batch adaptation).
 //! Usage: cargo run --release --example exp_fig4_fig5_inference -- [quick|full] [preset]
-use dynamix::{config::Scale, harness, runtime::ArtifactStore};
-use std::sync::Arc;
+use dynamix::{config::Scale, harness};
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     match std::env::args().nth(2) {
         Some(preset) => {
             harness::fig4_fig5_inference(store, &preset, scale)?;

@@ -1,11 +1,11 @@
 //! Regenerates paper §VI-H (decision-making overhead analysis).
 //! Usage: cargo run --release --example exp_overhead -- [cycles]
-use dynamix::{harness, runtime::ArtifactStore};
-use std::sync::Arc;
+use dynamix::harness;
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let cycles: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(10);
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     harness::overhead_analysis(store, cycles)?;
     Ok(())
 }

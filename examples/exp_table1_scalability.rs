@@ -1,11 +1,11 @@
 //! Regenerates paper Table I (scalability at 8/16/32 nodes).
 //! Usage: cargo run --release --example exp_table1_scalability -- [quick|full]
-use dynamix::{config::Scale, harness, runtime::ArtifactStore};
-use std::sync::Arc;
+use dynamix::{config::Scale, harness};
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     harness::table1_scalability(store, scale)?;
     Ok(())
 }

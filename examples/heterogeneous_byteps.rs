@@ -11,11 +11,10 @@
 use dynamix::config::presets;
 use dynamix::coordinator::Coordinator;
 use dynamix::metrics::RunRecord;
-use dynamix::runtime::ArtifactStore;
-use std::sync::Arc;
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     let cfg = presets::by_name("byteps-hetero")?;
     println!(
         "cluster: {} workers (hetero: 4x RTX3090-like + 4x T4-like), topology={}",

@@ -2,22 +2,22 @@
 //!
 //! Builds a 4-worker simulated cluster training `vgg11_mini` (SGD) on the
 //! synthetic CIFAR-10 stand-in, runs a few PPO decision cycles, and prints
-//! what the arbitrator decides. Requires `make artifacts` first.
+//! what the arbitrator decides. Runs on the native backend out of the box
+//! (`make artifacts` + the backend-xla feature switch to the PJRT path).
 //!
 //!     cargo run --release --example quickstart
 
 use dynamix::config::ExperimentConfig;
 use dynamix::coordinator::Coordinator;
 use dynamix::metrics::RunRecord;
-use dynamix::runtime::ArtifactStore;
-use std::sync::Arc;
+use dynamix::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     println!(
-        "loaded manifest: {} artifacts, models: {:?}",
-        store.manifest.artifacts.len(),
-        store.manifest.models.keys().collect::<Vec<_>>()
+        "backend: {}, models: {:?}",
+        store.name(),
+        store.schema().models.keys().collect::<Vec<_>>()
     );
 
     let mut cfg = ExperimentConfig::default();

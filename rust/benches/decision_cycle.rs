@@ -9,13 +9,12 @@ use dynamix::config::RlConfig;
 use dynamix::rl::agent::PpoAgent;
 use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
 use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
-use dynamix::runtime::ArtifactStore;
+use dynamix::runtime::default_backend;
 use dynamix::sysmetrics::WindowSummary;
 use dynamix::util::bench::bench;
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
 
     println!("== state vector assembly ==");
     let builder = StateBuilder::default();

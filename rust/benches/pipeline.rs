@@ -4,13 +4,12 @@
 //!     cargo bench --bench pipeline
 
 use dynamix::config::ExperimentConfig;
-use dynamix::runtime::ArtifactStore;
+use dynamix::runtime::default_backend;
 use dynamix::trainer::BspTrainer;
 use dynamix::util::bench::{bench, throughput};
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let store = Arc::new(ArtifactStore::open_default()?);
+    let store = default_backend()?;
     for (workers, batch) in [(4usize, 64usize), (16, 64), (16, 256)] {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.n_workers = workers;

@@ -5,15 +5,14 @@
 //!
 //!     cargo bench --bench train_step
 
-use dynamix::runtime::ArtifactStore;
+use dynamix::runtime::default_backend;
 use dynamix::trainer::ModelRuntime;
 use dynamix::util::bench::{bench, throughput};
 use dynamix::util::rng::Rng;
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let store = Arc::new(ArtifactStore::open_default()?);
-    let fd = store.manifest.feature_dim;
+    let store = default_backend()?;
+    let fd = store.schema().feature_dim;
     let mut rng = Rng::new(0);
 
     println!("== train_step cost across buckets (vgg11_mini / sgd) ==");

@@ -15,10 +15,9 @@
 
 use crate::config::ExperimentConfig;
 use crate::metrics::{mean_std_usize, ConvergenceDetector, RunRecord, TracePoint};
-use crate::runtime::ArtifactStore;
+use crate::runtime::Backend;
 use crate::sysmetrics::WindowSummary;
 use crate::trainer::BspTrainer;
-use std::sync::Arc;
 
 /// A non-RL batch-size controller, consulted every k iterations.
 pub trait BatchPolicy {
@@ -137,12 +136,12 @@ pub struct BaselineSummary {
 /// DYNAMIX inference runner (so Fig. 2/4 overlays are apples-to-apples).
 pub fn run_baseline(
     cfg: &ExperimentConfig,
-    store: Arc<ArtifactStore>,
+    backend: Backend,
     policy: &mut dyn BatchPolicy,
     max_cycles: usize,
     record: &mut RunRecord,
 ) -> anyhow::Result<BaselineSummary> {
-    let mut trainer = BspTrainer::new(cfg, store)?;
+    let mut trainer = BspTrainer::new(cfg, backend)?;
     trainer.calibrate()?;
     trainer.reset_episode(cfg.train.seed, cfg.batch.initial)?;
     // Apply the policy's initial choice before the first iteration.
@@ -210,8 +209,8 @@ mod tests {
         c
     }
 
-    fn store() -> Arc<ArtifactStore> {
-        Arc::new(ArtifactStore::open_default().unwrap())
+    fn backend() -> Backend {
+        crate::runtime::native_backend()
     }
 
     #[test]
@@ -264,7 +263,7 @@ mod tests {
         let c = cfg();
         let mut record = RunRecord::new("static-64");
         let mut p = StaticPolicy(64);
-        let s = run_baseline(&c, store(), &mut p, 4, &mut record).unwrap();
+        let s = run_baseline(&c, backend(), &mut p, 4, &mut record).unwrap();
         assert_eq!(s.policy, "static-64");
         assert_eq!(record.points.len(), 4);
         assert!(s.total_iters == 8, "4 cycles x k=2: {}", s.total_iters);

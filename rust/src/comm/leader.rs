@@ -20,11 +20,10 @@ use crate::rl::action::BatchRule;
 use crate::rl::agent::PpoAgent;
 use crate::rl::reward::RewardParams;
 use crate::rl::state::{GlobalState, StateBuilder};
-use crate::runtime::ArtifactStore;
+use crate::runtime::default_backend;
 use crate::sysmetrics::{SysSample, WindowAggregator};
 use crate::trainer::ModelRuntime;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
 
 /// Run the leader: accept the preset's worker count, drive
 /// `steps_per_episode` decision cycles, broadcast shutdown.
@@ -45,8 +44,8 @@ pub fn serve_n(
     let mut cfg = presets::scaled(presets::by_name(preset)?, scale);
     cfg.cluster.n_workers = n_workers;
     cfg.steps_per_episode = cycles;
-    let store = Arc::new(ArtifactStore::open_default()?);
-    let mut agent = PpoAgent::new(store, cfg.rl.clone(), cfg.train.seed)?;
+    let backend = default_backend()?;
+    let mut agent = PpoAgent::new(backend, cfg.rl.clone(), cfg.train.seed)?;
     let rule = BatchRule {
         min: cfg.batch.min,
         max: cfg.batch.max,
@@ -118,8 +117,8 @@ pub fn serve_n(
 /// a local replica, report state, apply actions, exit on Shutdown.
 pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow::Result<()> {
     let cfg = presets::scaled(presets::by_name(preset)?, scale);
-    let store = Arc::new(ArtifactStore::open_default()?);
-    let info = store.manifest.model(&cfg.train.model)?.clone();
+    let backend = default_backend()?;
+    let info = backend.schema().model(&cfg.train.model)?.clone();
     let dataset = crate::data::by_name(&info.dataset, info.feature_dim, cfg.train.seed)?;
     let mut sampler = crate::data::ShardSampler::new(
         worker_id as usize % cfg.cluster.n_workers,
@@ -128,7 +127,7 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
         cfg.train.seed,
     );
     let mut runtime = ModelRuntime::new(
-        store.clone(),
+        backend.clone(),
         &cfg.train.model,
         cfg.train.optimizer,
         cfg.train.lr,
@@ -154,7 +153,7 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
     loop {
         // k real local training iterations at the current batch size.
         for _ in 0..k {
-            let bucket = store.manifest.bucket_for(batch)?;
+            let bucket = backend.schema().bucket_for(batch)?;
             let mut xs = vec![0.0f32; bucket * info.feature_dim];
             let mut ys = vec![0i32; bucket];
             sampler.next_indices(batch, &mut idx);

@@ -26,9 +26,8 @@ use crate::rl::agent::{PpoAgent, UpdateStats};
 use crate::rl::reward::RewardParams;
 use crate::rl::state::{GlobalState, StateBuilder, StateVector};
 use crate::rl::trajectory::{Trajectory, Transition, UpdateBatch};
-use crate::runtime::ArtifactStore;
+use crate::runtime::Backend;
 use crate::trainer::BspTrainer;
-use std::sync::Arc;
 
 /// Outcome of one k-iteration decision cycle (pre-action snapshot).
 #[derive(Clone, Debug)]
@@ -79,11 +78,11 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(cfg: ExperimentConfig, store: Arc<ArtifactStore>) -> anyhow::Result<Self> {
+    pub fn new(cfg: ExperimentConfig, backend: Backend) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let mut trainer = BspTrainer::new(&cfg, store.clone())?;
+        let mut trainer = BspTrainer::new(&cfg, backend.clone())?;
         trainer.calibrate()?;
-        let agent = PpoAgent::new(store, cfg.rl.clone(), cfg.train.seed)?;
+        let agent = PpoAgent::new(backend, cfg.rl.clone(), cfg.train.seed)?;
         let state_builder = StateBuilder {
             use_network_features: cfg.rl.use_network_features,
             use_grad_stats_features: cfg.rl.use_grad_stats_features,
@@ -294,13 +293,13 @@ mod tests {
         c
     }
 
-    fn store() -> Arc<ArtifactStore> {
-        Arc::new(ArtifactStore::open_default().unwrap())
+    fn backend() -> Backend {
+        crate::runtime::native_backend()
     }
 
     #[test]
     fn train_rl_produces_episode_results() {
-        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let mut c = Coordinator::new(cfg(), backend()).unwrap();
         let results = c.train_rl(2).unwrap();
         assert_eq!(results.len(), 2);
         for r in &results {
@@ -314,7 +313,7 @@ mod tests {
 
     #[test]
     fn inference_records_trace_and_respects_constraints() {
-        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let mut c = Coordinator::new(cfg(), backend()).unwrap();
         let mut record = RunRecord::new("test");
         let summary = c.run_inference(5, &mut record).unwrap();
         assert!(!record.points.is_empty());
@@ -327,7 +326,7 @@ mod tests {
 
     #[test]
     fn episodes_reset_cleanly() {
-        let mut c = Coordinator::new(cfg(), store()).unwrap();
+        let mut c = Coordinator::new(cfg(), backend()).unwrap();
         let r1 = c.train_rl(1).unwrap();
         let r2 = c.train_rl(1).unwrap();
         // Fresh episode each time: sim time restarts rather than

@@ -18,10 +18,9 @@ use crate::baselines::{run_baseline, StaticPolicy};
 use crate::config::{presets, ExperimentConfig, Scale};
 use crate::coordinator::Coordinator;
 use crate::metrics::RunRecord;
-use crate::runtime::ArtifactStore;
+use crate::runtime::Backend;
 use crate::util::json::Json;
 use std::path::PathBuf;
-use std::sync::Arc;
 
 /// Where run records land (`$DYNAMIX_RUNS` or `<repo>/runs`).
 pub fn runs_dir() -> PathBuf {
@@ -60,7 +59,7 @@ fn cycle_budget(cfg: &ExperimentConfig, scale: Scale) -> usize {
 /// Paper Fig. 2: convergence trajectories of BSP training under fixed
 /// batch sizes. Sweeps the paper's (model, optimizer, batch) grid, several
 /// seeds each; records every trajectory and the summary grid.
-pub fn fig2_baselines(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+pub fn fig2_baselines(backend: Backend, scale: Scale) -> anyhow::Result<Json> {
     // (panel, preset, batch sizes) following Fig. 2a-2h.
     let grid: Vec<(&str, &str, Vec<usize>)> = vec![
         ("vgg11-sgd", "vgg11-sgd", vec![32, 64]),
@@ -82,7 +81,7 @@ pub fn fig2_baselines(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result
                 let mut record = RunRecord::new(&format!("fig2-{panel}-b{b}-s{seed}"));
                 let mut policy = StaticPolicy(b);
                 let cycles = cycle_budget(&cfg, scale);
-                let s = run_baseline(&cfg, store.clone(), &mut policy, cycles, &mut record)?;
+                let s = run_baseline(&cfg, backend.clone(), &mut policy, cycles, &mut record)?;
                 record
                     .save_json(&runs_dir().join("fig2").join(format!("{}.json", record.name)))?;
                 println!(
@@ -113,13 +112,13 @@ pub fn fig2_baselines(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result
 /// Paper Fig. 3: train the PPO agent; record per-episode mean/median
 /// cumulative rewards; snapshot the trained policy for Figs. 4-6.
 pub fn fig3_rl_training(
-    store: Arc<ArtifactStore>,
+    backend: Backend,
     preset: &str,
     scale: Scale,
 ) -> anyhow::Result<Json> {
     let cfg = presets::scaled(presets::by_name(preset)?, scale);
     let episodes = cfg.episodes;
-    let mut coord = Coordinator::new(cfg, store)?;
+    let mut coord = Coordinator::new(cfg, backend)?;
     let results = coord.train_rl(episodes)?;
     let rows: Vec<Json> = results
         .iter()
@@ -161,7 +160,7 @@ pub fn fig3_rl_training(
 /// the two reference static baselines, and record the batch-size
 /// adaptation trace (mean ± std across workers).
 pub fn fig4_fig5_inference(
-    store: Arc<ArtifactStore>,
+    backend: Backend,
     preset: &str,
     scale: Scale,
 ) -> anyhow::Result<Json> {
@@ -169,7 +168,7 @@ pub fn fig4_fig5_inference(
     let cycles = cycle_budget(&cfg, scale);
 
     // DYNAMIX run (uses the fig3 policy snapshot; trains briefly if absent).
-    let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+    let mut coord = Coordinator::new(cfg.clone(), backend.clone())?;
     let ppath = policy_path(preset);
     if ppath.exists() {
         coord.agent.load_theta_file(&ppath)?;
@@ -188,7 +187,7 @@ pub fn fig4_fig5_inference(
         bcfg.batch.initial = b;
         let mut record = RunRecord::new(&format!("fig4-{preset}-static{b}"));
         let mut policy = StaticPolicy(b);
-        let s = run_baseline(&bcfg, store.clone(), &mut policy, cycles, &mut record)?;
+        let s = run_baseline(&bcfg, backend.clone(), &mut policy, cycles, &mut record)?;
         record.save_json(&runs_dir().join("fig4").join(format!("{}.json", record.name)))?;
         baseline_rows.push(crate::jobj! {
             "batch" => b,
@@ -240,7 +239,7 @@ pub fn fig4_fig5_inference(
 
 /// Paper Table I: VGG16/CIFAR-10/SGD at 8/16/32 nodes on the OSC profile.
 /// For each scale: best static config from a batch sweep vs DYNAMIX.
-pub fn table1_scalability(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+pub fn table1_scalability(backend: Backend, scale: Scale) -> anyhow::Result<Json> {
     let mut rows = Vec::new();
     for preset in ["scal-8", "scal-16", "scal-32"] {
         let cfg = presets::scaled(presets::by_name(preset)?, scale);
@@ -254,7 +253,7 @@ pub fn table1_scalability(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Re
             bcfg.batch.initial = b;
             let mut record = RunRecord::new(&format!("table1-{preset}-static{b}"));
             let mut pol = StaticPolicy(b);
-            let s = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut record)?;
+            let s = run_baseline(&bcfg, backend.clone(), &mut pol, cycles, &mut record)?;
             let time = s.convergence_time.unwrap_or(s.total_sim_time);
             println!(
                 "[table1:{preset}] static-{b}: acc={:.3} time={:.0}s",
@@ -274,7 +273,7 @@ pub fn table1_scalability(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Re
         let (best_b, static_acc, static_time) = best.unwrap();
 
         // DYNAMIX: reuse the vgg16 transfer-source policy if present.
-        let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+        let mut coord = Coordinator::new(cfg.clone(), backend.clone())?;
         let ppath = policy_path("transfer-vgg16-src");
         if ppath.exists() {
             coord.agent.load_theta_file(&ppath)?;
@@ -311,7 +310,7 @@ pub fn table1_scalability(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Re
 /// Paper Fig. 6: train on the source architecture, deploy unchanged on the
 /// deeper family member; compare with the target's tuned static baseline.
 pub fn fig6_transfer(
-    store: Arc<ArtifactStore>,
+    backend: Backend,
     src_preset: &str,
     dst_preset: &str,
     scale: Scale,
@@ -321,7 +320,7 @@ pub fn fig6_transfer(
     let ppath = policy_path(src_preset);
     if !ppath.exists() {
         println!("[fig6] training source policy {src_preset}");
-        let mut coord = Coordinator::new(src_cfg.clone(), store.clone())?;
+        let mut coord = Coordinator::new(src_cfg.clone(), backend.clone())?;
         coord.train_rl(src_cfg.episodes)?;
         std::fs::create_dir_all(ppath.parent().unwrap())?;
         coord.agent.save_theta(&ppath)?;
@@ -330,7 +329,7 @@ pub fn fig6_transfer(
     // 2. transferred inference on the destination model.
     let dst_cfg = presets::scaled(presets::by_name(dst_preset)?, scale);
     let cycles = cycle_budget(&dst_cfg, scale);
-    let mut coord = Coordinator::new(dst_cfg.clone(), store.clone())?;
+    let mut coord = Coordinator::new(dst_cfg.clone(), backend.clone())?;
     coord.agent.load_theta_file(&ppath)?;
     let mut record = RunRecord::new(&format!("fig6-{src_preset}-to-{dst_preset}"));
     let s = coord.run_inference(cycles, &mut record)?;
@@ -344,7 +343,7 @@ pub fn fig6_transfer(
         bcfg.batch.initial = b;
         let mut rec = RunRecord::new(&format!("fig6-{dst_preset}-static{b}"));
         let mut pol = StaticPolicy(b);
-        let bs = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut rec)?;
+        let bs = run_baseline(&bcfg, backend.clone(), &mut pol, cycles, &mut rec)?;
         let t = bs.convergence_time.unwrap_or(bs.total_sim_time);
         let better = match best {
             None => true,
@@ -382,7 +381,7 @@ pub fn fig6_transfer(
 
 /// Paper §VI-G: heterogeneous 8-GPU cluster (4 RTX3090-like + 4 T4-like)
 /// under a parameter-server topology; static-64 vs DYNAMIX.
-pub fn byteps_integration(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Result<Json> {
+pub fn byteps_integration(backend: Backend, scale: Scale) -> anyhow::Result<Json> {
     let cfg = presets::scaled(presets::by_name("byteps-hetero")?, scale);
     let cycles = cycle_budget(&cfg, scale);
 
@@ -390,11 +389,11 @@ pub fn byteps_integration(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Re
     bcfg.batch.initial = 64;
     let mut record = RunRecord::new("byteps-static64");
     let mut pol = StaticPolicy(64);
-    let base = run_baseline(&bcfg, store.clone(), &mut pol, cycles, &mut record)?;
+    let base = run_baseline(&bcfg, backend.clone(), &mut pol, cycles, &mut record)?;
     record.save_json(&runs_dir().join("byteps").join("static64.json"))?;
     let base_time = base.convergence_time.unwrap_or(base.total_sim_time);
 
-    let mut coord = Coordinator::new(cfg.clone(), store.clone())?;
+    let mut coord = Coordinator::new(cfg.clone(), backend.clone())?;
     let ppath = policy_path("byteps-hetero");
     if ppath.exists() {
         coord.agent.load_theta_file(&ppath)?;
@@ -435,11 +434,11 @@ pub fn byteps_integration(store: Arc<ArtifactStore>, scale: Scale) -> anyhow::Re
 /// Paper §VI-H: decision-making overhead (state aggregation + policy
 /// inference + action distribution) as a fraction of iteration time.
 /// Both sides are REAL wall-clock on this host.
-pub fn overhead_analysis(store: Arc<ArtifactStore>, cycles: usize) -> anyhow::Result<Json> {
+pub fn overhead_analysis(backend: Backend, cycles: usize) -> anyhow::Result<Json> {
     let mut cfg = presets::by_name("vgg11-sgd")?;
     cfg.cluster.n_workers = 16;
     cfg.batch.initial = 128;
-    let mut coord = Coordinator::new(cfg, store)?;
+    let mut coord = Coordinator::new(cfg, backend)?;
     let mut record = RunRecord::new("overhead");
     coord.run_inference(cycles, &mut record)?;
 

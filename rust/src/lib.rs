@@ -1,10 +1,17 @@
 //! DYNAMIX: RL-based adaptive batch size optimization for distributed ML.
 //!
-//! Reproduction of Dai, He & Wang (cs.LG 2025). Three-layer stack:
-//! this Rust crate is the L3 coordinator (RL arbitrator + BSP trainer +
-//! cluster/network simulators); L2 is a JAX model zoo AOT-lowered to HLO
-//! text; L1 is a set of Pallas kernels inside that HLO. Python never runs
-//! at runtime — `runtime` loads `artifacts/*.hlo.txt` via PJRT.
+//! Reproduction of Dai, He & Wang (cs.LG 2025). Three-layer stack: this
+//! Rust crate is the L3 coordinator (RL arbitrator + BSP trainer +
+//! cluster/network simulators) over a pluggable compute seam
+//! ([`runtime::ComputeBackend`]). The default **native** backend runs the
+//! L1/L2 math (MLP zoo, PPO policy, grad stats) in pure Rust — no Python,
+//! no artifacts. The optional **xla** backend (`backend-xla` feature)
+//! executes the original JAX/Pallas AOT HLO artifacts via PJRT; Python is
+//! compile-time only either way.
+
+// Style: this crate favours explicit index loops in the numeric kernels
+// and >7-arg step signatures that mirror the AOT artifact I/O contract.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod util;
 pub mod config;

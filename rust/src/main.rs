@@ -14,9 +14,8 @@
 
 use dynamix::config::{presets, Scale};
 use dynamix::harness;
-use dynamix::runtime::ArtifactStore;
+use dynamix::runtime::{default_backend, Backend};
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
 /// Minimal `--key value` argument parser.
 struct Args {
@@ -73,6 +72,9 @@ COMMANDS:
 PRESETS: vgg11-sgd vgg11-adam resnet34-sgd scal-{8,16,32}
          transfer-{vgg16-src,vgg19-dst,resnet34-src,resnet50-dst}
          byteps-hetero ablate-*
+
+BACKEND: DYNAMIX_BACKEND=native|xla|auto (default auto: xla when built with
+         the backend-xla feature and `make artifacts` ran, else native)
 ";
 
 fn main() {
@@ -91,21 +93,21 @@ fn run() -> anyhow::Result<()> {
         }
         "info" => info(),
         "train-rl" => {
-            let store = Arc::new(ArtifactStore::open_default()?);
+            let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
             harness::fig3_rl_training(store, &preset, scale)?;
             Ok(())
         }
         "infer" => {
-            let store = Arc::new(ArtifactStore::open_default()?);
+            let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
             harness::fig4_fig5_inference(store, &preset, scale)?;
             Ok(())
         }
         "baseline" => {
-            let store = Arc::new(ArtifactStore::open_default()?);
+            let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
             let batch: usize = args.get_or("batch", "64").parse()?;
@@ -126,7 +128,7 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "exp" => {
-            let store = Arc::new(ArtifactStore::open_default()?);
+            let store = default_backend()?;
             let which = args.get_or("which", "all");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
             run_experiments(store, &which, scale)
@@ -149,14 +151,15 @@ fn run() -> anyhow::Result<()> {
 }
 
 fn info() -> anyhow::Result<()> {
-    let store = ArtifactStore::open_default()?;
-    let m = &store.manifest;
-    println!("DYNAMIX artifact store: {:?}", m.dir);
+    let backend = default_backend()?;
+    let m = backend.schema();
+    println!("DYNAMIX compute backend: {}", backend.name());
     println!(
         "  state_dim={} n_actions={} max_workers={} ppo_minibatch={}",
         m.state_dim, m.n_actions, m.max_workers, m.ppo_minibatch
     );
     println!("  buckets: {:?}", m.buckets);
+    println!("  policy params: {}", m.policy_param_count);
     println!("  models:");
     for (name, info) in &m.models {
         println!(
@@ -164,19 +167,11 @@ fn info() -> anyhow::Result<()> {
             info.family, info.depth, info.param_count, info.dataset
         );
     }
-    println!("  artifacts: {}", m.artifacts.len());
-    let kinds: BTreeMap<&str, usize> =
-        m.artifacts.values().fold(Default::default(), |mut acc, a| {
-            *acc.entry(a.kind.as_str()).or_default() += 1;
-            acc
-        });
-    for (k, n) in kinds {
-        println!("    {k}: {n}");
-    }
+    println!("  (select with DYNAMIX_BACKEND=native|xla|auto)");
     Ok(())
 }
 
-fn run_experiments(store: Arc<ArtifactStore>, which: &str, scale: Scale) -> anyhow::Result<()> {
+fn run_experiments(store: Backend, which: &str, scale: Scale) -> anyhow::Result<()> {
     let all = which == "all";
     if all || which == "fig2" {
         harness::fig2_baselines(store.clone(), scale)?;

@@ -1,17 +1,16 @@
 //! The PPO arbitrator driver (paper §IV-A, Algorithm 1).
 //!
-//! Holds the policy parameters as literals and drives the two AOT policy
-//! artifacts: `policy_forward` (one call scores all <=32 workers per
-//! decision cycle) and `policy_update` / `policy_update_simple`
-//! (minibatched PPO epochs over the episode buffer). Everything here is
-//! Rust + PJRT — Python is compile-time only.
+//! Holds the flat policy parameters + Adam state and drives the backend's
+//! two policy entry points: `policy_forward` (one call scores all <=32
+//! workers per decision cycle) and `policy_update` /
+//! `policy_update_simple` (minibatched PPO epochs over the episode
+//! buffer). Backend-agnostic: the same driver runs on the native pure-Rust
+//! kernels or the AOT PJRT artifacts.
 
 use crate::config::{PpoVariant, RlConfig};
 use crate::rl::trajectory::UpdateBatch;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar1, ArtifactStore};
+use crate::runtime::{Backend, OptState, PpoHyper, PpoMinibatch};
 use crate::util::rng::Rng;
-use std::sync::Arc;
-use xla::Literal;
 
 /// One worker's sampled decision.
 #[derive(Clone, Copy, Debug)]
@@ -21,7 +20,8 @@ pub struct ActionSample {
     pub value: f32,
 }
 
-/// Aggregate statistics of one policy update.
+/// Aggregate statistics of one policy update: MEANS over every minibatch
+/// step of the update (not the last minibatch — see `update`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct UpdateStats {
     pub loss: f32,
@@ -32,13 +32,10 @@ pub struct UpdateStats {
     pub minibatches: usize,
 }
 
-/// PPO agent over the AOT policy artifacts.
+/// PPO agent over a compute backend's policy kernels.
 pub struct PpoAgent {
-    store: Arc<ArtifactStore>,
-    theta: Literal,
-    m: Literal,
-    v: Literal,
-    step: Literal,
+    backend: Backend,
+    opt: OptState,
     pub cfg: RlConfig,
     rng: Rng,
     max_workers: usize,
@@ -50,23 +47,20 @@ pub struct PpoAgent {
 }
 
 impl PpoAgent {
-    pub fn new(store: Arc<ArtifactStore>, cfg: RlConfig, seed: u64) -> anyhow::Result<Self> {
-        let man = &store.manifest;
-        let pc = man.policy_param_count;
-        let theta = lit_f32(&man.load_init_policy(seed)?, &[pc as i64])?;
-        let zeros = vec![0.0f32; pc];
+    pub fn new(backend: Backend, cfg: RlConfig, seed: u64) -> anyhow::Result<Self> {
+        let s = backend.schema();
+        let (max_workers, state_dim, n_actions, minibatch) =
+            (s.max_workers, s.state_dim, s.n_actions, s.ppo_minibatch);
+        let theta = backend.init_policy(seed)?;
         Ok(PpoAgent {
-            theta,
-            m: lit_f32(&zeros, &[pc as i64])?,
-            v: lit_f32(&zeros, &[pc as i64])?,
-            step: lit_scalar1(0.0),
+            opt: OptState::adam(theta),
             cfg,
             rng: Rng::new(seed ^ 0xA6E7),
-            max_workers: man.max_workers,
-            state_dim: man.state_dim,
-            n_actions: man.n_actions,
-            minibatch: man.ppo_minibatch,
-            store,
+            max_workers,
+            state_dim,
+            n_actions,
+            minibatch,
+            backend,
             inference_seconds: Vec::new(),
         })
     }
@@ -74,19 +68,15 @@ impl PpoAgent {
     /// Restore policy parameters from a raw f32 snapshot (policy transfer,
     /// §VI-F) and reset optimizer state.
     pub fn load_theta(&mut self, theta: &[f32]) -> anyhow::Result<()> {
-        let pc = self.store.manifest.policy_param_count;
+        let pc = self.backend.schema().policy_param_count;
         anyhow::ensure!(theta.len() == pc, "theta len {} != {pc}", theta.len());
-        self.theta = lit_f32(theta, &[pc as i64])?;
-        let zeros = vec![0.0f32; pc];
-        self.m = lit_f32(&zeros, &[pc as i64])?;
-        self.v = lit_f32(&zeros, &[pc as i64])?;
-        self.step = lit_scalar1(0.0);
+        self.opt = OptState::adam(theta.to_vec());
         Ok(())
     }
 
     /// Snapshot current policy parameters.
     pub fn theta_snapshot(&self) -> anyhow::Result<Vec<f32>> {
-        Ok(self.theta.to_vec::<f32>()?)
+        Ok(self.opt.params.clone())
     }
 
     pub fn save_theta(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -115,7 +105,7 @@ impl PpoAgent {
     ) -> anyhow::Result<Vec<ActionSample>> {
         anyhow::ensure!(
             states.len() <= self.max_workers,
-            "{} workers > artifact max {}",
+            "{} workers > backend max {}",
             states.len(),
             self.max_workers
         );
@@ -125,10 +115,8 @@ impl PpoAgent {
             anyhow::ensure!(s.0.len() == self.state_dim, "bad state dim");
             flat[w * self.state_dim..(w + 1) * self.state_dim].copy_from_slice(&s.0);
         }
-        let states_lit = lit_f32(&flat, &[self.max_workers as i64, self.state_dim as i64])?;
-        let out = self.store.run("policy_forward", &[&self.theta, &states_lit])?;
-        let logp = out.vec_f32(0)?;
-        let values = out.vec_f32(1)?;
+        let out = self.backend.policy_forward(&self.opt.params, &flat)?;
+        let (logp, values) = (out.logp, out.values);
 
         let mut samples = Vec::with_capacity(states.len());
         for w in 0..states.len() {
@@ -154,32 +142,40 @@ impl PpoAgent {
     }
 
     /// Run `cfg.update_epochs` PPO epochs over the batch in shuffled
-    /// minibatches of the artifact's compiled size (padded + masked).
+    /// minibatches of the backend's compiled size (padded + masked).
+    /// Reported stats are MEANS across every minibatch step, so Fig. 3
+    /// reward curves and the overhead study see the whole update, not
+    /// whichever minibatch happened to run last.
     pub fn update(&mut self, batch: &UpdateBatch) -> anyhow::Result<UpdateStats> {
         if batch.is_empty() {
             return Ok(UpdateStats::default());
         }
-        let artifact = match self.cfg.variant {
-            PpoVariant::Clipped => "policy_update",
-            PpoVariant::Simplified => "policy_update_simple",
-        };
         let mb = self.minibatch;
-        let lr = lit_scalar1(self.cfg.lr);
-        let clip = lit_scalar1(self.cfg.clip_eps);
-        let ent = lit_scalar1(self.cfg.ent_coef);
-        let vf = lit_scalar1(self.cfg.vf_coef);
+        let hp = PpoHyper {
+            lr: self.cfg.lr,
+            clip_eps: self.cfg.clip_eps,
+            ent_coef: self.cfg.ent_coef,
+            vf_coef: self.cfg.vf_coef,
+        };
 
-        let mut stats = UpdateStats::default();
+        let mut sums = [0.0f64; 5]; // loss, pg, v, entropy, kl
+        let mut count = 0usize;
         let mut order: Vec<usize> = (0..batch.len()).collect();
+        let mut states = vec![0.0f32; mb * self.state_dim];
+        let mut actions = vec![0i32; mb];
+        let mut old_logp = vec![0.0f32; mb];
+        let mut adv = vec![0.0f32; mb];
+        let mut ret = vec![0.0f32; mb];
+        let mut mask = vec![0.0f32; mb];
         for _ in 0..self.cfg.update_epochs {
             self.rng.shuffle(&mut order);
             for chunk in order.chunks(mb) {
-                let mut states = vec![0.0f32; mb * self.state_dim];
-                let mut actions = vec![0i32; mb];
-                let mut old_logp = vec![0.0f32; mb];
-                let mut adv = vec![0.0f32; mb];
-                let mut ret = vec![0.0f32; mb];
-                let mut mask = vec![0.0f32; mb];
+                states.iter_mut().for_each(|v| *v = 0.0);
+                mask.iter_mut().for_each(|v| *v = 0.0);
+                actions.iter_mut().for_each(|v| *v = 0);
+                old_logp.iter_mut().for_each(|v| *v = 0.0);
+                adv.iter_mut().for_each(|v| *v = 0.0);
+                ret.iter_mut().for_each(|v| *v = 0.0);
                 for (row, &i) in chunk.iter().enumerate() {
                     states[row * self.state_dim..(row + 1) * self.state_dim]
                         .copy_from_slice(&batch.states[i].0);
@@ -189,32 +185,34 @@ impl PpoAgent {
                     ret[row] = batch.returns[i];
                     mask[row] = 1.0;
                 }
-                let states_l = lit_f32(&states, &[mb as i64, self.state_dim as i64])?;
-                let actions_l = lit_i32(&actions, &[mb as i64])?;
-                let old_l = lit_f32(&old_logp, &[mb as i64])?;
-                let adv_l = lit_f32(&adv, &[mb as i64])?;
-                let ret_l = lit_f32(&ret, &[mb as i64])?;
-                let mask_l = lit_f32(&mask, &[mb as i64])?;
-                let mut out = self.store.run(
-                    artifact,
-                    &[
-                        &self.theta, &self.m, &self.v, &self.step, &states_l, &actions_l,
-                        &old_l, &adv_l, &ret_l, &mask_l, &lr, &clip, &ent, &vf,
-                    ],
-                )?;
-                stats.loss = out.scalar_f32(4)?;
-                stats.pg_loss = out.scalar_f32(5)?;
-                stats.v_loss = out.scalar_f32(6)?;
-                stats.entropy = out.scalar_f32(7)?;
-                stats.approx_kl = out.scalar_f32(8)?;
-                stats.minibatches += 1;
-                self.theta = out.take(0);
-                self.m = out.take(1);
-                self.v = out.take(2);
-                self.step = out.take(3);
+                let minibatch = PpoMinibatch {
+                    states: &states,
+                    actions: &actions,
+                    old_logp: &old_logp,
+                    advantages: &adv,
+                    returns: &ret,
+                    mask: &mask,
+                };
+                let s =
+                    self.backend
+                        .policy_update(self.cfg.variant, &mut self.opt, &minibatch, hp)?;
+                sums[0] += s.loss as f64;
+                sums[1] += s.pg_loss as f64;
+                sums[2] += s.v_loss as f64;
+                sums[3] += s.entropy as f64;
+                sums[4] += s.approx_kl as f64;
+                count += 1;
             }
         }
-        Ok(stats)
+        let n = count.max(1) as f64;
+        Ok(UpdateStats {
+            loss: (sums[0] / n) as f32,
+            pg_loss: (sums[1] / n) as f32,
+            v_loss: (sums[2] / n) as f32,
+            entropy: (sums[3] / n) as f32,
+            approx_kl: (sums[4] / n) as f32,
+            minibatches: count,
+        })
     }
 }
 
@@ -223,15 +221,15 @@ mod tests {
     use super::*;
     use crate::rl::state::{StateVector, STATE_DIM};
     use crate::rl::trajectory::{Trajectory, Transition};
+    use crate::runtime::native_backend;
 
     fn agent(variant: PpoVariant) -> PpoAgent {
-        let store = Arc::new(ArtifactStore::open_default().unwrap());
         let mut cfg = RlConfig::default();
         cfg.variant = variant;
         cfg.update_epochs = 2;
         // Test-sized learning rate: few minibatches, strong signal.
         cfg.lr = 5e-3;
-        PpoAgent::new(store, cfg, 0).unwrap()
+        PpoAgent::new(native_backend(), cfg, 0).unwrap()
     }
 
     fn state(fill: f32) -> StateVector {
@@ -263,7 +261,9 @@ mod tests {
     fn update_moves_policy_toward_rewarded_action() {
         let mut a = agent(PpoVariant::Clipped);
         let probe = vec![state(0.2)];
-        // Build a trajectory that always rewards action 4 (+100).
+        // Bandit-style trajectory that always rewards action 4. gamma = 0
+        // gives exact per-step credit assignment (each advantage reflects
+        // only its own action's reward), so 12 rounds converge decisively.
         for _ in 0..12 {
             let mut tr = Trajectory::default();
             for _ in 0..32 {
@@ -278,7 +278,7 @@ mod tests {
                     reward,
                 });
             }
-            let batch = UpdateBatch::from_trajectories(&[tr], 0.99, 0.95);
+            let batch = UpdateBatch::from_trajectories(&[tr], 0.0, 0.95);
             let stats = a.update(&batch).unwrap();
             assert!(stats.minibatches > 0);
             assert!(stats.loss.is_finite());
@@ -287,6 +287,31 @@ mod tests {
         // After training, greedy action should be 4 with high probability.
         let greedy = a.act(&probe, false).unwrap()[0];
         assert_eq!(greedy.action, 4, "policy failed to learn (logp {probs:?})");
+    }
+
+    #[test]
+    fn update_stats_are_means_not_last_minibatch() {
+        // 600 transitions at minibatch 256 -> 3 minibatches per epoch, 2
+        // epochs = 6 steps; `minibatches` must count all of them and the
+        // entropy mean must stay in the per-minibatch range (0, ln 5].
+        let mut a = agent(PpoVariant::Clipped);
+        let mut tr = Trajectory::default();
+        for i in 0..600 {
+            let s = state((i % 7) as f32 * 0.1);
+            let sample = a.act(&[s.clone()], true).unwrap()[0];
+            tr.push(Transition {
+                state: s,
+                action: sample.action,
+                logp: sample.logp,
+                value: sample.value,
+                reward: if sample.action % 2 == 0 { 1.0 } else { -1.0 },
+            });
+        }
+        let batch = UpdateBatch::from_trajectories(&[tr], 0.99, 0.95);
+        let stats = a.update(&batch).unwrap();
+        assert_eq!(stats.minibatches, 6);
+        assert!(stats.entropy > 0.0 && stats.entropy <= (5.0f32).ln() + 1e-3);
+        assert!(stats.loss.is_finite() && stats.approx_kl.is_finite());
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! The [`ComputeBackend`] trait: the artifact contract as a Rust seam.
+//!
+//! Captures exactly the manifest's executable surface — `policy_forward`,
+//! `policy_update` / `policy_update_simple`, the `train_{model}_{opt}_{bucket}`
+//! ladder, `eval_{model}`, and the seeded init snapshots — as trait methods
+//! over flat `f32` buffers. Backends own the math; callers own the state
+//! ([`OptState`] is passed `&mut` so parameters never cross the trait twice).
+//!
+//! All tensors are row-major flat slices; shapes are implied by the
+//! [`Schema`] (the native equivalent of `manifest.json`).
+
+use crate::config::{Optimizer, PpoVariant};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub use super::manifest::ModelInfo;
+
+/// Static I/O schema shared by every backend — the native twin of the
+/// manifest header. Sizing information only; no artifact file references.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    /// Batch-bucket ladder (sorted ascending; XLA shapes are static, so
+    /// dynamic batch sizes round up to the smallest bucket >= B).
+    pub buckets: Vec<usize>,
+    pub eval_batch: usize,
+    pub state_dim: usize,
+    pub n_actions: usize,
+    pub max_workers: usize,
+    pub ppo_minibatch: usize,
+    pub feature_dim: usize,
+    pub policy_param_count: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Schema {
+    /// Smallest bucket >= n, or an error if n exceeds the ladder.
+    pub fn bucket_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "batch {n} exceeds largest bucket {}",
+                self.buckets.last().copied().unwrap_or(0)
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+    }
+}
+
+/// Flat model/optimizer state threaded through train and policy updates.
+/// `m` is the SGD momentum buffer or the Adam first moment; `v` is the Adam
+/// second moment (length 1 dummy for SGD, mirroring the artifact signature).
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl OptState {
+    /// Fresh optimizer state for `params` under `optimizer`.
+    pub fn new(params: Vec<f32>, optimizer: Optimizer) -> Self {
+        let pc = params.len();
+        let v_len = match optimizer {
+            Optimizer::Adam => pc,
+            Optimizer::Sgd => 1,
+        };
+        OptState {
+            params,
+            m: vec![0.0; pc],
+            v: vec![0.0; v_len],
+            step: 0.0,
+        }
+    }
+
+    /// Adam state (the policy optimizer is always Adam).
+    pub fn adam(params: Vec<f32>) -> Self {
+        Self::new(params, Optimizer::Adam)
+    }
+
+    /// Reset optimizer moments and the step counter, keeping `params`.
+    pub fn reset_moments(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0.0;
+    }
+}
+
+/// Outputs of one fused train step (signature mirror of the AOT artifact:
+/// params/m/v/step are updated in the caller's [`OptState`]).
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub acc: f32,
+    /// Per-sample masked correctness, length = bucket.
+    pub correct: Vec<f32>,
+    pub sigma_norm: f32,
+    pub sigma_norm2: f32,
+    pub grad_l2: f32,
+}
+
+/// Outputs of one policy forward pass over all `max_workers` padded rows.
+#[derive(Clone, Debug)]
+pub struct PolicyOut {
+    /// Log-probabilities, row-major `[max_workers, n_actions]`.
+    pub logp: Vec<f32>,
+    /// Value estimates, length `max_workers`.
+    pub values: Vec<f32>,
+}
+
+/// Scalar diagnostics of one PPO minibatch step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PpoStats {
+    pub loss: f32,
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+}
+
+/// One padded+masked PPO minibatch (all slices length `ppo_minibatch`,
+/// `states` length `ppo_minibatch * state_dim`).
+#[derive(Clone, Copy, Debug)]
+pub struct PpoMinibatch<'a> {
+    pub states: &'a [f32],
+    pub actions: &'a [i32],
+    pub old_logp: &'a [f32],
+    pub advantages: &'a [f32],
+    pub returns: &'a [f32],
+    pub mask: &'a [f32],
+}
+
+/// PPO update hyperparameters (the artifact's scalar inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct PpoHyper {
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+}
+
+/// The compute seam. Object-safe; implementations must be shareable across
+/// threads (the distributed demo drives one backend per process thread).
+pub trait ComputeBackend: Send + Sync {
+    /// Short identifier ("native", "xla") for logs and the CLI.
+    fn name(&self) -> &'static str;
+
+    /// Static sizing/shape information.
+    fn schema(&self) -> &Schema;
+
+    /// Seeded initial parameters for a zoo model (flat, ravel_pytree order).
+    fn init_params(&self, model: &str, seed: u64) -> anyhow::Result<Vec<f32>>;
+
+    /// Seeded initial policy parameters.
+    fn init_policy(&self, seed: u64) -> anyhow::Result<Vec<f32>>;
+
+    /// `policy_forward`: score `max_workers` padded state rows in one call.
+    /// `states` is `[max_workers, state_dim]` row-major.
+    fn policy_forward(&self, theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut>;
+
+    /// One PPO minibatch step (`policy_update` / `policy_update_simple`),
+    /// updating `opt` (theta + Adam moments) in place.
+    fn policy_update(
+        &self,
+        variant: PpoVariant,
+        opt: &mut OptState,
+        mb: &PpoMinibatch,
+        hp: PpoHyper,
+    ) -> anyhow::Result<PpoStats>;
+
+    /// One fused train step at `bucket` (`train_{model}_{opt}_b{bucket}`),
+    /// updating `state` in place. `x` is `[bucket, feature_dim]`, `y`/`mask`
+    /// length `bucket`; padded rows carry mask 0.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut>;
+
+    /// Held-out evaluation (`eval_{model}`): returns (loss, acc).
+    fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> anyhow::Result<(f32, f32)>;
+
+    /// Executables compiled so far (0 for backends that don't compile).
+    fn compiled_count(&self) -> usize {
+        0
+    }
+
+    /// (artifact, compile_seconds) log for the overhead study.
+    fn compile_log(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+/// Shared handle to a backend.
+pub type Backend = Arc<dyn ComputeBackend>;
+
+/// A fresh native backend handle (always available; used by tests that pin
+/// behaviour to the pure-Rust path regardless of `DYNAMIX_BACKEND`).
+pub fn native_backend() -> Backend {
+    Arc::new(super::native::NativeBackend::new())
+}
+
+/// Select a backend from `DYNAMIX_BACKEND` (`native` | `xla` | `auto`).
+///
+/// `auto` (or unset): the XLA backend when it is compiled in *and* the
+/// artifacts directory exists; the native backend otherwise — so a fresh
+/// clone works with zero setup and `make artifacts` upgrades in place.
+pub fn default_backend() -> anyhow::Result<Backend> {
+    let choice = std::env::var("DYNAMIX_BACKEND").unwrap_or_default();
+    match choice.as_str() {
+        "native" => Ok(native_backend()),
+        "xla" => open_xla(),
+        "" | "auto" => {
+            if cfg!(feature = "backend-xla") && artifacts_present() {
+                open_xla()
+            } else {
+                Ok(native_backend())
+            }
+        }
+        other => anyhow::bail!("unknown DYNAMIX_BACKEND {other:?} (native|xla|auto)"),
+    }
+}
+
+fn artifacts_present() -> bool {
+    super::manifest::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+#[cfg(feature = "backend-xla")]
+fn open_xla() -> anyhow::Result<Backend> {
+    Ok(Arc::new(super::xla_backend::XlaBackend::open_default()?))
+}
+
+#[cfg(not(feature = "backend-xla"))]
+fn open_xla() -> anyhow::Result<Backend> {
+    anyhow::bail!(
+        "DYNAMIX_BACKEND=xla requested but this build has no `backend-xla` \
+         feature; uncomment the `xla` dependency in rust/Cargo.toml, rebuild \
+         with `--features backend-xla`, and run `make artifacts` (see README)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_bucket_for_picks_smallest_upper() {
+        let s = crate::runtime::native::NativeBackend::new();
+        let m = s.schema();
+        assert_eq!(m.bucket_for(1).unwrap(), 32);
+        assert_eq!(m.bucket_for(32).unwrap(), 32);
+        assert_eq!(m.bucket_for(33).unwrap(), 64);
+        let &last = m.buckets.last().unwrap();
+        assert_eq!(m.bucket_for(last).unwrap(), last);
+        assert!(m.bucket_for(last + 1).is_err());
+    }
+
+    #[test]
+    fn default_backend_env_override() {
+        // `native` always resolves; garbage never does. (Run serially with
+        // env juggling to avoid cross-test races on the var.)
+        let prev = std::env::var("DYNAMIX_BACKEND").ok();
+        std::env::set_var("DYNAMIX_BACKEND", "native");
+        assert_eq!(default_backend().unwrap().name(), "native");
+        std::env::set_var("DYNAMIX_BACKEND", "bogus");
+        assert!(default_backend().is_err());
+        match prev {
+            Some(v) => std::env::set_var("DYNAMIX_BACKEND", v),
+            None => std::env::remove_var("DYNAMIX_BACKEND"),
+        }
+    }
+
+    #[test]
+    fn opt_state_shapes_follow_optimizer() {
+        let s = OptState::new(vec![0.0; 10], Optimizer::Sgd);
+        assert_eq!((s.m.len(), s.v.len()), (10, 1));
+        let a = OptState::new(vec![0.0; 10], Optimizer::Adam);
+        assert_eq!((a.m.len(), a.v.len()), (10, 10));
+        let mut a2 = a;
+        a2.step = 5.0;
+        a2.m[0] = 1.0;
+        a2.reset_moments();
+        assert_eq!(a2.step, 0.0);
+        assert_eq!(a2.m[0], 0.0);
+    }
+}

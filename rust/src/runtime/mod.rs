@@ -1,47 +1,71 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Compute runtime: the [`ComputeBackend`] seam and its implementations.
 //!
-//! This is the only module that touches the `xla` crate. The hot path is
-//! `ArtifactStore::get(name)` (lazy compile + cache) followed by
-//! `Executable::run(&[Literal])`. On the CPU PJRT plugin "device" memory
-//! is host memory, so literal-based execution costs a memcpy per argument
-//! — negligible against the train-step compute (measured in
-//! EXPERIMENTS.md §Perf; the buffer-resident alternative is documented in
-//! DESIGN.md §Perf and was rejected because tuple-rooted executables
-//! return a single tuple buffer through this PJRT API).
+//! Everything above this module (RL agent, BSP trainer, baselines, harness)
+//! talks to a `Backend` (`Arc<dyn ComputeBackend>`) and never to a concrete
+//! runtime. Two backends exist:
+//!
+//! * **native** (default) — pure-Rust MLP forward/backward, PPO losses and
+//!   optimizers mirroring `python/compile/` (`kernels/ref.py` semantics).
+//!   Self-contained: no artifacts, no Python, no external deps.
+//! * **xla** (`backend-xla` feature) — the original PJRT path: AOT HLO
+//!   artifacts produced by `make artifacts`, lazily compiled and cached by
+//!   `ArtifactStore`. Requires the `xla` crate (see rust/Cargo.toml).
+//!
+//! Selection: `DYNAMIX_BACKEND=native|xla|auto` (default `auto`: xla when
+//! compiled in *and* artifacts are present, otherwise native).
 
-mod manifest;
+pub mod backend;
+pub mod manifest;
+pub mod native;
+#[cfg(feature = "backend-xla")]
 mod store;
+#[cfg(feature = "backend-xla")]
+mod xla_backend;
 
+pub use backend::{
+    default_backend, native_backend, Backend, ComputeBackend, OptState, PolicyOut, PpoHyper,
+    PpoMinibatch, PpoStats, Schema, TrainOut,
+};
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelInfo};
+pub use native::NativeBackend;
+#[cfg(feature = "backend-xla")]
 pub use store::{ArtifactStore, Outputs};
+#[cfg(feature = "backend-xla")]
+pub use xla_backend::XlaBackend;
 
-use xla::Literal;
+#[cfg(feature = "backend-xla")]
+mod literals {
+    use xla::Literal;
 
-/// Build an f32 literal of the given shape from a slice.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
-    let l = Literal::vec1(data);
-    if dims.len() == 1 {
-        Ok(l)
-    } else {
-        Ok(l.reshape(dims)?)
+    /// Build an f32 literal of the given shape from a slice.
+    pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+        let l = Literal::vec1(data);
+        if dims.len() == 1 {
+            Ok(l)
+        } else {
+            Ok(l.reshape(dims)?)
+        }
+    }
+
+    /// Build an i32 literal of the given shape from a slice.
+    pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+        let l = Literal::vec1(data);
+        if dims.len() == 1 {
+            Ok(l)
+        } else {
+            Ok(l.reshape(dims)?)
+        }
+    }
+
+    /// Scalar-as-[1] f32 literal (the AOT signature convention for lr/step...).
+    pub fn lit_scalar1(v: f32) -> Literal {
+        Literal::vec1(&[v])
     }
 }
 
-/// Build an i32 literal of the given shape from a slice.
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
-    let l = Literal::vec1(data);
-    if dims.len() == 1 {
-        Ok(l)
-    } else {
-        Ok(l.reshape(dims)?)
-    }
-}
-
-/// Scalar-as-[1] f32 literal (the AOT signature convention for lr/step...).
-pub fn lit_scalar1(v: f32) -> Literal {
-    Literal::vec1(&[v])
-}
+#[cfg(feature = "backend-xla")]
+pub use literals::{lit_f32, lit_i32, lit_scalar1};

@@ -1,0 +1,200 @@
+//! Minimal dense linear algebra for the native backend.
+//!
+//! Shapes follow the JAX convention used by `python/compile`: activations
+//! are `[M, K]` row-major, weights `[K, N]` row-major (`fan_in` rows). The
+//! three multiply kernels cover forward (`x @ w`), input gradients
+//! (`dy @ w^T`) and weight gradients (`x^T @ dy`); loop orders are chosen so
+//! the innermost loop always streams contiguous rows (ikj / dot-of-rows),
+//! which is enough to keep the mini models far below the simulator costs.
+
+/// `out[M,N] += x[M,K] @ w[K,N]`. `out` must be pre-zeroed by the caller
+/// (or hold a partial sum to accumulate into).
+pub fn matmul_acc(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &a) in xrow.iter().enumerate() {
+            if a == 0.0 {
+                continue; // padded rows / ReLU-dead units cost nothing
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += a * wrow[j];
+            }
+        }
+    }
+}
+
+/// `dx[M,K] = dy[M,N] @ w[K,N]^T` (input gradient; overwrites `dx`).
+pub fn matmul_bt(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let dxrow = &mut dx[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut s = 0.0f32;
+            for j in 0..n {
+                s += dyrow[j] * wrow[j];
+            }
+            dxrow[kk] = s;
+        }
+    }
+}
+
+/// `dw[K,N] += x[M,K]^T @ dy[M,N]` (weight gradient; accumulates).
+pub fn matmul_at(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for (kk, &a) in xrow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let dwrow = &mut dw[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                dwrow[j] += a * dyrow[j];
+            }
+        }
+    }
+}
+
+/// `out[i*n..][j] += b[j]` — broadcast-add a bias row.
+pub fn add_bias(out: &mut [f32], b: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(b.len(), n);
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            row[j] += b[j];
+        }
+    }
+}
+
+/// `db[j] += sum_i dy[i,j]` — bias gradient (column sums; accumulates).
+pub fn col_sums(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(db.len(), n);
+    for i in 0..m {
+        let row = &dy[i * n..(i + 1) * n];
+        for j in 0..n {
+            db[j] += row[j];
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place tanh.
+pub fn tanh(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Zero `grad` wherever the post-activation `act` is <= 0 (ReLU derivative,
+/// using the identity `relu(z) > 0 <=> z > 0`).
+pub fn relu_backward(grad: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(grad.len(), act.len());
+    for (g, &a) in grad.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Scale `grad` by `1 - act^2` (tanh derivative from the post-activation).
+pub fn tanh_backward(grad: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(grad.len(), act.len());
+    for (g, &a) in grad.iter_mut().zip(act) {
+        *g *= 1.0 - a * a;
+    }
+}
+
+/// Row-wise log-softmax of `logits[M,N]` into `logp` (may alias shapes, not
+/// storage). Numerically stable (max-subtracted).
+pub fn log_softmax(logits: &[f32], m: usize, n: usize, logp: &mut [f32]) {
+    debug_assert_eq!(logits.len(), m * n);
+    debug_assert_eq!(logp.len(), m * n);
+    for i in 0..m {
+        let row = &logits[i * n..(i + 1) * n];
+        let out = &mut logp[i * n..(i + 1) * n];
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut lse = 0.0f32;
+        for &v in row {
+            lse += (v - mx).exp();
+        }
+        let lse = lse.ln() + mx;
+        for j in 0..n {
+            out[j] = row[j] - lse;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_golden() {
+        // x = [[1,2],[3,4]], w = [[5,6],[7,8]] -> [[19,22],[43,50]]
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [5.0, 6.0, 7.0, 8.0];
+        let mut y = [0.0f32; 4];
+        matmul_acc(&x, &w, 2, 2, 2, &mut y);
+        assert_eq!(y, [19.0, 22.0, 43.0, 50.0]);
+
+        // dy @ w^T and x^T @ dy consistency with hand values.
+        let mut dx = [0.0f32; 4];
+        matmul_bt(&y, &w, 2, 2, 2, &mut dx);
+        assert_eq!(dx, [19.0 * 5.0 + 22.0 * 6.0, 19.0 * 7.0 + 22.0 * 8.0,
+                        43.0 * 5.0 + 50.0 * 6.0, 43.0 * 7.0 + 50.0 * 8.0]);
+        let mut dw = [0.0f32; 4];
+        matmul_at(&x, &y, 2, 2, 2, &mut dw);
+        assert_eq!(dw, [1.0 * 19.0 + 3.0 * 43.0, 1.0 * 22.0 + 3.0 * 50.0,
+                        2.0 * 19.0 + 4.0 * 43.0, 2.0 * 22.0 + 4.0 * 50.0]);
+    }
+
+    #[test]
+    fn log_softmax_rows_normalize() {
+        let logits = [1.0f32, 2.0, 3.0, -5.0, 0.0, 5.0];
+        let mut lp = [0.0f32; 6];
+        log_softmax(&logits, 2, 3, &mut lp);
+        for i in 0..2 {
+            let total: f32 = lp[i * 3..(i + 1) * 3].iter().map(|l| l.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-5, "row {i}: {total}");
+        }
+        // Monotone with the logits.
+        assert!(lp[0] < lp[1] && lp[1] < lp[2]);
+    }
+
+    #[test]
+    fn activation_derivative_masks() {
+        let mut g = [1.0f32, 1.0, 1.0];
+        relu_backward(&mut g, &[0.5, 0.0, 2.0]);
+        assert_eq!(g, [1.0, 0.0, 1.0]);
+        let mut g = [1.0f32, 1.0];
+        tanh_backward(&mut g, &[0.0, 0.5]);
+        assert!((g[0] - 1.0).abs() < 1e-6 && (g[1] - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,372 @@
+//! Pure-Rust compute backend (the default).
+//!
+//! Implements the full artifact contract — policy forward/update, the
+//! train-step bucket ladder, eval, grad stats, seeded inits — with no
+//! Python, no artifacts and no external dependencies, so `cargo test`
+//! works from a fresh clone on any machine. Numerical semantics mirror
+//! `python/compile` (see [`model`] and [`policy`]); parameter layouts are
+//! `ravel_pytree`-compatible so policy/model snapshots interchange with the
+//! XLA backend.
+
+pub mod linalg;
+pub mod model;
+pub mod policy;
+
+use crate::config::{Optimizer, PpoVariant};
+use crate::runtime::backend::{
+    ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
+};
+use crate::runtime::manifest::ModelInfo;
+use model::{apply_adam, apply_sgd, masked_ce_loss, normalized_grad_stats, ModelDef};
+use std::collections::BTreeMap;
+
+/// Batch-bucket ladder, mirroring `compile/aot.py::BUCKETS`.
+pub const BUCKETS: [usize; 19] = [
+    32, 64, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048, 3072, 4096, 6144, 8192, 12288, 16384,
+    24576, 32768,
+];
+pub const EVAL_BATCH: usize = 1024;
+
+pub struct NativeBackend {
+    schema: Schema,
+    defs: BTreeMap<String, ModelDef>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        let defs: BTreeMap<String, ModelDef> = ModelDef::zoo()
+            .into_iter()
+            .map(|d| (d.name.to_string(), d))
+            .collect();
+        let models: BTreeMap<String, ModelInfo> = defs
+            .iter()
+            .map(|(name, d)| {
+                (
+                    name.clone(),
+                    ModelInfo {
+                        family: match d.family {
+                            model::Family::Vgg => "vgg".into(),
+                            model::Family::Resnet => "resnet".into(),
+                        },
+                        depth: d.depth,
+                        width: d.width,
+                        num_classes: d.classes,
+                        feature_dim: d.feature_dim,
+                        param_count: d.param_count(),
+                        dataset: d.dataset().into(),
+                    },
+                )
+            })
+            .collect();
+        NativeBackend {
+            schema: Schema {
+                buckets: BUCKETS.to_vec(),
+                eval_batch: EVAL_BATCH,
+                state_dim: policy::STATE_DIM,
+                n_actions: policy::N_ACTIONS,
+                max_workers: policy::MAX_WORKERS,
+                ppo_minibatch: policy::MINIBATCH,
+                feature_dim: 128,
+                policy_param_count: policy::PARAM_COUNT,
+                models,
+            },
+            defs,
+        }
+    }
+
+    fn def(&self, model: &str) -> anyhow::Result<&ModelDef> {
+        self.defs
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))
+    }
+}
+
+/// Fail loudly (with model + offending value) on out-of-range labels
+/// instead of panicking mid-loop; the XLA one_hot path would silently
+/// zero such rows, which hides dataset/config mismatches.
+fn ensure_labels_in_range(model: &str, y: &[i32], classes: usize) -> anyhow::Result<()> {
+    if let Some(&bad) = y.iter().find(|&&yi| yi < 0 || yi as usize >= classes) {
+        anyhow::bail!("{model}: label {bad} outside [0, {classes})");
+    }
+    Ok(())
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn init_params(&self, model: &str, seed: u64) -> anyhow::Result<Vec<f32>> {
+        Ok(self.def(model)?.init(seed))
+    }
+
+    fn init_policy(&self, seed: u64) -> anyhow::Result<Vec<f32>> {
+        Ok(policy::init_policy(seed))
+    }
+
+    fn policy_forward(&self, theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut> {
+        // Enforce the trait contract ([max_workers, state_dim]) even though
+        // the underlying kernel is row-count-flexible, so native and xla
+        // backends accept exactly the same inputs.
+        let want = self.schema.max_workers * self.schema.state_dim;
+        anyhow::ensure!(
+            states.len() == want,
+            "states len {} != max_workers*state_dim {want}",
+            states.len()
+        );
+        policy::policy_forward(theta, states)
+    }
+
+    fn policy_update(
+        &self,
+        variant: PpoVariant,
+        opt: &mut OptState,
+        mb: &PpoMinibatch,
+        hp: PpoHyper,
+    ) -> anyhow::Result<PpoStats> {
+        // Same backend-parity rule as policy_forward: the xla artifact is
+        // compiled for exactly ppo_minibatch rows, so native enforces it.
+        anyhow::ensure!(
+            mb.mask.len() == self.schema.ppo_minibatch,
+            "minibatch rows {} != ppo_minibatch {}",
+            mb.mask.len(),
+            self.schema.ppo_minibatch
+        );
+        policy::policy_update(variant, opt, mb, hp)
+    }
+
+    fn train_step(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut> {
+        let def = self.def(model)?;
+        let pc = def.param_count();
+        anyhow::ensure!(state.params.len() == pc, "params len {} != {pc}", state.params.len());
+        anyhow::ensure!(
+            self.schema.buckets.contains(&bucket),
+            "bucket {bucket} not on the ladder"
+        );
+        anyhow::ensure!(x.len() == bucket * def.feature_dim, "x wrong size");
+        anyhow::ensure!(y.len() == bucket && mask.len() == bucket, "y/mask wrong size");
+        ensure_labels_in_range(model, y, def.classes)?;
+
+        let acts = def.forward(&state.params, x, bucket);
+        let lo = masked_ce_loss(&acts.logits, y, mask, bucket, def.classes);
+        let g = def.backward(&state.params, &acts, x, &lo.dlogits, bucket);
+        let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&g);
+        match optimizer {
+            Optimizer::Sgd => apply_sgd(state, &g, lr),
+            Optimizer::Adam => apply_adam(state, &g, lr),
+        }
+        Ok(TrainOut {
+            loss: lo.loss,
+            acc: lo.acc,
+            correct: lo.correct,
+            sigma_norm,
+            sigma_norm2,
+            grad_l2,
+        })
+    }
+
+    fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> anyhow::Result<(f32, f32)> {
+        let def = self.def(model)?;
+        anyhow::ensure!(params.len() == def.param_count(), "params len mismatch");
+        let m = mask.len();
+        anyhow::ensure!(x.len() == m * def.feature_dim && y.len() == m, "eval batch mismatch");
+        ensure_labels_in_range(model, y, def.classes)?;
+        let acts = def.forward(params, x, m);
+        let lo = masked_ce_loss(&acts.logits, y, mask, m, def.classes);
+        Ok((lo.loss, lo.acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    /// Deterministic learnable batch: y = argmax over 10 fixed projections
+    /// (the same construction as the historical XLA store test, pinning
+    /// train-step loss-decrease behaviour to the ref.py contract).
+    fn learnable_batch(n: usize, fd: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..n * fd).map(|_| rng.normal() as f32).collect();
+        let proto: Vec<f32> = (0..10 * fd).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..n)
+            .map(|i| {
+                (0..10)
+                    .max_by(|&a, &b| {
+                        let da: f32 = (0..fd).map(|j| x[i * fd + j] * proto[a * fd + j]).sum();
+                        let db: f32 = (0..fd).map(|j| x[i * fd + j] * proto[b * fd + j]).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap() as i32
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn schema_matches_manifest_constants() {
+        let b = backend();
+        let s = b.schema();
+        assert_eq!(s.state_dim, 16);
+        assert_eq!(s.n_actions, 5);
+        assert_eq!(s.max_workers, 32);
+        assert_eq!(s.ppo_minibatch, 256);
+        assert_eq!(s.feature_dim, 128);
+        assert_eq!(s.policy_param_count, 5638);
+        assert!(s.buckets.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.models.contains_key("vgg11_mini"));
+        assert_eq!(s.models.len(), 5);
+        for (name, info) in &s.models {
+            assert_eq!(info.param_count, b.def(name).unwrap().param_count());
+        }
+    }
+
+    #[test]
+    fn train_step_decreases_loss_on_fixed_batch() {
+        let b = backend();
+        let fd = b.schema().feature_dim;
+        let (x, y) = learnable_batch(32, fd);
+        let mask = vec![1.0f32; 32];
+        let mut state = OptState::new(
+            b.init_params("vgg11_mini", 0).unwrap(),
+            Optimizer::Sgd,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            let out = b
+                .train_step("vgg11_mini", Optimizer::Sgd, 32, &mut state, &x, &y, &mask, 0.05)
+                .unwrap();
+            losses.push(out.loss);
+            assert!(out.sigma_norm >= 0.0 && out.grad_l2 >= 0.0);
+            assert_eq!(out.correct.len(), 32);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses[24] < losses[0] * 0.8,
+            "loss did not decrease: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn adam_train_step_also_learns() {
+        let b = backend();
+        let fd = b.schema().feature_dim;
+        let (x, y) = learnable_batch(32, fd);
+        let mask = vec![1.0f32; 32];
+        let mut state = OptState::new(
+            b.init_params("vgg11_mini", 0).unwrap(),
+            Optimizer::Adam,
+        );
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            let out = b
+                .train_step("vgg11_mini", Optimizer::Adam, 32, &mut state, &x, &y, &mask, 0.002)
+                .unwrap();
+            losses.push(out.loss);
+        }
+        assert!(losses[24] < losses[0], "adam did not learn: {losses:?}");
+    }
+
+    #[test]
+    fn train_step_validates_shapes() {
+        let b = backend();
+        let mut state = OptState::new(b.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+        let fd = b.schema().feature_dim;
+        // Off-ladder bucket.
+        let err = b
+            .train_step("vgg11_mini", Optimizer::Sgd, 33, &mut state,
+                        &vec![0.0; 33 * fd], &vec![0; 33], &vec![1.0; 33], 0.05)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ladder"), "{err}");
+        // Wrong x size.
+        assert!(b
+            .train_step("vgg11_mini", Optimizer::Sgd, 32, &mut state,
+                        &vec![0.0; 31 * fd], &vec![0; 32], &vec![1.0; 32], 0.05)
+            .is_err());
+        // Out-of-range label errors with the offending value, no panic.
+        let err = b
+            .train_step("vgg11_mini", Optimizer::Sgd, 32, &mut state,
+                        &vec![0.0; 32 * fd], &vec![37; 32], &vec![1.0; 32], 0.05)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("37"), "{err}");
+        // Unknown model.
+        assert!(b.init_params("nope", 0).is_err());
+    }
+
+    #[test]
+    fn eval_step_tracks_training() {
+        let b = backend();
+        let fd = b.schema().feature_dim;
+        let (x, y) = learnable_batch(128, fd);
+        let mask = vec![1.0f32; 128];
+        let mut state = OptState::new(b.init_params("vgg11_mini", 1).unwrap(), Optimizer::Sgd);
+        let (l0, _) = b.eval_step("vgg11_mini", &state.params, &x, &y, &mask).unwrap();
+        for _ in 0..40 {
+            b.train_step("vgg11_mini", Optimizer::Sgd, 128, &mut state, &x, &y, &mask, 0.05)
+                .unwrap();
+        }
+        let (l1, a1) = b.eval_step("vgg11_mini", &state.params, &x, &y, &mask).unwrap();
+        assert!(l1 < l0, "eval loss did not drop: {l0} -> {l1}");
+        assert!(a1 > 0.5, "train-set accuracy too low after fitting: {a1}");
+    }
+
+    #[test]
+    fn all_zoo_models_run_one_step() {
+        let b = backend();
+        let fd = b.schema().feature_dim;
+        let mut rng = Rng::new(3);
+        for (name, info) in b.schema().models.clone() {
+            let x: Vec<f32> = (0..32 * fd).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..32).map(|_| rng.below(info.num_classes) as i32).collect();
+            let mask = vec![1.0f32; 32];
+            let mut state =
+                OptState::new(b.init_params(&name, 0).unwrap(), Optimizer::Sgd);
+            let out = b
+                .train_step(&name, Optimizer::Sgd, 32, &mut state, &x, &y, &mask, 0.01)
+                .unwrap();
+            assert!(out.loss.is_finite(), "{name}: loss {}", out.loss);
+            // Untrained loss sits in the chance band: above ~ln(C)/2 (not
+            // already solved) and below a few multiples of ln(C) (He init
+            // keeps logit scale O(1); a blown-up init would exceed this).
+            let chance = (info.num_classes as f32).ln();
+            assert!(
+                out.loss > chance * 0.5 && out.loss < chance * 2.5,
+                "{name}: initial loss {} outside chance band of ln(C)={chance}",
+                out.loss
+            );
+        }
+    }
+}

@@ -1,0 +1,614 @@
+//! Native model zoo: flat-parameter mini VGG / ResNet MLPs.
+//!
+//! Mirrors `python/compile/models.py` + `train_step.py`: the same family
+//! structure (dense VGG stacks, pre-activation residual blocks with
+//! zero-init second layers), the same masked cross-entropy contract, the
+//! same optimizer update rules, and the `kernels/ref.py` gradient-moment
+//! statistics. Parameter vectors use the JAX `ravel_pytree` layout (dict
+//! keys sorted lexicographically, `b` before `w`, weights `[fan_in,
+//! fan_out]` row-major) so snapshots interchange with the XLA backend.
+
+use super::linalg::*;
+use crate::runtime::backend::OptState;
+use crate::util::rng::Rng;
+
+pub const SGD_MOMENTUM: f32 = 0.9;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Vgg,
+    Resnet,
+}
+
+/// One dense layer's location inside the flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseRef {
+    /// Bias offset (length `n`).
+    pub b: usize,
+    /// Weight offset (`[k, n]` row-major).
+    pub w: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl DenseRef {
+    fn bias<'a>(&self, p: &'a [f32]) -> &'a [f32] {
+        &p[self.b..self.b + self.n]
+    }
+
+    fn weight<'a>(&self, p: &'a [f32]) -> &'a [f32] {
+        &p[self.w..self.w + self.k * self.n]
+    }
+
+    /// y = x @ w + b for a batch of `m` rows.
+    fn forward(&self, p: &[f32], x: &[f32], m: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * self.n];
+        matmul_acc(x, self.weight(p), m, self.k, self.n, &mut y);
+        add_bias(&mut y, self.bias(p), m, self.n);
+        y
+    }
+
+    /// Accumulate weight/bias grads into `g` and return dx (input grad).
+    fn backward(&self, p: &[f32], x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) -> Vec<f32> {
+        col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
+        matmul_at(x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
+        let mut dx = vec![0.0f32; m * self.k];
+        matmul_bt(dy, self.weight(p), m, self.k, self.n, &mut dx);
+        dx
+    }
+
+    /// Accumulate weight/bias grads only (no input grad — first layer).
+    fn backward_params(&self, x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) {
+        col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
+        matmul_at(x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
+    }
+}
+
+/// Static shape of one zoo model.
+#[derive(Clone, Debug)]
+pub struct ModelDef {
+    pub name: &'static str,
+    pub family: Family,
+    /// VGG: hidden layers; ResNet: residual blocks.
+    pub depth: usize,
+    pub width: usize,
+    pub feature_dim: usize,
+    pub classes: usize,
+}
+
+/// Cached forward activations for the backward pass.
+pub struct Acts {
+    /// Post-ReLU activations: VGG — one per layer; ResNet — stem output
+    /// followed by every block output (`depth + 1` entries).
+    hs: Vec<Vec<f32>>,
+    /// ResNet only: post-ReLU inner activations, one per block.
+    us: Vec<Vec<f32>>,
+    pub logits: Vec<f32>,
+}
+
+impl ModelDef {
+    /// The zoo, mirroring `models.MODEL_ZOO` (mini depth ladder).
+    pub fn zoo() -> Vec<ModelDef> {
+        let m = |name, family, classes, depth| ModelDef {
+            name,
+            family,
+            depth,
+            width: 64,
+            feature_dim: 128,
+            classes,
+        };
+        vec![
+            m("vgg11_mini", Family::Vgg, 10, 5),
+            m("vgg16_mini", Family::Vgg, 10, 8),
+            m("vgg19_mini", Family::Vgg, 10, 10),
+            m("resnet34_mini", Family::Resnet, 100, 6),
+            m("resnet50_mini", Family::Resnet, 100, 10),
+        ]
+    }
+
+    pub fn dataset(&self) -> &'static str {
+        if self.classes == 10 {
+            "cifar10_syn"
+        } else {
+            "cifar100_syn"
+        }
+    }
+
+    /// ravel_pytree layout for VGG: keys sort `head < layer0 < layer1 ...`,
+    /// and `b < w` within each dense.
+    fn vgg_refs(&self) -> (Vec<DenseRef>, DenseRef) {
+        let (w, f, c) = (self.width, self.feature_dim, self.classes);
+        let head = DenseRef { b: 0, w: c, k: w, n: c };
+        let mut off = c + w * c;
+        let mut layers = Vec::with_capacity(self.depth);
+        for i in 0..self.depth {
+            let k = if i == 0 { f } else { w };
+            layers.push(DenseRef { b: off, w: off + w, k, n: w });
+            off += w + k * w;
+        }
+        (layers, head)
+    }
+
+    /// ravel_pytree layout for ResNet: `block0 < ... < head < stem`,
+    /// blocks `fc1 < fc2`, and `b < w` within each dense.
+    fn resnet_refs(&self) -> (DenseRef, Vec<(DenseRef, DenseRef)>, DenseRef) {
+        let (w, f, c) = (self.width, self.feature_dim, self.classes);
+        let mut off = 0;
+        let mut blocks = Vec::with_capacity(self.depth);
+        for _ in 0..self.depth {
+            let fc1 = DenseRef { b: off, w: off + w, k: w, n: w };
+            off += w + w * w;
+            let fc2 = DenseRef { b: off, w: off + w, k: w, n: w };
+            off += w + w * w;
+            blocks.push((fc1, fc2));
+        }
+        let head = DenseRef { b: off, w: off + c, k: w, n: c };
+        off += c + w * c;
+        let stem = DenseRef { b: off, w: off + w, k: f, n: w };
+        (stem, blocks, head)
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (w, f, c) = (self.width, self.feature_dim, self.classes);
+        match self.family {
+            Family::Vgg => (c + w * c) + (w + f * w) + (self.depth - 1) * (w + w * w),
+            Family::Resnet => self.depth * 2 * (w + w * w) + (c + w * c) + (w + f * w),
+        }
+    }
+
+    /// Seeded He-init parameters (same distributions as `models.init_params`;
+    /// not bit-identical to the JAX PRNG, by design — see DESIGN notes in
+    /// the module docs). ResNet `fc2` weights start at zero so residual
+    /// blocks are identity at init.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ fnv1a(self.name.as_bytes()));
+        let mut p = vec![0.0f32; self.param_count()];
+        let mut he = |p: &mut [f32], r: &DenseRef, zero: bool| {
+            if zero {
+                return; // biases are already zero; fc2 weights stay zero
+            }
+            let scale = (2.0 / r.k as f64).sqrt();
+            for v in &mut p[r.w..r.w + r.k * r.n] {
+                *v = (rng.normal() * scale) as f32;
+            }
+        };
+        match self.family {
+            Family::Vgg => {
+                let (layers, head) = self.vgg_refs();
+                for l in &layers {
+                    he(&mut p, l, false);
+                }
+                he(&mut p, &head, false);
+            }
+            Family::Resnet => {
+                let (stem, blocks, head) = self.resnet_refs();
+                he(&mut p, &stem, false);
+                for (fc1, fc2) in &blocks {
+                    he(&mut p, fc1, false);
+                    he(&mut p, fc2, true); // identity-start residual
+                }
+                he(&mut p, &head, false);
+            }
+        }
+        p
+    }
+
+    /// Forward pass over `m` rows, caching activations for backward.
+    pub fn forward(&self, p: &[f32], x: &[f32], m: usize) -> Acts {
+        match self.family {
+            Family::Vgg => {
+                let (layers, head) = self.vgg_refs();
+                let mut hs = Vec::with_capacity(self.depth);
+                let mut h = layers[0].forward(p, x, m);
+                relu(&mut h);
+                hs.push(h);
+                for l in &layers[1..] {
+                    let mut nh = l.forward(p, hs.last().unwrap(), m);
+                    relu(&mut nh);
+                    hs.push(nh);
+                }
+                let logits = head.forward(p, hs.last().unwrap(), m);
+                Acts { hs, us: Vec::new(), logits }
+            }
+            Family::Resnet => {
+                let (stem, blocks, head) = self.resnet_refs();
+                let mut hs = Vec::with_capacity(self.depth + 1);
+                let mut us = Vec::with_capacity(self.depth);
+                let mut h = stem.forward(p, x, m);
+                relu(&mut h);
+                hs.push(h);
+                for (fc1, fc2) in &blocks {
+                    let mut u = fc1.forward(p, hs.last().unwrap(), m);
+                    relu(&mut u);
+                    let mut z = fc2.forward(p, &u, m);
+                    for (zi, hi) in z.iter_mut().zip(hs.last().unwrap()) {
+                        *zi += *hi; // skip connection
+                    }
+                    relu(&mut z);
+                    us.push(u);
+                    hs.push(z);
+                }
+                let logits = head.forward(p, hs.last().unwrap(), m);
+                Acts { hs, us, logits }
+            }
+        }
+    }
+
+    /// Backward pass: gradient of the scalar loss w.r.t. the flat params,
+    /// given `dlogits` (loss gradient at the logits).
+    pub fn backward(&self, p: &[f32], acts: &Acts, x: &[f32], dlogits: &[f32], m: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.param_count()];
+        match self.family {
+            Family::Vgg => {
+                let (layers, head) = self.vgg_refs();
+                let mut dh = head.backward(p, acts.hs.last().unwrap(), dlogits, m, &mut g);
+                for i in (0..self.depth).rev() {
+                    relu_backward(&mut dh, &acts.hs[i]);
+                    if i == 0 {
+                        layers[0].backward_params(x, &dh, m, &mut g);
+                    } else {
+                        dh = layers[i].backward(p, &acts.hs[i - 1], &dh, m, &mut g);
+                    }
+                }
+            }
+            Family::Resnet => {
+                let (stem, blocks, head) = self.resnet_refs();
+                let mut dh = head.backward(p, acts.hs.last().unwrap(), dlogits, m, &mut g);
+                for i in (0..self.depth).rev() {
+                    let (fc1, fc2) = &blocks[i];
+                    // dh is d(loss)/d(h_out); h_out = relu(h_in + fc2(u)).
+                    relu_backward(&mut dh, &acts.hs[i + 1]); // now dz
+                    let mut du = fc2.backward(p, &acts.us[i], &dh, m, &mut g);
+                    relu_backward(&mut du, &acts.us[i]);
+                    let dskip = fc1.backward(p, &acts.hs[i], &du, m, &mut g);
+                    for (a, b) in dh.iter_mut().zip(&dskip) {
+                        *a += *b; // residual: dz flows to h_in directly too
+                    }
+                }
+                relu_backward(&mut dh, &acts.hs[0]);
+                stem.backward_params(x, &dh, m, &mut g);
+            }
+        }
+        g
+    }
+}
+
+/// Masked cross-entropy + metrics + logits gradient, mirroring
+/// `models.masked_loss_and_metrics`: padded rows (mask 0) contribute exactly
+/// zero to loss, gradient and the `correct` vector.
+pub struct LossOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub correct: Vec<f32>,
+    pub dlogits: Vec<f32>,
+}
+
+pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usize) -> LossOut {
+    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut logp = vec![0.0f32; m * n];
+    log_softmax(logits, m, n, &mut logp);
+    let mut loss = 0.0f64;
+    let mut correct = vec![0.0f32; m];
+    let mut acc = 0.0f64;
+    let mut dlogits = vec![0.0f32; m * n];
+    for i in 0..m {
+        let yi = y[i] as usize;
+        debug_assert!(yi < n, "label {yi} out of range {n}");
+        let lrow = &logp[i * n..(i + 1) * n];
+        loss += (-lrow[yi] * mask[i]) as f64;
+        // argmax (first max wins, matching jnp.argmax).
+        let mut best = 0;
+        for j in 1..n {
+            if logits[i * n + j] > logits[i * n + best] {
+                best = j;
+            }
+        }
+        if best == yi {
+            correct[i] = mask[i];
+            acc += mask[i] as f64;
+        }
+        let scale = mask[i] / denom;
+        if scale != 0.0 {
+            let drow = &mut dlogits[i * n..(i + 1) * n];
+            for j in 0..n {
+                drow[j] = lrow[j].exp() * scale;
+            }
+            drow[yi] -= scale;
+        }
+    }
+    LossOut {
+        loss: (loss / denom as f64) as f32,
+        acc: (acc / denom as f64) as f32,
+        correct,
+        dlogits,
+    }
+}
+
+/// The paper's §IV-B gradient-normalization statistics, exactly as
+/// `kernels/ref.py::normalized_grad_stats_ref` with `n = len(g)`:
+/// `sigma_norm = std(g) / (rms(g) + 1e-8)`. Returns
+/// `(sigma_norm, sigma_norm^2, grad_l2)`.
+pub fn normalized_grad_stats(g: &[f32]) -> (f32, f32, f32) {
+    let n = g.len() as f64;
+    let mut s = 0.0f64;
+    let mut ss = 0.0f64;
+    for &v in g {
+        let v = v as f64;
+        s += v;
+        ss += v * v;
+    }
+    let mean = s / n;
+    let var = (ss / n - mean * mean).max(0.0);
+    let rms = (ss / n).sqrt();
+    let sigma = var.sqrt() / (rms + 1e-8);
+    (sigma as f32, (sigma * sigma) as f32, ss.sqrt() as f32)
+}
+
+/// SGD with momentum (`train_step.py` `optimizer == "sgd"`).
+pub fn apply_sgd(state: &mut OptState, g: &[f32], lr: f32) {
+    debug_assert_eq!(state.params.len(), g.len());
+    debug_assert_eq!(state.m.len(), g.len());
+    state.step += 1.0;
+    for i in 0..g.len() {
+        state.m[i] = SGD_MOMENTUM * state.m[i] + g[i];
+        state.params[i] -= lr * state.m[i];
+    }
+}
+
+/// Adam with bias correction (`train_step.py` / `policy.py::_adam`).
+pub fn apply_adam(state: &mut OptState, g: &[f32], lr: f32) {
+    debug_assert_eq!(state.params.len(), g.len());
+    debug_assert_eq!(state.m.len(), g.len());
+    debug_assert_eq!(state.v.len(), g.len());
+    state.step += 1.0;
+    let t = state.step as f64;
+    let c1 = (1.0 - (ADAM_B1 as f64).powf(t)) as f32;
+    let c2 = (1.0 - (ADAM_B2 as f64).powf(t)) as f32;
+    for i in 0..g.len() {
+        state.m[i] = ADAM_B1 * state.m[i] + (1.0 - ADAM_B1) * g[i];
+        state.v[i] = ADAM_B2 * state.v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let m_hat = state.m[i] / c1;
+        let v_hat = state.v[i] / c2;
+        state.params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+    }
+}
+
+/// FNV-1a over bytes — stable model-name → seed-stream tag.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn def(name: &str) -> ModelDef {
+        ModelDef::zoo().into_iter().find(|m| m.name == name).unwrap()
+    }
+
+    #[test]
+    fn param_counts_match_ravel_pytree_layout() {
+        // Hand-computed from the python layer shapes (models.py).
+        assert_eq!(def("vgg11_mini").param_count(), 25_546);
+        assert_eq!(def("vgg16_mini").param_count(), 38_026);
+        assert_eq!(def("vgg19_mini").param_count(), 46_346);
+        assert_eq!(def("resnet34_mini").param_count(), 64_676);
+        assert_eq!(def("resnet50_mini").param_count(), 97_956);
+    }
+
+    #[test]
+    fn layout_refs_tile_the_vector_exactly() {
+        for m in ModelDef::zoo() {
+            let pc = m.param_count();
+            let mut covered = vec![false; pc];
+            let mut mark = |r: &DenseRef| {
+                for i in r.b..r.b + r.n {
+                    assert!(!covered[i], "{}: bias overlap at {i}", m.name);
+                    covered[i] = true;
+                }
+                for i in r.w..r.w + r.k * r.n {
+                    assert!(!covered[i], "{}: weight overlap at {i}", m.name);
+                    covered[i] = true;
+                }
+            };
+            match m.family {
+                Family::Vgg => {
+                    let (layers, head) = m.vgg_refs();
+                    layers.iter().for_each(&mut mark);
+                    mark(&head);
+                }
+                Family::Resnet => {
+                    let (stem, blocks, head) = m.resnet_refs();
+                    mark(&stem);
+                    for (a, b) in &blocks {
+                        mark(a);
+                        mark(b);
+                    }
+                    mark(&head);
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "{}: layout has holes", m.name);
+        }
+    }
+
+    #[test]
+    fn init_is_seeded_and_finite() {
+        let m = def("vgg11_mini");
+        let a = m.init(0);
+        let b = m.init(0);
+        let c = m.init(1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert_eq!(a.len(), m.param_count());
+        // Biases at the head are zero.
+        assert!(a[..m.classes].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn resnet_is_identity_at_init_in_blocks() {
+        // With fc2 zero-init, block outputs equal relu(h_in + 0) = h_in
+        // (h_in is already >= 0), so deep stacks don't blow up.
+        let m = def("resnet34_mini");
+        let p = m.init(0);
+        let x = vec![0.1f32; 2 * m.feature_dim];
+        let acts = m.forward(&p, &x, 2);
+        let h0 = &acts.hs[0];
+        let hl = acts.hs.last().unwrap();
+        for (a, b) in h0.iter().zip(hl) {
+            assert!((a - b).abs() < 1e-5, "block changed identity output");
+        }
+    }
+
+    #[test]
+    fn grad_stats_match_ref_py_golden() {
+        // g = [1,2,3,4]: s=10 ss=30 mean=2.5 var=1.25 rms=sqrt(7.5).
+        let (sigma, sigma2, l2) = normalized_grad_stats(&[1.0, 2.0, 3.0, 4.0]);
+        let expect = (1.25f64.sqrt() / 7.5f64.sqrt()) as f32; // 0.408248...
+        assert!((sigma - expect).abs() < 1e-6, "{sigma} vs {expect}");
+        assert!((sigma2 - expect * expect).abs() < 1e-6);
+        assert!((l2 - 30.0f32.sqrt()).abs() < 1e-5);
+        // Constant vector: zero variance -> sigma 0.
+        let (s0, _, _) = normalized_grad_stats(&[2.0; 8]);
+        assert_eq!(s0, 0.0);
+    }
+
+    #[test]
+    fn masked_rows_contribute_nothing() {
+        let m = def("vgg11_mini");
+        let p = m.init(3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n_valid = 6;
+        let x16: Vec<f32> = (0..n_valid * m.feature_dim).map(|_| rng.normal() as f32).collect();
+        let y16: Vec<i32> = (0..n_valid).map(|_| rng.below(10) as i32).collect();
+
+        let run = |bucket: usize| {
+            let mut x = vec![0.0f32; bucket * m.feature_dim];
+            let mut y = vec![0i32; bucket];
+            let mut mask = vec![0.0f32; bucket];
+            x[..x16.len()].copy_from_slice(&x16);
+            y[..n_valid].copy_from_slice(&y16);
+            mask[..n_valid].fill(1.0);
+            let acts = m.forward(&p, &x, bucket);
+            let lo = masked_ce_loss(&acts.logits, &y, &mask, bucket, m.classes);
+            let g = m.backward(&p, &acts, &x, &lo.dlogits, bucket);
+            (lo.loss, lo.acc, g)
+        };
+        let (l8, a8, g8) = run(8);
+        let (l32, a32, g32) = run(32);
+        assert!((l8 - l32).abs() < 1e-6, "loss depends on padding: {l8} vs {l32}");
+        assert!((a8 - a32).abs() < 1e-6);
+        for (a, b) in g8.iter().zip(&g32) {
+            assert!((a - b).abs() < 1e-6, "gradient depends on padding");
+        }
+    }
+
+    #[test]
+    fn finite_difference_checks_vgg_gradient() {
+        // Spot-check backward against central differences on a tiny batch.
+        let m = def("vgg11_mini");
+        let mut p = m.init(7);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * m.feature_dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+        let mask = vec![1.0f32; batch];
+        let loss_at = |p: &[f32]| {
+            let acts = m.forward(p, &x, batch);
+            masked_ce_loss(&acts.logits, &y, &mask, batch, m.classes).loss as f64
+        };
+        let acts = m.forward(&p, &x, batch);
+        let lo = masked_ce_loss(&acts.logits, &y, &mask, batch, m.classes);
+        let g = m.backward(&p, &acts, &x, &lo.dlogits, batch);
+        // Probe a few parameters spread across the vector.
+        let pc = m.param_count();
+        for &idx in &[0usize, 11, pc / 3, pc / 2, pc - 5] {
+            let eps = 1e-3f32;
+            let orig = p[idx];
+            p[idx] = orig + eps;
+            let lp = loss_at(&p);
+            p[idx] = orig - eps;
+            let lm = loss_at(&p);
+            p[idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs().max(g[idx].abs())),
+                "param {idx}: fd {fd} vs analytic {}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn finite_difference_checks_resnet_gradient() {
+        let m = def("resnet34_mini");
+        let mut p = m.init(9);
+        // Perturb fc2 weights away from zero so the residual path is live.
+        let mut rng = crate::util::rng::Rng::new(13);
+        for v in p.iter_mut() {
+            if *v == 0.0 {
+                *v = (rng.normal() * 0.05) as f32;
+            }
+        }
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * m.feature_dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(100) as i32).collect();
+        let mask = vec![1.0f32; batch];
+        let loss_at = |p: &[f32]| {
+            let acts = m.forward(p, &x, batch);
+            masked_ce_loss(&acts.logits, &y, &mask, batch, m.classes).loss as f64
+        };
+        let acts = m.forward(&p, &x, batch);
+        let lo = masked_ce_loss(&acts.logits, &y, &mask, batch, m.classes);
+        let g = m.backward(&p, &acts, &x, &lo.dlogits, batch);
+        let pc = m.param_count();
+        for &idx in &[5usize, pc / 4, pc / 2, 3 * pc / 4, pc - 9] {
+            let eps = 1e-3f32;
+            let orig = p[idx];
+            p[idx] = orig + eps;
+            let lp = loss_at(&p);
+            p[idx] = orig - eps;
+            let lm = loss_at(&p);
+            p[idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs().max(g[idx].abs())),
+                "param {idx}: fd {fd} vs analytic {}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // After one Adam step from zero state, m_hat = g and v_hat = g^2,
+        // so every touched parameter moves by ~ -lr * sign(g).
+        let g = [0.5f32, -2.0, 0.0, 1e-3];
+        let mut s = OptState::adam(vec![1.0; 4]);
+        apply_adam(&mut s, &g, 0.01);
+        assert!((s.params[0] - (1.0 - 0.01)).abs() < 1e-4);
+        assert!((s.params[1] - (1.0 + 0.01)).abs() < 1e-4);
+        assert_eq!(s.params[2], 1.0);
+        assert!((s.params[3] - (1.0 - 0.01)).abs() < 1e-3);
+        assert_eq!(s.step, 1.0);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let g = [1.0f32];
+        let mut s = OptState::new(vec![0.0], crate::config::Optimizer::Sgd);
+        apply_sgd(&mut s, &g, 0.1);
+        assert!((s.params[0] + 0.1).abs() < 1e-7); // -lr * 1
+        apply_sgd(&mut s, &g, 0.1);
+        // m = 0.9*1 + 1 = 1.9 -> total -0.1 - 0.19
+        assert!((s.params[0] + 0.29).abs() < 1e-6);
+    }
+}

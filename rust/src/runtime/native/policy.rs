@@ -1,0 +1,396 @@
+//! Native PPO policy network + update steps, mirroring `python/compile/policy.py`.
+//!
+//! 2x64 tanh trunk with separate logit/value heads over the 16-feature
+//! state; clipped-surrogate PPO (Eq. 1) and the paper's §IV-A simplified
+//! cumulative-return variant, both with entropy bonus, masked minibatches
+//! and Adam. Parameter layout is the `ravel_pytree` order of
+//! `init_policy_params`: `fc0 < fc1 < pi < vf`, `b < w` within each dense.
+
+use super::linalg::*;
+use super::model::{apply_adam, fnv1a, DenseRef};
+use crate::config::PpoVariant;
+use crate::runtime::backend::{OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats};
+use crate::util::rng::Rng;
+
+pub const STATE_DIM: usize = 16;
+pub const N_ACTIONS: usize = 5;
+pub const HIDDEN: usize = 64;
+pub const MAX_WORKERS: usize = 32;
+pub const MINIBATCH: usize = 256;
+
+/// fc0.b | fc0.w | fc1.b | fc1.w | pi.b | pi.w | vf.b | vf.w
+const FC0: DenseRef = DenseRef { b: 0, w: HIDDEN, k: STATE_DIM, n: HIDDEN };
+const FC0_END: usize = HIDDEN + STATE_DIM * HIDDEN;
+const FC1: DenseRef = DenseRef { b: FC0_END, w: FC0_END + HIDDEN, k: HIDDEN, n: HIDDEN };
+const FC1_END: usize = FC0_END + HIDDEN + HIDDEN * HIDDEN;
+const PI: DenseRef = DenseRef { b: FC1_END, w: FC1_END + N_ACTIONS, k: HIDDEN, n: N_ACTIONS };
+const PI_END: usize = FC1_END + N_ACTIONS + HIDDEN * N_ACTIONS;
+const VF: DenseRef = DenseRef { b: PI_END, w: PI_END + 1, k: HIDDEN, n: 1 };
+pub const PARAM_COUNT: usize = PI_END + 1 + HIDDEN;
+
+/// Seeded policy init (`init_policy_params` distributions: 1/sqrt(fan_in)
+/// trunk, near-zero heads so the initial policy is ~uniform and the initial
+/// value ~0).
+pub fn init_policy(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ fnv1a(b"dynamix-policy"));
+    let mut p = vec![0.0f32; PARAM_COUNT];
+    let mut fill = |p: &mut [f32], r: &DenseRef, scale: f64| {
+        for v in &mut p[r.w..r.w + r.k * r.n] {
+            *v = (rng.normal() * scale) as f32;
+        }
+    };
+    fill(&mut p, &FC0, (1.0 / STATE_DIM as f64).sqrt());
+    fill(&mut p, &FC1, (1.0 / HIDDEN as f64).sqrt());
+    fill(&mut p, &PI, 0.01);
+    fill(&mut p, &VF, 0.01);
+    p
+}
+
+/// Trunk forward over `m` state rows: returns (h1, h2, logits, values).
+fn trunk(theta: &[f32], states: &[f32], m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut h1 = vec![0.0f32; m * HIDDEN];
+    matmul_acc(states, &theta[FC0.w..FC0.w + FC0.k * FC0.n], m, STATE_DIM, HIDDEN, &mut h1);
+    add_bias(&mut h1, &theta[FC0.b..FC0.b + HIDDEN], m, HIDDEN);
+    tanh(&mut h1);
+
+    let mut h2 = vec![0.0f32; m * HIDDEN];
+    matmul_acc(&h1, &theta[FC1.w..FC1.w + FC1.k * FC1.n], m, HIDDEN, HIDDEN, &mut h2);
+    add_bias(&mut h2, &theta[FC1.b..FC1.b + HIDDEN], m, HIDDEN);
+    tanh(&mut h2);
+
+    let mut logits = vec![0.0f32; m * N_ACTIONS];
+    matmul_acc(&h2, &theta[PI.w..PI.w + PI.k * PI.n], m, HIDDEN, N_ACTIONS, &mut logits);
+    add_bias(&mut logits, &theta[PI.b..PI.b + N_ACTIONS], m, N_ACTIONS);
+
+    let mut values = vec![0.0f32; m];
+    matmul_acc(&h2, &theta[VF.w..VF.w + HIDDEN], m, HIDDEN, 1, &mut values);
+    let vb = theta[VF.b];
+    for v in &mut values {
+        *v += vb;
+    }
+    (h1, h2, logits, values)
+}
+
+/// `policy_forward`: log-softmax action scores + values for `m` rows.
+pub fn policy_forward(theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut> {
+    anyhow::ensure!(theta.len() == PARAM_COUNT, "theta len {} != {PARAM_COUNT}", theta.len());
+    anyhow::ensure!(
+        states.len() % STATE_DIM == 0,
+        "states len {} not a multiple of {STATE_DIM}",
+        states.len()
+    );
+    let m = states.len() / STATE_DIM;
+    let (_h1, _h2, logits, values) = trunk(theta, states, m);
+    let mut logp = vec![0.0f32; m * N_ACTIONS];
+    log_softmax(&logits, m, N_ACTIONS, &mut logp);
+    Ok(PolicyOut { logp, values })
+}
+
+/// One PPO minibatch step (clipped or simplified), updating `opt` in place.
+pub fn policy_update(
+    variant: PpoVariant,
+    opt: &mut OptState,
+    mb: &PpoMinibatch,
+    hp: PpoHyper,
+) -> anyhow::Result<PpoStats> {
+    let b = mb.mask.len();
+    anyhow::ensure!(opt.params.len() == PARAM_COUNT, "theta len {}", opt.params.len());
+    anyhow::ensure!(mb.states.len() == b * STATE_DIM, "states len mismatch");
+    anyhow::ensure!(
+        mb.actions.len() == b && mb.old_logp.len() == b && mb.advantages.len() == b
+            && mb.returns.len() == b,
+        "minibatch field length mismatch"
+    );
+
+    let theta = &opt.params;
+    let (h1, h2, logits, values) = trunk(theta, mb.states, b);
+    let mut logp = vec![0.0f32; b * N_ACTIONS];
+    log_softmax(&logits, b, N_ACTIONS, &mut logp);
+    let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
+
+    let mut pg_sum = 0.0f64;
+    let mut v_sum = 0.0f64;
+    let mut ent_sum = 0.0f64;
+    let mut kl_sum = 0.0f64;
+    let mut dlogits = vec![0.0f32; b * N_ACTIONS];
+    let mut dvalues = vec![0.0f32; b];
+
+    for i in 0..b {
+        let mi = mb.mask[i];
+        if mi == 0.0 {
+            continue;
+        }
+        let lrow = &logp[i * N_ACTIONS..(i + 1) * N_ACTIONS];
+        let ai = mb.actions[i] as usize;
+        anyhow::ensure!(ai < N_ACTIONS, "action {ai} out of range");
+        let lp = lrow[ai];
+        // Entropy of this row's policy.
+        let mut h_i = 0.0f32;
+        for &l in lrow {
+            h_i -= l.exp() * l;
+        }
+        ent_sum += (h_i * mi) as f64;
+
+        // Policy-gradient coefficient dL/d(logp_i(a_i)).
+        let gpg = match variant {
+            PpoVariant::Clipped => {
+                let ratio = (lp - mb.old_logp[i]).exp();
+                let adv = mb.advantages[i];
+                let unclipped = ratio * adv;
+                let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps) * adv;
+                pg_sum += (unclipped.min(clipped) * mi) as f64;
+                kl_sum += ((mb.old_logp[i] - lp) * mi) as f64;
+                if unclipped <= clipped {
+                    -(mi / denom) * ratio * adv
+                } else {
+                    0.0 // clip is binding: constant branch, zero gradient
+                }
+            }
+            PpoVariant::Simplified => {
+                let ret = mb.returns[i];
+                pg_sum += (lp * ret * mi) as f64;
+                -(mi / denom) * ret
+            }
+        };
+
+        // d(loss)/d(logits): pg term through the softmax Jacobian plus the
+        // entropy bonus gradient ent*(m/D)*p*(logp + H).
+        let drow = &mut dlogits[i * N_ACTIONS..(i + 1) * N_ACTIONS];
+        for j in 0..N_ACTIONS {
+            let pj = lrow[j].exp();
+            drow[j] = -gpg * pj + hp.ent_coef * (mi / denom) * pj * (lrow[j] + h_i);
+        }
+        drow[ai] += gpg;
+
+        let vdiff = values[i] - mb.returns[i];
+        v_sum += ((vdiff * vdiff) * mi) as f64;
+        dvalues[i] = hp.vf_coef * (mi / denom) * 2.0 * vdiff;
+    }
+
+    let pg_loss = (-pg_sum / denom as f64) as f32;
+    let v_loss = (v_sum / denom as f64) as f32;
+    let entropy = (ent_sum / denom as f64) as f32;
+    let approx_kl = match variant {
+        PpoVariant::Clipped => (kl_sum / denom as f64) as f32,
+        PpoVariant::Simplified => 0.0,
+    };
+    let loss = pg_loss + hp.vf_coef * v_loss - hp.ent_coef * entropy;
+
+    // Backward through heads + trunk into a flat gradient.
+    let mut g = vec![0.0f32; PARAM_COUNT];
+    // pi head: dh2 from logits.
+    col_sums(&dlogits, b, N_ACTIONS, &mut g[PI.b..PI.b + N_ACTIONS]);
+    matmul_at(&h2, &dlogits, b, HIDDEN, N_ACTIONS, &mut g[PI.w..PI.w + HIDDEN * N_ACTIONS]);
+    let mut dh2 = vec![0.0f32; b * HIDDEN];
+    matmul_bt(&dlogits, &theta[PI.w..PI.w + HIDDEN * N_ACTIONS], b, HIDDEN, N_ACTIONS, &mut dh2);
+    // vf head: dh2 += dv ⊗ w_vf.
+    let mut dvb = 0.0f32;
+    for &dv in &dvalues {
+        dvb += dv;
+    }
+    g[VF.b] = dvb;
+    for k in 0..HIDDEN {
+        let wk = theta[VF.w + k];
+        let mut gw = 0.0f32;
+        for i in 0..b {
+            gw += h2[i * HIDDEN + k] * dvalues[i];
+            dh2[i * HIDDEN + k] += dvalues[i] * wk;
+        }
+        g[VF.w + k] = gw;
+    }
+
+    tanh_backward(&mut dh2, &h2);
+    col_sums(&dh2, b, HIDDEN, &mut g[FC1.b..FC1.b + HIDDEN]);
+    matmul_at(&h1, &dh2, b, HIDDEN, HIDDEN, &mut g[FC1.w..FC1.w + HIDDEN * HIDDEN]);
+    let mut dh1 = vec![0.0f32; b * HIDDEN];
+    matmul_bt(&dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN], b, HIDDEN, HIDDEN, &mut dh1);
+    tanh_backward(&mut dh1, &h1);
+    col_sums(&dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
+    matmul_at(mb.states, &dh1, b, STATE_DIM, HIDDEN, &mut g[FC0.w..FC0.w + STATE_DIM * HIDDEN]);
+
+    apply_adam(opt, &g, hp.lr);
+
+    Ok(PpoStats { loss, pg_loss, v_loss, entropy, approx_kl })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hp() -> PpoHyper {
+        PpoHyper { lr: 1e-2, clip_eps: 0.2, ent_coef: 0.01, vf_coef: 0.5 }
+    }
+
+    #[test]
+    fn param_count_matches_ravel_pytree() {
+        // fc0 (64 + 16*64) + fc1 (64 + 64*64) + pi (5 + 64*5) + vf (1 + 64).
+        assert_eq!(PARAM_COUNT, 5638);
+        assert_eq!(init_policy(0).len(), PARAM_COUNT);
+    }
+
+    #[test]
+    fn forward_logprobs_normalized_and_near_uniform_at_init() {
+        let theta = init_policy(0);
+        let states = vec![0.1f32; MAX_WORKERS * STATE_DIM];
+        let out = policy_forward(&theta, &states).unwrap();
+        assert_eq!(out.logp.len(), MAX_WORKERS * N_ACTIONS);
+        assert_eq!(out.values.len(), MAX_WORKERS);
+        let uniform = (1.0f32 / N_ACTIONS as f32).ln();
+        for w in 0..MAX_WORKERS {
+            let row = &out.logp[w * N_ACTIONS..(w + 1) * N_ACTIONS];
+            let total: f32 = row.iter().map(|l| l.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4, "worker {w}: {total}");
+            // Near-zero head init => close to uniform, value near 0.
+            for &l in row {
+                assert!((l - uniform).abs() < 0.5, "far from uniform: {l}");
+            }
+            assert!(out.values[w].abs() < 0.5);
+        }
+    }
+
+    /// Build a full padded minibatch rewarding `target` at a fixed state.
+    fn minibatch_for<'a>(
+        target: usize,
+        n: usize,
+        bufs: &'a mut (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> PpoMinibatch<'a> {
+        let (states, actions, old_logp, adv, ret, mask) = bufs;
+        *states = vec![0.0f32; MINIBATCH * STATE_DIM];
+        *actions = vec![0i32; MINIBATCH];
+        *old_logp = vec![(1.0f32 / N_ACTIONS as f32).ln(); MINIBATCH];
+        *adv = vec![0.0f32; MINIBATCH];
+        *ret = vec![0.0f32; MINIBATCH];
+        *mask = vec![0.0f32; MINIBATCH];
+        for i in 0..n {
+            for d in 0..STATE_DIM {
+                states[i * STATE_DIM + d] = 0.2;
+            }
+            let a = i % N_ACTIONS;
+            actions[i] = a as i32;
+            adv[i] = if a == target { 1.0 } else { -0.25 };
+            ret[i] = adv[i];
+            mask[i] = 1.0;
+        }
+        PpoMinibatch {
+            states: states.as_slice(),
+            actions: actions.as_slice(),
+            old_logp: old_logp.as_slice(),
+            advantages: adv.as_slice(),
+            returns: ret.as_slice(),
+            mask: mask.as_slice(),
+        }
+    }
+
+    #[test]
+    fn update_direction_favors_advantaged_action() {
+        // Golden direction test pinned to policy.py semantics: positive
+        // advantage on one action must raise its probability.
+        let mut opt = OptState::adam(init_policy(1));
+        let probe = vec![0.2f32; STATE_DIM];
+        let before = policy_forward(&opt.params, &probe).unwrap().logp[3];
+        let mut bufs = Default::default();
+        for _ in 0..40 {
+            let mb = minibatch_for(3, 64, &mut bufs);
+            let stats = policy_update(PpoVariant::Clipped, &mut opt, &mb, hp()).unwrap();
+            assert!(stats.loss.is_finite());
+            assert!(stats.entropy > 0.0);
+        }
+        let after = policy_forward(&opt.params, &probe).unwrap().logp[3];
+        assert!(
+            after > before + 0.1,
+            "action 3 logp did not rise: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn simplified_variant_reports_zero_kl_and_updates() {
+        let mut opt = OptState::adam(init_policy(2));
+        let t0 = opt.params.clone();
+        let mut bufs = Default::default();
+        let mb = minibatch_for(1, 32, &mut bufs);
+        let stats = policy_update(PpoVariant::Simplified, &mut opt, &mb, hp()).unwrap();
+        assert_eq!(stats.approx_kl, 0.0);
+        assert!(stats.loss.is_finite());
+        assert_ne!(t0, opt.params);
+    }
+
+    #[test]
+    fn masked_rows_do_not_move_params() {
+        // An all-masked minibatch must be a no-op gradient (Adam still
+        // advances its step counter but with g = 0 params stay put).
+        let mut opt = OptState::adam(init_policy(3));
+        let t0 = opt.params.clone();
+        let mut bufs = Default::default();
+        let mb = minibatch_for(0, 0, &mut bufs); // n = 0 valid rows
+        let stats = policy_update(PpoVariant::Clipped, &mut opt, &mb, hp()).unwrap();
+        assert_eq!(stats.loss, 0.0);
+        assert_eq!(t0, opt.params);
+    }
+
+    #[test]
+    fn finite_difference_checks_ppo_gradient() {
+        // Check the hand-derived clipped-PPO gradient against central
+        // differences of the scalar loss at a handful of parameters.
+        let theta0 = init_policy(5);
+        let mut bufs = Default::default();
+        let mb = minibatch_for(2, 48, &mut bufs);
+        let h = hp();
+
+        let loss_at = |theta: &[f32]| -> f64 {
+            // Recompute the loss only (no update): forward + the same sums.
+            let b = mb.mask.len();
+            let (_h1, _h2, logits, values) = super::trunk(theta, mb.states, b);
+            let mut logp = vec![0.0f32; b * N_ACTIONS];
+            log_softmax(&logits, b, N_ACTIONS, &mut logp);
+            let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
+            let (mut pg, mut vl, mut ent) = (0.0f64, 0.0f64, 0.0f64);
+            for i in 0..b {
+                let mi = mb.mask[i];
+                if mi == 0.0 {
+                    continue;
+                }
+                let lrow = &logp[i * N_ACTIONS..(i + 1) * N_ACTIONS];
+                let lp = lrow[mb.actions[i] as usize];
+                let ratio = (lp - mb.old_logp[i]).exp();
+                let adv = mb.advantages[i];
+                let clipped = ratio.clamp(1.0 - h.clip_eps, 1.0 + h.clip_eps) * adv;
+                pg += ((ratio * adv).min(clipped) * mi) as f64;
+                let vd = values[i] - mb.returns[i];
+                vl += (vd * vd * mi) as f64;
+                let mut hi = 0.0f32;
+                for &l in lrow {
+                    hi -= l.exp() * l;
+                }
+                ent += (hi * mi) as f64;
+            }
+            let d = denom as f64;
+            -pg / d + h.vf_coef as f64 * (vl / d) - h.ent_coef as f64 * (ent / d)
+        };
+
+        // Analytic gradient via the Adam first step: run the update from
+        // zero moments; Adam's first step is -lr*sign(g), so recover sign
+        // only — instead, re-derive g by differencing params is lossy.
+        // Cleaner: call policy_update on a clone and read the moment m,
+        // which after one step equals (1-b1)*g / — m = 0.1*g exactly.
+        let mut opt = OptState::adam(theta0.clone());
+        policy_update(PpoVariant::Clipped, &mut opt, &mb, h).unwrap();
+        let g: Vec<f32> = opt.m.iter().map(|m| m / 0.1).collect();
+
+        let mut theta = theta0.clone();
+        for &idx in &[0usize, 100, FC1.w + 7, PI.w + 3, VF.w + 10, PARAM_COUNT - 1] {
+            let eps = 2e-3f32;
+            let orig = theta[idx];
+            theta[idx] = orig + eps;
+            let lp = loss_at(&theta);
+            theta[idx] = orig - eps;
+            let lm = loss_at(&theta);
+            theta[idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs().max(g[idx].abs())),
+                "param {idx}: fd {fd} vs analytic {}",
+                g[idx]
+            );
+        }
+    }
+}

@@ -1,10 +1,15 @@
-//! Lazy-compiling executable store over the PJRT CPU client.
+//! Lazy-compiling executable store over the PJRT CPU client (`backend-xla`).
 //!
 //! Compiling an HLO module takes O(100ms..s); the bucket ladder times six
 //! (model, optimizer) combos would make eager startup ~a minute. The store
 //! compiles on first use and caches `Arc<PjRtLoadedExecutable>` forever
-//! (executables are immutable). A `Mutex<HashMap>` is fine: the hot loop
-//! hits the cache once per iteration and the critical section is a clone.
+//! (executables are immutable).
+//!
+//! Concurrency: each artifact owns a slot (`Arc<Mutex<Option<exe>>>`)
+//! handed out under a short global lock. The first caller holds the slot
+//! lock across its compile, so racing callers for the SAME artifact block
+//! until it lands instead of compiling twice (O(100ms..s) wasted work),
+//! while callers for DIFFERENT artifacts still compile concurrently.
 
 use super::manifest::Manifest;
 use std::collections::HashMap;
@@ -41,11 +46,13 @@ impl Outputs {
     }
 }
 
+type Slot = Arc<Mutex<Option<Arc<PjRtLoadedExecutable>>>>;
+
 /// Compile-and-cache store for every artifact in the manifest.
 pub struct ArtifactStore {
     pub client: PjRtClient,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    slots: Mutex<HashMap<String, Slot>>,
     /// (artifact, compile_seconds) log for EXPERIMENTS.md §Perf.
     compile_log: Mutex<Vec<(String, f64)>>,
 }
@@ -58,7 +65,7 @@ impl ArtifactStore {
         Ok(ArtifactStore {
             client,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            slots: Mutex::new(HashMap::new()),
             compile_log: Mutex::new(Vec::new()),
         })
     }
@@ -68,9 +75,16 @@ impl ArtifactStore {
         Self::open(&super::manifest::default_artifacts_dir())
     }
 
-    /// Get (lazily compiling) the executable for `name`.
+    /// Get (lazily compiling) the executable for `name`. Concurrent callers
+    /// of the same artifact serialize on its slot: exactly one compiles,
+    /// the rest wait and reuse the result.
     pub fn get(&self, name: &str) -> anyhow::Result<Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        let slot: Slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.entry(name.to_string()).or_default().clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(exe) = guard.as_ref() {
             return Ok(exe.clone());
         }
         let meta = self.manifest.artifact(name)?;
@@ -86,8 +100,7 @@ impl ArtifactStore {
         );
         let dt = t0.elapsed().as_secs_f64();
         self.compile_log.lock().unwrap().push((name.to_string(), dt));
-        // Racing compilers of the same artifact: last wins, both valid.
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        *guard = Some(exe.clone());
         Ok(exe)
     }
 
@@ -124,8 +137,17 @@ impl ArtifactStore {
     }
 
     /// Number of executables compiled so far (for tests/overhead reports).
+    /// Snapshots the slot handles before inspecting them so an in-flight
+    /// compile (which holds its slot lock) never blocks this call — and
+    /// this call never holds the global lock across slot locks, which
+    /// would stall unrelated `get()`s. A slot whose compile is still in
+    /// flight counts as not-yet-compiled.
     pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        let slots: Vec<Slot> = self.slots.lock().unwrap().values().cloned().collect();
+        slots
+            .iter()
+            .filter(|s| s.try_lock().map(|g| g.is_some()).unwrap_or(false))
+            .count()
     }
 
     /// Snapshot of the compile log: (artifact, seconds).
@@ -137,7 +159,6 @@ impl ArtifactStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{lit_f32, lit_i32, lit_scalar1};
 
     fn store() -> ArtifactStore {
         ArtifactStore::open_default().expect("run `make artifacts` before cargo test")
@@ -155,54 +176,20 @@ mod tests {
     }
 
     #[test]
-    fn run_train_step_decreases_loss_on_fixed_batch() {
-        let s = store();
-        let m = &s.manifest;
-        let name = m.train_artifact("vgg11_mini", "sgd", 32);
-        let pc = m.model("vgg11_mini").unwrap().param_count;
-        let fd = m.feature_dim;
-
-        let mut params = lit_f32(&m.load_init_params("vgg11_mini", 0).unwrap(), &[pc as i64]).unwrap();
-        let mut mom = lit_f32(&vec![0.0; pc], &[pc as i64]).unwrap();
-        let mut vv = lit_scalar1(0.0);
-        let mut step = lit_scalar1(0.0);
-
-        // Deterministic learnable batch: y = argmax over 10 fixed projections.
-        let mut rng = crate::util::rng::Rng::new(9);
-        let x: Vec<f32> = (0..32 * fd).map(|_| rng.normal() as f32).collect();
-        let proto: Vec<f32> = (0..10 * fd).map(|_| rng.normal() as f32).collect();
-        let y: Vec<i32> = (0..32)
-            .map(|i| {
-                (0..10)
-                    .max_by(|&a, &b| {
-                        let da: f32 = (0..fd).map(|j| x[i * fd + j] * proto[a * fd + j]).sum();
-                        let db: f32 = (0..fd).map(|j| x[i * fd + j] * proto[b * fd + j]).sum();
-                        da.partial_cmp(&db).unwrap()
-                    })
-                    .unwrap() as i32
-            })
-            .collect();
-        let xl = lit_f32(&x, &[32, fd as i64]).unwrap();
-        let yl = lit_i32(&y, &[32]).unwrap();
-        let mask = lit_f32(&vec![1.0; 32], &[32]).unwrap();
-        let lr = lit_scalar1(0.05);
-
-        let mut losses = Vec::new();
-        for _ in 0..25 {
-            let mut out = s
-                .run(&name, &[&params, &mom, &vv, &step, &xl, &yl, &mask, &lr])
-                .unwrap();
-            losses.push(out.scalar_f32(4).unwrap());
-            params = out.take(0);
-            mom = out.take(1);
-            vv = out.take(2);
-            step = out.take(3);
+    fn concurrent_get_compiles_exactly_once() {
+        let s = std::sync::Arc::new(store());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                s.get("policy_forward").unwrap();
+            }));
         }
-        assert!(losses.iter().all(|l| l.is_finite()));
-        assert!(
-            losses[24] < losses[0] * 0.8,
-            "loss did not decrease: {losses:?}"
-        );
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.compile_log().len(), 1, "in-flight guard failed: double compile");
+        assert_eq!(s.compiled_count(), 1);
     }
 
     #[test]
@@ -211,26 +198,5 @@ mod tests {
         let empty: [&Literal; 0] = [];
         let err = s.run("policy_forward", &empty).unwrap_err().to_string();
         assert!(err.contains("manifest says"), "{err}");
-    }
-
-    #[test]
-    fn policy_forward_logprobs_normalized() {
-        let s = store();
-        let m = &s.manifest;
-        let theta = lit_f32(&m.load_init_policy(0).unwrap(), &[m.policy_param_count as i64]).unwrap();
-        let states = lit_f32(
-            &vec![0.1; m.max_workers * m.state_dim],
-            &[m.max_workers as i64, m.state_dim as i64],
-        )
-        .unwrap();
-        let out = s.run("policy_forward", &[theta, states]).unwrap();
-        let logp = out.vec_f32(0).unwrap();
-        assert_eq!(logp.len(), m.max_workers * m.n_actions);
-        for w in 0..m.max_workers {
-            let total: f32 = (0..m.n_actions)
-                .map(|a| logp[w * m.n_actions + a].exp())
-                .sum();
-            assert!((total - 1.0).abs() < 1e-4, "worker {w}: {total}");
-        }
     }
 }

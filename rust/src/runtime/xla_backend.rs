@@ -1,0 +1,205 @@
+//! [`ComputeBackend`] implementation over the PJRT [`ArtifactStore`]
+//! (`backend-xla` feature).
+//!
+//! Thin adapter: flat `f32` state crosses the trait as slices and is
+//! wrapped into literals per call. On the CPU PJRT plugin "device" memory
+//! is host memory, so this costs one memcpy per argument — negligible
+//! against the train-step compute (measured in EXPERIMENTS.md §Perf; the
+//! buffer-resident alternative is documented in DESIGN.md §Perf).
+
+use super::backend::{
+    ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
+};
+use super::store::ArtifactStore;
+use super::{lit_f32, lit_i32, lit_scalar1};
+use crate::config::{Optimizer, PpoVariant};
+use std::path::Path;
+
+pub struct XlaBackend {
+    store: ArtifactStore,
+    schema: Schema,
+}
+
+impl XlaBackend {
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let store = ArtifactStore::open(dir)?;
+        let m = &store.manifest;
+        let schema = Schema {
+            buckets: m.buckets.clone(),
+            eval_batch: m.eval_batch,
+            state_dim: m.state_dim,
+            n_actions: m.n_actions,
+            max_workers: m.max_workers,
+            ppo_minibatch: m.ppo_minibatch,
+            feature_dim: m.feature_dim,
+            policy_param_count: m.policy_param_count,
+            models: m.models.clone(),
+        };
+        Ok(XlaBackend { store, schema })
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(&super::manifest::default_artifacts_dir())
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn init_params(&self, model: &str, seed: u64) -> anyhow::Result<Vec<f32>> {
+        self.store.manifest.load_init_params(model, seed)
+    }
+
+    fn init_policy(&self, seed: u64) -> anyhow::Result<Vec<f32>> {
+        self.store.manifest.load_init_policy(seed)
+    }
+
+    fn policy_forward(&self, theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut> {
+        let pc = self.schema.policy_param_count;
+        anyhow::ensure!(theta.len() == pc, "theta len {} != {pc}", theta.len());
+        let theta_l = lit_f32(theta, &[pc as i64])?;
+        let states_l = lit_f32(
+            states,
+            &[self.schema.max_workers as i64, self.schema.state_dim as i64],
+        )?;
+        let out = self.store.run("policy_forward", &[&theta_l, &states_l])?;
+        Ok(PolicyOut {
+            logp: out.vec_f32(0)?,
+            values: out.vec_f32(1)?,
+        })
+    }
+
+    fn policy_update(
+        &self,
+        variant: PpoVariant,
+        opt: &mut OptState,
+        mb: &PpoMinibatch,
+        hp: PpoHyper,
+    ) -> anyhow::Result<PpoStats> {
+        let artifact = match variant {
+            PpoVariant::Clipped => "policy_update",
+            PpoVariant::Simplified => "policy_update_simple",
+        };
+        let pc = self.schema.policy_param_count;
+        let b = mb.mask.len() as i64;
+        let sd = self.schema.state_dim as i64;
+        let out = self.store.run(
+            artifact,
+            &[
+                &lit_f32(&opt.params, &[pc as i64])?,
+                &lit_f32(&opt.m, &[pc as i64])?,
+                &lit_f32(&opt.v, &[pc as i64])?,
+                &lit_scalar1(opt.step),
+                &lit_f32(mb.states, &[b, sd])?,
+                &lit_i32(mb.actions, &[b])?,
+                &lit_f32(mb.old_logp, &[b])?,
+                &lit_f32(mb.advantages, &[b])?,
+                &lit_f32(mb.returns, &[b])?,
+                &lit_f32(mb.mask, &[b])?,
+                &lit_scalar1(hp.lr),
+                &lit_scalar1(hp.clip_eps),
+                &lit_scalar1(hp.ent_coef),
+                &lit_scalar1(hp.vf_coef),
+            ],
+        )?;
+        let stats = PpoStats {
+            loss: out.scalar_f32(4)?,
+            pg_loss: out.scalar_f32(5)?,
+            v_loss: out.scalar_f32(6)?,
+            entropy: out.scalar_f32(7)?,
+            approx_kl: out.scalar_f32(8)?,
+        };
+        opt.params = out.vec_f32(0)?;
+        opt.m = out.vec_f32(1)?;
+        opt.v = out.vec_f32(2)?;
+        opt.step = out.scalar_f32(3)?;
+        Ok(stats)
+    }
+
+    fn train_step(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut> {
+        let name = self
+            .store
+            .manifest
+            .train_artifact(model, optimizer.as_str(), bucket);
+        let pc = state.params.len() as i64;
+        let fd = self.schema.feature_dim as i64;
+        let b = bucket as i64;
+        let out = self.store.run(
+            &name,
+            &[
+                &lit_f32(&state.params, &[pc])?,
+                &lit_f32(&state.m, &[state.m.len() as i64])?,
+                &lit_f32(&state.v, &[state.v.len() as i64])?,
+                &lit_scalar1(state.step),
+                &lit_f32(x, &[b, fd])?,
+                &lit_i32(y, &[b])?,
+                &lit_f32(mask, &[b])?,
+                &lit_scalar1(lr),
+            ],
+        )?;
+        let metrics = TrainOut {
+            loss: out.scalar_f32(4)?,
+            acc: out.scalar_f32(5)?,
+            correct: out.vec_f32(6)?,
+            sigma_norm: out.scalar_f32(7)?,
+            sigma_norm2: out.scalar_f32(8)?,
+            grad_l2: out.scalar_f32(9)?,
+        };
+        state.params = out.vec_f32(0)?;
+        state.m = out.vec_f32(1)?;
+        state.v = out.vec_f32(2)?;
+        state.step = out.scalar_f32(3)?;
+        Ok(metrics)
+    }
+
+    fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> anyhow::Result<(f32, f32)> {
+        let name = self.store.manifest.eval_artifact(model);
+        let m = mask.len() as i64;
+        let fd = self.schema.feature_dim as i64;
+        let out = self.store.run(
+            &name,
+            &[
+                &lit_f32(params, &[params.len() as i64])?,
+                &lit_f32(x, &[m, fd])?,
+                &lit_i32(y, &[m])?,
+                &lit_f32(mask, &[m])?,
+            ],
+        )?;
+        Ok((out.scalar_f32(0)?, out.scalar_f32(1)?))
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.store.compiled_count()
+    }
+
+    fn compile_log(&self) -> Vec<(String, f64)> {
+        self.store.compile_log()
+    }
+}

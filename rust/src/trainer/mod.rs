@@ -1,9 +1,9 @@
-//! BSP distributed-training loop over the AOT train-step artifacts.
+//! BSP distributed-training loop over the backend train-step kernels.
 //!
 //! Two pieces:
 //!
-//! * [`ModelRuntime`]  — owns the flat model/optimizer state literals and
-//!   drives the per-bucket `train_*` / `eval_*` executables.
+//! * [`ModelRuntime`]  — owns the flat model/optimizer state and drives the
+//!   backend's per-bucket train/eval steps.
 //! * [`BspTrainer`]    — one global BSP iteration at a time:
 //!   1. every worker draws its shard indices (`data::ShardSampler`);
 //!   2. the per-worker batches are concatenated, padded to the bucket
@@ -23,11 +23,9 @@ use crate::cluster::SimCluster;
 use crate::config::{ExperimentConfig, Optimizer, Topology};
 use crate::data::{ShardSampler, SyntheticDataset};
 use crate::netsim::NetworkSim;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar1, ArtifactStore, Manifest};
+use crate::runtime::{Backend, OptState, Schema};
 use crate::sysmetrics::{Collector, WindowAggregator};
-use std::sync::Arc;
 use std::time::Instant;
-use xla::Literal;
 
 /// Outputs of one fused train step (global view + per-sample correctness).
 #[derive(Debug)]
@@ -39,79 +37,58 @@ pub struct StepMetrics {
     pub grad_l2: f64,
     /// Per-sample masked correctness, length = bucket.
     pub correct: Vec<f32>,
-    /// Real wall-clock of the PJRT execution (perf accounting only).
+    /// Real wall-clock of the backend execution (perf accounting only).
     pub exec_seconds: f64,
 }
 
-/// Owns model + optimizer state; executes train/eval artifacts.
+/// Owns model + optimizer state; executes train/eval steps on a backend.
 pub struct ModelRuntime {
-    store: Arc<ArtifactStore>,
+    backend: Backend,
     pub model: String,
     pub optimizer: Optimizer,
-    params: Literal,
-    m: Literal,
-    v: Literal,
-    step: Literal,
-    lr: Literal,
+    state: OptState,
+    lr: f32,
     pub param_count: usize,
     pub feature_dim: usize,
-    /// Total PJRT execution seconds + count (for §Perf / overhead).
+    /// Total backend execution seconds + count (for §Perf / overhead).
     pub exec_seconds_total: f64,
     pub exec_count: usize,
-    eval_cache: Option<(Literal, Literal, Literal)>,
+    eval_cache: Option<(Vec<f32>, Vec<i32>, Vec<f32>)>,
 }
 
 impl ModelRuntime {
     pub fn new(
-        store: Arc<ArtifactStore>,
+        backend: Backend,
         model: &str,
         optimizer: Optimizer,
         lr: f32,
         seed: u64,
     ) -> anyhow::Result<Self> {
-        let info = store.manifest.model(model)?.clone();
-        let pc = info.param_count;
-        let params = lit_f32(&store.manifest.load_init_params(model, seed)?, &[pc as i64])?;
-        let m = lit_f32(&vec![0.0; pc], &[pc as i64])?;
-        let v = match optimizer {
-            Optimizer::Adam => lit_f32(&vec![0.0; pc], &[pc as i64])?,
-            Optimizer::Sgd => lit_scalar1(0.0),
-        };
+        let info = backend.schema().model(model)?.clone();
+        let params = backend.init_params(model, seed)?;
         Ok(ModelRuntime {
-            store,
             model: model.to_string(),
             optimizer,
-            params,
-            m,
-            v,
-            step: lit_scalar1(0.0),
-            lr: lit_scalar1(lr),
-            param_count: pc,
+            state: OptState::new(params, optimizer),
+            lr,
+            param_count: info.param_count,
             feature_dim: info.feature_dim,
             exec_seconds_total: 0.0,
             exec_count: 0,
             eval_cache: None,
+            backend,
         })
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.store.manifest
+    pub fn schema(&self) -> &Schema {
+        self.backend.schema()
     }
 
     /// Reset model + optimizer state to the seeded init snapshot
     /// (Algorithm 1 / §VI-C: every episode restarts from scratch).
     pub fn reset(&mut self, seed: u64) -> anyhow::Result<()> {
-        let pc = self.param_count;
-        self.params = lit_f32(
-            &self.store.manifest.load_init_params(&self.model, seed)?,
-            &[pc as i64],
-        )?;
-        self.m = lit_f32(&vec![0.0; pc], &[pc as i64])?;
-        self.v = match self.optimizer {
-            Optimizer::Adam => lit_f32(&vec![0.0; pc], &[pc as i64])?,
-            Optimizer::Sgd => lit_scalar1(0.0),
-        };
-        self.step = lit_scalar1(0.0);
+        let params = self.backend.init_params(&self.model, seed)?;
+        self.state = OptState::new(params, self.optimizer);
         Ok(())
     }
 
@@ -135,58 +112,47 @@ impl ModelRuntime {
         anyhow::ensure!(xs.len() == bucket * self.feature_dim, "xs wrong size");
         anyhow::ensure!(ys.len() == bucket, "ys wrong size");
         anyhow::ensure!(n_valid <= bucket, "n_valid > bucket");
-        let name =
-            self.store
-                .manifest
-                .train_artifact(&self.model, self.optimizer.as_str(), bucket);
-        let x_l = lit_f32(xs, &[bucket as i64, self.feature_dim as i64])?;
-        let y_l = lit_i32(ys, &[bucket as i64])?;
         let mut mask = vec![0.0f32; bucket];
         mask[..n_valid].fill(1.0);
-        let mask_l = lit_f32(&mask, &[bucket as i64])?;
 
         let t0 = Instant::now();
-        let mut out = self.store.run(
-            &name,
-            &[
-                &self.params, &self.m, &self.v, &self.step, &x_l, &y_l, &mask_l, &self.lr,
-            ],
+        let out = self.backend.train_step(
+            &self.model,
+            self.optimizer,
+            bucket,
+            &mut self.state,
+            xs,
+            ys,
+            &mask,
+            self.lr,
         )?;
         let exec_seconds = t0.elapsed().as_secs_f64();
         self.exec_seconds_total += exec_seconds;
         self.exec_count += 1;
 
-        let metrics = StepMetrics {
-            loss: out.scalar_f32(4)? as f64,
-            acc: out.scalar_f32(5)? as f64,
-            correct: out.vec_f32(6)?,
-            sigma_norm: out.scalar_f32(7)? as f64,
-            sigma_norm2: out.scalar_f32(8)? as f64,
-            grad_l2: out.scalar_f32(9)? as f64,
+        Ok(StepMetrics {
+            loss: out.loss as f64,
+            acc: out.acc as f64,
+            correct: out.correct,
+            sigma_norm: out.sigma_norm as f64,
+            sigma_norm2: out.sigma_norm2 as f64,
+            grad_l2: out.grad_l2 as f64,
             exec_seconds,
-        };
-        self.params = out.take(0);
-        self.m = out.take(1);
-        self.v = out.take(2);
-        self.step = out.take(3);
-        Ok(metrics)
+        })
     }
 
     /// Held-out evaluation on the dataset's fixed eval batch.
     pub fn eval(&mut self, dataset: &SyntheticDataset) -> anyhow::Result<(f64, f64)> {
-        let eb = self.store.manifest.eval_batch;
+        let eb = self.backend.schema().eval_batch;
         if self.eval_cache.is_none() {
             let (xs, ys) = dataset.eval_batch(eb);
-            self.eval_cache = Some((
-                lit_f32(&xs, &[eb as i64, self.feature_dim as i64])?,
-                lit_i32(&ys, &[eb as i64])?,
-                lit_f32(&vec![1.0; eb], &[eb as i64])?,
-            ));
+            self.eval_cache = Some((xs, ys, vec![1.0; eb]));
         }
-        let (x_l, y_l, mask_l) = self.eval_cache.as_ref().unwrap();
-        let name = self.store.manifest.eval_artifact(&self.model);
-        let out = self.store.run(&name, &[&self.params, x_l, y_l, mask_l])?;
-        Ok((out.scalar_f32(0)? as f64, out.scalar_f32(1)? as f64))
+        let (xs, ys, mask) = self.eval_cache.as_ref().unwrap();
+        let (loss, acc) = self
+            .backend
+            .eval_step(&self.model, &self.state.params, xs, ys, mask)?;
+        Ok((loss as f64, acc as f64))
     }
 }
 
@@ -263,12 +229,12 @@ pub struct BspTrainer {
 }
 
 impl BspTrainer {
-    pub fn new(cfg: &ExperimentConfig, store: Arc<ArtifactStore>) -> anyhow::Result<Self> {
+    pub fn new(cfg: &ExperimentConfig, backend: Backend) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let info = store.manifest.model(&cfg.train.model)?.clone();
+        let info = backend.schema().model(&cfg.train.model)?.clone();
         let dataset = crate::data::by_name(&info.dataset, info.feature_dim, cfg.train.seed)?;
         let runtime = ModelRuntime::new(
-            store,
+            backend,
             &cfg.train.model,
             cfg.train.optimizer,
             cfg.train.lr,
@@ -329,7 +295,7 @@ impl BspTrainer {
         let n_workers = self.n_workers();
         let fd = self.runtime.feature_dim;
         let total: usize = self.batches.iter().sum();
-        let bucket = self.runtime.manifest().bucket_for(total)?;
+        let bucket = self.runtime.schema().bucket_for(total)?;
 
         // --- assemble the fused global batch ---
         self.xs_scratch.resize(bucket * fd, 0.0);
@@ -356,7 +322,7 @@ impl BspTrainer {
         }
         self.offsets_scratch.push(row);
 
-        // --- one fused PJRT execution (== per-worker grads + all-reduce) ---
+        // --- one fused backend execution (== per-worker grads + all-reduce) ---
         let metrics = self
             .runtime
             .train_step(&self.xs_scratch, &self.ys_scratch, total, bucket)?;
@@ -424,12 +390,12 @@ impl BspTrainer {
     /// Calibrate the cluster cost model: simulated compute is priced from
     /// the analytic full-size table (see [`full_size_cost`]) so the
     /// compute/communication balance matches the paper's testbeds; the
-    /// real PJRT step is still measured here and logged for §Perf.
+    /// real backend step is still measured here and logged for §Perf.
     pub fn calibrate(&mut self) -> anyhow::Result<()> {
         let (us_per_sample, fixed_us) = full_size_cost(&self.runtime.model);
         self.cluster.cost.base_us_per_sample = us_per_sample;
         self.cluster.cost.fixed_us = fixed_us;
-        // Warm the common bucket executable + record a real measurement.
+        // Warm the common bucket path + record a real measurement.
         let fd = self.runtime.feature_dim;
         let bucket = 256;
         let xs = vec![0.1f32; bucket * fd];
@@ -445,6 +411,7 @@ impl BspTrainer {
 mod tests {
     use super::*;
     use crate::config::{ClusterPreset, ExperimentConfig};
+    use crate::runtime::{native_backend, Backend};
 
     fn small_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -454,13 +421,13 @@ mod tests {
         cfg
     }
 
-    fn store() -> Arc<ArtifactStore> {
-        Arc::new(ArtifactStore::open_default().unwrap())
+    fn backend() -> Backend {
+        native_backend()
     }
 
     #[test]
     fn iterate_advances_clock_and_learns() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         let mut first_acc = 0.0;
         let mut last_acc = 0.0;
         for i in 0..30 {
@@ -481,7 +448,7 @@ mod tests {
 
     #[test]
     fn per_worker_windows_fill_and_track_accuracy() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         for _ in 0..5 {
             t.iterate().unwrap();
         }
@@ -495,7 +462,7 @@ mod tests {
 
     #[test]
     fn unequal_batches_slice_correctly() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         t.batches = vec![32, 64, 96, 128];
         let out = t.iterate().unwrap();
         assert_eq!(out.global_batch, 320);
@@ -507,7 +474,7 @@ mod tests {
 
     #[test]
     fn eval_improves_with_training() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         let (_, acc0) = t.eval().unwrap();
         for _ in 0..40 {
             t.iterate().unwrap();
@@ -521,7 +488,7 @@ mod tests {
 
     #[test]
     fn reset_episode_restores_initial_state() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         for _ in 0..10 {
             t.iterate().unwrap();
         }
@@ -542,7 +509,7 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.cluster.preset = ClusterPreset::FabricHetero;
         cfg.cluster.n_workers = 8;
-        let mut t = BspTrainer::new(&cfg, store()).unwrap();
+        let mut t = BspTrainer::new(&cfg, backend()).unwrap();
         t.iterate().unwrap();
         let w_fast = t.windows[0].finish();
         let w_slow = t.windows[7].finish();
@@ -551,7 +518,7 @@ mod tests {
 
     #[test]
     fn calibrate_prices_full_size_compute() {
-        let mut t = BspTrainer::new(&small_cfg(), store()).unwrap();
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
         t.calibrate().unwrap();
         assert_eq!(t.cluster.cost.base_us_per_sample, full_size_cost("vgg11_mini").0);
         assert!(t.runtime.exec_count >= 2, "real step still measured for §Perf");

@@ -5,13 +5,12 @@
 use dynamix::comm::{channel_pair, Msg, Transport};
 use dynamix::config::{ClusterPreset, ExperimentConfig};
 use dynamix::rl::state::StateVector;
-use dynamix::runtime::{ArtifactStore, Manifest};
+use dynamix::runtime::{default_backend, Backend, Manifest};
 use dynamix::trainer::BspTrainer;
 use std::path::PathBuf;
-use std::sync::Arc;
 
-fn store() -> Arc<ArtifactStore> {
-    Arc::new(ArtifactStore::open_default().expect("run `make artifacts` first"))
+fn store() -> Backend {
+    default_backend().expect("backend selection failed")
 }
 
 fn temp_dir(name: &str) -> PathBuf {
@@ -39,11 +38,15 @@ fn corrupted_manifest_rejected() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+// Artifact-file failure modes only exist on the XLA path; these skip
+// cleanly on artifact-less (native) builds.
+#[cfg(feature = "backend-xla")]
 #[test]
 fn missing_hlo_file_fails_at_compile_not_load() {
+    use dynamix::runtime::ArtifactStore;
     // Store opens fine (lazy compile), then fails with the artifact name
     // when the file is gone.
-    let s = store();
+    let s = ArtifactStore::open_default().expect("run `make artifacts` first");
     let real_dir = s.manifest.dir.clone();
     let d = temp_dir("missinghlo");
     std::fs::copy(real_dir.join("manifest.json"), d.join("manifest.json")).unwrap();
@@ -63,15 +66,30 @@ fn missing_hlo_file_fails_at_compile_not_load() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn truncated_init_snapshot_rejected() {
-    let s = store();
+    use dynamix::runtime::ArtifactStore;
+    let s = ArtifactStore::open_default().expect("run `make artifacts` first");
     let d = temp_dir("shortinit");
     std::fs::copy(s.manifest.dir.join("manifest.json"), d.join("manifest.json")).unwrap();
     std::fs::write(d.join("init_vgg11_mini_seed0.f32"), [0u8; 10]).unwrap();
     let broken = ArtifactStore::open(&d).unwrap();
     assert!(broken.manifest.load_init_params("vgg11_mini", 0).is_err());
     std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn native_backend_rejects_unknown_model_everywhere() {
+    // Failure mode parity with the old missing-artifact errors: every
+    // model-keyed entry point must name the offending model.
+    let b = dynamix::runtime::native_backend();
+    let err = b.init_params("vgg99_mini", 0).unwrap_err().to_string();
+    assert!(err.contains("vgg99_mini"), "{err}");
+    assert!(b.schema().model("nope").is_err());
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.model = "nope".into();
+    assert!(BspTrainer::new(&cfg, b).is_err());
 }
 
 #[test]
@@ -128,7 +146,7 @@ fn trainer_rejects_oversized_global_batch() {
     cfg.cluster.n_workers = 4;
     let mut t = BspTrainer::new(&cfg, store()).unwrap();
     // Force a global batch beyond the bucket ladder.
-    let &max_bucket = t.runtime.manifest().buckets.last().unwrap();
+    let &max_bucket = t.runtime.schema().buckets.last().unwrap();
     t.batches = vec![max_bucket; 4];
     let err = t.iterate().unwrap_err().to_string();
     assert!(err.contains("exceeds largest bucket"), "{err}");

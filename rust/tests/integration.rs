@@ -9,11 +9,10 @@ use dynamix::baselines::{run_baseline, GnsHeuristicPolicy, SmithSchedulePolicy, 
 use dynamix::config::{presets, ExperimentConfig, Optimizer, PpoVariant, Scale, Topology};
 use dynamix::coordinator::Coordinator;
 use dynamix::metrics::RunRecord;
-use dynamix::runtime::ArtifactStore;
-use std::sync::Arc;
+use dynamix::runtime::{default_backend, Backend};
 
-fn store() -> Arc<ArtifactStore> {
-    Arc::new(ArtifactStore::open_default().expect("run `make artifacts` first"))
+fn store() -> Backend {
+    default_backend().expect("backend selection failed")
 }
 
 fn tiny_cfg() -> ExperimentConfig {
@@ -167,17 +166,26 @@ fn every_preset_constructs_a_coordinator() {
 }
 
 #[test]
-fn all_manifest_train_artifacts_have_uniform_schema() {
+fn backend_schema_is_uniform_and_ladder_shaped() {
     let s = store();
-    for (name, a) in &s.manifest.artifacts {
-        if a.kind == "train_step" {
-            assert_eq!(a.inputs.len(), 8, "{name}");
-            assert_eq!(a.outputs.len(), 10, "{name}");
-            let bucket = a.bucket.unwrap();
-            assert_eq!(a.inputs[4].shape[0], bucket, "{name} x shape");
-            assert_eq!(a.outputs[6].shape, vec![bucket], "{name} correct vec");
-        }
+    let schema = s.schema();
+    assert!(schema.buckets.windows(2).all(|w| w[0] < w[1]), "buckets unsorted");
+    assert_eq!(schema.state_dim, 16);
+    assert_eq!(schema.n_actions, 5);
+    // Depth ladders within each family must order parameter counts, so the
+    // Fig. 6 transfer pairs (shallow -> deep) stay meaningful.
+    let pc = |m: &str| schema.model(m).unwrap().param_count;
+    assert!(pc("vgg11_mini") < pc("vgg16_mini"));
+    assert!(pc("vgg16_mini") < pc("vgg19_mini"));
+    assert!(pc("resnet34_mini") < pc("resnet50_mini"));
+    // Every model's init snapshot matches its declared parameter count.
+    for (name, info) in &schema.models {
+        let p = s.init_params(name, 0).unwrap();
+        assert_eq!(p.len(), info.param_count, "{name}");
+        assert!(p.iter().all(|v| v.is_finite()), "{name}");
     }
+    let pol = s.init_policy(0).unwrap();
+    assert_eq!(pol.len(), schema.policy_param_count);
 }
 
 #[test]

@@ -1,0 +1,127 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment for this repo has no network access and no crates.io
+//! mirror, so the crate graph must be fully self-contained. This shim covers
+//! exactly the surface the dynamix crate uses — `Result`, `Error`,
+//! `anyhow!`, `bail!`, `ensure!`, and `?`-conversion from any
+//! `std::error::Error` — with the same observable behaviour (message
+//! formatting, source-chain rendering under `{:#}` and in converted errors).
+//! If a registry ever becomes available, deleting `rust/vendor` and pointing
+//! Cargo.toml at the real `anyhow = "1"` is a drop-in swap.
+
+use std::fmt;
+
+/// String-backed error value. Deliberately does NOT implement
+/// `std::error::Error`, exactly like the real `anyhow::Error` — that is what
+/// makes the blanket `From<E: std::error::Error>` impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Attach context, mirroring `anyhow::Error::context` semantics
+    /// (context first, original message behind it).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The real anyhow renders the cause chain under `{:#}`; the shim
+        // flattens chains at conversion time, so both forms are the msg.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("fmt {args}")` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt {args}")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "fmt {args}")` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macros_and_conversion() {
+        let e: Error = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        assert_eq!(format!("{e:#}"), "x = 7");
+        assert_eq!(format!("{e:?}"), "x = 7");
+
+        fn bails(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", 1)
+        }
+        assert_eq!(bails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(bails(true).unwrap_err().to_string(), "unreachable 1");
+
+        let io = io_fail().unwrap_err().to_string();
+        assert!(!io.is_empty());
+    }
+}
