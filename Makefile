@@ -11,7 +11,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 
-.PHONY: build test bench artifacts artifacts-smoke clean-artifacts
+.PHONY: build test bench bench-quick artifacts artifacts-smoke clean-artifacts
 
 build:
 	cd rust && $(CARGO) build --release
@@ -19,8 +19,17 @@ build:
 test:
 	cd rust && $(CARGO) test -q
 
+# Full benchmark sweep. Every bench binary appends a machine-readable run
+# record (git rev, DYNAMIX_THREADS, p10/p50/p90, samples/s) to
+# BENCH_native.json — the repo's perf trajectory. Tune with e.g.
+#   DYNAMIX_THREADS=1 DYNAMIX_BENCH_NOTE=scalar-baseline make bench
 bench:
 	cd rust && $(CARGO) bench
+
+# Smoke sweep (tiny warmup/iteration counts) for CI: exercises every bench
+# path and still records BENCH_native.json, in seconds.
+bench-quick:
+	cd rust && DYNAMIX_BENCH_QUICK=1 $(CARGO) bench
 
 # Full artifact set: every (model, optimizer, bucket) combo (§VI grid).
 artifacts:

@@ -11,10 +11,11 @@ use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
 use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
 use dynamix::runtime::default_backend;
 use dynamix::sysmetrics::WindowSummary;
-use dynamix::util::bench::bench;
+use dynamix::util::bench::{bench, iters, BenchSession};
 
 fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
+    let mut session = BenchSession::new("ablations");
     let builder = StateBuilder::default();
     let summary = WindowSummary { acc_mean: 0.5, iter_time_mean: 0.1, ..Default::default() };
     let global = GlobalState { n_workers: 16, ..Default::default() };
@@ -42,9 +43,11 @@ fn main() -> anyhow::Result<()> {
             RlConfig { variant, update_epochs: 1, ..Default::default() },
             0,
         )?;
-        bench(&format!("update/{variant:?}"), 2, 10, || {
+        let (w, n) = iters(2, 10);
+        let r = bench(&format!("update/{variant:?}"), w, n, || {
             agent.update(&batch).unwrap();
         });
+        session.push(&r);
     }
 
     println!("\n== fused forward (32 workers, 1 call) vs 32 single-row calls ==");
@@ -52,13 +55,20 @@ fn main() -> anyhow::Result<()> {
     let states: Vec<StateVector> = (0..32)
         .map(|w| builder.build(&summary, 64 + w * 8, &global))
         .collect();
-    bench("forward/fused32", 5, 40, || {
+    let (w, n) = iters(5, 40);
+    let r = bench("forward/fused32", w, n, || {
         agent.act(&states, false).unwrap();
     });
-    bench("forward/32x1", 2, 10, || {
+    session.push(&r);
+    let (w, n) = iters(2, 10);
+    let r = bench("forward/32x1", w, n, || {
         for s in &states {
             agent.act(std::slice::from_ref(s), false).unwrap();
         }
     });
+    session.push(&r);
+
+    let path = session.flush()?;
+    println!("\nrecorded run -> {}", path.display());
     Ok(())
 }

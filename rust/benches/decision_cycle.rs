@@ -1,7 +1,8 @@
 //! §VI-H hot path: the arbitrator decision cycle.
 //! state assembly -> policy_forward -> action sampling, plus the PPO
 //! minibatch update. The overhead claim (decision < 0.1% of iteration
-//! time) is checked against the measured train_step cost.
+//! time) is checked against the measured train_step cost. Appends a run
+//! record to `BENCH_native.json`.
 //!
 //!     cargo bench --bench decision_cycle
 
@@ -11,10 +12,11 @@ use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
 use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
 use dynamix::runtime::default_backend;
 use dynamix::sysmetrics::WindowSummary;
-use dynamix::util::bench::bench;
+use dynamix::util::bench::{bench, iters, BenchSession};
 
 fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
+    let mut session = BenchSession::new("decision_cycle");
 
     println!("== state vector assembly ==");
     let builder = StateBuilder::default();
@@ -39,11 +41,13 @@ fn main() -> anyhow::Result<()> {
         progress: 0.4,
         n_workers: 16,
     };
-    bench("state_build/16workers", 100, 1000, || {
+    let (w0, n0) = iters(100, 1000);
+    let r = bench("state_build/16workers", w0, n0, || {
         for w in 0..16 {
             std::hint::black_box(builder.build(&summary, 128 + w, &global));
         }
     });
+    session.push(&r);
 
     println!("\n== policy inference (one fused call scores all workers) ==");
     for n in [8usize, 16, 32] {
@@ -51,9 +55,11 @@ fn main() -> anyhow::Result<()> {
         let states: Vec<StateVector> = (0..n)
             .map(|w| builder.build(&summary, 64 + w * 16, &global))
             .collect();
-        bench(&format!("policy_forward/{n}workers"), 5, 50, || {
+        let (w, it) = iters(5, 50);
+        let r = bench(&format!("policy_forward/{n}workers"), w, it, || {
             agent.act(&states, false).unwrap();
         });
+        session.push_items(&r, n);
     }
 
     println!("\n== PPO update (one epoch over 16x20 transitions) ==");
@@ -74,8 +80,13 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let batch = UpdateBatch::from_trajectories(&trajs, 0.99, 0.95);
-    bench("policy_update/320x1epoch", 2, 10, || {
+    let (w, n) = iters(2, 10);
+    let r = bench("policy_update/320x1epoch", w, n, || {
         agent.update(&batch).unwrap();
     });
+    session.push_items(&r, 320);
+
+    let path = session.flush()?;
+    println!("\nrecorded run -> {}", path.display());
     Ok(())
 }

@@ -1,45 +1,60 @@
 //! Network + cluster simulator cost: these run every simulated iteration,
-//! so they must be orders of magnitude below the PJRT step cost.
+//! so they must be orders of magnitude below the backend step cost.
+//! Appends a run record to `BENCH_native.json`.
 //!
 //!     cargo bench --bench netsim
 
 use dynamix::cluster::{profiles, SimCluster};
 use dynamix::config::{ClusterPreset, Topology};
 use dynamix::netsim::NetworkSim;
-use dynamix::util::bench::bench;
+use dynamix::util::bench::{bench, iters, BenchSession};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let mut session = BenchSession::new("netsim");
     println!("== collective cost model evaluations ==");
     for n in [8usize, 16, 32] {
         let profs = profiles(ClusterPreset::OscA100, n, 0);
         let mut net = NetworkSim::new(0);
-        bench(&format!("ring_allreduce/{n}nodes"), 100, 2000, || {
+        let (w, it) = iters(100, 2000);
+        let r = bench(&format!("ring_allreduce/{n}nodes"), w, it, || {
             std::hint::black_box(net.sync(Topology::RingAllReduce, &profs, 37 << 20));
         });
+        session.push(&r);
         let mut net = NetworkSim::new(0);
-        bench(&format!("param_server2/{n}nodes"), 100, 2000, || {
+        let r = bench(&format!("param_server2/{n}nodes"), w, it, || {
             std::hint::black_box(net.sync(Topology::ParameterServer { servers: 2 }, &profs, 37 << 20));
         });
+        session.push(&r);
     }
 
     println!("\n== cluster compute phase + clock advance ==");
     for n in [8usize, 32] {
         let mut c = SimCluster::new(ClusterPreset::FabricHetero, n, 0);
         let batches = vec![256usize; n];
-        bench(&format!("compute_phase/{n}nodes"), 100, 2000, || {
+        let (w, it) = iters(100, 2000);
+        let r = bench(&format!("compute_phase/{n}nodes"), w, it, || {
             let out = c.compute_phase(&batches);
             c.advance_iteration(&out, 0.01);
         });
+        session.push(&r);
     }
 
     println!("\n== synthetic data generation (batch assembly input) ==");
     let d = dynamix::data::SyntheticDataset::new(10, 128, 50_000, 0);
     let mut x = vec![0.0f32; 128];
-    bench("sample_into/1", 1000, 20000, || {
+    let (w, it) = iters(1000, 20000);
+    let r = bench("sample_into/1", w, it, || {
         std::hint::black_box(d.sample_into(123, &mut x));
     });
+    session.push(&r);
     let idx: Vec<u64> = (0..1024).collect();
-    bench("batch/1024", 3, 30, || {
+    let (w, it) = iters(3, 30);
+    let r = bench("batch/1024", w, it, || {
         std::hint::black_box(d.batch(&idx));
     });
+    session.push_items(&r, 1024);
+
+    let path = session.flush()?;
+    println!("\nrecorded run -> {}", path.display());
+    Ok(())
 }

@@ -6,10 +6,11 @@
 use dynamix::config::ExperimentConfig;
 use dynamix::runtime::default_backend;
 use dynamix::trainer::BspTrainer;
-use dynamix::util::bench::{bench, throughput};
+use dynamix::util::bench::{bench, iters, throughput, BenchSession};
 
 fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
+    let mut session = BenchSession::new("pipeline");
     for (workers, batch) in [(4usize, 64usize), (16, 64), (16, 256)] {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.n_workers = workers;
@@ -18,10 +19,12 @@ fn main() -> anyhow::Result<()> {
         // Warm the bucket executable.
         t.iterate()?;
         let global = workers * batch;
-        let r = bench(&format!("bsp_iteration/{workers}w-b{batch}"), 1, 8, || {
+        let (w, n) = iters(1, 8);
+        let r = bench(&format!("bsp_iteration/{workers}w-b{batch}"), w, n, || {
             t.iterate().unwrap();
         });
         println!("    -> {:.0} samples/s global batch {global}", throughput(&r, global));
+        session.push_items(&r, global);
     }
 
     println!("\n== eval step ==");
@@ -29,8 +32,13 @@ fn main() -> anyhow::Result<()> {
     cfg.cluster.n_workers = 4;
     let mut t = BspTrainer::new(&cfg, store)?;
     t.eval()?;
-    bench("eval/1024", 1, 10, || {
+    let (w, n) = iters(1, 10);
+    let r = bench("eval/1024", w, n, || {
         t.eval().unwrap();
     });
+    session.push_items(&r, 1024);
+
+    let path = session.flush()?;
+    println!("\nrecorded run -> {}", path.display());
     Ok(())
 }

@@ -1,19 +1,23 @@
-//! L3 hot path: the PJRT train-step execution across the bucket ladder.
+//! L3 hot path: the backend train-step execution across the bucket ladder.
 //! Regenerates the per-iteration compute-cost column used to calibrate the
 //! cluster simulator, and the padding-overhead ablation (same 100 valid
-//! samples at growing buckets).
+//! samples at growing buckets). Appends a machine-readable run record
+//! (bucket, samples/s, p10/p50/p90, thread count, git rev) to
+//! `BENCH_native.json` — the repo's perf trajectory.
 //!
 //!     cargo bench --bench train_step
+//!     DYNAMIX_THREADS=1 DYNAMIX_BENCH_NOTE=scalar cargo bench --bench train_step
 
 use dynamix::runtime::default_backend;
 use dynamix::trainer::ModelRuntime;
-use dynamix::util::bench::{bench, throughput};
+use dynamix::util::bench::{bench, iters, throughput, BenchSession};
 use dynamix::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
     let fd = store.schema().feature_dim;
     let mut rng = Rng::new(0);
+    let mut session = BenchSession::new("train_step");
 
     println!("== train_step cost across buckets (vgg11_mini / sgd) ==");
     for bucket in [32usize, 128, 512, 1024, 4096] {
@@ -26,10 +30,12 @@ fn main() -> anyhow::Result<()> {
         )?;
         let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
         let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
-        let r = bench(&format!("train_step/b{bucket}"), 2, 8, || {
+        let (w, n) = iters(2, 8);
+        let r = bench(&format!("train_step/b{bucket}"), w, n, || {
             rt.train_step(&xs, &ys, bucket, bucket).unwrap();
         });
         println!("    -> {:.0} samples/s", throughput(&r, bucket));
+        session.push_items(&r, bucket);
     }
 
     println!("\n== padding overhead: 100 valid samples in growing buckets ==");
@@ -43,9 +49,11 @@ fn main() -> anyhow::Result<()> {
         )?;
         let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
         let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
-        bench(&format!("pad100/b{bucket}"), 2, 8, || {
+        let (w, n) = iters(2, 8);
+        let r = bench(&format!("pad100/b{bucket}"), w, n, || {
             rt.train_step(&xs, &ys, 100, bucket).unwrap();
         });
+        session.push_items(&r, 100);
     }
 
     println!("\n== optimizer comparison at b256 ==");
@@ -54,9 +62,14 @@ fn main() -> anyhow::Result<()> {
         let bucket = 256;
         let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
         let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
-        bench(&format!("train_step/{}-b256", opt.as_str()), 2, 8, || {
+        let (w, n) = iters(2, 8);
+        let r = bench(&format!("train_step/{}-b256", opt.as_str()), w, n, || {
             rt.train_step(&xs, &ys, bucket, bucket).unwrap();
         });
+        session.push_items(&r, bucket);
     }
+
+    let path = session.flush()?;
+    println!("\nrecorded run -> {}", path.display());
     Ok(())
 }

@@ -92,7 +92,10 @@ impl OptState {
 
 /// Outputs of one fused train step (signature mirror of the AOT artifact:
 /// params/m/v/step are updated in the caller's [`OptState`]).
-#[derive(Clone, Debug)]
+/// Reusable: pass `&mut TrainOut` to
+/// [`ComputeBackend::train_step_into`] and `correct`'s buffer is recycled
+/// across steps.
+#[derive(Clone, Debug, Default)]
 pub struct TrainOut {
     pub loss: f32,
     pub acc: f32,
@@ -187,6 +190,28 @@ pub trait ComputeBackend: Send + Sync {
         mask: &[f32],
         lr: f32,
     ) -> anyhow::Result<TrainOut>;
+
+    /// Buffer-reusing variant of [`ComputeBackend::train_step`]: writes
+    /// into `out` instead of returning a fresh `TrainOut`, so steady-state
+    /// callers allocate nothing. Default implementation delegates to
+    /// `train_step`; the native backend overrides it with the real
+    /// (workspace-pooled, zero-allocation) path.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_into(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        out: &mut TrainOut,
+    ) -> anyhow::Result<()> {
+        *out = self.train_step(model, optimizer, bucket, state, x, y, mask, lr)?;
+        Ok(())
+    }
 
     /// Held-out evaluation (`eval_{model}`): returns (loss, acc).
     fn eval_step(

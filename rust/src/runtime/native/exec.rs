@@ -1,0 +1,136 @@
+//! Multi-threaded execution layer for the native backend.
+//!
+//! A [`Pool`] decides how many worker threads a kernel may fan out over and
+//! hands kernels a deterministic row partition. Threads are plain scoped
+//! `std::thread` spawns (no external thread-pool crate: the build must stay
+//! offline); each parallel region lives exactly as long as one kernel call,
+//! so there is no queue, no channel and no shared mutable state — kernels
+//! split their output buffer into disjoint row chunks and every thread owns
+//! one chunk.
+//!
+//! Determinism: the partition is a pure function of the row count and the
+//! configured thread count, and every kernel assigns each output row to
+//! exactly one thread without changing any per-row summation order. Results
+//! are therefore bitwise identical across runs *and* across
+//! `DYNAMIX_THREADS` settings; only blocked-vs-scalar kernel differences
+//! (lane-wise partial sums) introduce float-level (~1e-7) deviations.
+//!
+//! Sizing: `DYNAMIX_THREADS=N` pins the worker count; unset or invalid
+//! falls back to `std::thread::available_parallelism`. Small problems run
+//! sequentially — a scoped spawn costs ~10-50us, so fanning out only pays
+//! above [`PAR_FLOP_CUTOFF`] of work.
+
+/// Minimum approximate FLOP count of one kernel call before it is worth
+/// spawning threads at all (a scoped spawn is ~10-50us; 1 MFLOP of matmul
+/// is ~100-300us of single-core work).
+pub const PAR_FLOP_CUTOFF: usize = 1 << 20;
+
+/// Minimum rows handed to each thread (keeps chunks cache-friendly and
+/// caps the thread count on small-M problems).
+pub const MIN_ROWS_PER_THREAD: usize = 32;
+
+/// Hard ceiling on the worker count (sanity clamp for absurd env values).
+pub const MAX_THREADS: usize = 64;
+
+/// Thread-count policy for native kernels. Cheap to copy around; owns no
+/// threads (parallel regions are scoped per kernel call).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl Pool {
+    /// Resolve the worker count from `DYNAMIX_THREADS`, falling back to the
+    /// machine's available parallelism.
+    pub fn from_env() -> Self {
+        let threads = std::env::var("DYNAMIX_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        Pool {
+            threads: threads.min(MAX_THREADS),
+        }
+    }
+
+    /// Fixed worker count (tests / explicit overrides).
+    pub fn with_threads(threads: usize) -> Self {
+        Pool {
+            threads: threads.max(1).min(MAX_THREADS),
+        }
+    }
+
+    /// Single-threaded pool (the scalar-reference execution mode).
+    pub fn sequential() -> Self {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Rows per chunk for an `m`-row problem whose per-row cost is roughly
+    /// `row_flops` FLOPs. Returns `m` (one chunk — run sequentially, no
+    /// spawn) when the problem is too small to amortize thread startup.
+    /// Deterministic in (m, row_flops, threads) only.
+    pub fn rows_per_chunk(&self, m: usize, row_flops: usize) -> usize {
+        if self.threads <= 1 || m < 2 * MIN_ROWS_PER_THREAD {
+            return m.max(1);
+        }
+        if m.saturating_mul(row_flops) < PAR_FLOP_CUTOFF {
+            return m.max(1);
+        }
+        let chunks = self.threads.min(m / MIN_ROWS_PER_THREAD).max(1);
+        (m + chunks - 1) / chunks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_pool_never_partitions() {
+        let p = Pool::sequential();
+        assert_eq!(p.threads(), 1);
+        assert_eq!(p.rows_per_chunk(4096, 1 << 20), 4096);
+    }
+
+    #[test]
+    fn small_problems_stay_sequential() {
+        let p = Pool::with_threads(8);
+        // Tiny row count.
+        assert_eq!(p.rows_per_chunk(8, 1 << 20), 8);
+        assert_eq!(p.rows_per_chunk(32, 1 << 20), 32);
+        // Large row count but trivial per-row work.
+        assert_eq!(p.rows_per_chunk(4096, 4), 4096);
+    }
+
+    #[test]
+    fn large_problems_partition_deterministically() {
+        let p = Pool::with_threads(4);
+        let per = p.rows_per_chunk(4096, 2 * 128 * 64);
+        assert_eq!(per, 1024);
+        // Same inputs -> same partition.
+        assert_eq!(per, p.rows_per_chunk(4096, 2 * 128 * 64));
+        // Chunk floor: never hands a thread fewer than MIN_ROWS_PER_THREAD.
+        let per = Pool::with_threads(64).rows_per_chunk(64, 1 << 20);
+        assert!(per >= MIN_ROWS_PER_THREAD, "per={per}");
+    }
+
+    #[test]
+    fn with_threads_clamps() {
+        assert_eq!(Pool::with_threads(0).threads(), 1);
+        assert_eq!(Pool::with_threads(10_000).threads(), MAX_THREADS);
+    }
+}

@@ -1,46 +1,237 @@
-//! Minimal dense linear algebra for the native backend.
+//! Dense linear algebra for the native backend: cache-blocked, lane-unrolled
+//! and row-partitioned across a scoped thread pool.
 //!
 //! Shapes follow the JAX convention used by `python/compile`: activations
 //! are `[M, K]` row-major, weights `[K, N]` row-major (`fan_in` rows). The
 //! three multiply kernels cover forward (`x @ w`), input gradients
-//! (`dy @ w^T`) and weight gradients (`x^T @ dy`); loop orders are chosen so
-//! the innermost loop always streams contiguous rows (ikj / dot-of-rows),
-//! which is enough to keep the mini models far below the simulator costs.
+//! (`dy @ w^T`) and weight gradients (`x^T @ dy`).
+//!
+//! Kernel structure (see [`scalar`] for the plain reference loops):
+//!
+//! * **Tiling** — `matmul_acc` blocks rows by [`TILE_I`] and the reduction
+//!   dimension by [`TILE_K`], so one `TILE_K x n` slab of `w` stays hot in
+//!   L1 across a row block; the other kernels stream contiguously by
+//!   construction (their operands at zoo sizes are L1/L2-resident).
+//! * **Unrolling** — inner loops run over fixed [`LANE`]-wide sub-slices
+//!   with the bounds hoisted, which LLVM turns into SIMD; `matmul_acc`
+//!   additionally unrolls 4 reduction steps so each pass over the output
+//!   row performs 4 fused multiply-adds per element.
+//! * **Row-level sparsity skip** — an all-zero input/gradient *row* (a
+//!   padded sample, or a masked sample whose loss gradient is exactly zero)
+//!   skips that row's whole O(k*n) contribution. This replaces the old
+//!   per-element `a == 0.0` branch, which pessimized dense inputs by
+//!   putting a compare+branch inside the hot loop.
+//! * **Threading** — `matmul_acc`/`matmul_bt` partition the M (batch) rows
+//!   and `matmul_at` the K (output) rows across `pool.threads()` scoped
+//!   threads. Each output row is written by exactly one thread and no
+//!   per-row summation order changes, so results are bitwise identical for
+//!   every `DYNAMIX_THREADS` value; small problems run inline (see
+//!   [`super::exec::Pool::rows_per_chunk`]).
 
-/// `out[M,N] += x[M,K] @ w[K,N]`. `out` must be pre-zeroed by the caller
-/// (or hold a partial sum to accumulate into).
-pub fn matmul_acc(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &a) in xrow.iter().enumerate() {
-            if a == 0.0 {
-                continue; // padded rows / ReLU-dead units cost nothing
+use super::exec::Pool;
+
+/// Unroll width of the innermost (column) loops. 8 f32 lanes = one AVX2
+/// register / two NEON registers; LLVM vectorizes the fixed-size bodies.
+pub const LANE: usize = 8;
+
+/// Row-block size of `matmul_acc` (output rows revisited per `w` slab).
+pub const TILE_I: usize = 32;
+
+/// Reduction-block size of `matmul_acc`: a `TILE_K x n` slab of `w` is
+/// `64*n*4` bytes — L1-resident for every zoo width.
+pub const TILE_K: usize = 64;
+
+#[inline]
+fn row_all_zero(row: &[f32]) -> bool {
+    // Dense rows exit on the first element; padded rows cost one O(len)
+    // scan in exchange for skipping O(len * n) multiply-adds.
+    row.iter().all(|&v| v == 0.0)
+}
+
+/// Scalar reference kernels: the straightforward triple loops, kept as the
+/// numerical ground truth for parity tests and for documenting intent.
+/// No tiling, no unrolling, no threading, no sparsity skips.
+pub mod scalar {
+    /// `out[M,N] += x[M,K] @ w[K,N]`.
+    pub fn matmul_acc(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in xrow.iter().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * wrow[j];
+                }
             }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += a * wrow[j];
+        }
+    }
+
+    /// `dx[M,K] = dy[M,N] @ w[K,N]^T` (overwrites `dx`).
+    pub fn matmul_bt(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+        for i in 0..m {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            let dxrow = &mut dx[i * k..(i + 1) * k];
+            for kk in 0..k {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut s = 0.0f32;
+                for j in 0..n {
+                    s += dyrow[j] * wrow[j];
+                }
+                dxrow[kk] = s;
+            }
+        }
+    }
+
+    /// `dw[K,N] += x[M,K]^T @ dy[M,N]` (accumulates).
+    pub fn matmul_at(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            let dyrow = &dy[i * n..(i + 1) * n];
+            for (kk, &a) in xrow.iter().enumerate() {
+                let dwrow = &mut dw[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    dwrow[j] += a * dyrow[j];
+                }
             }
         }
     }
 }
 
+/// `out[M,N] += x[M,K] @ w[K,N]`. `out` must be pre-zeroed by the caller
+/// (or hold a partial sum to accumulate into).
+pub fn matmul_acc(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let per = pool.rows_per_chunk(m, 2 * k * n);
+    if per >= m {
+        matmul_acc_block(x, w, m, k, n, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (xc, oc) in x.chunks(per * k).zip(out.chunks_mut(per * n)) {
+            s.spawn(move || matmul_acc_block(xc, w, xc.len() / k, k, n, oc));
+        }
+    });
+}
+
+fn matmul_acc_block(x: &[f32], w: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + TILE_I).min(rows);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            for i in i0..i1 {
+                let xrow = &x[i * k + k0..i * k + k1];
+                if row_all_zero(xrow) {
+                    continue; // padded row: whole k-slab contributes nothing
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                let mut kk = 0;
+                let kt = k1 - k0;
+                while kk + 4 <= kt {
+                    let a0 = xrow[kk];
+                    let a1 = xrow[kk + 1];
+                    let a2 = xrow[kk + 2];
+                    let a3 = xrow[kk + 3];
+                    let w0 = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                    let w1 = &w[(k0 + kk + 1) * n..(k0 + kk + 1) * n + n];
+                    let w2 = &w[(k0 + kk + 2) * n..(k0 + kk + 2) * n + n];
+                    let w3 = &w[(k0 + kk + 3) * n..(k0 + kk + 3) * n + n];
+                    let mut j = 0;
+                    while j + LANE <= n {
+                        let o = &mut orow[j..j + LANE];
+                        let v0 = &w0[j..j + LANE];
+                        let v1 = &w1[j..j + LANE];
+                        let v2 = &w2[j..j + LANE];
+                        let v3 = &w3[j..j + LANE];
+                        for l in 0..LANE {
+                            o[l] += a0 * v0[l] + a1 * v1[l] + a2 * v2[l] + a3 * v3[l];
+                        }
+                        j += LANE;
+                    }
+                    while j < n {
+                        orow[j] += a0 * w0[j] + a1 * w1[j] + a2 * w2[j] + a3 * w3[j];
+                        j += 1;
+                    }
+                    kk += 4;
+                }
+                while kk < kt {
+                    let a = xrow[kk];
+                    let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                    let mut j = 0;
+                    while j + LANE <= n {
+                        let o = &mut orow[j..j + LANE];
+                        let v = &wrow[j..j + LANE];
+                        for l in 0..LANE {
+                            o[l] += a * v[l];
+                        }
+                        j += LANE;
+                    }
+                    while j < n {
+                        orow[j] += a * wrow[j];
+                        j += 1;
+                    }
+                    kk += 1;
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+}
+
 /// `dx[M,K] = dy[M,N] @ w[K,N]^T` (input gradient; overwrites `dx`).
-pub fn matmul_bt(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+pub fn matmul_bt(pool: &Pool, dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(dx.len(), m * k);
-    for i in 0..m {
+    if m == 0 || k == 0 {
+        return;
+    }
+    let per = pool.rows_per_chunk(m, 2 * k * n);
+    if per >= m {
+        matmul_bt_block(dy, w, m, k, n, dx);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (dyc, dxc) in dy.chunks(per * n).zip(dx.chunks_mut(per * k)) {
+            s.spawn(move || matmul_bt_block(dyc, w, dxc.len() / k, k, n, dxc));
+        }
+    });
+}
+
+fn matmul_bt_block(dy: &[f32], w: &[f32], rows: usize, k: usize, n: usize, dx: &mut [f32]) {
+    for i in 0..rows {
         let dyrow = &dy[i * n..(i + 1) * n];
         let dxrow = &mut dx[i * k..(i + 1) * k];
+        if row_all_zero(dyrow) {
+            dxrow.fill(0.0); // masked sample: gradient row is exactly zero
+            continue;
+        }
         for kk in 0..k {
             let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = [0.0f32; LANE];
+            let mut j = 0;
+            while j + LANE <= n {
+                let d = &dyrow[j..j + LANE];
+                let v = &wrow[j..j + LANE];
+                for l in 0..LANE {
+                    acc[l] += d[l] * v[l];
+                }
+                j += LANE;
+            }
             let mut s = 0.0f32;
-            for j in 0..n {
+            while j < n {
                 s += dyrow[j] * wrow[j];
+                j += 1;
+            }
+            for &a in &acc {
+                s += a;
             }
             dxrow[kk] = s;
         }
@@ -48,20 +239,51 @@ pub fn matmul_bt(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [
 }
 
 /// `dw[K,N] += x[M,K]^T @ dy[M,N]` (weight gradient; accumulates).
-pub fn matmul_at(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+pub fn matmul_at(pool: &Pool, x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(dw.len(), k * n);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // Partition the K (output) rows: every thread scans all M samples but
+    // owns a disjoint dw row range, so the i-summation order per output
+    // row is identical to the sequential kernel.
+    let per = pool.rows_per_chunk(k, 2 * m * n);
+    if per >= k {
+        matmul_at_block(x, dy, m, k, n, 0, dw);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (ci, dwc) in dw.chunks_mut(per * n).enumerate() {
+            s.spawn(move || matmul_at_block(x, dy, m, k, n, ci * per, dwc));
+        }
+    });
+}
+
+fn matmul_at_block(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, k0: usize, dw: &mut [f32]) {
+    let kr = dw.len() / n;
     for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
         let dyrow = &dy[i * n..(i + 1) * n];
-        for (kk, &a) in xrow.iter().enumerate() {
-            if a == 0.0 {
-                continue;
-            }
+        if row_all_zero(dyrow) {
+            continue; // masked sample contributes no weight gradient
+        }
+        let xrow = &x[i * k + k0..i * k + k0 + kr];
+        for kk in 0..kr {
+            let a = xrow[kk];
             let dwrow = &mut dw[kk * n..(kk + 1) * n];
-            for j in 0..n {
+            let mut j = 0;
+            while j + LANE <= n {
+                let o = &mut dwrow[j..j + LANE];
+                let d = &dyrow[j..j + LANE];
+                for l in 0..LANE {
+                    o[l] += a * d[l];
+                }
+                j += LANE;
+            }
+            while j < n {
                 dwrow[j] += a * dyrow[j];
+                j += 1;
             }
         }
     }
@@ -155,24 +377,82 @@ pub fn log_softmax(logits: &[f32], m: usize, n: usize, logp: &mut [f32]) {
 mod tests {
     use super::*;
 
+    fn seq() -> Pool {
+        Pool::sequential()
+    }
+
     #[test]
     fn matmul_small_golden() {
         // x = [[1,2],[3,4]], w = [[5,6],[7,8]] -> [[19,22],[43,50]]
         let x = [1.0, 2.0, 3.0, 4.0];
         let w = [5.0, 6.0, 7.0, 8.0];
         let mut y = [0.0f32; 4];
-        matmul_acc(&x, &w, 2, 2, 2, &mut y);
+        matmul_acc(&seq(), &x, &w, 2, 2, 2, &mut y);
         assert_eq!(y, [19.0, 22.0, 43.0, 50.0]);
 
         // dy @ w^T and x^T @ dy consistency with hand values.
         let mut dx = [0.0f32; 4];
-        matmul_bt(&y, &w, 2, 2, 2, &mut dx);
+        matmul_bt(&seq(), &y, &w, 2, 2, 2, &mut dx);
         assert_eq!(dx, [19.0 * 5.0 + 22.0 * 6.0, 19.0 * 7.0 + 22.0 * 8.0,
                         43.0 * 5.0 + 50.0 * 6.0, 43.0 * 7.0 + 50.0 * 8.0]);
         let mut dw = [0.0f32; 4];
-        matmul_at(&x, &y, 2, 2, 2, &mut dw);
+        matmul_at(&seq(), &x, &y, 2, 2, 2, &mut dw);
         assert_eq!(dw, [1.0 * 19.0 + 3.0 * 43.0, 1.0 * 22.0 + 3.0 * 50.0,
                         2.0 * 19.0 + 4.0 * 43.0, 2.0 * 22.0 + 4.0 * 50.0]);
+    }
+
+    #[test]
+    fn blocked_kernels_match_scalar_reference() {
+        // Awkward shape (odd n, n % LANE != 0, k % 4 != 0) on one thread.
+        let (m, k, n) = (5usize, 7usize, 11usize);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        matmul_acc(&seq(), &x, &w, m, k, n, &mut got);
+        scalar::matmul_acc(&x, &w, m, k, n, &mut want);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_skipped_without_changing_results() {
+        let (m, k, n) = (6usize, 9usize, 10usize);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        // Pad out the last two rows (mask-0 samples).
+        for v in &mut x[4 * k..] {
+            *v = 0.0;
+        }
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        matmul_acc(&seq(), &x, &w, m, k, n, &mut got);
+        scalar::matmul_acc(&x, &w, m, k, n, &mut want);
+        for r in 4..6 {
+            assert!(got[r * n..(r + 1) * n].iter().all(|&v| v == 0.0));
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_is_bitwise_stable_across_thread_counts() {
+        // Big enough that 2/3/7 threads genuinely partition the rows.
+        let (m, k, n) = (256usize, 64usize, 48usize);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut base = vec![0.0f32; m * n];
+        matmul_acc(&Pool::with_threads(1), &x, &w, m, k, n, &mut base);
+        for threads in [2usize, 3, 7] {
+            let mut out = vec![0.0f32; m * n];
+            matmul_acc(&Pool::with_threads(threads), &x, &w, m, k, n, &mut out);
+            assert_eq!(out, base, "threads={threads} diverged");
+        }
     }
 
     #[test]

@@ -8,17 +8,21 @@
 //! `ravel_pytree`-compatible so policy/model snapshots interchange with the
 //! XLA backend.
 
+pub mod exec;
 pub mod linalg;
 pub mod model;
 pub mod policy;
+pub mod workspace;
 
 use crate::config::{Optimizer, PpoVariant};
 use crate::runtime::backend::{
     ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
 };
 use crate::runtime::manifest::ModelInfo;
-use model::{apply_adam, apply_sgd, masked_ce_loss, normalized_grad_stats, ModelDef};
+use exec::Pool;
+use model::{apply_adam, apply_sgd, masked_ce_loss_ws, normalized_grad_stats, ModelDef};
 use std::collections::BTreeMap;
+use workspace::WorkspacePool;
 
 /// Batch-bucket ladder, mirroring `compile/aot.py::BUCKETS`.
 pub const BUCKETS: [usize; 19] = [
@@ -30,6 +34,10 @@ pub const EVAL_BATCH: usize = 1024;
 pub struct NativeBackend {
     schema: Schema,
     defs: BTreeMap<String, ModelDef>,
+    /// Thread policy for the blocked kernels (`DYNAMIX_THREADS`).
+    pool: Pool,
+    /// Recycled scratch buffers: steady-state steps allocate nothing.
+    ws: WorkspacePool,
 }
 
 impl Default for NativeBackend {
@@ -40,6 +48,17 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> Self {
+        Self::with_pool(Pool::from_env())
+    }
+
+    /// Backend with a pinned kernel thread count. Unlike `new()` this never
+    /// reads `DYNAMIX_THREADS`, so tests that pin thread counts don't race
+    /// with tests that mutate the process environment.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::with_pool(Pool::with_threads(threads))
+    }
+
+    fn with_pool(pool: Pool) -> Self {
         let defs: BTreeMap<String, ModelDef> = ModelDef::zoo()
             .into_iter()
             .map(|d| (d.name.to_string(), d))
@@ -77,7 +96,20 @@ impl NativeBackend {
                 models,
             },
             defs,
+            pool,
+            ws: WorkspacePool::default(),
         }
+    }
+
+    /// Kernel thread count this backend fans out over.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// (pooled workspace count, reserved scratch bytes) — flat across
+    /// steady-state steps; the allocation regression test asserts on it.
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        self.ws.stats()
     }
 
     fn def(&self, model: &str) -> anyhow::Result<&ModelDef> {
@@ -142,7 +174,10 @@ impl ComputeBackend for NativeBackend {
             mb.mask.len(),
             self.schema.ppo_minibatch
         );
-        policy::policy_update(variant, opt, mb, hp)
+        let mut ws = self.ws.take();
+        let r = policy::policy_update_ws(&self.pool, &mut ws, variant, opt, mb, hp);
+        self.ws.put(ws);
+        r
     }
 
     fn train_step(
@@ -156,6 +191,23 @@ impl ComputeBackend for NativeBackend {
         mask: &[f32],
         lr: f32,
     ) -> anyhow::Result<TrainOut> {
+        let mut out = TrainOut::default();
+        self.train_step_into(model, optimizer, bucket, state, x, y, mask, lr, &mut out)?;
+        Ok(out)
+    }
+
+    fn train_step_into(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        out: &mut TrainOut,
+    ) -> anyhow::Result<()> {
         let def = self.def(model)?;
         let pc = def.param_count();
         anyhow::ensure!(state.params.len() == pc, "params len {} != {pc}", state.params.len());
@@ -167,22 +219,33 @@ impl ComputeBackend for NativeBackend {
         anyhow::ensure!(y.len() == bucket && mask.len() == bucket, "y/mask wrong size");
         ensure_labels_in_range(model, y, def.classes)?;
 
-        let acts = def.forward(&state.params, x, bucket);
-        let lo = masked_ce_loss(&acts.logits, y, mask, bucket, def.classes);
-        let g = def.backward(&state.params, &acts, x, &lo.dlogits, bucket);
-        let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&g);
+        let mut ws = self.ws.take();
+        def.forward_ws(&self.pool, &state.params, x, bucket, &mut ws);
+        let (loss, acc) = masked_ce_loss_ws(
+            &ws.logits,
+            y,
+            mask,
+            bucket,
+            def.classes,
+            &mut ws.logp,
+            &mut ws.correct,
+            &mut ws.dlogits,
+        );
+        def.backward_ws(&self.pool, &state.params, x, bucket, &mut ws);
+        let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&ws.grad);
         match optimizer {
-            Optimizer::Sgd => apply_sgd(state, &g, lr),
-            Optimizer::Adam => apply_adam(state, &g, lr),
+            Optimizer::Sgd => apply_sgd(state, &ws.grad, lr),
+            Optimizer::Adam => apply_adam(state, &ws.grad, lr),
         }
-        Ok(TrainOut {
-            loss: lo.loss,
-            acc: lo.acc,
-            correct: lo.correct,
-            sigma_norm,
-            sigma_norm2,
-            grad_l2,
-        })
+        out.loss = loss;
+        out.acc = acc;
+        out.correct.clear();
+        out.correct.extend_from_slice(&ws.correct);
+        out.sigma_norm = sigma_norm;
+        out.sigma_norm2 = sigma_norm2;
+        out.grad_l2 = grad_l2;
+        self.ws.put(ws);
+        Ok(())
     }
 
     fn eval_step(
@@ -198,9 +261,20 @@ impl ComputeBackend for NativeBackend {
         let m = mask.len();
         anyhow::ensure!(x.len() == m * def.feature_dim && y.len() == m, "eval batch mismatch");
         ensure_labels_in_range(model, y, def.classes)?;
-        let acts = def.forward(params, x, m);
-        let lo = masked_ce_loss(&acts.logits, y, mask, m, def.classes);
-        Ok((lo.loss, lo.acc))
+        let mut ws = self.ws.take();
+        def.forward_ws(&self.pool, params, x, m, &mut ws);
+        let (loss, acc) = masked_ce_loss_ws(
+            &ws.logits,
+            y,
+            mask,
+            m,
+            def.classes,
+            &mut ws.logp,
+            &mut ws.correct,
+            &mut ws.dlogits,
+        );
+        self.ws.put(ws);
+        Ok((loss, acc))
     }
 }
 
@@ -341,6 +415,65 @@ mod tests {
         let (l1, a1) = b.eval_step("vgg11_mini", &state.params, &x, &y, &mask).unwrap();
         assert!(l1 < l0, "eval loss did not drop: {l0} -> {l1}");
         assert!(a1 > 0.5, "train-set accuracy too low after fitting: {a1}");
+    }
+
+    #[test]
+    fn train_step_steady_state_does_not_allocate() {
+        let b = NativeBackend::with_threads(2);
+        let fd = b.schema().feature_dim;
+        let (x, y) = learnable_batch(128, fd);
+        let mask = vec![1.0f32; 128];
+        let mut state = OptState::new(b.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+        // Warmup: grows the pooled workspace to its steady shape.
+        for _ in 0..3 {
+            b.train_step("vgg11_mini", Optimizer::Sgd, 128, &mut state, &x, &y, &mask, 0.05)
+                .unwrap();
+            b.eval_step("vgg11_mini", &state.params, &x, &y, &mask).unwrap();
+        }
+        let warm = b.workspace_stats();
+        assert_eq!(warm.0, 1, "sequential steps should share one pooled workspace");
+        assert!(warm.1 > 0);
+        for _ in 0..10 {
+            b.train_step("vgg11_mini", Optimizer::Sgd, 128, &mut state, &x, &y, &mask, 0.05)
+                .unwrap();
+            b.eval_step("vgg11_mini", &state.params, &x, &y, &mask).unwrap();
+        }
+        assert_eq!(
+            b.workspace_stats(),
+            warm,
+            "steady-state train/eval steps must not grow scratch capacity"
+        );
+    }
+
+    #[test]
+    fn policy_update_steady_state_does_not_allocate() {
+        let b = NativeBackend::with_threads(1);
+        let s = b.schema();
+        let (mbsize, sd) = (s.ppo_minibatch, s.state_dim);
+        let mut opt = OptState::adam(b.init_policy(0).unwrap());
+        let states = vec![0.1f32; mbsize * sd];
+        let actions: Vec<i32> = (0..mbsize).map(|i| (i % 5) as i32).collect();
+        let old_logp = vec![-1.6f32; mbsize];
+        let adv = vec![0.5f32; mbsize];
+        let ret = vec![0.5f32; mbsize];
+        let mask = vec![1.0f32; mbsize];
+        let mb = PpoMinibatch {
+            states: &states,
+            actions: &actions,
+            old_logp: &old_logp,
+            advantages: &adv,
+            returns: &ret,
+            mask: &mask,
+        };
+        let hp = PpoHyper { lr: 1e-3, clip_eps: 0.2, ent_coef: 0.01, vf_coef: 0.5 };
+        for _ in 0..2 {
+            b.policy_update(PpoVariant::Clipped, &mut opt, &mb, hp).unwrap();
+        }
+        let warm = b.workspace_stats();
+        for _ in 0..8 {
+            b.policy_update(PpoVariant::Clipped, &mut opt, &mb, hp).unwrap();
+        }
+        assert_eq!(b.workspace_stats(), warm, "policy_update must reuse its workspace");
     }
 
     #[test]

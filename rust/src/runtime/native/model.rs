@@ -8,7 +8,9 @@
 //! keys sorted lexicographically, `b` before `w`, weights `[fan_in,
 //! fan_out]` row-major) so snapshots interchange with the XLA backend.
 
+use super::exec::Pool;
 use super::linalg::*;
+use super::workspace::Workspace;
 use crate::runtime::backend::OptState;
 use crate::util::rng::Rng;
 
@@ -43,27 +45,36 @@ impl DenseRef {
         &p[self.w..self.w + self.k * self.n]
     }
 
-    /// y = x @ w + b for a batch of `m` rows.
-    fn forward(&self, p: &[f32], x: &[f32], m: usize) -> Vec<f32> {
-        let mut y = vec![0.0f32; m * self.n];
-        matmul_acc(x, self.weight(p), m, self.k, self.n, &mut y);
-        add_bias(&mut y, self.bias(p), m, self.n);
-        y
+    /// y = x @ w + b for a batch of `m` rows, into a reused buffer.
+    fn forward_into(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, y: &mut Vec<f32>) {
+        y.clear();
+        y.resize(m * self.n, 0.0);
+        matmul_acc(pool, x, self.weight(p), m, self.k, self.n, y);
+        add_bias(y, self.bias(p), m, self.n);
     }
 
-    /// Accumulate weight/bias grads into `g` and return dx (input grad).
-    fn backward(&self, p: &[f32], x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) -> Vec<f32> {
-        col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
-        matmul_at(x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
-        let mut dx = vec![0.0f32; m * self.k];
-        matmul_bt(dy, self.weight(p), m, self.k, self.n, &mut dx);
-        dx
+    /// Accumulate weight/bias grads into `g` and write dx (input grad)
+    /// into the reused `dx` buffer.
+    fn backward_into(
+        &self,
+        pool: &Pool,
+        p: &[f32],
+        x: &[f32],
+        dy: &[f32],
+        m: usize,
+        g: &mut [f32],
+        dx: &mut Vec<f32>,
+    ) {
+        self.backward_params(pool, x, dy, m, g);
+        dx.clear();
+        dx.resize(m * self.k, 0.0);
+        matmul_bt(pool, dy, self.weight(p), m, self.k, self.n, dx);
     }
 
     /// Accumulate weight/bias grads only (no input grad — first layer).
-    fn backward_params(&self, x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) {
+    fn backward_params(&self, pool: &Pool, x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) {
         col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
-        matmul_at(x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
+        matmul_at(pool, x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
     }
 }
 
@@ -196,83 +207,125 @@ impl ModelDef {
         p
     }
 
-    /// Forward pass over `m` rows, caching activations for backward.
-    pub fn forward(&self, p: &[f32], x: &[f32], m: usize) -> Acts {
+    /// Activation-slot counts in a workspace: (`hs` entries, `us` entries).
+    fn act_slots(&self) -> (usize, usize) {
+        match self.family {
+            Family::Vgg => (self.depth, 0),
+            Family::Resnet => (self.depth + 1, self.depth),
+        }
+    }
+
+    /// Forward pass over `m` rows into workspace buffers (`ws.hs`, `ws.us`,
+    /// `ws.logits`); allocation-free once the workspace is warm.
+    pub fn forward_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
+        let (n_hs, n_us) = self.act_slots();
+        Workspace::ensure_slots(&mut ws.hs, n_hs);
+        Workspace::ensure_slots(&mut ws.us, n_us);
         match self.family {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
-                let mut hs = Vec::with_capacity(self.depth);
-                let mut h = layers[0].forward(p, x, m);
-                relu(&mut h);
-                hs.push(h);
-                for l in &layers[1..] {
-                    let mut nh = l.forward(p, hs.last().unwrap(), m);
-                    relu(&mut nh);
-                    hs.push(nh);
+                layers[0].forward_into(pool, p, x, m, &mut ws.hs[0]);
+                relu(&mut ws.hs[0]);
+                for li in 1..self.depth {
+                    let (prev, rest) = ws.hs.split_at_mut(li);
+                    layers[li].forward_into(pool, p, &prev[li - 1], m, &mut rest[0]);
+                    relu(&mut rest[0]);
                 }
-                let logits = head.forward(p, hs.last().unwrap(), m);
-                Acts { hs, us: Vec::new(), logits }
+                head.forward_into(pool, p, &ws.hs[self.depth - 1], m, &mut ws.logits);
             }
             Family::Resnet => {
                 let (stem, blocks, head) = self.resnet_refs();
-                let mut hs = Vec::with_capacity(self.depth + 1);
-                let mut us = Vec::with_capacity(self.depth);
-                let mut h = stem.forward(p, x, m);
-                relu(&mut h);
-                hs.push(h);
-                for (fc1, fc2) in &blocks {
-                    let mut u = fc1.forward(p, hs.last().unwrap(), m);
-                    relu(&mut u);
-                    let mut z = fc2.forward(p, &u, m);
-                    for (zi, hi) in z.iter_mut().zip(hs.last().unwrap()) {
+                stem.forward_into(pool, p, x, m, &mut ws.hs[0]);
+                relu(&mut ws.hs[0]);
+                for (i, (fc1, fc2)) in blocks.iter().enumerate() {
+                    fc1.forward_into(pool, p, &ws.hs[i], m, &mut ws.us[i]);
+                    relu(&mut ws.us[i]);
+                    let (prev, rest) = ws.hs.split_at_mut(i + 1);
+                    let z = &mut rest[0];
+                    fc2.forward_into(pool, p, &ws.us[i], m, z);
+                    for (zi, hi) in z.iter_mut().zip(&prev[i]) {
                         *zi += *hi; // skip connection
                     }
-                    relu(&mut z);
-                    us.push(u);
-                    hs.push(z);
+                    relu(z);
                 }
-                let logits = head.forward(p, hs.last().unwrap(), m);
-                Acts { hs, us, logits }
+                head.forward_into(pool, p, &ws.hs[self.depth], m, &mut ws.logits);
             }
         }
     }
 
-    /// Backward pass: gradient of the scalar loss w.r.t. the flat params,
-    /// given `dlogits` (loss gradient at the logits).
-    pub fn backward(&self, p: &[f32], acts: &Acts, x: &[f32], dlogits: &[f32], m: usize) -> Vec<f32> {
-        let mut g = vec![0.0f32; self.param_count()];
+    /// Backward pass from `ws.dlogits` through the activations cached by
+    /// [`Self::forward_ws`], accumulating the flat parameter gradient into
+    /// `ws.grad`. Clobbers `ws.dh`/`ws.du`/`ws.dtmp`.
+    pub fn backward_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
+        ws.grad.clear();
+        ws.grad.resize(self.param_count(), 0.0);
         match self.family {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
-                let mut dh = head.backward(p, acts.hs.last().unwrap(), dlogits, m, &mut g);
+                head.backward_into(
+                    pool, p, &ws.hs[self.depth - 1], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
+                );
                 for i in (0..self.depth).rev() {
-                    relu_backward(&mut dh, &acts.hs[i]);
+                    relu_backward(&mut ws.dh, &ws.hs[i]);
                     if i == 0 {
-                        layers[0].backward_params(x, &dh, m, &mut g);
+                        layers[0].backward_params(pool, x, &ws.dh, m, &mut ws.grad);
                     } else {
-                        dh = layers[i].backward(p, &acts.hs[i - 1], &dh, m, &mut g);
+                        layers[i].backward_into(
+                            pool, p, &ws.hs[i - 1], &ws.dh, m, &mut ws.grad, &mut ws.dtmp,
+                        );
+                        std::mem::swap(&mut ws.dh, &mut ws.dtmp);
                     }
                 }
             }
             Family::Resnet => {
                 let (stem, blocks, head) = self.resnet_refs();
-                let mut dh = head.backward(p, acts.hs.last().unwrap(), dlogits, m, &mut g);
+                head.backward_into(
+                    pool, p, &ws.hs[self.depth], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
+                );
                 for i in (0..self.depth).rev() {
                     let (fc1, fc2) = &blocks[i];
                     // dh is d(loss)/d(h_out); h_out = relu(h_in + fc2(u)).
-                    relu_backward(&mut dh, &acts.hs[i + 1]); // now dz
-                    let mut du = fc2.backward(p, &acts.us[i], &dh, m, &mut g);
-                    relu_backward(&mut du, &acts.us[i]);
-                    let dskip = fc1.backward(p, &acts.hs[i], &du, m, &mut g);
-                    for (a, b) in dh.iter_mut().zip(&dskip) {
+                    relu_backward(&mut ws.dh, &ws.hs[i + 1]); // now dz
+                    fc2.backward_into(pool, p, &ws.us[i], &ws.dh, m, &mut ws.grad, &mut ws.du);
+                    relu_backward(&mut ws.du, &ws.us[i]);
+                    fc1.backward_into(pool, p, &ws.hs[i], &ws.du, m, &mut ws.grad, &mut ws.dtmp);
+                    for (a, b) in ws.dh.iter_mut().zip(&ws.dtmp) {
                         *a += *b; // residual: dz flows to h_in directly too
                     }
                 }
-                relu_backward(&mut dh, &acts.hs[0]);
-                stem.backward_params(x, &dh, m, &mut g);
+                relu_backward(&mut ws.dh, &ws.hs[0]);
+                stem.backward_params(pool, x, &ws.dh, m, &mut ws.grad);
             }
         }
-        g
+    }
+
+    /// Forward pass over `m` rows, caching activations for backward.
+    /// Compatibility wrapper over [`Self::forward_ws`] (sequential, owns
+    /// its buffers) — tests and one-off callers; hot paths go through the
+    /// workspace API.
+    pub fn forward(&self, p: &[f32], x: &[f32], m: usize) -> Acts {
+        let mut ws = Workspace::default();
+        self.forward_ws(&Pool::sequential(), p, x, m, &mut ws);
+        let (n_hs, n_us) = self.act_slots();
+        Acts {
+            hs: ws.hs.drain(..n_hs).collect(),
+            us: ws.us.drain(..n_us).collect(),
+            logits: std::mem::take(&mut ws.logits),
+        }
+    }
+
+    /// Backward pass: gradient of the scalar loss w.r.t. the flat params,
+    /// given `dlogits` (loss gradient at the logits). Compatibility wrapper
+    /// over [`Self::backward_ws`].
+    pub fn backward(&self, p: &[f32], acts: &Acts, x: &[f32], dlogits: &[f32], m: usize) -> Vec<f32> {
+        let mut ws = Workspace {
+            hs: acts.hs.clone(),
+            us: acts.us.clone(),
+            dlogits: dlogits.to_vec(),
+            ..Default::default()
+        };
+        self.backward_ws(&Pool::sequential(), p, x, m, &mut ws);
+        std::mem::take(&mut ws.grad)
     }
 }
 
@@ -287,13 +340,34 @@ pub struct LossOut {
 }
 
 pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usize) -> LossOut {
+    let (mut logp, mut correct, mut dlogits) = (Vec::new(), Vec::new(), Vec::new());
+    let (loss, acc) =
+        masked_ce_loss_ws(logits, y, mask, m, n, &mut logp, &mut correct, &mut dlogits);
+    LossOut { loss, acc, correct, dlogits }
+}
+
+/// [`masked_ce_loss`] into reused workspace buffers; returns (loss, acc).
+#[allow(clippy::too_many_arguments)]
+pub fn masked_ce_loss_ws(
+    logits: &[f32],
+    y: &[i32],
+    mask: &[f32],
+    m: usize,
+    n: usize,
+    logp: &mut Vec<f32>,
+    correct: &mut Vec<f32>,
+    dlogits: &mut Vec<f32>,
+) -> (f32, f32) {
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-    let mut logp = vec![0.0f32; m * n];
-    log_softmax(logits, m, n, &mut logp);
+    logp.clear();
+    logp.resize(m * n, 0.0);
+    log_softmax(logits, m, n, logp);
     let mut loss = 0.0f64;
-    let mut correct = vec![0.0f32; m];
+    correct.clear();
+    correct.resize(m, 0.0);
     let mut acc = 0.0f64;
-    let mut dlogits = vec![0.0f32; m * n];
+    dlogits.clear();
+    dlogits.resize(m * n, 0.0);
     for i in 0..m {
         let yi = y[i] as usize;
         debug_assert!(yi < n, "label {yi} out of range {n}");
@@ -319,12 +393,10 @@ pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usiz
             drow[yi] -= scale;
         }
     }
-    LossOut {
-        loss: (loss / denom as f64) as f32,
-        acc: (acc / denom as f64) as f32,
-        correct,
-        dlogits,
-    }
+    (
+        (loss / denom as f64) as f32,
+        (acc / denom as f64) as f32,
+    )
 }
 
 /// The paper's §IV-B gradient-normalization statistics, exactly as

@@ -6,8 +6,10 @@
 //! and Adam. Parameter layout is the `ravel_pytree` order of
 //! `init_policy_params`: `fc0 < fc1 < pi < vf`, `b < w` within each dense.
 
+use super::exec::Pool;
 use super::linalg::*;
 use super::model::{apply_adam, fnv1a, DenseRef};
+use super::workspace::Workspace;
 use crate::config::PpoVariant;
 use crate::runtime::backend::{OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats};
 use crate::util::rng::Rng;
@@ -46,28 +48,51 @@ pub fn init_policy(seed: u64) -> Vec<f32> {
     p
 }
 
-/// Trunk forward over `m` state rows: returns (h1, h2, logits, values).
-fn trunk(theta: &[f32], states: &[f32], m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut h1 = vec![0.0f32; m * HIDDEN];
-    matmul_acc(states, &theta[FC0.w..FC0.w + FC0.k * FC0.n], m, STATE_DIM, HIDDEN, &mut h1);
-    add_bias(&mut h1, &theta[FC0.b..FC0.b + HIDDEN], m, HIDDEN);
-    tanh(&mut h1);
+/// Trunk forward over `m` state rows into reused buffers.
+fn trunk_into(
+    pool: &Pool,
+    theta: &[f32],
+    states: &[f32],
+    m: usize,
+    h1: &mut Vec<f32>,
+    h2: &mut Vec<f32>,
+    logits: &mut Vec<f32>,
+    values: &mut Vec<f32>,
+) {
+    h1.clear();
+    h1.resize(m * HIDDEN, 0.0);
+    matmul_acc(pool, states, &theta[FC0.w..FC0.w + FC0.k * FC0.n], m, STATE_DIM, HIDDEN, h1);
+    add_bias(h1, &theta[FC0.b..FC0.b + HIDDEN], m, HIDDEN);
+    tanh(h1);
 
-    let mut h2 = vec![0.0f32; m * HIDDEN];
-    matmul_acc(&h1, &theta[FC1.w..FC1.w + FC1.k * FC1.n], m, HIDDEN, HIDDEN, &mut h2);
-    add_bias(&mut h2, &theta[FC1.b..FC1.b + HIDDEN], m, HIDDEN);
-    tanh(&mut h2);
+    h2.clear();
+    h2.resize(m * HIDDEN, 0.0);
+    matmul_acc(pool, h1, &theta[FC1.w..FC1.w + FC1.k * FC1.n], m, HIDDEN, HIDDEN, h2);
+    add_bias(h2, &theta[FC1.b..FC1.b + HIDDEN], m, HIDDEN);
+    tanh(h2);
 
-    let mut logits = vec![0.0f32; m * N_ACTIONS];
-    matmul_acc(&h2, &theta[PI.w..PI.w + PI.k * PI.n], m, HIDDEN, N_ACTIONS, &mut logits);
-    add_bias(&mut logits, &theta[PI.b..PI.b + N_ACTIONS], m, N_ACTIONS);
+    logits.clear();
+    logits.resize(m * N_ACTIONS, 0.0);
+    matmul_acc(pool, h2, &theta[PI.w..PI.w + PI.k * PI.n], m, HIDDEN, N_ACTIONS, logits);
+    add_bias(logits, &theta[PI.b..PI.b + N_ACTIONS], m, N_ACTIONS);
 
-    let mut values = vec![0.0f32; m];
-    matmul_acc(&h2, &theta[VF.w..VF.w + HIDDEN], m, HIDDEN, 1, &mut values);
+    values.clear();
+    values.resize(m, 0.0);
+    matmul_acc(pool, h2, &theta[VF.w..VF.w + HIDDEN], m, HIDDEN, 1, values);
     let vb = theta[VF.b];
-    for v in &mut values {
+    for v in values.iter_mut() {
         *v += vb;
     }
+}
+
+/// Trunk forward over `m` state rows: returns (h1, h2, logits, values).
+/// Owned-buffer wrapper over [`trunk_into`] (tests / one-off callers).
+fn trunk(theta: &[f32], states: &[f32], m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut h1, mut h2, mut logits, mut values) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    trunk_into(
+        &Pool::sequential(), theta, states, m, &mut h1, &mut h2, &mut logits, &mut values,
+    );
     (h1, h2, logits, values)
 }
 
@@ -87,7 +112,22 @@ pub fn policy_forward(theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut
 }
 
 /// One PPO minibatch step (clipped or simplified), updating `opt` in place.
+/// Owned-buffer wrapper over [`policy_update_ws`].
 pub fn policy_update(
+    variant: PpoVariant,
+    opt: &mut OptState,
+    mb: &PpoMinibatch,
+    hp: PpoHyper,
+) -> anyhow::Result<PpoStats> {
+    let mut ws = Workspace::default();
+    policy_update_ws(&Pool::sequential(), &mut ws, variant, opt, mb, hp)
+}
+
+/// One PPO minibatch step into workspace buffers; allocation-free once the
+/// workspace is warm.
+pub fn policy_update_ws(
+    pool: &Pool,
+    ws: &mut Workspace,
     variant: PpoVariant,
     opt: &mut OptState,
     mb: &PpoMinibatch,
@@ -102,18 +142,35 @@ pub fn policy_update(
         "minibatch field length mismatch"
     );
 
+    let Workspace {
+        p_h1: h1,
+        p_h2: h2,
+        p_logits: logits,
+        p_values: values,
+        p_logp: logp,
+        p_dlogits: dlogits,
+        p_dvalues: dvalues,
+        p_grad: g,
+        p_dh1: dh1,
+        p_dh2: dh2,
+        ..
+    } = ws;
+
     let theta = &opt.params;
-    let (h1, h2, logits, values) = trunk(theta, mb.states, b);
-    let mut logp = vec![0.0f32; b * N_ACTIONS];
-    log_softmax(&logits, b, N_ACTIONS, &mut logp);
+    trunk_into(pool, theta, mb.states, b, h1, h2, logits, values);
+    logp.clear();
+    logp.resize(b * N_ACTIONS, 0.0);
+    log_softmax(logits, b, N_ACTIONS, logp);
     let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
 
     let mut pg_sum = 0.0f64;
     let mut v_sum = 0.0f64;
     let mut ent_sum = 0.0f64;
     let mut kl_sum = 0.0f64;
-    let mut dlogits = vec![0.0f32; b * N_ACTIONS];
-    let mut dvalues = vec![0.0f32; b];
+    dlogits.clear();
+    dlogits.resize(b * N_ACTIONS, 0.0);
+    dvalues.clear();
+    dvalues.resize(b, 0.0);
 
     for i in 0..b {
         let mi = mb.mask[i];
@@ -177,15 +234,17 @@ pub fn policy_update(
     let loss = pg_loss + hp.vf_coef * v_loss - hp.ent_coef * entropy;
 
     // Backward through heads + trunk into a flat gradient.
-    let mut g = vec![0.0f32; PARAM_COUNT];
+    g.clear();
+    g.resize(PARAM_COUNT, 0.0);
     // pi head: dh2 from logits.
-    col_sums(&dlogits, b, N_ACTIONS, &mut g[PI.b..PI.b + N_ACTIONS]);
-    matmul_at(&h2, &dlogits, b, HIDDEN, N_ACTIONS, &mut g[PI.w..PI.w + HIDDEN * N_ACTIONS]);
-    let mut dh2 = vec![0.0f32; b * HIDDEN];
-    matmul_bt(&dlogits, &theta[PI.w..PI.w + HIDDEN * N_ACTIONS], b, HIDDEN, N_ACTIONS, &mut dh2);
+    col_sums(dlogits, b, N_ACTIONS, &mut g[PI.b..PI.b + N_ACTIONS]);
+    matmul_at(pool, h2, dlogits, b, HIDDEN, N_ACTIONS, &mut g[PI.w..PI.w + HIDDEN * N_ACTIONS]);
+    dh2.clear();
+    dh2.resize(b * HIDDEN, 0.0);
+    matmul_bt(pool, dlogits, &theta[PI.w..PI.w + HIDDEN * N_ACTIONS], b, HIDDEN, N_ACTIONS, dh2);
     // vf head: dh2 += dv ⊗ w_vf.
     let mut dvb = 0.0f32;
-    for &dv in &dvalues {
+    for &dv in dvalues.iter() {
         dvb += dv;
     }
     g[VF.b] = dvb;
@@ -199,16 +258,17 @@ pub fn policy_update(
         g[VF.w + k] = gw;
     }
 
-    tanh_backward(&mut dh2, &h2);
-    col_sums(&dh2, b, HIDDEN, &mut g[FC1.b..FC1.b + HIDDEN]);
-    matmul_at(&h1, &dh2, b, HIDDEN, HIDDEN, &mut g[FC1.w..FC1.w + HIDDEN * HIDDEN]);
-    let mut dh1 = vec![0.0f32; b * HIDDEN];
-    matmul_bt(&dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN], b, HIDDEN, HIDDEN, &mut dh1);
-    tanh_backward(&mut dh1, &h1);
-    col_sums(&dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
-    matmul_at(mb.states, &dh1, b, STATE_DIM, HIDDEN, &mut g[FC0.w..FC0.w + STATE_DIM * HIDDEN]);
+    tanh_backward(dh2, h2);
+    col_sums(dh2, b, HIDDEN, &mut g[FC1.b..FC1.b + HIDDEN]);
+    matmul_at(pool, h1, dh2, b, HIDDEN, HIDDEN, &mut g[FC1.w..FC1.w + HIDDEN * HIDDEN]);
+    dh1.clear();
+    dh1.resize(b * HIDDEN, 0.0);
+    matmul_bt(pool, dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN], b, HIDDEN, HIDDEN, dh1);
+    tanh_backward(dh1, h1);
+    col_sums(dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
+    matmul_at(pool, mb.states, dh1, b, STATE_DIM, HIDDEN, &mut g[FC0.w..FC0.w + STATE_DIM * HIDDEN]);
 
-    apply_adam(opt, &g, hp.lr);
+    apply_adam(opt, g, hp.lr);
 
     Ok(PpoStats { loss, pg_loss, v_loss, entropy, approx_kl })
 }

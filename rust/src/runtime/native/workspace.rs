@@ -1,0 +1,147 @@
+//! Reusable scratch buffers for the native backend's hot paths.
+//!
+//! Every intermediate tensor of a train/eval/policy-update step lives in a
+//! [`Workspace`]; buffers are `clear()+resize()`d to the step's shape, so
+//! after one warmup step per (model, bucket) the capacities stabilize and
+//! steady-state steps perform **zero heap allocations**. A
+//! [`WorkspacePool`] keeps finished workspaces behind a mutex so the
+//! backend stays `&self` + `Send + Sync`: concurrent callers each pop
+//! their own workspace (the pool grows to the peak concurrency and then
+//! stops allocating).
+//!
+//! The allocation regression test keys off [`Workspace::capacity_bytes`]:
+//! if a code change starts allocating per step, the pooled capacity keeps
+//! growing after warmup and the test fails.
+
+use std::sync::Mutex;
+
+/// Scratch buffers for one in-flight backend call. Field groups:
+/// model train/eval (`hs`/`us`/`logits`/... ) and PPO update (`p_*`).
+#[derive(Default)]
+pub struct Workspace {
+    /// Post-ReLU activations: VGG — one per layer; ResNet — stem output
+    /// followed by every block output (`depth + 1` entries).
+    pub hs: Vec<Vec<f32>>,
+    /// ResNet only: post-ReLU inner activations, one per block.
+    pub us: Vec<Vec<f32>>,
+    pub logits: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub dlogits: Vec<f32>,
+    pub correct: Vec<f32>,
+    pub grad: Vec<f32>,
+    /// Backward row-gradient buffer (ping-ponged with `dtmp`).
+    pub dh: Vec<f32>,
+    /// ResNet inner-path gradient buffer.
+    pub du: Vec<f32>,
+    /// Scratch target for the next layer's input gradient.
+    pub dtmp: Vec<f32>,
+
+    // --- PPO policy update ---
+    pub p_h1: Vec<f32>,
+    pub p_h2: Vec<f32>,
+    pub p_logits: Vec<f32>,
+    pub p_values: Vec<f32>,
+    pub p_logp: Vec<f32>,
+    pub p_dlogits: Vec<f32>,
+    pub p_dvalues: Vec<f32>,
+    pub p_grad: Vec<f32>,
+    pub p_dh1: Vec<f32>,
+    pub p_dh2: Vec<f32>,
+}
+
+impl Workspace {
+    /// Ensure `v` has at least `n` slot vectors (keeps existing capacity).
+    pub fn ensure_slots(v: &mut Vec<Vec<f32>>, n: usize) {
+        while v.len() < n {
+            v.push(Vec::new());
+        }
+    }
+
+    /// Total heap bytes currently reserved by this workspace.
+    pub fn capacity_bytes(&self) -> usize {
+        let nested = |vv: &Vec<Vec<f32>>| -> usize {
+            vv.capacity() * std::mem::size_of::<Vec<f32>>()
+                + vv.iter().map(|v| v.capacity() * 4).sum::<usize>()
+        };
+        let flat = [
+            &self.logits,
+            &self.logp,
+            &self.dlogits,
+            &self.correct,
+            &self.grad,
+            &self.dh,
+            &self.du,
+            &self.dtmp,
+            &self.p_h1,
+            &self.p_h2,
+            &self.p_logits,
+            &self.p_values,
+            &self.p_logp,
+            &self.p_dlogits,
+            &self.p_dvalues,
+            &self.p_grad,
+            &self.p_dh1,
+            &self.p_dh2,
+        ];
+        nested(&self.hs)
+            + nested(&self.us)
+            + flat.iter().map(|v| v.capacity() * 4).sum::<usize>()
+    }
+}
+
+/// Lock-guarded free list of workspaces. `take` pops (or creates) one;
+/// `put` returns it for reuse. The lock is held only for the push/pop.
+#[derive(Default)]
+pub struct WorkspacePool {
+    slots: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    pub fn take(&self) -> Workspace {
+        self.slots.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn put(&self, ws: Workspace) {
+        self.slots.lock().unwrap().push(ws);
+    }
+
+    /// (workspace count, total reserved bytes) — the allocation regression
+    /// probe: both must be flat across steady-state steps.
+    pub fn stats(&self) -> (usize, usize) {
+        let slots = self.slots.lock().unwrap();
+        (
+            slots.len(),
+            slots.iter().map(|w| w.capacity_bytes()).sum(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_instead_of_allocating() {
+        let pool = WorkspacePool::default();
+        let mut ws = pool.take();
+        ws.grad.resize(1000, 0.0);
+        let bytes = ws.capacity_bytes();
+        assert!(bytes >= 4000);
+        pool.put(ws);
+        assert_eq!(pool.stats().0, 1);
+        assert_eq!(pool.stats().1, bytes);
+        // Take it back: same buffer, capacity intact.
+        let ws = pool.take();
+        assert_eq!(ws.capacity_bytes(), bytes);
+        assert_eq!(pool.stats().0, 0);
+        pool.put(ws);
+    }
+
+    #[test]
+    fn capacity_counts_nested_activations() {
+        let mut ws = Workspace::default();
+        Workspace::ensure_slots(&mut ws.hs, 3);
+        ws.hs[0].resize(100, 0.0);
+        assert!(ws.capacity_bytes() >= 400);
+    }
+}

@@ -23,20 +23,20 @@ use crate::cluster::SimCluster;
 use crate::config::{ExperimentConfig, Optimizer, Topology};
 use crate::data::{ShardSampler, SyntheticDataset};
 use crate::netsim::NetworkSim;
-use crate::runtime::{Backend, OptState, Schema};
+use crate::runtime::{Backend, OptState, Schema, TrainOut};
 use crate::sysmetrics::{Collector, WindowAggregator};
 use std::time::Instant;
 
-/// Outputs of one fused train step (global view + per-sample correctness).
-#[derive(Debug)]
+/// Scalar outputs of one fused train step (global view). Per-sample
+/// correctness stays in the runtime's reused output buffer — read it via
+/// [`ModelRuntime::last_correct`] — so the hot loop copies nothing.
+#[derive(Clone, Copy, Debug)]
 pub struct StepMetrics {
     pub loss: f64,
     pub acc: f64,
     pub sigma_norm: f64,
     pub sigma_norm2: f64,
     pub grad_l2: f64,
-    /// Per-sample masked correctness, length = bucket.
-    pub correct: Vec<f32>,
     /// Real wall-clock of the backend execution (perf accounting only).
     pub exec_seconds: f64,
 }
@@ -54,6 +54,11 @@ pub struct ModelRuntime {
     pub exec_seconds_total: f64,
     pub exec_count: usize,
     eval_cache: Option<(Vec<f32>, Vec<i32>, Vec<f32>)>,
+    /// Persistent padding mask, rebuilt only when (n_valid, bucket) moves.
+    mask_buf: Vec<f32>,
+    mask_shape: (usize, usize),
+    /// Reused backend output (zero steady-state allocations).
+    out_buf: TrainOut,
 }
 
 impl ModelRuntime {
@@ -76,6 +81,9 @@ impl ModelRuntime {
             exec_seconds_total: 0.0,
             exec_count: 0,
             eval_cache: None,
+            mask_buf: Vec::new(),
+            mask_shape: (usize::MAX, usize::MAX),
+            out_buf: TrainOut::default(),
             backend,
         })
     }
@@ -101,7 +109,10 @@ impl ModelRuntime {
     }
 
     /// Execute one fused train step on `n_valid` samples padded to
-    /// `bucket`. `xs`/`ys` must already be bucket-sized.
+    /// `bucket`. `xs`/`ys` must already be bucket-sized. The padding mask
+    /// and the backend output live in persistent buffers: at a steady
+    /// (n_valid, bucket) operating point this path performs zero heap
+    /// allocations and zero redundant mask writes.
     pub fn train_step(
         &mut self,
         xs: &[f32],
@@ -112,33 +123,43 @@ impl ModelRuntime {
         anyhow::ensure!(xs.len() == bucket * self.feature_dim, "xs wrong size");
         anyhow::ensure!(ys.len() == bucket, "ys wrong size");
         anyhow::ensure!(n_valid <= bucket, "n_valid > bucket");
-        let mut mask = vec![0.0f32; bucket];
-        mask[..n_valid].fill(1.0);
+        if self.mask_shape != (n_valid, bucket) {
+            self.mask_buf.clear();
+            self.mask_buf.resize(bucket, 0.0);
+            self.mask_buf[..n_valid].fill(1.0);
+            self.mask_shape = (n_valid, bucket);
+        }
 
         let t0 = Instant::now();
-        let out = self.backend.train_step(
+        self.backend.train_step_into(
             &self.model,
             self.optimizer,
             bucket,
             &mut self.state,
             xs,
             ys,
-            &mask,
+            &self.mask_buf,
             self.lr,
+            &mut self.out_buf,
         )?;
         let exec_seconds = t0.elapsed().as_secs_f64();
         self.exec_seconds_total += exec_seconds;
         self.exec_count += 1;
 
         Ok(StepMetrics {
-            loss: out.loss as f64,
-            acc: out.acc as f64,
-            correct: out.correct,
-            sigma_norm: out.sigma_norm as f64,
-            sigma_norm2: out.sigma_norm2 as f64,
-            grad_l2: out.grad_l2 as f64,
+            loss: self.out_buf.loss as f64,
+            acc: self.out_buf.acc as f64,
+            sigma_norm: self.out_buf.sigma_norm as f64,
+            sigma_norm2: self.out_buf.sigma_norm2 as f64,
+            grad_l2: self.out_buf.grad_l2 as f64,
             exec_seconds,
         })
+    }
+
+    /// Per-sample masked correctness of the most recent train step
+    /// (length = that step's bucket).
+    pub fn last_correct(&self) -> &[f32] {
+        &self.out_buf.correct
     }
 
     /// Held-out evaluation on the dataset's fixed eval batch.
@@ -342,7 +363,7 @@ impl BspTrainer {
             let lo = self.offsets_scratch[w];
             let hi = self.offsets_scratch[w + 1];
             let local_n = (hi - lo).max(1);
-            let local_correct: f32 = metrics.correct[lo..hi].iter().sum();
+            let local_correct: f32 = self.runtime.last_correct()[lo..hi].iter().sum();
             let local_acc = local_correct as f64 / local_n as f64;
             let iter_time = outcomes[w].compute_s + sync.time_s + self.cluster.barrier_s;
             let sys = self.collectors[w].sample(

@@ -1,16 +1,28 @@
 //! Minimal criterion-style benchmark harness (offline build: no criterion).
 //!
-//! Used by the `rust/benches/*.rs` targets (`harness = false`). Reports
-//! mean ± std, min, and p50 over timed iterations after warmup, in a
-//! stable greppable format:
+//! Used by the `rust/benches/*.rs` targets (`harness = false`). Prints a
+//! stable greppable line per benchmark (the machine-readable sinks below
+//! additionally carry p10/p90):
 //!
 //! ```text
 //! bench <name>: mean 12.345 ms ± 0.678 (min 11.9, p50 12.2, n=20)
 //! ```
 //!
-//! Also emits a JSON line per benchmark when `DYNAMIX_BENCH_JSON` is set,
-//! so EXPERIMENTS.md tables can be regenerated mechanically.
+//! Two machine-readable sinks:
+//!
+//! * `DYNAMIX_BENCH_JSON` — emit one JSON line per benchmark on stdout
+//!   (legacy; EXPERIMENTS.md table regeneration).
+//! * [`BenchSession`] — collect results and append one run record (git
+//!   rev, thread count, note, per-bench p10/p50/p90 + samples/s) to
+//!   `BENCH_native.json` at the repo root (override with
+//!   `DYNAMIX_BENCH_OUT`). This is the repo's recorded perf trajectory:
+//!   every perf PR lands a before/after pair of runs.
+//!
+//! `DYNAMIX_BENCH_QUICK=1` shrinks warmup/iteration counts (see [`iters`])
+//! so a CI smoke leg can exercise every bench — and still upload a
+//! `BENCH_native.json` artifact — in seconds.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// Timing summary of one benchmark.
@@ -20,8 +32,32 @@ pub struct BenchResult {
     pub mean_s: f64,
     pub std_s: f64,
     pub min_s: f64,
+    pub p10_s: f64,
     pub p50_s: f64,
+    pub p90_s: f64,
     pub n: usize,
+}
+
+/// Warmup/measured iteration counts, shrunk under `DYNAMIX_BENCH_QUICK=1`
+/// (CI smoke: correctness of the bench path, not statistical power).
+/// Empty, `0` and `false` values leave the full counts in place so a
+/// stale `DYNAMIX_BENCH_QUICK=0` export can't silently degrade recorded
+/// numbers.
+pub fn iters(warmup: usize, n: usize) -> (usize, usize) {
+    let quick = std::env::var("DYNAMIX_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    if quick {
+        (warmup.min(1), n.clamp(1, 3))
+    } else {
+        (warmup, n)
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    let n = sorted.len();
+    sorted[(p * (n - 1) + 50) / 100]
 }
 
 /// Run `f` `n` times (after `warmup` untimed runs) and report statistics.
@@ -44,7 +80,9 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, n: usize, mut f: F) -> Bench
         mean_s: mean,
         std_s: var.sqrt(),
         min_s: sorted[0],
-        p50_s: sorted[n / 2],
+        p10_s: percentile(&sorted, 10),
+        p50_s: percentile(&sorted, 50),
+        p90_s: percentile(&sorted, 90),
         n,
     };
     report(&result);
@@ -80,7 +118,9 @@ fn report(r: &BenchResult) {
                 "mean_s" => r.mean_s,
                 "std_s" => r.std_s,
                 "min_s" => r.min_s,
+                "p10_s" => r.p10_s,
                 "p50_s" => r.p50_s,
+                "p90_s" => r.p90_s,
                 "n" => r.n,
             }
         );
@@ -90,6 +130,127 @@ fn report(r: &BenchResult) {
 /// Throughput helper: items/sec at the measured mean.
 pub fn throughput(r: &BenchResult, items: usize) -> f64 {
     items as f64 / r.mean_s
+}
+
+/// One bench binary's recording session: buffers results plus run metadata
+/// and appends a run record to `BENCH_native.json` on [`BenchSession::flush`].
+pub struct BenchSession {
+    suite: String,
+    results: Vec<Json>,
+}
+
+impl BenchSession {
+    pub fn new(suite: &str) -> Self {
+        BenchSession {
+            suite: suite.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Record a result with no item count (wall-time only).
+    pub fn push(&mut self, r: &BenchResult) {
+        self.push_items(r, 0);
+    }
+
+    /// Record a result; `items > 0` (e.g. the bucket size) also records
+    /// `items_per_s` — the samples/s figure perf PRs are judged on.
+    pub fn push_items(&mut self, r: &BenchResult, items: usize) {
+        self.results.push(crate::jobj! {
+            "bench" => r.name.clone(),
+            "mean_s" => r.mean_s,
+            "std_s" => r.std_s,
+            "min_s" => r.min_s,
+            "p10_s" => r.p10_s,
+            "p50_s" => r.p50_s,
+            "p90_s" => r.p90_s,
+            "n" => r.n,
+            "items" => items,
+            "items_per_s" => if items > 0 { throughput(r, items) } else { 0.0 },
+        });
+    }
+
+    /// Append this session as one run record and return the file path.
+    /// Existing records are preserved (unparseable/missing files start a
+    /// fresh `{"runs": []}`); the write is atomic (tmp + rename).
+    pub fn flush(&self) -> std::io::Result<std::path::PathBuf> {
+        self.flush_to(out_path())
+    }
+
+    /// [`Self::flush`] to an explicit path (tests; avoids env mutation).
+    /// Top-level keys other than `"runs"` are preserved; a file whose
+    /// `"runs"` is not an array is an error (never silently reset — the
+    /// file is the repo's accrued perf trajectory).
+    pub fn flush_to(&self, path: std::path::PathBuf) -> std::io::Result<std::path::PathBuf> {
+        let mut root = match std::fs::read_to_string(&path) {
+            Ok(text) => Json::parse(&text)
+                .map_err(|e| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("{}: not valid JSON ({e}); refusing to overwrite", path.display()),
+                    )
+                })?
+                .as_obj()
+                .cloned()
+                .ok_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("{}: top level is not an object", path.display()),
+                    )
+                })?,
+            Err(_) => std::collections::BTreeMap::new(), // fresh file
+        };
+        let mut runs = match root.remove("runs") {
+            None => Vec::new(),
+            Some(Json::Arr(a)) => a,
+            Some(_) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}: \"runs\" is not an array", path.display()),
+                ))
+            }
+        };
+        runs.push(crate::jobj! {
+            "suite" => self.suite.clone(),
+            "note" => std::env::var("DYNAMIX_BENCH_NOTE").unwrap_or_default(),
+            "git_rev" => git_rev(),
+            "threads" => crate::runtime::native::exec::Pool::from_env().threads(),
+            "unix_time" => unix_time(),
+            "results" => self.results.clone(),
+        });
+        root.insert("runs".to_string(), Json::Arr(runs));
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", Json::Obj(root)))?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+}
+
+/// `DYNAMIX_BENCH_OUT`, defaulting to `<repo root>/BENCH_native.json`.
+fn out_path() -> std::path::PathBuf {
+    match std::env::var("DYNAMIX_BENCH_OUT") {
+        Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json"),
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_time() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
 }
 
 #[cfg(test)]
@@ -103,6 +264,7 @@ mod tests {
         });
         assert!(r.mean_s >= 0.002);
         assert!(r.min_s <= r.p50_s);
+        assert!(r.p10_s <= r.p50_s && r.p50_s <= r.p90_s);
         assert_eq!(r.n, 3);
     }
 
@@ -113,9 +275,53 @@ mod tests {
             mean_s: 0.5,
             std_s: 0.0,
             min_s: 0.5,
+            p10_s: 0.5,
             p50_s: 0.5,
+            p90_s: 0.5,
             n: 1,
         };
         assert_eq!(throughput(&r, 100), 200.0);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let s: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0), 1.0);
+        assert_eq!(percentile(&s, 50), 6.0); // (50*9+50)/100 = 5 -> s[5]
+        assert_eq!(percentile(&s, 100), 10.0);
+        assert_eq!(percentile(&[3.0], 90), 3.0);
+    }
+
+    #[test]
+    fn session_appends_runs_to_json() {
+        let dir = std::env::temp_dir().join(format!("dynamix-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let r = BenchResult {
+            name: "train_step/b4096".into(),
+            mean_s: 0.25,
+            std_s: 0.0,
+            min_s: 0.25,
+            p10_s: 0.25,
+            p50_s: 0.25,
+            p90_s: 0.25,
+            n: 4,
+        };
+        let mut s = BenchSession::new("train_step");
+        s.push_items(&r, 4096);
+        let written = s.flush_to(path.clone()).unwrap();
+        let mut s2 = BenchSession::new("train_step");
+        s2.push(&r);
+        s2.flush_to(path).unwrap();
+
+        let root = Json::parse(&std::fs::read_to_string(&written).unwrap()).unwrap();
+        let runs = root.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        let first = &runs[0].get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("bench").unwrap().as_str(), Some("train_step/b4096"));
+        assert_eq!(first.get("items").unwrap().as_usize(), Some(4096));
+        assert!((first.get("items_per_s").unwrap().as_f64().unwrap() - 16384.0).abs() < 1e-6);
+        assert!(runs[0].get("threads").unwrap().as_usize().unwrap() >= 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

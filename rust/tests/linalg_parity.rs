@@ -1,0 +1,199 @@
+//! Parity suite for the blocked + threaded native linalg kernels.
+//!
+//! The blocked kernels reorder floating-point accumulation (lane-wise
+//! partial sums, 4-way reduction unrolls) and fan rows out across scoped
+//! threads, so they are held to the scalar reference loops within 1e-5 on
+//! randomized inputs — across awkward shapes (m=1, odd n, n not a multiple
+//! of the lane/tile width, k=1) and across DYNAMIX_THREADS = 1, 2, 7 —
+//! and the whole train step is held bitwise-stable across thread counts.
+
+use dynamix::config::Optimizer;
+use dynamix::runtime::native::exec::Pool;
+use dynamix::runtime::native::linalg::{self, scalar};
+use dynamix::runtime::native::NativeBackend;
+use dynamix::runtime::{ComputeBackend, OptState};
+use dynamix::util::rng::Rng;
+
+/// Awkward shapes: unit dims, odd everything, off-lane/off-tile widths,
+/// and one large-enough-to-actually-thread case.
+const SHAPES: [(usize, usize, usize); 11] = [
+    (1, 1, 1),
+    (1, 7, 5),
+    (3, 1, 9),
+    (5, 13, 1),
+    (2, 3, 8),
+    (17, 31, 40),
+    (7, 129, 33),
+    (33, 64, 10),
+    (64, 128, 64),
+    (256, 65, 17),
+    (512, 96, 40), // large enough to fan out across every thread count
+];
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+            "{what}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn blocked_kernels_match_scalar_reference_across_shapes_and_threads() {
+    let mut rng = Rng::new(0xD1A);
+    for &(m, k, n) in &SHAPES {
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let dy = rand_vec(&mut rng, m * n);
+
+        let mut acc_ref = vec![0.0f32; m * n];
+        scalar::matmul_acc(&x, &w, m, k, n, &mut acc_ref);
+        let mut bt_ref = vec![0.0f32; m * k];
+        scalar::matmul_bt(&dy, &w, m, k, n, &mut bt_ref);
+        let mut at_ref = vec![0.0f32; k * n];
+        scalar::matmul_at(&x, &dy, m, k, n, &mut at_ref);
+
+        for threads in [1usize, 2, 7] {
+            let pool = Pool::with_threads(threads);
+            let tag = format!("m{m}k{k}n{n}t{threads}");
+
+            let mut acc = vec![0.0f32; m * n];
+            linalg::matmul_acc(&pool, &x, &w, m, k, n, &mut acc);
+            assert_close(&acc, &acc_ref, &format!("acc/{tag}"));
+
+            let mut bt = vec![0.0f32; m * k];
+            linalg::matmul_bt(&pool, &dy, &w, m, k, n, &mut bt);
+            assert_close(&bt, &bt_ref, &format!("bt/{tag}"));
+
+            let mut at = vec![0.0f32; k * n];
+            linalg::matmul_at(&pool, &x, &dy, m, k, n, &mut at);
+            assert_close(&at, &at_ref, &format!("at/{tag}"));
+        }
+    }
+}
+
+#[test]
+fn padded_zero_rows_cost_nothing_and_change_nothing() {
+    // The row-level sparsity skip must be purely an optimization: results
+    // with padded (all-zero) trailing rows equal the scalar reference.
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (24usize, 33usize, 20usize);
+    let valid = 9usize;
+    let mut x = rand_vec(&mut rng, m * k);
+    let mut dy = rand_vec(&mut rng, m * n);
+    for v in &mut x[valid * k..] {
+        *v = 0.0;
+    }
+    for v in &mut dy[valid * n..] {
+        *v = 0.0;
+    }
+    let w = rand_vec(&mut rng, k * n);
+
+    let mut acc_ref = vec![0.0f32; m * n];
+    scalar::matmul_acc(&x, &w, m, k, n, &mut acc_ref);
+    let mut at_ref = vec![0.0f32; k * n];
+    scalar::matmul_at(&x, &dy, m, k, n, &mut at_ref);
+    let mut bt_ref = vec![0.0f32; m * k];
+    scalar::matmul_bt(&dy, &w, m, k, n, &mut bt_ref);
+
+    for threads in [1usize, 2, 7] {
+        let pool = Pool::with_threads(threads);
+        let mut acc = vec![0.0f32; m * n];
+        linalg::matmul_acc(&pool, &x, &w, m, k, n, &mut acc);
+        assert_close(&acc, &acc_ref, "acc/padded");
+        // Padded output rows are exactly zero, not approximately.
+        assert!(acc[valid * n..].iter().all(|&v| v == 0.0));
+
+        let mut at = vec![0.0f32; k * n];
+        linalg::matmul_at(&pool, &x, &dy, m, k, n, &mut at);
+        assert_close(&at, &at_ref, "at/padded");
+
+        let mut bt = vec![0.0f32; m * k];
+        linalg::matmul_bt(&pool, &dy, &w, m, k, n, &mut bt);
+        assert_close(&bt, &bt_ref, "bt/padded");
+        assert!(bt[valid * k..].iter().all(|&v| v == 0.0));
+    }
+}
+
+#[test]
+fn accumulating_kernels_add_to_existing_partial_sums() {
+    // matmul_acc / matmul_at accumulate; threading must not clobber the
+    // caller's partial sums.
+    let mut rng = Rng::new(11);
+    let (m, k, n) = (128usize, 64usize, 40usize);
+    let x = rand_vec(&mut rng, m * k);
+    let w = rand_vec(&mut rng, k * n);
+    let seed = rand_vec(&mut rng, m * n);
+
+    let mut want = seed.clone();
+    scalar::matmul_acc(&x, &w, m, k, n, &mut want);
+    for threads in [1usize, 3] {
+        let mut got = seed.clone();
+        linalg::matmul_acc(&Pool::with_threads(threads), &x, &w, m, k, n, &mut got);
+        assert_close(&got, &want, "acc/partial");
+    }
+}
+
+#[test]
+fn train_step_is_stable_across_thread_counts() {
+    // Full train-step parity: the row partition assigns every output row to
+    // exactly one thread and preserves per-row summation order, so params
+    // and loss agree across DYNAMIX_THREADS settings (well within the 1e-5
+    // contract; bitwise in practice).
+    let mut rng = Rng::new(5);
+    let bucket = 256usize;
+    let fd = 128usize;
+    let x: Vec<f32> = rand_vec(&mut rng, bucket * fd);
+    let y: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+    let mask = vec![1.0f32; bucket];
+
+    let run = |threads: usize| -> (Vec<f32>, Vec<f32>) {
+        let b = NativeBackend::with_threads(threads);
+        let mut state = OptState::new(b.init_params("vgg11_mini", 3).unwrap(), Optimizer::Sgd);
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let out = b
+                .train_step("vgg11_mini", Optimizer::Sgd, bucket, &mut state, &x, &y, &mask, 0.05)
+                .unwrap();
+            losses.push(out.loss);
+        }
+        (losses, state.params)
+    };
+
+    let (loss1, params1) = run(1);
+    for threads in [2usize, 7] {
+        let (loss_t, params_t) = run(threads);
+        for (a, b) in loss_t.iter().zip(&loss1) {
+            assert!((a - b).abs() <= 1e-5, "loss diverged at t={threads}: {a} vs {b}");
+        }
+        for (i, (a, b)) in params_t.iter().zip(&params1).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "param {i} diverged at t={threads}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamix_threads_env_controls_pool_size() {
+    // This is the only test in this binary that touches the process env:
+    // every other test pins thread counts via Pool::with_threads /
+    // NativeBackend::with_threads, which never read DYNAMIX_THREADS, so
+    // set_var here cannot race a concurrent getenv.
+    let prev = std::env::var("DYNAMIX_THREADS").ok();
+    std::env::set_var("DYNAMIX_THREADS", "7");
+    assert_eq!(Pool::from_env().threads(), 7);
+    std::env::set_var("DYNAMIX_THREADS", "not-a-number");
+    assert!(Pool::from_env().threads() >= 1);
+    match prev {
+        Some(v) => std::env::set_var("DYNAMIX_THREADS", v),
+        None => std::env::remove_var("DYNAMIX_THREADS"),
+    }
+}
