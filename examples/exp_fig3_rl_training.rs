@@ -8,11 +8,11 @@ fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
     match std::env::args().nth(2) {
         Some(preset) => {
-            harness::fig3_rl_training(store, &preset, scale)?;
+            harness::fig3_rl_training(store, &preset, scale, None)?;
         }
         None => {
             for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
-                harness::fig3_rl_training(store.clone(), preset, scale)?;
+                harness::fig3_rl_training(store.clone(), preset, scale, None)?;
             }
         }
     }

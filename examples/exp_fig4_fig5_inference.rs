@@ -8,11 +8,11 @@ fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
     match std::env::args().nth(2) {
         Some(preset) => {
-            harness::fig4_fig5_inference(store, &preset, scale)?;
+            harness::fig4_fig5_inference(store, &preset, scale, None)?;
         }
         None => {
             for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
-                harness::fig4_fig5_inference(store.clone(), preset, scale)?;
+                harness::fig4_fig5_inference(store.clone(), preset, scale, None)?;
             }
         }
     }

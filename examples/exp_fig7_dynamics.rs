@@ -1,0 +1,14 @@
+//! Regenerates the dynamic-environment scenario comparison (fig7): the
+//! frozen DYNAMIX policy vs static baselines and the GNS heuristic under
+//! identical scripted timelines (preemption/rejoin, bandwidth collapse,
+//! congestion storms, load shifts).
+//! Usage: cargo run --release --example exp_fig7_dynamics -- [quick|full]
+use dynamix::{config::Scale, harness};
+use dynamix::runtime::default_backend;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(&std::env::args().nth(1).unwrap_or("quick".into()))?;
+    let store = default_backend()?;
+    harness::fig7_dynamics(store, scale)?;
+    Ok(())
+}

@@ -6,12 +6,14 @@
 //!
 //!     cargo bench --bench decision_cycle
 
-use dynamix::config::RlConfig;
+use dynamix::config::{ExperimentConfig, RlConfig};
 use dynamix::rl::agent::PpoAgent;
 use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
 use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
 use dynamix::runtime::default_backend;
+use dynamix::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
 use dynamix::sysmetrics::WindowSummary;
+use dynamix::trainer::BspTrainer;
 use dynamix::util::bench::{bench, iters, BenchSession};
 
 fn main() -> anyhow::Result<()> {
@@ -85,6 +87,59 @@ fn main() -> anyhow::Result<()> {
         agent.update(&batch).unwrap();
     });
     session.push_items(&r, 320);
+
+    println!("\n== BSP iterate under scripted dynamics (event-queue overhead) ==");
+    // Three operating points, all with 8 workers at batch 64:
+    //  * steady            — no script (baseline iterate cost);
+    //  * load_shift_storm  — several events due EVERY iteration, none of
+    //    which touch membership or batches: the delta vs steady is the
+    //    pure scenario-engine overhead on the hot loop;
+    //  * preempt_churn     — full elastic churn (redistribute + reshard):
+    //    the real cost of membership changes, dominated by the 50k-index
+    //    shard reshuffle.
+    let mk_cfg = |scenario: Option<ScenarioScript>| {
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 8;
+        c.batch.initial = 64;
+        c.scenario = scenario;
+        c
+    };
+    let (w, n) = iters(5, 60);
+    let mut steady = BspTrainer::new(&mk_cfg(None), store.clone())?;
+    let r = bench("iterate/steady", w, n, || {
+        steady.iterate().unwrap();
+    });
+    session.push_items(&r, 8 * 64);
+
+    // ~20k load-shift events at 2 ms spacing: the queue stays busy for the
+    // whole measured horizon (quick mode included).
+    let shifts = ScenarioScript {
+        name: "bench-load-shift-storm".into(),
+        events: (0..20_000)
+            .map(|i| TimedEvent {
+                at_s: (i + 1) as f64 * 0.002,
+                event: ScenarioEvent::LoadShift {
+                    worker: i % 8,
+                    load_mean: if i % 2 == 0 { 0.5 } else { 0.1 },
+                },
+            })
+            .collect(),
+    };
+    let mut shifted = BspTrainer::new(&mk_cfg(Some(shifts)), store.clone())?;
+    let r = bench("iterate/load_shift_storm", w, n, || {
+        shifted.iterate().unwrap();
+    });
+    session.push_items(&r, 8 * 64);
+
+    // Rotating preempt/rejoin pairs (+ shifts) every ~10 ms; the cluster
+    // never empties. Batches drift as budgets redistribute — this bench
+    // prices the membership machinery, not a fixed batch shape.
+    let churn = ScenarioScript::synthetic_churn(8, 20_000, 0.01);
+    let mut churned = BspTrainer::new(&mk_cfg(Some(churn)), store.clone())?;
+    let r = bench("iterate/preempt_churn", w, n, || {
+        churned.iterate().unwrap();
+    });
+    session.push_items(&r, 8 * 64);
 
     let path = session.flush()?;
     println!("\nrecorded run -> {}", path.display());

@@ -165,7 +165,9 @@ pub fn run_baseline(
         final_eval = eval_acc;
         let windows: Vec<WindowSummary> =
             trainer.windows.iter_mut().map(|w| w.finish()).collect();
-        let (bm, bs) = mean_std_usize(&trainer.batches);
+        // Trace statistics span the live membership only (scenario runs
+        // can preempt workers mid-run; see `sim::scenario`).
+        let (bm, bs) = mean_std_usize(&trainer.active_batches());
         record.push(TracePoint {
             iter: trainer.iter,
             sim_time: trainer.cluster.clock,
@@ -174,7 +176,7 @@ pub fn run_baseline(
             loss: last_loss,
             batch_mean: bm,
             batch_std: bs,
-            global_batch: trainer.batches.iter().sum(),
+            global_batch: trainer.global_batch(),
         });
         detector.observe(eval_acc, trainer.cluster.clock);
         if detector.converged() {
@@ -182,10 +184,18 @@ pub fn run_baseline(
         }
         let mut batches = trainer.batches.clone();
         policy.adjust(cycle + 1, &mut batches, &windows, cfg.batch.min, cfg.batch.max);
-        trainer.batches = batches;
+        // Absent workers keep their frozen pre-preemption batch (the same
+        // contract the coordinator enforces): only live workers take the
+        // policy's new sizes.
+        for w in 0..batches.len() {
+            if trainer.is_active(w) {
+                trainer.batches[w] = batches[w];
+            }
+        }
     }
     record.final_eval_acc = final_eval;
     record.convergence_time = detector.time();
+    trainer.annotate_record(record);
     Ok(BaselineSummary {
         policy: policy.name(),
         final_eval_acc: final_eval,

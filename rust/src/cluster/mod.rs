@@ -17,7 +17,14 @@
 //!   `max_i(compute_i) + sync + barrier`, the straggler structure that
 //!   motivates the whole paper.
 
+//! Dynamics live in `sim::process` (the unified [`DynamicsProcess`]
+//! family) and the cluster additionally supports **elastic membership**
+//! plus mid-run profile mutation (speed throttles, fabric-wide bandwidth
+//! scaling, load-mean shifts) so `sim::scenario` scripts can pose the
+//! dynamic environments the paper motivates but never simulates.
+
 use crate::config::ClusterPreset;
+use crate::sim::process::{ContentionProcess, DynamicsProcess};
 use crate::util::rng::Rng;
 
 /// Static capability description of one worker.
@@ -133,25 +140,35 @@ pub fn profiles(preset: ClusterPreset, n_workers: usize, seed: u64) -> Vec<Worke
 /// Evolving state of one simulated worker.
 #[derive(Clone, Debug)]
 struct WorkerState {
+    /// Current (possibly scenario-mutated) capability profile.
     profile: WorkerProfile,
-    /// Current contention level in [0, 0.95].
-    load: f64,
-    rng: Rng,
+    /// Pristine profile from construction; `reset` and the `factor = 1.0`
+    /// scenario events restore against it.
+    base: WorkerProfile,
+    /// Background contention: OU level + Poisson bursts in [0, 0.95].
+    load: ContentionProcess,
+    /// Cluster membership (false while spot-preempted).
+    active: bool,
 }
 
 impl WorkerState {
-    /// Advance the OU load process by `dt` simulated seconds.
-    fn advance(&mut self, dt: f64) {
-        let p = &self.profile;
-        let drift = p.load_rate * (p.load_mean - self.load) * dt;
-        let diffusion = p.load_vol * dt.sqrt() * self.rng.normal();
-        self.load += drift + diffusion;
-        // Poisson bursts (multi-tenant neighbours arriving).
-        let bursts = self.rng.poisson(p.burst_rate * dt);
-        if bursts > 0 {
-            self.load += p.burst_level;
+    fn new(profile: WorkerProfile, rng: Rng) -> Self {
+        let load = ContentionProcess::new(
+            profile.load_mean,
+            profile.load_rate,
+            profile.load_vol,
+            profile.burst_rate,
+            profile.burst_level,
+            0.0,
+            0.95,
+            rng,
+        );
+        WorkerState {
+            base: profile.clone(),
+            profile,
+            load,
+            active: true,
         }
-        self.load = self.load.clamp(0.0, 0.95);
     }
 }
 
@@ -217,11 +234,7 @@ impl SimCluster {
         let workers = profs
             .into_iter()
             .enumerate()
-            .map(|(i, profile)| WorkerState {
-                load: profile.load_mean,
-                profile,
-                rng: root.split(i as u64),
-            })
+            .map(|(i, profile)| WorkerState::new(profile, root.split(i as u64)))
             .collect();
         SimCluster {
             workers,
@@ -239,6 +252,60 @@ impl SimCluster {
         &self.workers[w].profile
     }
 
+    // --- elastic membership (scenario preemption / rejoin) ---
+
+    pub fn is_active(&self, w: usize) -> bool {
+        self.workers[w].active
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.workers.iter().filter(|ws| ws.active).count()
+    }
+
+    /// Plain membership setter; callers (the trainer) enforce the
+    /// never-empty-cluster rule.
+    pub fn set_active(&mut self, w: usize, active: bool) {
+        self.workers[w].active = active;
+    }
+
+    /// Membership mask, one flag per worker.
+    pub fn active_mask(&self) -> Vec<bool> {
+        self.workers.iter().map(|ws| ws.active).collect()
+    }
+
+    /// Profiles of the currently active workers (the netsim collective
+    /// only spans machines that are actually present).
+    pub fn active_profiles(&self) -> Vec<WorkerProfile> {
+        self.workers
+            .iter()
+            .filter(|ws| ws.active)
+            .map(|ws| ws.profile.clone())
+            .collect()
+    }
+
+    // --- scenario-event mutators (relative to the base profile, so a
+    //     factor of 1.0 always restores the pristine value) ---
+
+    /// Scale worker `w`'s compute speed to `factor ×` its base speed.
+    pub fn scale_speed(&mut self, w: usize, factor: f64) {
+        let ws = &mut self.workers[w];
+        ws.profile.speed = (ws.base.speed * factor.max(0.01)).max(1e-3);
+    }
+
+    /// Scale every worker's NIC bandwidth to `factor ×` its base value
+    /// (fabric-wide event: oversubscription, link flap).
+    pub fn scale_bandwidth_all(&mut self, factor: f64) {
+        for ws in &mut self.workers {
+            ws.profile.bandwidth_gbps = (ws.base.bandwidth_gbps * factor.max(0.01)).max(1e-3);
+        }
+    }
+
+    /// Shift worker `w`'s background-load OU mean (tenant churn).
+    pub fn set_load_mean(&mut self, w: usize, mean: f64) {
+        self.workers[w].load.set_mean(mean);
+        self.workers[w].profile.load_mean = mean.clamp(0.0, 0.95);
+    }
+
     /// Largest batch that fits worker `w` for a model of `param_count`.
     pub fn max_batch(&self, w: usize, param_count: usize, cap: usize) -> usize {
         let mut hi = cap;
@@ -251,20 +318,29 @@ impl SimCluster {
     /// Simulate the compute phase of one BSP iteration.
     ///
     /// `batches[w]` is worker w's local batch size. Returns per-worker
-    /// outcomes; does NOT advance the clock (the trainer combines compute
-    /// with the netsim sync phase first).
+    /// outcomes (a preempted worker costs nothing: `compute_s = 0`); does
+    /// NOT advance the clock (the trainer combines compute with the netsim
+    /// sync phase first).
     pub fn compute_phase(&mut self, batches: &[usize]) -> Vec<ComputeOutcome> {
         assert_eq!(batches.len(), self.workers.len());
         batches
             .iter()
             .zip(self.workers.iter_mut())
             .map(|(&b, ws)| {
-                let effective_speed = ws.profile.speed * (1.0 - ws.load);
+                let load = ws.load.value();
+                if !ws.active {
+                    return ComputeOutcome {
+                        compute_s: 0.0,
+                        load,
+                        effective_speed: 0.0,
+                    };
+                }
+                let effective_speed = ws.profile.speed * (1.0 - load);
                 let us =
                     self.cost.fixed_us + b as f64 * self.cost.base_us_per_sample / effective_speed.max(0.05);
                 ComputeOutcome {
                     compute_s: us / 1e6,
-                    load: ws.load,
+                    load,
                     effective_speed,
                 }
             })
@@ -272,7 +348,10 @@ impl SimCluster {
     }
 
     /// Advance the BSP clock by one iteration: slowest worker + sync +
-    /// barrier; evolves every worker's load process by that span.
+    /// barrier; evolves every worker's load process by that span (absent
+    /// workers' background processes keep evolving — the machine is still
+    /// busy, just not ours — which also keeps RNG streams aligned across
+    /// membership histories).
     pub fn advance_iteration(&mut self, outcomes: &[ComputeOutcome], sync_s: f64) -> f64 {
         let compute_max = outcomes
             .iter()
@@ -280,18 +359,18 @@ impl SimCluster {
             .fold(0.0f64, f64::max);
         let dt = compute_max + sync_s + self.barrier_s;
         for ws in &mut self.workers {
-            ws.advance(dt);
+            ws.load.advance(dt);
         }
         self.clock += dt;
         dt
     }
 
-    /// Reset clock + load processes (new episode), keeping profiles.
+    /// Reset clock, membership, profiles and load processes (new episode).
+    /// Scenario-mutated profiles restore to their pristine base.
     pub fn reset(&mut self, seed: u64) {
         let root = Rng::new(seed ^ 0xC1C0);
         for (i, ws) in self.workers.iter_mut().enumerate() {
-            ws.load = ws.profile.load_mean;
-            ws.rng = root.split(i as u64);
+            *ws = WorkerState::new(ws.base.clone(), root.split(i as u64));
         }
         self.clock = 0.0;
     }
@@ -379,5 +458,76 @@ mod tests {
         assert_eq!(c.clock, 0.0);
         let o2: Vec<f64> = c.compute_phase(&vec![128; 4]).iter().map(|o| o.compute_s).collect();
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn preempted_worker_costs_nothing_and_rejoins() {
+        let mut c = SimCluster::new(ClusterPreset::UniformA100, 4, 0);
+        assert_eq!(c.n_active(), 4);
+        c.set_active(2, false);
+        assert_eq!(c.n_active(), 3);
+        assert!(!c.is_active(2));
+        let out = c.compute_phase(&vec![128; 4]);
+        assert_eq!(out[2].compute_s, 0.0);
+        assert_eq!(out[2].effective_speed, 0.0);
+        assert!(out[0].compute_s > 0.0);
+        assert_eq!(c.active_profiles().len(), 3);
+        assert_eq!(c.active_mask(), vec![true, true, false, true]);
+        c.set_active(2, true);
+        let out = c.compute_phase(&vec![128; 4]);
+        assert!(out[2].compute_s > 0.0, "rejoined worker computes again");
+    }
+
+    #[test]
+    fn scale_speed_slows_compute_and_is_base_relative() {
+        let mut c = SimCluster::new(ClusterPreset::UniformA100, 2, 0);
+        let t0 = c.compute_phase(&vec![256; 2])[0].compute_s;
+        c.scale_speed(0, 0.25);
+        let t_slow = c.compute_phase(&vec![256; 2])[0].compute_s;
+        assert!(t_slow > t0 * 2.0, "{t_slow} !> {t0}*2");
+        // factor = 1.0 restores the pristine speed, not 0.25 * 0.25.
+        c.scale_speed(0, 1.0);
+        let t1 = c.compute_phase(&vec![256; 2])[0].compute_s;
+        assert_eq!(t0, t1);
+    }
+
+    #[test]
+    fn bandwidth_scaling_hits_every_profile_and_restores() {
+        let mut c = SimCluster::new(ClusterPreset::UniformA100, 3, 0);
+        let base = c.profile(1).bandwidth_gbps;
+        c.scale_bandwidth_all(0.2);
+        assert!((c.profile(1).bandwidth_gbps - base * 0.2).abs() < 1e-12);
+        c.scale_bandwidth_all(1.0);
+        assert_eq!(c.profile(1).bandwidth_gbps, base);
+    }
+
+    #[test]
+    fn load_shift_moves_the_observed_load() {
+        let mut c = SimCluster::new(ClusterPreset::UniformA100, 2, 1);
+        c.set_load_mean(0, 0.7);
+        let batches = vec![64; 2];
+        let mut last = 0.0;
+        for _ in 0..300 {
+            let out = c.compute_phase(&batches);
+            last = out[0].load;
+            c.advance_iteration(&out, 0.0);
+        }
+        assert!(last > 0.4, "load did not climb toward shifted mean: {last}");
+    }
+
+    #[test]
+    fn reset_undoes_scenario_mutations() {
+        let mut c = SimCluster::new(ClusterPreset::FabricHetero, 4, 0);
+        let speed0 = c.profile(0).speed;
+        let bw0 = c.profile(0).bandwidth_gbps;
+        c.scale_speed(0, 0.1);
+        c.scale_bandwidth_all(0.1);
+        c.set_load_mean(0, 0.9);
+        c.set_active(3, false);
+        c.reset(0);
+        assert_eq!(c.profile(0).speed, speed0);
+        assert_eq!(c.profile(0).bandwidth_gbps, bw0);
+        assert_eq!(c.profile(0).load_mean, WorkerProfile::rtx3090().load_mean);
+        assert!(c.is_active(3));
     }
 }

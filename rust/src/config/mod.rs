@@ -7,6 +7,7 @@
 //! shrinks episode/step counts for CI while preserving every structural
 //! parameter (worker counts, k, reward coefficients).
 
+use crate::sim::scenario::ScenarioScript;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -229,6 +230,10 @@ pub struct ExperimentConfig {
     pub episodes: usize,
     /// Decision cycles per episode (≈ paper's "steps per episode").
     pub steps_per_episode: usize,
+    /// Scripted dynamic-environment timeline (None = stationary run).
+    /// Replayed identically — same seed, same events — for the RL policy
+    /// and every baseline, and re-armed on each episode reset.
+    pub scenario: Option<ScenarioScript>,
 }
 
 impl Default for ExperimentConfig {
@@ -241,6 +246,7 @@ impl Default for ExperimentConfig {
             batch: BatchConfig::default(),
             episodes: 20,
             steps_per_episode: 100,
+            scenario: None,
         }
     }
 }
@@ -277,11 +283,14 @@ impl ExperimentConfig {
         anyhow::ensure!(self.rl.k >= 1, "k must be >= 1");
         anyhow::ensure!((0.0..=1.0).contains(&self.rl.gamma), "gamma outside [0,1]");
         anyhow::ensure!(self.train.max_steps >= self.rl.k, "max_steps < k");
+        if let Some(s) = &self.scenario {
+            s.validate(self.cluster.n_workers)?;
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        crate::jobj! {
+        let mut j = crate::jobj! {
             "name" => self.name.clone(),
             "model" => self.train.model.clone(),
             "optimizer" => self.train.optimizer.as_str(),
@@ -314,7 +323,11 @@ impl ExperimentConfig {
             "batch_max" => self.batch.max,
             "episodes" => self.episodes,
             "steps_per_episode" => self.steps_per_episode,
+        };
+        if let (Json::Obj(m), Some(s)) = (&mut j, &self.scenario) {
+            m.insert("scenario".into(), s.to_json());
         }
+        j
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
@@ -369,6 +382,7 @@ impl ExperimentConfig {
         if let Some(x) = u("batch_max") { c.batch.max = x; }
         if let Some(x) = u("episodes") { c.episodes = x; }
         if let Some(x) = u("steps_per_episode") { c.steps_per_episode = x; }
+        if let Some(v) = v.get("scenario") { c.scenario = Some(ScenarioScript::from_json(v)?); }
         c.validate()?;
         Ok(c)
     }
@@ -403,12 +417,17 @@ mod tests {
         c.cluster.topology = Topology::ParameterServer { servers: 2 };
         c.rl.variant = PpoVariant::Simplified;
         c.cluster.n_workers = 8;
+        c.scenario = Some(ScenarioScript::by_name("spot_chaos").unwrap());
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.train.optimizer, Optimizer::Adam);
         assert_eq!(c2.cluster.topology, Topology::ParameterServer { servers: 2 });
         assert_eq!(c2.rl.variant, PpoVariant::Simplified);
         assert_eq!(c2.cluster.n_workers, 8);
+        assert_eq!(c2.scenario, c.scenario, "scenario scripts must round-trip");
+        // No scenario key -> None (stationary default preserved).
+        let plain = ExperimentConfig::from_json(&ExperimentConfig::default().to_json()).unwrap();
+        assert!(plain.scenario.is_none());
     }
 
     #[test]
@@ -425,6 +444,11 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.batch.max = 4096;
         assert!(c.validate().is_err());
+        // Scenario validation runs against the configured cluster size.
+        let mut c = ExperimentConfig::default();
+        c.cluster.n_workers = 2;
+        c.scenario = Some(ScenarioScript::by_name("preempt_rejoin").unwrap());
+        assert!(c.validate().is_err(), "script targets worker 3 of 2");
     }
 
     #[test]

@@ -24,16 +24,22 @@ use crate::metrics::{mean_std, mean_std_usize, median, ConvergenceDetector, RunR
 use crate::rl::action::BatchRule;
 use crate::rl::agent::{PpoAgent, UpdateStats};
 use crate::rl::reward::RewardParams;
-use crate::rl::state::{GlobalState, StateBuilder, StateVector};
+use crate::rl::state::{GlobalState, StateBuilder, StateVector, STATE_DIM};
 use crate::rl::trajectory::{Trajectory, Transition, UpdateBatch};
 use crate::runtime::Backend;
 use crate::trainer::BspTrainer;
 
 /// Outcome of one k-iteration decision cycle (pre-action snapshot).
+///
+/// Under elastic membership (scripted preemption) an absent worker's state
+/// vector is the zero mask and its reward is 0; `active[w]` tells callers
+/// which entries are real.
 #[derive(Clone, Debug)]
 pub struct CycleOutcome {
     pub states: Vec<StateVector>,
     pub rewards: Vec<f64>,
+    /// Membership at the end of the cycle (aligned with `states`).
+    pub active: Vec<bool>,
     pub sim_clock: f64,
     pub train_acc: f64,
     pub eval_acc: f64,
@@ -135,13 +141,23 @@ impl Coordinator {
             eval_acc,
             eval_trend,
             progress,
-            n_workers: self.trainer.n_workers(),
+            // The policy's scale feature tracks the LIVE cluster size, so
+            // preemption is visible in every worker's state.
+            n_workers: self.trainer.n_active(),
         };
         let n = self.trainer.n_workers();
+        let active = self.trainer.active_mask();
         let mut states = Vec::with_capacity(n);
         let mut rewards = Vec::with_capacity(n);
         for w in 0..n {
+            // Absent workers are masked: zero state, zero reward. finish()
+            // still runs to clear any partial pre-preemption window.
             let summary = self.trainer.windows[w].finish();
+            if !active[w] {
+                rewards.push(0.0);
+                states.push(StateVector(vec![0.0; STATE_DIM]));
+                continue;
+            }
             if !self.calibrated && summary.iter_time_mean > 0.0 {
                 // First window defines the iteration-time reference for
                 // both the state feature and the reward's beta term.
@@ -155,6 +171,7 @@ impl Coordinator {
         Ok(CycleOutcome {
             states,
             rewards,
+            active,
             sim_clock: self.trainer.cluster.clock,
             train_acc: last_acc,
             eval_acc,
@@ -163,9 +180,13 @@ impl Coordinator {
     }
 
     /// Apply one action per worker under batch + memory constraints.
+    /// Absent workers take no action (their frozen batch waits for rejoin).
     fn apply_actions(&mut self, actions: &[usize]) {
         let max = self.cfg.batch.max;
         for (w, &a) in actions.iter().enumerate() {
+            if !self.trainer.is_active(w) {
+                continue;
+            }
             let cap = self.trainer.mem_cap(w, max);
             self.trainer.batches[w] = self.rule.apply(self.trainer.batches[w], a, Some(cap));
         }
@@ -193,6 +214,12 @@ impl Coordinator {
                 self.apply_actions(&samples.iter().map(|s| s.action).collect::<Vec<_>>());
                 let next = self.run_cycle((step + 1) as f64 / steps as f64)?;
                 for w in 0..n {
+                    // Only learn from real decisions: a worker absent at
+                    // action time contributed a masked state and no action
+                    // was applied, so no transition is recorded.
+                    if !cycle.active[w] {
+                        continue;
+                    }
                     trajs[w].push(Transition {
                         state: cycle.states[w].clone(),
                         action: samples[w].action,
@@ -242,7 +269,8 @@ impl Coordinator {
         let mut final_eval = cycle.eval_acc;
 
         for step in 0..max_cycles {
-            let (bm, bs) = mean_std_usize(&self.trainer.batches);
+            // Trace statistics span the LIVE membership only.
+            let (bm, bs) = mean_std_usize(&self.trainer.active_batches());
             batch_trace.push((step, bm, bs));
             record.push(TracePoint {
                 iter: self.trainer.iter,
@@ -252,7 +280,7 @@ impl Coordinator {
                 loss: cycle.loss,
                 batch_mean: bm,
                 batch_std: bs,
-                global_batch: self.trainer.batches.iter().sum(),
+                global_batch: self.trainer.global_batch(),
             });
             detector.observe(cycle.eval_acc, cycle.sim_clock);
             final_eval = cycle.eval_acc;
@@ -266,6 +294,7 @@ impl Coordinator {
 
         record.final_eval_acc = final_eval;
         record.convergence_time = detector.time();
+        self.trainer.annotate_record(record);
         Ok(InferenceSummary {
             final_eval_acc: final_eval,
             best_eval_acc: record.best_eval_acc(),
@@ -322,6 +351,76 @@ mod tests {
         for &b in &c.trainer.batches {
             assert!((32..=1024).contains(&b), "batch {b} out of range");
         }
+    }
+
+    #[test]
+    fn churn_scenario_masks_absent_workers_and_annotates_record() {
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        let mut c = cfg();
+        c.scenario = Some(ScenarioScript {
+            name: "churn".into(),
+            events: vec![
+                TimedEvent {
+                    at_s: 0.0,
+                    event: ScenarioEvent::PreemptWorker { worker: 2 },
+                },
+                TimedEvent {
+                    at_s: 0.02,
+                    event: ScenarioEvent::LoadShift {
+                        worker: 0,
+                        load_mean: 0.5,
+                    },
+                },
+            ],
+        });
+        let mut coord = Coordinator::new(c, backend()).unwrap();
+        let mut record = RunRecord::new("churn-infer");
+        let summary = coord.run_inference(4, &mut record).unwrap();
+        assert!(summary.total_iters > 0);
+        assert_eq!(coord.trainer.n_active(), 3, "preemption persisted");
+        // Global batch spans the 3 live workers only (preempted at t=0,
+        // before the first recorded point).
+        for p in &record.points {
+            assert!(
+                (3 * 32..=3 * 1024).contains(&p.global_batch),
+                "global batch {} outside 3-worker range",
+                p.global_batch
+            );
+        }
+        assert_eq!(
+            record.extra.get("scenario").and_then(crate::util::json::Json::as_str),
+            Some("churn")
+        );
+        assert!(record.extra.contains_key("scenario_timeline"));
+        for w in 0..4 {
+            if coord.trainer.is_active(w) {
+                assert!((32..=1024).contains(&coord.trainer.batches[w]));
+            }
+        }
+    }
+
+    #[test]
+    fn train_rl_learns_through_preemption() {
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        let mut c = cfg();
+        c.scenario = Some(ScenarioScript {
+            name: "mid-episode-churn".into(),
+            events: vec![
+                TimedEvent {
+                    at_s: 0.05,
+                    event: ScenarioEvent::PreemptWorker { worker: 3 },
+                },
+                TimedEvent {
+                    at_s: 0.30,
+                    event: ScenarioEvent::RejoinWorker { worker: 3 },
+                },
+            ],
+        });
+        let mut coord = Coordinator::new(c, backend()).unwrap();
+        let results = coord.train_rl(1).unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].mean_return.is_finite());
+        assert!(results[0].update.minibatches > 0, "masked workers still leave a batch");
     }
 
     #[test]

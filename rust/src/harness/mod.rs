@@ -13,12 +13,14 @@
 //! | [`fig6_transfer`] | Fig. 6 policy transfer |
 //! | [`byteps_integration`] | §VI-G parameter-server + heterogeneous GPUs |
 //! | [`overhead_analysis`] | §VI-H decision-overhead study |
+//! | [`fig7_dynamics`] | dynamic-environment scenarios (paper §I/§II-B motivation; beyond the paper's static testbeds) |
 
-use crate::baselines::{run_baseline, StaticPolicy};
+use crate::baselines::{run_baseline, GnsHeuristicPolicy, StaticPolicy};
 use crate::config::{presets, ExperimentConfig, Scale};
 use crate::coordinator::Coordinator;
 use crate::metrics::RunRecord;
 use crate::runtime::Backend;
+use crate::sim::scenario::ScenarioScript;
 use crate::util::json::Json;
 use std::path::PathBuf;
 
@@ -111,12 +113,18 @@ pub fn fig2_baselines(backend: Backend, scale: Scale) -> anyhow::Result<Json> {
 
 /// Paper Fig. 3: train the PPO agent; record per-episode mean/median
 /// cumulative rewards; snapshot the trained policy for Figs. 4-6.
+/// `scenario` (CLI `--scenario`) trains under a scripted dynamic
+/// environment, re-armed identically every episode.
 pub fn fig3_rl_training(
     backend: Backend,
     preset: &str,
     scale: Scale,
+    scenario: Option<ScenarioScript>,
 ) -> anyhow::Result<Json> {
-    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let mut cfg = presets::scaled(presets::by_name(preset)?, scale);
+    cfg.scenario = scenario;
+    cfg.validate()?;
+    let cfg = cfg;
     let episodes = cfg.episodes;
     let mut coord = Coordinator::new(cfg, backend)?;
     let results = coord.train_rl(episodes)?;
@@ -158,13 +166,19 @@ pub fn fig3_rl_training(
 
 /// Paper Figs. 4/5: deploy the trained policy greedily, compare against
 /// the two reference static baselines, and record the batch-size
-/// adaptation trace (mean ± std across workers).
+/// adaptation trace (mean ± std across workers). `scenario` (CLI
+/// `--scenario`) runs policy AND baselines under the identical scripted
+/// timeline.
 pub fn fig4_fig5_inference(
     backend: Backend,
     preset: &str,
     scale: Scale,
+    scenario: Option<ScenarioScript>,
 ) -> anyhow::Result<Json> {
-    let cfg = presets::scaled(presets::by_name(preset)?, scale);
+    let mut cfg = presets::scaled(presets::by_name(preset)?, scale);
+    cfg.scenario = scenario;
+    cfg.validate()?;
+    let cfg = cfg;
     let cycles = cycle_budget(&cfg, scale);
 
     // DYNAMIX run (uses the fig3 policy snapshot; trains briefly if absent).
@@ -468,9 +482,126 @@ pub fn overhead_analysis(backend: Backend, cycles: usize) -> anyhow::Result<Json
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Fig. 7 (beyond the paper) — scripted dynamic-environment scenarios
+// ---------------------------------------------------------------------------
+
+/// Scenario catalogue the dynamics experiment sweeps: four distinct
+/// dynamic environments, including spot preemption/rejoin — the cases the
+/// paper motivates (§I, §II-B) but its static testbeds never pose.
+pub const DYNAMICS_SCENARIOS: &[&str] = &[
+    "preempt_rejoin",
+    "bandwidth_collapse",
+    "congestion_storm",
+    "load_shift",
+];
+
+/// Dynamic-environment evaluation: the frozen RL policy vs static
+/// baselines and the GNS heuristic, each under the IDENTICAL scripted
+/// event timeline (same seed ⇒ bitwise-identical scenario traces; the
+/// timeline is recorded in every run record). One row per scenario.
+pub fn fig7_dynamics(backend: Backend, scale: Scale) -> anyhow::Result<Json> {
+    let mut base = presets::scaled(presets::by_name("vgg11-sgd")?, scale);
+    // 8 workers: enough for churn to hurt, cheap enough for the CI smoke
+    // leg; the built-in scripts only target workers 0-3.
+    base.cluster.n_workers = 8;
+
+    // One frozen policy for every scenario (ISSUE: the policy is trained
+    // once, then evaluated where static baselines break). Reuse the fig3
+    // snapshot when present; otherwise train a short one, stationarily.
+    let mut ppath = policy_path("vgg11-sgd");
+    if !ppath.exists() {
+        ppath = policy_path("fig7-dynamics");
+        if !ppath.exists() {
+            println!("[fig7] no policy snapshot; training a short one");
+            let mut coord = Coordinator::new(base.clone(), backend.clone())?;
+            coord.train_rl(base.episodes.min(2))?;
+            std::fs::create_dir_all(ppath.parent().unwrap())?;
+            coord.agent.save_theta(&ppath)?;
+        }
+    }
+
+    let cycles = cycle_budget(&base, scale);
+    let mut rows = Vec::new();
+    for &scen in DYNAMICS_SCENARIOS {
+        let script = ScenarioScript::by_name(scen)?;
+        let mut cfg = base.clone();
+        cfg.name = format!("fig7-{scen}");
+        cfg.scenario = Some(script.clone());
+        cfg.validate()?;
+
+        // DYNAMIX: frozen policy, greedy actions.
+        let mut coord = Coordinator::new(cfg.clone(), backend.clone())?;
+        coord.agent.load_theta_file(&ppath)?;
+        let mut drec = RunRecord::new(&format!("fig7-{scen}-dynamix"));
+        let ds = coord.run_inference(cycles, &mut drec)?;
+        drec.save_json(&runs_dir().join("fig7").join(format!("{}.json", drec.name)))?;
+        let dyn_events = coord.trainer.events_applied.len();
+        let dyn_time = ds.convergence_time.unwrap_or(ds.total_sim_time);
+
+        // Static baselines under the identical timeline.
+        let mut static_rows = Vec::new();
+        for b in [64usize, 256] {
+            let mut bcfg = cfg.clone();
+            bcfg.batch.initial = b;
+            let mut rec = RunRecord::new(&format!("fig7-{scen}-static{b}"));
+            let mut pol = StaticPolicy(b);
+            let s = run_baseline(&bcfg, backend.clone(), &mut pol, cycles, &mut rec)?;
+            rec.save_json(&runs_dir().join("fig7").join(format!("{}.json", rec.name)))?;
+            static_rows.push(crate::jobj! {
+                "batch" => b,
+                "final_acc" => s.final_eval_acc,
+                "best_acc" => s.best_eval_acc,
+                "conv_time" => s.convergence_time.unwrap_or(-1.0),
+                "sim_time" => s.total_sim_time,
+            });
+        }
+
+        // Strongest non-RL adaptive comparator.
+        let mut grec = RunRecord::new(&format!("fig7-{scen}-gns"));
+        let mut gns = GnsHeuristicPolicy::default();
+        let gs = run_baseline(&cfg, backend.clone(), &mut gns, cycles, &mut grec)?;
+        grec.save_json(&runs_dir().join("fig7").join(format!("{}.json", grec.name)))?;
+
+        println!(
+            "[fig7:{scen}] DYNAMIX acc={:.3} t={:.0}s ({} events) | gns acc={:.3} | static-64 see runs/",
+            ds.best_eval_acc, dyn_time, dyn_events, gs.best_eval_acc
+        );
+        rows.push(crate::jobj! {
+            "scenario" => scen,
+            "events_fired" => dyn_events,
+            "dynamix_acc" => ds.best_eval_acc,
+            "dynamix_final_acc" => ds.final_eval_acc,
+            "dynamix_time" => dyn_time,
+            "dynamix_conv_time" => ds.convergence_time.unwrap_or(-1.0),
+            "gns_acc" => gs.best_eval_acc,
+            "gns_time" => gs.convergence_time.unwrap_or(gs.total_sim_time),
+            "static" => Json::Arr(static_rows),
+            "timeline" => script.to_json(),
+        });
+    }
+    let out = crate::jobj! {
+        "experiment" => "fig7_dynamics",
+        "preset" => "vgg11-sgd",
+        "n_workers" => 8usize,
+        "scenarios" => Json::Arr(rows),
+    };
+    save(&out, "fig7/summary.json")?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dynamics_catalogue_is_valid_and_includes_churn() {
+        assert!(DYNAMICS_SCENARIOS.len() >= 4);
+        assert!(DYNAMICS_SCENARIOS.contains(&"preempt_rejoin"));
+        for s in DYNAMICS_SCENARIOS {
+            ScenarioScript::by_name(s).unwrap().validate(8).unwrap();
+        }
+    }
 
     #[test]
     fn cycle_budget_scales() {

@@ -14,6 +14,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod util;
+pub mod sim;
 pub mod config;
 pub mod runtime;
 pub mod data;

@@ -5,9 +5,14 @@
 //!   train-rl   --preset P [...]  — Fig. 3 episodic PPO training
 //!   infer      --preset P [...]  — Fig. 4/5 frozen-policy run
 //!   baseline   --preset P --batch B — static-batch run
-//!   exp        --which fig2|fig3|fig4|table1|fig6|byteps|overhead|all
+//!   exp        --which fig2|fig3|fig4|table1|fig6|byteps|overhead|dynamics|all
 //!   serve      --bind ADDR       — distributed leader (TCP protocol)
 //!   worker     --connect ADDR --id N — distributed worker
+//!
+//! Global flags: `--threads N` pins the native-backend kernel thread
+//! count (sets DYNAMIX_THREADS before backend init); `--scenario
+//! <path|name>` runs train-rl/infer/baseline under a scripted
+//! dynamic-environment timeline (JSON file or built-in name).
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); see
 //! `Args::parse`.
@@ -15,6 +20,7 @@
 use dynamix::config::{presets, Scale};
 use dynamix::harness;
 use dynamix::runtime::{default_backend, Backend};
+use dynamix::sim::scenario::ScenarioScript;
 use std::collections::BTreeMap;
 
 /// Minimal `--key value` argument parser.
@@ -60,14 +66,21 @@ USAGE: dynamix <command> [--key value ...]
 
 COMMANDS:
   info                      show manifest / model zoo / artifact summary
-  train-rl  --preset P [--scale quick|full]
-  infer     --preset P [--scale quick|full]
+  train-rl  --preset P [--scale quick|full] [--scenario S]
+  infer     --preset P [--scale quick|full] [--scenario S]
   baseline  --preset P --batch B [--scale quick|full] [--cycles N]
-  exp       --which fig2|fig3|fig4|table1|fig6|byteps|overhead|all
+            [--scenario S]
+  exp       --which fig2|fig3|fig4|table1|fig6|byteps|overhead|dynamics|all
             [--scale quick|full]
   serve     --bind 127.0.0.1:7077 --preset P   (distributed leader)
   worker    --connect 127.0.0.1:7077 --preset P --id N
   help
+
+GLOBAL FLAGS:
+  --threads N     pin native-backend kernel threads (DYNAMIX_THREADS)
+  --scenario S    scripted dynamic-environment timeline: a JSON file path
+                  or a built-in name (preempt_rejoin bandwidth_collapse
+                  congestion_storm load_shift spot_chaos)
 
 PRESETS: vgg11-sgd vgg11-adam resnet34-sgd scal-{8,16,32}
          transfer-{vgg16-src,vgg19-dst,resnet34-src,resnet50-dst}
@@ -84,8 +97,25 @@ fn main() {
     }
 }
 
+/// Resolve `--scenario <path|name>` into a script (None when absent).
+fn scenario_arg(args: &Args) -> anyhow::Result<Option<ScenarioScript>> {
+    match args.get("scenario") {
+        None => Ok(None),
+        Some(s) => Ok(Some(ScenarioScript::resolve(s)?)),
+    }
+}
+
 fn run() -> anyhow::Result<()> {
     let args = Args::parse();
+    // --threads N must land in the environment BEFORE any backend is
+    // constructed (the native kernel pool reads DYNAMIX_THREADS once).
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {t:?}"))?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        std::env::set_var("DYNAMIX_THREADS", t);
+    }
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -96,14 +126,14 @@ fn run() -> anyhow::Result<()> {
             let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
-            harness::fig3_rl_training(store, &preset, scale)?;
+            harness::fig3_rl_training(store, &preset, scale, scenario_arg(&args)?)?;
             Ok(())
         }
         "infer" => {
             let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
-            harness::fig4_fig5_inference(store, &preset, scale)?;
+            harness::fig4_fig5_inference(store, &preset, scale, scenario_arg(&args)?)?;
             Ok(())
         }
         "baseline" => {
@@ -113,6 +143,8 @@ fn run() -> anyhow::Result<()> {
             let batch: usize = args.get_or("batch", "64").parse()?;
             let mut cfg = presets::scaled(presets::by_name(&preset)?, scale);
             cfg.batch.initial = batch;
+            cfg.scenario = scenario_arg(&args)?;
+            cfg.validate()?;
             let cycles: usize = args
                 .get_or("cycles", &format!("{}", cfg.steps_per_episode))
                 .parse()?;
@@ -178,12 +210,12 @@ fn run_experiments(store: Backend, which: &str, scale: Scale) -> anyhow::Result<
     }
     if all || which == "fig3" {
         for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
-            harness::fig3_rl_training(store.clone(), preset, scale)?;
+            harness::fig3_rl_training(store.clone(), preset, scale, None)?;
         }
     }
     if all || which == "fig4" || which == "fig5" {
         for preset in ["vgg11-sgd", "vgg11-adam", "resnet34-sgd"] {
-            harness::fig4_fig5_inference(store.clone(), preset, scale)?;
+            harness::fig4_fig5_inference(store.clone(), preset, scale, None)?;
         }
     }
     if all || which == "table1" {
@@ -202,7 +234,10 @@ fn run_experiments(store: Backend, which: &str, scale: Scale) -> anyhow::Result<
         harness::byteps_integration(store.clone(), scale)?;
     }
     if all || which == "overhead" {
-        harness::overhead_analysis(store, 10)?;
+        harness::overhead_analysis(store.clone(), 10)?;
+    }
+    if all || which == "dynamics" {
+        harness::fig7_dynamics(store, scale)?;
     }
     Ok(())
 }

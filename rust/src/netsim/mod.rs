@@ -15,8 +15,15 @@
 //! follows an OU process shared across links (a congested fabric slows
 //! everyone, which is what the retransmission counters observe).
 
+//! The congestion level is a [`sim::process::OuProcess`](crate::sim::process::OuProcess)
+//! with its own RNG stream, and the fabric supports scenario-driven
+//! **congestion storms** ([`NetworkSim::storm`] / [`NetworkSim::relax`]):
+//! a storm jumps the level and the OU mean; relax restores the baseline
+//! mean and the level decays back through the dynamics.
+
 use crate::cluster::WorkerProfile;
 use crate::config::Topology;
+use crate::sim::process::{DynamicsProcess, OuProcess};
 use crate::util::rng::Rng;
 
 /// Result of simulating one synchronization round.
@@ -34,48 +41,79 @@ pub struct SyncOutcome {
 
 /// Network fabric simulator with a shared congestion process.
 pub struct NetworkSim {
+    /// Retransmission-count draws (separate stream from the OU diffusion
+    /// so scenario events never perturb unrelated randomness).
     rng: Rng,
-    /// OU congestion level in [0, 0.9].
-    congestion: f64,
-    pub congestion_mean: f64,
-    pub congestion_rate: f64,
-    pub congestion_vol: f64,
+    /// Shared OU congestion level in [0, 0.9].
+    congestion: OuProcess,
+    /// Baseline congestion mean (what [`NetworkSim::relax`] restores).
+    base_mean: f64,
+    /// Construction flavour, so `reset` rebuilds the same fabric.
+    noisy: bool,
     /// Retransmissions per (GiB moved × unit congestion).
     pub retx_per_gib: f64,
 }
 
 impl NetworkSim {
-    pub fn new(seed: u64) -> Self {
+    fn build(seed: u64, mean: f64, vol: f64, retx_per_gib: f64, noisy: bool) -> Self {
+        let root = Rng::new(seed ^ 0x4E75);
         NetworkSim {
-            rng: Rng::new(seed ^ 0x4E75),
-            congestion: 0.05,
-            congestion_mean: 0.05,
-            congestion_rate: 0.3,
-            congestion_vol: 0.04,
-            retx_per_gib: 900.0,
+            rng: root.split(1),
+            congestion: OuProcess::new(mean, 0.3, vol, 0.0, 0.9, root.split(2)),
+            base_mean: mean,
+            noisy,
+            retx_per_gib,
         }
+    }
+
+    pub fn new(seed: u64) -> Self {
+        Self::build(seed, 0.05, 0.04, 900.0, false)
     }
 
     /// A noisier fabric (FABRIC testbed / §VI-G heterogeneous cluster).
     pub fn noisy(seed: u64) -> Self {
-        NetworkSim {
-            congestion: 0.15,
-            congestion_mean: 0.15,
-            congestion_vol: 0.08,
-            retx_per_gib: 2_500.0,
-            ..Self::new(seed)
-        }
+        Self::build(seed, 0.15, 0.08, 2_500.0, true)
     }
 
     /// Advance the shared congestion process by `dt` seconds.
     pub fn advance(&mut self, dt: f64) {
-        let drift = self.congestion_rate * (self.congestion_mean - self.congestion) * dt;
-        let diffusion = self.congestion_vol * dt.sqrt() * self.rng.normal();
-        self.congestion = (self.congestion + drift + diffusion).clamp(0.0, 0.9);
+        self.congestion.advance(dt);
     }
 
     pub fn congestion(&self) -> f64 {
-        self.congestion
+        self.congestion.value()
+    }
+
+    pub fn congestion_mean(&self) -> f64 {
+        self.congestion.mean()
+    }
+
+    /// Force the congestion level (tests / deterministic comparisons).
+    pub fn set_congestion(&mut self, level: f64) {
+        self.congestion.set_level(level);
+    }
+
+    /// Pin the OU diffusion volatility (0 makes the fabric deterministic).
+    pub fn set_congestion_vol(&mut self, vol: f64) {
+        self.congestion.vol = vol;
+    }
+
+    /// Shift the long-run congestion mean.
+    pub fn set_congestion_mean(&mut self, mean: f64) {
+        self.congestion.set_mean(mean);
+    }
+
+    /// Scenario event: a cross-traffic storm jumps the congestion level
+    /// AND its mean to `level`, so it persists until [`NetworkSim::relax`].
+    pub fn storm(&mut self, level: f64) {
+        self.congestion.set_level(level);
+        self.congestion.set_mean(level);
+    }
+
+    /// End a storm: restore the baseline mean; the level decays back
+    /// through the OU dynamics rather than snapping.
+    pub fn relax(&mut self) {
+        self.congestion.set_mean(self.base_mean);
     }
 
     /// Simulate one gradient synchronization of `grad_bytes` per worker.
@@ -86,12 +124,13 @@ impl NetworkSim {
         grad_bytes: usize,
     ) -> SyncOutcome {
         let n = profiles.len();
+        let congestion = self.congestion.value();
         if n <= 1 {
             return SyncOutcome {
                 time_s: 0.0,
                 retransmissions: 0,
                 throughput_gbps: 0.0,
-                congestion: self.congestion,
+                congestion,
             };
         }
         // The slowest NIC and the largest latency bound the collective.
@@ -103,7 +142,7 @@ impl NetworkSim {
             .iter()
             .map(|p| p.latency_ms / 1e3)
             .fold(0.0f64, f64::max);
-        let eff_bw_bytes = min_bw_gbps * (1.0 - self.congestion) * 1e9 / 8.0;
+        let eff_bw_bytes = min_bw_gbps * (1.0 - congestion) * 1e9 / 8.0;
 
         let (alpha_terms, bytes_on_wire) = match topology {
             Topology::RingAllReduce => {
@@ -122,7 +161,7 @@ impl NetworkSim {
 
         // Retransmissions scale with bytes moved and congestion.
         let gib = bytes_on_wire * n as f64 / (1024.0 * 1024.0 * 1024.0);
-        let lambda = self.retx_per_gib * gib * self.congestion;
+        let lambda = self.retx_per_gib * gib * congestion;
         let retransmissions = self.rng.poisson(lambda);
         // Retransmitted segments add tail latency (~1.5 KB each + RTO slop).
         let retx_penalty = retransmissions as f64 * 1_500.0 / eff_bw_bytes * 4.0;
@@ -136,13 +175,14 @@ impl NetworkSim {
             } else {
                 0.0
             },
-            congestion: self.congestion,
+            congestion,
         }
     }
 
-    /// Reset the congestion process (new episode).
+    /// Reset the congestion process (new episode). Storm-shifted means
+    /// restore to the construction baseline.
     pub fn reset(&mut self, seed: u64) {
-        *self = if self.congestion_mean > 0.1 {
+        *self = if self.noisy {
             Self::noisy(seed)
         } else {
             Self::new(seed)
@@ -172,7 +212,7 @@ mod tests {
     fn ring_time_grows_sublinearly_with_workers() {
         // Ring moves 2(N-1)/N bytes — asymptotically constant per worker.
         let mut net = NetworkSim::new(0);
-        net.congestion_vol = 0.0; // deterministic
+        net.set_congestion_vol(0.0); // deterministic
         let t8 = net.sync(Topology::RingAllReduce, &uniform(8), 100 << 20).time_s;
         let t32 = net.sync(Topology::RingAllReduce, &uniform(32), 100 << 20).time_s;
         assert!(t32 > t8, "latency terms grow");
@@ -182,7 +222,7 @@ mod tests {
     #[test]
     fn ps_incast_slower_than_ring_at_scale() {
         let mut net = NetworkSim::new(0);
-        net.congestion_vol = 0.0;
+        net.set_congestion_vol(0.0);
         let profs = uniform(16);
         let ring = net.sync(Topology::RingAllReduce, &profs, 100 << 20).time_s;
         let ps = net
@@ -194,7 +234,7 @@ mod tests {
     #[test]
     fn more_servers_relieve_incast() {
         let mut net = NetworkSim::new(0);
-        net.congestion_vol = 0.0;
+        net.set_congestion_vol(0.0);
         let profs = uniform(16);
         let ps1 = net.sync(Topology::ParameterServer { servers: 1 }, &profs, 50 << 20).time_s;
         let ps4 = net.sync(Topology::ParameterServer { servers: 4 }, &profs, 50 << 20).time_s;
@@ -204,11 +244,11 @@ mod tests {
     #[test]
     fn congestion_slows_and_retransmits() {
         let mut a = NetworkSim::new(1);
-        a.congestion = 0.0;
-        a.congestion_vol = 0.0;
+        a.set_congestion(0.0);
+        a.set_congestion_vol(0.0);
         let mut b = NetworkSim::new(1);
-        b.congestion = 0.6;
-        b.congestion_vol = 0.0;
+        b.set_congestion(0.6);
+        b.set_congestion_vol(0.0);
         let profs = uniform(8);
         let oa = a.sync(Topology::RingAllReduce, &profs, 200 << 20);
         let ob = b.sync(Topology::RingAllReduce, &profs, 200 << 20);
@@ -225,8 +265,8 @@ mod tests {
             assert!((0.0..=0.9).contains(&net.congestion()));
         }
         // Push far above mean; it must decay back.
-        net.congestion = 0.85;
-        net.congestion_vol = 0.0;
+        net.set_congestion(0.85);
+        net.set_congestion_vol(0.0);
         for _ in 0..100 {
             net.advance(1.0);
         }
@@ -234,9 +274,41 @@ mod tests {
     }
 
     #[test]
+    fn storm_persists_until_relax_then_decays() {
+        let mut net = NetworkSim::new(4);
+        net.set_congestion_vol(0.0);
+        let base = net.congestion_mean();
+        net.storm(0.8);
+        assert_eq!(net.congestion(), 0.8);
+        // The storm's shifted mean holds the level up.
+        for _ in 0..50 {
+            net.advance(1.0);
+        }
+        assert!(net.congestion() > 0.7, "storm decayed early: {}", net.congestion());
+        net.relax();
+        assert_eq!(net.congestion_mean(), base);
+        for _ in 0..100 {
+            net.advance(1.0);
+        }
+        assert!(net.congestion() < 0.2, "did not relax: {}", net.congestion());
+    }
+
+    #[test]
+    fn reset_restores_baseline_after_storm() {
+        let mut net = NetworkSim::noisy(5);
+        net.storm(0.8);
+        net.reset(5);
+        assert!((net.congestion_mean() - 0.15).abs() < 1e-12, "noisy baseline");
+        let mut quiet = NetworkSim::new(5);
+        quiet.storm(0.8);
+        quiet.reset(5);
+        assert!((quiet.congestion_mean() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
     fn hetero_fabric_bound_by_slowest_nic() {
         let mut net = NetworkSim::new(3);
-        net.congestion_vol = 0.0;
+        net.set_congestion_vol(0.0);
         let fabric = profiles(ClusterPreset::FabricHetero, 8, 0);
         let fast = uniform(8);
         let tf = net.sync(Topology::RingAllReduce, &fabric, 100 << 20).time_s;

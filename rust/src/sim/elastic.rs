@@ -1,0 +1,106 @@
+//! Elastic worker membership helpers.
+//!
+//! When a worker is preempted its batch budget redistributes across the
+//! survivors; when it rejoins it must resume with a batch that honors the
+//! paper's [32, 1024] bounds *and* its memory ceiling (§IV-C OOM rule).
+//! These are pure functions so the trainer and the property-based
+//! invariants suite exercise the exact same logic.
+
+/// Redistribute a preempted worker's freed batch budget across the active
+/// workers: each active worker receives an equal share (the first
+/// `freed % n` get one extra), clamped to `min(caps[w], max)`. Returns the
+/// budget actually reabsorbed, which is `<= freed` when memory caps bind —
+/// a smaller global batch is the honest outcome of losing capacity.
+///
+/// The preempted worker's own `batches` entry is left untouched so a later
+/// rejoin can resume from it (see [`rejoin_batch`]).
+pub fn redistribute_freed(
+    freed: usize,
+    batches: &mut [usize],
+    active: &[bool],
+    caps: &[usize],
+    max: usize,
+) -> usize {
+    assert_eq!(batches.len(), active.len());
+    assert_eq!(batches.len(), caps.len());
+    let targets: Vec<usize> = (0..batches.len()).filter(|&w| active[w]).collect();
+    if targets.is_empty() || freed == 0 {
+        return 0;
+    }
+    let share = freed / targets.len();
+    let extra = freed % targets.len();
+    let mut absorbed = 0;
+    for (rank, &w) in targets.iter().enumerate() {
+        let want = batches[w] + share + usize::from(rank < extra);
+        // Clamp to the worker's ceiling but never shrink a survivor: a cap
+        // below its current batch just means it absorbs nothing.
+        let got = want.min(max.min(caps[w])).max(batches[w]);
+        absorbed += got - batches[w];
+        batches[w] = got;
+    }
+    absorbed
+}
+
+/// Batch size a rejoining worker resumes with: its pre-preemption batch
+/// clamped to `[min, min(max, cap)]` (the cap never pushes below `min`,
+/// matching `BatchRule::apply`'s floor semantics).
+pub fn rejoin_batch(prev: usize, cap: usize, min: usize, max: usize) -> usize {
+    prev.clamp(min, max.min(cap.max(min)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redistribute_splits_evenly_with_remainder_first() {
+        let mut b = vec![100, 100, 100, 100];
+        let active = vec![true, false, true, true];
+        let caps = vec![1024; 4];
+        let absorbed = redistribute_freed(100, &mut b, &active, &caps, 1024);
+        assert_eq!(absorbed, 100);
+        // 3 targets: shares 34, 33, 33.
+        assert_eq!(b, vec![134, 100, 133, 133]);
+    }
+
+    #[test]
+    fn redistribute_respects_caps_and_max() {
+        let mut b = vec![1000, 1000, 64];
+        let active = vec![true, true, false];
+        let caps = vec![1024, 1008, 1024];
+        let absorbed = redistribute_freed(64, &mut b, &active, &caps, 1024);
+        // Worker 0 absorbs 24 (hits max 1024), worker 1 absorbs 8 (cap).
+        assert_eq!(b[0], 1024);
+        assert_eq!(b[1], 1008);
+        assert_eq!(absorbed, 24 + 8);
+        // Preempted worker's entry untouched (rejoin resumes from it).
+        assert_eq!(b[2], 64);
+    }
+
+    #[test]
+    fn redistribute_never_shrinks_a_survivor() {
+        // A cap below a survivor's current batch must not claw it back.
+        let mut b = vec![512, 128];
+        let active = vec![true, false];
+        let caps = vec![256, 1024];
+        let absorbed = redistribute_freed(128, &mut b, &active, &caps, 1024);
+        assert_eq!(absorbed, 0);
+        assert_eq!(b[0], 512);
+    }
+
+    #[test]
+    fn redistribute_no_targets_is_a_noop() {
+        let mut b = vec![64];
+        assert_eq!(redistribute_freed(64, &mut b, &[false], &[1024], 1024), 0);
+        assert_eq!(b, vec![64]);
+    }
+
+    #[test]
+    fn rejoin_clamps_into_valid_range() {
+        assert_eq!(rejoin_batch(256, 1024, 32, 1024), 256, "resumes as-is");
+        assert_eq!(rejoin_batch(2000, 1024, 32, 1024), 1024, "max binds");
+        assert_eq!(rejoin_batch(256, 128, 32, 1024), 128, "mem cap binds");
+        assert_eq!(rejoin_batch(0, 1024, 32, 1024), 32, "floor binds");
+        assert_eq!(rejoin_batch(256, 8, 32, 1024), 32, "cap never below min");
+    }
+}

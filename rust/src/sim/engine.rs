@@ -1,0 +1,199 @@
+//! Monotone discrete-event queue keyed on the sim clock.
+//!
+//! [`EventQueue`] is the scheduling substrate of the scenario system: push
+//! `(time, item)` pairs in any order, pop them strictly in nondecreasing
+//! time order (FIFO among equal timestamps, so scripted event sequences
+//! replay verbatim). The queue is deterministic — no wall clock, no
+//! hashing — which is what makes scripted runs bitwise reproducible.
+//!
+//! Late insertions (an event scheduled behind the last popped time, e.g. a
+//! storm-relax whose storm fired after its nominal expiry) are clamped
+//! forward to the last popped time: they fire at the next drain instead of
+//! violating the monotone-pop invariant.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry. Ordering is by `(time, seq)` only — the payload does not
+/// participate, so `T` needs no trait bounds.
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse so the earliest time (then the
+        // lowest sequence number) sits on top.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A monotone event queue over sim time.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    /// Largest time ever popped; pops are asserted nondecreasing against
+    /// it and late pushes are clamped up to it.
+    last_popped: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            last_popped: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.last_popped = 0.0;
+    }
+
+    /// Schedule `item` at sim time `time` (seconds). Non-finite or negative
+    /// times are clamped to 0; times behind the pop frontier are clamped to
+    /// it (the event fires at the next drain).
+    pub fn push(&mut self, time: f64, item: T) {
+        let t = if time.is_finite() { time.max(0.0) } else { 0.0 };
+        let t = t.max(self.last_popped);
+        self.heap.push(Entry {
+            time: t,
+            seq: self.seq,
+            item,
+        });
+        self.seq += 1;
+    }
+
+    /// Earliest scheduled time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the earliest event if its time is `<= now`.
+    pub fn pop_due(&mut self, now: f64) -> Option<(f64, T)> {
+        match self.heap.peek() {
+            Some(e) if e.time <= now => {
+                let e = self.heap.pop().unwrap();
+                debug_assert!(e.time >= self.last_popped, "event queue popped backwards");
+                self.last_popped = e.time;
+                Some((e.time, e.item))
+            }
+            _ => None,
+        }
+    }
+
+    /// Pop every event with time `<= now`, in nondecreasing time order
+    /// (FIFO among ties).
+    pub fn drain_due(&mut self, now: f64) -> Vec<(f64, T)> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.pop_due(now) {
+            out.push(ev);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_regardless_of_push_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let all = q.drain_due(10.0);
+        assert_eq!(all, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_pop_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0);
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        let all: Vec<i32> = q.drain_due(1.0).into_iter().map(|(_, x)| x).collect();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drain_due_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.push(0.5, "early");
+        q.push(5.0, "late");
+        assert_eq!(q.drain_due(1.0), vec![(0.5, "early")]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert!(q.pop_due(1.0).is_none());
+        assert_eq!(q.pop_due(5.0), Some((5.0, "late")));
+    }
+
+    #[test]
+    fn late_insertions_clamp_to_pop_frontier() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "first");
+        assert_eq!(q.pop_due(3.0), Some((2.0, "first")));
+        // Scheduled in the past relative to the frontier: clamped to 2.0.
+        q.push(1.0, "late");
+        let (t, item) = q.pop_due(3.0).unwrap();
+        assert_eq!((t, item), (2.0, "late"));
+    }
+
+    #[test]
+    fn garbage_times_clamp_to_zero() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, "nan");
+        q.push(-5.0, "neg");
+        q.push(f64::INFINITY, "inf");
+        let all = q.drain_due(0.0);
+        assert_eq!(all.len(), 3);
+        assert!(all.iter().all(|(t, _)| *t == 0.0));
+    }
+
+    #[test]
+    fn clear_resets_frontier() {
+        let mut q = EventQueue::new();
+        q.push(4.0, ());
+        q.drain_due(10.0);
+        q.clear();
+        q.push(1.0, ());
+        assert_eq!(q.peek_time(), Some(1.0));
+    }
+}

@@ -1,0 +1,28 @@
+//! Discrete-event simulation core.
+//!
+//! DYNAMIX's pitch is adaptation to *heterogeneous, dynamic* environments
+//! (paper §I, §II-B), but the original simulator could only express
+//! stationary dynamics: OU/Poisson parameters were frozen at construction
+//! inside `cluster` and `netsim`. This subsystem makes time-varying
+//! environments first-class:
+//!
+//! * [`engine`]   — a monotone event queue keyed on the sim clock; the
+//!   substrate every scripted scenario drains from.
+//! * [`process`]  — the [`process::DynamicsProcess`] trait plus the OU and
+//!   OU+Poisson-burst processes previously duplicated across
+//!   `cluster::WorkerState` and `netsim::NetworkSim`.
+//! * [`scenario`] — the `ScenarioScript` DSL: timed events (worker
+//!   slowdowns, bandwidth drops, congestion storms, preemption/rejoin,
+//!   load shifts) parseable from JSON, with named built-in scenarios.
+//! * [`elastic`]  — pure helpers for elastic worker membership: batch
+//!   budget redistribution on preemption and valid-batch restoration on
+//!   rejoin (shared by the trainer and the invariants test-suite).
+//!
+//! The layering is strict: `sim` depends only on `util` (json, rng), so
+//! `cluster`, `netsim`, `trainer` and `config` can all build on it without
+//! cycles.
+
+pub mod elastic;
+pub mod engine;
+pub mod process;
+pub mod scenario;

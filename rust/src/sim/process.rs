@@ -1,0 +1,235 @@
+//! Stochastic background-dynamics processes.
+//!
+//! One [`DynamicsProcess`] trait over the two processes the simulators
+//! evolve per sim-time step, previously duplicated across
+//! `cluster::WorkerState::advance` and `netsim::NetworkSim::advance`:
+//!
+//! * [`OuProcess`]         — a clamped Ornstein–Uhlenbeck level (the shared
+//!   fabric congestion process);
+//! * [`ContentionProcess`] — OU *plus* Poisson bursts (per-worker
+//!   background load: multi-tenant neighbours arriving).
+//!
+//! Both keep their own [`Rng`] stream, so scenario events that mutate the
+//! process parameters mid-run (load shifts, congestion storms) never
+//! perturb any other component's randomness — the determinism contract the
+//! scripted-scenario experiments rely on.
+
+use crate::util::rng::Rng;
+
+/// A mean-reverting scalar process advanced by sim time.
+pub trait DynamicsProcess {
+    /// Current level.
+    fn value(&self) -> f64;
+    /// Advance by `dt` simulated seconds.
+    fn advance(&mut self, dt: f64);
+    /// Long-run mean the process reverts toward (mutable mid-run by
+    /// scenario events: `LoadShift`, `CongestionStorm`).
+    fn mean(&self) -> f64;
+    fn set_mean(&mut self, mean: f64);
+    /// Force the level directly (clamped to the process bounds).
+    fn set_level(&mut self, level: f64);
+}
+
+/// Clamped Ornstein–Uhlenbeck process:
+/// `dX = rate·(mean − X)·dt + vol·√dt·N(0,1)`, clamped to `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct OuProcess {
+    level: f64,
+    mean: f64,
+    pub rate: f64,
+    pub vol: f64,
+    lo: f64,
+    hi: f64,
+    rng: Rng,
+}
+
+impl OuProcess {
+    pub fn new(mean: f64, rate: f64, vol: f64, lo: f64, hi: f64, rng: Rng) -> Self {
+        OuProcess {
+            level: mean.clamp(lo, hi),
+            mean,
+            rate,
+            vol,
+            lo,
+            hi,
+            rng,
+        }
+    }
+}
+
+impl DynamicsProcess for OuProcess {
+    fn value(&self) -> f64 {
+        self.level
+    }
+
+    fn advance(&mut self, dt: f64) {
+        let drift = self.rate * (self.mean - self.level) * dt;
+        let diffusion = self.vol * dt.sqrt() * self.rng.normal();
+        self.level = (self.level + drift + diffusion).clamp(self.lo, self.hi);
+    }
+
+    fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    fn set_mean(&mut self, mean: f64) {
+        self.mean = mean.clamp(self.lo, self.hi);
+    }
+
+    fn set_level(&mut self, level: f64) {
+        self.level = level.clamp(self.lo, self.hi);
+    }
+}
+
+/// OU contention level plus Poisson bursts (per-worker background load).
+///
+/// Per advance: OU drift + diffusion, then a Poisson draw at
+/// `burst_rate·dt` which, when it fires, adds `burst_level`; the sum is
+/// clamped to `[lo, hi]`. Draw order (normal, then Poisson) matches the
+/// original `cluster::WorkerState::advance`, so load trajectories are
+/// unchanged for a given RNG stream.
+#[derive(Clone, Debug)]
+pub struct ContentionProcess {
+    level: f64,
+    mean: f64,
+    pub rate: f64,
+    pub vol: f64,
+    pub burst_rate: f64,
+    pub burst_level: f64,
+    lo: f64,
+    hi: f64,
+    rng: Rng,
+}
+
+impl ContentionProcess {
+    pub fn new(
+        mean: f64,
+        rate: f64,
+        vol: f64,
+        burst_rate: f64,
+        burst_level: f64,
+        lo: f64,
+        hi: f64,
+        rng: Rng,
+    ) -> Self {
+        ContentionProcess {
+            level: mean.clamp(lo, hi),
+            mean,
+            rate,
+            vol,
+            burst_rate,
+            burst_level,
+            lo,
+            hi,
+            rng,
+        }
+    }
+}
+
+impl DynamicsProcess for ContentionProcess {
+    fn value(&self) -> f64 {
+        self.level
+    }
+
+    fn advance(&mut self, dt: f64) {
+        let drift = self.rate * (self.mean - self.level) * dt;
+        let diffusion = self.vol * dt.sqrt() * self.rng.normal();
+        self.level += drift + diffusion;
+        let bursts = self.rng.poisson(self.burst_rate * dt);
+        if bursts > 0 {
+            self.level += self.burst_level;
+        }
+        self.level = self.level.clamp(self.lo, self.hi);
+    }
+
+    fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    fn set_mean(&mut self, mean: f64) {
+        self.mean = mean.clamp(self.lo, self.hi);
+    }
+
+    fn set_level(&mut self, level: f64) {
+        self.level = level.clamp(self.lo, self.hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ou(mean: f64, vol: f64, seed: u64) -> OuProcess {
+        OuProcess::new(mean, 0.5, vol, 0.0, 0.9, Rng::new(seed))
+    }
+
+    #[test]
+    fn ou_stays_bounded_and_moves() {
+        let mut p = ou(0.2, 0.1, 1);
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for _ in 0..500 {
+            p.advance(0.5);
+            assert!((0.0..=0.9).contains(&p.value()));
+            lo = lo.min(p.value());
+            hi = hi.max(p.value());
+        }
+        assert!(hi - lo > 0.02, "process frozen: [{lo},{hi}]");
+    }
+
+    #[test]
+    fn ou_mean_reverts_after_shock() {
+        let mut p = ou(0.1, 0.0, 2);
+        p.set_level(0.85);
+        for _ in 0..200 {
+            p.advance(1.0);
+        }
+        assert!(p.value() < 0.2, "did not revert: {}", p.value());
+    }
+
+    #[test]
+    fn set_mean_shifts_the_attractor() {
+        let mut p = ou(0.05, 0.0, 3);
+        p.set_mean(0.6);
+        assert_eq!(p.mean(), 0.6);
+        for _ in 0..200 {
+            p.advance(1.0);
+        }
+        assert!((p.value() - 0.6).abs() < 0.05, "level {}", p.value());
+        // Means clamp to the process bounds.
+        p.set_mean(5.0);
+        assert_eq!(p.mean(), 0.9);
+    }
+
+    #[test]
+    fn contention_bursts_push_level_up() {
+        let mut quiet =
+            ContentionProcess::new(0.1, 0.4, 0.0, 0.0, 0.5, 0.0, 0.95, Rng::new(4));
+        let mut bursty =
+            ContentionProcess::new(0.1, 0.4, 0.0, 5.0, 0.5, 0.0, 0.95, Rng::new(4));
+        let mut sum_q = 0.0;
+        let mut sum_b = 0.0;
+        for _ in 0..300 {
+            quiet.advance(0.1);
+            bursty.advance(0.1);
+            sum_q += quiet.value();
+            sum_b += bursty.value();
+            assert!((0.0..=0.95).contains(&bursty.value()));
+        }
+        assert!(sum_b > sum_q * 1.5, "bursts had no effect: {sum_b} vs {sum_q}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            let mut p =
+                ContentionProcess::new(0.2, 0.4, 0.1, 0.05, 0.4, 0.0, 0.95, Rng::new(seed));
+            (0..50).map(|_| {
+                p.advance(0.3);
+                p.value()
+            }).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

@@ -1,0 +1,681 @@
+//! Scripted dynamic-environment scenarios.
+//!
+//! A [`ScenarioScript`] is a named list of [`TimedEvent`]s — environment
+//! perturbations at fixed sim times — that turn the simulator from a
+//! replayer of the paper's three stationary testbeds into a scenario
+//! generator: spot preemption, mid-run contention shifts, bandwidth
+//! collapse, congestion storms, node churn (paper §I/§II-B motivation;
+//! cf. Tyagi & Sharma's dynamic batching on transient clusters).
+//!
+//! Scripts serialize to/from JSON (`util::json`; no serde in the offline
+//! build) and a catalogue of named built-ins ([`ScenarioScript::by_name`])
+//! backs the `fig7_dynamics` harness and the `--scenario` CLI flag. The
+//! [`ScenarioRuntime`] arms the script onto a monotone
+//! [`EventQueue`](crate::sim::engine::EventQueue); the trainer drains due
+//! events as the BSP clock advances and re-arms on episode reset, so the
+//! same seed replays the same timeline bit-for-bit — for the RL policy and
+//! every baseline alike.
+//!
+//! JSON schema (times in simulated seconds):
+//!
+//! ```json
+//! {
+//!   "name": "my-scenario",
+//!   "events": [
+//!     {"at_s": 0.5, "event": "slowdown_worker", "worker": 1, "factor": 0.4},
+//!     {"at_s": 1.0, "event": "bandwidth_drop", "factor": 0.25},
+//!     {"at_s": 1.5, "event": "congestion_storm", "level": 0.7, "duration_s": 2.0},
+//!     {"at_s": 2.0, "event": "preempt_worker", "worker": 3},
+//!     {"at_s": 4.0, "event": "rejoin_worker", "worker": 3},
+//!     {"at_s": 5.0, "event": "load_shift", "worker": 0, "load_mean": 0.5}
+//!   ]
+//! }
+//! ```
+
+use crate::sim::engine::EventQueue;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One scripted environment perturbation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    /// Scale worker `worker`'s compute speed to `factor ×` its base
+    /// profile speed (`factor = 1.0` restores it).
+    SlowdownWorker { worker: usize, factor: f64 },
+    /// Scale every worker's NIC bandwidth to `factor ×` its base profile
+    /// value (`factor = 1.0` restores the fabric).
+    BandwidthDrop { factor: f64 },
+    /// Jump the shared congestion process to `level` (level and mean) for
+    /// `duration_s` seconds; a `CongestionRelax` is auto-scheduled at
+    /// expiry to restore the baseline mean.
+    CongestionStorm { level: f64, duration_s: f64 },
+    /// Restore the congestion mean to its baseline (the level decays back
+    /// through the OU dynamics). Usually auto-scheduled by a storm, but
+    /// scriptable directly.
+    CongestionRelax,
+    /// Spot-style preemption: the worker leaves the cluster; its shard and
+    /// batch budget redistribute across the survivors.
+    PreemptWorker { worker: usize },
+    /// The preempted worker returns and resumes with a valid batch.
+    RejoinWorker { worker: usize },
+    /// Shift worker `worker`'s background-load OU mean to `load_mean`
+    /// (a tenant arriving on / leaving the shared host).
+    LoadShift { worker: usize, load_mean: f64 },
+}
+
+impl ScenarioEvent {
+    /// Stable kind tag (the JSON `"event"` value).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScenarioEvent::SlowdownWorker { .. } => "slowdown_worker",
+            ScenarioEvent::BandwidthDrop { .. } => "bandwidth_drop",
+            ScenarioEvent::CongestionStorm { .. } => "congestion_storm",
+            ScenarioEvent::CongestionRelax => "congestion_relax",
+            ScenarioEvent::PreemptWorker { .. } => "preempt_worker",
+            ScenarioEvent::RejoinWorker { .. } => "rejoin_worker",
+            ScenarioEvent::LoadShift { .. } => "load_shift",
+        }
+    }
+
+    /// Human/trace description (stable: recorded in run records).
+    pub fn describe(&self) -> String {
+        match self {
+            ScenarioEvent::SlowdownWorker { worker, factor } => {
+                format!("slowdown_worker w{worker} x{factor}")
+            }
+            ScenarioEvent::BandwidthDrop { factor } => format!("bandwidth_drop x{factor}"),
+            ScenarioEvent::CongestionStorm { level, duration_s } => {
+                format!("congestion_storm level={level} dur={duration_s}s")
+            }
+            ScenarioEvent::CongestionRelax => "congestion_relax".into(),
+            ScenarioEvent::PreemptWorker { worker } => format!("preempt_worker w{worker}"),
+            ScenarioEvent::RejoinWorker { worker } => format!("rejoin_worker w{worker}"),
+            ScenarioEvent::LoadShift { worker, load_mean } => {
+                format!("load_shift w{worker} mean={load_mean}")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = crate::jobj! { "event" => self.kind() };
+        if let Json::Obj(m) = &mut obj {
+            match *self {
+                ScenarioEvent::SlowdownWorker { worker, factor } => {
+                    m.insert("worker".into(), Json::from(worker));
+                    m.insert("factor".into(), Json::Num(factor));
+                }
+                ScenarioEvent::BandwidthDrop { factor } => {
+                    m.insert("factor".into(), Json::Num(factor));
+                }
+                ScenarioEvent::CongestionStorm { level, duration_s } => {
+                    m.insert("level".into(), Json::Num(level));
+                    m.insert("duration_s".into(), Json::Num(duration_s));
+                }
+                ScenarioEvent::CongestionRelax => {}
+                ScenarioEvent::PreemptWorker { worker } => {
+                    m.insert("worker".into(), Json::from(worker));
+                }
+                ScenarioEvent::RejoinWorker { worker } => {
+                    m.insert("worker".into(), Json::from(worker));
+                }
+                ScenarioEvent::LoadShift { worker, load_mean } => {
+                    m.insert("worker".into(), Json::from(worker));
+                    m.insert("load_mean".into(), Json::Num(load_mean));
+                }
+            }
+        }
+        obj
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let kind = v
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("scenario event missing \"event\" kind"))?;
+        let worker = || {
+            v.get("worker")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("{kind}: missing/invalid \"worker\""))
+        };
+        let num = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("{kind}: missing/invalid \"{key}\""))
+        };
+        Ok(match kind {
+            "slowdown_worker" => ScenarioEvent::SlowdownWorker {
+                worker: worker()?,
+                factor: num("factor")?,
+            },
+            "bandwidth_drop" => ScenarioEvent::BandwidthDrop {
+                factor: num("factor")?,
+            },
+            "congestion_storm" => ScenarioEvent::CongestionStorm {
+                level: num("level")?,
+                duration_s: num("duration_s")?,
+            },
+            "congestion_relax" => ScenarioEvent::CongestionRelax,
+            "preempt_worker" => ScenarioEvent::PreemptWorker { worker: worker()? },
+            "rejoin_worker" => ScenarioEvent::RejoinWorker { worker: worker()? },
+            "load_shift" => ScenarioEvent::LoadShift {
+                worker: worker()?,
+                load_mean: num("load_mean")?,
+            },
+            other => anyhow::bail!(
+                "unknown scenario event {other:?} (valid: slowdown_worker bandwidth_drop \
+                 congestion_storm congestion_relax preempt_worker rejoin_worker load_shift)"
+            ),
+        })
+    }
+
+    /// Structural validity against a cluster of `n_workers`.
+    fn validate(&self, n_workers: usize) -> anyhow::Result<()> {
+        let chk_worker = |w: usize| {
+            anyhow::ensure!(
+                w < n_workers,
+                "{}: worker {w} out of range (n_workers = {n_workers})",
+                self.kind()
+            );
+            Ok(())
+        };
+        match *self {
+            ScenarioEvent::SlowdownWorker { worker, factor } => {
+                chk_worker(worker)?;
+                anyhow::ensure!(
+                    factor.is_finite() && factor > 0.0 && factor <= 4.0,
+                    "slowdown_worker: factor {factor} outside (0, 4]"
+                );
+            }
+            ScenarioEvent::BandwidthDrop { factor } => {
+                anyhow::ensure!(
+                    factor.is_finite() && factor > 0.0 && factor <= 4.0,
+                    "bandwidth_drop: factor {factor} outside (0, 4]"
+                );
+            }
+            ScenarioEvent::CongestionStorm { level, duration_s } => {
+                anyhow::ensure!(
+                    (0.0..=0.9).contains(&level),
+                    "congestion_storm: level {level} outside [0, 0.9]"
+                );
+                anyhow::ensure!(
+                    duration_s.is_finite() && duration_s > 0.0,
+                    "congestion_storm: duration {duration_s} must be positive"
+                );
+            }
+            ScenarioEvent::CongestionRelax => {}
+            ScenarioEvent::PreemptWorker { worker } | ScenarioEvent::RejoinWorker { worker } => {
+                chk_worker(worker)?;
+            }
+            ScenarioEvent::LoadShift { worker, load_mean } => {
+                chk_worker(worker)?;
+                anyhow::ensure!(
+                    (0.0..=0.95).contains(&load_mean),
+                    "load_shift: load_mean {load_mean} outside [0, 0.95]"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An event scheduled at a sim time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub at_s: f64,
+    pub event: ScenarioEvent,
+}
+
+/// A named, ordered set of timed events.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ScenarioScript {
+    pub name: String,
+    pub events: Vec<TimedEvent>,
+}
+
+/// Built-in scenario names (the `fig7_dynamics` catalogue).
+pub const BUILTIN_SCENARIOS: &[&str] = &[
+    "preempt_rejoin",
+    "bandwidth_collapse",
+    "congestion_storm",
+    "load_shift",
+    "spot_chaos",
+];
+
+impl ScenarioScript {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate every event against a cluster size; event times must be
+    /// finite and nonnegative (ordering is NOT required — the runtime's
+    /// event queue sorts).
+    pub fn validate(&self, n_workers: usize) -> anyhow::Result<()> {
+        for (i, te) in self.events.iter().enumerate() {
+            anyhow::ensure!(
+                te.at_s.is_finite() && te.at_s >= 0.0,
+                "scenario {:?} event {i}: at_s {} must be finite and >= 0",
+                self.name,
+                te.at_s
+            );
+            te.event
+                .validate(n_workers)
+                .map_err(|e| anyhow::anyhow!("scenario {:?} event {i}: {e}", self.name))?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|te| {
+                let mut ev = te.event.to_json();
+                if let Json::Obj(m) = &mut ev {
+                    m.insert("at_s".into(), Json::Num(te.at_s));
+                }
+                ev
+            })
+            .collect();
+        crate::jobj! {
+            "name" => self.name.clone(),
+            "events" => Json::Arr(events),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+        let events = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("scenario {name:?}: missing \"events\" array"))?;
+        let events = events
+            .iter()
+            .enumerate()
+            .map(|(i, ev)| {
+                let at_s = ev
+                    .get("at_s")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("scenario {name:?} event {i}: missing at_s"))?;
+                Ok(TimedEvent {
+                    at_s,
+                    event: ScenarioEvent::from_json(ev)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ScenarioScript { name, events })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("scenario file {path:?}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Resolve a CLI argument: an existing file path is loaded as JSON,
+    /// anything else is looked up in the built-in catalogue.
+    pub fn resolve(arg: &str) -> anyhow::Result<Self> {
+        let p = Path::new(arg);
+        if p.is_file() {
+            Self::load(p)
+        } else {
+            Self::by_name(arg)
+        }
+    }
+
+    /// Named built-in scenarios. Times are tuned for the quick-scale
+    /// harness runs (sim horizons of a few seconds); worker indices stay
+    /// below 4 so every preset with >= 4 workers can run them.
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        use ScenarioEvent::*;
+        let at = |at_s: f64, event: ScenarioEvent| TimedEvent { at_s, event };
+        let events = match name {
+            // Spot-market churn: two overlapping preemptions + rejoins and
+            // a late single-worker loss.
+            "preempt_rejoin" => vec![
+                at(0.6, PreemptWorker { worker: 3 }),
+                at(1.2, PreemptWorker { worker: 1 }),
+                at(2.4, RejoinWorker { worker: 3 }),
+                at(3.6, RejoinWorker { worker: 1 }),
+                at(6.0, PreemptWorker { worker: 2 }),
+                at(9.0, RejoinWorker { worker: 2 }),
+            ],
+            // The fabric loses most of its capacity twice, recovering in
+            // between (link flaps / oversubscription).
+            "bandwidth_collapse" => vec![
+                at(0.8, BandwidthDrop { factor: 0.15 }),
+                at(2.5, BandwidthDrop { factor: 1.0 }),
+                at(5.0, BandwidthDrop { factor: 0.3 }),
+                at(8.0, BandwidthDrop { factor: 1.0 }),
+            ],
+            // Escalating cross-traffic storms on the shared fabric.
+            "congestion_storm" => vec![
+                at(
+                    0.5,
+                    CongestionStorm {
+                        level: 0.6,
+                        duration_s: 1.5,
+                    },
+                ),
+                at(
+                    3.0,
+                    CongestionStorm {
+                        level: 0.8,
+                        duration_s: 2.0,
+                    },
+                ),
+                at(
+                    7.0,
+                    CongestionStorm {
+                        level: 0.7,
+                        duration_s: 3.0,
+                    },
+                ),
+            ],
+            // Multi-tenant contention arriving and leaving, plus a thermal
+            // throttle on worker 2.
+            "load_shift" => vec![
+                at(
+                    0.5,
+                    LoadShift {
+                        worker: 0,
+                        load_mean: 0.6,
+                    },
+                ),
+                at(
+                    0.7,
+                    LoadShift {
+                        worker: 1,
+                        load_mean: 0.5,
+                    },
+                ),
+                at(
+                    2.0,
+                    SlowdownWorker {
+                        worker: 2,
+                        factor: 0.35,
+                    },
+                ),
+                at(
+                    3.5,
+                    LoadShift {
+                        worker: 0,
+                        load_mean: 0.05,
+                    },
+                ),
+                at(
+                    4.0,
+                    SlowdownWorker {
+                        worker: 2,
+                        factor: 1.0,
+                    },
+                ),
+                at(
+                    6.0,
+                    LoadShift {
+                        worker: 1,
+                        load_mean: 0.1,
+                    },
+                ),
+            ],
+            // Everything at once: the stress scenario static baselines are
+            // expected to lose on.
+            "spot_chaos" => vec![
+                at(
+                    0.4,
+                    LoadShift {
+                        worker: 0,
+                        load_mean: 0.5,
+                    },
+                ),
+                at(0.8, PreemptWorker { worker: 3 }),
+                at(1.5, BandwidthDrop { factor: 0.25 }),
+                at(
+                    2.2,
+                    CongestionStorm {
+                        level: 0.7,
+                        duration_s: 1.5,
+                    },
+                ),
+                at(3.0, RejoinWorker { worker: 3 }),
+                at(
+                    3.5,
+                    SlowdownWorker {
+                        worker: 1,
+                        factor: 0.4,
+                    },
+                ),
+                at(4.5, BandwidthDrop { factor: 1.0 }),
+                at(5.5, PreemptWorker { worker: 0 }),
+                at(
+                    6.5,
+                    SlowdownWorker {
+                        worker: 1,
+                        factor: 1.0,
+                    },
+                ),
+                at(8.0, RejoinWorker { worker: 0 }),
+            ],
+            _ => anyhow::bail!(
+                "unknown scenario {name:?}; built-ins: {}",
+                BUILTIN_SCENARIOS.join(" ")
+            ),
+        };
+        Ok(ScenarioScript {
+            name: name.to_string(),
+            events,
+        })
+    }
+
+    /// Synthetic high-frequency churn script for event-queue overhead
+    /// benchmarks: every `period_s` an event fires — rotating preempt /
+    /// rejoin pairs interleaved with load shifts. Never empties the
+    /// cluster (each preempt is rejoined before the next strikes).
+    pub fn synthetic_churn(n_workers: usize, n_events: usize, period_s: f64) -> Self {
+        use ScenarioEvent::*;
+        assert!(n_workers >= 2);
+        let mut events = Vec::with_capacity(n_events);
+        for i in 0..n_events {
+            let t = (i + 1) as f64 * period_s;
+            let w = 1 + (i / 3) % (n_workers - 1);
+            let event = match i % 3 {
+                0 => PreemptWorker { worker: w },
+                1 => RejoinWorker { worker: w },
+                _ => LoadShift {
+                    worker: w,
+                    load_mean: if (i / 3) % 2 == 0 { 0.5 } else { 0.1 },
+                },
+            };
+            events.push(TimedEvent { at_s: t, event });
+        }
+        ScenarioScript {
+            name: format!("synthetic-churn-{n_events}x{period_s}s"),
+            events,
+        }
+    }
+}
+
+/// A script armed onto the event queue, drained by the trainer as the BSP
+/// clock advances. Re-armable for episodic runs.
+pub struct ScenarioRuntime {
+    script: ScenarioScript,
+    queue: EventQueue<ScenarioEvent>,
+}
+
+impl ScenarioRuntime {
+    pub fn new(script: ScenarioScript) -> Self {
+        let mut rt = ScenarioRuntime {
+            script,
+            queue: EventQueue::new(),
+        };
+        rt.rearm();
+        rt
+    }
+
+    /// A runtime with no events (the stationary default).
+    pub fn empty() -> Self {
+        Self::new(ScenarioScript::default())
+    }
+
+    pub fn script(&self) -> &ScenarioScript {
+        &self.script
+    }
+
+    /// Reload the full script onto a fresh queue (episode reset).
+    pub fn rearm(&mut self) {
+        self.queue.clear();
+        for te in &self.script.events {
+            self.queue.push(te.at_s, te.event.clone());
+        }
+    }
+
+    /// Schedule a derived event mid-run (e.g. a storm's auto-relax). Not
+    /// part of the script: it does not survive a rearm.
+    pub fn schedule(&mut self, at_s: f64, event: ScenarioEvent) {
+        self.queue.push(at_s, event);
+    }
+
+    /// Pop every event due at sim time `now`, in nondecreasing time order.
+    pub fn pop_due(&mut self, now: f64) -> Vec<(f64, ScenarioEvent)> {
+        self.queue.drain_due(now)
+    }
+
+    /// Events still scheduled.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_parse_validate_and_roundtrip() {
+        for name in BUILTIN_SCENARIOS {
+            let s = ScenarioScript::by_name(name).unwrap();
+            assert!(!s.is_empty(), "{name} empty");
+            s.validate(8).unwrap();
+            let back = ScenarioScript::from_json(&s.to_json()).unwrap();
+            assert_eq!(back, s, "{name} JSON roundtrip drifted");
+        }
+        assert!(ScenarioScript::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn preempt_rejoin_contains_churn() {
+        let s = ScenarioScript::by_name("preempt_rejoin").unwrap();
+        let preempts = s
+            .events
+            .iter()
+            .filter(|e| matches!(e.event, ScenarioEvent::PreemptWorker { .. }))
+            .count();
+        let rejoins = s
+            .events
+            .iter()
+            .filter(|e| matches!(e.event, ScenarioEvent::RejoinWorker { .. }))
+            .count();
+        assert!(preempts >= 1 && rejoins >= 1);
+        assert_eq!(preempts, rejoins, "every preemption pairs with a rejoin");
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        let mk = |event| ScenarioScript {
+            name: "t".into(),
+            events: vec![TimedEvent { at_s: 1.0, event }],
+        };
+        assert!(mk(ScenarioEvent::PreemptWorker { worker: 9 }).validate(4).is_err());
+        assert!(mk(ScenarioEvent::SlowdownWorker { worker: 0, factor: 0.0 })
+            .validate(4)
+            .is_err());
+        assert!(mk(ScenarioEvent::BandwidthDrop { factor: -1.0 }).validate(4).is_err());
+        assert!(mk(ScenarioEvent::CongestionStorm { level: 2.0, duration_s: 1.0 })
+            .validate(4)
+            .is_err());
+        assert!(mk(ScenarioEvent::LoadShift { worker: 0, load_mean: 1.5 })
+            .validate(4)
+            .is_err());
+        // Negative time.
+        let bad = ScenarioScript {
+            name: "t".into(),
+            events: vec![TimedEvent {
+                at_s: -1.0,
+                event: ScenarioEvent::CongestionRelax,
+            }],
+        };
+        assert!(bad.validate(4).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = ScenarioScript::by_name("spot_chaos").unwrap();
+        let dir = std::env::temp_dir().join(format!("dynamix_scn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("chaos.json");
+        s.save(&p).unwrap();
+        let back = ScenarioScript::load(&p).unwrap();
+        assert_eq!(back, s);
+        // resolve() prefers the file path, falls back to the catalogue.
+        assert_eq!(ScenarioScript::resolve(p.to_str().unwrap()).unwrap(), s);
+        assert_eq!(
+            ScenarioScript::resolve("load_shift").unwrap().name,
+            "load_shift"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn runtime_drains_in_order_and_rearms() {
+        let s = ScenarioScript::by_name("preempt_rejoin").unwrap();
+        let n = s.events.len();
+        let mut rt = ScenarioRuntime::new(s);
+        assert_eq!(rt.pending(), n);
+        assert!(rt.pop_due(0.0).is_empty());
+        let first = rt.pop_due(1.5);
+        assert_eq!(first.len(), 2, "events at 0.6 and 1.2 due by t=1.5");
+        assert!(first[0].0 <= first[1].0);
+        let rest = rt.pop_due(1e9);
+        assert_eq!(first.len() + rest.len(), n);
+        rt.rearm();
+        assert_eq!(rt.pending(), n, "rearm restores the full script");
+    }
+
+    #[test]
+    fn derived_events_do_not_survive_rearm() {
+        let mut rt = ScenarioRuntime::empty();
+        rt.schedule(1.0, ScenarioEvent::CongestionRelax);
+        assert_eq!(rt.pending(), 1);
+        rt.rearm();
+        assert_eq!(rt.pending(), 0);
+    }
+
+    #[test]
+    fn synthetic_churn_is_valid_and_paired() {
+        let s = ScenarioScript::synthetic_churn(8, 300, 0.02);
+        assert_eq!(s.events.len(), 300);
+        s.validate(8).unwrap();
+        // Alternating preempt/rejoin on the same worker: the cluster can
+        // never lose more than one worker at a time.
+        for w in s.events.windows(3).step_by(3) {
+            if let (ScenarioEvent::PreemptWorker { worker: a }, ScenarioEvent::RejoinWorker { worker: b }) =
+                (&w[0].event, &w[1].event)
+            {
+                assert_eq!(a, b);
+            } else {
+                panic!("unexpected churn pattern");
+            }
+        }
+    }
+}

@@ -22,9 +22,13 @@
 use crate::cluster::SimCluster;
 use crate::config::{ExperimentConfig, Optimizer, Topology};
 use crate::data::{ShardSampler, SyntheticDataset};
+use crate::metrics::RunRecord;
 use crate::netsim::NetworkSim;
 use crate::runtime::{Backend, OptState, Schema, TrainOut};
+use crate::sim::elastic;
+use crate::sim::scenario::{ScenarioEvent, ScenarioRuntime, ScenarioScript};
 use crate::sysmetrics::{Collector, WindowAggregator};
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// Scalar outputs of one fused train step (global view). Per-sample
@@ -228,6 +232,13 @@ pub struct IterationOutcome {
 }
 
 /// The BSP trainer: cluster + netsim + data + model, one step at a time.
+///
+/// Membership is **elastic**: a `ScenarioScript` (threaded through
+/// `ExperimentConfig`) can preempt and rejoin workers mid-run. A preempted
+/// worker contributes no data, no compute and no collective participant;
+/// its batch budget redistributes across survivors and the dataset
+/// re-shards over the active set. All of it is deterministic in
+/// (seed, script) — the scripted timeline replays bit-for-bit.
 pub struct BspTrainer {
     pub runtime: ModelRuntime,
     pub cluster: SimCluster,
@@ -237,10 +248,24 @@ pub struct BspTrainer {
     samplers: Vec<ShardSampler>,
     collectors: Vec<Collector>,
     /// Current per-worker batch sizes (mutated by coordinator/baselines).
+    /// A preempted worker's entry is frozen at its last value so a rejoin
+    /// can resume from it; only active workers count toward the global
+    /// batch.
     pub batches: Vec<usize>,
     /// Per-worker k-iteration aggregation windows.
     pub windows: Vec<WindowAggregator>,
     pub iter: usize,
+    /// Scripted environment timeline (empty for stationary runs).
+    scenario: ScenarioRuntime,
+    /// `(script time, event description)` of every event applied this
+    /// episode, in application order — the run record's scenario trace.
+    pub events_applied: Vec<(f64, String)>,
+    /// Batch bounds from the config (redistribution/rejoin clamps).
+    batch_min: usize,
+    batch_max: usize,
+    /// Root seed for shard permutations; membership revisions fold in.
+    shard_seed: u64,
+    membership_rev: u64,
     // Scratch buffers reused across iterations (hot loop stays
     // allocation-free after the first step at each bucket).
     idx_scratch: Vec<u64>,
@@ -271,6 +296,10 @@ impl BspTrainer {
         let samplers = (0..n)
             .map(|w| ShardSampler::new(w, n, dataset.train_size, cfg.train.seed))
             .collect();
+        let scenario = match &cfg.scenario {
+            Some(s) => ScenarioRuntime::new(s.clone()),
+            None => ScenarioRuntime::empty(),
+        };
         Ok(BspTrainer {
             runtime,
             cluster,
@@ -282,6 +311,12 @@ impl BspTrainer {
             batches: vec![cfg.batch.initial; n],
             windows: (0..n).map(|_| WindowAggregator::default()).collect(),
             iter: 0,
+            scenario,
+            events_applied: Vec::new(),
+            batch_min: cfg.batch.min,
+            batch_max: cfg.batch.max,
+            shard_seed: cfg.train.seed,
+            membership_rev: 0,
             idx_scratch: Vec::new(),
             xs_scratch: Vec::new(),
             ys_scratch: Vec::new(),
@@ -293,8 +328,174 @@ impl BspTrainer {
         self.batches.len()
     }
 
+    // --- elastic membership ---
+
+    pub fn is_active(&self, w: usize) -> bool {
+        self.cluster.is_active(w)
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.cluster.n_active()
+    }
+
+    pub fn active_mask(&self) -> Vec<bool> {
+        self.cluster.active_mask()
+    }
+
+    /// Batch sizes of the currently active workers.
+    pub fn active_batches(&self) -> Vec<usize> {
+        (0..self.n_workers())
+            .filter(|&w| self.cluster.is_active(w))
+            .map(|w| self.batches[w])
+            .collect()
+    }
+
+    /// Global batch = sum of the ACTIVE workers' batches. Allocation-free:
+    /// this runs once per BSP iteration on the hot loop.
+    pub fn global_batch(&self) -> usize {
+        (0..self.n_workers())
+            .filter(|&w| self.cluster.is_active(w))
+            .map(|w| self.batches[w])
+            .sum()
+    }
+
+    /// The scripted timeline this trainer replays (empty if stationary).
+    pub fn scenario_script(&self) -> &ScenarioScript {
+        self.scenario.script()
+    }
+
+    /// Spot-preempt worker `w`: it leaves the collective, its batch budget
+    /// redistributes across survivors (clamped by their memory caps) and
+    /// the dataset re-shards over the active set. Refused (returns false)
+    /// when `w` is already absent or is the last active worker.
+    pub fn preempt_worker(&mut self, w: usize) -> bool {
+        if !self.cluster.is_active(w) || self.cluster.n_active() <= 1 {
+            return false;
+        }
+        self.cluster.set_active(w, false);
+        let n = self.n_workers();
+        let caps: Vec<usize> = (0..n).map(|i| self.mem_cap(i, self.batch_max)).collect();
+        let active = self.cluster.active_mask();
+        elastic::redistribute_freed(
+            self.batches[w],
+            &mut self.batches,
+            &active,
+            &caps,
+            self.batch_max,
+        );
+        self.reshard();
+        true
+    }
+
+    /// Rejoin a preempted worker: it resumes with its pre-preemption batch
+    /// clamped to the batch bounds and its memory ceiling.
+    pub fn rejoin_worker(&mut self, w: usize) -> bool {
+        if self.cluster.is_active(w) {
+            return false;
+        }
+        self.cluster.set_active(w, true);
+        let cap = self.mem_cap(w, self.batch_max);
+        self.batches[w] = elastic::rejoin_batch(self.batches[w], cap, self.batch_min, self.batch_max);
+        self.reshard();
+        true
+    }
+
+    /// Rebuild the shard samplers over the active set: active worker of
+    /// rank r draws shard (r, n_active). The membership revision folds
+    /// into the seed so each epoch of membership gets a fresh — but fully
+    /// deterministic — permutation stream.
+    fn reshard(&mut self) {
+        self.membership_rev += 1;
+        let active: Vec<usize> = (0..self.n_workers())
+            .filter(|&w| self.cluster.is_active(w))
+            .collect();
+        let n_active = active.len().max(1);
+        let seed = self
+            .shard_seed
+            .wrapping_add(self.membership_rev.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for (rank, &w) in active.iter().enumerate() {
+            self.samplers[w] = ShardSampler::new(rank, n_active, self.dataset.train_size, seed);
+        }
+    }
+
+    // --- scripted scenario events ---
+
+    /// Pop and apply every scripted event due at the current sim clock.
+    fn apply_due_events(&mut self) {
+        let now = self.cluster.clock;
+        for (at, ev) in self.scenario.pop_due(now) {
+            self.apply_event(at, ev);
+        }
+    }
+
+    /// Apply one scenario event (`at_s` = its script time, recorded in the
+    /// trace). Out-of-range worker indices are skipped defensively —
+    /// config validation rejects them up front for scripted runs.
+    pub fn apply_event(&mut self, at_s: f64, ev: ScenarioEvent) {
+        let n = self.n_workers();
+        let desc = ev.describe();
+        let applied = match ev {
+            ScenarioEvent::SlowdownWorker { worker, factor } if worker < n => {
+                self.cluster.scale_speed(worker, factor);
+                true
+            }
+            ScenarioEvent::BandwidthDrop { factor } => {
+                self.cluster.scale_bandwidth_all(factor);
+                true
+            }
+            ScenarioEvent::CongestionStorm { level, duration_s } => {
+                self.net.storm(level);
+                // Relax `duration_s` after the storm actually APPLIES (the
+                // sim clock), not after its nominal script time — a storm
+                // that lands late still lasts its full duration.
+                self.scenario.schedule(
+                    self.cluster.clock + duration_s.max(0.0),
+                    ScenarioEvent::CongestionRelax,
+                );
+                true
+            }
+            ScenarioEvent::CongestionRelax => {
+                self.net.relax();
+                true
+            }
+            ScenarioEvent::PreemptWorker { worker } if worker < n => self.preempt_worker(worker),
+            ScenarioEvent::RejoinWorker { worker } if worker < n => self.rejoin_worker(worker),
+            ScenarioEvent::LoadShift { worker, load_mean } if worker < n => {
+                self.cluster.set_load_mean(worker, load_mean);
+                true
+            }
+            _ => false,
+        };
+        if applied {
+            self.events_applied.push((at_s, desc));
+        }
+    }
+
+    /// Attach the scenario trace to a run record: the full scripted
+    /// timeline (identical across policies for the same config — the
+    /// apples-to-apples guarantee) plus the events actually applied within
+    /// this run's horizon.
+    pub fn annotate_record(&self, record: &mut RunRecord) {
+        if self.scenario_script().is_empty() {
+            return;
+        }
+        record
+            .extra
+            .insert("scenario".into(), Json::Str(self.scenario_script().name.clone()));
+        record
+            .extra
+            .insert("scenario_timeline".into(), self.scenario_script().to_json());
+        let applied: Vec<Json> = self
+            .events_applied
+            .iter()
+            .map(|(t, d)| crate::jobj! { "at_s" => *t, "event" => d.clone() })
+            .collect();
+        record.extra.insert("events_applied".into(), Json::Arr(applied));
+    }
+
     /// Reset for a new episode: model params, clock, load/congestion
-    /// processes, per-worker batches, windows (Algorithm 1 / §VI-C).
+    /// processes, membership, per-worker batches, windows, and the
+    /// scenario timeline (Algorithm 1 / §VI-C).
     pub fn reset_episode(&mut self, seed: u64, initial_batch: usize) -> anyhow::Result<()> {
         self.runtime.reset(seed)?;
         self.cluster.reset(seed);
@@ -308,17 +509,25 @@ impl BspTrainer {
             *w = WindowAggregator::default();
         }
         self.iter = 0;
+        self.scenario.rearm();
+        self.events_applied.clear();
+        self.shard_seed = seed;
+        self.membership_rev = 0;
         Ok(())
     }
 
     /// Execute one global BSP iteration.
+    ///
+    /// Scripted scenario events due at the current sim clock apply first,
+    /// so membership/profile changes take effect for this iteration.
     pub fn iterate(&mut self) -> anyhow::Result<IterationOutcome> {
+        self.apply_due_events();
         let n_workers = self.n_workers();
         let fd = self.runtime.feature_dim;
-        let total: usize = self.batches.iter().sum();
+        let total: usize = self.global_batch();
         let bucket = self.runtime.schema().bucket_for(total)?;
 
-        // --- assemble the fused global batch ---
+        // --- assemble the fused global batch (active workers only) ---
         self.xs_scratch.resize(bucket * fd, 0.0);
         self.ys_scratch.resize(bucket, 0);
         for v in &mut self.xs_scratch[total * fd..] {
@@ -331,6 +540,9 @@ impl BspTrainer {
         let mut row = 0usize;
         for w in 0..n_workers {
             self.offsets_scratch.push(row);
+            if !self.cluster.is_active(w) {
+                continue; // zero-width range: absent worker holds no rows
+            }
             let b = self.batches[w];
             self.samplers[w].next_indices(b, &mut self.idx_scratch);
             for (j, &idx) in self.idx_scratch.iter().enumerate() {
@@ -349,17 +561,21 @@ impl BspTrainer {
             .train_step(&self.xs_scratch, &self.ys_scratch, total, bucket)?;
 
         // --- price the iteration on the simulated cluster + fabric ---
+        // The collective only spans the machines that are present.
         let outcomes = self.cluster.compute_phase(&self.batches);
-        let profiles: Vec<_> = (0..n_workers).map(|w| self.cluster.profile(w).clone()).collect();
+        let profiles = self.cluster.active_profiles();
         let sync = self
             .net
             .sync(self.topology, &profiles, self.runtime.grad_bytes());
         let sim_dt = self.cluster.advance_iteration(&outcomes, sync.time_s);
         self.net.advance(sim_dt);
 
-        // --- per-worker window samples ---
-        let retx_per_worker = sync.retransmissions as f64 / n_workers as f64;
+        // --- per-worker window samples (absent workers observe nothing) ---
+        let retx_per_worker = sync.retransmissions as f64 / self.cluster.n_active().max(1) as f64;
         for w in 0..n_workers {
+            if !self.cluster.is_active(w) {
+                continue;
+            }
             let lo = self.offsets_scratch[w];
             let hi = self.offsets_scratch[w + 1];
             let local_n = (hi - lo).max(1);
@@ -557,5 +773,130 @@ mod tests {
         assert!(full_size_param_count("vgg11_mini") < full_size_param_count("vgg16_mini"));
         assert!(full_size_param_count("vgg16_mini") < full_size_param_count("vgg19_mini"));
         assert!(full_size_param_count("resnet34_mini") < full_size_param_count("resnet50_mini"));
+    }
+
+    #[test]
+    fn preempt_redistributes_budget_and_shrinks_global_batch() {
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
+        assert_eq!(t.global_batch(), 4 * 64);
+        assert!(t.preempt_worker(2));
+        assert_eq!(t.n_active(), 3);
+        // 64 freed across 3 survivors: 22/21/21.
+        assert_eq!(t.active_batches().iter().sum::<usize>(), 4 * 64);
+        assert_eq!(t.batches[2], 64, "frozen for rejoin");
+        let out = t.iterate().unwrap();
+        assert_eq!(out.global_batch, 4 * 64);
+        // Preempting the same worker again (or the last survivor) refuses.
+        assert!(!t.preempt_worker(2));
+        t.preempt_worker(0);
+        t.preempt_worker(1);
+        assert!(!t.preempt_worker(3), "never empty the cluster");
+        assert_eq!(t.n_active(), 1);
+    }
+
+    #[test]
+    fn rejoin_resumes_with_valid_batch_and_windows_skip_absent() {
+        let mut t = BspTrainer::new(&small_cfg(), backend()).unwrap();
+        t.preempt_worker(1);
+        for _ in 0..3 {
+            t.iterate().unwrap();
+        }
+        assert_eq!(t.windows[1].finish().iters, 0, "absent worker observed nothing");
+        assert_eq!(t.windows[0].finish().iters, 3);
+        assert!(t.rejoin_worker(1));
+        assert!((32..=1024).contains(&t.batches[1]));
+        let cap = t.mem_cap(1, 1024);
+        assert!(t.batches[1] <= cap.max(32));
+        t.iterate().unwrap();
+        assert_eq!(t.windows[1].finish().iters, 1, "rejoined worker observes again");
+        assert!(!t.rejoin_worker(1), "already active");
+    }
+
+    #[test]
+    fn scripted_scenario_fires_on_the_sim_clock_and_rearms() {
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        let mut cfg = small_cfg();
+        cfg.scenario = Some(ScenarioScript {
+            name: "t".into(),
+            events: vec![
+                TimedEvent {
+                    at_s: 0.0,
+                    event: ScenarioEvent::PreemptWorker { worker: 3 },
+                },
+                TimedEvent {
+                    at_s: 0.05,
+                    event: ScenarioEvent::LoadShift {
+                        worker: 0,
+                        load_mean: 0.6,
+                    },
+                },
+                TimedEvent {
+                    at_s: 1e6,
+                    event: ScenarioEvent::RejoinWorker { worker: 3 },
+                },
+            ],
+        });
+        let mut t = BspTrainer::new(&cfg, backend()).unwrap();
+        t.iterate().unwrap();
+        assert_eq!(t.n_active(), 3, "t=0 preemption applies on the first iteration");
+        assert_eq!(t.events_applied.len(), 1);
+        while t.cluster.clock < 0.1 {
+            t.iterate().unwrap();
+        }
+        assert_eq!(t.events_applied.len(), 2, "load shift fired by t=0.1");
+        assert_eq!(t.events_applied[1].1, "load_shift w0 mean=0.6");
+        // The far-future rejoin never fires within this horizon.
+        assert_eq!(t.n_active(), 3);
+        // Episode reset restores membership and re-arms the timeline.
+        t.reset_episode(0, 64).unwrap();
+        assert_eq!(t.n_active(), 4);
+        assert!(t.events_applied.is_empty());
+        t.iterate().unwrap();
+        assert_eq!(t.n_active(), 3, "re-armed script preempts again");
+    }
+
+    #[test]
+    fn congestion_storm_schedules_its_own_relax() {
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        let mut cfg = small_cfg();
+        cfg.scenario = Some(ScenarioScript {
+            name: "storm".into(),
+            events: vec![TimedEvent {
+                at_s: 0.0,
+                event: ScenarioEvent::CongestionStorm {
+                    level: 0.8,
+                    duration_s: 0.05,
+                },
+            }],
+        });
+        let mut t = BspTrainer::new(&cfg, backend()).unwrap();
+        t.iterate().unwrap();
+        assert!((t.net.congestion_mean() - 0.8).abs() < 1e-12, "storm raised the mean");
+        while t.cluster.clock < 0.2 {
+            t.iterate().unwrap();
+        }
+        assert!(t.net.congestion_mean() < 0.1, "auto-relax restored the baseline");
+        assert_eq!(t.events_applied.len(), 2, "storm + derived relax recorded");
+    }
+
+    #[test]
+    fn annotate_record_carries_the_timeline() {
+        use crate::sim::scenario::ScenarioScript;
+        let mut cfg = small_cfg();
+        cfg.scenario = Some(ScenarioScript::by_name("load_shift").unwrap());
+        let t = BspTrainer::new(&cfg, backend()).unwrap();
+        let mut rec = RunRecord::new("scenario-annotate");
+        t.annotate_record(&mut rec);
+        assert_eq!(
+            rec.extra.get("scenario").and_then(Json::as_str),
+            Some("load_shift")
+        );
+        assert!(rec.extra.contains_key("scenario_timeline"));
+        assert!(rec.extra.contains_key("events_applied"));
+        // Stationary runs stay unannotated.
+        let plain = BspTrainer::new(&small_cfg(), backend()).unwrap();
+        let mut rec2 = RunRecord::new("plain");
+        plain.annotate_record(&mut rec2);
+        assert!(rec2.extra.is_empty());
     }
 }

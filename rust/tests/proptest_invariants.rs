@@ -5,12 +5,16 @@
 //! randomized cases from a deterministic PRNG and reports the failing
 //! case's seed+inputs on violation. Same discipline, zero deps.
 
+use dynamix::cluster::{batch_fits, SimCluster};
 use dynamix::comm::Msg;
-use dynamix::config::Topology;
+use dynamix::config::{ClusterPreset, Topology};
 use dynamix::data::ShardSampler;
 use dynamix::metrics::ConvergenceDetector;
 use dynamix::netsim::NetworkSim;
 use dynamix::rl::action::{BatchRule, DELTAS, N_ACTIONS};
+use dynamix::sim::elastic;
+use dynamix::sim::engine::EventQueue;
+use dynamix::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
 use dynamix::rl::reward::{discounted_returns, RewardParams};
 use dynamix::rl::state::{GlobalState, StateBuilder, StateVector};
 use dynamix::rl::trajectory::{Trajectory, Transition, UpdateBatch};
@@ -277,7 +281,7 @@ fn prop_netsim_time_positive_and_monotone_in_bytes() {
         let n = 2 + rng.below(31);
         let profs = dynamix::cluster::profiles(dynamix::config::ClusterPreset::OscA100, n, 0);
         let mut net = NetworkSim::new(case as u64);
-        net.congestion_vol = 0.0;
+        net.set_congestion_vol(0.0);
         net.retx_per_gib = 0.0; // isolate the deterministic cost model
         let small = rng.below(10 << 20) + 1;
         let big = small * 4;
@@ -338,5 +342,177 @@ fn prop_json_roundtrip_random_values() {
         let text = v.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back, v, "case {case}: {text}");
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_in_nondecreasing_time_order() {
+    check("event_queue_order", 300, |rng, case| {
+        let mut q = EventQueue::new();
+        let n = 1 + rng.below(60);
+        for i in 0..n {
+            // Coarse grid so duplicate timestamps are common (tie order).
+            q.push((rng.below(20) as f64) * 0.5, i);
+        }
+        let mut popped: Vec<(f64, usize)> = Vec::new();
+        let mut now = 0.0;
+        while !q.is_empty() {
+            now += rng.exponential(0.5);
+            popped.extend(q.drain_due(now));
+        }
+        assert_eq!(popped.len(), n, "case {case}: events lost");
+        for w in popped.windows(2) {
+            assert!(
+                w[0].0 <= w[1].0,
+                "case {case}: pop times regressed: {} then {}",
+                w[0].0,
+                w[1].0
+            );
+            // FIFO among equal timestamps: insertion order == payload order.
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "case {case}: tie order broken");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_churn_preserves_batch_bounds_and_oom_rule() {
+    // The trainer's elastic-membership path is exactly (SimCluster
+    // membership + elastic::redistribute_freed/rejoin_batch + BatchRule);
+    // drive that composition through arbitrary event sequences.
+    check("churn_invariants", 40, |rng, case| {
+        let n = 2 + rng.below(7);
+        let mut cluster = SimCluster::new(ClusterPreset::FabricHetero, n, case as u64);
+        // Param count chosen so the T4 profiles' memory ceiling actually
+        // binds below 1024 — the OOM clamp is exercised, not vacuous.
+        let pc = 200_000_000;
+        let rule = BatchRule { min: 32, max: 1024 };
+        let mut batches: Vec<usize> = (0..n)
+            .map(|w| {
+                let cap = cluster.max_batch(w, pc, 1024);
+                rule.apply(32 + rng.below(993), 2, Some(cap))
+            })
+            .collect();
+        for step in 0..80 {
+            match rng.below(5) {
+                0 => {
+                    // Preempt (trainer refuses to empty the cluster).
+                    let w = rng.below(n);
+                    if cluster.is_active(w) && cluster.n_active() > 1 {
+                        cluster.set_active(w, false);
+                        let caps: Vec<usize> =
+                            (0..n).map(|i| cluster.max_batch(i, pc, 1024)).collect();
+                        let active = cluster.active_mask();
+                        elastic::redistribute_freed(
+                            batches[w],
+                            &mut batches,
+                            &active,
+                            &caps,
+                            1024,
+                        );
+                    }
+                }
+                1 => {
+                    // Rejoin with a valid batch.
+                    let w = rng.below(n);
+                    if !cluster.is_active(w) {
+                        cluster.set_active(w, true);
+                        let cap = cluster.max_batch(w, pc, 1024);
+                        batches[w] = elastic::rejoin_batch(batches[w], cap, 32, 1024);
+                        assert!(
+                            batches[w] == 32 || batch_fits(cluster.profile(w), pc, batches[w]),
+                            "case {case} step {step}: rejoined w{w} violates OOM rule"
+                        );
+                    }
+                }
+                2 => {
+                    // An RL action on a random active worker.
+                    let w = rng.below(n);
+                    if cluster.is_active(w) {
+                        let cap = cluster.max_batch(w, pc, 1024);
+                        batches[w] = rule.apply(batches[w], rng.below(N_ACTIONS), Some(cap));
+                    }
+                }
+                3 => {
+                    // Dynamics events never touch batch validity.
+                    cluster.scale_speed(rng.below(n), rng.uniform_range(0.05, 2.0));
+                    cluster.set_load_mean(rng.below(n), rng.uniform_range(0.0, 0.9));
+                }
+                _ => {
+                    cluster.scale_bandwidth_all(rng.uniform_range(0.05, 2.0));
+                    let out = cluster.compute_phase(&batches);
+                    cluster.advance_iteration(&out, 0.001);
+                }
+            }
+            assert!(cluster.n_active() >= 1, "case {case}: cluster emptied");
+            for w in 0..n {
+                if cluster.is_active(w) {
+                    assert!(
+                        (32..=1024).contains(&batches[w]),
+                        "case {case} step {step}: w{w} batch {} escaped [32,1024]",
+                        batches[w]
+                    );
+                    let cap = cluster.max_batch(w, pc, 1024);
+                    assert!(
+                        batches[w] <= cap.max(32),
+                        "case {case} step {step}: w{w} batch {} above mem cap {cap}",
+                        batches[w]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scenario_scripts_roundtrip_json() {
+    fn random_event(rng: &mut Rng, n_workers: usize) -> ScenarioEvent {
+        let grid = |rng: &mut Rng, lo: f64, hi: f64| {
+            // Values on a coarse grid: exact f64 JSON round-trips without
+            // depending on shortest-representation printing subtleties.
+            let steps = 64.0;
+            lo + (hi - lo) * (rng.below(steps as usize) as f64) / steps
+        };
+        match rng.below(7) {
+            0 => ScenarioEvent::SlowdownWorker {
+                worker: rng.below(n_workers),
+                factor: grid(rng, 0.1, 2.0),
+            },
+            1 => ScenarioEvent::BandwidthDrop {
+                factor: grid(rng, 0.1, 2.0),
+            },
+            2 => ScenarioEvent::CongestionStorm {
+                level: grid(rng, 0.0, 0.9),
+                duration_s: grid(rng, 0.1, 5.0),
+            },
+            3 => ScenarioEvent::CongestionRelax,
+            4 => ScenarioEvent::PreemptWorker {
+                worker: rng.below(n_workers),
+            },
+            5 => ScenarioEvent::RejoinWorker {
+                worker: rng.below(n_workers),
+            },
+            _ => ScenarioEvent::LoadShift {
+                worker: rng.below(n_workers),
+                load_mean: grid(rng, 0.0, 0.95),
+            },
+        }
+    }
+    check("scenario_roundtrip", 200, |rng, case| {
+        let n_workers = 1 + rng.below(16);
+        let script = ScenarioScript {
+            name: format!("prop-{case}"),
+            events: (0..rng.below(12))
+                .map(|_| TimedEvent {
+                    at_s: (rng.below(400) as f64) * 0.25,
+                    event: random_event(rng, n_workers),
+                })
+                .collect(),
+        };
+        script.validate(n_workers).unwrap();
+        let text = script.to_json().to_string();
+        let back = ScenarioScript::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, script, "case {case}: {text}");
     });
 }
