@@ -2,10 +2,13 @@
 //!
 //! Spawns the DYNAMIX leader (PPO arbitrator) plus 3 worker threads in one
 //! process, connected over localhost TCP with the production wire protocol
-//! (`comm::Msg`). Each worker runs REAL PJRT training steps on its own
-//! model replica and shard; the leader scores their reported states and
-//! pushes batch-size actions. This is the same code path as `dynamix
-//! serve` / `dynamix worker` split across machines.
+//! (`comm::Msg`). The data plane is REAL synchronous data-parallel
+//! training: each worker draws its shard's rows, the gradient accumulator
+//! rings through the workers (chained deterministic reduction), and every
+//! worker applies the identical reduced update to its parameter replica —
+//! replicas stay bit-identical without ever shipping parameters. The
+//! leader scores reported window states and pushes batch-size actions.
+//! Same code path as `dynamix serve` / `dynamix worker` across machines.
 //!
 //!     cargo run --release --example distributed
 

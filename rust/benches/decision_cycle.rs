@@ -141,6 +141,19 @@ fn main() -> anyhow::Result<()> {
     });
     session.push_items(&r, 8 * 64);
 
+    println!("\n== sharded loopback data plane (n=4) vs single-process iterate ==");
+    // Same operating point as iterate/steady, executed through the
+    // 4-shard loopback backend: the delta is the data plane's overhead
+    // (row scatter, per-step param snapshot, channel hops, and the
+    // sequential chained gradient reduction) for bit-identical results.
+    let sharded: dynamix::runtime::Backend =
+        std::sync::Arc::new(dynamix::runtime::ShardedBackend::loopback(4));
+    let mut shd = BspTrainer::new(&mk_cfg(None), sharded)?;
+    let r = bench("iterate/sharded_loopback_n4", w, n, || {
+        shd.iterate().unwrap();
+    });
+    session.push_items(&r, 8 * 64);
+
     let path = session.flush()?;
     println!("\nrecorded run -> {}", path.display());
     Ok(())

@@ -1,29 +1,44 @@
 //! Distributed leader/worker deployment over the TCP protocol.
 //!
-//! This is the paper's Fig. 1 deployed across real processes: each worker
-//! process owns a PJRT runtime and trains a model replica on its shard for
-//! `k` iterations per cycle, measures its own (real) iteration times and
-//! training statistics, and reports its state vector to the leader; the
-//! leader runs the PPO arbitrator and pushes batch-size actions back.
-//! Algorithm 1's lifecycle (register -> welcome -> state/action cycles ->
-//! shutdown) maps 1:1 onto `comm::Msg`.
+//! This is the paper's Fig. 1 deployed across real processes, with a REAL
+//! synchronous data-parallel data plane (since PR 4; the old demo mode ran
+//! local SGD on independent replicas). Each iteration:
 //!
-//! Demo-mode caveat (documented in DESIGN.md): workers run *local* SGD on
-//! their own replicas — the gradient all-reduce data plane is exercised by
-//! the simulator path (`trainer::BspTrainer`), which is mathematically
-//! exact; this mode exercises the coordination plane (real sockets, real
-//! per-process PJRT compute, real latencies for the §VI-H overhead story).
+//! 1. the leader broadcasts `ShardStep { denom }` (the global batch's mask
+//!    sum); every worker draws its own shard rows at its current batch
+//!    size and runs the forward half, reporting per-row loss pieces;
+//! 2. the gradient accumulator rings through the workers in id order
+//!    (`ShardGradSeed`/`ShardGradOut`) — the same chained deterministic
+//!    reduction the loopback `ShardedBackend` uses, relayed by the leader;
+//! 3. the leader broadcasts the reduced gradient (`ShardGradFin`); every
+//!    worker applies the identical optimizer update to its parameter
+//!    replica, so replicas stay bit-identical without ever shipping
+//!    parameters.
+//!
+//! The control plane is unchanged: every `k` iterations workers report
+//! their window state, the leader's PPO arbitrator scores all workers in
+//! one forward pass and pushes batch-size actions back (Algorithm 1's
+//! register -> welcome -> state/action cycles -> shutdown lifecycle).
+//! Worker-measured wall times are real, preserving the §VI-H overhead
+//! story. The leader writes a `RunRecord` under `runs/distributed/`.
 
 use crate::comm::{Msg, TcpTransport, Transport};
-use crate::config::{presets, Scale};
+use crate::config::{presets, Optimizer, Scale};
+use crate::metrics::{mean_std_usize, RunRecord, TracePoint};
 use crate::rl::action::BatchRule;
 use crate::rl::agent::PpoAgent;
 use crate::rl::reward::RewardParams;
 use crate::rl::state::{GlobalState, StateBuilder};
 use crate::runtime::default_backend;
+use crate::runtime::native::model::{
+    apply_adam, apply_sgd, fold_masked_ce_partial, normalized_grad_stats,
+};
+use crate::runtime::native::{NativeBackend, ShardCtx};
+use crate::runtime::OptState;
 use crate::sysmetrics::{SysSample, WindowAggregator};
-use crate::trainer::ModelRuntime;
+use crate::util::json::Json;
 use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
 
 /// Run the leader: accept the preset's worker count, drive
 /// `steps_per_episode` decision cycles, broadcast shutdown.
@@ -45,6 +60,7 @@ pub fn serve_n(
     cfg.cluster.n_workers = n_workers;
     cfg.steps_per_episode = cycles;
     let backend = default_backend()?;
+    let pc = backend.schema().model(&cfg.train.model)?.param_count;
     let mut agent = PpoAgent::new(backend, cfg.rl.clone(), cfg.train.seed)?;
     let rule = BatchRule {
         min: cfg.batch.min,
@@ -53,35 +69,103 @@ pub fn serve_n(
 
     let listener = TcpListener::bind(bind)?;
     println!("[leader] listening on {bind}; waiting for {} workers", cfg.cluster.n_workers);
-    let mut transports: Vec<TcpTransport> = Vec::new();
-    let mut batches: Vec<usize> = Vec::new();
-    while transports.len() < cfg.cluster.n_workers {
+    // Accept in arrival order, then sort by REGISTERED worker id: the
+    // gradient ring and the loss/acc folds walk this vector, so the
+    // reduction order must not depend on TCP connect races.
+    let mut regs: Vec<(u32, TcpTransport, usize)> = Vec::new();
+    while regs.len() < cfg.cluster.n_workers {
         let (stream, peer) = listener.accept()?;
         let mut t = TcpTransport::new(stream)?;
         match t.recv()? {
             Msg::Register { worker, max_batch } => {
                 println!("[leader] worker {worker} registered from {peer} (max_batch={max_batch})");
+                anyhow::ensure!(
+                    !regs.iter().any(|(w, _, _)| *w == worker),
+                    "duplicate worker id {worker}"
+                );
+                // Ids must BE data-shard ranks: congruent ids (2 and 6 mod
+                // 4) would silently sample identical row streams.
+                anyhow::ensure!(
+                    (worker as usize) < cfg.cluster.n_workers,
+                    "worker id {worker} outside 0..{} (ids are shard ranks)",
+                    cfg.cluster.n_workers
+                );
+                // The CLAMPED batch goes in the Welcome: leader's denom and
+                // the worker's row count must agree to the sample.
+                let initial = cfg.batch.initial.min(max_batch as usize);
                 t.send(&Msg::Welcome {
                     worker,
                     k: cfg.rl.k as u32,
-                    initial_batch: cfg.batch.initial as u32,
+                    initial_batch: initial as u32,
+                    n_workers: cfg.cluster.n_workers as u32,
+                    cycles: cfg.steps_per_episode as u32,
                 })?;
-                transports.push(t);
-                batches.push(cfg.batch.initial.min(max_batch as usize));
+                regs.push((worker, t, initial));
             }
             other => anyhow::bail!("expected Register, got {other:?}"),
         }
     }
+    regs.sort_by_key(|(w, _, _)| *w);
+    let worker_ids: Vec<u32> = regs.iter().map(|(w, _, _)| *w).collect();
+    let mut batches: Vec<usize> = regs.iter().map(|(_, _, b)| *b).collect();
+    let mut transports: Vec<TcpTransport> = regs.into_iter().map(|(_, t, _)| t).collect();
 
+    let mut record = RunRecord::new(&format!("{preset}-distributed"));
+    let mut seq = 0u64;
+    let (mut last_loss, mut last_acc) = (0.0f64, 0.0f64);
     for cycle in 0..cfg.steps_per_episode as u32 {
-        // Collect one StateReport per worker (BSP-style barrier).
+        let denom: f32 = batches.iter().sum::<usize>() as f32;
+        // --- data plane: k fused iterations, chained all-reduce ---
+        for _ in 0..cfg.rl.k {
+            seq += 1;
+            let step = Msg::ShardStep { seq, denom, train: true, rows: None, params: None };
+            for t in transports.iter_mut() {
+                t.send(&step)?;
+            }
+            // Per-row loss pieces fold in worker-id order (= the reduction
+            // order, so loss/acc are deterministic too) — the same fold
+            // the loopback data plane and the fused loss use.
+            let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+            for (w, t) in transports.iter_mut().enumerate() {
+                match t.recv()? {
+                    Msg::ShardFwd { seq: rs, loss_terms, correct } => {
+                        anyhow::ensure!(rs == seq, "worker {w}: ShardFwd seq {rs} != {seq}");
+                        fold_masked_ce_partial(&loss_terms, &correct, &mut loss_sum, &mut acc_sum);
+                    }
+                    other => anyhow::bail!("worker {w}: expected ShardFwd, got {other:?}"),
+                }
+            }
+            // Ring: the accumulator visits workers in id order.
+            let mut grad = vec![0.0f32; pc];
+            for (w, t) in transports.iter_mut().enumerate() {
+                t.send(&Msg::ShardGradSeed { seq, grad })?;
+                grad = match t.recv()? {
+                    Msg::ShardGradOut { seq: rs, grad } => {
+                        anyhow::ensure!(rs == seq, "worker {w}: GradOut seq {rs} != {seq}");
+                        grad
+                    }
+                    other => anyhow::bail!("worker {w}: expected ShardGradOut, got {other:?}"),
+                };
+            }
+            let loss = (loss_sum / denom as f64) as f32;
+            let acc = (acc_sum / denom as f64) as f32;
+            (last_loss, last_acc) = (loss as f64, acc as f64);
+            let fin = Msg::ShardGradFin { seq, loss, acc, grad };
+            for t in transports.iter_mut() {
+                t.send(&fin)?;
+            }
+        }
+
+        // --- control plane: states up, actions down (BSP barrier) ---
         let mut states = Vec::with_capacity(transports.len());
         let mut rewards = Vec::with_capacity(transports.len());
+        let mut clock = 0.0f64;
         for t in transports.iter_mut() {
             match t.recv()? {
-                Msg::StateReport { state, reward, .. } => {
+                Msg::StateReport { state, reward, sim_clock, .. } => {
                     states.push(state);
                     rewards.push(reward);
+                    clock = clock.max(sim_clock);
                 }
                 other => anyhow::bail!("expected StateReport, got {other:?}"),
             }
@@ -92,112 +176,183 @@ pub fn serve_n(
             let delta = new_batch as i32 - batches[w] as i32;
             batches[w] = new_batch;
             t.send(&Msg::Action {
-                worker: w as u32,
+                worker: worker_ids[w],
                 cycle,
                 delta,
                 new_batch: new_batch as u32,
             })?;
         }
         let mean_r: f64 = rewards.iter().sum::<f64>() / rewards.len().max(1) as f64;
+        let (bm, bs) = mean_std_usize(&batches);
+        record.push(TracePoint {
+            iter: (cycle as usize + 1) * cfg.rl.k,
+            sim_time: clock,
+            train_acc: last_acc,
+            eval_acc: 0.0, // no held-out eval in the deployed demo
+            loss: last_loss,
+            batch_mean: bm,
+            batch_std: bs,
+            global_batch: batches.iter().sum(),
+        });
         println!(
-            "[leader] cycle {cycle}: mean_reward={mean_r:+.3} batches={batches:?}"
+            "[leader] cycle {cycle}: loss={last_loss:.3} acc={last_acc:.3} \
+             mean_reward={mean_r:+.3} batches={batches:?}"
         );
     }
-    // Drain the final pipelined report from each worker, then shut down —
-    // avoids a send-after-close race on the worker side (Algorithm 1 l.33).
+    // Workers idle at the next ShardStep recv; Shutdown lands there
+    // (Algorithm 1 line 33).
     for t in transports.iter_mut() {
-        let _ = t.recv()?;
         t.send(&Msg::Shutdown)?;
     }
-    println!("[leader] done");
+    record.extra.insert(
+        "data_plane".into(),
+        crate::jobj! {
+            "mode" => "tcp",
+            "shard_count" => n_workers,
+            "reduction" => "chained-ring",
+            "proto_version" => crate::comm::PROTO_VERSION as usize,
+        },
+    );
+    record.extra.insert("final_train_acc".into(), Json::Num(last_acc));
+    let path = crate::harness::runs_dir()
+        .join("distributed")
+        .join(format!("{}.json", record.name));
+    record.save_json(&path)?;
+    println!("[leader] done; run record -> {}", path.display());
     Ok(())
 }
 
-/// Run one worker: connect, register, train k real iterations per cycle on
-/// a local replica, report state, apply actions, exit on Shutdown.
+/// Run one worker: connect, register, serve the shard data plane (sample
+/// rows, forward, fold the traveling gradient, apply the reduced update to
+/// the local replica), report window state every k iterations, apply
+/// actions, exit on Shutdown.
 pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow::Result<()> {
     let cfg = presets::scaled(presets::by_name(preset)?, scale);
-    let backend = default_backend()?;
-    let info = backend.schema().model(&cfg.train.model)?.clone();
-    let dataset = crate::data::by_name(&info.dataset, info.feature_dim, cfg.train.seed)?;
-    let mut sampler = crate::data::ShardSampler::new(
-        worker_id as usize % cfg.cluster.n_workers,
-        cfg.cluster.n_workers,
-        dataset.train_size,
-        cfg.train.seed,
-    );
-    let mut runtime = ModelRuntime::new(
-        backend.clone(),
-        &cfg.train.model,
+    let native = NativeBackend::new();
+    let info = native.schema().model(&cfg.train.model)?.clone();
+    let fd = info.feature_dim;
+    let dataset = crate::data::by_name(&info.dataset, fd, cfg.train.seed)?;
+    // Parameter replica: the same seeded init on every worker; identical
+    // ShardGradFin updates keep replicas bit-identical forever after.
+    let mut state = OptState::new(
+        native.init_params(&cfg.train.model, cfg.train.seed)?,
         cfg.train.optimizer,
-        cfg.train.lr,
-        cfg.train.seed,
-    )?;
+    );
+    let lr = cfg.train.lr;
 
     let mut t = TcpTransport::new(TcpStream::connect(addr)?)?;
     t.send(&Msg::Register {
         worker: worker_id,
         max_batch: cfg.batch.max as u32,
     })?;
-    let (k, mut batch) = match t.recv()? {
-        Msg::Welcome { k, initial_batch, .. } => (k as usize, initial_batch as usize),
+    // The LEADER's deployment sizes win over the local preset (demo/smoke
+    // runs shrink both): data shards over the real worker count, progress
+    // over the real cycle budget.
+    let (k, mut batch, n_workers, cycles) = match t.recv()? {
+        Msg::Welcome { k, initial_batch, n_workers, cycles, .. } => (
+            k as usize,
+            initial_batch as usize,
+            (n_workers as usize).max(1),
+            (cycles as usize).max(1),
+        ),
         other => anyhow::bail!("expected Welcome, got {other:?}"),
     };
+    let mut sampler = crate::data::ShardSampler::new(
+        worker_id as usize % n_workers,
+        n_workers,
+        dataset.train_size,
+        cfg.train.seed,
+    );
 
     let builder = StateBuilder::default();
     let reward = RewardParams::default();
     let mut window = WindowAggregator::default();
     let mut idx = Vec::new();
+    let mut held: Option<(u64, ShardCtx)> = None;
+    let (mut my_rows, mut my_correct) = (0usize, 0.0f64);
+    let mut iters_in_cycle = 0usize;
     let mut cycle = 0u32;
-    let t_start = std::time::Instant::now();
-    loop {
-        // k real local training iterations at the current batch size.
-        for _ in 0..k {
-            let bucket = backend.schema().bucket_for(batch)?;
-            let mut xs = vec![0.0f32; bucket * info.feature_dim];
-            let mut ys = vec![0i32; bucket];
-            sampler.next_indices(batch, &mut idx);
-            for (r, &i) in idx.iter().enumerate() {
-                ys[r] = dataset
-                    .sample_into(i, &mut xs[r * info.feature_dim..(r + 1) * info.feature_dim]);
-            }
-            let m = runtime.train_step(&xs, &ys, batch, bucket)?;
-            window.push_iteration(
-                m.acc,
-                m.loss,
-                m.exec_seconds,
-                0.0, // no fabric in single-host demo mode
-                0,
-                SysSample { cpu_time_ratio: 1.0, mem_util: 0.2 },
-                m.sigma_norm,
-                m.sigma_norm2,
-            );
-        }
-        let summary = window.finish();
-        let global = GlobalState {
-            loss: summary.loss_mean,
-            eval_acc: summary.acc_mean,
-            eval_trend: 0.0,
-            progress: cycle as f64 / cfg.steps_per_episode as f64,
-            n_workers: cfg.cluster.n_workers,
-        };
-        let state = builder.build(&summary, batch, &global);
-        let r = reward.compute(&summary, batch);
-        t.send(&Msg::StateReport {
-            worker: worker_id,
-            cycle,
-            state,
-            reward: r,
-            sim_clock: t_start.elapsed().as_secs_f64(),
-        })?;
+    let mut t_step = Instant::now();
+    let t_start = Instant::now();
+    'outer: loop {
         match t.recv()? {
-            Msg::Action { new_batch, .. } => {
-                batch = new_batch as usize;
+            Msg::ShardStep { seq, denom, .. } => {
+                t_step = Instant::now();
+                sampler.next_indices(batch, &mut idx);
+                let mut xs = vec![0.0f32; batch * fd];
+                let mut ys = vec![0i32; batch];
+                for (r, &i) in idx.iter().enumerate() {
+                    ys[r] = dataset.sample_into(i, &mut xs[r * fd..(r + 1) * fd]);
+                }
+                let mask = vec![1.0f32; batch];
+                let (ctx, fwd) =
+                    native.shard_forward(&cfg.train.model, &state.params, xs, &ys, &mask, denom)?;
+                my_rows = batch;
+                my_correct = fwd.correct.iter().map(|&c| c as f64).sum();
+                held = Some((seq, ctx));
+                t.send(&Msg::ShardFwd {
+                    seq,
+                    loss_terms: fwd.loss_terms,
+                    correct: fwd.correct,
+                })?;
             }
-            Msg::Shutdown => break,
-            other => anyhow::bail!("expected Action/Shutdown, got {other:?}"),
+            Msg::ShardGradSeed { seq, mut grad } => {
+                let (held_seq, ctx) = held
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("GradSeed without an in-flight step"))?;
+                anyhow::ensure!(held_seq == seq, "GradSeed seq {seq} != {held_seq}");
+                native.shard_backward_acc(&state.params, ctx, &mut grad)?;
+                t.send(&Msg::ShardGradOut { seq, grad })?;
+            }
+            Msg::ShardGradFin { loss, grad, .. } => {
+                let (sn, sn2, _) = normalized_grad_stats(&grad);
+                match cfg.train.optimizer {
+                    Optimizer::Sgd => apply_sgd(&mut state, &grad, lr),
+                    Optimizer::Adam => apply_adam(&mut state, &grad, lr),
+                }
+                window.push_iteration(
+                    my_correct / my_rows.max(1) as f64,
+                    loss as f64,
+                    t_step.elapsed().as_secs_f64(),
+                    0.0, // single-host demo: no fabric measurement
+                    0,
+                    SysSample { cpu_time_ratio: 1.0, mem_util: 0.2 },
+                    sn as f64,
+                    sn2 as f64,
+                );
+                iters_in_cycle += 1;
+                if iters_in_cycle == k {
+                    iters_in_cycle = 0;
+                    let summary = window.finish();
+                    let global = GlobalState {
+                        loss: summary.loss_mean,
+                        eval_acc: summary.acc_mean,
+                        eval_trend: 0.0,
+                        progress: cycle as f64 / cycles as f64,
+                        n_workers,
+                    };
+                    let sv = builder.build(&summary, batch, &global);
+                    let r = reward.compute(&summary, batch);
+                    t.send(&Msg::StateReport {
+                        worker: worker_id,
+                        cycle,
+                        state: sv,
+                        reward: r,
+                        sim_clock: t_start.elapsed().as_secs_f64(),
+                    })?;
+                    match t.recv()? {
+                        Msg::Action { new_batch, .. } => {
+                            batch = new_batch as usize;
+                        }
+                        Msg::Shutdown => break 'outer,
+                        other => anyhow::bail!("expected Action/Shutdown, got {other:?}"),
+                    }
+                    cycle += 1;
+                }
+            }
+            Msg::Shutdown => break 'outer,
+            other => anyhow::bail!("worker: unexpected {other:?}"),
         }
-        cycle += 1;
     }
     println!("[worker {worker_id}] shut down cleanly after {cycle} cycles");
     Ok(())

@@ -24,15 +24,39 @@ use std::net::TcpStream;
 use std::sync::mpsc;
 use wire::{Decoder, Encoder};
 
-pub const PROTO_VERSION: u16 = 1;
+/// Bumped to 2 when the shard-gradient data-plane frames landed
+/// (`ShardStep`/`ShardFwd`/`ShardGradSeed`/`ShardGradOut`/`ShardGradFin`).
+pub const PROTO_VERSION: u16 = 2;
 
-/// Protocol messages (paper Fig. 1: state up, action down, lifecycle).
+/// Hard ceiling on one frame's body. Sized for the largest legitimate
+/// payload — a shard row slab at the top bucket (32768 x 128 features x
+/// 4 B = 16 MiB) — while still rejecting forged giant length prefixes.
+pub const MAX_FRAME: usize = 32 << 20;
+
+/// One shard's row slice of a fused batch: `x` is `[mask.len(),
+/// feature_dim]` row-major, `y`/`mask` per-row. Model-tagged so a shard
+/// server needs no out-of-band schema agreement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardRows {
+    pub model: String,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Protocol messages: the paper Fig. 1 control plane (state up, action
+/// down, lifecycle) plus the shard-gradient data plane (fused-batch rows
+/// out, chained gradient reduction around the shards, reduced gradient
+/// broadcast back).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Worker announces itself and its capabilities.
     Register { worker: u32, max_batch: u32 },
-    /// Arbitrator acknowledges registration.
-    Welcome { worker: u32, k: u32, initial_batch: u32 },
+    /// Arbitrator acknowledges registration. `n_workers`/`cycles` are the
+    /// LEADER's deployment sizes (they override whatever the worker's
+    /// preset says — demo/smoke runs shrink both), so data sharding and
+    /// progress accounting agree across the cluster.
+    Welcome { worker: u32, k: u32, initial_batch: u32, n_workers: u32, cycles: u32 },
     /// Worker's k-iteration window state report (§III-C cycle).
     StateReport {
         worker: u32,
@@ -47,6 +71,31 @@ pub enum Msg {
     Barrier { cycle: u32 },
     /// Graceful shutdown broadcast (Algorithm 1 line 33).
     Shutdown,
+    /// Data plane: begin one fused iteration on a shard. `denom` is the
+    /// global fused-batch mask sum (per-row loss gradients scale by it).
+    /// `rows`/`params` are None for shards that own their data and hold a
+    /// parameter replica (the TCP leader/worker deployment).
+    ShardStep {
+        seq: u64,
+        denom: f32,
+        train: bool,
+        rows: Option<ShardRows>,
+        params: Option<Vec<f32>>,
+    },
+    /// Data plane: a shard's per-row loss pieces (forward half done).
+    ShardFwd { seq: u64, loss_terms: Vec<f32>, correct: Vec<f32> },
+    /// Data plane: the traveling gradient accumulator arrives at a shard
+    /// (one hop of the chained deterministic reduction).
+    ShardGradSeed { seq: u64, grad: Vec<f32> },
+    /// Data plane: the accumulator after folding this shard's rows in.
+    ShardGradOut { seq: u64, grad: Vec<f32> },
+    /// Data plane: fully-reduced gradient broadcast. Replica-holding
+    /// shards apply the same optimizer update, staying bit-identical.
+    ShardGradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
+    /// Data plane: a shard failed to process step `seq` (bad inputs,
+    /// protocol abuse). The shard stays alive and serviceable; the leader
+    /// surfaces the message as the step's error.
+    ShardErr { seq: u64, msg: String },
 }
 
 const TAG_REGISTER: u8 = 1;
@@ -55,6 +104,12 @@ const TAG_STATE: u8 = 3;
 const TAG_ACTION: u8 = 4;
 const TAG_BARRIER: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_SHARD_STEP: u8 = 7;
+const TAG_SHARD_FWD: u8 = 8;
+const TAG_SHARD_GRAD_SEED: u8 = 9;
+const TAG_SHARD_GRAD_OUT: u8 = 10;
+const TAG_SHARD_GRAD_FIN: u8 = 11;
+const TAG_SHARD_ERR: u8 = 12;
 
 impl Msg {
     /// Encode to a length-prefixed frame.
@@ -67,11 +122,13 @@ impl Msg {
                 e.u32(*worker);
                 e.u32(*max_batch);
             }
-            Msg::Welcome { worker, k, initial_batch } => {
+            Msg::Welcome { worker, k, initial_batch, n_workers, cycles } => {
                 e.u8(TAG_WELCOME);
                 e.u32(*worker);
                 e.u32(*k);
                 e.u32(*initial_batch);
+                e.u32(*n_workers);
+                e.u32(*cycles);
             }
             Msg::StateReport { worker, cycle, state, reward, sim_clock } => {
                 e.u8(TAG_STATE);
@@ -98,6 +155,57 @@ impl Msg {
             Msg::Shutdown => {
                 e.u8(TAG_SHUTDOWN);
             }
+            Msg::ShardStep { seq, denom, train, rows, params } => {
+                e.u8(TAG_SHARD_STEP);
+                e.u64(*seq);
+                e.f32(*denom);
+                e.u8(u8::from(*train));
+                match rows {
+                    Some(r) => {
+                        e.u8(1);
+                        e.str(&r.model);
+                        e.f32s(&r.x);
+                        e.i32s(&r.y);
+                        e.f32s(&r.mask);
+                    }
+                    None => e.u8(0),
+                }
+                match params {
+                    Some(p) => {
+                        e.u8(1);
+                        e.f32s(p);
+                    }
+                    None => e.u8(0),
+                }
+            }
+            Msg::ShardFwd { seq, loss_terms, correct } => {
+                e.u8(TAG_SHARD_FWD);
+                e.u64(*seq);
+                e.f32s(loss_terms);
+                e.f32s(correct);
+            }
+            Msg::ShardGradSeed { seq, grad } => {
+                e.u8(TAG_SHARD_GRAD_SEED);
+                e.u64(*seq);
+                e.f32s(grad);
+            }
+            Msg::ShardGradOut { seq, grad } => {
+                e.u8(TAG_SHARD_GRAD_OUT);
+                e.u64(*seq);
+                e.f32s(grad);
+            }
+            Msg::ShardGradFin { seq, loss, acc, grad } => {
+                e.u8(TAG_SHARD_GRAD_FIN);
+                e.u64(*seq);
+                e.f32(*loss);
+                e.f32(*acc);
+                e.f32s(grad);
+            }
+            Msg::ShardErr { seq, msg } => {
+                e.u8(TAG_SHARD_ERR);
+                e.u64(*seq);
+                e.str(msg);
+            }
         }
         e.frame()
     }
@@ -110,7 +218,13 @@ impl Msg {
         let tag = d.u8()?;
         let msg = match tag {
             TAG_REGISTER => Msg::Register { worker: d.u32()?, max_batch: d.u32()? },
-            TAG_WELCOME => Msg::Welcome { worker: d.u32()?, k: d.u32()?, initial_batch: d.u32()? },
+            TAG_WELCOME => Msg::Welcome {
+                worker: d.u32()?,
+                k: d.u32()?,
+                initial_batch: d.u32()?,
+                n_workers: d.u32()?,
+                cycles: d.u32()?,
+            },
             TAG_STATE => {
                 let worker = d.u32()?;
                 let cycle = d.u32()?;
@@ -135,6 +249,37 @@ impl Msg {
             },
             TAG_BARRIER => Msg::Barrier { cycle: d.u32()? },
             TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_SHARD_STEP => {
+                let seq = d.u64()?;
+                let denom = d.f32()?;
+                let train = d.u8()? != 0;
+                let rows = if d.u8()? != 0 {
+                    Some(ShardRows {
+                        model: d.str()?,
+                        x: d.f32s()?,
+                        y: d.i32s()?,
+                        mask: d.f32s()?,
+                    })
+                } else {
+                    None
+                };
+                let params = if d.u8()? != 0 { Some(d.f32s()?) } else { None };
+                Msg::ShardStep { seq, denom, train, rows, params }
+            }
+            TAG_SHARD_FWD => Msg::ShardFwd {
+                seq: d.u64()?,
+                loss_terms: d.f32s()?,
+                correct: d.f32s()?,
+            },
+            TAG_SHARD_GRAD_SEED => Msg::ShardGradSeed { seq: d.u64()?, grad: d.f32s()? },
+            TAG_SHARD_GRAD_OUT => Msg::ShardGradOut { seq: d.u64()?, grad: d.f32s()? },
+            TAG_SHARD_GRAD_FIN => Msg::ShardGradFin {
+                seq: d.u64()?,
+                loss: d.f32()?,
+                acc: d.f32()?,
+                grad: d.f32s()?,
+            },
+            TAG_SHARD_ERR => Msg::ShardErr { seq: d.u64()?, msg: d.str()? },
             t => anyhow::bail!("unknown message tag {t}"),
         };
         d.finish()?;
@@ -171,7 +316,7 @@ impl Transport for TcpTransport {
         let mut len_buf = [0u8; 4];
         self.stream.read_exact(&mut len_buf)?;
         let len = u32::from_le_bytes(len_buf) as usize;
-        anyhow::ensure!(len <= 1 << 20, "frame too large: {len}");
+        anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
         let mut body = vec![0u8; len];
         self.stream.read_exact(&mut body)?;
         Msg::decode(&body)
@@ -218,7 +363,7 @@ mod tests {
     fn sample_msgs() -> Vec<Msg> {
         vec![
             Msg::Register { worker: 3, max_batch: 1024 },
-            Msg::Welcome { worker: 3, k: 5, initial_batch: 128 },
+            Msg::Welcome { worker: 3, k: 5, initial_batch: 128, n_workers: 4, cycles: 10 },
             Msg::StateReport {
                 worker: 3,
                 cycle: 17,
@@ -228,6 +373,26 @@ mod tests {
             },
             Msg::Action { worker: 3, cycle: 17, delta: -25, new_batch: 103 },
             Msg::Barrier { cycle: 42 },
+            Msg::ShardStep {
+                seq: 9,
+                denom: 512.0,
+                train: true,
+                rows: Some(ShardRows {
+                    model: "vgg11_mini".into(),
+                    x: vec![0.5; 2 * 4],
+                    y: vec![1, 3],
+                    mask: vec![1.0, 0.0],
+                }),
+                params: Some(vec![-0.25; 6]),
+            },
+            Msg::ShardStep { seq: 10, denom: 64.0, train: false, rows: None, params: None },
+            Msg::ShardFwd { seq: 9, loss_terms: vec![2.3, 0.0], correct: vec![1.0, 0.0] },
+            Msg::ShardGradSeed { seq: 9, grad: vec![0.0; 5] },
+            Msg::ShardGradOut { seq: 9, grad: vec![0.125; 5] },
+            Msg::ShardGradFin { seq: 9, loss: 2.3, acc: 0.5, grad: vec![0.125; 5] },
+            Msg::ShardErr { seq: 9, msg: "label 37 outside [0, 10)".into() },
+            // Shutdown stays LAST: the TCP roundtrip test's echo server
+            // exits on it.
             Msg::Shutdown,
         ]
     }

@@ -30,6 +30,10 @@ impl Encoder {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -37,6 +41,29 @@ impl Encoder {
     pub fn bytes(&mut self, v: &[u8]) {
         self.u32(v.len() as u32);
         self.buf.extend_from_slice(v);
+    }
+
+    /// `[count:u32][count x f32 LE]` — the shard data plane's tensor slabs.
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// `[count:u32][count x i32 LE]`.
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// UTF-8 string as length-prefixed bytes.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
     }
 
     /// Finish: [len:u32][body].
@@ -101,9 +128,49 @@ impl<'a> Decoder<'a> {
         Ok(f64::from_le_bytes(b.try_into().unwrap()))
     }
 
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
     pub fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
         let n = self.u32()? as usize;
         self.take(n)
+    }
+
+    /// Counterpart of [`Encoder::f32s`]. The byte slab is bounds-checked
+    /// BEFORE any allocation, so a forged count cannot force a huge alloc.
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("f32 array length overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Counterpart of [`Encoder::i32s`].
+    pub fn i32s(&mut self) -> anyhow::Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("i32 array length overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Counterpart of [`Encoder::str`].
+    pub fn str(&mut self) -> anyhow::Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 in wire string"))?
+            .to_string())
     }
 
     /// Assert the frame was fully consumed.
@@ -138,6 +205,47 @@ mod tests {
         assert_eq!(d.f64().unwrap(), -2.5);
         assert_eq!(d.bytes().unwrap(), b"hello");
         d.finish().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_arrays_and_strings() {
+        let mut e = Encoder::new();
+        e.f32(1.5);
+        e.f32s(&[0.25, -3.0, f32::MIN_POSITIVE]);
+        e.i32s(&[-7, 0, i32::MAX]);
+        e.str("vgg11_mini");
+        e.f32s(&[]);
+        let frame = e.frame();
+        let mut d = Decoder::new(&frame[4..]);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f32s().unwrap(), vec![0.25, -3.0, f32::MIN_POSITIVE]);
+        assert_eq!(d.i32s().unwrap(), vec![-7, 0, i32::MAX]);
+        assert_eq!(d.str().unwrap(), "vgg11_mini");
+        assert_eq!(d.f32s().unwrap(), Vec::<f32>::new());
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn forged_array_count_errors_without_allocating() {
+        // Count claims u32::MAX elements with a 4-byte body: the decoder
+        // must bounds-check before allocating anything.
+        let mut e = Encoder::new();
+        e.u32(u32::MAX);
+        e.u32(0);
+        let frame = e.frame();
+        let mut d = Decoder::new(&frame[4..]);
+        assert!(d.f32s().is_err());
+        let mut d = Decoder::new(&frame[4..]);
+        assert!(d.i32s().is_err());
+    }
+
+    #[test]
+    fn non_utf8_string_rejected() {
+        let mut e = Encoder::new();
+        e.bytes(&[0xFF, 0xFE, 0x80]);
+        let frame = e.frame();
+        let mut d = Decoder::new(&frame[4..]);
+        assert!(d.str().is_err());
     }
 
     #[test]

@@ -234,6 +234,12 @@ pub struct ExperimentConfig {
     /// Replayed identically — same seed, same events — for the RL policy
     /// and every baseline, and re-armed on each episode reset.
     pub scenario: Option<ScenarioScript>,
+    /// Data-plane shards for the sharded compute backend (None = whatever
+    /// single-process backend the environment selects). Honored by
+    /// `runtime::backend_for`; `DYNAMIX_BACKEND` in the environment wins
+    /// over this field. Sharding never changes the math — the sharded
+    /// backend is bit-identical to native — only who computes which rows.
+    pub shards: Option<usize>,
 }
 
 impl Default for ExperimentConfig {
@@ -247,6 +253,7 @@ impl Default for ExperimentConfig {
             episodes: 20,
             steps_per_episode: 100,
             scenario: None,
+            shards: None,
         }
     }
 }
@@ -283,6 +290,12 @@ impl ExperimentConfig {
         anyhow::ensure!(self.rl.k >= 1, "k must be >= 1");
         anyhow::ensure!((0.0..=1.0).contains(&self.rl.gamma), "gamma outside [0,1]");
         anyhow::ensure!(self.train.max_steps >= self.rl.k, "max_steps < k");
+        if let Some(n) = self.shards {
+            anyhow::ensure!(
+                (1..=64).contains(&n),
+                "shards {n} outside [1,64] (the data plane's worker ceiling)"
+            );
+        }
         if let Some(s) = &self.scenario {
             s.validate(self.cluster.n_workers)?;
         }
@@ -324,8 +337,13 @@ impl ExperimentConfig {
             "episodes" => self.episodes,
             "steps_per_episode" => self.steps_per_episode,
         };
-        if let (Json::Obj(m), Some(s)) = (&mut j, &self.scenario) {
-            m.insert("scenario".into(), s.to_json());
+        if let Json::Obj(m) = &mut j {
+            if let Some(s) = &self.scenario {
+                m.insert("scenario".into(), s.to_json());
+            }
+            if let Some(n) = self.shards {
+                m.insert("shards".into(), Json::Num(n as f64));
+            }
         }
         j
     }
@@ -383,6 +401,7 @@ impl ExperimentConfig {
         if let Some(x) = u("episodes") { c.episodes = x; }
         if let Some(x) = u("steps_per_episode") { c.steps_per_episode = x; }
         if let Some(v) = v.get("scenario") { c.scenario = Some(ScenarioScript::from_json(v)?); }
+        if let Some(x) = u("shards") { c.shards = Some(x); }
         c.validate()?;
         Ok(c)
     }
@@ -418,6 +437,7 @@ mod tests {
         c.rl.variant = PpoVariant::Simplified;
         c.cluster.n_workers = 8;
         c.scenario = Some(ScenarioScript::by_name("spot_chaos").unwrap());
+        c.shards = Some(4);
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.train.optimizer, Optimizer::Adam);
@@ -425,9 +445,11 @@ mod tests {
         assert_eq!(c2.rl.variant, PpoVariant::Simplified);
         assert_eq!(c2.cluster.n_workers, 8);
         assert_eq!(c2.scenario, c.scenario, "scenario scripts must round-trip");
-        // No scenario key -> None (stationary default preserved).
+        assert_eq!(c2.shards, Some(4), "shard config must round-trip");
+        // No scenario/shards keys -> None (stationary defaults preserved).
         let plain = ExperimentConfig::from_json(&ExperimentConfig::default().to_json()).unwrap();
         assert!(plain.scenario.is_none());
+        assert!(plain.shards.is_none());
     }
 
     #[test]
@@ -449,6 +471,14 @@ mod tests {
         c.cluster.n_workers = 2;
         c.scenario = Some(ScenarioScript::by_name("preempt_rejoin").unwrap());
         assert!(c.validate().is_err(), "script targets worker 3 of 2");
+        // Shard counts outside the data plane's ceiling are rejected.
+        let mut c = ExperimentConfig::default();
+        c.shards = Some(0);
+        assert!(c.validate().is_err());
+        c.shards = Some(65);
+        assert!(c.validate().is_err());
+        c.shards = Some(8);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -432,4 +432,37 @@ mod tests {
         // accumulating across calls.
         assert!(r2[0].sim_time < r1[0].sim_time * 3.0);
     }
+
+    #[test]
+    fn rl_loop_runs_on_the_sharded_data_plane_through_churn() {
+        // The full arbitrator cycle — fused steps, masked RL state,
+        // policy updates — over the sharded loopback backend, with a
+        // scenario that drops and revives a worker/shard mid-episode.
+        use crate::runtime::ShardedBackend;
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        use std::sync::Arc;
+        let mut c = cfg();
+        c.scenario = Some(ScenarioScript {
+            name: "shard-churn".into(),
+            events: vec![
+                TimedEvent { at_s: 0.05, event: ScenarioEvent::PreemptWorker { worker: 1 } },
+                TimedEvent { at_s: 0.30, event: ScenarioEvent::RejoinWorker { worker: 1 } },
+            ],
+        });
+        let sharded: Backend = Arc::new(ShardedBackend::loopback_with_threads(4, 1));
+        let mut coord = Coordinator::new(c, sharded.clone()).unwrap();
+        let mut record = RunRecord::new("sharded-churn-infer");
+        let summary = coord.run_inference(4, &mut record).unwrap();
+        assert!(summary.total_iters > 0);
+        // The churn arc completed: full membership again, on both planes.
+        assert_eq!(coord.trainer.n_active(), 4);
+        assert_eq!(sharded.shard_membership(), vec![true; 4]);
+        // Record carries both the data-plane and scenario annotations.
+        let dp = record.extra.get("data_plane").expect("data_plane annotation");
+        assert_eq!(
+            dp.get("shard_count").and_then(crate::util::json::Json::as_usize),
+            Some(4)
+        );
+        assert!(record.extra.contains_key("scenario_timeline"));
+    }
 }

@@ -10,9 +10,11 @@
 //!   worker     --connect ADDR --id N — distributed worker
 //!
 //! Global flags: `--threads N` pins the native-backend kernel thread
-//! count (sets DYNAMIX_THREADS before backend init); `--scenario
-//! <path|name>` runs train-rl/infer/baseline under a scripted
-//! dynamic-environment timeline (JSON file or built-in name).
+//! count (sets DYNAMIX_THREADS before backend init); `--shards N` selects
+//! the sharded loopback data plane (DYNAMIX_BACKEND=sharded +
+//! DYNAMIX_SHARDS, bit-identical to native); `--scenario <path|name>`
+//! runs train-rl/infer/baseline under a scripted dynamic-environment
+//! timeline (JSON file or built-in name).
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); see
 //! `Args::parse`.
@@ -78,16 +80,24 @@ COMMANDS:
 
 GLOBAL FLAGS:
   --threads N     pin native-backend kernel threads (DYNAMIX_THREADS)
+  --shards N      run the sharded data plane: split every fused batch over
+                  N loopback worker shards (sets DYNAMIX_BACKEND=sharded +
+                  DYNAMIX_SHARDS; bit-identical to the native backend)
   --scenario S    scripted dynamic-environment timeline: a JSON file path
                   or a built-in name (preempt_rejoin bandwidth_collapse
                   congestion_storm load_shift spot_chaos)
+
+SERVE FLAGS:
+  --workers N --cycles C   demo/smoke sizes for the TCP leader (defaults:
+                           the preset's worker count / steps_per_episode)
 
 PRESETS: vgg11-sgd vgg11-adam resnet34-sgd scal-{8,16,32}
          transfer-{vgg16-src,vgg19-dst,resnet34-src,resnet50-dst}
          byteps-hetero ablate-*
 
-BACKEND: DYNAMIX_BACKEND=native|xla|auto (default auto: xla when built with
-         the backend-xla feature and `make artifacts` ran, else native)
+BACKEND: DYNAMIX_BACKEND=native|sharded|xla|auto (default auto: xla when
+         built with the backend-xla feature and `make artifacts` ran, else
+         native; sharded honors DYNAMIX_SHARDS, default 2)
 ";
 
 fn main() {
@@ -116,6 +126,16 @@ fn run() -> anyhow::Result<()> {
         anyhow::ensure!(n >= 1, "--threads must be >= 1");
         std::env::set_var("DYNAMIX_THREADS", t);
     }
+    // --shards N selects the sharded loopback data plane, overriding any
+    // DYNAMIX_BACKEND already in the environment (explicit flag wins).
+    if let Some(s) = args.get("shards") {
+        let n: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shards expects a positive integer, got {s:?}"))?;
+        anyhow::ensure!((1..=64).contains(&n), "--shards must be in [1,64]");
+        std::env::set_var("DYNAMIX_BACKEND", "sharded");
+        std::env::set_var("DYNAMIX_SHARDS", s);
+    }
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -137,7 +157,6 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "baseline" => {
-            let store = default_backend()?;
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
             let batch: usize = args.get_or("batch", "64").parse()?;
@@ -145,6 +164,9 @@ fn run() -> anyhow::Result<()> {
             cfg.batch.initial = batch;
             cfg.scenario = scenario_arg(&args)?;
             cfg.validate()?;
+            // The config's shard request applies when the environment
+            // didn't pick a backend (see runtime::backend_for).
+            let store = dynamix::runtime::backend_for(cfg.shards)?;
             let cycles: usize = args
                 .get_or("cycles", &format!("{}", cfg.steps_per_episode))
                 .parse()?;
@@ -169,7 +191,21 @@ fn run() -> anyhow::Result<()> {
             let bind = args.get_or("bind", "127.0.0.1:7077");
             let preset = args.get_or("preset", "vgg11-sgd");
             let scale = Scale::parse(&args.get_or("scale", "quick"))?;
-            dynamix::comm::leader::serve(&bind, &preset, scale)
+            match (args.get("workers"), args.get("cycles")) {
+                (None, None) => dynamix::comm::leader::serve(&bind, &preset, scale),
+                (w, c) => {
+                    let cfg = presets::scaled(presets::by_name(&preset)?, scale);
+                    let workers: usize = match w {
+                        Some(v) => v.parse()?,
+                        None => cfg.cluster.n_workers,
+                    };
+                    let cycles: usize = match c {
+                        Some(v) => v.parse()?,
+                        None => cfg.steps_per_episode,
+                    };
+                    dynamix::comm::leader::serve_n(&bind, &preset, scale, workers, cycles)
+                }
+            }
         }
         "worker" => {
             let addr = args.get_or("connect", "127.0.0.1:7077");
@@ -199,7 +235,7 @@ fn info() -> anyhow::Result<()> {
             info.family, info.depth, info.param_count, info.dataset
         );
     }
-    println!("  (select with DYNAMIX_BACKEND=native|xla|auto)");
+    println!("  (select with DYNAMIX_BACKEND=native|sharded|xla|auto; sharded honors DYNAMIX_SHARDS)");
     Ok(())
 }
 

@@ -232,6 +232,28 @@ pub trait ComputeBackend: Send + Sync {
     fn compile_log(&self) -> Vec<(String, f64)> {
         Vec::new()
     }
+
+    // --- data-plane sharding (no-ops for single-process backends) ---
+
+    /// Number of data-plane shards a fused batch fans out across (1 for
+    /// single-process backends).
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    /// Active-shard mask, length [`ComputeBackend::shard_count`]. Inactive
+    /// shards hold no rows; their samples redistribute across survivors.
+    fn shard_membership(&self) -> Vec<bool> {
+        vec![true; self.shard_count()]
+    }
+
+    /// Mark one shard active/inactive; row assignment rebalances from the
+    /// next step on. Returns false when unsupported, out of range, a
+    /// no-op, or refused (the last active shard can never be dropped) —
+    /// membership changes never change the math, only who computes what.
+    fn set_shard_active(&self, _shard: usize, _active: bool) -> bool {
+        false
+    }
 }
 
 /// Shared handle to a backend.
@@ -243,8 +265,18 @@ pub fn native_backend() -> Backend {
     Arc::new(super::native::NativeBackend::new())
 }
 
-/// Select a backend from `DYNAMIX_BACKEND` (`native` | `xla` | `auto`).
+/// A sharded loopback data plane over `n` in-process worker shards (see
+/// [`crate::runtime::sharded::ShardedBackend`]). Bit-identical to the
+/// native backend on every fused batch.
+pub fn sharded_backend(n: usize) -> Backend {
+    Arc::new(super::sharded::ShardedBackend::loopback(n))
+}
+
+/// Select a backend from `DYNAMIX_BACKEND` (`native` | `sharded` | `xla` |
+/// `auto`).
 ///
+/// `sharded` splits every fused batch across `DYNAMIX_SHARDS` (default 2)
+/// loopback worker shards with a chained deterministic gradient reduction.
 /// `auto` (or unset): the XLA backend when it is compiled in *and* the
 /// artifacts directory exists; the native backend otherwise — so a fresh
 /// clone works with zero setup and `make artifacts` upgrades in place.
@@ -252,6 +284,14 @@ pub fn default_backend() -> anyhow::Result<Backend> {
     let choice = std::env::var("DYNAMIX_BACKEND").unwrap_or_default();
     match choice.as_str() {
         "native" => Ok(native_backend()),
+        "sharded" => {
+            let n = std::env::var("DYNAMIX_SHARDS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(2);
+            Ok(sharded_backend(n))
+        }
         "xla" => open_xla(),
         "" | "auto" => {
             if cfg!(feature = "backend-xla") && artifacts_present() {
@@ -260,8 +300,20 @@ pub fn default_backend() -> anyhow::Result<Backend> {
                 Ok(native_backend())
             }
         }
-        other => anyhow::bail!("unknown DYNAMIX_BACKEND {other:?} (native|xla|auto)"),
+        other => anyhow::bail!("unknown DYNAMIX_BACKEND {other:?} (native|sharded|xla|auto)"),
     }
+}
+
+/// Backend honoring an explicit shard request from config/CLI: when
+/// `DYNAMIX_BACKEND` is unset and `shards` is `Some(n)`, a loopback
+/// sharded data plane; otherwise the environment selection wins.
+pub fn backend_for(shards: Option<usize>) -> anyhow::Result<Backend> {
+    if std::env::var("DYNAMIX_BACKEND").unwrap_or_default().is_empty() {
+        if let Some(n) = shards {
+            return Ok(sharded_backend(n));
+        }
+    }
+    default_backend()
 }
 
 fn artifacts_present() -> bool {

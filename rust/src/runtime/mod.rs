@@ -2,32 +2,38 @@
 //!
 //! Everything above this module (RL agent, BSP trainer, baselines, harness)
 //! talks to a `Backend` (`Arc<dyn ComputeBackend>`) and never to a concrete
-//! runtime. Two backends exist:
+//! runtime. Three backends exist:
 //!
 //! * **native** (default) — pure-Rust MLP forward/backward, PPO losses and
 //!   optimizers mirroring `python/compile/` (`kernels/ref.py` semantics).
 //!   Self-contained: no artifacts, no Python, no external deps.
+//! * **sharded** — data-parallel data plane over the native kernels: the
+//!   fused batch splits across `DYNAMIX_SHARDS` worker shards (loopback
+//!   threads in-process, or framed sockets) with a chained deterministic
+//!   gradient reduction that is bit-identical to the native backend.
 //! * **xla** (`backend-xla` feature) — the original PJRT path: AOT HLO
 //!   artifacts produced by `make artifacts`, lazily compiled and cached by
 //!   `ArtifactStore`. Requires the `xla` crate (see rust/Cargo.toml).
 //!
-//! Selection: `DYNAMIX_BACKEND=native|xla|auto` (default `auto`: xla when
-//! compiled in *and* artifacts are present, otherwise native).
+//! Selection: `DYNAMIX_BACKEND=native|sharded|xla|auto` (default `auto`:
+//! xla when compiled in *and* artifacts are present, otherwise native).
 
 pub mod backend;
 pub mod manifest;
 pub mod native;
+pub mod sharded;
 #[cfg(feature = "backend-xla")]
 mod store;
 #[cfg(feature = "backend-xla")]
 mod xla_backend;
 
 pub use backend::{
-    default_backend, native_backend, Backend, ComputeBackend, OptState, PolicyOut, PpoHyper,
-    PpoMinibatch, PpoStats, Schema, TrainOut,
+    backend_for, default_backend, native_backend, sharded_backend, Backend, ComputeBackend,
+    OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
 };
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelInfo};
 pub use native::NativeBackend;
+pub use sharded::ShardedBackend;
 #[cfg(feature = "backend-xla")]
 pub use store::{ArtifactStore, Outputs};
 #[cfg(feature = "backend-xla")]

@@ -20,9 +20,9 @@ use crate::runtime::backend::{
 };
 use crate::runtime::manifest::ModelInfo;
 use exec::Pool;
-use model::{apply_adam, apply_sgd, masked_ce_loss_ws, normalized_grad_stats, ModelDef};
+use model::{apply_adam, apply_sgd, masked_ce_loss_ws, masked_ce_rows, normalized_grad_stats, ModelDef};
 use std::collections::BTreeMap;
-use workspace::WorkspacePool;
+use workspace::{Workspace, WorkspacePool};
 
 /// Batch-bucket ladder, mirroring `compile/aot.py::BUCKETS`.
 pub const BUCKETS: [usize; 19] = [
@@ -117,6 +117,107 @@ impl NativeBackend {
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))
     }
+
+    /// Forward half of one shard step: forward + per-row loss pieces for
+    /// `m = mask.len()` rows that form a contiguous slice of a fused batch
+    /// whose global mask sum is `denom`. Row counts are unconstrained (no
+    /// bucket ladder) — a shard may hold a single sample, or none. The
+    /// returned [`ShardCtx`] retains the activations and loss gradient for
+    /// [`NativeBackend::shard_backward_acc`].
+    pub fn shard_forward(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: Vec<f32>,
+        y: &[i32],
+        mask: &[f32],
+        denom: f32,
+    ) -> anyhow::Result<(ShardCtx, ShardFwdOut)> {
+        let def = self.def(model)?;
+        let m = mask.len();
+        anyhow::ensure!(
+            params.len() == def.param_count(),
+            "params len {} != {}",
+            params.len(),
+            def.param_count()
+        );
+        anyhow::ensure!(
+            x.len() == m * def.feature_dim && y.len() == m,
+            "shard rows mismatch: x {} y {} for m {m}",
+            x.len(),
+            y.len()
+        );
+        anyhow::ensure!(denom >= 1.0, "denom {denom} must be >= 1");
+        ensure_labels_in_range(model, y, def.classes)?;
+        let mut ws = self.ws.take();
+        def.forward_ws(&self.pool, params, &x, m, &mut ws);
+        let mut out = ShardFwdOut { loss_terms: Vec::new(), correct: Vec::new() };
+        masked_ce_rows(
+            &ws.logits,
+            y,
+            mask,
+            m,
+            def.classes,
+            denom,
+            &mut ws.logp,
+            &mut out.loss_terms,
+            &mut out.correct,
+            &mut ws.dlogits,
+        );
+        Ok((
+            ShardCtx { ws, x, m, model: model.to_string() },
+            out,
+        ))
+    }
+
+    /// Backward half of a shard step: folds this shard's rows into `grad`
+    /// — the traveling accumulator of the chained reduction — strictly in
+    /// row order. When `grad` is the running partial of all earlier rows,
+    /// the result is bit-identical to the fused backward over those rows
+    /// plus this shard's (see [`ModelDef::backward_acc_ws`]).
+    pub fn shard_backward_acc(
+        &self,
+        params: &[f32],
+        mut ctx: ShardCtx,
+        grad: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let def = self.def(&ctx.model)?;
+        anyhow::ensure!(
+            grad.len() == def.param_count(),
+            "grad len {} != {}",
+            grad.len(),
+            def.param_count()
+        );
+        anyhow::ensure!(params.len() == def.param_count(), "params len mismatch");
+        std::mem::swap(&mut ctx.ws.grad, grad);
+        def.backward_acc_ws(&self.pool, params, &ctx.x, ctx.m, &mut ctx.ws);
+        std::mem::swap(&mut ctx.ws.grad, grad);
+        self.ws.put(ctx.ws);
+        Ok(())
+    }
+
+    /// Return a forward-only shard step's workspace to the pool (eval
+    /// steps have no backward half).
+    pub fn shard_discard(&self, ctx: ShardCtx) {
+        self.ws.put(ctx.ws);
+    }
+}
+
+/// One shard's in-flight train step: forward activations, loss gradient
+/// and input rows retained between [`NativeBackend::shard_forward`] and
+/// [`NativeBackend::shard_backward_acc`].
+pub struct ShardCtx {
+    ws: Workspace,
+    x: Vec<f32>,
+    m: usize,
+    model: String,
+}
+
+/// Per-row outputs of one shard's forward half: loss terms and masked
+/// correctness for this shard's rows, in row order.
+pub struct ShardFwdOut {
+    pub loss_terms: Vec<f32>,
+    pub correct: Vec<f32>,
 }
 
 /// Fail loudly (with model + offending value) on out-of-range labels
@@ -228,6 +329,7 @@ impl ComputeBackend for NativeBackend {
             bucket,
             def.classes,
             &mut ws.logp,
+            &mut ws.loss_terms,
             &mut ws.correct,
             &mut ws.dlogits,
         );
@@ -270,6 +372,7 @@ impl ComputeBackend for NativeBackend {
             m,
             def.classes,
             &mut ws.logp,
+            &mut ws.loss_terms,
             &mut ws.correct,
             &mut ws.dlogits,
         );

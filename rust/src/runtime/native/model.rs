@@ -255,10 +255,22 @@ impl ModelDef {
 
     /// Backward pass from `ws.dlogits` through the activations cached by
     /// [`Self::forward_ws`], accumulating the flat parameter gradient into
-    /// `ws.grad`. Clobbers `ws.dh`/`ws.du`/`ws.dtmp`.
+    /// `ws.grad` (zeroed first). Clobbers `ws.dh`/`ws.du`/`ws.dtmp`.
     pub fn backward_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
         ws.grad.clear();
         ws.grad.resize(self.param_count(), 0.0);
+        self.backward_acc_ws(pool, p, x, m, ws);
+    }
+
+    /// [`Self::backward_ws`] without the gradient zeroing: folds this
+    /// batch's per-sample contributions INTO the existing `ws.grad`
+    /// accumulator. The batch-dim reductions (`matmul_at`, `col_sums`) are
+    /// strictly sequential over rows per output element, so chaining
+    /// contiguous row slices through this entry point in row order
+    /// reproduces the fused backward **bit for bit** — the sharded data
+    /// plane's correctness oracle hinges on exactly this property.
+    pub fn backward_acc_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
+        debug_assert_eq!(ws.grad.len(), self.param_count());
         match self.family {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
@@ -340,13 +352,20 @@ pub struct LossOut {
 }
 
 pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usize) -> LossOut {
-    let (mut logp, mut correct, mut dlogits) = (Vec::new(), Vec::new(), Vec::new());
-    let (loss, acc) =
-        masked_ce_loss_ws(logits, y, mask, m, n, &mut logp, &mut correct, &mut dlogits);
+    let (mut logp, mut loss_terms, mut correct, mut dlogits) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let (loss, acc) = masked_ce_loss_ws(
+        logits, y, mask, m, n, &mut logp, &mut loss_terms, &mut correct, &mut dlogits,
+    );
     LossOut { loss, acc, correct, dlogits }
 }
 
 /// [`masked_ce_loss`] into reused workspace buffers; returns (loss, acc).
+///
+/// Implemented as the per-row kernel ([`masked_ce_rows`]) followed by the
+/// row-order fold ([`fold_masked_ce`]) — exactly the decomposition the
+/// sharded data plane replays across workers, so fused and sharded
+/// execution share one source of truth (and stay bit-identical).
 #[allow(clippy::too_many_arguments)]
 pub fn masked_ce_loss_ws(
     logits: &[f32],
@@ -355,24 +374,49 @@ pub fn masked_ce_loss_ws(
     m: usize,
     n: usize,
     logp: &mut Vec<f32>,
+    loss_terms: &mut Vec<f32>,
     correct: &mut Vec<f32>,
     dlogits: &mut Vec<f32>,
 ) -> (f32, f32) {
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+    masked_ce_rows(logits, y, mask, m, n, denom, logp, loss_terms, correct, dlogits);
+    fold_masked_ce(loss_terms, correct, denom)
+}
+
+/// Per-row masked-CE pieces for `m` rows that may be a contiguous slice of
+/// a larger fused batch: row-wise log-softmax, per-row loss terms
+/// (`-logp[y_i] * mask_i`), per-row masked correctness, and `dlogits`
+/// scaled by the **global** `denom` (the fused batch's mask sum, not this
+/// slice's). Every output is a pure function of its own row, so a shard
+/// computing its rows in isolation produces bit-identical values to the
+/// fused computation over the whole batch.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_ce_rows(
+    logits: &[f32],
+    y: &[i32],
+    mask: &[f32],
+    m: usize,
+    n: usize,
+    denom: f32,
+    logp: &mut Vec<f32>,
+    loss_terms: &mut Vec<f32>,
+    correct: &mut Vec<f32>,
+    dlogits: &mut Vec<f32>,
+) {
     logp.clear();
     logp.resize(m * n, 0.0);
     log_softmax(logits, m, n, logp);
-    let mut loss = 0.0f64;
+    loss_terms.clear();
+    loss_terms.resize(m, 0.0);
     correct.clear();
     correct.resize(m, 0.0);
-    let mut acc = 0.0f64;
     dlogits.clear();
     dlogits.resize(m * n, 0.0);
     for i in 0..m {
         let yi = y[i] as usize;
         debug_assert!(yi < n, "label {yi} out of range {n}");
         let lrow = &logp[i * n..(i + 1) * n];
-        loss += (-lrow[yi] * mask[i]) as f64;
+        loss_terms[i] = -lrow[yi] * mask[i];
         // argmax (first max wins, matching jnp.argmax).
         let mut best = 0;
         for j in 1..n {
@@ -382,7 +426,6 @@ pub fn masked_ce_loss_ws(
         }
         if best == yi {
             correct[i] = mask[i];
-            acc += mask[i] as f64;
         }
         let scale = mask[i] / denom;
         if scale != 0.0 {
@@ -393,10 +436,36 @@ pub fn masked_ce_loss_ws(
             drow[yi] -= scale;
         }
     }
+}
+
+/// Fold per-row loss terms and correctness into `(loss, acc)`: sequential
+/// f64 sums in row order, divided by `denom`. Chaining
+/// [`fold_masked_ce_partial`] over contiguous row slices in order yields
+/// the identical accumulator sequence, which is how the sharded leader
+/// reconstructs the fused loss bit for bit.
+pub fn fold_masked_ce(loss_terms: &[f32], correct: &[f32], denom: f32) -> (f32, f32) {
+    let (mut loss, mut acc) = (0.0f64, 0.0f64);
+    fold_masked_ce_partial(loss_terms, correct, &mut loss, &mut acc);
     (
         (loss / denom as f64) as f32,
         (acc / denom as f64) as f32,
     )
+}
+
+/// Accumulate one row slice's loss terms / correctness into the running
+/// f64 sums (strictly in row order).
+pub fn fold_masked_ce_partial(
+    loss_terms: &[f32],
+    correct: &[f32],
+    loss_sum: &mut f64,
+    acc_sum: &mut f64,
+) {
+    for &t in loss_terms {
+        *loss_sum += t as f64;
+    }
+    for &c in correct {
+        *acc_sum += c as f64;
+    }
 }
 
 /// The paper's §IV-B gradient-normalization statistics, exactly as
@@ -657,6 +726,96 @@ mod tests {
                 g[idx]
             );
         }
+    }
+
+    #[test]
+    fn chained_backward_over_row_slices_is_bitwise_exact() {
+        // The sharded data plane's core invariant: folding contiguous row
+        // slices into a traveling gradient accumulator (in row order)
+        // yields exactly the fused backward's bits, for ANY split — the
+        // batch-dim reductions are sequential per output element.
+        use super::super::exec::Pool;
+        use super::super::workspace::Workspace;
+        for name in ["vgg11_mini", "resnet34_mini"] {
+            let m = def(name);
+            let p = m.init(4);
+            let mut rng = crate::util::rng::Rng::new(21);
+            let rows = 11usize;
+            let x: Vec<f32> = (0..rows * m.feature_dim).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..rows).map(|_| rng.below(m.classes) as i32).collect();
+            let mask = vec![1.0f32; rows];
+            let denom = rows as f32;
+
+            let fused = {
+                let acts = m.forward(&p, &x, rows);
+                let lo = masked_ce_loss(&acts.logits, &y, &mask, rows, m.classes);
+                m.backward(&p, &acts, &x, &lo.dlogits, rows)
+            };
+
+            for splits in [vec![11], vec![4, 7], vec![1, 1, 9], vec![3, 3, 3, 2]] {
+                assert_eq!(splits.iter().sum::<usize>(), rows);
+                let pool = Pool::sequential();
+                let mut grad = vec![0.0f32; m.param_count()];
+                let mut at = 0usize;
+                for &c in &splits {
+                    let (lo, hi) = (at, at + c);
+                    at = hi;
+                    let xs = &x[lo * m.feature_dim..hi * m.feature_dim];
+                    let mut ws = Workspace::default();
+                    m.forward_ws(&pool, &p, xs, c, &mut ws);
+                    let (mut lt, mut cor) = (Vec::new(), Vec::new());
+                    let logits = std::mem::take(&mut ws.logits);
+                    let (mut lp, mut dl) = (Vec::new(), Vec::new());
+                    masked_ce_rows(
+                        &logits, &y[lo..hi], &mask[lo..hi], c, m.classes, denom,
+                        &mut lp, &mut lt, &mut cor, &mut dl,
+                    );
+                    ws.logits = logits;
+                    ws.dlogits = dl;
+                    std::mem::swap(&mut ws.grad, &mut grad);
+                    m.backward_acc_ws(&pool, &p, xs, c, &mut ws);
+                    std::mem::swap(&mut ws.grad, &mut grad);
+                }
+                for (i, (a, b)) in grad.iter().zip(&fused).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{name} splits {splits:?}: grad[{i}] {a} != fused {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_plus_fold_equals_fused_loss() {
+        let m = def("vgg11_mini");
+        let p = m.init(2);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let rows = 9usize;
+        let x: Vec<f32> = (0..rows * m.feature_dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..rows).map(|_| rng.below(10) as i32).collect();
+        let mut mask = vec![1.0f32; rows];
+        mask[rows - 1] = 0.0; // one padded row
+        let acts = m.forward(&p, &x, rows);
+        let fused = masked_ce_loss(&acts.logits, &y, &mask, rows, m.classes);
+        // Shard the rows 4|5 and fold partials in order.
+        let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+        let (mut lsum, mut asum) = (0.0f64, 0.0f64);
+        for (lo, hi) in [(0usize, 4usize), (4, 9)] {
+            let xs = &x[lo * m.feature_dim..hi * m.feature_dim];
+            let acts_s = m.forward(&p, xs, hi - lo);
+            let (mut lp, mut lt, mut cor, mut dl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            masked_ce_rows(
+                &acts_s.logits, &y[lo..hi], &mask[lo..hi], hi - lo, m.classes, denom,
+                &mut lp, &mut lt, &mut cor, &mut dl,
+            );
+            fold_masked_ce_partial(&lt, &cor, &mut lsum, &mut asum);
+        }
+        let loss = (lsum / denom as f64) as f32;
+        let acc = (asum / denom as f64) as f32;
+        assert_eq!(loss.to_bits(), fused.loss.to_bits(), "{loss} vs {}", fused.loss);
+        assert_eq!(acc.to_bits(), fused.acc.to_bits());
     }
 
     #[test]

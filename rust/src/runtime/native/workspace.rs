@@ -28,6 +28,8 @@ pub struct Workspace {
     pub logp: Vec<f32>,
     pub dlogits: Vec<f32>,
     pub correct: Vec<f32>,
+    /// Per-row loss terms (`-logp[y]*mask`) feeding the row-order fold.
+    pub loss_terms: Vec<f32>,
     pub grad: Vec<f32>,
     /// Backward row-gradient buffer (ping-ponged with `dtmp`).
     pub dh: Vec<f32>,
@@ -68,6 +70,7 @@ impl Workspace {
             &self.logp,
             &self.dlogits,
             &self.correct,
+            &self.loss_terms,
             &self.grad,
             &self.dh,
             &self.du,

@@ -1,0 +1,491 @@
+//! Sharded data-parallel [`ComputeBackend`]: the fused batch split across
+//! N worker shards, with a **bit-exact** gradient all-reduce.
+//!
+//! ## Why the result is bit-identical to the native backend
+//!
+//! The native kernels have two properties the data plane exploits:
+//!
+//! 1. **Per-row forward independence** — every forward/loss/delta quantity
+//!    of row `i` is a pure function of row `i` (the kernels' reduction
+//!    association over the feature dims is fixed and never depends on the
+//!    batch size), so a shard computing only its contiguous row slice
+//!    reproduces the fused batch's per-row values bit for bit.
+//! 2. **Sequential batch-dim reductions** — the weight/bias gradient
+//!    kernels (`matmul_at`, `col_sums`) fold rows into the accumulator
+//!    strictly in row order, per output element. Seeding shard `s`'s
+//!    backward with shard `s-1`'s accumulated gradient therefore replays
+//!    the fused fold exactly: the "all-reduce" is a chained deterministic
+//!    reduction (a sequential ring pass), not an order-free partial sum.
+//!
+//! Scalar outputs (loss/acc) decompose the same way: shards return per-row
+//! loss terms, and the leader folds them in row order with the same f64
+//! accumulator sequence the fused loss uses (`fold_masked_ce_partial`).
+//! The optimizer then applies leader-side to the identical gradient bits.
+//! Net effect: `ShardedBackend::train_step` == `NativeBackend::train_step`
+//! down to the last bit, for every shard count, every row split, and every
+//! kernel thread count — `tests/sharded_parity.rs` is the oracle.
+//!
+//! ## Elastic membership
+//!
+//! [`ComputeBackend::set_shard_active`] drops/revives shards; a dropped
+//! shard's rows redistribute across survivors (via the same
+//! `sim::elastic` helper the BSP trainer uses for worker churn), and since
+//! any contiguous partition is exact, preemption mid-run never perturbs
+//! the math — only who computes which rows.
+
+pub mod transport;
+pub mod worker;
+
+use crate::comm::ShardRows;
+use crate::config::{Optimizer, PpoVariant};
+use crate::runtime::backend::{
+    ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
+};
+use crate::runtime::native::model::{
+    apply_adam, apply_sgd, fold_masked_ce_partial, normalized_grad_stats,
+};
+use crate::runtime::native::NativeBackend;
+use crate::sim::elastic;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use transport::{loopback_pair, ShardMsg, ShardTransport};
+
+/// Contiguous row ranges of a `bucket`-row fused batch, one per shard (in
+/// shard order; inactive shards get empty ranges). Base assignment is
+/// balanced (first `bucket % n` shards take one extra row); each inactive
+/// shard's quota then folds onto the survivors through the exact
+/// redistribution rule the elastic trainer applies to worker batches.
+pub fn plan_rows(bucket: usize, active: &[bool]) -> Vec<Range<usize>> {
+    let n = active.len();
+    let mut counts: Vec<usize> = (0..n)
+        .map(|s| bucket / n + usize::from(s < bucket % n))
+        .collect();
+    let caps = vec![bucket; n];
+    for s in 0..n {
+        if !active[s] && counts[s] > 0 {
+            elastic::redistribute_freed(counts[s], &mut counts, active, &caps, bucket);
+            counts[s] = 0;
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0usize;
+    for s in 0..n {
+        let c = if active[s] { counts[s] } else { 0 };
+        out.push(at..at + c);
+        at += c;
+    }
+    debug_assert!(
+        at == bucket || !active.iter().any(|&a| a),
+        "row plan dropped rows: {at} != {bucket}"
+    );
+    out
+}
+
+/// Receive the next reply for step `seq` from one shard, skipping stale
+/// replies left over from an earlier step that errored mid-protocol (an
+/// aborted step can leave an unread `Fwd`/`Err` in the channel; dropping
+/// them keeps the data plane usable after a failed call). A shard-side
+/// [`ShardMsg::Err`] for the CURRENT step surfaces as this step's error.
+fn recv_reply(
+    link: &mut Box<dyn ShardTransport>,
+    shard: usize,
+    seq: u64,
+) -> anyhow::Result<ShardMsg> {
+    loop {
+        let msg = link.recv()?;
+        let mseq = msg.seq();
+        match msg {
+            ShardMsg::Fwd { .. } | ShardMsg::GradOut { .. } | ShardMsg::Err { .. }
+                if mseq < seq =>
+            {
+                continue; // stale reply from an aborted step
+            }
+            ShardMsg::Err { msg, .. } => anyhow::bail!("shard {shard}: {msg}"),
+            other => return Ok(other),
+        }
+    }
+}
+
+/// The sharded data plane. One leader (the caller's thread) plus N shard
+/// workers behind [`ShardTransport`]s — in-process loopback threads by
+/// default, or any framed-socket peers via
+/// [`ShardedBackend::over_transports`].
+pub struct ShardedBackend {
+    inner: Arc<NativeBackend>,
+    links: Mutex<Vec<Box<dyn ShardTransport>>>,
+    active: Mutex<Vec<bool>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    seq: AtomicU64,
+    n: usize,
+}
+
+impl ShardedBackend {
+    /// Loopback data plane: `n` shard worker threads over in-process
+    /// channels, kernels at the `DYNAMIX_THREADS` pool.
+    pub fn loopback(n: usize) -> Self {
+        Self::build(Arc::new(NativeBackend::new()), n)
+    }
+
+    /// Loopback with a pinned kernel thread count (tests pin both axes —
+    /// shard count and thread count — without touching the process env).
+    pub fn loopback_with_threads(n: usize, threads: usize) -> Self {
+        Self::build(Arc::new(NativeBackend::with_threads(threads)), n)
+    }
+
+    fn build(inner: Arc<NativeBackend>, n: usize) -> Self {
+        let n = n.clamp(1, 64);
+        let mut links: Vec<Box<dyn ShardTransport>> = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for s in 0..n {
+            let (leader_end, shard_end) = loopback_pair();
+            let backend = inner.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dynamix-shard-{s}"))
+                    .spawn(move || {
+                        // Errors surface leader-side as closed channels.
+                        let _ = worker::serve(shard_end, backend);
+                    })
+                    .expect("spawn shard worker thread"),
+            );
+            links.push(Box::new(leader_end));
+        }
+        ShardedBackend {
+            inner,
+            n,
+            links: Mutex::new(links),
+            active: Mutex::new(vec![true; n]),
+            handles: Mutex::new(handles),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Data plane over caller-supplied transports (e.g. TCP shard servers
+    /// accepted elsewhere). The caller owns the server lifetimes.
+    pub fn over_transports(
+        inner: Arc<NativeBackend>,
+        links: Vec<Box<dyn ShardTransport>>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!links.is_empty(), "sharded backend needs at least one transport");
+        let n = links.len();
+        Ok(ShardedBackend {
+            inner,
+            n,
+            links: Mutex::new(links),
+            active: Mutex::new(vec![true; n]),
+            handles: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    /// The wrapped single-process backend (schema + policy ops source).
+    pub fn inner(&self) -> &Arc<NativeBackend> {
+        &self.inner
+    }
+
+    /// Scatter rows + gather per-row loss pieces; optionally ring-reduce
+    /// the gradient. Returns `(loss_sum, acc_sum, denom, grad)` — `denom`
+    /// is the fused mask sum the f64 sums divide by, `grad` is `Some` only
+    /// for train steps. Appends per-row correctness to `correct_out` in
+    /// row order when provided.
+    #[allow(clippy::too_many_arguments)]
+    fn exchange(
+        &self,
+        model: &str,
+        params: &[f32],
+        param_count: usize,
+        feature_dim: usize,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        train: bool,
+        mut correct_out: Option<&mut Vec<f32>>,
+    ) -> anyhow::Result<(f64, f64, f32, Option<Vec<f32>>)> {
+        let m = mask.len();
+        anyhow::ensure!(x.len() == m * feature_dim, "x wrong size");
+        anyhow::ensure!(y.len() == m, "y wrong size");
+        // Same fold as the fused loss's denominator — identical bits.
+        let denom = mask.iter().sum::<f32>().max(1.0);
+        let active = self.active.lock().unwrap().clone();
+        anyhow::ensure!(active.iter().any(|&a| a), "no active shards");
+        let plan = plan_rows(m, &active);
+        let params = Arc::new(params.to_vec());
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut links = self.links.lock().unwrap();
+
+        // Phase A: scatter; engaged shards run forward concurrently.
+        let mut engaged: Vec<usize> = Vec::with_capacity(self.n);
+        for (s, r) in plan.iter().enumerate() {
+            if r.is_empty() {
+                continue;
+            }
+            links[s].send(ShardMsg::Step {
+                seq,
+                denom,
+                train,
+                rows: Some(ShardRows {
+                    model: model.to_string(),
+                    x: x[r.start * feature_dim..r.end * feature_dim].to_vec(),
+                    y: y[r.clone()].to_vec(),
+                    mask: mask[r.clone()].to_vec(),
+                }),
+                params: Some(params.clone()),
+            })?;
+            engaged.push(s);
+        }
+
+        // Gather: shard order == row order, so the f64 loss/acc folds see
+        // exactly the fused accumulator sequence.
+        let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+        for &s in &engaged {
+            match recv_reply(&mut links[s], s, seq)? {
+                ShardMsg::Fwd { seq: rs, loss_terms, correct } => {
+                    anyhow::ensure!(rs == seq, "shard {s}: Fwd seq {rs} != {seq}");
+                    fold_masked_ce_partial(&loss_terms, &correct, &mut loss_sum, &mut acc_sum);
+                    if let Some(out) = correct_out.as_mut() {
+                        out.extend_from_slice(&correct);
+                    }
+                }
+                other => anyhow::bail!("shard {s}: expected Fwd, got {other:?}"),
+            }
+        }
+
+        // Phase B: the chained deterministic reduction — the accumulator
+        // visits engaged shards in row order; each folds its rows in.
+        let grad = if train {
+            let mut grad = vec![0.0f32; param_count];
+            for &s in &engaged {
+                links[s].send(ShardMsg::GradSeed { seq, grad })?;
+                grad = match recv_reply(&mut links[s], s, seq)? {
+                    ShardMsg::GradOut { seq: rs, grad } => {
+                        anyhow::ensure!(rs == seq, "shard {s}: GradOut seq {rs} != {seq}");
+                        grad
+                    }
+                    other => anyhow::bail!("shard {s}: expected GradOut, got {other:?}"),
+                };
+            }
+            Some(grad)
+        } else {
+            None
+        };
+        Ok((loss_sum, acc_sum, denom, grad))
+    }
+}
+
+impl Drop for ShardedBackend {
+    fn drop(&mut self) {
+        if let Ok(mut links) = self.links.lock() {
+            for l in links.iter_mut() {
+                let _ = l.send(ShardMsg::Shutdown);
+            }
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl ComputeBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn schema(&self) -> &Schema {
+        self.inner.schema()
+    }
+
+    fn init_params(&self, model: &str, seed: u64) -> anyhow::Result<Vec<f32>> {
+        self.inner.init_params(model, seed)
+    }
+
+    fn init_policy(&self, seed: u64) -> anyhow::Result<Vec<f32>> {
+        self.inner.init_policy(seed)
+    }
+
+    // The PPO arbitrator is centralized in the paper's architecture;
+    // policy math stays leader-local on the inner backend.
+    fn policy_forward(&self, theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut> {
+        self.inner.policy_forward(theta, states)
+    }
+
+    fn policy_update(
+        &self,
+        variant: PpoVariant,
+        opt: &mut OptState,
+        mb: &PpoMinibatch,
+        hp: PpoHyper,
+    ) -> anyhow::Result<PpoStats> {
+        self.inner.policy_update(variant, opt, mb, hp)
+    }
+
+    fn train_step(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut> {
+        let mut out = TrainOut::default();
+        self.train_step_into(model, optimizer, bucket, state, x, y, mask, lr, &mut out)?;
+        Ok(out)
+    }
+
+    fn train_step_into(
+        &self,
+        model: &str,
+        optimizer: Optimizer,
+        bucket: usize,
+        state: &mut OptState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        out: &mut TrainOut,
+    ) -> anyhow::Result<()> {
+        let info = self.inner.schema().model(model)?.clone();
+        anyhow::ensure!(
+            state.params.len() == info.param_count,
+            "params len {} != {}",
+            state.params.len(),
+            info.param_count
+        );
+        anyhow::ensure!(
+            self.inner.schema().buckets.contains(&bucket),
+            "bucket {bucket} not on the ladder"
+        );
+        anyhow::ensure!(mask.len() == bucket, "mask wrong size");
+        out.correct.clear();
+        let (loss_sum, acc_sum, denom, grad) = self.exchange(
+            model,
+            &state.params,
+            info.param_count,
+            info.feature_dim,
+            x,
+            y,
+            mask,
+            true,
+            Some(&mut out.correct),
+        )?;
+        let grad = grad.expect("train exchange returns a gradient");
+        let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
+        match optimizer {
+            Optimizer::Sgd => apply_sgd(state, &grad, lr),
+            Optimizer::Adam => apply_adam(state, &grad, lr),
+        }
+        out.loss = (loss_sum / denom as f64) as f32;
+        out.acc = (acc_sum / denom as f64) as f32;
+        out.sigma_norm = sigma_norm;
+        out.sigma_norm2 = sigma_norm2;
+        out.grad_l2 = grad_l2;
+        Ok(())
+    }
+
+    fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> anyhow::Result<(f32, f32)> {
+        let info = self.inner.schema().model(model)?.clone();
+        anyhow::ensure!(params.len() == info.param_count, "params len mismatch");
+        let (loss_sum, acc_sum, denom, _) = self.exchange(
+            model,
+            params,
+            info.param_count,
+            info.feature_dim,
+            x,
+            y,
+            mask,
+            false,
+            None,
+        )?;
+        Ok((
+            (loss_sum / denom as f64) as f32,
+            (acc_sum / denom as f64) as f32,
+        ))
+    }
+
+    fn shard_count(&self) -> usize {
+        self.n
+    }
+
+    fn shard_membership(&self) -> Vec<bool> {
+        self.active.lock().unwrap().clone()
+    }
+
+    fn set_shard_active(&self, shard: usize, active: bool) -> bool {
+        let mut m = self.active.lock().unwrap();
+        if shard >= m.len() || m[shard] == active {
+            return false;
+        }
+        if !active && m.iter().filter(|&&a| a).count() <= 1 {
+            return false; // never empty the data plane
+        }
+        m[shard] = active;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_bucket_with_balanced_contiguous_ranges() {
+        for (bucket, n) in [(32usize, 1usize), (32, 2), (103, 4), (5, 7), (64, 7)] {
+            let plan = plan_rows(bucket, &vec![true; n]);
+            assert_eq!(plan.len(), n);
+            let mut at = 0;
+            for r in &plan {
+                assert_eq!(r.start, at, "ranges must be contiguous in order");
+                at = r.end;
+            }
+            assert_eq!(at, bucket);
+            let sizes: Vec<usize> = plan.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "unbalanced plan {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn plan_redistributes_inactive_shard_rows_to_survivors() {
+        let mut active = vec![true; 4];
+        active[1] = false;
+        let plan = plan_rows(103, &active);
+        assert!(plan[1].is_empty());
+        assert_eq!(plan.iter().map(|r| r.len()).sum::<usize>(), 103);
+        // Survivors absorbed the dropped quota.
+        assert!(plan[0].len() + plan[2].len() + plan[3].len() == 103);
+        let mut at = 0;
+        for r in &plan {
+            assert_eq!(r.start, at);
+            at = r.end;
+        }
+    }
+
+    #[test]
+    fn membership_guards_hold() {
+        let b = ShardedBackend::loopback_with_threads(3, 1);
+        assert_eq!(b.shard_count(), 3);
+        assert!(!b.set_shard_active(7, false), "out of range");
+        assert!(!b.set_shard_active(0, true), "no-op activation");
+        assert!(b.set_shard_active(0, false));
+        assert!(b.set_shard_active(1, false));
+        assert!(!b.set_shard_active(2, false), "last shard must survive");
+        assert_eq!(b.shard_membership(), vec![false, false, true]);
+        assert!(b.set_shard_active(0, true));
+    }
+}

@@ -1,0 +1,228 @@
+//! Shard data-plane messages and transports.
+//!
+//! One protocol, two carriers:
+//!
+//! * [`LoopbackTransport`] — in-process `mpsc` channels between the leader
+//!   and shard worker threads. Payload vectors move (and the parameter
+//!   snapshot travels as an `Arc`), so nothing is serialized — the
+//!   testable path for the bitwise-parity suite.
+//! * [`TcpShardTransport`] — every [`ShardMsg`] crosses the `comm::wire`
+//!   framed codec as a shard-gradient [`Msg`], so multi-process
+//!   deployments speak exactly the protocol the loopback path exercises.
+//!
+//! Protocol per fused step (leader's view, `seq` strictly increasing):
+//!
+//! 1. `Step` to every engaged shard (its row slice + current params) —
+//!    shards run forward + per-row loss pieces in parallel;
+//! 2. `Fwd` back from each shard;
+//! 3. the gradient accumulator rings through the engaged shards in shard
+//!    order (`GradSeed` out, `GradOut` back) — the chained deterministic
+//!    reduction that makes the sum bit-identical to the fused backward;
+//! 4. optionally `GradFin` broadcast (replica-holding deployments apply
+//!    the same optimizer update locally; stateless shards don't need it).
+
+use crate::comm::{Msg, ShardRows, Transport};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// One message of the shard data-plane protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardMsg {
+    /// Begin one fused iteration. `denom` is the global fused-batch mask
+    /// sum. `rows`/`params` are `None` for shards that own their data and
+    /// hold a parameter replica (the TCP leader/worker deployment).
+    Step {
+        seq: u64,
+        denom: f32,
+        train: bool,
+        rows: Option<ShardRows>,
+        params: Option<Arc<Vec<f32>>>,
+    },
+    /// Forward half done: this shard's per-row loss terms + correctness.
+    Fwd { seq: u64, loss_terms: Vec<f32>, correct: Vec<f32> },
+    /// The traveling gradient accumulator (one chained-reduction hop).
+    GradSeed { seq: u64, grad: Vec<f32> },
+    /// The accumulator after folding this shard's rows in.
+    GradOut { seq: u64, grad: Vec<f32> },
+    /// Fully-reduced gradient broadcast (replica deployments only).
+    GradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
+    /// The shard failed to process step `seq` but stays serviceable; the
+    /// leader surfaces `msg` as the step's error.
+    Err { seq: u64, msg: String },
+    Shutdown,
+}
+
+impl ShardMsg {
+    /// The step sequence a message belongs to (0 for `Shutdown`).
+    pub fn seq(&self) -> u64 {
+        match self {
+            ShardMsg::Step { seq, .. }
+            | ShardMsg::Fwd { seq, .. }
+            | ShardMsg::GradSeed { seq, .. }
+            | ShardMsg::GradOut { seq, .. }
+            | ShardMsg::GradFin { seq, .. }
+            | ShardMsg::Err { seq, .. } => *seq,
+            ShardMsg::Shutdown => 0,
+        }
+    }
+
+    /// Lower to the wire-level [`Msg`] (clones payloads; the loopback path
+    /// never calls this).
+    pub fn to_wire(&self) -> Msg {
+        match self {
+            ShardMsg::Step { seq, denom, train, rows, params } => Msg::ShardStep {
+                seq: *seq,
+                denom: *denom,
+                train: *train,
+                rows: rows.clone(),
+                params: params.as_ref().map(|p| p.as_ref().clone()),
+            },
+            ShardMsg::Fwd { seq, loss_terms, correct } => Msg::ShardFwd {
+                seq: *seq,
+                loss_terms: loss_terms.clone(),
+                correct: correct.clone(),
+            },
+            ShardMsg::GradSeed { seq, grad } => {
+                Msg::ShardGradSeed { seq: *seq, grad: grad.clone() }
+            }
+            ShardMsg::GradOut { seq, grad } => Msg::ShardGradOut { seq: *seq, grad: grad.clone() },
+            ShardMsg::GradFin { seq, loss, acc, grad } => Msg::ShardGradFin {
+                seq: *seq,
+                loss: *loss,
+                acc: *acc,
+                grad: grad.clone(),
+            },
+            ShardMsg::Err { seq, msg } => Msg::ShardErr { seq: *seq, msg: msg.clone() },
+            ShardMsg::Shutdown => Msg::Shutdown,
+        }
+    }
+
+    /// Lift a wire-level [`Msg`] back; errors on control-plane messages.
+    pub fn from_wire(msg: Msg) -> anyhow::Result<ShardMsg> {
+        Ok(match msg {
+            Msg::ShardStep { seq, denom, train, rows, params } => ShardMsg::Step {
+                seq,
+                denom,
+                train,
+                rows,
+                params: params.map(Arc::new),
+            },
+            Msg::ShardFwd { seq, loss_terms, correct } => {
+                ShardMsg::Fwd { seq, loss_terms, correct }
+            }
+            Msg::ShardGradSeed { seq, grad } => ShardMsg::GradSeed { seq, grad },
+            Msg::ShardGradOut { seq, grad } => ShardMsg::GradOut { seq, grad },
+            Msg::ShardGradFin { seq, loss, acc, grad } => {
+                ShardMsg::GradFin { seq, loss, acc, grad }
+            }
+            Msg::ShardErr { seq, msg } => ShardMsg::Err { seq, msg },
+            Msg::Shutdown => ShardMsg::Shutdown,
+            other => anyhow::bail!("not a shard data-plane message: {other:?}"),
+        })
+    }
+}
+
+/// Bidirectional [`ShardMsg`] channel between a leader and one shard.
+pub trait ShardTransport: Send {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()>;
+    fn recv(&mut self) -> anyhow::Result<ShardMsg>;
+}
+
+/// In-process transport: plain channels, zero serialization.
+pub struct LoopbackTransport {
+    tx: mpsc::Sender<ShardMsg>,
+    rx: mpsc::Receiver<ShardMsg>,
+}
+
+/// A connected (leader end, shard end) pair of loopback transports.
+pub fn loopback_pair() -> (LoopbackTransport, LoopbackTransport) {
+    let (tx_a, rx_b) = mpsc::channel();
+    let (tx_b, rx_a) = mpsc::channel();
+    (
+        LoopbackTransport { tx: tx_a, rx: rx_a },
+        LoopbackTransport { tx: tx_b, rx: rx_b },
+    )
+}
+
+impl ShardTransport for LoopbackTransport {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()> {
+        self.tx.send(msg).map_err(|_| anyhow::anyhow!("shard peer closed"))
+    }
+
+    fn recv(&mut self) -> anyhow::Result<ShardMsg> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("shard peer closed"))
+    }
+}
+
+/// Wire transport: the same protocol over any framed `comm` transport
+/// (TCP in production; the codec runs on every message either way).
+pub struct TcpShardTransport<T: Transport> {
+    inner: T,
+}
+
+impl<T: Transport> TcpShardTransport<T> {
+    pub fn new(inner: T) -> Self {
+        TcpShardTransport { inner }
+    }
+}
+
+impl<T: Transport> ShardTransport for TcpShardTransport<T> {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()> {
+        self.inner.send(&msg.to_wire())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<ShardMsg> {
+        ShardMsg::from_wire(self.inner.recv()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<ShardMsg> {
+        vec![
+            ShardMsg::Step {
+                seq: 1,
+                denom: 96.0,
+                train: true,
+                rows: Some(ShardRows {
+                    model: "vgg11_mini".into(),
+                    x: vec![0.25; 4],
+                    y: vec![0, 9],
+                    mask: vec![1.0, 1.0],
+                }),
+                params: Some(Arc::new(vec![0.5; 3])),
+            },
+            ShardMsg::Fwd { seq: 1, loss_terms: vec![1.0, 2.0], correct: vec![0.0, 1.0] },
+            ShardMsg::GradSeed { seq: 1, grad: vec![0.0; 3] },
+            ShardMsg::GradOut { seq: 1, grad: vec![0.1; 3] },
+            ShardMsg::GradFin { seq: 1, loss: 1.5, acc: 0.5, grad: vec![0.1; 3] },
+            ShardMsg::Err { seq: 1, msg: "label 37 outside [0, 10)".into() },
+            ShardMsg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn wire_mapping_roundtrips() {
+        for m in sample() {
+            let back = ShardMsg::from_wire(m.to_wire()).unwrap();
+            assert_eq!(back, m);
+        }
+        // Control-plane messages don't lift.
+        assert!(ShardMsg::from_wire(Msg::Barrier { cycle: 1 }).is_err());
+    }
+
+    #[test]
+    fn loopback_pair_carries_messages_both_ways() {
+        let (mut a, mut b) = loopback_pair();
+        for m in sample() {
+            a.send(m.clone()).unwrap();
+            assert_eq!(b.recv().unwrap(), m);
+            b.send(m.clone()).unwrap();
+            assert_eq!(a.recv().unwrap(), m);
+        }
+        drop(b);
+        assert!(a.recv().is_err(), "closed peer must error, not hang");
+    }
+}

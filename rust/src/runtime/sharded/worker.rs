@@ -1,0 +1,153 @@
+//! Shard-server state machine: serves the data-plane protocol for
+//! **stateless** compute shards — the loopback worker threads and
+//! socket-serving shard processes. Such shards receive their row slice and
+//! the current parameters with every `Step` and hold nothing between
+//! steps except the in-flight forward state awaiting its `GradSeed`.
+//!
+//! Data-owning workers with parameter replicas (the TCP demo in
+//! `comm::leader`) drive the same message flow with their own loop,
+//! because they sample rows locally and apply `GradFin` updates.
+
+use super::transport::{ShardMsg, ShardTransport};
+use crate::runtime::native::{NativeBackend, ShardCtx};
+use std::sync::Arc;
+
+/// One shard's protocol handler. Transport-agnostic: feed it messages,
+/// send back whatever it returns.
+pub struct ShardServer {
+    backend: Arc<NativeBackend>,
+    /// In-flight step awaiting its GradSeed: (seq, params, forward state).
+    held: Option<(u64, Arc<Vec<f32>>, ShardCtx)>,
+}
+
+impl ShardServer {
+    pub fn new(backend: Arc<NativeBackend>) -> Self {
+        ShardServer { backend, held: None }
+    }
+
+    /// Handle one message; `Ok(Some(reply))` goes back to the leader.
+    /// `Shutdown` is the caller's concern (see [`serve`]).
+    pub fn handle(&mut self, msg: ShardMsg) -> anyhow::Result<Option<ShardMsg>> {
+        match msg {
+            ShardMsg::Step { seq, denom, train, rows, params } => {
+                let rows =
+                    rows.ok_or_else(|| anyhow::anyhow!("stateless shard got Step without rows"))?;
+                let params = params
+                    .ok_or_else(|| anyhow::anyhow!("stateless shard got Step without params"))?;
+                // A stale held step means the leader abandoned a sequence
+                // (error recovery); recycle its workspace and move on.
+                if let Some((_, _, ctx)) = self.held.take() {
+                    self.backend.shard_discard(ctx);
+                }
+                let (ctx, fwd) = self.backend.shard_forward(
+                    &rows.model,
+                    &params,
+                    rows.x,
+                    &rows.y,
+                    &rows.mask,
+                    denom,
+                )?;
+                if train {
+                    self.held = Some((seq, params, ctx));
+                } else {
+                    self.backend.shard_discard(ctx);
+                }
+                Ok(Some(ShardMsg::Fwd {
+                    seq,
+                    loss_terms: fwd.loss_terms,
+                    correct: fwd.correct,
+                }))
+            }
+            ShardMsg::GradSeed { seq, mut grad } => {
+                let (held_seq, params, ctx) = self
+                    .held
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("GradSeed without an in-flight step"))?;
+                anyhow::ensure!(
+                    held_seq == seq,
+                    "GradSeed seq {seq} != in-flight step {held_seq}"
+                );
+                self.backend.shard_backward_acc(&params, ctx, &mut grad)?;
+                Ok(Some(ShardMsg::GradOut { seq, grad }))
+            }
+            // Stateless shards hold no replica; the reduced gradient is
+            // applied leader-side. Tolerated for protocol symmetry.
+            ShardMsg::GradFin { .. } => Ok(None),
+            ShardMsg::Shutdown => Ok(None),
+            other => anyhow::bail!("shard server: unexpected {other:?}"),
+        }
+    }
+}
+
+/// Serve one transport until `Shutdown` (or transport failure). Handler
+/// errors (bad inputs, protocol abuse) are reported back as
+/// [`ShardMsg::Err`] and the shard keeps serving — a poisoned step must
+/// not take the worker down with it.
+pub fn serve(mut transport: impl ShardTransport, backend: Arc<NativeBackend>) -> anyhow::Result<()> {
+    let mut server = ShardServer::new(backend);
+    loop {
+        let msg = transport.recv()?;
+        if msg == ShardMsg::Shutdown {
+            return Ok(());
+        }
+        let seq = msg.seq();
+        match server.handle(msg) {
+            Ok(Some(reply)) => transport.send(reply)?,
+            Ok(None) => {}
+            Err(e) => transport.send(ShardMsg::Err { seq, msg: format!("{e:#}") })?,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_rejects_protocol_abuse() {
+        let mut s = ShardServer::new(Arc::new(NativeBackend::with_threads(1)));
+        // GradSeed with nothing in flight.
+        let err = s
+            .handle(ShardMsg::GradSeed { seq: 1, grad: vec![0.0; 4] })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("in-flight"), "{err}");
+        // Step without rows/params.
+        assert!(s
+            .handle(ShardMsg::Step { seq: 2, denom: 1.0, train: true, rows: None, params: None })
+            .is_err());
+        // Fwd is a shard->leader message; a shard must never receive it.
+        assert!(s
+            .handle(ShardMsg::Fwd { seq: 3, loss_terms: vec![], correct: vec![] })
+            .is_err());
+    }
+
+    #[test]
+    fn seq_mismatch_is_an_error() {
+        use crate::comm::ShardRows;
+        let b = Arc::new(NativeBackend::with_threads(1));
+        let fd = b.schema().feature_dim;
+        let params = Arc::new(b.init_params("vgg11_mini", 0).unwrap());
+        let mut s = ShardServer::new(b);
+        let step = ShardMsg::Step {
+            seq: 5,
+            denom: 2.0,
+            train: true,
+            rows: Some(ShardRows {
+                model: "vgg11_mini".into(),
+                x: vec![0.1; 2 * fd],
+                y: vec![0, 1],
+                mask: vec![1.0, 1.0],
+            }),
+            params: Some(params),
+        };
+        let reply = s.handle(step).unwrap().unwrap();
+        assert!(matches!(reply, ShardMsg::Fwd { seq: 5, .. }));
+        let pc = 25_546;
+        let err = s
+            .handle(ShardMsg::GradSeed { seq: 6, grad: vec![0.0; pc] })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seq"), "{err}");
+    }
+}

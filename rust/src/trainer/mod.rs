@@ -96,6 +96,12 @@ impl ModelRuntime {
         self.backend.schema()
     }
 
+    /// The compute backend this runtime executes on (data-plane
+    /// introspection: shard count/membership mirroring).
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
     /// Reset model + optimizer state to the seeded init snapshot
     /// (Algorithm 1 / §VI-C: every episode restarts from scratch).
     pub fn reset(&mut self, seed: u64) -> anyhow::Result<()> {
@@ -384,6 +390,14 @@ impl BspTrainer {
             self.batch_max,
         );
         self.reshard();
+        // Mirror into the compute data plane — but only under the
+        // one-shard-per-worker deployment, where worker index == shard
+        // index is meaningful. With any other shard count the data plane
+        // keeps its full membership (the math is identical either way;
+        // only who computes which rows would change).
+        if self.runtime.backend().shard_count() == self.n_workers() {
+            self.runtime.backend().set_shard_active(w, false);
+        }
         true
     }
 
@@ -397,6 +411,9 @@ impl BspTrainer {
         let cap = self.mem_cap(w, self.batch_max);
         self.batches[w] = elastic::rejoin_batch(self.batches[w], cap, self.batch_min, self.batch_max);
         self.reshard();
+        if self.runtime.backend().shard_count() == self.n_workers() {
+            self.runtime.backend().set_shard_active(w, true);
+        }
         true
     }
 
@@ -471,11 +488,25 @@ impl BspTrainer {
         }
     }
 
-    /// Attach the scenario trace to a run record: the full scripted
-    /// timeline (identical across policies for the same config — the
-    /// apples-to-apples guarantee) plus the events actually applied within
-    /// this run's horizon.
+    /// Attach the data-plane + scenario traces to a run record: which
+    /// backend executed the run (with shard count/membership when the data
+    /// plane is sharded), the full scripted timeline (identical across
+    /// policies for the same config — the apples-to-apples guarantee), and
+    /// the events actually applied within this run's horizon.
     pub fn annotate_record(&self, record: &mut RunRecord) {
+        let bk = self.runtime.backend();
+        if bk.shard_count() > 1 {
+            let membership: Vec<Json> =
+                bk.shard_membership().into_iter().map(Json::Bool).collect();
+            record.extra.insert(
+                "data_plane".into(),
+                crate::jobj! {
+                    "backend" => bk.name(),
+                    "shard_count" => bk.shard_count(),
+                    "shard_active" => Json::Arr(membership),
+                },
+            );
+        }
         if self.scenario_script().is_empty() {
             return;
         }
@@ -513,6 +544,11 @@ impl BspTrainer {
         self.events_applied.clear();
         self.shard_seed = seed;
         self.membership_rev = 0;
+        // The data plane's membership resets with the cluster's, so a
+        // re-armed scenario replays against a full shard set.
+        for s in 0..self.runtime.backend().shard_count() {
+            self.runtime.backend().set_shard_active(s, true);
+        }
         Ok(())
     }
 
@@ -877,6 +913,33 @@ mod tests {
         }
         assert!(t.net.congestion_mean() < 0.1, "auto-relax restored the baseline");
         assert_eq!(t.events_applied.len(), 2, "storm + derived relax recorded");
+    }
+
+    #[test]
+    fn preempt_rejoin_mirror_into_sharded_data_plane() {
+        use crate::runtime::ShardedBackend;
+        use std::sync::Arc;
+        let backend: Backend = Arc::new(ShardedBackend::loopback_with_threads(4, 1));
+        let mut t = BspTrainer::new(&small_cfg(), backend.clone()).unwrap();
+        assert_eq!(backend.shard_count(), 4);
+        assert!(t.preempt_worker(2));
+        assert_eq!(backend.shard_membership(), vec![true, true, false, true]);
+        // The step still completes: worker 2's rows redistribute across
+        // the surviving shards inside the fused train step.
+        let out = t.iterate().unwrap();
+        assert_eq!(out.global_batch, 4 * 64, "survivors absorbed the budget");
+        assert!(t.rejoin_worker(2));
+        assert_eq!(backend.shard_membership(), vec![true; 4]);
+        // Episode reset restores a full shard set even after churn.
+        t.preempt_worker(0);
+        t.reset_episode(0, 64).unwrap();
+        assert_eq!(backend.shard_membership(), vec![true; 4]);
+        // The record carries the data-plane annotation.
+        let mut rec = RunRecord::new("dp");
+        t.annotate_record(&mut rec);
+        let dp = rec.extra.get("data_plane").expect("data_plane annotated");
+        assert_eq!(dp.get("backend").and_then(Json::as_str), Some("sharded"));
+        assert_eq!(dp.get("shard_count").and_then(Json::as_usize), Some(4));
     }
 
     #[test]

@@ -5,9 +5,11 @@
 use dynamix::comm::{channel_pair, Msg, Transport};
 use dynamix::config::{ClusterPreset, ExperimentConfig};
 use dynamix::rl::state::StateVector;
-use dynamix::runtime::{default_backend, Backend, Manifest};
+use dynamix::runtime::{default_backend, Backend, ComputeBackend, Manifest, ShardedBackend};
+use dynamix::sim::scenario::ScenarioScript;
 use dynamix::trainer::BspTrainer;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn store() -> Backend {
     default_backend().expect("backend selection failed")
@@ -210,6 +212,136 @@ fn agent_rejects_wrong_theta_len() {
     )
     .unwrap();
     assert!(agent.load_theta(&[0.0; 3]).is_err());
+}
+
+/// One scripted run on the sharded loopback data plane: iterate until the
+/// preempt_rejoin script's w3/w1 churn arc (4 events) has fully applied
+/// plus two settling steps, enforcing the churn invariants (batch bounds,
+/// OOM rule, trainer/backend membership mirroring, conserved global
+/// batch) after every iteration. Returns a determinism fingerprint.
+fn run_shard_churn(threads: usize) -> (Vec<(u64, String)>, Vec<u64>, Vec<Vec<bool>>) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.n_workers = 4;
+    cfg.batch.initial = 64;
+    cfg.scenario = Some(ScenarioScript::by_name("preempt_rejoin").unwrap());
+    let backend: Backend = Arc::new(ShardedBackend::loopback_with_threads(4, threads));
+    let mut t = BspTrainer::new(&cfg, backend.clone()).unwrap();
+    let mut losses = Vec::new();
+    let mut memberships = Vec::new();
+    let mut iters = 0usize;
+    let mut settle = 0usize;
+    while settle < 2 && iters < 2000 {
+        if t.events_applied.len() >= 4 {
+            settle += 1; // both preempts + both rejoins landed
+        }
+        // The step completes under any membership — a dropped shard's
+        // samples are absorbed by the survivors inside the fused step.
+        let out = t.iterate().unwrap();
+        iters += 1;
+        losses.push(out.loss.to_bits());
+        memberships.push(backend.shard_membership());
+        // Trainer membership and data-plane membership mirror exactly
+        // (shard_count == n_workers here).
+        assert_eq!(backend.shard_membership(), t.active_mask(), "iter {iters}: mirror broke");
+        // The fused step spans exactly the live membership's batches.
+        let expect: usize = t.active_batches().iter().sum();
+        assert_eq!(out.global_batch, expect, "iter {iters}: fused batch != live budget");
+        // While only preemptions have fired, survivors absorb the freed
+        // budget exactly: the global batch is conserved (mem caps don't
+        // bind at these sizes). Rejoins legitimately grow it again —
+        // the returning worker resumes its frozen batch.
+        let rejoined = t.events_applied.iter().any(|(_, d)| d.contains("rejoin_worker"));
+        let preempted = t.events_applied.iter().any(|(_, d)| d.contains("preempt_worker"));
+        if preempted && !rejoined {
+            assert_eq!(out.global_batch, 4 * 64, "iter {iters}: samples lost in churn");
+        }
+        // Churn invariants (as in proptest_invariants::prop_churn_*):
+        // active batches stay inside [32,1024] and under the OOM ceiling.
+        for w in 0..4 {
+            if t.is_active(w) {
+                assert!(
+                    (32..=1024).contains(&t.batches[w]),
+                    "iter {iters}: w{w} batch {} escaped bounds",
+                    t.batches[w]
+                );
+                let cap = t.mem_cap(w, 1024);
+                assert!(
+                    t.batches[w] <= cap.max(32),
+                    "iter {iters}: w{w} batch {} above mem cap {cap}",
+                    t.batches[w]
+                );
+            }
+        }
+    }
+    let events = t
+        .events_applied
+        .iter()
+        .map(|(at, d)| (at.to_bits(), d.clone()))
+        .collect();
+    (events, losses, memberships)
+}
+
+#[test]
+fn preempt_rejoin_scenario_kills_and_revives_loopback_shards() {
+    // preempt_rejoin: w3 down at 0.6s, w1 down at 1.2s, w3 back at 2.4s,
+    // w1 back at 3.6s. Run past both rejoins and check the data plane
+    // followed the whole arc, deterministically across kernel threads.
+    let (events, losses, memberships) = run_shard_churn(1);
+    assert!(
+        events.iter().any(|(_, d)| d.contains("preempt_worker w3")),
+        "preemption never fired: {events:?}"
+    );
+    assert!(
+        events.iter().any(|(_, d)| d.contains("rejoin_worker w3")),
+        "rejoin never fired: {events:?}"
+    );
+    // Mid-run some iteration saw shard 3 (and later shard 1) absent.
+    assert!(memberships.iter().any(|m| !m[3]), "shard 3 never dropped");
+    assert!(memberships.iter().any(|m| !m[1]), "shard 1 never dropped");
+    // After the horizon both rejoins have fired: full membership again.
+    assert_eq!(memberships.last().unwrap(), &vec![true; 4], "rejoin did not restore shards");
+
+    // Bitwise-deterministic across kernel thread counts: same event log,
+    // same losses, same membership trajectory.
+    let again = run_shard_churn(4);
+    assert_eq!(again, (events, losses, memberships), "shard churn not thread-stable");
+}
+
+#[test]
+fn shard_protocol_rejects_malformed_shard_steps() {
+    // The data plane fails loudly on bad inputs, like every other seam.
+    let b = ShardedBackend::loopback_with_threads(2, 1);
+    let mut state = dynamix::runtime::OptState::new(
+        b.init_params("vgg11_mini", 0).unwrap(),
+        dynamix::config::Optimizer::Sgd,
+    );
+    let fd = b.schema().feature_dim;
+    // Off-ladder bucket.
+    let err = b
+        .train_step("vgg11_mini", dynamix::config::Optimizer::Sgd, 33, &mut state,
+                    &vec![0.0; 33 * fd], &vec![0; 33], &vec![1.0; 33], 0.05)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("ladder"), "{err}");
+    // Wrong x size.
+    assert!(b
+        .train_step("vgg11_mini", dynamix::config::Optimizer::Sgd, 32, &mut state,
+                    &vec![0.0; 31 * fd], &vec![0; 32], &vec![1.0; 32], 0.05)
+        .is_err());
+    // Out-of-range label surfaces from the shard with the offending value.
+    let err = b
+        .train_step("vgg11_mini", dynamix::config::Optimizer::Sgd, 32, &mut state,
+                    &vec![0.0; 32 * fd], &vec![37; 32], &vec![1.0; 32], 0.05)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("37"), "{err}");
+    // Unknown model.
+    assert!(b.init_params("nope", 0).is_err());
+    // The data plane still works after the errors (stale held state on
+    // the shards is recycled by the next Step).
+    let (x, y, mask) = (vec![0.1; 32 * fd], vec![1i32; 32], vec![1.0; 32]);
+    b.train_step("vgg11_mini", dynamix::config::Optimizer::Sgd, 32, &mut state, &x, &y, &mask, 0.05)
+        .unwrap();
 }
 
 #[test]

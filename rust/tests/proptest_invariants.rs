@@ -243,35 +243,123 @@ fn prop_update_batch_advantages_normalized() {
     });
 }
 
+/// Random finite f32 vector (finite so equality survives the roundtrip).
+fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    (0..rng.below(max_len + 1)).map(|_| rng.normal() as f32).collect()
+}
+
+/// A random message spanning every wire variant — control plane and the
+/// shard-gradient data plane, including both Option branches of ShardStep.
+fn random_wire_msg(rng: &mut Rng) -> Msg {
+    match rng.below(12) {
+        0 => Msg::Register { worker: rng.next_u64() as u32, max_batch: rng.next_u64() as u32 },
+        1 => Msg::Welcome {
+            worker: rng.next_u64() as u32,
+            k: rng.next_u64() as u32,
+            initial_batch: rng.next_u64() as u32,
+            n_workers: 1 + rng.below(32) as u32,
+            cycles: rng.next_u64() as u32,
+        },
+        2 => Msg::StateReport {
+            worker: rng.next_u64() as u32,
+            cycle: rng.next_u64() as u32,
+            state: StateVector((0..16).map(|_| rng.normal() as f32).collect()),
+            reward: rng.normal(),
+            sim_clock: rng.exponential(0.01),
+        },
+        3 => Msg::Action {
+            worker: rng.next_u64() as u32,
+            cycle: rng.next_u64() as u32,
+            delta: DELTAS[rng.below(5)],
+            new_batch: 32 + rng.below(993) as u32,
+        },
+        4 => Msg::Barrier { cycle: rng.next_u64() as u32 },
+        5 => Msg::Shutdown,
+        6 => {
+            let rows = if rng.uniform() < 0.5 {
+                let m = rng.below(5);
+                Some(dynamix::comm::ShardRows {
+                    model: format!("model-{}", rng.below(100)),
+                    x: (0..m * 4).map(|_| rng.normal() as f32).collect(),
+                    y: (0..m).map(|_| rng.below(100) as i32).collect(),
+                    mask: (0..m).map(|_| if rng.uniform() < 0.8 { 1.0 } else { 0.0 }).collect(),
+                })
+            } else {
+                None
+            };
+            let params = if rng.uniform() < 0.5 { Some(rand_f32s(rng, 24)) } else { None };
+            Msg::ShardStep {
+                seq: rng.next_u64(),
+                denom: 1.0 + rng.below(4096) as f32,
+                train: rng.uniform() < 0.5,
+                rows,
+                params,
+            }
+        }
+        7 => Msg::ShardFwd {
+            seq: rng.next_u64(),
+            loss_terms: rand_f32s(rng, 16),
+            correct: rand_f32s(rng, 16),
+        },
+        8 => Msg::ShardGradSeed { seq: rng.next_u64(), grad: rand_f32s(rng, 48) },
+        9 => Msg::ShardGradOut { seq: rng.next_u64(), grad: rand_f32s(rng, 48) },
+        10 => Msg::ShardGradFin {
+            seq: rng.next_u64(),
+            loss: rng.normal() as f32,
+            acc: rng.uniform() as f32,
+            grad: rand_f32s(rng, 48),
+        },
+        _ => Msg::ShardErr {
+            seq: rng.next_u64(),
+            msg: format!("err-{}-\"quoted\"", rng.below(1000)),
+        },
+    }
+}
+
 #[test]
 fn prop_wire_roundtrip_random_messages() {
-    check("wire_roundtrip", 400, |rng, case| {
-        let msg = match rng.below(6) {
-            0 => Msg::Register { worker: rng.next_u64() as u32, max_batch: rng.next_u64() as u32 },
-            1 => Msg::Welcome {
-                worker: rng.next_u64() as u32,
-                k: rng.next_u64() as u32,
-                initial_batch: rng.next_u64() as u32,
-            },
-            2 => Msg::StateReport {
-                worker: rng.next_u64() as u32,
-                cycle: rng.next_u64() as u32,
-                state: StateVector((0..16).map(|_| rng.normal() as f32).collect()),
-                reward: rng.normal(),
-                sim_clock: rng.exponential(0.01),
-            },
-            3 => Msg::Action {
-                worker: rng.next_u64() as u32,
-                cycle: rng.next_u64() as u32,
-                delta: DELTAS[rng.below(5)],
-                new_batch: 32 + rng.below(993) as u32,
-            },
-            4 => Msg::Barrier { cycle: rng.next_u64() as u32 },
-            _ => Msg::Shutdown,
-        };
+    check("wire_roundtrip", 600, |rng, case| {
+        let msg = random_wire_msg(rng);
         let frame = msg.encode();
+        let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+        assert_eq!(len + 4, frame.len(), "case {case}: bad length prefix");
         let decoded = Msg::decode(&frame[4..]).unwrap();
         assert_eq!(decoded, msg, "case {case}");
+    });
+}
+
+#[test]
+fn prop_wire_rejects_truncated_and_padded_frames() {
+    // Fuzz-ish decoder hardening: EVERY strict prefix of a valid body must
+    // error (never panic, never mis-decode a shorter message), and any
+    // trailing garbage must be rejected. A successful decode consumes the
+    // whole body, so a prefix that parsed fully would have failed the
+    // original finish() — prefixes are guaranteed invalid; verify it.
+    check("wire_truncation", 300, |rng, case| {
+        let msg = random_wire_msg(rng);
+        let frame = msg.encode();
+        let body = &frame[4..];
+        let cuts: Vec<usize> = if body.len() <= 32 {
+            (0..body.len()).collect()
+        } else {
+            // Sample interior cuts + always test the boundary-ish ones.
+            let mut c: Vec<usize> = (0..16).map(|_| rng.below(body.len())).collect();
+            c.extend([0, 1, 2, 3, body.len() / 2, body.len() - 1]);
+            c
+        };
+        for cut in cuts {
+            assert!(
+                Msg::decode(&body[..cut]).is_err(),
+                "case {case}: truncation at {cut}/{} decoded",
+                body.len()
+            );
+        }
+        let mut padded = body.to_vec();
+        padded.push(rng.below(256) as u8);
+        assert!(
+            Msg::decode(&padded).is_err(),
+            "case {case}: trailing byte accepted"
+        );
     });
 }
 
