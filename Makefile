@@ -11,7 +11,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 
-.PHONY: build test bench bench-quick artifacts artifacts-smoke clean-artifacts
+.PHONY: build test bench bench-quick bench-compare artifacts artifacts-smoke clean-artifacts
 
 build:
 	cd rust && $(CARGO) build --release
@@ -30,6 +30,11 @@ bench:
 # path and still records BENCH_native.json, in seconds.
 bench-quick:
 	cd rust && DYNAMIX_BENCH_QUICK=1 $(CARGO) bench
+
+# Print p50 deltas between the last two recorded runs of every bench suite
+# in BENCH_native.json, so perf regressions are visible in PR output.
+bench-compare:
+	cd rust && $(CARGO) run --release --bin bench_compare
 
 # Full artifact set: every (model, optimizer, bucket) combo (§VI grid).
 artifacts:

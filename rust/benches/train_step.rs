@@ -1,17 +1,24 @@
 //! L3 hot path: the backend train-step execution across the bucket ladder.
 //! Regenerates the per-iteration compute-cost column used to calibrate the
 //! cluster simulator, and the padding-overhead ablation (same 100 valid
-//! samples at growing buckets). Appends a machine-readable run record
-//! (bucket, samples/s, p10/p50/p90, thread count, git rev) to
+//! samples at growing buckets). Also sweeps the kernel tiers explicitly
+//! (scalar/blocked/simd backends pinned per entry, independent of
+//! `DYNAMIX_KERNEL`) and prices the persistent worker pool against the old
+//! scoped-spawn execution at a small-bucket matmul, recording the delta in
+//! the session's `note` field. Appends a machine-readable run record
+//! (bucket, samples/s, p10/p50/p90, thread count, kernel tier, git rev) to
 //! `BENCH_native.json` — the repo's perf trajectory.
 //!
 //!     cargo bench --bench train_step
-//!     DYNAMIX_THREADS=1 DYNAMIX_BENCH_NOTE=scalar cargo bench --bench train_step
+//!     DYNAMIX_KERNEL=blocked DYNAMIX_BENCH_NOTE=pre-simd cargo bench --bench train_step
 
-use dynamix::runtime::default_backend;
+use dynamix::runtime::native::exec::{run_scoped, KernelTier, Pool};
+use dynamix::runtime::native::linalg::matmul_acc;
+use dynamix::runtime::{default_backend, Backend, NativeBackend};
 use dynamix::trainer::ModelRuntime;
 use dynamix::util::bench::{bench, iters, throughput, BenchSession};
 use dynamix::util::rng::Rng;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let store = default_backend()?;
@@ -67,6 +74,75 @@ fn main() -> anyhow::Result<()> {
             rt.train_step(&xs, &ys, bucket, bucket).unwrap();
         });
         session.push_items(&r, bucket);
+    }
+
+    println!("\n== kernel tiers (pinned per entry; small + large bucket) ==");
+    // Per-tier session entries, independent of DYNAMIX_KERNEL: the same
+    // train step through each executable tier at the process thread count.
+    let threads = Pool::global().threads();
+    for tier in KernelTier::available() {
+        let backend: Backend = Arc::new(NativeBackend::with_kernel(threads, tier));
+        for bucket in [32usize, 512] {
+            let mut rt = ModelRuntime::new(
+                backend.clone(),
+                "vgg11_mini",
+                dynamix::config::Optimizer::Sgd,
+                0.05,
+                0,
+            )?;
+            let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+            let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+            let (w, n) = iters(2, 8);
+            let r = bench(
+                &format!("train_step/{}-b{bucket}", tier.as_str()),
+                w,
+                n,
+                || {
+                    rt.train_step(&xs, &ys, bucket, bucket).unwrap();
+                },
+            );
+            session.push_items(&r, bucket);
+        }
+    }
+
+    println!("\n== persistent pool vs scoped-spawn at a small-bucket matmul ==");
+    // The pool's reason to exist: at small problems the per-call
+    // thread::scope spawns used to dominate. Same chunk plan, same blocked
+    // kernels; only the execution strategy differs.
+    {
+        let (m, k, n) = (256usize, 128, 64);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        let pool = Pool::with_config(threads, KernelTier::Blocked);
+        let per = pool.rows_per_chunk(m, 2 * k * n);
+        let (wu, it) = iters(20, 200);
+        let r_pool = bench("exec/pool_matmul_256x128x64", wu, it, || {
+            out.fill(0.0);
+            matmul_acc(&pool, &x, &w, m, k, n, &mut out);
+        });
+        let seq = Pool::with_config(1, KernelTier::Blocked);
+        let wref: &[f32] = &w;
+        let r_spawn = bench("exec/scoped_spawn_matmul_256x128x64", wu, it, || {
+            out.fill(0.0);
+            run_scoped(
+                x.chunks(per * k)
+                    .zip(out.chunks_mut(per * n))
+                    .map(|(xc, oc)| {
+                        let seq = seq.clone();
+                        move || matmul_acc(&seq, xc, wref, xc.len() / k, k, n, oc)
+                    })
+                    .collect(),
+            );
+        });
+        session.push(&r_pool);
+        session.push(&r_spawn);
+        let delta = 100.0 * (r_spawn.p50_s - r_pool.p50_s) / r_spawn.p50_s;
+        session.set_note(&format!(
+            "pool-vs-spawn @256x128x64 t{threads}: pool p50 {:.1}us vs scoped {:.1}us ({delta:+.0}% vs spawn)",
+            r_pool.p50_s * 1e6,
+            r_spawn.p50_s * 1e6,
+        ));
     }
 
     let path = session.flush()?;

@@ -1,0 +1,137 @@
+//! `bench_compare` — print p50 deltas between the last two recorded runs
+//! of each bench suite in `BENCH_native.json`, so perf regressions are
+//! visible directly in PR output (`make bench-compare`).
+//!
+//! For every suite with >= 2 recorded runs, the latest run is compared
+//! against the previous one, matching results by bench name. Output is a
+//! fixed-width table plus a one-line verdict per suite; missing files or
+//! suites with fewer than two runs are reported, never an error (the tool
+//! is advisory — CI runs it after the bench smoke).
+
+use dynamix::util::json::Json;
+use std::collections::BTreeMap;
+
+fn out_path() -> std::path::PathBuf {
+    match std::env::var("DYNAMIX_BENCH_OUT") {
+        Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json"),
+    }
+}
+
+/// (bench name -> p50 seconds) plus run metadata, from one run record.
+struct Run {
+    note: String,
+    git_rev: String,
+    threads: usize,
+    kernel: String,
+    p50: BTreeMap<String, f64>,
+}
+
+fn parse_run(run: &Json) -> Run {
+    let s = |k: &str| run.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let mut p50 = BTreeMap::new();
+    if let Some(results) = run.get("results").and_then(Json::as_arr) {
+        for r in results {
+            if let (Some(name), Some(v)) = (
+                r.get("bench").and_then(Json::as_str),
+                r.get("p50_s").and_then(Json::as_f64),
+            ) {
+                p50.insert(name.to_string(), v);
+            }
+        }
+    }
+    Run {
+        note: s("note"),
+        git_rev: s("git_rev"),
+        threads: run.get("threads").and_then(Json::as_usize).unwrap_or(0),
+        kernel: s("kernel"),
+        p50,
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+fn main() {
+    let path = out_path();
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("bench-compare: no {} (run `make bench` first)", path.display());
+            return;
+        }
+    };
+    let root = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("bench-compare: {} is not valid JSON: {e}", path.display());
+            return;
+        }
+    };
+    let runs = match root.get("runs").and_then(Json::as_arr) {
+        Some(r) if !r.is_empty() => r,
+        _ => {
+            println!("bench-compare: {} has no recorded runs", path.display());
+            return;
+        }
+    };
+
+    // Group run indices by suite, preserving record order (append-only).
+    let mut by_suite: BTreeMap<String, Vec<&Json>> = BTreeMap::new();
+    for run in runs {
+        let suite = run
+            .get("suite")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        by_suite.entry(suite).or_default().push(run);
+    }
+
+    for (suite, runs) in &by_suite {
+        if runs.len() < 2 {
+            println!("suite {suite}: only {} recorded run(s), nothing to compare", runs.len());
+            continue;
+        }
+        let prev = parse_run(runs[runs.len() - 2]);
+        let last = parse_run(runs[runs.len() - 1]);
+        println!(
+            "suite {suite}: {} [{} t{} {}] -> {} [{} t{} {}]",
+            prev.git_rev,
+            if prev.note.is_empty() { "-" } else { &prev.note },
+            prev.threads,
+            if prev.kernel.is_empty() { "?" } else { &prev.kernel },
+            last.git_rev,
+            if last.note.is_empty() { "-" } else { &last.note },
+            last.threads,
+            if last.kernel.is_empty() { "?" } else { &last.kernel },
+        );
+        let mut worst: Option<(f64, String)> = None;
+        for (name, &new_p50) in &last.p50 {
+            match prev.p50.get(name) {
+                Some(&old_p50) if old_p50 > 0.0 => {
+                    let delta = 100.0 * (new_p50 - old_p50) / old_p50;
+                    println!(
+                        "  {name:<44} p50 {:>10} -> {:>10}  ({delta:+6.1}%)",
+                        fmt_time(old_p50),
+                        fmt_time(new_p50)
+                    );
+                    if worst.as_ref().map(|(w, _)| delta > *w).unwrap_or(true) {
+                        worst = Some((delta, name.clone()));
+                    }
+                }
+                _ => println!("  {name:<44} p50 {:>10} (new entry)", fmt_time(new_p50)),
+            }
+        }
+        if let Some((delta, name)) = worst {
+            println!("  worst delta: {delta:+.1}% on {name}");
+        }
+        println!();
+    }
+}

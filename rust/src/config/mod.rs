@@ -240,6 +240,11 @@ pub struct ExperimentConfig {
     /// over this field. Sharding never changes the math — the sharded
     /// backend is bit-identical to native — only who computes which rows.
     pub shards: Option<usize>,
+    /// Kernel tier request (`auto`/`scalar`/`blocked`/`simd`; None =
+    /// whatever the environment selects). Applied via
+    /// `runtime::apply_kernel_request` before backend construction;
+    /// `DYNAMIX_KERNEL` in the environment wins over this field.
+    pub kernel: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -254,6 +259,7 @@ impl Default for ExperimentConfig {
             steps_per_episode: 100,
             scenario: None,
             shards: None,
+            kernel: None,
         }
     }
 }
@@ -295,6 +301,12 @@ impl ExperimentConfig {
                 (1..=64).contains(&n),
                 "shards {n} outside [1,64] (the data plane's worker ceiling)"
             );
+        }
+        if let Some(k) = &self.kernel {
+            // Delegate to the runtime's parser so the config accept-list
+            // can never drift from what the CLI/env accept.
+            crate::runtime::native::KernelTier::parse(k)
+                .map_err(|e| anyhow::anyhow!("config kernel: {e}"))?;
         }
         if let Some(s) = &self.scenario {
             s.validate(self.cluster.n_workers)?;
@@ -343,6 +355,9 @@ impl ExperimentConfig {
             }
             if let Some(n) = self.shards {
                 m.insert("shards".into(), Json::Num(n as f64));
+            }
+            if let Some(k) = &self.kernel {
+                m.insert("kernel".into(), Json::Str(k.clone()));
             }
         }
         j
@@ -402,6 +417,7 @@ impl ExperimentConfig {
         if let Some(x) = u("steps_per_episode") { c.steps_per_episode = x; }
         if let Some(v) = v.get("scenario") { c.scenario = Some(ScenarioScript::from_json(v)?); }
         if let Some(x) = u("shards") { c.shards = Some(x); }
+        if let Some(x) = s("kernel") { c.kernel = Some(x); }
         c.validate()?;
         Ok(c)
     }
@@ -438,6 +454,7 @@ mod tests {
         c.cluster.n_workers = 8;
         c.scenario = Some(ScenarioScript::by_name("spot_chaos").unwrap());
         c.shards = Some(4);
+        c.kernel = Some("simd".into());
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.train.optimizer, Optimizer::Adam);
@@ -446,10 +463,12 @@ mod tests {
         assert_eq!(c2.cluster.n_workers, 8);
         assert_eq!(c2.scenario, c.scenario, "scenario scripts must round-trip");
         assert_eq!(c2.shards, Some(4), "shard config must round-trip");
-        // No scenario/shards keys -> None (stationary defaults preserved).
+        assert_eq!(c2.kernel.as_deref(), Some("simd"), "kernel tier must round-trip");
+        // No scenario/shards/kernel keys -> None (defaults preserved).
         let plain = ExperimentConfig::from_json(&ExperimentConfig::default().to_json()).unwrap();
         assert!(plain.scenario.is_none());
         assert!(plain.shards.is_none());
+        assert!(plain.kernel.is_none());
     }
 
     #[test]
@@ -479,6 +498,13 @@ mod tests {
         assert!(c.validate().is_err());
         c.shards = Some(8);
         c.validate().unwrap();
+        // Unknown kernel tiers are rejected; the four knowns pass.
+        c.kernel = Some("avx512".into());
+        assert!(c.validate().is_err());
+        for k in ["auto", "scalar", "blocked", "simd"] {
+            c.kernel = Some(k.into());
+            c.validate().unwrap();
+        }
     }
 
     #[test]

@@ -80,9 +80,13 @@ COMMANDS:
 
 GLOBAL FLAGS:
   --threads N     pin native-backend kernel threads (DYNAMIX_THREADS)
+  --kernel T      kernel tier: auto|scalar|blocked|simd (DYNAMIX_KERNEL;
+                  simd = AVX2/FMA where the CPU supports it, else the
+                  portable blocked fallback; scalar = reference loops)
   --shards N      run the sharded data plane: split every fused batch over
                   N loopback worker shards (sets DYNAMIX_BACKEND=sharded +
-                  DYNAMIX_SHARDS; bit-identical to the native backend)
+                  DYNAMIX_SHARDS; bit-identical to the native backend
+                  under every kernel tier)
   --scenario S    scripted dynamic-environment timeline: a JSON file path
                   or a built-in name (preempt_rejoin bandwidth_collapse
                   congestion_storm load_shift spot_chaos)
@@ -126,6 +130,13 @@ fn run() -> anyhow::Result<()> {
         anyhow::ensure!(n >= 1, "--threads must be >= 1");
         std::env::set_var("DYNAMIX_THREADS", t);
     }
+    // --kernel T picks the linalg tier; like --threads it must land in the
+    // environment before the first backend is constructed (the process
+    // pool reads DYNAMIX_KERNEL exactly once).
+    if let Some(k) = args.get("kernel") {
+        dynamix::runtime::KernelTier::parse(k)?; // validate loudly
+        std::env::set_var("DYNAMIX_KERNEL", k);
+    }
     // --shards N selects the sharded loopback data plane, overriding any
     // DYNAMIX_BACKEND already in the environment (explicit flag wins).
     if let Some(s) = args.get("shards") {
@@ -164,8 +175,10 @@ fn run() -> anyhow::Result<()> {
             cfg.batch.initial = batch;
             cfg.scenario = scenario_arg(&args)?;
             cfg.validate()?;
-            // The config's shard request applies when the environment
-            // didn't pick a backend (see runtime::backend_for).
+            // The config's shard/kernel requests apply when the
+            // environment didn't pick them (see runtime::backend_for /
+            // apply_kernel_request).
+            dynamix::runtime::apply_kernel_request(cfg.kernel.as_deref());
             let store = dynamix::runtime::backend_for(cfg.shards)?;
             let cycles: usize = args
                 .get_or("cycles", &format!("{}", cfg.steps_per_episode))
@@ -222,6 +235,15 @@ fn info() -> anyhow::Result<()> {
     let backend = default_backend()?;
     let m = backend.schema();
     println!("DYNAMIX compute backend: {}", backend.name());
+    {
+        let pool = dynamix::runtime::native::exec::Pool::global();
+        println!(
+            "  kernel tier: {} (DYNAMIX_KERNEL; simd supported: {})  threads: {}",
+            pool.tier().as_str(),
+            dynamix::runtime::native::exec::simd_supported(),
+            pool.threads()
+        );
+    }
     println!(
         "  state_dim={} n_actions={} max_workers={} ppo_minibatch={}",
         m.state_dim, m.n_actions, m.max_workers, m.ppo_minibatch

@@ -304,6 +304,19 @@ pub fn default_backend() -> anyhow::Result<Backend> {
     }
 }
 
+/// Apply a config-file kernel-tier request: sets `DYNAMIX_KERNEL` when
+/// the environment hasn't picked one (the env always wins). Must run
+/// before the first backend is constructed — the process-global pool
+/// reads the variable exactly once; a later call is a silent no-op on the
+/// already-initialized pool.
+pub fn apply_kernel_request(kernel: Option<&str>) {
+    if std::env::var("DYNAMIX_KERNEL").unwrap_or_default().is_empty() {
+        if let Some(k) = kernel {
+            std::env::set_var("DYNAMIX_KERNEL", k);
+        }
+    }
+}
+
 /// Backend honoring an explicit shard request from config/CLI: when
 /// `DYNAMIX_BACKEND` is unset and `shards` is `Some(n)`, a loopback
 /// sharded data plane; otherwise the environment selection wins.

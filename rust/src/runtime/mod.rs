@@ -28,11 +28,11 @@ mod store;
 mod xla_backend;
 
 pub use backend::{
-    backend_for, default_backend, native_backend, sharded_backend, Backend, ComputeBackend,
-    OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
+    apply_kernel_request, backend_for, default_backend, native_backend, sharded_backend, Backend,
+    ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
 };
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelInfo};
-pub use native::NativeBackend;
+pub use native::{KernelTier, NativeBackend};
 pub use sharded::ShardedBackend;
 #[cfg(feature = "backend-xla")]
 pub use store::{ArtifactStore, Outputs};

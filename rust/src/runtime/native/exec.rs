@@ -1,88 +1,460 @@
-//! Multi-threaded execution layer for the native backend.
+//! Execution layer for the native backend: kernel-tier selection plus a
+//! **persistent** worker pool.
 //!
-//! A [`Pool`] decides how many worker threads a kernel may fan out over and
-//! hands kernels a deterministic row partition. Threads are plain scoped
-//! `std::thread` spawns (no external thread-pool crate: the build must stay
-//! offline); each parallel region lives exactly as long as one kernel call,
-//! so there is no queue, no channel and no shared mutable state — kernels
-//! split their output buffer into disjoint row chunks and every thread owns
-//! one chunk.
+//! ## Kernel tiers
 //!
-//! Determinism: the partition is a pure function of the row count and the
-//! configured thread count, and every kernel assigns each output row to
-//! exactly one thread without changing any per-row summation order. Results
-//! are therefore bitwise identical across runs *and* across
-//! `DYNAMIX_THREADS` settings; only blocked-vs-scalar kernel differences
-//! (lane-wise partial sums) introduce float-level (~1e-7) deviations.
+//! [`KernelTier`] names the three kernel implementations in
+//! [`super::linalg`], selected by `DYNAMIX_KERNEL=auto|scalar|blocked|simd`:
 //!
-//! Sizing: `DYNAMIX_THREADS=N` pins the worker count; unset or invalid
-//! falls back to `std::thread::available_parallelism`. Small problems run
-//! sequentially — a scoped spawn costs ~10-50us, so fanning out only pays
-//! above [`PAR_FLOP_CUTOFF`] of work.
+//! * `scalar` — the plain reference triple loops. Always sequential; the
+//!   numerical ground truth the other tiers are held to.
+//! * `blocked` — cache-tiled, lane-unrolled portable kernels (the PR 2
+//!   hot path), row-partitioned across the worker pool.
+//! * `simd` — arch-gated AVX2/FMA intrinsics (`core::arch::x86_64` behind
+//!   `is_x86_feature_detected!`). On hardware without AVX2+FMA — or on
+//!   non-x86 targets — the request **resolves to `blocked`** (the portable
+//!   fallback), so `DYNAMIX_KERNEL=simd` is safe everywhere.
+//!
+//! `auto` (or unset) picks the fastest supported tier. Every constructor
+//! funnels through [`KernelTier::resolved`], so a [`Pool`] can only ever
+//! hold a tier the current CPU can execute — the `unsafe` AVX2 dispatch in
+//! `linalg` leans on exactly that invariant.
+//!
+//! Bit-parity contract: the reduce-sensitive kernels (`matmul_at`,
+//! `col_sums`) fold rows sequentially per output element **in every tier**
+//! (the simd tier uses mul+add, not FMA, for these), so the sharded data
+//! plane's chained reduction stays bit-identical to the fused step under
+//! every `DYNAMIX_KERNEL` value. Forward/input-grad kernels (`matmul_acc`,
+//! `matmul_bt`) may use FMA and differ *across* tiers at float tolerance,
+//! but are deterministic and batch-shape-independent *within* a tier.
+//!
+//! ## Persistent workers
+//!
+//! One process-wide [`WorkerSet`] of parked threads executes every parallel
+//! region; kernels submit disjoint-chunk closures over a channel-style
+//! queue and the calling thread runs the first chunk itself. This replaces
+//! the per-call `std::thread::scope` spawns: a scoped spawn costs ~10-50us
+//! per thread per kernel call, a queue hand-off well under a microsecond,
+//! so the sequential cutoff drops ([`PAR_FLOP_CUTOFF`]) and small buckets
+//! profit from threading too. `rust/benches/train_step.rs` prices the pool
+//! against the old scoped-spawn strategy ([`run_scoped`]) and records the
+//! delta in `BENCH_native.json`.
+//!
+//! `DYNAMIX_THREADS` and `DYNAMIX_KERNEL` are read **once per process**
+//! (first [`Pool::global`] touch); every backend shares the same worker
+//! set — including the sharded data plane's loopback shard threads, which
+//! previously nested their own scoped spawns. Tests pin both axes with
+//! [`Pool::with_config`], which never reads the environment.
+//!
+//! Determinism: a chunk plan is a pure function of (row count, per-row
+//! cost, configured thread count); each output row belongs to exactly one
+//! chunk and no per-row summation order depends on the plan, so results
+//! are bitwise identical across `DYNAMIX_THREADS` settings and across
+//! which physical worker executes which chunk.
 
-/// Minimum approximate FLOP count of one kernel call before it is worth
-/// spawning threads at all (a scoped spawn is ~10-50us; 1 MFLOP of matmul
-/// is ~100-300us of single-core work).
-pub const PAR_FLOP_CUTOFF: usize = 1 << 20;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Minimum rows handed to each thread (keeps chunks cache-friendly and
-/// caps the thread count on small-M problems).
-pub const MIN_ROWS_PER_THREAD: usize = 32;
+/// Minimum approximate FLOP count of one kernel call before it fans out.
+/// With persistent workers the hand-off is a queue push (no spawn), so the
+/// cutoff sits 4x below the old scoped-spawn threshold of `1 << 20`.
+pub const PAR_FLOP_CUTOFF: usize = 1 << 18;
 
-/// Hard ceiling on the worker count (sanity clamp for absurd env values).
+/// Minimum rows handed to each chunk (keeps chunks cache-friendly and
+/// caps the fan-out on small-M problems). Half the scoped-spawn era's 32:
+/// cheap hand-offs make narrower chunks profitable.
+pub const MIN_ROWS_PER_THREAD: usize = 16;
+
+/// Hard ceiling on the configured thread count (sanity clamp for absurd
+/// env values).
 pub const MAX_THREADS: usize = 64;
 
-/// Thread-count policy for native kernels. Cheap to copy around; owns no
-/// threads (parallel regions are scoped per kernel call).
-#[derive(Clone, Copy, Debug)]
+/// Which kernel implementation the linalg entry points dispatch to.
+/// See the module docs for the tier contract; construct via
+/// [`KernelTier::parse`] / [`KernelTier::from_env`] or pass through
+/// [`KernelTier::resolved`] so `Simd` is never held on unsupported
+/// hardware.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Reference triple loops; sequential regardless of the thread count.
+    Scalar,
+    /// Cache-blocked, lane-unrolled portable kernels (threaded).
+    Blocked,
+    /// AVX2/FMA intrinsics (threaded); resolves to `Blocked` off-arch.
+    Simd,
+}
+
+impl KernelTier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Blocked => "blocked",
+            KernelTier::Simd => "simd",
+        }
+    }
+
+    /// Parse a `DYNAMIX_KERNEL` / `--kernel` value. `auto` (and the empty
+    /// string) pick the fastest supported tier; `simd` resolves to its
+    /// portable fallback when the CPU lacks AVX2+FMA.
+    pub fn parse(s: &str) -> anyhow::Result<KernelTier> {
+        match s {
+            "scalar" => Ok(KernelTier::Scalar),
+            "blocked" => Ok(KernelTier::Blocked),
+            "simd" => Ok(KernelTier::Simd.resolved()),
+            "auto" | "" => Ok(KernelTier::detect()),
+            other => anyhow::bail!("unknown kernel tier {other:?} (auto|scalar|blocked|simd)"),
+        }
+    }
+
+    /// Tier from `DYNAMIX_KERNEL`; unset, empty or invalid values fall
+    /// back to `auto` (the CLI's `--kernel` validates loudly instead).
+    pub fn from_env() -> KernelTier {
+        match std::env::var("DYNAMIX_KERNEL") {
+            Ok(v) => KernelTier::parse(v.trim()).unwrap_or_else(|_| KernelTier::detect()),
+            Err(_) => KernelTier::detect(),
+        }
+    }
+
+    /// The fastest tier this CPU supports (`auto`).
+    pub fn detect() -> KernelTier {
+        if simd_supported() {
+            KernelTier::Simd
+        } else {
+            KernelTier::Blocked
+        }
+    }
+
+    /// Downgrade `Simd` to `Blocked` when the CPU lacks AVX2+FMA. Every
+    /// `Pool` constructor applies this, making the tier safe to dispatch
+    /// on without re-checking CPU features per kernel call.
+    pub fn resolved(self) -> KernelTier {
+        if self == KernelTier::Simd && !simd_supported() {
+            KernelTier::Blocked
+        } else {
+            self
+        }
+    }
+
+    /// Every tier executable on this machine (parity suites iterate this:
+    /// `[Scalar, Blocked]` plus `Simd` where supported).
+    pub fn available() -> Vec<KernelTier> {
+        let mut tiers = vec![KernelTier::Scalar, KernelTier::Blocked];
+        if simd_supported() {
+            tiers.push(KernelTier::Simd);
+        }
+        tiers
+    }
+}
+
+/// Whether the `simd` tier's AVX2+FMA kernels can run on this CPU.
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+/// One queued parallel-region chunk: the closure plus the region's
+/// completion latch.
+struct Task {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    sync: Arc<RegionSync>,
+}
+
+/// Completion latch of one parallel region: counts outstanding worker
+/// chunks and records whether any of them panicked.
+struct RegionSync {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl RegionSync {
+    fn new(outstanding: usize) -> Self {
+        RegionSync {
+            remaining: Mutex::new(outstanding),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn finish(&self, panicked: bool) {
+        if panicked {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every outstanding chunk has finished (success or
+    /// panic). Must return before the submitting frame unwinds — the
+    /// chunks borrow its stack.
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap();
+        }
+    }
+
+    fn any_panicked(&self) -> bool {
+        self.panicked.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide set of persistent, parked kernel worker threads.
+/// Spawned once (lazily) and never torn down — workers block on the queue
+/// condvar between regions, costing nothing while idle.
+pub struct WorkerSet {
+    queue: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+    workers: usize,
+}
+
+impl WorkerSet {
+    /// Spawn `workers` parked threads (the calling thread of each parallel
+    /// region always executes one chunk itself, so `configured - 1`).
+    fn spawn(workers: usize) -> Arc<WorkerSet> {
+        let set = Arc::new(WorkerSet {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            workers,
+        });
+        for i in 0..workers {
+            let s = set.clone();
+            std::thread::Builder::new()
+                .name(format!("dynamix-kern-{i}"))
+                .spawn(move || s.worker_loop())
+                .expect("spawn kernel worker thread");
+        }
+        set
+    }
+
+    /// Physical worker threads (excluding region callers).
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let task = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(t) = q.pop_front() {
+                        break t;
+                    }
+                    q = self.ready.wait(q).unwrap();
+                }
+            };
+            let Task { job, sync } = task;
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            sync.finish(r.is_err());
+        }
+    }
+
+    /// Execute `jobs` as one parallel region: the first job runs on the
+    /// calling thread, the rest go to the parked workers. Blocks until
+    /// every job has completed; a panicking job panics the caller *after*
+    /// the region has fully drained (the jobs borrow the caller's stack).
+    fn run<'scope, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        debug_assert!(jobs.len() > 1, "single-job regions run inline");
+        let sync = Arc::new(RegionSync::new(jobs.len() - 1));
+        let mut it = jobs.into_iter();
+        let first = it.next().expect("jobs is non-empty");
+        {
+            let mut q = self.queue.lock().unwrap();
+            for job in it {
+                let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(job);
+                // SAFETY: the task borrows data from this call frame
+                // ('scope), but `sync.wait()` below blocks — on the
+                // success *and* panic paths — until every task has run to
+                // completion, so no borrow outlives the frame.
+                let job: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(job) };
+                q.push_back(Task { job, sync: sync.clone() });
+            }
+        }
+        self.ready.notify_all();
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(first));
+        sync.wait();
+        match caller {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(()) if sync.any_panicked() => panic!("kernel worker chunk panicked"),
+            Ok(()) => {}
+        }
+    }
+}
+
+/// Process-global execution configuration, read from the environment
+/// exactly once (`DYNAMIX_THREADS`, `DYNAMIX_KERNEL`). Every
+/// `Pool::global()` / `Pool::default()` site shares this — no per-site
+/// env re-reads, no per-backend worker sets.
+struct GlobalCfg {
+    threads: usize,
+    tier: KernelTier,
+}
+
+fn global_cfg() -> &'static GlobalCfg {
+    static CFG: OnceLock<GlobalCfg> = OnceLock::new();
+    CFG.get_or_init(|| GlobalCfg {
+        threads: threads_from_env(),
+        tier: KernelTier::from_env(),
+    })
+}
+
+fn threads_from_env() -> usize {
+    std::env::var("DYNAMIX_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .min(MAX_THREADS)
+}
+
+/// The one worker set every pool in the process shares (lazily spawned;
+/// sized from the global config so `DYNAMIX_THREADS=N` bounds the process
+/// at `N-1` persistent workers plus the calling threads).
+fn shared_workers() -> Arc<WorkerSet> {
+    static WORKERS: OnceLock<Arc<WorkerSet>> = OnceLock::new();
+    WORKERS
+        .get_or_init(|| WorkerSet::spawn(global_cfg().threads.saturating_sub(1)))
+        .clone()
+}
+
+/// Scoped-spawn execution baseline: the pre-pool strategy (one
+/// `std::thread::scope` spawn per chunk per kernel call), kept **only** so
+/// `benches/train_step.rs` can price the persistent pool against it.
+/// Production kernels never call this.
+pub fn run_scoped<F: FnOnce() + Send>(jobs: Vec<F>) {
+    std::thread::scope(|s| {
+        for j in jobs {
+            s.spawn(j);
+        }
+    });
+}
+
+/// Kernel execution policy: the partition width (configured thread
+/// count), the kernel tier, and a handle to the shared persistent
+/// workers. Cheap to clone; owns no threads of its own.
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    tier: KernelTier,
+    workers: Option<Arc<WorkerSet>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("tier", &self.tier)
+            .field(
+                "workers",
+                &self.workers.as_ref().map(|w| w.worker_count()),
+            )
+            .finish()
+    }
 }
 
 impl Default for Pool {
     fn default() -> Self {
-        Self::from_env()
+        Self::global()
     }
 }
 
 impl Pool {
-    /// Resolve the worker count from `DYNAMIX_THREADS`, falling back to the
-    /// machine's available parallelism.
+    /// The process-wide pool: `DYNAMIX_THREADS` + `DYNAMIX_KERNEL` read
+    /// once (first call), one shared worker set for every backend. This is
+    /// what backends constructed without explicit overrides use.
+    pub fn global() -> Self {
+        let cfg = global_cfg();
+        Self::with_config(cfg.threads, cfg.tier)
+    }
+
+    /// Re-read the environment (uncached). Exists for the env-plumbing
+    /// tests and the CLI docs; production paths share [`Pool::global`].
     pub fn from_env() -> Self {
-        let threads = std::env::var("DYNAMIX_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
-            });
-        Pool {
-            threads: threads.min(MAX_THREADS),
-        }
+        Self::with_config(threads_from_env(), KernelTier::from_env())
     }
 
-    /// Fixed worker count (tests / explicit overrides).
+    /// Pinned partition width, global kernel tier (tests that sweep the
+    /// thread axis without touching the process environment).
     pub fn with_threads(threads: usize) -> Self {
-        Pool {
-            threads: threads.max(1).min(MAX_THREADS),
-        }
+        Self::with_config(threads, global_cfg().tier)
     }
 
-    /// Single-threaded pool (the scalar-reference execution mode).
+    /// Pinned partition width *and* kernel tier — never reads the
+    /// environment. The tier is [`KernelTier::resolved`] so requesting
+    /// `Simd` on unsupported hardware gets the portable fallback. Pools
+    /// that can never dispatch a parallel region (single partition, or
+    /// the always-sequential scalar tier) skip the worker-set attachment,
+    /// so e.g. a `--threads 1` shard-worker process spawns no idle
+    /// kernel threads.
+    pub fn with_config(threads: usize, tier: KernelTier) -> Self {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let tier = tier.resolved();
+        let workers = if threads > 1 && tier != KernelTier::Scalar {
+            Some(shared_workers())
+        } else {
+            None
+        };
+        Pool { threads, tier, workers }
+    }
+
+    /// Single-threaded pool at the global kernel tier (compat wrappers,
+    /// golden tests). Never partitions and never touches the worker set.
     pub fn sequential() -> Self {
-        Pool { threads: 1 }
+        Pool {
+            threads: 1,
+            tier: global_cfg().tier,
+            workers: None,
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// Execute the chunk closures as one parallel region on the shared
+    /// persistent workers (caller runs the first chunk). Falls back to
+    /// inline sequential execution for 0/1-job regions or when no workers
+    /// exist (sequential pools, single-core machines) — same results
+    /// either way, since chunks are disjoint by construction.
+    pub fn run<'scope, F>(&self, mut jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        match &self.workers {
+            Some(ws) if jobs.len() > 1 && ws.worker_count() > 0 => ws.run(jobs),
+            _ => {
+                for j in jobs.drain(..) {
+                    j();
+                }
+            }
+        }
+    }
+
     /// Rows per chunk for an `m`-row problem whose per-row cost is roughly
-    /// `row_flops` FLOPs. Returns `m` (one chunk — run sequentially, no
-    /// spawn) when the problem is too small to amortize thread startup.
-    /// Deterministic in (m, row_flops, threads) only.
+    /// `row_flops` FLOPs. Returns `m` (one chunk — run inline) when the
+    /// problem is too small to be worth handing off. Deterministic in
+    /// (m, row_flops, threads) only — never in the physical worker count.
     pub fn rows_per_chunk(&self, m: usize, row_flops: usize) -> usize {
         if self.threads <= 1 || m < 2 * MIN_ROWS_PER_THREAD {
             return m.max(1);
@@ -98,6 +470,7 @@ impl Pool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn sequential_pool_never_partitions() {
@@ -109,11 +482,14 @@ mod tests {
     #[test]
     fn small_problems_stay_sequential() {
         let p = Pool::with_threads(8);
-        // Tiny row count.
+        // Tiny row count: below 2 * MIN_ROWS_PER_THREAD.
         assert_eq!(p.rows_per_chunk(8, 1 << 20), 8);
-        assert_eq!(p.rows_per_chunk(32, 1 << 20), 32);
+        assert_eq!(p.rows_per_chunk(2 * MIN_ROWS_PER_THREAD - 1, 1 << 20), 31);
         // Large row count but trivial per-row work.
         assert_eq!(p.rows_per_chunk(4096, 4), 4096);
+        // The persistent pool's cutoff sits below the old 1 MFLOP spawn
+        // threshold: a 32-row, 8 KFLOP/row problem (256 KFLOP) now fans out.
+        assert_eq!(p.rows_per_chunk(32, 1 << 13), 16);
     }
 
     #[test]
@@ -123,7 +499,7 @@ mod tests {
         assert_eq!(per, 1024);
         // Same inputs -> same partition.
         assert_eq!(per, p.rows_per_chunk(4096, 2 * 128 * 64));
-        // Chunk floor: never hands a thread fewer than MIN_ROWS_PER_THREAD.
+        // Chunk floor: never hands a chunk fewer than MIN_ROWS_PER_THREAD.
         let per = Pool::with_threads(64).rows_per_chunk(64, 1 << 20);
         assert!(per >= MIN_ROWS_PER_THREAD, "per={per}");
     }
@@ -132,5 +508,129 @@ mod tests {
     fn with_threads_clamps() {
         assert_eq!(Pool::with_threads(0).threads(), 1);
         assert_eq!(Pool::with_threads(10_000).threads(), MAX_THREADS);
+    }
+
+    #[test]
+    fn run_executes_every_job_exactly_once() {
+        // Exercised through the shared persistent workers when present.
+        let hits = AtomicUsize::new(0);
+        let p = Pool::with_threads(4);
+        p.run(
+            (0..7)
+                .map(|_| || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                })
+                .collect(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 7);
+        // Regions are reusable back to back (workers park between).
+        p.run(
+            (0..3)
+                .map(|_| || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                })
+                .collect(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+        // Empty and single-job regions run inline.
+        p.run(Vec::<fn()>::new());
+        Pool::sequential().run(vec![|| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        }]);
+        assert_eq!(hits.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    fn run_borrows_caller_stack_mutably() {
+        // The whole point of the region latch: chunks may borrow
+        // stack-local buffers, disjointly, like the kernels do.
+        let mut buf = vec![0u32; 64];
+        let p = Pool::with_threads(4);
+        p.run(
+            buf.chunks_mut(16)
+                .enumerate()
+                .map(|(i, c)| {
+                    move || {
+                        for v in c.iter_mut() {
+                            *v = i as u32 + 1;
+                        }
+                    }
+                })
+                .collect(),
+        );
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, (i / 16) as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_reads_env_once() {
+        // Two global handles agree on config and on worker attachment;
+        // when attached, they share one worker set (pointer-identical
+        // Arc) — the per-site env re-read is gone.
+        let a = Pool::global();
+        let b = Pool::default();
+        assert_eq!(a.threads(), b.threads());
+        assert_eq!(a.tier(), b.tier());
+        match (&a.workers, &b.workers) {
+            (Some(wa), Some(wb)) => {
+                assert!(Arc::ptr_eq(wa, wb), "global pools must share one WorkerSet")
+            }
+            (None, None) => {}
+            _ => panic!("global pools must agree on worker attachment"),
+        }
+        // Pinned multi-thread pools at a threaded tier share the same
+        // physical workers; degenerate configs attach none.
+        let c = Pool::with_config(7, KernelTier::Blocked);
+        assert_eq!(c.threads(), 7, "partition width is the pinned value");
+        let cw = c.workers.as_ref().expect("threaded pool attaches workers");
+        if let Some(wa) = &a.workers {
+            assert!(Arc::ptr_eq(wa, cw), "pinned pools share the process workers");
+        }
+        assert!(Pool::with_config(1, KernelTier::Blocked).workers.is_none());
+        assert!(Pool::with_config(8, KernelTier::Scalar).workers.is_none());
+        assert!(Pool::sequential().workers.is_none());
+    }
+
+    #[test]
+    fn tier_parse_and_resolution() {
+        assert_eq!(KernelTier::parse("scalar").unwrap(), KernelTier::Scalar);
+        assert_eq!(KernelTier::parse("blocked").unwrap(), KernelTier::Blocked);
+        assert!(KernelTier::parse("avx512").is_err());
+        // auto and simd both resolve to something executable here.
+        let auto = KernelTier::parse("auto").unwrap();
+        let simd = KernelTier::parse("simd").unwrap();
+        assert_ne!(auto, KernelTier::Scalar);
+        if simd_supported() {
+            assert_eq!(simd, KernelTier::Simd);
+            assert_eq!(auto, KernelTier::Simd);
+        } else {
+            assert_eq!(simd, KernelTier::Blocked);
+            assert_eq!(auto, KernelTier::Blocked);
+        }
+        // with_config can never hold an unexecutable tier.
+        let p = Pool::with_config(2, KernelTier::Simd);
+        assert_eq!(p.tier(), KernelTier::Simd.resolved());
+        // available() always contains the resolved tiers.
+        let avail = KernelTier::available();
+        assert!(avail.contains(&KernelTier::Scalar));
+        assert!(avail.contains(&KernelTier::Blocked));
+        assert_eq!(avail.contains(&KernelTier::Simd), simd_supported());
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel worker chunk panicked")]
+    fn worker_panic_propagates_after_drain() {
+        let p = Pool::with_config(4, KernelTier::Blocked);
+        if p.workers.as_ref().unwrap().worker_count() == 0 {
+            // Single-core machine: jobs would run inline; raise the
+            // expected message directly so the harness still passes.
+            panic!("kernel worker chunk panicked");
+        }
+        // First job (caller-run) succeeds; a worker job panics.
+        p.run(vec![
+            Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+            Box::new(|| panic!("boom")),
+        ]);
     }
 }

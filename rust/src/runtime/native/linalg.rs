@@ -1,34 +1,54 @@
-//! Dense linear algebra for the native backend: cache-blocked, lane-unrolled
-//! and row-partitioned across a scoped thread pool.
+//! Dense linear algebra for the native backend: three kernel tiers behind
+//! one dispatch seam, row-partitioned across the persistent worker pool.
 //!
 //! Shapes follow the JAX convention used by `python/compile`: activations
 //! are `[M, K]` row-major, weights `[K, N]` row-major (`fan_in` rows). The
 //! three multiply kernels cover forward (`x @ w`), input gradients
 //! (`dy @ w^T`) and weight gradients (`x^T @ dy`).
 //!
-//! Kernel structure (see [`scalar`] for the plain reference loops):
+//! ## Tiers (see [`super::exec::KernelTier`])
 //!
-//! * **Tiling** — `matmul_acc` blocks rows by [`TILE_I`] and the reduction
-//!   dimension by [`TILE_K`], so one `TILE_K x n` slab of `w` stays hot in
-//!   L1 across a row block; the other kernels stream contiguously by
-//!   construction (their operands at zoo sizes are L1/L2-resident).
-//! * **Unrolling** — inner loops run over fixed [`LANE`]-wide sub-slices
-//!   with the bounds hoisted, which LLVM turns into SIMD; `matmul_acc`
-//!   additionally unrolls 4 reduction steps so each pass over the output
-//!   row performs 4 fused multiply-adds per element.
-//! * **Row-level sparsity skip** — an all-zero input/gradient *row* (a
-//!   padded sample, or a masked sample whose loss gradient is exactly zero)
-//!   skips that row's whole O(k*n) contribution. This replaces the old
-//!   per-element `a == 0.0` branch, which pessimized dense inputs by
-//!   putting a compare+branch inside the hot loop.
-//! * **Threading** — `matmul_acc`/`matmul_bt` partition the M (batch) rows
-//!   and `matmul_at` the K (output) rows across `pool.threads()` scoped
-//!   threads. Each output row is written by exactly one thread and no
-//!   per-row summation order changes, so results are bitwise identical for
-//!   every `DYNAMIX_THREADS` value; small problems run inline (see
-//!   [`super::exec::Pool::rows_per_chunk`]).
+//! * [`scalar`] — the reference triple loops: no tiling, no unrolling, no
+//!   threading, no sparsity skips. Numerical ground truth.
+//! * `blocked` — cache-tiled ([`TILE_I`]/[`TILE_K`]), [`LANE`]-unrolled
+//!   portable kernels with a row-level all-zero skip (padded/masked rows
+//!   cost one O(len) scan instead of O(len*n) multiply-adds).
+//! * `simd` — AVX2/FMA intrinsics with the same blocking structure,
+//!   reached only through a [`KernelTier::resolved`] tier (so the
+//!   `unsafe` feature-gated calls are sound by construction).
+//!
+//! ## Bit-parity rules
+//!
+//! The **reduce-sensitive** kernels fold the batch dimension sequentially
+//! per output element in *every* tier:
+//!
+//! * [`matmul_at`] — each `dw[kk,j]` accumulates rows `i = 0..m` in order,
+//!   one `mul`+`add` rounding pair per step; the simd tier deliberately
+//!   avoids FMA here so all three tiers produce **identical bits**.
+//! * [`col_sums`] — one shared implementation for every tier.
+//!
+//! This is what lets the sharded data plane chain shard backwards through
+//! a traveling accumulator and reproduce the fused gradient bit for bit
+//! under any `DYNAMIX_KERNEL` setting (`tests/sharded_parity.rs`).
+//!
+//! The forward/input-grad kernels ([`matmul_acc`], [`matmul_bt`]) are
+//! per-row independent — a row's value never depends on the batch size or
+//! the chunk plan — but *across* tiers they may differ at float tolerance
+//! (the simd tier uses FMA; the packed-panel `bt` folds `j` in a different
+//! association), which the parity suite pins to 1e-5 of scalar.
+//!
+//! ## Packed panels
+//!
+//! `matmul_bt`'s weight operand is walked row-by-row as a dot product; the
+//! workspace-backed entry point [`matmul_bt_ws`] instead packs `w` into a
+//! k-major `[N, K]` panel (cached per generation in
+//! [`super::workspace::PanelCache`]) and streams it as an axpy
+//! accumulation — contiguous loads, no horizontal reductions, and the
+//! panel is reused for every use within a step and invalidated by the
+//! next step's generation bump (optimizer updates change `w`).
 
-use super::exec::Pool;
+use super::exec::{KernelTier, Pool};
+use super::workspace::PanelCache;
 
 /// Unroll width of the innermost (column) loops. 8 f32 lanes = one AVX2
 /// register / two NEON registers; LLVM vectorizes the fixed-size bodies.
@@ -97,6 +117,471 @@ pub mod scalar {
     }
 }
 
+/// Cache-blocked, lane-unrolled portable kernels (the `blocked` tier; also
+/// the portable fallback bodies the `simd` tier shadows with intrinsics).
+mod blocked {
+    use super::{row_all_zero, LANE, TILE_I, TILE_K};
+
+    pub(super) fn matmul_acc_block(
+        x: &[f32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let mut i0 = 0;
+        while i0 < rows {
+            let i1 = (i0 + TILE_I).min(rows);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + TILE_K).min(k);
+                for i in i0..i1 {
+                    let xrow = &x[i * k + k0..i * k + k1];
+                    if row_all_zero(xrow) {
+                        continue; // padded row: whole k-slab contributes nothing
+                    }
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let mut kk = 0;
+                    let kt = k1 - k0;
+                    while kk + 4 <= kt {
+                        let a0 = xrow[kk];
+                        let a1 = xrow[kk + 1];
+                        let a2 = xrow[kk + 2];
+                        let a3 = xrow[kk + 3];
+                        let w0 = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                        let w1 = &w[(k0 + kk + 1) * n..(k0 + kk + 1) * n + n];
+                        let w2 = &w[(k0 + kk + 2) * n..(k0 + kk + 2) * n + n];
+                        let w3 = &w[(k0 + kk + 3) * n..(k0 + kk + 3) * n + n];
+                        let mut j = 0;
+                        while j + LANE <= n {
+                            let o = &mut orow[j..j + LANE];
+                            let v0 = &w0[j..j + LANE];
+                            let v1 = &w1[j..j + LANE];
+                            let v2 = &w2[j..j + LANE];
+                            let v3 = &w3[j..j + LANE];
+                            for l in 0..LANE {
+                                o[l] += a0 * v0[l] + a1 * v1[l] + a2 * v2[l] + a3 * v3[l];
+                            }
+                            j += LANE;
+                        }
+                        while j < n {
+                            orow[j] += a0 * w0[j] + a1 * w1[j] + a2 * w2[j] + a3 * w3[j];
+                            j += 1;
+                        }
+                        kk += 4;
+                    }
+                    while kk < kt {
+                        let a = xrow[kk];
+                        let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                        let mut j = 0;
+                        while j + LANE <= n {
+                            let o = &mut orow[j..j + LANE];
+                            let v = &wrow[j..j + LANE];
+                            for l in 0..LANE {
+                                o[l] += a * v[l];
+                            }
+                            j += LANE;
+                        }
+                        while j < n {
+                            orow[j] += a * wrow[j];
+                            j += 1;
+                        }
+                        kk += 1;
+                    }
+                }
+                k0 = k1;
+            }
+            i0 = i1;
+        }
+    }
+
+    pub(super) fn matmul_bt_block(
+        dy: &[f32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        dx: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            let dxrow = &mut dx[i * k..(i + 1) * k];
+            if row_all_zero(dyrow) {
+                dxrow.fill(0.0); // masked sample: gradient row is exactly zero
+                continue;
+            }
+            for kk in 0..k {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut acc = [0.0f32; LANE];
+                let mut j = 0;
+                while j + LANE <= n {
+                    let d = &dyrow[j..j + LANE];
+                    let v = &wrow[j..j + LANE];
+                    for l in 0..LANE {
+                        acc[l] += d[l] * v[l];
+                    }
+                    j += LANE;
+                }
+                let mut s = 0.0f32;
+                while j < n {
+                    s += dyrow[j] * wrow[j];
+                    j += 1;
+                }
+                for &a in &acc {
+                    s += a;
+                }
+                dxrow[kk] = s;
+            }
+        }
+    }
+
+    /// Packed-panel input gradient: `wt` is the k-major `[N, K]` transpose
+    /// of `w` (`wt[j*k + kk] == w[kk*n + j]`), streamed as an axpy over
+    /// `j` — contiguous loads, no horizontal reductions. Overwrites `dx`.
+    pub(super) fn matmul_bt_packed_block(
+        dy: &[f32],
+        wt: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        dx: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            let dxrow = &mut dx[i * k..(i + 1) * k];
+            dxrow.fill(0.0);
+            if row_all_zero(dyrow) {
+                continue; // masked sample: gradient row is exactly zero
+            }
+            for j in 0..n {
+                let d = dyrow[j];
+                let wtrow = &wt[j * k..(j + 1) * k];
+                let mut kk = 0;
+                while kk + LANE <= k {
+                    let o = &mut dxrow[kk..kk + LANE];
+                    let v = &wtrow[kk..kk + LANE];
+                    for l in 0..LANE {
+                        o[l] += d * v[l];
+                    }
+                    kk += LANE;
+                }
+                while kk < k {
+                    dxrow[kk] += d * wtrow[kk];
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    pub(super) fn matmul_at_block(
+        x: &[f32],
+        dy: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        k0: usize,
+        dw: &mut [f32],
+    ) {
+        let kr = dw.len() / n;
+        for i in 0..m {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            if row_all_zero(dyrow) {
+                continue; // masked sample contributes no weight gradient
+            }
+            let xrow = &x[i * k + k0..i * k + k0 + kr];
+            for kk in 0..kr {
+                let a = xrow[kk];
+                let dwrow = &mut dw[kk * n..(kk + 1) * n];
+                let mut j = 0;
+                while j + LANE <= n {
+                    let o = &mut dwrow[j..j + LANE];
+                    let d = &dyrow[j..j + LANE];
+                    for l in 0..LANE {
+                        o[l] += a * d[l];
+                    }
+                    j += LANE;
+                }
+                while j < n {
+                    dwrow[j] += a * dyrow[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// AVX2/FMA kernels (x86_64 only). Every function is `unsafe` with
+/// `target_feature(enable = "avx2,fma")`; callers reach them exclusively
+/// through the tier dispatch below, and a [`KernelTier::Simd`] pool can
+/// only be constructed after `is_x86_feature_detected!` confirmed support
+/// ([`KernelTier::resolved`]), which is what makes the calls sound.
+///
+/// `matmul_at` deliberately uses `mul`+`add` (NOT `fmadd`): one rounding
+/// per operation, matching the scalar/blocked fold bit for bit. The
+/// forward/input-grad kernels use FMA freely (cross-tier tolerance 1e-5).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::{row_all_zero, LANE, TILE_I, TILE_K};
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of 8 lanes (deterministic pairwise association).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matmul_acc_block(
+        x: &[f32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let mut i0 = 0;
+        while i0 < rows {
+            let i1 = (i0 + TILE_I).min(rows);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + TILE_K).min(k);
+                for i in i0..i1 {
+                    let xrow = &x[i * k + k0..i * k + k1];
+                    if row_all_zero(xrow) {
+                        continue; // padded row: whole k-slab contributes nothing
+                    }
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let kt = k1 - k0;
+                    let mut kk = 0;
+                    while kk + 4 <= kt {
+                        let (a0, a1, a2, a3) =
+                            (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
+                        let va0 = _mm256_set1_ps(a0);
+                        let va1 = _mm256_set1_ps(a1);
+                        let va2 = _mm256_set1_ps(a2);
+                        let va3 = _mm256_set1_ps(a3);
+                        let w0 = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                        let w1 = &w[(k0 + kk + 1) * n..(k0 + kk + 1) * n + n];
+                        let w2 = &w[(k0 + kk + 2) * n..(k0 + kk + 2) * n + n];
+                        let w3 = &w[(k0 + kk + 3) * n..(k0 + kk + 3) * n + n];
+                        let mut j = 0;
+                        while j + LANE <= n {
+                            let mut o = _mm256_loadu_ps(orow.as_ptr().add(j));
+                            o = _mm256_fmadd_ps(va0, _mm256_loadu_ps(w0.as_ptr().add(j)), o);
+                            o = _mm256_fmadd_ps(va1, _mm256_loadu_ps(w1.as_ptr().add(j)), o);
+                            o = _mm256_fmadd_ps(va2, _mm256_loadu_ps(w2.as_ptr().add(j)), o);
+                            o = _mm256_fmadd_ps(va3, _mm256_loadu_ps(w3.as_ptr().add(j)), o);
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
+                            j += LANE;
+                        }
+                        while j < n {
+                            orow[j] += a0 * w0[j] + a1 * w1[j] + a2 * w2[j] + a3 * w3[j];
+                            j += 1;
+                        }
+                        kk += 4;
+                    }
+                    while kk < kt {
+                        let a = xrow[kk];
+                        let va = _mm256_set1_ps(a);
+                        let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                        let mut j = 0;
+                        while j + LANE <= n {
+                            let mut o = _mm256_loadu_ps(orow.as_ptr().add(j));
+                            o = _mm256_fmadd_ps(va, _mm256_loadu_ps(wrow.as_ptr().add(j)), o);
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
+                            j += LANE;
+                        }
+                        while j < n {
+                            orow[j] += a * wrow[j];
+                            j += 1;
+                        }
+                        kk += 1;
+                    }
+                }
+                k0 = k1;
+            }
+            i0 = i1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matmul_bt_block(
+        dy: &[f32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        dx: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            let dxrow = &mut dx[i * k..(i + 1) * k];
+            if row_all_zero(dyrow) {
+                dxrow.fill(0.0);
+                continue;
+            }
+            for kk in 0..k {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut acc = _mm256_setzero_ps();
+                let mut j = 0;
+                while j + LANE <= n {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(dyrow.as_ptr().add(j)),
+                        _mm256_loadu_ps(wrow.as_ptr().add(j)),
+                        acc,
+                    );
+                    j += LANE;
+                }
+                let mut s = hsum256(acc);
+                while j < n {
+                    s += dyrow[j] * wrow[j];
+                    j += 1;
+                }
+                dxrow[kk] = s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matmul_bt_packed_block(
+        dy: &[f32],
+        wt: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        dx: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            let dxrow = &mut dx[i * k..(i + 1) * k];
+            dxrow.fill(0.0);
+            if row_all_zero(dyrow) {
+                continue;
+            }
+            for j in 0..n {
+                let d = dyrow[j];
+                let vd = _mm256_set1_ps(d);
+                let wtrow = &wt[j * k..(j + 1) * k];
+                let mut kk = 0;
+                while kk + LANE <= k {
+                    let mut o = _mm256_loadu_ps(dxrow.as_ptr().add(kk));
+                    o = _mm256_fmadd_ps(vd, _mm256_loadu_ps(wtrow.as_ptr().add(kk)), o);
+                    _mm256_storeu_ps(dxrow.as_mut_ptr().add(kk), o);
+                    kk += LANE;
+                }
+                while kk < k {
+                    dxrow[kk] += d * wtrow[kk];
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    /// Bitwise-parity-critical: `mul`+`add` only (no FMA), same rounding
+    /// sequence per output element as the scalar and blocked folds.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_at_block(
+        x: &[f32],
+        dy: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        k0: usize,
+        dw: &mut [f32],
+    ) {
+        let kr = dw.len() / n;
+        for i in 0..m {
+            let dyrow = &dy[i * n..(i + 1) * n];
+            if row_all_zero(dyrow) {
+                continue;
+            }
+            let xrow = &x[i * k + k0..i * k + k0 + kr];
+            for kk in 0..kr {
+                let a = xrow[kk];
+                let va = _mm256_set1_ps(a);
+                let dwrow = &mut dw[kk * n..(kk + 1) * n];
+                let mut j = 0;
+                while j + LANE <= n {
+                    let o = _mm256_add_ps(
+                        _mm256_loadu_ps(dwrow.as_ptr().add(j)),
+                        _mm256_mul_ps(va, _mm256_loadu_ps(dyrow.as_ptr().add(j))),
+                    );
+                    _mm256_storeu_ps(dwrow.as_mut_ptr().add(j), o);
+                    j += LANE;
+                }
+                while j < n {
+                    dwrow[j] += a * dyrow[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+// --- tier dispatch (one leaf call per chunk; `Simd` is only reachable
+// through a resolved tier, which guarantees AVX2+FMA support) ---
+
+fn acc_block(tier: KernelTier, x: &[f32], w: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::matmul_acc_block(x, w, rows, k, n, out) },
+        _ => blocked::matmul_acc_block(x, w, rows, k, n, out),
+    }
+}
+
+fn bt_block(tier: KernelTier, dy: &[f32], w: &[f32], rows: usize, k: usize, n: usize, dx: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::matmul_bt_block(dy, w, rows, k, n, dx) },
+        _ => blocked::matmul_bt_block(dy, w, rows, k, n, dx),
+    }
+}
+
+fn bt_packed_block(tier: KernelTier, dy: &[f32], wt: &[f32], rows: usize, k: usize, n: usize, dx: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::matmul_bt_packed_block(dy, wt, rows, k, n, dx) },
+        _ => blocked::matmul_bt_packed_block(dy, wt, rows, k, n, dx),
+    }
+}
+
+fn at_block(tier: KernelTier, x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, k0: usize, dw: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::matmul_at_block(x, dy, m, k, n, k0, dw) },
+        _ => blocked::matmul_at_block(x, dy, m, k, n, k0, dw),
+    }
+}
+
+/// Pack `w[K,N]` into its k-major transpose `wt[N,K]` (row `j` of `wt` is
+/// column `j` of `w`), reusing `wt`'s capacity.
+pub fn pack_wt(w: &[f32], k: usize, n: usize, wt: &mut Vec<f32>) {
+    debug_assert_eq!(w.len(), k * n);
+    // The loop below writes every slot, so a warm recycled buffer of the
+    // right length skips the resize's redundant zero-fill entirely.
+    if wt.len() != k * n {
+        wt.clear();
+        wt.resize(k * n, 0.0);
+    }
+    for kk in 0..k {
+        let wrow = &w[kk * n..(kk + 1) * n];
+        for (j, &v) in wrow.iter().enumerate() {
+            wt[j * k + kk] = v;
+        }
+    }
+}
+
 /// `out[M,N] += x[M,K] @ w[K,N]`. `out` must be pre-zeroed by the caller
 /// (or hold a partial sum to accumulate into).
 pub fn matmul_acc(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
@@ -106,86 +591,27 @@ pub fn matmul_acc(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usiz
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let per = pool.rows_per_chunk(m, 2 * k * n);
-    if per >= m {
-        matmul_acc_block(x, w, m, k, n, out);
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::matmul_acc(x, w, m, k, n, out);
         return;
     }
-    std::thread::scope(|s| {
-        for (xc, oc) in x.chunks(per * k).zip(out.chunks_mut(per * n)) {
-            s.spawn(move || matmul_acc_block(xc, w, xc.len() / k, k, n, oc));
-        }
-    });
-}
-
-fn matmul_acc_block(x: &[f32], w: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
-    let mut i0 = 0;
-    while i0 < rows {
-        let i1 = (i0 + TILE_I).min(rows);
-        let mut k0 = 0;
-        while k0 < k {
-            let k1 = (k0 + TILE_K).min(k);
-            for i in i0..i1 {
-                let xrow = &x[i * k + k0..i * k + k1];
-                if row_all_zero(xrow) {
-                    continue; // padded row: whole k-slab contributes nothing
-                }
-                let orow = &mut out[i * n..(i + 1) * n];
-                let mut kk = 0;
-                let kt = k1 - k0;
-                while kk + 4 <= kt {
-                    let a0 = xrow[kk];
-                    let a1 = xrow[kk + 1];
-                    let a2 = xrow[kk + 2];
-                    let a3 = xrow[kk + 3];
-                    let w0 = &w[(k0 + kk) * n..(k0 + kk) * n + n];
-                    let w1 = &w[(k0 + kk + 1) * n..(k0 + kk + 1) * n + n];
-                    let w2 = &w[(k0 + kk + 2) * n..(k0 + kk + 2) * n + n];
-                    let w3 = &w[(k0 + kk + 3) * n..(k0 + kk + 3) * n + n];
-                    let mut j = 0;
-                    while j + LANE <= n {
-                        let o = &mut orow[j..j + LANE];
-                        let v0 = &w0[j..j + LANE];
-                        let v1 = &w1[j..j + LANE];
-                        let v2 = &w2[j..j + LANE];
-                        let v3 = &w3[j..j + LANE];
-                        for l in 0..LANE {
-                            o[l] += a0 * v0[l] + a1 * v1[l] + a2 * v2[l] + a3 * v3[l];
-                        }
-                        j += LANE;
-                    }
-                    while j < n {
-                        orow[j] += a0 * w0[j] + a1 * w1[j] + a2 * w2[j] + a3 * w3[j];
-                        j += 1;
-                    }
-                    kk += 4;
-                }
-                while kk < kt {
-                    let a = xrow[kk];
-                    let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
-                    let mut j = 0;
-                    while j + LANE <= n {
-                        let o = &mut orow[j..j + LANE];
-                        let v = &wrow[j..j + LANE];
-                        for l in 0..LANE {
-                            o[l] += a * v[l];
-                        }
-                        j += LANE;
-                    }
-                    while j < n {
-                        orow[j] += a * wrow[j];
-                        j += 1;
-                    }
-                    kk += 1;
-                }
-            }
-            k0 = k1;
-        }
-        i0 = i1;
+    let per = pool.rows_per_chunk(m, 2 * k * n);
+    if per >= m {
+        acc_block(tier, x, w, m, k, n, out);
+        return;
     }
+    pool.run(
+        x.chunks(per * k)
+            .zip(out.chunks_mut(per * n))
+            .map(|(xc, oc)| move || acc_block(tier, xc, w, xc.len() / k, k, n, oc))
+            .collect(),
+    );
 }
 
 /// `dx[M,K] = dy[M,N] @ w[K,N]^T` (input gradient; overwrites `dx`).
+/// Unpacked entry point (dot-product walk over `w` rows); hot paths with a
+/// workspace use [`matmul_bt_ws`] instead.
 pub fn matmul_bt(pool: &Pool, dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
@@ -193,52 +619,76 @@ pub fn matmul_bt(pool: &Pool, dy: &[f32], w: &[f32], m: usize, k: usize, n: usiz
     if m == 0 || k == 0 {
         return;
     }
-    let per = pool.rows_per_chunk(m, 2 * k * n);
-    if per >= m {
-        matmul_bt_block(dy, w, m, k, n, dx);
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::matmul_bt(dy, w, m, k, n, dx);
         return;
     }
-    std::thread::scope(|s| {
-        for (dyc, dxc) in dy.chunks(per * n).zip(dx.chunks_mut(per * k)) {
-            s.spawn(move || matmul_bt_block(dyc, w, dxc.len() / k, k, n, dxc));
-        }
-    });
+    let per = pool.rows_per_chunk(m, 2 * k * n);
+    if per >= m {
+        bt_block(tier, dy, w, m, k, n, dx);
+        return;
+    }
+    pool.run(
+        dy.chunks(per * n)
+            .zip(dx.chunks_mut(per * k))
+            .map(|(dyc, dxc)| move || bt_block(tier, dyc, w, dxc.len() / k, k, n, dxc))
+            .collect(),
+    );
 }
 
-fn matmul_bt_block(dy: &[f32], w: &[f32], rows: usize, k: usize, n: usize, dx: &mut [f32]) {
-    for i in 0..rows {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        let dxrow = &mut dx[i * k..(i + 1) * k];
-        if row_all_zero(dyrow) {
-            dxrow.fill(0.0); // masked sample: gradient row is exactly zero
-            continue;
-        }
-        for kk in 0..k {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut acc = [0.0f32; LANE];
-            let mut j = 0;
-            while j + LANE <= n {
-                let d = &dyrow[j..j + LANE];
-                let v = &wrow[j..j + LANE];
-                for l in 0..LANE {
-                    acc[l] += d[l] * v[l];
-                }
-                j += LANE;
-            }
-            let mut s = 0.0f32;
-            while j < n {
-                s += dyrow[j] * wrow[j];
-                j += 1;
-            }
-            for &a in &acc {
-                s += a;
-            }
-            dxrow[kk] = s;
-        }
+/// [`matmul_bt`] through a generation-tagged packed panel of `w`: the
+/// k-major `[N,K]` transpose is built at most once per (layer, step) in
+/// `panels` (keyed by `key` — the layer's weight offset — and `gen` — the
+/// workspace's step generation, bumped by every optimizer update) and then
+/// streamed as a contiguous axpy read. Scalar tier bypasses the panel and
+/// runs the reference loops.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_ws(
+    pool: &Pool,
+    panels: &mut PanelCache,
+    gen: u64,
+    key: usize,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    if m == 0 || k == 0 {
+        return;
     }
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::matmul_bt(dy, w, m, k, n, dx);
+        return;
+    }
+    let (wt, fresh) = panels.slot(key, gen, k, n);
+    if fresh {
+        pack_wt(w, k, n, wt);
+    }
+    let wt: &[f32] = wt;
+    let per = pool.rows_per_chunk(m, 2 * k * n);
+    if per >= m {
+        bt_packed_block(tier, dy, wt, m, k, n, dx);
+        return;
+    }
+    pool.run(
+        dy.chunks(per * n)
+            .zip(dx.chunks_mut(per * k))
+            .map(|(dyc, dxc)| move || bt_packed_block(tier, dyc, wt, dxc.len() / k, k, n, dxc))
+            .collect(),
+    );
 }
 
 /// `dw[K,N] += x[M,K]^T @ dy[M,N]` (weight gradient; accumulates).
+/// Reduce-sensitive: every tier folds rows `i = 0..m` sequentially per
+/// output element with one mul+add rounding pair per step, so the three
+/// tiers agree **bitwise** and shard-chained folds replay exactly.
 pub fn matmul_at(pool: &Pool, x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dy.len(), m * n);
@@ -246,47 +696,25 @@ pub fn matmul_at(pool: &Pool, x: &[f32], dy: &[f32], m: usize, k: usize, n: usiz
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    // Partition the K (output) rows: every thread scans all M samples but
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::matmul_at(x, dy, m, k, n, dw);
+        return;
+    }
+    // Partition the K (output) rows: every chunk scans all M samples but
     // owns a disjoint dw row range, so the i-summation order per output
     // row is identical to the sequential kernel.
     let per = pool.rows_per_chunk(k, 2 * m * n);
     if per >= k {
-        matmul_at_block(x, dy, m, k, n, 0, dw);
+        at_block(tier, x, dy, m, k, n, 0, dw);
         return;
     }
-    std::thread::scope(|s| {
-        for (ci, dwc) in dw.chunks_mut(per * n).enumerate() {
-            s.spawn(move || matmul_at_block(x, dy, m, k, n, ci * per, dwc));
-        }
-    });
-}
-
-fn matmul_at_block(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, k0: usize, dw: &mut [f32]) {
-    let kr = dw.len() / n;
-    for i in 0..m {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        if row_all_zero(dyrow) {
-            continue; // masked sample contributes no weight gradient
-        }
-        let xrow = &x[i * k + k0..i * k + k0 + kr];
-        for kk in 0..kr {
-            let a = xrow[kk];
-            let dwrow = &mut dw[kk * n..(kk + 1) * n];
-            let mut j = 0;
-            while j + LANE <= n {
-                let o = &mut dwrow[j..j + LANE];
-                let d = &dyrow[j..j + LANE];
-                for l in 0..LANE {
-                    o[l] += a * d[l];
-                }
-                j += LANE;
-            }
-            while j < n {
-                dwrow[j] += a * dyrow[j];
-                j += 1;
-            }
-        }
-    }
+    pool.run(
+        dw.chunks_mut(per * n)
+            .enumerate()
+            .map(|(ci, dwc)| move || at_block(tier, x, dy, m, k, n, ci * per, dwc))
+            .collect(),
+    );
 }
 
 /// `out[i*n..][j] += b[j]` — broadcast-add a bias row.
@@ -302,6 +730,9 @@ pub fn add_bias(out: &mut [f32], b: &[f32], m: usize, n: usize) {
 }
 
 /// `db[j] += sum_i dy[i,j]` — bias gradient (column sums; accumulates).
+/// One shared implementation for every kernel tier: the row fold per
+/// output element is sequential, so shard-chained folds replay it exactly
+/// and cross-tier results are identical by construction.
 pub fn col_sums(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(db.len(), n);
@@ -402,18 +833,73 @@ mod tests {
     }
 
     #[test]
-    fn blocked_kernels_match_scalar_reference() {
-        // Awkward shape (odd n, n % LANE != 0, k % 4 != 0) on one thread.
+    fn every_tier_matches_scalar_reference() {
+        // Awkward shape (odd n, n % LANE != 0, k % 4 != 0) on one thread,
+        // all executable tiers.
         let (m, k, n) = (5usize, 7usize, 11usize);
         let mut rng = crate::util::rng::Rng::new(42);
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let mut got = vec![0.0f32; m * n];
         let mut want = vec![0.0f32; m * n];
-        matmul_acc(&seq(), &x, &w, m, k, n, &mut got);
         scalar::matmul_acc(&x, &w, m, k, n, &mut want);
-        for (a, b) in got.iter().zip(&want) {
-            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        for tier in KernelTier::available() {
+            let pool = Pool::with_config(1, tier);
+            let mut got = vec![0.0f32; m * n];
+            matmul_acc(&pool, &x, &w, m, k, n, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                    "{tier:?}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_panel_transposes_exactly() {
+        let (k, n) = (5usize, 3usize);
+        let w: Vec<f32> = (0..k * n).map(|v| v as f32).collect();
+        let mut wt = Vec::new();
+        pack_wt(&w, k, n, &mut wt);
+        for kk in 0..k {
+            for j in 0..n {
+                assert_eq!(wt[j * k + kk], w[kk * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bt_matches_reference_and_reuses_panel() {
+        let (m, k, n) = (6usize, 13usize, 9usize);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0.0f32; m * k];
+        scalar::matmul_bt(&dy, &w, m, k, n, &mut want);
+        for tier in KernelTier::available() {
+            let pool = Pool::with_config(1, tier);
+            let mut panels = PanelCache::default();
+            let mut got = vec![0.0f32; m * k];
+            matmul_bt_ws(&pool, &mut panels, 1, 100, &dy, &w, m, k, n, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{tier:?}: {a} vs {b}");
+            }
+        }
+        // A stale generation must repack: same key, new weights, new gen.
+        let pool = Pool::with_config(1, KernelTier::Blocked);
+        let mut panels = PanelCache::default();
+        let mut first = vec![0.0f32; m * k];
+        matmul_bt_ws(&pool, &mut panels, 1, 100, &dy, &w, m, k, n, &mut first);
+        let w2: Vec<f32> = w.iter().map(|v| v + 1.0).collect();
+        let mut second = vec![0.0f32; m * k];
+        matmul_bt_ws(&pool, &mut panels, 2, 100, &dy, &w2, m, k, n, &mut second);
+        let mut want2 = vec![0.0f32; m * k];
+        scalar::matmul_bt(&dy, &w2, m, k, n, &mut want2);
+        for (a, b) in second.iter().zip(&want2) {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "stale panel survived a generation bump: {a} vs {b}"
+            );
         }
     }
 
@@ -427,31 +913,59 @@ mod tests {
             *v = 0.0;
         }
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let mut got = vec![0.0f32; m * n];
         let mut want = vec![0.0f32; m * n];
-        matmul_acc(&seq(), &x, &w, m, k, n, &mut got);
         scalar::matmul_acc(&x, &w, m, k, n, &mut want);
-        for r in 4..6 {
-            assert!(got[r * n..(r + 1) * n].iter().all(|&v| v == 0.0));
-        }
-        for (a, b) in got.iter().zip(&want) {
-            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()));
+        for tier in KernelTier::available() {
+            let mut got = vec![0.0f32; m * n];
+            matmul_acc(&Pool::with_config(1, tier), &x, &w, m, k, n, &mut got);
+            for r in 4..6 {
+                assert!(got[r * n..(r + 1) * n].iter().all(|&v| v == 0.0));
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{tier:?}");
+            }
         }
     }
 
     #[test]
     fn threaded_matmul_is_bitwise_stable_across_thread_counts() {
-        // Big enough that 2/3/7 threads genuinely partition the rows.
+        // Big enough that 2/3/7 threads genuinely partition the rows, for
+        // every executable tier.
         let (m, k, n) = (256usize, 64usize, 48usize);
         let mut rng = crate::util::rng::Rng::new(3);
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let mut base = vec![0.0f32; m * n];
-        matmul_acc(&Pool::with_threads(1), &x, &w, m, k, n, &mut base);
-        for threads in [2usize, 3, 7] {
-            let mut out = vec![0.0f32; m * n];
-            matmul_acc(&Pool::with_threads(threads), &x, &w, m, k, n, &mut out);
-            assert_eq!(out, base, "threads={threads} diverged");
+        for tier in KernelTier::available() {
+            let mut base = vec![0.0f32; m * n];
+            matmul_acc(&Pool::with_config(1, tier), &x, &w, m, k, n, &mut base);
+            for threads in [2usize, 3, 7] {
+                let mut out = vec![0.0f32; m * n];
+                matmul_acc(&Pool::with_config(threads, tier), &x, &w, m, k, n, &mut out);
+                assert_eq!(out, base, "{tier:?} threads={threads} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_at_is_bitwise_identical_across_tiers() {
+        // The reduce-sensitive kernel: all tiers share one fold order and
+        // one rounding sequence per output element.
+        let (m, k, n) = (33usize, 17usize, 20usize);
+        let mut rng = crate::util::rng::Rng::new(13);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0.0f32; k * n];
+        scalar::matmul_at(&x, &dy, m, k, n, &mut want);
+        for tier in KernelTier::available() {
+            let mut got = vec![0.0f32; k * n];
+            matmul_at(&Pool::with_config(1, tier), &x, &dy, m, k, n, &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{tier:?}: dw[{i}] {a} != scalar {b}"
+                );
+            }
         }
     }
 

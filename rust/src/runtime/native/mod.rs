@@ -20,6 +20,7 @@ use crate::runtime::backend::{
 };
 use crate::runtime::manifest::ModelInfo;
 use exec::Pool;
+pub use exec::KernelTier;
 use model::{apply_adam, apply_sgd, masked_ce_loss_ws, masked_ce_rows, normalized_grad_stats, ModelDef};
 use std::collections::BTreeMap;
 use workspace::{Workspace, WorkspacePool};
@@ -34,7 +35,9 @@ pub const EVAL_BATCH: usize = 1024;
 pub struct NativeBackend {
     schema: Schema,
     defs: BTreeMap<String, ModelDef>,
-    /// Thread policy for the blocked kernels (`DYNAMIX_THREADS`).
+    /// Execution policy: kernel tier (`DYNAMIX_KERNEL`) + partition width
+    /// (`DYNAMIX_THREADS`), backed by the process-shared persistent
+    /// worker pool.
     pool: Pool,
     /// Recycled scratch buffers: steady-state steps allocate nothing.
     ws: WorkspacePool,
@@ -47,15 +50,25 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend on the process-global pool: `DYNAMIX_THREADS` and
+    /// `DYNAMIX_KERNEL` are read once per process and every backend —
+    /// native or sharded — shares one persistent worker set.
     pub fn new() -> Self {
-        Self::with_pool(Pool::from_env())
+        Self::with_pool(Pool::global())
     }
 
-    /// Backend with a pinned kernel thread count. Unlike `new()` this never
-    /// reads `DYNAMIX_THREADS`, so tests that pin thread counts don't race
-    /// with tests that mutate the process environment.
+    /// Backend with a pinned kernel thread count (global kernel tier).
+    /// Never reads the environment, so tests that pin thread counts don't
+    /// race with tests that mutate the process environment.
     pub fn with_threads(threads: usize) -> Self {
         Self::with_pool(Pool::with_threads(threads))
+    }
+
+    /// Backend with a pinned thread count *and* kernel tier (parity
+    /// suites and per-tier benches). The tier is resolved, so requesting
+    /// `Simd` on unsupported hardware falls back to `Blocked`.
+    pub fn with_kernel(threads: usize, tier: KernelTier) -> Self {
+        Self::with_pool(Pool::with_config(threads, tier))
     }
 
     fn with_pool(pool: Pool) -> Self {
@@ -106,6 +119,12 @@ impl NativeBackend {
         self.pool.threads()
     }
 
+    /// Kernel tier this backend dispatches to (always resolved — `Simd`
+    /// only on hardware that supports it).
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.pool.tier()
+    }
+
     /// (pooled workspace count, reserved scratch bytes) — flat across
     /// steady-state steps; the allocation regression test asserts on it.
     pub fn workspace_stats(&self) -> (usize, usize) {
@@ -150,6 +169,10 @@ impl NativeBackend {
         anyhow::ensure!(denom >= 1.0, "denom {denom} must be >= 1");
         ensure_labels_in_range(model, y, def.classes)?;
         let mut ws = self.ws.take();
+        // One generation covers the fwd/bwd pair of this shard step — the
+        // retained workspace carries it into `shard_backward_acc`, where
+        // the packed panels of this step's params are (re)built under it.
+        ws.begin_step();
         def.forward_ws(&self.pool, params, &x, m, &mut ws);
         let mut out = ShardFwdOut { loss_terms: Vec::new(), correct: Vec::new() };
         masked_ce_rows(
@@ -321,6 +344,9 @@ impl ComputeBackend for NativeBackend {
         ensure_labels_in_range(model, y, def.classes)?;
 
         let mut ws = self.ws.take();
+        // New step generation: invalidates packed weight panels from the
+        // previous step (whose optimizer update changed the params).
+        ws.begin_step();
         def.forward_ws(&self.pool, &state.params, x, bucket, &mut ws);
         let (loss, acc) = masked_ce_loss_ws(
             &ws.logits,
@@ -364,6 +390,7 @@ impl ComputeBackend for NativeBackend {
         anyhow::ensure!(x.len() == m * def.feature_dim && y.len() == m, "eval batch mismatch");
         ensure_labels_in_range(model, y, def.classes)?;
         let mut ws = self.ws.take();
+        ws.begin_step();
         def.forward_ws(&self.pool, params, x, m, &mut ws);
         let (loss, acc) = masked_ce_loss_ws(
             &ws.logits,

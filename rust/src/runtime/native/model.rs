@@ -10,7 +10,7 @@
 
 use super::exec::Pool;
 use super::linalg::*;
-use super::workspace::Workspace;
+use super::workspace::{PanelCache, Workspace};
 use crate::runtime::backend::OptState;
 use crate::util::rng::Rng;
 
@@ -54,7 +54,10 @@ impl DenseRef {
     }
 
     /// Accumulate weight/bias grads into `g` and write dx (input grad)
-    /// into the reused `dx` buffer.
+    /// into the reused `dx` buffer. The input gradient streams through a
+    /// generation-tagged packed panel of this layer's weights (`panels`,
+    /// keyed by the weight offset, tagged with the step generation `gen`).
+    #[allow(clippy::too_many_arguments)]
     fn backward_into(
         &self,
         pool: &Pool,
@@ -64,11 +67,15 @@ impl DenseRef {
         m: usize,
         g: &mut [f32],
         dx: &mut Vec<f32>,
+        panels: &mut PanelCache,
+        gen: u64,
     ) {
         self.backward_params(pool, x, dy, m, g);
         dx.clear();
         dx.resize(m * self.k, 0.0);
-        matmul_bt(pool, dy, self.weight(p), m, self.k, self.n, dx);
+        matmul_bt_ws(
+            pool, panels, gen, self.w, dy, self.weight(p), m, self.k, self.n, dx,
+        );
     }
 
     /// Accumulate weight/bias grads only (no input grad — first layer).
@@ -271,11 +278,13 @@ impl ModelDef {
     /// plane's correctness oracle hinges on exactly this property.
     pub fn backward_acc_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
         debug_assert_eq!(ws.grad.len(), self.param_count());
+        let gen = ws.gen;
         match self.family {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
                 head.backward_into(
                     pool, p, &ws.hs[self.depth - 1], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
+                    &mut ws.panels, gen,
                 );
                 for i in (0..self.depth).rev() {
                     relu_backward(&mut ws.dh, &ws.hs[i]);
@@ -284,6 +293,7 @@ impl ModelDef {
                     } else {
                         layers[i].backward_into(
                             pool, p, &ws.hs[i - 1], &ws.dh, m, &mut ws.grad, &mut ws.dtmp,
+                            &mut ws.panels, gen,
                         );
                         std::mem::swap(&mut ws.dh, &mut ws.dtmp);
                     }
@@ -293,14 +303,21 @@ impl ModelDef {
                 let (stem, blocks, head) = self.resnet_refs();
                 head.backward_into(
                     pool, p, &ws.hs[self.depth], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
+                    &mut ws.panels, gen,
                 );
                 for i in (0..self.depth).rev() {
                     let (fc1, fc2) = &blocks[i];
                     // dh is d(loss)/d(h_out); h_out = relu(h_in + fc2(u)).
                     relu_backward(&mut ws.dh, &ws.hs[i + 1]); // now dz
-                    fc2.backward_into(pool, p, &ws.us[i], &ws.dh, m, &mut ws.grad, &mut ws.du);
+                    fc2.backward_into(
+                        pool, p, &ws.us[i], &ws.dh, m, &mut ws.grad, &mut ws.du,
+                        &mut ws.panels, gen,
+                    );
                     relu_backward(&mut ws.du, &ws.us[i]);
-                    fc1.backward_into(pool, p, &ws.hs[i], &ws.du, m, &mut ws.grad, &mut ws.dtmp);
+                    fc1.backward_into(
+                        pool, p, &ws.hs[i], &ws.du, m, &mut ws.grad, &mut ws.dtmp,
+                        &mut ws.panels, gen,
+                    );
                     for (a, b) in ws.dh.iter_mut().zip(&ws.dtmp) {
                         *a += *b; // residual: dz flows to h_in directly too
                     }
@@ -336,6 +353,7 @@ impl ModelDef {
             dlogits: dlogits.to_vec(),
             ..Default::default()
         };
+        ws.begin_step();
         self.backward_ws(&Pool::sequential(), p, x, m, &mut ws);
         std::mem::take(&mut ws.grad)
     }

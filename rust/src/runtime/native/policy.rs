@@ -142,7 +142,11 @@ pub fn policy_update_ws(
         "minibatch field length mismatch"
     );
 
+    // Each minibatch step ends in an Adam update, so the packed weight
+    // panels below are valid for exactly this step's generation.
+    let gen = ws.begin_step();
     let Workspace {
+        panels,
         p_h1: h1,
         p_h2: h2,
         p_logits: logits,
@@ -241,7 +245,10 @@ pub fn policy_update_ws(
     matmul_at(pool, h2, dlogits, b, HIDDEN, N_ACTIONS, &mut g[PI.w..PI.w + HIDDEN * N_ACTIONS]);
     dh2.clear();
     dh2.resize(b * HIDDEN, 0.0);
-    matmul_bt(pool, dlogits, &theta[PI.w..PI.w + HIDDEN * N_ACTIONS], b, HIDDEN, N_ACTIONS, dh2);
+    matmul_bt_ws(
+        pool, panels, gen, PI.w, dlogits, &theta[PI.w..PI.w + HIDDEN * N_ACTIONS],
+        b, HIDDEN, N_ACTIONS, dh2,
+    );
     // vf head: dh2 += dv ⊗ w_vf.
     let mut dvb = 0.0f32;
     for &dv in dvalues.iter() {
@@ -263,7 +270,10 @@ pub fn policy_update_ws(
     matmul_at(pool, h1, dh2, b, HIDDEN, HIDDEN, &mut g[FC1.w..FC1.w + HIDDEN * HIDDEN]);
     dh1.clear();
     dh1.resize(b * HIDDEN, 0.0);
-    matmul_bt(pool, dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN], b, HIDDEN, HIDDEN, dh1);
+    matmul_bt_ws(
+        pool, panels, gen, FC1.w, dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN],
+        b, HIDDEN, HIDDEN, dh1,
+    );
     tanh_backward(dh1, h1);
     col_sums(dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
     matmul_at(pool, mb.states, dh1, b, STATE_DIM, HIDDEN, &mut g[FC0.w..FC0.w + STATE_DIM * HIDDEN]);

@@ -9,16 +9,91 @@
 //! their own workspace (the pool grows to the peak concurrency and then
 //! stops allocating).
 //!
+//! ## Generation-tagged packed panels
+//!
+//! [`PanelCache`] holds k-major packed transposes of weight matrices for
+//! the streaming `matmul_bt` path (see `linalg::matmul_bt_ws`). Entries
+//! are keyed by the layer's weight offset and tagged with the workspace's
+//! **step generation** — a process-unique id assigned by
+//! [`Workspace::begin_step`] at the start of every train/eval/policy/shard
+//! step. Parameters change between steps (optimizer updates), so a panel
+//! is valid only while its generation matches: within one step it is
+//! packed once and reused for every use (the fwd/bwd pair of that step);
+//! the next step's `begin_step` bump invalidates it wholesale. This makes
+//! stale reuse impossible no matter how callers mutate their `OptState`
+//! between calls.
+//!
 //! The allocation regression test keys off [`Workspace::capacity_bytes`]:
 //! if a code change starts allocating per step, the pooled capacity keeps
 //! growing after warmup and the test fails.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Process-wide step-generation counter ([`Workspace::begin_step`]).
+static STEP_GEN: AtomicU64 = AtomicU64::new(0);
+
+/// One cached k-major packed panel: the `[N, K]` transpose of a `[K, N]`
+/// weight matrix, valid for exactly one step generation.
+struct PanelEntry {
+    /// Layer identity: the weight's offset in the flat parameter vector.
+    key: usize,
+    k: usize,
+    n: usize,
+    /// Step generation the panel was packed under.
+    gen: u64,
+    wt: Vec<f32>,
+}
+
+/// Generation-tagged panel store. Entries are few (one per dense layer of
+/// the model in flight) and looked up linearly; buffers are recycled
+/// across generations so steady-state packing allocates nothing.
+#[derive(Default)]
+pub struct PanelCache {
+    entries: Vec<PanelEntry>,
+}
+
+impl PanelCache {
+    /// The panel buffer for `(key, gen, k, n)` plus whether the caller
+    /// must (re)pack it: `true` when no current-generation panel exists
+    /// (first use this step, or the entry is stale from an earlier
+    /// generation — its buffer is reused, its contents are not).
+    pub fn slot(&mut self, key: usize, gen: u64, k: usize, n: usize) -> (&mut Vec<f32>, bool) {
+        if let Some(idx) = self.entries.iter().position(|e| e.key == key) {
+            let e = &mut self.entries[idx];
+            let fresh = !(e.gen == gen && e.k == k && e.n == n);
+            e.gen = gen;
+            e.k = k;
+            e.n = n;
+            return (&mut e.wt, fresh);
+        }
+        self.entries.push(PanelEntry {
+            key,
+            k,
+            n,
+            gen,
+            wt: Vec::new(),
+        });
+        let e = self.entries.last_mut().expect("just pushed");
+        (&mut e.wt, true)
+    }
+
+    /// Total heap bytes reserved by the cached panels.
+    pub fn capacity_bytes(&self) -> usize {
+        self.entries.capacity() * std::mem::size_of::<PanelEntry>()
+            + self.entries.iter().map(|e| e.wt.capacity() * 4).sum::<usize>()
+    }
+}
 
 /// Scratch buffers for one in-flight backend call. Field groups:
 /// model train/eval (`hs`/`us`/`logits`/... ) and PPO update (`p_*`).
 #[derive(Default)]
 pub struct Workspace {
+    /// Step generation of the call in flight (see [`Workspace::begin_step`]).
+    pub gen: u64,
+    /// Generation-tagged packed weight panels for the streaming
+    /// `matmul_bt` path.
+    pub panels: PanelCache,
     /// Post-ReLU activations: VGG — one per layer; ResNet — stem output
     /// followed by every block output (`depth + 1` entries).
     pub hs: Vec<Vec<f32>>,
@@ -52,6 +127,17 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Start a new step: assign this workspace a process-unique
+    /// generation, invalidating every cached panel from earlier steps.
+    /// Called once per train/eval/policy-update/shard step — a shard
+    /// step's forward and backward halves share one generation (the
+    /// `ShardCtx` retains the workspace between them). Returns the new
+    /// generation for threading into the packed-panel kernels.
+    pub fn begin_step(&mut self) -> u64 {
+        self.gen = STEP_GEN.fetch_add(1, Ordering::Relaxed) + 1;
+        self.gen
+    }
+
     /// Ensure `v` has at least `n` slot vectors (keeps existing capacity).
     pub fn ensure_slots(v: &mut Vec<Vec<f32>>, n: usize) {
         while v.len() < n {
@@ -88,6 +174,7 @@ impl Workspace {
         ];
         nested(&self.hs)
             + nested(&self.us)
+            + self.panels.capacity_bytes()
             + flat.iter().map(|v| v.capacity() * 4).sum::<usize>()
     }
 }
@@ -146,5 +233,41 @@ mod tests {
         Workspace::ensure_slots(&mut ws.hs, 3);
         ws.hs[0].resize(100, 0.0);
         assert!(ws.capacity_bytes() >= 400);
+    }
+
+    #[test]
+    fn begin_step_generations_are_unique_and_monotone() {
+        let mut a = Workspace::default();
+        let mut b = Workspace::default();
+        assert_eq!(a.gen, 0, "fresh workspaces start at the never-valid gen 0");
+        let g1 = a.begin_step();
+        let g2 = b.begin_step();
+        let g3 = a.begin_step();
+        assert!(g1 > 0 && g2 > g1 && g3 > g2);
+        assert_eq!(a.gen, g3);
+    }
+
+    #[test]
+    fn panel_slot_reuses_buffer_and_tracks_staleness() {
+        let mut cache = PanelCache::default();
+        {
+            let (wt, fresh) = cache.slot(7, 1, 4, 3);
+            assert!(fresh, "first use must pack");
+            wt.resize(12, 1.0);
+        }
+        // Same key + generation: valid, no repack.
+        let (_, fresh) = cache.slot(7, 1, 4, 3);
+        assert!(!fresh);
+        // Generation bump: stale — buffer reused, contents must be
+        // repacked.
+        {
+            let (wt, fresh) = cache.slot(7, 2, 4, 3);
+            assert!(fresh, "a generation bump invalidates the panel");
+            assert_eq!(wt.len(), 12, "buffer is recycled, not reallocated");
+        }
+        // A second layer gets its own entry.
+        let (_, fresh) = cache.slot(99, 2, 2, 2);
+        assert!(fresh);
+        assert!(cache.capacity_bytes() >= 12 * 4);
     }
 }

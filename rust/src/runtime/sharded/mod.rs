@@ -22,8 +22,10 @@
 //! accumulator sequence the fused loss uses (`fold_masked_ce_partial`).
 //! The optimizer then applies leader-side to the identical gradient bits.
 //! Net effect: `ShardedBackend::train_step` == `NativeBackend::train_step`
-//! down to the last bit, for every shard count, every row split, and every
-//! kernel thread count — `tests/sharded_parity.rs` is the oracle.
+//! down to the last bit, for every shard count, every row split, every
+//! kernel thread count and every `DYNAMIX_KERNEL` tier (the tiers all
+//! preserve the sequential per-output-element row fold on `matmul_at` /
+//! `col_sums`) — `tests/sharded_parity.rs` is the oracle.
 //!
 //! ## Elastic membership
 //!
@@ -87,14 +89,20 @@ pub fn plan_rows(bucket: usize, active: &[bool]) -> Vec<Range<usize>> {
 /// replies left over from an earlier step that errored mid-protocol (an
 /// aborted step can leave an unread `Fwd`/`Err` in the channel; dropping
 /// them keeps the data plane usable after a failed call). A shard-side
-/// [`ShardMsg::Err`] for the CURRENT step surfaces as this step's error.
+/// [`ShardMsg::Err`] for the CURRENT step surfaces as this step's error;
+/// a dead transport (killed socket, crashed peer) surfaces as a clean
+/// shard-tagged error, never a hang — the caller can then drop the shard
+/// via [`ComputeBackend::set_shard_active`] and retry the step on the
+/// survivors (the optimizer state is untouched by a failed step).
 fn recv_reply(
     link: &mut Box<dyn ShardTransport>,
     shard: usize,
     seq: u64,
 ) -> anyhow::Result<ShardMsg> {
     loop {
-        let msg = link.recv()?;
+        let msg = link
+            .recv()
+            .map_err(|e| anyhow::anyhow!("shard {shard}: transport failed mid-step: {e:#}"))?;
         let mseq = msg.seq();
         match msg {
             ShardMsg::Fwd { .. } | ShardMsg::GradOut { .. } | ShardMsg::Err { .. }
@@ -132,6 +140,16 @@ impl ShardedBackend {
     /// shard count and thread count — without touching the process env).
     pub fn loopback_with_threads(n: usize, threads: usize) -> Self {
         Self::build(Arc::new(NativeBackend::with_threads(threads)), n)
+    }
+
+    /// Loopback with every execution axis pinned — shard count, kernel
+    /// thread count and kernel tier — for the per-tier parity sweep.
+    pub fn loopback_with_kernel(
+        n: usize,
+        threads: usize,
+        tier: crate::runtime::native::KernelTier,
+    ) -> Self {
+        Self::build(Arc::new(NativeBackend::with_kernel(threads, tier)), n)
     }
 
     fn build(inner: Arc<NativeBackend>, n: usize) -> Self {
@@ -221,18 +239,20 @@ impl ShardedBackend {
             if r.is_empty() {
                 continue;
             }
-            links[s].send(ShardMsg::Step {
-                seq,
-                denom,
-                train,
-                rows: Some(ShardRows {
-                    model: model.to_string(),
-                    x: x[r.start * feature_dim..r.end * feature_dim].to_vec(),
-                    y: y[r.clone()].to_vec(),
-                    mask: mask[r.clone()].to_vec(),
-                }),
-                params: Some(params.clone()),
-            })?;
+            links[s]
+                .send(ShardMsg::Step {
+                    seq,
+                    denom,
+                    train,
+                    rows: Some(ShardRows {
+                        model: model.to_string(),
+                        x: x[r.start * feature_dim..r.end * feature_dim].to_vec(),
+                        y: y[r.clone()].to_vec(),
+                        mask: mask[r.clone()].to_vec(),
+                    }),
+                    params: Some(params.clone()),
+                })
+                .map_err(|e| anyhow::anyhow!("shard {s}: transport failed mid-step: {e:#}"))?;
             engaged.push(s);
         }
 
@@ -257,7 +277,11 @@ impl ShardedBackend {
         let grad = if train {
             let mut grad = vec![0.0f32; param_count];
             for &s in &engaged {
-                links[s].send(ShardMsg::GradSeed { seq, grad })?;
+                links[s]
+                    .send(ShardMsg::GradSeed { seq, grad })
+                    .map_err(|e| {
+                        anyhow::anyhow!("shard {s}: transport failed mid-ring: {e:#}")
+                    })?;
                 grad = match recv_reply(&mut links[s], s, seq)? {
                     ShardMsg::GradOut { seq: rs, grad } => {
                         anyhow::ensure!(rs == seq, "shard {s}: GradOut seq {rs} != {seq}");

@@ -136,6 +136,7 @@ pub fn throughput(r: &BenchResult, items: usize) -> f64 {
 /// and appends a run record to `BENCH_native.json` on [`BenchSession::flush`].
 pub struct BenchSession {
     suite: String,
+    note: Option<String>,
     results: Vec<Json>,
 }
 
@@ -143,8 +144,15 @@ impl BenchSession {
     pub fn new(suite: &str) -> Self {
         BenchSession {
             suite: suite.to_string(),
+            note: None,
             results: Vec::new(),
         }
+    }
+
+    /// Attach a computed note to this session (e.g. a measured pool-vs-
+    /// spawn delta). Joined with any `DYNAMIX_BENCH_NOTE` label at flush.
+    pub fn set_note(&mut self, note: &str) {
+        self.note = Some(note.to_string());
     }
 
     /// Record a result with no item count (wall-time only).
@@ -209,11 +217,24 @@ impl BenchSession {
                 ))
             }
         };
+        // The run's execution config comes from the process-global pool
+        // (DYNAMIX_THREADS / DYNAMIX_KERNEL read once at backend init) —
+        // the same pool every backend in this process actually used.
+        let pool = crate::runtime::native::exec::Pool::global();
+        let note = [
+            std::env::var("DYNAMIX_BENCH_NOTE").unwrap_or_default(),
+            self.note.clone().unwrap_or_default(),
+        ]
+        .into_iter()
+        .filter(|s| !s.is_empty())
+        .collect::<Vec<_>>()
+        .join("; ");
         runs.push(crate::jobj! {
             "suite" => self.suite.clone(),
-            "note" => std::env::var("DYNAMIX_BENCH_NOTE").unwrap_or_default(),
+            "note" => note,
             "git_rev" => git_rev(),
-            "threads" => crate::runtime::native::exec::Pool::from_env().threads(),
+            "threads" => pool.threads(),
+            "kernel" => pool.tier().as_str(),
             "unix_time" => unix_time(),
             "results" => self.results.clone(),
         });

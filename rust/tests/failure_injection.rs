@@ -344,6 +344,165 @@ fn shard_protocol_rejects_malformed_shard_steps() {
         .unwrap();
 }
 
+/// A TCP shard transport that severs its connection the moment it
+/// receives a `GradSeed` after the kill flag is raised — the leader's
+/// accumulator is then in flight, i.e. the socket dies **mid-ring**.
+struct KillableTransport<T: dynamix::runtime::sharded::transport::ShardTransport> {
+    inner: T,
+    kill: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl<T: dynamix::runtime::sharded::transport::ShardTransport>
+    dynamix::runtime::sharded::transport::ShardTransport for KillableTransport<T>
+{
+    fn send(&mut self, msg: dynamix::runtime::sharded::transport::ShardMsg) -> anyhow::Result<()> {
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> anyhow::Result<dynamix::runtime::sharded::transport::ShardMsg> {
+        let msg = self.inner.recv()?;
+        if self.kill.load(std::sync::atomic::Ordering::SeqCst)
+            && matches!(
+                msg,
+                dynamix::runtime::sharded::transport::ShardMsg::GradSeed { .. }
+            )
+        {
+            // Returning an error makes `serve` exit, dropping the TCP
+            // stream: from the leader's side the shard was just killed.
+            anyhow::bail!("injected shard kill (scenario preempt)");
+        }
+        Ok(msg)
+    }
+}
+
+#[test]
+fn tcp_shard_killed_mid_ring_surfaces_clean_error_and_recovers() {
+    // Socket-level fault injection, timed by the scenario engine: a
+    // preempt_worker event on the scripted timeline decides WHEN the TCP
+    // shard dies; the kill itself severs the real socket mid-ring (after
+    // Fwd, while the leader's traveling gradient accumulator is at that
+    // shard). The leader must surface a clean shard-tagged error — never
+    // wedge — and after dropping the dead shard from the membership the
+    // data plane must finish the run bit-identically to the native
+    // backend (a failed step applies no optimizer update, so the retry is
+    // exact).
+    use dynamix::config::Optimizer;
+    use dynamix::runtime::sharded::transport::TcpShardTransport;
+    use dynamix::runtime::sharded::worker as shard_worker;
+    use dynamix::runtime::{NativeBackend, OptState};
+    use dynamix::sim::scenario::{ScenarioEvent, ScenarioRuntime, ScenarioScript, TimedEvent};
+    use dynamix::util::rng::Rng;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // The timeline: kill shard 1 at t = 2.5 (the BSP clock below ticks
+    // 1.0s per step, so the event lands before step index 2's ring).
+    let script = ScenarioScript {
+        name: "kill-tcp-shard".into(),
+        events: vec![TimedEvent {
+            at_s: 2.5,
+            event: ScenarioEvent::PreemptWorker { worker: 1 },
+        }],
+    };
+    let mut timeline = ScenarioRuntime::new(script);
+    let kill = Arc::new(AtomicBool::new(false));
+
+    // Two real TCP shard servers; server 1 is killable.
+    let mut handles = Vec::new();
+    let mut links: Vec<Box<dyn dynamix::runtime::sharded::transport::ShardTransport>> = Vec::new();
+    for id in 0..2usize {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let kill = kill.clone();
+        handles.push(std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpShardTransport::new(dynamix::comm::TcpTransport::new(stream).unwrap());
+            let backend = Arc::new(NativeBackend::with_threads(1));
+            if id == 1 {
+                // serve() returns Err on the injected kill; dropping the
+                // transport closes the socket either way.
+                let _ = shard_worker::serve(KillableTransport { inner: t, kill }, backend);
+            } else {
+                let _ = shard_worker::serve(t, backend);
+            }
+        }));
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        links.push(Box::new(TcpShardTransport::new(
+            dynamix::comm::TcpTransport::new(stream).unwrap(),
+        )));
+    }
+    let sharded =
+        ShardedBackend::over_transports(Arc::new(NativeBackend::with_threads(1)), links).unwrap();
+    let native = NativeBackend::with_threads(1);
+
+    let fd = native.schema().feature_dim;
+    let mut ss = OptState::new(sharded.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut ns = OptState::new(native.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut clock = 0.0f64;
+    let mut killed = false;
+    for step in 0..5u64 {
+        clock += 1.0;
+        for (_, ev) in timeline.pop_due(clock) {
+            if let ScenarioEvent::PreemptWorker { worker } = ev {
+                assert_eq!(worker, 1);
+                kill.store(true, Ordering::SeqCst);
+                killed = true;
+            }
+        }
+        let mut rng = Rng::new(9000 + step);
+        let bucket = 64usize;
+        let x: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+        let mask = vec![1.0f32; bucket];
+
+        let res = sharded.train_step(
+            "vgg11_mini", Optimizer::Sgd, bucket, &mut ss, &x, &y, &mask, 0.05,
+        );
+        let got = match res {
+            Ok(out) => out,
+            Err(e) => {
+                // The kill must surface as a clean, shard-tagged error —
+                // not a hang, not a poisoned data plane.
+                assert!(killed, "step {step} failed before the scenario event: {e:#}");
+                let msg = format!("{e:#}");
+                assert!(msg.contains("shard 1"), "error must name the shard: {msg}");
+                // Reconnect path: drop the dead shard; survivors absorb
+                // its rows. The failed step applied no update, so the
+                // retry replays it exactly.
+                assert!(sharded.set_shard_active(1, false));
+                sharded
+                    .train_step(
+                        "vgg11_mini", Optimizer::Sgd, bucket, &mut ss, &x, &y, &mask, 0.05,
+                    )
+                    .expect("the data plane must keep working on the survivors")
+            }
+        };
+        let want = native
+            .train_step("vgg11_mini", Optimizer::Sgd, bucket, &mut ns, &x, &y, &mask, 0.05)
+            .unwrap();
+        assert_eq!(
+            got.loss.to_bits(),
+            want.loss.to_bits(),
+            "step {step}: loss diverged after shard kill"
+        );
+        assert_eq!(
+            ss.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+            ns.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+            "step {step}: params diverged after shard kill"
+        );
+    }
+    assert!(killed, "the scenario timeline never fired");
+    assert_eq!(
+        sharded.shard_membership(),
+        vec![true, false],
+        "dead shard must be out of the membership"
+    );
+    drop(sharded); // Shutdown to shard 0; shard 1's thread already exited
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
 #[test]
 fn config_loading_rejects_garbage_files() {
     let d = temp_dir("badcfg");

@@ -604,3 +604,60 @@ fn prop_scenario_scripts_roundtrip_json() {
         assert_eq!(back, script, "case {case}: {text}");
     });
 }
+
+#[test]
+fn prop_kernel_tiers_agree_on_random_shapes() {
+    // Every executable tier (scalar / blocked / simd-where-supported) at
+    // several thread counts, on randomized shapes and data: the
+    // forward/input-grad kernels agree with the scalar reference within
+    // float tolerance, and the reduce-sensitive weight-gradient kernel is
+    // BITWISE identical (the sharded data plane's parity contract).
+    use dynamix::runtime::native::exec::{KernelTier, Pool};
+    use dynamix::runtime::native::linalg::{self, scalar};
+    use dynamix::runtime::native::workspace::PanelCache;
+    check("kernel_tiers_agree", 60, |rng, case| {
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(40);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+
+        let mut acc_ref = vec![0.0f32; m * n];
+        scalar::matmul_acc(&x, &w, m, k, n, &mut acc_ref);
+        let mut bt_ref = vec![0.0f32; m * k];
+        scalar::matmul_bt(&dy, &w, m, k, n, &mut bt_ref);
+        let mut at_ref = vec![0.0f32; k * n];
+        scalar::matmul_at(&x, &dy, m, k, n, &mut at_ref);
+
+        for tier in KernelTier::available() {
+            for threads in [1usize, 3] {
+                let pool = Pool::with_config(threads, tier);
+                let tag = format!("case {case} {} t{threads} m{m}k{k}n{n}", tier.as_str());
+
+                let mut acc = vec![0.0f32; m * n];
+                linalg::matmul_acc(&pool, &x, &w, m, k, n, &mut acc);
+                for (a, b) in acc.iter().zip(&acc_ref) {
+                    assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{tag}: acc {a} vs {b}");
+                }
+
+                let mut panels = PanelCache::default();
+                let mut bt = vec![0.0f32; m * k];
+                linalg::matmul_bt_ws(&pool, &mut panels, 1, 0, &dy, &w, m, k, n, &mut bt);
+                for (a, b) in bt.iter().zip(&bt_ref) {
+                    assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{tag}: bt {a} vs {b}");
+                }
+
+                let mut at = vec![0.0f32; k * n];
+                linalg::matmul_at(&pool, &x, &dy, m, k, n, &mut at);
+                for (i, (a, b)) in at.iter().zip(&at_ref).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{tag}: at[{i}] must be bitwise ({a} vs {b})"
+                    );
+                }
+            }
+        }
+    });
+}

@@ -10,7 +10,9 @@
 use dynamix::config::Optimizer;
 use dynamix::runtime::sharded::transport::{ShardTransport, TcpShardTransport};
 use dynamix::runtime::sharded::worker as shard_worker;
-use dynamix::runtime::{ComputeBackend, NativeBackend, OptState, ShardedBackend, TrainOut};
+use dynamix::runtime::{
+    ComputeBackend, KernelTier, NativeBackend, OptState, ShardedBackend, TrainOut,
+};
 use dynamix::util::rng::Rng;
 use std::sync::Arc;
 
@@ -119,6 +121,36 @@ fn single_example_shards_hold_parity() {
     let want = run_sequence(&native, Optimizer::Sgd, &[32, 17]);
     let got = run_sequence(&sharded, Optimizer::Sgd, &[32, 17]);
     assert_eq!(got, want, "single-example shards diverged from native");
+}
+
+#[test]
+fn every_kernel_tier_holds_sharded_parity_bitwise() {
+    // The tier axis of the oracle, pinned in-process (the CI test leg
+    // additionally sweeps DYNAMIX_KERNEL over the whole suite): for each
+    // executable tier, the sharded data plane reproduces the native
+    // backend bit for bit across shard counts and thread counts. Holds
+    // because every tier preserves the sequential per-output-element row
+    // fold on matmul_at / col_sums.
+    for tier in KernelTier::available() {
+        let native = NativeBackend::with_kernel(1, tier);
+        let want = run_sequence(&native, Optimizer::Sgd, &[5, 32, 103]);
+        // Native itself must be thread-stable per tier for the oracle to
+        // compose across thread counts.
+        let native_t4 = NativeBackend::with_kernel(4, tier);
+        assert_eq!(
+            run_sequence(&native_t4, Optimizer::Sgd, &[5, 32, 103]),
+            want,
+            "{tier:?}: native not thread-stable"
+        );
+        for (n, threads) in [(1usize, 4usize), (4, 1), (4, 4), (7, 2)] {
+            let sharded = ShardedBackend::loopback_with_kernel(n, threads, tier);
+            let got = run_sequence(&sharded, Optimizer::Sgd, &[5, 32, 103]);
+            assert_eq!(
+                got, want,
+                "sharded(n={n}, threads={threads}, {tier:?}) diverged from native"
+            );
+        }
+    }
 }
 
 #[test]
