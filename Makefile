@@ -11,13 +11,37 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 
-.PHONY: build test bench bench-quick bench-compare artifacts artifacts-smoke clean-artifacts
+.PHONY: build test lint miri tsan bench bench-quick bench-compare artifacts artifacts-smoke clean-artifacts
 
 build:
 	cd rust && $(CARGO) build --release
 
 test:
 	cd rust && $(CARGO) test -q
+
+# dynamix-lint: the repo-native invariant catalogue (SAFETY comments,
+# env-read allowlist, wall-clock/collection/fold-order/feature-detect
+# rules — see README "Correctness tooling"). Self-test first so a broken
+# rule can never silently pass the tree.
+lint:
+	cd rust && $(CARGO) run --release --bin dynamix-lint -- --self-test
+	cd rust && $(CARGO) run --release --bin dynamix-lint
+
+# Miri over the unsafe concurrency core (WorkerSet queue/latch/panic
+# paths, Workspace/PanelCache generation tagging, wire codec bounds).
+# Needs: rustup +nightly component add miri. Leak checking is off because
+# the persistent worker threads are parked, never joined at process exit.
+miri:
+	cd rust && MIRIFLAGS="-Zmiri-ignore-leaks" $(CARGO) +nightly miri test --lib -- \
+		runtime::native::exec runtime::native::workspace comm::wire
+
+# ThreadSanitizer (advisory): data-race detection on the pool + parity
+# tests. Needs: rustup +nightly component add rust-src.
+tsan:
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -Zbuild-std \
+		--target x86_64-unknown-linux-gnu --lib -- runtime::native::exec
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -Zbuild-std \
+		--target x86_64-unknown-linux-gnu --test linalg_parity
 
 # Full benchmark sweep. Every bench binary appends a machine-readable run
 # record (git rev, DYNAMIX_THREADS, p10/p50/p90, samples/s) to

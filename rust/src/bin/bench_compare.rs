@@ -8,15 +8,9 @@
 //! suites with fewer than two runs are reported, never an error (the tool
 //! is advisory — CI runs it after the bench smoke).
 
+use dynamix::util::bench::out_path;
 use dynamix::util::json::Json;
 use std::collections::BTreeMap;
-
-fn out_path() -> std::path::PathBuf {
-    match std::env::var("DYNAMIX_BENCH_OUT") {
-        Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
-        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json"),
-    }
-}
 
 /// (bench name -> p50 seconds) plus run metadata, from one run record.
 struct Run {

@@ -1,0 +1,94 @@
+//! `dynamix-lint` — run the repo-native invariant catalogue (see
+//! `dynamix::util::lint`) over `rust/{src,tests,benches}`.
+//!
+//! ```text
+//! dynamix-lint [--root <crate dir>] [--format text|json] [--self-test]
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = violations found (or self-test failures),
+//! 2 = usage/IO error. `--self-test` runs every rule against its
+//! embedded known-bad/known-good fixture pair instead of scanning the
+//! tree — CI runs both.
+
+use dynamix::util::lint;
+use std::path::PathBuf;
+
+struct Opts {
+    root: PathBuf,
+    json: bool,
+    self_test: bool,
+}
+
+fn usage() -> ! {
+    eprintln!("usage: dynamix-lint [--root <crate dir>] [--format text|json] [--self-test]");
+    std::process::exit(2);
+}
+
+fn parse_args() -> Opts {
+    let mut opts = Opts {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+        json: false,
+        self_test: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => opts.root = PathBuf::from(p),
+                None => usage(),
+            },
+            "--format" => match args.next().as_deref() {
+                Some("json") => opts.json = true,
+                Some("text") => opts.json = false,
+                _ => usage(),
+            },
+            "--self-test" => opts.self_test = true,
+            "--help" | "-h" => usage(),
+            _ => usage(),
+        }
+    }
+    opts
+}
+
+fn main() {
+    let opts = parse_args();
+
+    if opts.self_test {
+        let fails = lint::self_test();
+        if fails.is_empty() {
+            println!(
+                "dynamix-lint self-test: all {} rules fire on their fixtures",
+                lint::RULES.len()
+            );
+            return;
+        }
+        for f in &fails {
+            eprintln!("self-test FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+
+    let (violations, files) = match lint::scan_tree(&opts.root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dynamix-lint: scanning {}: {e}", opts.root.display());
+            std::process::exit(2);
+        }
+    };
+
+    if opts.json {
+        println!("{}", lint::report_json(&violations, files));
+    } else {
+        for v in &violations {
+            println!("{}", v.render());
+        }
+        println!(
+            "dynamix-lint: {} file(s) scanned, {} violation(s)",
+            files,
+            violations.len()
+        );
+    }
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,79 @@
+//! The one sanctioned doorway to `DYNAMIX_*` environment variables.
+//!
+//! PR 5 shipped (and fixed) a real bug in this class: `Pool::default`
+//! re-read `DYNAMIX_THREADS` per call site, so a mid-process env change
+//! produced two pools with different shapes. The repo-wide rule — now
+//! machine-enforced by `dynamix-lint`'s `env-read` rule — is that
+//! `std::env::var` appears only here, in `runtime/native/exec.rs`
+//! (process-global `GlobalCfg`, read exactly once through a `OnceLock`),
+//! and in `util/bench.rs` (bench-harness knobs). Everything else calls
+//! these accessors, which keeps every variable's parsing/defaulting in
+//! one grep-able place.
+//!
+//! These helpers deliberately stay *thin* (no caching): read-once
+//! discipline belongs to the callers that need it (`GlobalCfg`), while
+//! path-style overrides (`DYNAMIX_RUNS`, `DYNAMIX_ARTIFACTS`) are
+//! harmless to re-read and are consulted per call.
+
+use std::path::PathBuf;
+
+/// Raw accessor: `Some` iff the variable is set (possibly empty).
+pub fn raw(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// `DYNAMIX_RUNS`: override for the run-record directory.
+pub fn runs_dir_override() -> Option<PathBuf> {
+    raw("DYNAMIX_RUNS").map(PathBuf::from)
+}
+
+/// `DYNAMIX_ARTIFACTS`: override for the XLA artifacts directory.
+pub fn artifacts_dir_override() -> Option<PathBuf> {
+    raw("DYNAMIX_ARTIFACTS").map(PathBuf::from)
+}
+
+/// `DYNAMIX_BACKEND`: requested backend name; empty string when unset
+/// (the backend selector treats `""` and `"auto"` identically).
+pub fn backend_choice() -> String {
+    raw("DYNAMIX_BACKEND").unwrap_or_default()
+}
+
+/// `DYNAMIX_SHARDS`: requested loopback shard count (>= 1), if any.
+pub fn shards() -> Option<usize> {
+    raw("DYNAMIX_SHARDS")?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
+/// `DYNAMIX_KERNEL`: the env-level kernel-tier request, if non-empty.
+pub fn kernel_choice() -> Option<String> {
+    raw("DYNAMIX_KERNEL").filter(|s| !s.is_empty())
+}
+
+/// Set `DYNAMIX_KERNEL` to the config-file request `k` unless the
+/// environment already picked a tier (the env always wins). Must run
+/// before the first backend is constructed: `GlobalCfg` reads the
+/// variable exactly once, so a later call is a silent no-op.
+pub fn request_kernel(k: &str) {
+    if kernel_choice().is_none() {
+        std::env::set_var("DYNAMIX_KERNEL", k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_parses_and_filters() {
+        // Parse logic only — exercised via the raw string path to avoid
+        // cross-test env races.
+        assert_eq!("3".trim().parse::<usize>().ok().filter(|&n| n >= 1), Some(3));
+        assert_eq!("0".trim().parse::<usize>().ok().filter(|&n| n >= 1), None);
+        assert_eq!("x".trim().parse::<usize>().ok().filter(|&n| n >= 1), None);
+        // Unset variable -> None without panicking.
+        assert_eq!(raw("DYNAMIX_DEFINITELY_UNSET_VAR_42"), None);
+    }
+}

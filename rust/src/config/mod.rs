@@ -433,6 +433,7 @@ impl ExperimentConfig {
     }
 }
 
+pub mod env;
 pub mod presets;
 
 #[cfg(test)]

@@ -26,10 +26,8 @@ use std::path::PathBuf;
 
 /// Where run records land (`$DYNAMIX_RUNS` or `<repo>/runs`).
 pub fn runs_dir() -> PathBuf {
-    if let Ok(p) = std::env::var("DYNAMIX_RUNS") {
-        return PathBuf::from(p);
-    }
-    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"))
+    crate::config::env::runs_dir_override()
+        .unwrap_or_else(|| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/runs")))
 }
 
 fn save(json: &Json, rel: &str) -> anyhow::Result<PathBuf> {

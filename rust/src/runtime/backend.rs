@@ -281,15 +281,11 @@ pub fn sharded_backend(n: usize) -> Backend {
 /// artifacts directory exists; the native backend otherwise — so a fresh
 /// clone works with zero setup and `make artifacts` upgrades in place.
 pub fn default_backend() -> anyhow::Result<Backend> {
-    let choice = std::env::var("DYNAMIX_BACKEND").unwrap_or_default();
+    let choice = crate::config::env::backend_choice();
     match choice.as_str() {
         "native" => Ok(native_backend()),
         "sharded" => {
-            let n = std::env::var("DYNAMIX_SHARDS")
-                .ok()
-                .and_then(|s| s.trim().parse::<usize>().ok())
-                .filter(|&n| n >= 1)
-                .unwrap_or(2);
+            let n = crate::config::env::shards().unwrap_or(2);
             Ok(sharded_backend(n))
         }
         "xla" => open_xla(),
@@ -310,10 +306,8 @@ pub fn default_backend() -> anyhow::Result<Backend> {
 /// reads the variable exactly once; a later call is a silent no-op on the
 /// already-initialized pool.
 pub fn apply_kernel_request(kernel: Option<&str>) {
-    if std::env::var("DYNAMIX_KERNEL").unwrap_or_default().is_empty() {
-        if let Some(k) = kernel {
-            std::env::set_var("DYNAMIX_KERNEL", k);
-        }
+    if let Some(k) = kernel {
+        crate::config::env::request_kernel(k);
     }
 }
 
@@ -321,7 +315,7 @@ pub fn apply_kernel_request(kernel: Option<&str>) {
 /// `DYNAMIX_BACKEND` is unset and `shards` is `Some(n)`, a loopback
 /// sharded data plane; otherwise the environment selection wins.
 pub fn backend_for(shards: Option<usize>) -> anyhow::Result<Backend> {
-    if std::env::var("DYNAMIX_BACKEND").unwrap_or_default().is_empty() {
+    if crate::config::env::backend_choice().is_empty() {
         if let Some(n) = shards {
             return Ok(sharded_backend(n));
         }
@@ -369,7 +363,7 @@ mod tests {
     fn default_backend_env_override() {
         // `native` always resolves; garbage never does. (Run serially with
         // env juggling to avoid cross-test races on the var.)
-        let prev = std::env::var("DYNAMIX_BACKEND").ok();
+        let prev = std::env::var("DYNAMIX_BACKEND").ok(); // lint:allow(env-read): test saves/restores the raw variable around the override.
         std::env::set_var("DYNAMIX_BACKEND", "native");
         assert_eq!(default_backend().unwrap().name(), "native");
         std::env::set_var("DYNAMIX_BACKEND", "bogus");

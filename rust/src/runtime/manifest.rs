@@ -256,10 +256,8 @@ fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
 /// Default artifacts dir: `$DYNAMIX_ARTIFACTS` or `<repo>/artifacts`
 /// (one level above the crate, where `make artifacts` emits).
 pub fn default_artifacts_dir() -> PathBuf {
-    if let Ok(p) = std::env::var("DYNAMIX_ARTIFACTS") {
-        return PathBuf::from(p);
-    }
-    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"))
+    crate::config::env::artifacts_dir_override()
+        .unwrap_or_else(|| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")))
 }
 
 // Loading a real manifest requires `make artifacts`, which only the XLA

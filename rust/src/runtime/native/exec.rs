@@ -274,10 +274,18 @@ impl WorkerSet {
             let mut q = self.queue.lock().unwrap();
             for job in it {
                 let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(job);
-                // SAFETY: the task borrows data from this call frame
-                // ('scope), but `sync.wait()` below blocks — on the
-                // success *and* panic paths — until every task has run to
-                // completion, so no borrow outlives the frame.
+                // SAFETY: erasing 'scope to 'static is sound because no
+                // borrow inside `job` can outlive this call frame:
+                // (1) every queued Task is executed exactly once by
+                //     `worker_loop`, under `catch_unwind`, and signals
+                //     `sync.finish()` on both the success and panic paths;
+                // (2) the caller-run first chunk is also `catch_unwind`'d
+                //     below, so control always reaches `sync.wait()` —
+                //     `resume_unwind` happens strictly *after* the wait;
+                // (3) `wait()` blocks until `remaining == 0`, i.e. until
+                //     every job (and its borrows of the frame) is done;
+                // (4) the queue never clones or leaks a Task, and
+                //     `F: Send` bounds the cross-thread hand-off.
                 let job: Box<dyn FnOnce() + Send + 'static> =
                     unsafe { std::mem::transmute(job) };
                 q.push_back(Task { job, sync: sync.clone() });

@@ -326,6 +326,9 @@ mod simd {
     use core::arch::x86_64::*;
 
     /// Horizontal sum of 8 lanes (deterministic pairwise association).
+    // SAFETY: unsafe solely because of `target_feature`; operates on a
+    // register value, no memory access. Callers are themselves
+    // avx2-gated kernels in this module.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum256(v: __m256) -> f32 {
@@ -337,6 +340,12 @@ mod simd {
         _mm_cvtss_f32(s)
     }
 
+    // SAFETY: unsafe solely because of `target_feature` — reached only
+    // through the tier dispatch below, which holds `KernelTier::Simd`
+    // only after runtime AVX2+FMA detection. All loads/stores are
+    // unaligned (`loadu`/`storeu`, no alignment precondition) through
+    // pointers derived from the argument slices, with every vector
+    // access guarded by `j + LANE <= n` and scalar tails for the rest.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn matmul_acc_block(
         x: &[f32],
@@ -411,6 +420,9 @@ mod simd {
         }
     }
 
+    // SAFETY: same contract as `matmul_acc_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived loads bounded by `j + LANE <= n` with scalar tails.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn matmul_bt_block(
         dy: &[f32],
@@ -449,6 +461,9 @@ mod simd {
         }
     }
 
+    // SAFETY: same contract as `matmul_acc_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived loads bounded by `j + LANE <= n` with scalar tails.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn matmul_bt_packed_block(
         dy: &[f32],
@@ -486,6 +501,9 @@ mod simd {
 
     /// Bitwise-parity-critical: `mul`+`add` only (no FMA), same rounding
     /// sequence per output element as the scalar and blocked folds.
+    // SAFETY: unsafe only for `target_feature` (avx2 alone — no FMA, see
+    // the parity note above), dispatch-gated on detected AVX2, unaligned
+    // slice-derived loads bounded by `j + LANE <= n` with scalar tails.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn matmul_at_block(
         x: &[f32],

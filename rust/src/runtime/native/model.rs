@@ -396,6 +396,9 @@ pub fn masked_ce_loss_ws(
     correct: &mut Vec<f32>,
     dlogits: &mut Vec<f32>,
 ) -> (f32, f32) {
+    // PARITY: sequential left-to-right mask fold — the sharded backend
+    // computes the same denominator over the full mask before splitting
+    // rows, so this association must never change (bit-identical losses).
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
     masked_ce_rows(logits, y, mask, m, n, denom, logp, loss_terms, correct, dlogits);
     fold_masked_ce(loss_terms, correct, denom)
@@ -818,6 +821,7 @@ mod tests {
         let acts = m.forward(&p, &x, rows);
         let fused = masked_ce_loss(&acts.logits, &y, &mask, rows, m.classes);
         // Shard the rows 4|5 and fold partials in order.
+        // PARITY: full-mask fold, same association as the fused path above.
         let denom: f32 = mask.iter().sum::<f32>().max(1.0);
         let (mut lsum, mut asum) = (0.0f64, 0.0f64);
         for (lo, hi) in [(0usize, 4usize), (4, 9)] {

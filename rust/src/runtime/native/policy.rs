@@ -165,6 +165,9 @@ pub fn policy_update_ws(
     logp.clear();
     logp.resize(b * N_ACTIONS, 0.0);
     log_softmax(logits, b, N_ACTIONS, logp);
+    // PARITY: sequential left-to-right mask fold, mirrored by the
+    // finite-difference test's loss recomputation — keep associations
+    // identical or the gradient check drifts.
     let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
 
     let mut pg_sum = 0.0f64;
@@ -412,6 +415,7 @@ mod tests {
             let (_h1, _h2, logits, values) = super::trunk(theta, mb.states, b);
             let mut logp = vec![0.0f32; b * N_ACTIONS];
             log_softmax(&logits, b, N_ACTIONS, &mut logp);
+            // PARITY: same fold as `policy_update_ws`'s denominator.
             let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
             let (mut pg, mut vl, mut ent) = (0.0f64, 0.0f64, 0.0f64);
             for i in 0..b {

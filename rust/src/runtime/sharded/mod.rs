@@ -224,7 +224,8 @@ impl ShardedBackend {
         let m = mask.len();
         anyhow::ensure!(x.len() == m * feature_dim, "x wrong size");
         anyhow::ensure!(y.len() == m, "y wrong size");
-        // Same fold as the fused loss's denominator — identical bits.
+        // PARITY: same sequential fold as the fused loss's denominator in
+        // `masked_ce_loss_ws` — identical bits across shard counts.
         let denom = mask.iter().sum::<f32>().max(1.0);
         let active = self.active.lock().unwrap().clone();
         anyhow::ensure!(active.iter().any(|&a| a), "no active shards");

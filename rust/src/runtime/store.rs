@@ -12,7 +12,7 @@
 //! while callers for DIFFERENT artifacts still compile concurrently.
 
 use super::manifest::Manifest;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -52,7 +52,10 @@ type Slot = Arc<Mutex<Option<Arc<PjRtLoadedExecutable>>>>;
 pub struct ArtifactStore {
     pub client: PjRtClient,
     pub manifest: Manifest,
-    slots: Mutex<HashMap<String, Slot>>,
+    /// Keyed by artifact name; `BTreeMap` so any future iteration
+    /// (compiled counts, log dumps) walks artifacts in a deterministic
+    /// order — the `nondet-collection` lint forbids `HashMap` here.
+    slots: Mutex<BTreeMap<String, Slot>>,
     /// (artifact, compile_seconds) log for EXPERIMENTS.md §Perf.
     compile_log: Mutex<Vec<(String, f64)>>,
 }
@@ -65,7 +68,7 @@ impl ArtifactStore {
         Ok(ArtifactStore {
             client,
             manifest,
-            slots: Mutex::new(HashMap::new()),
+            slots: Mutex::new(BTreeMap::new()),
             compile_log: Mutex::new(Vec::new()),
         })
     }

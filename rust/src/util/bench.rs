@@ -247,7 +247,8 @@ impl BenchSession {
 }
 
 /// `DYNAMIX_BENCH_OUT`, defaulting to `<repo root>/BENCH_native.json`.
-fn out_path() -> std::path::PathBuf {
+/// Public so `bench_compare` resolves the record file identically.
+pub fn out_path() -> std::path::PathBuf {
     match std::env::var("DYNAMIX_BENCH_OUT") {
         Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
         _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json"),

@@ -1,0 +1,124 @@
+//! Embedded known-bad/known-good fixtures for `dynamix-lint --self-test`.
+//!
+//! Each rule ships with a minimal source pair: `bad` must trip its rule
+//! exactly once, `good` must scan completely clean. The linter's own
+//! regressions (a rule silently going blind after a scanner change) are
+//! caught by running these on every `--self-test` and in
+//! `tests/lint_self.rs`. The sources live in raw strings, so when the
+//! linter scans *this* file their contents are blanked out of the code
+//! channel and none of the deliberately-bad patterns fire on the real
+//! tree.
+
+/// One rule's self-test pair. `path` is the synthetic in-scope location
+/// the sources pretend to live at (scoping is path-based).
+pub struct Fixture {
+    pub rule: &'static str,
+    pub path: &'static str,
+    pub bad: &'static str,
+    pub good: &'static str,
+}
+
+/// All self-test fixtures, one per rule.
+pub fn all() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            rule: "safety-comment",
+            path: "src/runtime/native/lintfix.rs",
+            bad: r#"
+pub fn read_first(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"#,
+            good: r#"
+pub fn read_first(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points to at least one valid f32.
+    unsafe { *p }
+}
+"#,
+        },
+        Fixture {
+            rule: "env-read",
+            path: "src/trainer/lintfix.rs",
+            bad: r#"
+pub fn knob() -> Option<String> {
+    std::env::var("DYNAMIX_KNOB").ok()
+}
+"#,
+            good: r#"
+pub fn knob() -> Option<String> {
+    crate::config::env::raw("DYNAMIX_KNOB")
+}
+"#,
+        },
+        Fixture {
+            rule: "wall-clock",
+            path: "src/sim/lintfix.rs",
+            bad: r#"
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#,
+            good: r#"
+pub fn stamp(virtual_clock_us: u64) -> u64 {
+    virtual_clock_us + 1
+}
+"#,
+        },
+        Fixture {
+            rule: "nondet-collection",
+            path: "src/runtime/lintfix.rs",
+            bad: r#"
+pub type Slots = std::collections::HashMap<String, usize>;
+"#,
+            good: r#"
+pub type Slots = std::collections::BTreeMap<String, usize>;
+"#,
+        },
+        Fixture {
+            rule: "fold-order",
+            path: "src/runtime/native/lintfix2.rs",
+            bad: r#"
+pub fn denom(mask: &[f32]) -> f32 {
+    mask.iter().sum::<f32>().max(1.0)
+}
+"#,
+            good: r#"
+pub fn denom(mask: &[f32]) -> f32 {
+    // PARITY: left-to-right fold — must stay bit-identical to the
+    // sharded denominator fold in runtime/sharded.
+    mask.iter().sum::<f32>().max(1.0)
+}
+"#,
+        },
+        Fixture {
+            rule: "feature-detect",
+            path: "src/runtime/native/lintfix3.rs",
+            bad: r#"
+pub fn has_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+"#,
+            good: r#"
+pub fn has_avx2() -> bool {
+    crate::runtime::native::exec::KernelTier::resolved().is_simd()
+}
+"#,
+        },
+        Fixture {
+            rule: "suppression",
+            path: "src/trainer/lintfix2.rs",
+            // An allow without a justification suffix is itself a
+            // violation AND does not suppress the underlying rule.
+            bad: r#"
+pub fn knob() -> Option<String> {
+    std::env::var("DYNAMIX_KNOB").ok() // lint:allow(env-read)
+}
+"#,
+            good: r#"
+pub fn knob() -> Option<String> {
+    std::env::var("DYNAMIX_KNOB").ok() // lint:allow(env-read): read once at startup; value is mirrored into the config layer.
+}
+"#,
+        },
+    ]
+}

@@ -1,0 +1,486 @@
+//! `dynamix-lint` — the repo-native invariant checker.
+//!
+//! DYNAMIX's load-bearing guarantees are invariants, not features:
+//! bit-identical gradient reduction across shard counts and kernel
+//! tiers, deterministic scenario replay, and env-config read exactly
+//! once per process. This module codifies them as a source-level rule
+//! catalogue over `rust/{src,tests,benches}`:
+//!
+//! | rule id             | invariant |
+//! |---------------------|-----------|
+//! | `safety-comment`    | every `unsafe` is immediately preceded by a `// SAFETY:` proof |
+//! | `env-read`          | `std::env::var` only in the config/exec/bench allowlist (read-once) |
+//! | `wall-clock`        | no `Instant::now`/`SystemTime` in determinism-critical modules |
+//! | `nondet-collection` | no `HashMap`/`HashSet` in reduce/wire/record-emitting modules |
+//! | `fold-order`        | float reductions in parity-critical paths carry a `// PARITY:` marker |
+//! | `feature-detect`    | raw `is_x86_feature_detected!` only inside `exec.rs` tier detection |
+//! | `suppression`       | every `lint:allow` names a known rule and justifies itself |
+//!
+//! A finding is suppressed by attaching `lint:allow(env-read): reason`
+//! (with the offending rule's id and a non-empty justification after the
+//! colon) to the flagged line — either trailing on the line itself or in
+//! the comment block directly above it. An allow with an unknown rule id
+//! or a missing justification does **not** suppress anything and is
+//! itself flagged under the `suppression` rule.
+//!
+//! The checker is deliberately a line/token pass over the
+//! [`scan`]-split source (no parser, no registry deps — consistent with
+//! the vendored-`anyhow` policy). Rules attach context by walking
+//! *upward* from a flagged line through comment-only lines, attribute
+//! lines, and statement-continuation heads (a code line ending in `=`,
+//! `(`, `,`, …), so a `SAFETY:` block above `#[target_feature]`
+//! attributes or above a multi-line `let … =` binding still counts.
+//!
+//! [`fixtures`] embeds one known-bad/known-good source pair per rule;
+//! [`self_test`] runs them so the linter's own regressions fail CI.
+
+pub mod fixtures;
+pub mod scan;
+
+use scan::{count_tokens, split_lines, SourceLine};
+use std::path::Path;
+
+/// Rule ids with one-line summaries (order = report order).
+pub const RULES: &[(&str, &str)] = &[
+    ("safety-comment", "`unsafe` without an attached `SAFETY:` comment"),
+    ("env-read", "`std::env::var` outside the config/exec/bench allowlist"),
+    ("wall-clock", "wall-clock read in a determinism-critical module"),
+    ("nondet-collection", "iteration-order-nondeterministic collection in a reduce/wire/record module"),
+    ("fold-order", "float reduction in a parity-critical path without a `PARITY:` marker"),
+    ("feature-detect", "raw CPU feature detection outside `exec.rs` tier resolution"),
+    ("suppression", "`lint:allow` with an unknown rule id or no justification"),
+];
+
+/// One finding. `line` is 1-based.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn violation(rule: &'static str, file: &str, line: usize, msg: String) -> Violation {
+    Violation { rule, file: file.to_string(), line, msg }
+}
+
+/// Is `id` a rule that `lint:allow` may name? (`suppression` itself is
+/// the meta-rule and cannot be allowed away.)
+fn allowable_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id && *r != "suppression")
+}
+
+/// Parse every `lint:allow` occurrence in one comment, returning
+/// `(id, justified)` pairs. `justified` means a `:` followed by
+/// non-empty text came right after the closing paren.
+fn parse_allows(comment: &str) -> Vec<(String, bool)> {
+    const NEEDLE: &str = "lint:allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(NEEDLE) {
+        let after = &rest[pos + NEEDLE.len()..];
+        let Some(close) = after.find(')') else {
+            out.push((after.trim().to_string(), false));
+            break;
+        };
+        let id = after[..close].trim().to_string();
+        let tail = after[close + 1..].trim_start();
+        let justified = tail.starts_with(':') && !tail[1..].trim().is_empty();
+        out.push((id, justified));
+        rest = &after[close + 1..];
+    }
+    out
+}
+
+/// Maximum upward steps when attaching comment context to a line (a
+/// backstop — the blank-line / unrelated-statement stops are the real
+/// boundary; sized to cover the longest SAFETY proof sketch in the tree).
+const WALK_CAP: usize = 16;
+
+/// Statement-continuation suffixes: a code line ending in one of these is
+/// the head of the statement the *next* line continues, so a comment
+/// above it still attaches (e.g. `let job: Box<…> =` / `unsafe { … }`).
+const CONTINUATION: &[&str] = &["=", "(", ",", "=>", "+", "&&", "||"];
+
+/// Indices of the lines whose comments attach to line `idx`: the line
+/// itself, then upward through comment-only lines, `#[…]` attribute
+/// lines, and continuation heads; stops at a blank line, plain code, or
+/// after [`WALK_CAP`] steps.
+fn attached_lines(lines: &[SourceLine], idx: usize) -> Vec<usize> {
+    let mut out = vec![idx];
+    let mut i = idx;
+    for _ in 0..WALK_CAP {
+        if i == 0 {
+            break;
+        }
+        i -= 1;
+        let code = lines[i].code.trim();
+        let comment = lines[i].comment.trim();
+        if code.is_empty() && comment.is_empty() {
+            break; // blank line ends the attachment block
+        }
+        if code.is_empty() || code.starts_with("#[") || code.starts_with("#!") {
+            out.push(i);
+            continue;
+        }
+        if CONTINUATION.iter().any(|s| code.ends_with(s)) {
+            out.push(i);
+            continue;
+        }
+        break; // an unrelated statement
+    }
+    out
+}
+
+fn has_marker(lines: &[SourceLine], attached: &[usize], marker: &str) -> bool {
+    attached.iter().any(|&i| lines[i].comment.contains(marker))
+}
+
+fn is_allowed(lines: &[SourceLine], attached: &[usize], rule: &str) -> bool {
+    attached.iter().any(|&i| {
+        parse_allows(&lines[i].comment)
+            .iter()
+            .any(|(id, justified)| *justified && id == rule && allowable_rule(id))
+    })
+}
+
+// --- per-rule path scoping (paths are crate-relative, '/'-separated) ---
+
+/// L2: modules allowed to read the environment directly. Everything else
+/// must go through `config::env` (or carry a justified allow).
+fn env_read_allowlisted(rel: &str) -> bool {
+    rel.starts_with("src/config/")
+        || rel == "src/runtime/native/exec.rs"
+        || rel == "src/util/bench.rs"
+}
+
+/// L3: determinism-critical modules where wall-clock reads would break
+/// replay / parity.
+fn wall_clock_scoped(rel: &str) -> bool {
+    rel.starts_with("src/sim/")
+        || rel.starts_with("src/runtime/sharded/")
+        || rel == "src/runtime/native/linalg.rs"
+        || rel == "src/comm/wire.rs"
+}
+
+/// L4: reduce-sensitive / wire / record-emitting modules where iteration
+/// order reaches observable output.
+fn collection_scoped(rel: &str) -> bool {
+    rel.starts_with("src/runtime/")
+        || rel.starts_with("src/comm/")
+        || rel.starts_with("src/sim/")
+        || rel.starts_with("src/metrics/")
+}
+
+/// L5: parity-critical fold paths (the bit-identical reduction contract).
+fn fold_scoped(rel: &str) -> bool {
+    rel.starts_with("src/runtime/native/")
+        || rel.starts_with("src/runtime/sharded/")
+        || rel == "src/comm/wire.rs"
+}
+
+/// L6: the only module allowed to probe CPU features directly.
+fn feature_detect_allowlisted(rel: &str) -> bool {
+    rel == "src/runtime/native/exec.rs"
+}
+
+/// Run the full rule catalogue over one file's source. `rel` is the
+/// crate-relative path (forward slashes) used for rule scoping.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
+    let lines = split_lines(src);
+    let mut out = Vec::new();
+
+    // Meta-pass: every `lint:allow` must name a known rule and justify
+    // itself; invalid allows are flagged here and ignored everywhere else.
+    for (i, l) in lines.iter().enumerate() {
+        for (id, justified) in parse_allows(&l.comment) {
+            if !allowable_rule(&id) {
+                out.push(violation(
+                    "suppression",
+                    rel,
+                    i + 1,
+                    format!("lint:allow names unknown rule `{id}`"),
+                ));
+            } else if !justified {
+                out.push(violation(
+                    "suppression",
+                    rel,
+                    i + 1,
+                    format!("lint:allow({id}) needs a `: <why>` justification suffix"),
+                ));
+            }
+        }
+    }
+
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+
+        // L1 — safety-comment.
+        if count_tokens(code, "unsafe", false) > 0 {
+            let ctx = attached_lines(&lines, i);
+            if !has_marker(&lines, &ctx, "SAFETY:") && !is_allowed(&lines, &ctx, "safety-comment") {
+                out.push(violation(
+                    "safety-comment",
+                    rel,
+                    i + 1,
+                    "`unsafe` without an attached `// SAFETY:` comment".to_string(),
+                ));
+            }
+        }
+
+        // L2 — env-read (prefix match also catches `env::var_os`/`env::vars`).
+        if !env_read_allowlisted(rel) && count_tokens(code, "env::var", true) > 0 {
+            let ctx = attached_lines(&lines, i);
+            if !is_allowed(&lines, &ctx, "env-read") {
+                out.push(violation(
+                    "env-read",
+                    rel,
+                    i + 1,
+                    "direct env read outside the config/exec/bench allowlist; route through `config::env`".to_string(),
+                ));
+            }
+        }
+
+        // L3 — wall-clock.
+        if wall_clock_scoped(rel) {
+            for pat in ["Instant::now", "SystemTime"] {
+                if count_tokens(code, pat, false) > 0 {
+                    let ctx = attached_lines(&lines, i);
+                    if !is_allowed(&lines, &ctx, "wall-clock") {
+                        out.push(violation(
+                            "wall-clock",
+                            rel,
+                            i + 1,
+                            format!("`{pat}` in a determinism-critical module"),
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+
+        // L4 — nondet-collection.
+        if collection_scoped(rel) {
+            for pat in ["HashMap", "HashSet"] {
+                if count_tokens(code, pat, false) > 0 {
+                    let ctx = attached_lines(&lines, i);
+                    if !is_allowed(&lines, &ctx, "nondet-collection") {
+                        out.push(violation(
+                            "nondet-collection",
+                            rel,
+                            i + 1,
+                            format!("`{pat}` iteration order is nondeterministic; use `BTreeMap`/`BTreeSet`"),
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+
+        // L5 — fold-order.
+        if fold_scoped(rel) {
+            for pat in ["sum::<f32>", "sum::<f64>", ".fold("] {
+                if count_tokens(code, pat, false) > 0 {
+                    let ctx = attached_lines(&lines, i);
+                    if !has_marker(&lines, &ctx, "PARITY:")
+                        && !is_allowed(&lines, &ctx, "fold-order")
+                    {
+                        out.push(violation(
+                            "fold-order",
+                            rel,
+                            i + 1,
+                            format!("`{pat}` in a parity-critical path without a `// PARITY:` marker"),
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+
+        // L6 — feature-detect.
+        if !feature_detect_allowlisted(rel) && count_tokens(code, "is_x86_feature_detected", false) > 0
+        {
+            let ctx = attached_lines(&lines, i);
+            if !is_allowed(&lines, &ctx, "feature-detect") {
+                out.push(violation(
+                    "feature-detect",
+                    rel,
+                    i + 1,
+                    "raw feature detection outside `exec.rs`; dispatch through `KernelTier::resolved`".to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, pushing crate-relative
+/// '/'-joined paths onto `out`. A missing `dir` is skipped.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    let mut entries: Vec<_> = rd.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .expect("walk stays under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Scan `crate_root/{src,tests,benches}` with the full catalogue.
+/// Returns the findings (file-sorted) and the number of files scanned.
+pub fn scan_tree(crate_root: &Path) -> std::io::Result<(Vec<Violation>, usize)> {
+    let mut files = Vec::new();
+    for top in ["src", "tests", "benches"] {
+        collect_rs(crate_root, &crate_root.join(top), &mut files)?;
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(crate_root.join(rel))?;
+        out.extend(scan_source(rel, &src));
+    }
+    Ok((out, files.len()))
+}
+
+/// Run every rule against its embedded known-bad/known-good fixture.
+/// Returns human-readable failure descriptions (empty = all rules live).
+pub fn self_test() -> Vec<String> {
+    let mut fails = Vec::new();
+    for f in fixtures::all() {
+        let bad = scan_source(f.path, f.bad);
+        let hits = bad.iter().filter(|v| v.rule == f.rule).count();
+        if hits != 1 {
+            fails.push(format!(
+                "rule `{}`: expected exactly 1 finding on the bad fixture, got {hits}",
+                f.rule
+            ));
+        }
+        // The suppression fixture legitimately also trips the rule the
+        // invalid allow failed to suppress; every other bad fixture must
+        // trip only its own rule.
+        if f.rule != "suppression" && bad.len() != hits {
+            fails.push(format!(
+                "rule `{}`: bad fixture tripped unrelated rules: {:?}",
+                f.rule,
+                bad.iter().map(|v| v.rule).collect::<Vec<_>>()
+            ));
+        }
+        let good = scan_source(f.path, f.good);
+        if !good.is_empty() {
+            fails.push(format!(
+                "rule `{}`: good fixture should be clean, got {:?}",
+                f.rule,
+                good.iter().map(Violation::render).collect::<Vec<_>>()
+            ));
+        }
+    }
+    fails
+}
+
+/// Machine-readable report for CI annotation (`--format json`).
+pub fn report_json(violations: &[Violation], files_scanned: usize) -> String {
+    let items: Vec<crate::util::json::Json> = violations
+        .iter()
+        .map(|v| {
+            crate::jobj!(
+                "rule" => v.rule,
+                "file" => v.file.clone(),
+                "line" => v.line,
+                "msg" => v.msg.clone()
+            )
+        })
+        .collect();
+    crate::jobj!(
+        "files_scanned" => files_scanned,
+        "violations" => items,
+        "ok" => violations.is_empty()
+    )
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safety_attaches_through_attributes_and_continuations() {
+        // Comment above attribute lines.
+        let src = "// SAFETY: unsafe solely for target_feature; no pointer preconditions.\n#[inline]\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
+        assert!(scan_source("src/runtime/native/x.rs", src).is_empty());
+        // Comment above a multi-line `let … =` head.
+        let src = "// SAFETY: the latch below outlives every borrow.\nlet job: Box<F> =\n    unsafe { transmute(j) };\n";
+        assert!(scan_source("src/runtime/native/x.rs", src).is_empty());
+        // A blank line breaks attachment.
+        let src = "// SAFETY: stale, detached.\n\nunsafe fn f() {}\n";
+        assert_eq!(scan_source("src/runtime/native/x.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn env_read_scoping_and_suppression() {
+        let hit = "let v = std::env::var(\"X\").ok();\n";
+        assert_eq!(scan_source("src/trainer/mod.rs", hit).len(), 1);
+        // Allowlisted paths pass without annotation.
+        assert!(scan_source("src/runtime/native/exec.rs", hit).is_empty());
+        assert!(scan_source("src/config/env.rs", hit).is_empty());
+        // A justified trailing allow suppresses.
+        let ok = "let v = std::env::var(\"X\").ok(); // lint:allow(env-read): test save/restore of the raw env.\n";
+        assert!(scan_source("src/trainer/mod.rs", ok).is_empty());
+        // Unjustified: the allow is flagged AND the read still fires.
+        let bad = "let v = std::env::var(\"X\").ok(); // lint:allow(env-read)\n";
+        let vs = scan_source("src/trainer/mod.rs", bad);
+        let rules: Vec<_> = vs.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"suppression") && rules.contains(&"env-read"), "{rules:?}");
+        // Unknown rule id never suppresses.
+        let bogus = "let v = std::env::var(\"X\").ok(); // lint:allow(no-such-rule): because.\n";
+        let vs = scan_source("src/trainer/mod.rs", bogus);
+        let rules: Vec<_> = vs.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"suppression") && rules.contains(&"env-read"), "{rules:?}");
+    }
+
+    #[test]
+    fn fold_order_needs_parity_marker_only_in_scope() {
+        let bare = "let d: f32 = mask.iter().sum::<f32>().max(1.0);\n";
+        assert_eq!(scan_source("src/runtime/native/model.rs", bare).len(), 1);
+        let marked = "// PARITY: sequential left-to-right fold, shared with the sharded path.\nlet d: f32 = mask.iter().sum::<f32>().max(1.0);\n";
+        assert!(scan_source("src/runtime/native/model.rs", marked).is_empty());
+        // Out of scope: no marker needed.
+        assert!(scan_source("src/metrics/mod.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn patterns_in_strings_and_comments_do_not_fire() {
+        let src = "// This comment mentions unsafe and Instant::now freely.\nlet s = \"std::env::var HashMap unsafe\";\n";
+        assert!(scan_source("src/sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn self_test_is_green() {
+        let fails = self_test();
+        assert!(fails.is_empty(), "{fails:#?}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Line/token scanner for `dynamix-lint`: splits Rust source into
+//! per-line (code, comment) channels so the rules in [`super`] can match
+//! tokens without being fooled by string literals or comments.
+//!
+//! This is deliberately NOT a parser. The rules only need to know, per
+//! line, (a) which characters are live code and (b) what the attached
+//! comment text says — so a small state machine over the raw characters
+//! is enough, and it stays zero-dependency (the vendored-`anyhow` policy
+//! rules out syn/proc-macro2). Handled: line comments, nested block
+//! comments, string literals (incl. escapes and `\`-newline
+//! continuations), raw strings `r"…"` / `r#"…"#` (any hash count, and
+//! therefore `br…` byte raw strings, whose `b` is just a code char),
+//! char literals vs lifetimes (`'x'` and `'\n'` vs `'scope`).
+//!
+//! String literal *contents* are dropped (the delimiting quotes are kept
+//! as anchors); comment text is preserved verbatim so the `SAFETY:` /
+//! `PARITY:` / suppression markers can be read back out.
+
+/// One source line, split into its live-code and comment channels.
+#[derive(Debug, Default, Clone)]
+pub struct SourceLine {
+    /// The line with comments removed and string/char literal contents
+    /// blanked (delimiters kept).
+    pub code: String,
+    /// The concatenated comment text of the line (without `//`).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum St {
+    Code,
+    /// `// …` to end of line.
+    Line,
+    /// `/* … */`, tracking nesting depth.
+    Block(usize),
+    /// `"…"` with escapes.
+    Str,
+    /// `r##"…"##` with the given hash count.
+    RawStr(usize),
+}
+
+/// Split `src` into per-line (code, comment) channels.
+pub fn split_lines(src: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = SourceLine::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if matches!(st, St::Line) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' && matches!(next, Some('"') | Some('#')) {
+                    // Candidate raw string: `r"` or `r#…#"`; `r#ident`
+                    // (raw identifier) falls through to plain code.
+                    let mut h = 0;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        cur.code.push('"');
+                        st = St::RawStr(h);
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if next == Some('\\') {
+                        // `'\…'`: skip past the escape to the closing quote.
+                        let mut j = i + 3; // first char after the backslash's escapee
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.code.push_str("'_'");
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        // `'x'`
+                        cur.code.push_str("'_'");
+                        i += 3;
+                    } else {
+                        // lifetime (`'scope`) — keep the tick as code.
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        // Line-continuation escape: let the newline be
+                        // processed normally so line numbers stay right.
+                        i += 1;
+                    } else {
+                        i += 2; // skip the escaped char (content is dropped)
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && (0..h).all(|t| chars.get(i + 1 + t) == Some(&'#')) {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Count identifier-boundary-respecting occurrences of `pat` in `code`.
+/// The char before a match must not be an identifier char (when `pat`
+/// starts with one); same for the char after, unless `prefix_ok` — used
+/// for patterns like `env::var` that should also catch `env::var_os`.
+pub fn count_tokens(code: &str, pat: &str, prefix_ok: bool) -> usize {
+    let first_ident = pat.chars().next().map(is_ident).unwrap_or(false);
+    let last_ident = pat.chars().last().map(is_ident).unwrap_or(false);
+    code.match_indices(pat)
+        .filter(|&(pos, _)| {
+            if first_ident {
+                if let Some(prev) = code[..pos].chars().last() {
+                    if is_ident(prev) {
+                        return false;
+                    }
+                }
+            }
+            if last_ident && !prefix_ok {
+                if let Some(next) = code[pos + pat.len()..].chars().next() {
+                    if is_ident(next) {
+                        return false;
+                    }
+                }
+            }
+            true
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_split_from_code() {
+        let ls = split_lines("let a = 1; // trailing note\n/* block */ let b = 2;\n");
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[0].code.trim(), "let a = 1;");
+        assert_eq!(ls[0].comment.trim(), "trailing note");
+        assert_eq!(ls[1].code.trim(), "let b = 2;");
+        assert_eq!(ls[1].comment.trim(), "block");
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let ls = split_lines("a /* one /* two */ still */ b\n/* open\nmid\nclose */ c\n");
+        assert_eq!(ls[0].code.replace(' ', ""), "ab");
+        assert_eq!(ls[1].code, "");
+        assert_eq!(ls[2].code, "");
+        assert_eq!(ls[2].comment, "mid");
+        assert_eq!(ls[3].code.trim(), "c");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let ls = split_lines("call(\"std::env::var inside // not a comment\");\n");
+        assert_eq!(ls[0].code, "call(\"\");");
+        assert_eq!(ls[0].comment, "");
+        // Escaped quote doesn't terminate the literal.
+        let ls = split_lines("x(\"a\\\"b\", y)\n");
+        assert_eq!(ls[0].code, "x(\"\", y)");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let ls = split_lines("let f = r#\"fn bad() { }\n// SAFETY: fake\n\"#; done();\n");
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].code, "let f = \"");
+        assert_eq!(ls[1].comment, "");
+        assert_eq!(ls[2].code, "\"; done();");
+        // Hash counts must match to close.
+        let ls = split_lines("r##\"content \"# still\"## after\n");
+        assert_eq!(ls[0].code, "\"\" after");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let ls = split_lines("let q = '\"'; let n = '\\n'; fn f<'a>(x: &'a str) {}\n");
+        assert_eq!(ls[0].code, "let q = '_'; let n = '_'; fn f<'a>(x: &'a str) {}");
+        // A double-quote char literal must not open string mode.
+        assert!(ls[0].code.contains("fn f"));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert_eq!(count_tokens("let x = foo(); unsafe { }", "unsafe", false), 1);
+        assert_eq!(count_tokens("let unsafety = 1;", "unsafe", false), 0);
+        assert_eq!(count_tokens("std::env::var(\"X\")", "env::var", true), 1);
+        assert_eq!(count_tokens("std::env::var_os(\"X\")", "env::var", true), 1);
+        assert_eq!(count_tokens("my_env::variant()", "env::var", true), 0);
+        assert_eq!(count_tokens("std::time::SystemTime::now()", "SystemTime", false), 1);
+        assert_eq!(count_tokens("MySystemTimeWrapper::now()", "SystemTime", false), 0);
+    }
+}

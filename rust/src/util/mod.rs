@@ -11,6 +11,11 @@
 //! * [`json`] — a strict recursive-descent JSON parser + serializer used
 //!   for `artifacts/manifest.json`, experiment configs and run records.
 
+//! * [`lint`] — `dynamix-lint`, the repo-native invariant checker
+//!   (SAFETY/env-read/wall-clock/fold-order rule catalogue) backing the
+//!   `dynamix-lint` binary and the blocking CI leg.
+
 pub mod bench;
 pub mod json;
+pub mod lint;
 pub mod rng;

@@ -294,8 +294,8 @@ fn dynamix_env_controls_pool_config() {
     // set_var here cannot race a concurrent getenv. Pool::from_env is the
     // uncached reader; the cached Pool::global is deliberately NOT
     // re-read (one read per process is the contract).
-    let prev_t = std::env::var("DYNAMIX_THREADS").ok();
-    let prev_k = std::env::var("DYNAMIX_KERNEL").ok();
+    let prev_t = std::env::var("DYNAMIX_THREADS").ok(); // lint:allow(env-read): this test exercises the env plumbing itself and must save/restore raw values.
+    let prev_k = std::env::var("DYNAMIX_KERNEL").ok(); // lint:allow(env-read): this test exercises the env plumbing itself and must save/restore raw values.
     std::env::set_var("DYNAMIX_THREADS", "7");
     assert_eq!(Pool::from_env().threads(), 7);
     std::env::set_var("DYNAMIX_THREADS", "not-a-number");

@@ -1,0 +1,83 @@
+//! End-to-end coverage for `dynamix-lint`: the committed tree must scan
+//! clean with the full rule catalogue, every rule must prove it still
+//! fires via its embedded known-bad fixture, and the suppression
+//! semantics (justification required; invalid allows never suppress)
+//! must hold.
+
+use dynamix::util::lint;
+
+/// The real tree, as committed, carries zero violations — this is the
+/// same check the blocking CI leg runs via `make lint`.
+#[test]
+fn committed_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let (violations, files) = lint::scan_tree(root).expect("tree scan");
+    assert!(
+        files >= 40,
+        "suspiciously few files scanned ({files}) — did the walk break?"
+    );
+    let rendered: Vec<String> = violations.iter().map(|v| v.render()).collect();
+    assert!(
+        violations.is_empty(),
+        "committed tree has lint violations:\n{}",
+        rendered.join("\n")
+    );
+}
+
+/// Every rule fires exactly once on its known-bad fixture and stays
+/// silent on the known-good variant.
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let fails = lint::self_test();
+    assert!(fails.is_empty(), "self-test failures:\n{}", fails.join("\n"));
+}
+
+/// An allow without a justification is itself flagged AND does not
+/// suppress the underlying finding; adding the justification clears both.
+#[test]
+fn suppression_requires_justification() {
+    let bare = "fn f() { let v = std::env::var(\"X\").ok(); } // lint:allow(env-read)\n";
+    let vs = lint::scan_source("src/trainer/x.rs", bare);
+    let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+    assert!(rules.contains(&"suppression"), "{rules:?}");
+    assert!(rules.contains(&"env-read"), "unjustified allow must not suppress: {rules:?}");
+
+    let justified =
+        "fn f() { let v = std::env::var(\"X\").ok(); } // lint:allow(env-read): test fixture needs the raw value.\n";
+    assert!(lint::scan_source("src/trainer/x.rs", justified).is_empty());
+}
+
+/// An allow naming a rule that does not exist is flagged and ignored.
+#[test]
+fn unknown_rule_in_allow_is_flagged() {
+    let src =
+        "fn f() { let v = std::env::var(\"X\").ok(); } // lint:allow(no-such-rule): reasons.\n";
+    let vs = lint::scan_source("src/trainer/x.rs", src);
+    let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+    assert!(rules.contains(&"suppression"), "{rules:?}");
+    assert!(rules.contains(&"env-read"), "{rules:?}");
+}
+
+/// `--format json` output is valid JSON with the expected shape.
+#[test]
+fn json_report_shape() {
+    use dynamix::util::json::Json;
+    let vs = lint::scan_source(
+        "src/sim/x.rs",
+        "fn now() -> std::time::Instant { std::time::Instant::now() }\n",
+    );
+    assert_eq!(vs.len(), 1);
+    let report = lint::report_json(&vs, 1);
+    let parsed = Json::parse(&report).expect("report is valid JSON");
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(parsed.get("files_scanned").and_then(Json::as_usize), Some(1));
+    let items = parsed.get("violations").and_then(Json::as_arr).expect("violations array");
+    assert_eq!(items.len(), 1);
+    assert_eq!(items[0].get("rule").and_then(Json::as_str), Some("wall-clock"));
+    assert_eq!(items[0].get("file").and_then(Json::as_str), Some("src/sim/x.rs"));
+    assert_eq!(items[0].get("line").and_then(Json::as_usize), Some(1));
+
+    let clean = lint::report_json(&[], 42);
+    let parsed = Json::parse(&clean).unwrap();
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true));
+}
