@@ -1,0 +1,125 @@
+//! Comm/compute overlap cost, two sessions:
+//!
+//! * `overlap` — **wall-clock** loopback train-step p50 with the pipelined
+//!   bucket ring on vs. off (same shard count, same batches), per kernel
+//!   tier. Records what the overlapped schedule costs/saves end-to-end on
+//!   the in-process data plane, where the "network" is an mpsc channel and
+//!   the win is bounded by how much send/serialize time the comm lane can
+//!   hide behind the remaining backward stages.
+//! * `overlap/bandwidth-sweep` — **simulated timeline (netsim), not
+//!   wall-clock**: bulk [`NetworkSim::sync`] vs. pipelined
+//!   [`NetworkSim::sync_overlapped`] exposed time across shrinking link
+//!   bandwidth, congestion pinned to 0 so every number is a deterministic
+//!   closed-form of the cost model and re-runs reproduce it bit-for-bit.
+//!   This is the suite the regression gate watches: overlap-on must stay
+//!   ≤ overlap-off at constrained bandwidth.
+//!
+//!     cargo bench --bench overlap
+//!
+//! The bandwidth-sweep result names encode the swept link speed
+//! (`bw01gbps/bulk` vs `bw01gbps/overlapped`); savings grow as the link
+//! shrinks because the byte term dominates the per-bucket latency tax.
+
+use dynamix::cluster::profiles;
+use dynamix::config::{ClusterPreset, Optimizer, Topology};
+use dynamix::netsim::NetworkSim;
+use dynamix::runtime::{ComputeBackend, KernelTier, OptState, ShardedBackend, TrainOut};
+use dynamix::util::bench::{bench, iters, BenchResult, BenchSession};
+use dynamix::util::rng::Rng;
+
+/// One fused train step on `b`, timed over the whole optimizer cycle.
+fn step(b: &ShardedBackend, state: &mut OptState, xs: &[f32], ys: &[i32], bucket: usize) {
+    let mask = vec![1.0f32; bucket];
+    let mut out = TrainOut::default();
+    b.train_step_into(
+        "vgg11_mini",
+        Optimizer::Sgd,
+        bucket,
+        state,
+        xs,
+        ys,
+        &mask,
+        0.05,
+        &mut out,
+    )
+    .unwrap();
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== wall-clock: pipelined bucket ring on vs off (4 loopback shards) ==");
+    let mut wall = BenchSession::new("overlap");
+    let bucket = 256usize;
+    let mut rng = Rng::new(0);
+    for tier in KernelTier::available() {
+        for (tag, overlap) in [("off", false), ("on", true)] {
+            let backend = ShardedBackend::loopback_with_kernel(4, 1, tier)
+                .with_overlap(overlap, 40 << 10);
+            let fd = backend.schema().feature_dim;
+            let xs: Vec<f32> = (0..bucket * fd).map(|_| rng.normal() as f32).collect();
+            let ys: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+            let mut state =
+                OptState::new(backend.init_params("vgg11_mini", 0)?, Optimizer::Sgd);
+            let (w, n) = iters(2, 8);
+            let r = bench(
+                &format!("train_step/{}-overlap-{tag}", tier.as_str()),
+                w,
+                n,
+                || step(&backend, &mut state, &xs, &ys, bucket),
+            );
+            wall.push_items(&r, bucket);
+        }
+    }
+    let path = wall.flush()?;
+    println!("recorded run -> {}", path.display());
+
+    println!("\n== simulated timeline: exposed comm vs link bandwidth (netsim) ==");
+    // Deterministic: congestion pinned to 0 means no retransmission draw
+    // and no OU noise — the recorded numbers are pure cost-model output
+    // and identical on every re-run, so bench-compare deltas gate at 0%.
+    let mut sweep = BenchSession::new("overlap/bandwidth-sweep");
+    sweep.set_note(
+        "simulated-timeline (netsim), not wall-clock; 8-node ring, 100 MiB grad, \
+         compute 0.25s, 32 buckets, congestion pinned to 0 (deterministic)",
+    );
+    const GRAD_BYTES: usize = 100 << 20;
+    const COMPUTE_S: f64 = 0.25;
+    const N_BUCKETS: usize = 32;
+    for bw_gbps in [25.0f64, 10.0, 5.0, 1.0] {
+        let mut profs = profiles(ClusterPreset::UniformA100, 8, 0);
+        for p in &mut profs {
+            p.bandwidth_gbps = bw_gbps;
+        }
+        let mut net = NetworkSim::new(0);
+        net.set_congestion_vol(0.0);
+        net.set_congestion(0.0);
+        let bulk = net.sync(Topology::RingAllReduce, &profs, GRAD_BYTES).time_s;
+        let overlapped = net
+            .sync_overlapped(Topology::RingAllReduce, &profs, GRAD_BYTES, COMPUTE_S, N_BUCKETS)
+            .time_s;
+        println!(
+            "  {bw_gbps:>4.0} Gbps: bulk {:>9.2} ms  overlapped (exposed) {:>9.2} ms  ({:+.1}%)",
+            bulk * 1e3,
+            overlapped * 1e3,
+            100.0 * (overlapped - bulk) / bulk,
+        );
+        for (tag, t) in [("bulk", bulk), ("overlapped", overlapped)] {
+            sweep.push(&BenchResult {
+                name: format!("bw{bw_gbps:02.0}gbps/{tag}"),
+                mean_s: t,
+                std_s: 0.0,
+                min_s: t,
+                p10_s: t,
+                p50_s: t,
+                p90_s: t,
+                n: 1,
+            });
+        }
+        assert!(
+            overlapped <= bulk,
+            "overlap must not lose at {bw_gbps} Gbps: {overlapped} vs {bulk}"
+        );
+    }
+    let path = sweep.flush()?;
+    println!("recorded run -> {}", path.display());
+    Ok(())
+}

@@ -6,7 +6,15 @@
 //! against the previous one, matching results by bench name. Output is a
 //! fixed-width table plus a one-line verdict per suite; missing files or
 //! suites with fewer than two runs are reported, never an error (the tool
-//! is advisory — CI runs it after the bench smoke).
+//! is advisory by default — CI runs it after the bench smoke).
+//!
+//! `--gate <pct>` flips it to blocking: exit 1 when any suite's worst
+//! p50 regression exceeds `<pct>` percent. Suites with fewer than two
+//! recorded runs never trip the gate (there is nothing to compare), so
+//! the gate only starts biting once a before/after pair exists — the
+//! deterministic `overlap/bandwidth-sweep` suite is the first to qualify
+//! (its simulated-timeline numbers reproduce exactly, so any nonzero
+//! delta there is a cost-model change, not noise).
 
 use dynamix::util::bench::out_path;
 use dynamix::util::json::Json;
@@ -53,7 +61,30 @@ fn fmt_time(s: f64) -> String {
     }
 }
 
+/// `--gate <pct>` from argv, or `None` (advisory). Bad usage exits 2.
+fn parse_gate() -> Option<f64> {
+    let mut args = std::env::args().skip(1);
+    let mut gate = None;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--gate" => match args.next().and_then(|v| v.parse::<f64>().ok()) {
+                Some(pct) => gate = Some(pct),
+                None => {
+                    eprintln!("bench-compare: --gate needs a numeric percent, e.g. --gate 50");
+                    std::process::exit(2);
+                }
+            },
+            other => {
+                eprintln!("bench-compare: unknown argument {other:?} (usage: bench_compare [--gate <pct>])");
+                std::process::exit(2);
+            }
+        }
+    }
+    gate
+}
+
 fn main() {
+    let gate = parse_gate();
     let path = out_path();
     let text = match std::fs::read_to_string(&path) {
         Ok(t) => t,
@@ -88,6 +119,7 @@ fn main() {
         by_suite.entry(suite).or_default().push(run);
     }
 
+    let mut worst_overall: Option<(f64, String)> = None;
     for (suite, runs) in &by_suite {
         if runs.len() < 2 {
             println!("suite {suite}: only {} recorded run(s), nothing to compare", runs.len());
@@ -125,7 +157,26 @@ fn main() {
         }
         if let Some((delta, name)) = worst {
             println!("  worst delta: {delta:+.1}% on {name}");
+            let qualified = format!("{suite}/{name}");
+            if worst_overall.as_ref().map(|(w, _)| delta > *w).unwrap_or(true) {
+                worst_overall = Some((delta, qualified));
+            }
         }
         println!();
+    }
+
+    if let Some(gate_pct) = gate {
+        match worst_overall {
+            Some((delta, name)) if delta > gate_pct => {
+                eprintln!(
+                    "bench-compare: GATE FAILED — worst p50 regression {delta:+.1}% on {name} exceeds --gate {gate_pct}%"
+                );
+                std::process::exit(1);
+            }
+            Some((delta, name)) => println!(
+                "bench-compare: gate ok — worst p50 delta {delta:+.1}% on {name} within --gate {gate_pct}%"
+            ),
+            None => println!("bench-compare: gate ok — no suite has two runs to compare yet"),
+        }
     }
 }

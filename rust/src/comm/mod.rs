@@ -25,8 +25,11 @@ use std::sync::mpsc;
 use wire::{Decoder, Encoder};
 
 /// Bumped to 2 when the shard-gradient data-plane frames landed
-/// (`ShardStep`/`ShardFwd`/`ShardGradSeed`/`ShardGradOut`/`ShardGradFin`).
-pub const PROTO_VERSION: u16 = 2;
+/// (`ShardStep`/`ShardFwd`/`ShardGradSeed`/`ShardGradOut`/`ShardGradFin`);
+/// to 3 for the pipelined bucket frames
+/// (`ShardGradBucket`/`ShardBucketFin`). A peer speaking an older codec is
+/// rejected at decode with a version-mismatch error naming both versions.
+pub const PROTO_VERSION: u16 = 3;
 
 /// Hard ceiling on one frame's body. Sized for the largest legitimate
 /// payload — a shard row slab at the top bucket (32768 x 128 features x
@@ -96,6 +99,13 @@ pub enum Msg {
     /// protocol abuse). The shard stays alive and serviceable; the leader
     /// surfaces the message as the step's error.
     ShardErr { seq: u64, msg: String },
+    /// Data plane: one traveling gradient **bucket** — the window
+    /// `[offset, offset + grad.len())` of the flat gradient, hop `bucket`
+    /// of the step's deterministic plan. Used in both ring directions.
+    ShardGradBucket { seq: u64, bucket: u32, offset: u64, grad: Vec<f32> },
+    /// Data plane: a shard's bucketed backward completed after exactly
+    /// `buckets` buckets (plan-agreement acknowledgement).
+    ShardBucketFin { seq: u64, buckets: u32 },
 }
 
 const TAG_REGISTER: u8 = 1;
@@ -110,6 +120,8 @@ const TAG_SHARD_GRAD_SEED: u8 = 9;
 const TAG_SHARD_GRAD_OUT: u8 = 10;
 const TAG_SHARD_GRAD_FIN: u8 = 11;
 const TAG_SHARD_ERR: u8 = 12;
+const TAG_SHARD_GRAD_BUCKET: u8 = 13;
+const TAG_SHARD_BUCKET_FIN: u8 = 14;
 
 impl Msg {
     /// Encode to a length-prefixed frame.
@@ -206,6 +218,18 @@ impl Msg {
                 e.u64(*seq);
                 e.str(msg);
             }
+            Msg::ShardGradBucket { seq, bucket, offset, grad } => {
+                e.u8(TAG_SHARD_GRAD_BUCKET);
+                e.u64(*seq);
+                e.u32(*bucket);
+                e.u64(*offset);
+                e.f32s(grad);
+            }
+            Msg::ShardBucketFin { seq, buckets } => {
+                e.u8(TAG_SHARD_BUCKET_FIN);
+                e.u64(*seq);
+                e.u32(*buckets);
+            }
         }
         e.frame()
     }
@@ -280,6 +304,13 @@ impl Msg {
                 grad: d.f32s()?,
             },
             TAG_SHARD_ERR => Msg::ShardErr { seq: d.u64()?, msg: d.str()? },
+            TAG_SHARD_GRAD_BUCKET => Msg::ShardGradBucket {
+                seq: d.u64()?,
+                bucket: d.u32()?,
+                offset: d.u64()?,
+                grad: d.f32s()?,
+            },
+            TAG_SHARD_BUCKET_FIN => Msg::ShardBucketFin { seq: d.u64()?, buckets: d.u32()? },
             t => anyhow::bail!("unknown message tag {t}"),
         };
         d.finish()?;
@@ -291,6 +322,14 @@ impl Msg {
 pub trait Transport: Send {
     fn send(&mut self, msg: &Msg) -> anyhow::Result<()>;
     fn recv(&mut self) -> anyhow::Result<Msg>;
+
+    /// A detached write half over the same connection, when the carrier
+    /// can clone its OS handle (TCP can; the default cannot). Lets one
+    /// thread block in `recv` while another sends. Framing stays intact
+    /// because each `send` issues a single `write_all`.
+    fn clone_writer(&self) -> Option<Box<dyn Transport + Send>> {
+        None
+    }
 }
 
 /// Framed TCP transport.
@@ -320,6 +359,13 @@ impl Transport for TcpTransport {
         let mut body = vec![0u8; len];
         self.stream.read_exact(&mut body)?;
         Msg::decode(&body)
+    }
+
+    fn clone_writer(&self) -> Option<Box<dyn Transport + Send>> {
+        self.stream
+            .try_clone()
+            .ok()
+            .map(|stream| Box::new(TcpTransport { stream }) as Box<dyn Transport + Send>)
     }
 }
 
@@ -391,6 +437,9 @@ mod tests {
             Msg::ShardGradOut { seq: 9, grad: vec![0.125; 5] },
             Msg::ShardGradFin { seq: 9, loss: 2.3, acc: 0.5, grad: vec![0.125; 5] },
             Msg::ShardErr { seq: 9, msg: "label 37 outside [0, 10)".into() },
+            Msg::ShardGradBucket { seq: 9, bucket: 2, offset: 650, grad: vec![0.125; 4] },
+            Msg::ShardGradBucket { seq: 9, bucket: 0, offset: 0, grad: vec![] },
+            Msg::ShardBucketFin { seq: 9, buckets: 3 },
             // Shutdown stays LAST: the TCP roundtrip test's echo server
             // exits on it.
             Msg::Shutdown,
@@ -434,6 +483,41 @@ mod tests {
             b.send(&msg).unwrap();
             assert_eq!(a.recv().unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn tcp_clone_writer_shares_the_connection() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            loop {
+                let m = t.recv().unwrap();
+                let done = m == Msg::Shutdown;
+                t.send(&m).unwrap(); // echo
+                if done {
+                    break;
+                }
+            }
+        });
+        let mut c = TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let mut w = c.clone_writer().expect("tcp supports a write half");
+        // Sends go through the detached half while the original blocks in
+        // recv — the comm-lane usage pattern.
+        let sender = std::thread::spawn(move || {
+            for cycle in 0..4 {
+                w.send(&Msg::Barrier { cycle }).unwrap();
+            }
+            w.send(&Msg::Shutdown).unwrap();
+        });
+        for cycle in 0..4 {
+            assert_eq!(c.recv().unwrap(), Msg::Barrier { cycle });
+        }
+        assert_eq!(c.recv().unwrap(), Msg::Shutdown);
+        sender.join().unwrap();
+        h.join().unwrap();
     }
 
     #[test]

@@ -52,6 +52,33 @@ pub fn kernel_choice() -> Option<String> {
     raw("DYNAMIX_KERNEL").filter(|s| !s.is_empty())
 }
 
+/// `DYNAMIX_OVERLAP`: comm/compute overlap in the sharded backward.
+/// `on`/`1`/`true` -> `Some(true)`, `off`/`0`/`false` -> `Some(false)`,
+/// unset or unrecognized -> `None` (caller default: on). Read once at
+/// `ShardedBackend` construction — never mid-run.
+pub fn overlap() -> Option<bool> {
+    parse_switch(&raw("DYNAMIX_OVERLAP")?)
+}
+
+/// `DYNAMIX_BUCKET_KB`: target gradient-bucket size in KiB for the
+/// overlapped ring (>= 1; the plan coalesces completion stages up to
+/// roughly this many bytes). Unset/invalid -> `None` (caller default).
+pub fn bucket_kb() -> Option<usize> {
+    raw("DYNAMIX_BUCKET_KB")?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
+fn parse_switch(s: &str) -> Option<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" => Some(true),
+        "off" | "0" | "false" => Some(false),
+        _ => None,
+    }
+}
+
 /// Set `DYNAMIX_KERNEL` to the config-file request `k` unless the
 /// environment already picked a tier (the env always wins). Must run
 /// before the first backend is constructed: `GlobalCfg` reads the
@@ -75,5 +102,18 @@ mod tests {
         assert_eq!("x".trim().parse::<usize>().ok().filter(|&n| n >= 1), None);
         // Unset variable -> None without panicking.
         assert_eq!(raw("DYNAMIX_DEFINITELY_UNSET_VAR_42"), None);
+    }
+
+    #[test]
+    fn overlap_switch_parses_all_spellings() {
+        for s in ["on", "1", "true", " ON "] {
+            assert_eq!(parse_switch(s), Some(true), "{s:?}");
+        }
+        for s in ["off", "0", "false", "Off"] {
+            assert_eq!(parse_switch(s), Some(false), "{s:?}");
+        }
+        for s in ["", "yes", "2"] {
+            assert_eq!(parse_switch(s), None, "{s:?}");
+        }
     }
 }

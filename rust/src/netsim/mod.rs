@@ -179,6 +179,90 @@ impl NetworkSim {
         }
     }
 
+    /// Simulate one synchronization whose communication is **pipelined
+    /// against the backward pass** (the `DYNAMIX_OVERLAP` data plane):
+    /// the gradient leaves in `n_buckets` completion-ordered buckets,
+    /// bucket `k` becoming sendable once fraction `(k+1)/n_buckets` of
+    /// the `compute_s`-second backward has run, and each link carries one
+    /// bucket at a time (per-hop serialization — a bucket's transfer
+    /// starts at `max(ready_k, link free)`).
+    ///
+    /// Returns the **exposed** communication time: timeline end minus
+    /// `compute_s`, i.e. what the step pays beyond the backward itself —
+    /// directly comparable to [`NetworkSim::sync`]'s fully-serialized
+    /// `time_s` (that is overlap-off). Every bucket pays the collective's
+    /// full alpha (latency) term, so overlap trades `n_buckets - 1` extra
+    /// latency rounds for hiding the byte term under compute: it wins
+    /// when transfer dominates (constrained bandwidth, big gradients) and
+    /// can lose on latency-bound fabrics — the bandwidth-sweep bench
+    /// (`benches/overlap.rs`) records exactly that crossover. Consumes
+    /// the same retransmission draw as `sync` for a given fabric state.
+    pub fn sync_overlapped(
+        &mut self,
+        topology: Topology,
+        profiles: &[WorkerProfile],
+        grad_bytes: usize,
+        compute_s: f64,
+        n_buckets: usize,
+    ) -> SyncOutcome {
+        let n = profiles.len();
+        let congestion = self.congestion.value();
+        if n <= 1 {
+            return SyncOutcome {
+                time_s: 0.0,
+                retransmissions: 0,
+                throughput_gbps: 0.0,
+                congestion,
+            };
+        }
+        let nb = n_buckets.max(1);
+        let min_bw_gbps = profiles
+            .iter()
+            .map(|p| p.bandwidth_gbps)
+            .fold(f64::INFINITY, f64::min);
+        let max_lat_s = profiles
+            .iter()
+            .map(|p| p.latency_ms / 1e3)
+            .fold(0.0f64, f64::max);
+        let eff_bw_bytes = min_bw_gbps * (1.0 - congestion) * 1e9 / 8.0;
+
+        let (alpha_per_bucket, bytes_on_wire) = match topology {
+            Topology::RingAllReduce => {
+                let hops = 2.0 * (n as f64 - 1.0);
+                (hops * max_lat_s, hops / n as f64 * grad_bytes as f64)
+            }
+            Topology::ParameterServer { servers } => {
+                let s = servers.max(1) as f64;
+                (2.0 * max_lat_s, 2.0 * grad_bytes as f64 * (n as f64 / s))
+            }
+        };
+        // Per-bucket transfer on the bottleneck link, serialized per hop.
+        let bucket_transfer_s = bytes_on_wire / nb as f64 / eff_bw_bytes;
+        let mut link_free = 0.0f64;
+        for k in 0..nb {
+            let ready = compute_s * (k + 1) as f64 / nb as f64;
+            link_free = ready.max(link_free) + alpha_per_bucket + bucket_transfer_s;
+        }
+        let exposed_s = link_free - compute_s;
+
+        let gib = bytes_on_wire * n as f64 / (1024.0 * 1024.0 * 1024.0);
+        let lambda = self.retx_per_gib * gib * congestion;
+        let retransmissions = self.rng.poisson(lambda);
+        let retx_penalty = retransmissions as f64 * 1_500.0 / eff_bw_bytes * 4.0;
+        let time_s = exposed_s + retx_penalty;
+
+        SyncOutcome {
+            time_s,
+            retransmissions,
+            throughput_gbps: if time_s > 0.0 {
+                bytes_on_wire * 8.0 / 1e9 / time_s
+            } else {
+                0.0
+            },
+            congestion,
+        }
+    }
+
     /// Reset the congestion process (new episode). Storm-shifted means
     /// restore to the construction baseline.
     pub fn reset(&mut self, seed: u64) {
@@ -314,6 +398,57 @@ mod tests {
         let tf = net.sync(Topology::RingAllReduce, &fabric, 100 << 20).time_s;
         let tu = net.sync(Topology::RingAllReduce, &fast, 100 << 20).time_s;
         assert!(tf > tu, "10G fabric must sync slower than 25G uniform");
+    }
+
+    #[test]
+    fn overlapped_sync_hides_transfer_under_compute() {
+        let fresh = || {
+            let mut net = NetworkSim::new(7);
+            net.set_congestion_vol(0.0);
+            net.set_congestion(0.0); // lambda = 0: fully deterministic
+            net
+        };
+        let profs = uniform(8);
+        let bulk = fresh().sync(Topology::RingAllReduce, &profs, 100 << 20).time_s;
+        // With the backward long enough to hide under, only the final
+        // bucket's hop (plus its latency round) stays exposed.
+        let exposed = fresh()
+            .sync_overlapped(Topology::RingAllReduce, &profs, 100 << 20, bulk * 2.0, 16)
+            .time_s;
+        assert!(exposed < bulk, "exposed {exposed} vs bulk {bulk}");
+        // One bucket ready only when compute ends == the bulk collective.
+        let one = fresh()
+            .sync_overlapped(Topology::RingAllReduce, &profs, 100 << 20, 1.0, 1)
+            .time_s;
+        assert!((one - bulk).abs() < 1e-12, "one-bucket {one} vs bulk {bulk}");
+    }
+
+    #[test]
+    fn overlap_gains_grow_as_bandwidth_shrinks() {
+        // The sweep the bench records: at constrained bandwidth the byte
+        // term dominates and pipelining hides most of it; the absolute
+        // saving (bulk - exposed) must grow as links slow down.
+        let mut last_saving = -f64::INFINITY;
+        for bw in [25.0, 10.0, 1.0] {
+            let mut profs = uniform(8);
+            for p in &mut profs {
+                p.bandwidth_gbps = bw;
+            }
+            let mk = || {
+                let mut net = NetworkSim::new(9);
+                net.set_congestion_vol(0.0);
+                net.set_congestion(0.0);
+                net
+            };
+            let bulk = mk().sync(Topology::RingAllReduce, &profs, 64 << 20).time_s;
+            let compute = bulk; // backward comparable to the collective
+            let exposed = mk()
+                .sync_overlapped(Topology::RingAllReduce, &profs, 64 << 20, compute, 8)
+                .time_s;
+            let saving = bulk - exposed;
+            assert!(saving > last_saving, "saving shrank at {bw} Gbps: {saving}");
+            last_saving = saving;
+        }
     }
 
     #[test]

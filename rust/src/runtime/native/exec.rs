@@ -475,10 +475,179 @@ impl Pool {
     }
 }
 
+/// A single-threaded, order-preserving executor for blocking transport
+/// sends — the **comm lane** of the overlapped sharded backward.
+///
+/// Deliberately NOT part of the kernel [`WorkerSet`]: a stalled socket
+/// write must never occupy a compute worker, and a single dedicated
+/// thread is what preserves per-link send order (two lanes could reorder
+/// frames on one TCP stream). Each [`crate::runtime::sharded`] backend
+/// owns one lane; the thread parks between sends and exits when the lane
+/// drops, after flushing every queued job.
+pub struct CommLane {
+    shared: Arc<LaneShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+struct LaneShared {
+    state: Mutex<LaneState>,
+    /// Signals the lane thread: new job or stop requested.
+    ready: Condvar,
+    /// Signals drainers: queue empty and nothing in flight.
+    idle: Condvar,
+}
+
+struct LaneState {
+    jobs: VecDeque<Box<dyn FnOnce() -> anyhow::Result<()> + Send + 'static>>,
+    in_flight: bool,
+    stop: bool,
+    /// First failure since the last drain (later sends still run; the
+    /// receiver side surfaces its own error with step/bucket context).
+    failed: Option<String>,
+}
+
+impl Default for CommLane {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CommLane {
+    pub fn new() -> Self {
+        let shared = Arc::new(LaneShared {
+            state: Mutex::new(LaneState {
+                jobs: VecDeque::new(),
+                in_flight: false,
+                stop: false,
+                failed: None,
+            }),
+            ready: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        let s = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("dynamix-comm".into())
+            .spawn(move || s.lane_loop())
+            .expect("spawn comm lane thread");
+        CommLane { shared, handle: Some(handle) }
+    }
+
+    /// Queue one send. Jobs execute strictly in submission order on the
+    /// lane thread; failures are recorded and surfaced by [`Self::drain`].
+    pub fn submit(&self, job: impl FnOnce() -> anyhow::Result<()> + Send + 'static) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.ready.notify_one();
+    }
+
+    /// Block until every queued job has executed, then report the first
+    /// failure recorded since the previous drain (if any).
+    pub fn drain(&self) -> anyhow::Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.jobs.is_empty() || st.in_flight {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        match st.failed.take() {
+            Some(e) => anyhow::bail!("comm lane send failed: {e}"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for CommLane {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+        }
+        self.shared.ready.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl LaneShared {
+    fn lane_loop(&self) {
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(j) = st.jobs.pop_front() {
+                        st.in_flight = true;
+                        break j;
+                    }
+                    if st.stop {
+                        return; // queue flushed; lane retires
+                    }
+                    st = self.ready.wait(st).unwrap();
+                }
+            };
+            // A panicking send must not kill the lane (drain would hang);
+            // record it like a send error.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            let mut st = self.state.lock().unwrap();
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if st.failed.is_none() {
+                        st.failed = Some(format!("{e:#}"));
+                    }
+                }
+                Err(_) => {
+                    if st.failed.is_none() {
+                        st.failed = Some("send job panicked".into());
+                    }
+                }
+            }
+            st.in_flight = false;
+            if st.jobs.is_empty() {
+                self.idle.notify_all();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn comm_lane_runs_jobs_in_order_and_reports_first_error() {
+        let lane = CommLane::new();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..32 {
+            let seen = seen.clone();
+            lane.submit(move || {
+                seen.lock().unwrap().push(i);
+                Ok(())
+            });
+        }
+        lane.drain().unwrap();
+        assert_eq!(*seen.lock().unwrap(), (0..32).collect::<Vec<_>>());
+
+        // First failure wins; later jobs still run; drain clears the slate.
+        let ran_after = Arc::new(AtomicBool::new(false));
+        lane.submit(|| anyhow::bail!("link down"));
+        lane.submit(|| anyhow::bail!("second failure"));
+        let flag = ran_after.clone();
+        lane.submit(move || {
+            flag.store(true, Ordering::SeqCst);
+            Ok(())
+        });
+        let err = lane.drain().unwrap_err().to_string();
+        assert!(err.contains("link down"), "{err}");
+        assert!(ran_after.load(Ordering::SeqCst));
+        lane.drain().unwrap();
+
+        // A panicking job is contained and surfaced as a failure.
+        lane.submit(|| panic!("boom"));
+        let err = lane.drain().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        drop(lane); // join must not hang
+    }
 
     #[test]
     fn sequential_pool_never_partitions() {

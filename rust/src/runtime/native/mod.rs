@@ -20,7 +20,7 @@ use crate::runtime::backend::{
 };
 use crate::runtime::manifest::ModelInfo;
 use exec::Pool;
-pub use exec::KernelTier;
+pub use exec::{CommLane, KernelTier};
 use model::{apply_adam, apply_sgd, masked_ce_loss_ws, masked_ce_rows, normalized_grad_stats, ModelDef};
 use std::collections::BTreeMap;
 use workspace::{Workspace, WorkspacePool};
@@ -137,6 +137,19 @@ impl NativeBackend {
             .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))
     }
 
+    /// The deterministic bucket plan the overlapped ring drives `model`'s
+    /// backward with (see [`ModelDef::bucket_plan`]): completion-ordered
+    /// stages coalesced toward `target_bytes` per bucket. Pure layout
+    /// arithmetic — every caller with the same model and target derives
+    /// the identical plan, so it is never transmitted.
+    pub fn bucket_plan(
+        &self,
+        model: &str,
+        target_bytes: usize,
+    ) -> anyhow::Result<Vec<model::GradBucket>> {
+        Ok(self.def(model)?.bucket_plan(target_bytes))
+    }
+
     /// Forward half of one shard step: forward + per-row loss pieces for
     /// `m = mask.len()` rows that form a contiguous slice of a fused batch
     /// whose global mask sum is `denom`. Row counts are unconstrained (no
@@ -188,7 +201,7 @@ impl NativeBackend {
             &mut ws.dlogits,
         );
         Ok((
-            ShardCtx { ws, x, m, model: model.to_string() },
+            ShardCtx { ws, x, m, model: model.to_string(), folded: 0, prepped: 0 },
             out,
         ))
     }
@@ -219,6 +232,95 @@ impl NativeBackend {
         Ok(())
     }
 
+    /// Fold one gradient **bucket** into this shard's backward, resuming
+    /// from the upstream shard's accumulator. `seed` is the traveling
+    /// accumulator for the bucket window `[offset, offset + seed.len())`
+    /// (all zeros on the first ring position); the window must be exactly
+    /// the stage run starting at this shard's fold cursor — derived locally
+    /// from the model layout, never trusted from the wire. On return `out`
+    /// holds the folded window, ready for the next hop.
+    ///
+    /// PARITY: the seed is copied into `ws.grad` *before* the stage folds
+    /// run, so each per-element row fold continues the upstream shard's
+    /// sequential sum — bit-identical to the fused backward over all rows.
+    pub fn shard_backward_bucket(
+        &self,
+        params: &[f32],
+        ctx: &mut ShardCtx,
+        offset: usize,
+        seed: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let def = self.def(&ctx.model)?;
+        let pc = def.param_count();
+        anyhow::ensure!(params.len() == pc, "params len mismatch");
+        let stages = def.stages_for_range(ctx.folded, offset, seed.len()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bucket [{offset}, {}) does not match a stage run at fold cursor {} of {}",
+                offset + seed.len(),
+                ctx.folded,
+                ctx.model
+            )
+        })?;
+        if ctx.folded == 0 {
+            // First bucket of this step: size the accumulator. Every
+            // element is seeded exactly once (the plan tiles the vector),
+            // so the zero fill is shape-only, never part of a sum.
+            ctx.ws.grad.clear();
+            ctx.ws.grad.resize(pc, 0.0);
+        }
+        ctx.ws.grad[offset..offset + seed.len()].copy_from_slice(seed);
+        for k in stages.clone() {
+            if ctx.prepped == k {
+                def.backward_stage_prep(&self.pool, params, ctx.m, &mut ctx.ws, k);
+                ctx.prepped = k + 1;
+            }
+            debug_assert!(ctx.prepped > k, "stage {k} folding before its prep");
+            def.backward_stage_fold(&self.pool, params, &ctx.x, ctx.m, &mut ctx.ws, k);
+        }
+        ctx.folded = stages.end;
+        out.clear();
+        out.extend_from_slice(&ctx.ws.grad[offset..offset + seed.len()]);
+        Ok(())
+    }
+
+    /// Run the *next* stage's dx-propagation ahead of its bucket seed —
+    /// the compute that overlaps the previous bucket's wire hop. Safe to
+    /// call any time: it is a no-op when the next stage is already prepped
+    /// or the backward is complete, and it never touches `ws.grad`.
+    pub fn shard_backward_prep_ahead(
+        &self,
+        params: &[f32],
+        ctx: &mut ShardCtx,
+    ) -> anyhow::Result<()> {
+        let def = self.def(&ctx.model)?;
+        anyhow::ensure!(params.len() == def.param_count(), "params len mismatch");
+        if ctx.prepped == ctx.folded && ctx.folded < def.n_stages() {
+            def.backward_stage_prep(&self.pool, params, ctx.m, &mut ctx.ws, ctx.folded);
+            ctx.prepped = ctx.folded + 1;
+        }
+        Ok(())
+    }
+
+    /// Whether every completion stage of this shard's backward has folded.
+    pub fn shard_backward_done(&self, ctx: &ShardCtx) -> anyhow::Result<bool> {
+        Ok(ctx.folded == self.def(&ctx.model)?.n_stages())
+    }
+
+    /// Retire a fully-folded bucketed backward, returning its workspace to
+    /// the pool. Errors (without leaking the workspace) if the bucket plan
+    /// never covered every stage — a leader/worker plan disagreement.
+    pub fn shard_finish(&self, ctx: ShardCtx) -> anyhow::Result<()> {
+        let n = self.def(&ctx.model)?.n_stages();
+        let folded = ctx.folded;
+        self.ws.put(ctx.ws);
+        anyhow::ensure!(
+            folded == n,
+            "bucketed backward retired after {folded}/{n} stages"
+        );
+        Ok(())
+    }
+
     /// Return a forward-only shard step's workspace to the pool (eval
     /// steps have no backward half).
     pub fn shard_discard(&self, ctx: ShardCtx) {
@@ -228,12 +330,17 @@ impl NativeBackend {
 
 /// One shard's in-flight train step: forward activations, loss gradient
 /// and input rows retained between [`NativeBackend::shard_forward`] and
-/// [`NativeBackend::shard_backward_acc`].
+/// the backward half ([`NativeBackend::shard_backward_acc`] bulk, or a
+/// [`NativeBackend::shard_backward_bucket`] sequence when overlapping).
+/// `folded`/`prepped` are the bucketed backward's stage cursors, with
+/// `folded <= prepped <= folded + 1` as the standing invariant.
 pub struct ShardCtx {
     ws: Workspace,
     x: Vec<f32>,
     m: usize,
     model: String,
+    folded: usize,
+    prepped: usize,
 }
 
 /// Per-row outputs of one shard's forward half: loss terms and masked
@@ -604,6 +711,87 @@ mod tests {
             b.policy_update(PpoVariant::Clipped, &mut opt, &mb, hp).unwrap();
         }
         assert_eq!(b.workspace_stats(), warm, "policy_update must reuse its workspace");
+    }
+
+    #[test]
+    fn bucketed_backward_chain_matches_bulk_bitwise() {
+        // Two shards, every bucket plan: chaining per-bucket seeds through
+        // shard_backward_bucket (with prep-ahead interleaved, as the worker
+        // loop does) must reproduce the bulk chained backward bit for bit.
+        let b = NativeBackend::with_threads(1);
+        let fd = b.schema().feature_dim;
+        for model in ["vgg11_mini", "resnet34_mini"] {
+            let def = b.def(model).unwrap().clone();
+            let pc = def.param_count();
+            let params = b.init_params(model, 0).unwrap();
+            let mut rng = Rng::new(31);
+            let rows = 9usize;
+            let x: Vec<f32> = (0..rows * fd).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..rows).map(|_| rng.below(def.classes) as i32).collect();
+            let mask = vec![1.0f32; rows];
+            let denom = rows as f32;
+            let split = 4usize; // shard 0: rows [0,4), shard 1: rows [4,9)
+
+            let shard_fwd = |lo: usize, hi: usize| {
+                b.shard_forward(
+                    model,
+                    &params,
+                    x[lo * fd..hi * fd].to_vec(),
+                    &y[lo..hi],
+                    &mask[lo..hi],
+                    denom,
+                )
+                .unwrap()
+                .0
+            };
+
+            // Bulk reference: the PR-4 chained reduction.
+            let mut bulk = vec![0.0f32; pc];
+            for (lo, hi) in [(0, split), (split, rows)] {
+                let ctx = shard_fwd(lo, hi);
+                b.shard_backward_acc(&params, ctx, &mut bulk).unwrap();
+            }
+
+            for target_bytes in [0usize, 40 << 10, 4 * pc] {
+                let plan = def.bucket_plan(target_bytes);
+                let mut ctx0 = shard_fwd(0, split);
+                let mut ctx1 = shard_fwd(split, rows);
+                let mut grad = vec![0.0f32; pc];
+                let (mut hop, mut out) = (Vec::new(), Vec::new());
+                for bu in &plan {
+                    let seed = vec![0.0f32; bu.len];
+                    b.shard_backward_bucket(&params, &mut ctx0, bu.offset, &seed, &mut hop)
+                        .unwrap();
+                    b.shard_backward_prep_ahead(&params, &mut ctx0).unwrap();
+                    b.shard_backward_bucket(&params, &mut ctx1, bu.offset, &hop, &mut out)
+                        .unwrap();
+                    b.shard_backward_prep_ahead(&params, &mut ctx1).unwrap();
+                    grad[bu.offset..bu.offset + bu.len].copy_from_slice(&out);
+                }
+                assert!(b.shard_backward_done(&ctx0).unwrap());
+                b.shard_finish(ctx0).unwrap();
+                b.shard_finish(ctx1).unwrap();
+                for (i, (a, r)) in grad.iter().zip(&bulk).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        r.to_bits(),
+                        "{model} target {target_bytes}: grad[{i}] {a} != bulk {r}"
+                    );
+                }
+            }
+
+            // A bucket that skips the fold cursor fails loudly.
+            let mut ctx = shard_fwd(0, rows);
+            let stages = def.grad_stages();
+            let s1 = stages[1];
+            let err = b
+                .shard_backward_bucket(&params, &mut ctx, s1.offset, &vec![0.0; s1.len], &mut Vec::new())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("fold cursor"), "{err}");
+            // Retiring an incomplete backward is an error (not a leak).
+            assert!(b.shard_finish(ctx).unwrap_err().to_string().contains("stages"));
+        }
     }
 
     #[test]

@@ -53,24 +53,20 @@ impl DenseRef {
         add_bias(y, self.bias(p), m, self.n);
     }
 
-    /// Accumulate weight/bias grads into `g` and write dx (input grad)
-    /// into the reused `dx` buffer. The input gradient streams through a
+    /// Input gradient only: dx = dy @ w^T, streamed through a
     /// generation-tagged packed panel of this layer's weights (`panels`,
     /// keyed by the weight offset, tagged with the step generation `gen`).
     #[allow(clippy::too_many_arguments)]
-    fn backward_into(
+    fn backward_dx(
         &self,
         pool: &Pool,
         p: &[f32],
-        x: &[f32],
         dy: &[f32],
         m: usize,
-        g: &mut [f32],
         dx: &mut Vec<f32>,
         panels: &mut PanelCache,
         gen: u64,
     ) {
-        self.backward_params(pool, x, dy, m, g);
         dx.clear();
         dx.resize(m * self.k, 0.0);
         matmul_bt_ws(
@@ -78,11 +74,47 @@ impl DenseRef {
         );
     }
 
-    /// Accumulate weight/bias grads only (no input grad — first layer).
+    /// Accumulate weight/bias grads only (no input grad).
+    ///
+    /// PARITY: `col_sums`/`matmul_at` fold rows sequentially per output
+    /// element INTO the existing values of `g` — the traveling-accumulator
+    /// contract every bucket fold in the sharded ring relies on.
     fn backward_params(&self, pool: &Pool, x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) {
         col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
         matmul_at(pool, x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
     }
+
+    /// The contiguous gradient slice this dense owns: bias then weight
+    /// (the ravel layout always places `w` right after the `n` bias lanes).
+    fn grad_span(&self) -> GradStage {
+        debug_assert_eq!(self.w, self.b + self.n, "bias/weight not contiguous");
+        GradStage { offset: self.b, len: self.n + self.k * self.n }
+    }
+}
+
+/// One backward stage's final slice of the flat gradient buffer, in
+/// backward **completion order** (stage 0 finishes first). Boundaries are
+/// static functions of the model layout — never of timing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GradStage {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl GradStage {
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+}
+
+/// One or more memory-adjacent completion stages flushed over the ring as
+/// a unit: a contiguous `[offset, offset+len)` window of the flat gradient
+/// plus the completion-order stage run that fills it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GradBucket {
+    pub offset: usize,
+    pub len: usize,
+    pub stages: std::ops::Range<usize>,
 }
 
 /// Static shape of one zoo model.
@@ -278,52 +310,205 @@ impl ModelDef {
     /// plane's correctness oracle hinges on exactly this property.
     pub fn backward_acc_ws(&self, pool: &Pool, p: &[f32], x: &[f32], m: usize, ws: &mut Workspace) {
         debug_assert_eq!(ws.grad.len(), self.param_count());
+        // PARITY: stages run strictly in completion order; the fused
+        // backward IS the staged backward with zero wire latency between
+        // stages, so overlapped ≡ bulk ≡ fused holds by construction.
+        for k in 0..self.n_stages() {
+            self.backward_stage_prep(pool, p, m, ws, k);
+            self.backward_stage_fold(pool, p, x, m, ws, k);
+        }
+    }
+
+    /// Number of backward completion stages (the bucket-able units): VGG
+    /// folds the head then each hidden layer; ResNet folds the head, each
+    /// residual block (fc1+fc2 as one unit), then the stem.
+    pub fn n_stages(&self) -> usize {
+        match self.family {
+            Family::Vgg => self.depth + 1,
+            Family::Resnet => self.depth + 2,
+        }
+    }
+
+    /// Gradient slices in backward completion order. Slices are disjoint
+    /// and tile `[0, param_count)`, but completion order is NOT memory
+    /// order (the head lives at the bottom of the VGG ravel yet finishes
+    /// first), which is why bucket coalescing checks memory adjacency.
+    pub fn grad_stages(&self) -> Vec<GradStage> {
+        let mut out = Vec::with_capacity(self.n_stages());
+        match self.family {
+            Family::Vgg => {
+                let (layers, head) = self.vgg_refs();
+                out.push(head.grad_span());
+                for i in (0..self.depth).rev() {
+                    out.push(layers[i].grad_span());
+                }
+            }
+            Family::Resnet => {
+                let (stem, blocks, head) = self.resnet_refs();
+                out.push(head.grad_span());
+                for i in (0..self.depth).rev() {
+                    let (fc1, fc2) = &blocks[i];
+                    out.push(GradStage {
+                        offset: fc1.b,
+                        len: fc2.grad_span().end() - fc1.b,
+                    });
+                }
+                out.push(stem.grad_span());
+            }
+        }
+        out
+    }
+
+    /// Deterministic bucket plan: walk stages in completion order, merging
+    /// a stage into the open bucket while the bucket is under
+    /// `target_bytes` AND the stage is memory-adjacent to it (so every
+    /// bucket stays one contiguous `[offset, len)` window). `0` yields one
+    /// bucket per stage; anything >= the model's byte size yields a single
+    /// whole-model bucket. Pure layout function — identical on every rank.
+    pub fn bucket_plan(&self, target_bytes: usize) -> Vec<GradBucket> {
+        let stages = self.grad_stages();
+        if target_bytes >= self.param_count() * 4 {
+            return vec![GradBucket { offset: 0, len: self.param_count(), stages: 0..stages.len() }];
+        }
+        let target = target_bytes.max(1);
+        let mut plan: Vec<GradBucket> = Vec::new();
+        for (k, s) in stages.iter().enumerate() {
+            if let Some(b) = plan.last_mut() {
+                let adjacent = s.end() == b.offset || s.offset == b.offset + b.len;
+                if adjacent && b.len * 4 < target {
+                    b.offset = b.offset.min(s.offset);
+                    b.len += s.len;
+                    b.stages.end = k + 1;
+                    continue;
+                }
+            }
+            plan.push(GradBucket { offset: s.offset, len: s.len, stages: k..k + 1 });
+        }
+        plan
+    }
+
+    /// Recover the completion-order stage run backing a received bucket
+    /// window, starting from the shard's stage cursor. Returns `None` when
+    /// `[offset, offset+len)` is not exactly the union of a stage run
+    /// beginning at `from_stage` — the shard-side guard that a leader and
+    /// worker disagreeing on the bucket plan fails loudly, not silently.
+    pub fn stages_for_range(
+        &self,
+        from_stage: usize,
+        offset: usize,
+        len: usize,
+    ) -> Option<std::ops::Range<usize>> {
+        let stages = self.grad_stages();
+        let (mut lo, mut hi, mut total) = (usize::MAX, 0usize, 0usize);
+        let mut k = from_stage;
+        while k < stages.len() && total < len {
+            let s = stages[k];
+            lo = lo.min(s.offset);
+            hi = hi.max(s.end());
+            total += s.len;
+            k += 1;
+        }
+        (total == len && lo == offset && hi == offset + len).then_some(from_stage..k)
+    }
+
+    /// Stage `k`'s dx-propagation: every op needed before the stage's fold
+    /// that does NOT read or write `ws.grad`. On a shard this runs as soon
+    /// as stage `k-1`'s fold is done — overlapping the previous bucket's
+    /// wire hop — because it never touches the traveling accumulator.
+    pub fn backward_stage_prep(&self, pool: &Pool, p: &[f32], m: usize, ws: &mut Workspace, k: usize) {
         let gen = ws.gen;
         match self.family {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
-                head.backward_into(
-                    pool, p, &ws.hs[self.depth - 1], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
-                    &mut ws.panels, gen,
-                );
-                for i in (0..self.depth).rev() {
-                    relu_backward(&mut ws.dh, &ws.hs[i]);
+                match k {
+                    0 => {}
+                    1 => {
+                        head.backward_dx(pool, p, &ws.dlogits, m, &mut ws.dh, &mut ws.panels, gen);
+                        relu_backward(&mut ws.dh, &ws.hs[self.depth - 1]);
+                    }
+                    _ => {
+                        let i = self.depth - k; // layer this stage folds
+                        layers[i + 1].backward_dx(
+                            pool, p, &ws.dh, m, &mut ws.dtmp, &mut ws.panels, gen,
+                        );
+                        std::mem::swap(&mut ws.dh, &mut ws.dtmp);
+                        relu_backward(&mut ws.dh, &ws.hs[i]);
+                    }
+                }
+            }
+            Family::Resnet => {
+                let (_, blocks, head) = self.resnet_refs();
+                match k {
+                    0 => {}
+                    1 => {
+                        head.backward_dx(pool, p, &ws.dlogits, m, &mut ws.dh, &mut ws.panels, gen);
+                        relu_backward(&mut ws.dh, &ws.hs[self.depth]);
+                    }
+                    _ => {
+                        // Descend one activation level: the previous
+                        // stage's block (index j) routes its fc1 input
+                        // gradient down, joins the residual skip, and
+                        // gates through hs[j]'s ReLU.
+                        let j = self.depth + 1 - k;
+                        blocks[j].0.backward_dx(
+                            pool, p, &ws.du, m, &mut ws.dtmp, &mut ws.panels, gen,
+                        );
+                        for (a, b) in ws.dh.iter_mut().zip(&ws.dtmp) {
+                            *a += *b; // residual: dz flows to h_in directly too
+                        }
+                        relu_backward(&mut ws.dh, &ws.hs[j]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stage `k`'s parameter-gradient fold: accumulates INTO `ws.grad`
+    /// exactly within `grad_stages()[k]`'s slice.
+    ///
+    /// PARITY: fold `k` must see the upstream shard's accumulator already
+    /// seeded in its slice before running — the sequential per-element row
+    /// fold continues from whatever is in the buffer, which is the whole
+    /// bitwise-parity mechanism of the bucketed ring.
+    pub fn backward_stage_fold(
+        &self,
+        pool: &Pool,
+        p: &[f32],
+        x: &[f32],
+        m: usize,
+        ws: &mut Workspace,
+        k: usize,
+    ) {
+        let gen = ws.gen;
+        match self.family {
+            Family::Vgg => {
+                let (layers, head) = self.vgg_refs();
+                if k == 0 {
+                    head.backward_params(pool, &ws.hs[self.depth - 1], &ws.dlogits, m, &mut ws.grad);
+                } else {
+                    let i = self.depth - k;
                     if i == 0 {
                         layers[0].backward_params(pool, x, &ws.dh, m, &mut ws.grad);
                     } else {
-                        layers[i].backward_into(
-                            pool, p, &ws.hs[i - 1], &ws.dh, m, &mut ws.grad, &mut ws.dtmp,
-                            &mut ws.panels, gen,
-                        );
-                        std::mem::swap(&mut ws.dh, &mut ws.dtmp);
+                        layers[i].backward_params(pool, &ws.hs[i - 1], &ws.dh, m, &mut ws.grad);
                     }
                 }
             }
             Family::Resnet => {
                 let (stem, blocks, head) = self.resnet_refs();
-                head.backward_into(
-                    pool, p, &ws.hs[self.depth], &ws.dlogits, m, &mut ws.grad, &mut ws.dh,
-                    &mut ws.panels, gen,
-                );
-                for i in (0..self.depth).rev() {
+                if k == 0 {
+                    head.backward_params(pool, &ws.hs[self.depth], &ws.dlogits, m, &mut ws.grad);
+                } else if k == self.depth + 1 {
+                    stem.backward_params(pool, x, &ws.dh, m, &mut ws.grad);
+                } else {
+                    let i = self.depth - k;
                     let (fc1, fc2) = &blocks[i];
-                    // dh is d(loss)/d(h_out); h_out = relu(h_in + fc2(u)).
-                    relu_backward(&mut ws.dh, &ws.hs[i + 1]); // now dz
-                    fc2.backward_into(
-                        pool, p, &ws.us[i], &ws.dh, m, &mut ws.grad, &mut ws.du,
-                        &mut ws.panels, gen,
-                    );
+                    // dh is dz = d(loss)/d(h_in + fc2(u)) after prep's ReLU.
+                    fc2.backward_params(pool, &ws.us[i], &ws.dh, m, &mut ws.grad);
+                    fc2.backward_dx(pool, p, &ws.dh, m, &mut ws.du, &mut ws.panels, gen);
                     relu_backward(&mut ws.du, &ws.us[i]);
-                    fc1.backward_into(
-                        pool, p, &ws.hs[i], &ws.du, m, &mut ws.grad, &mut ws.dtmp,
-                        &mut ws.panels, gen,
-                    );
-                    for (a, b) in ws.dh.iter_mut().zip(&ws.dtmp) {
-                        *a += *b; // residual: dz flows to h_in directly too
-                    }
+                    fc1.backward_params(pool, &ws.hs[i], &ws.du, m, &mut ws.grad);
                 }
-                relu_backward(&mut ws.dh, &ws.hs[0]);
-                stem.backward_params(pool, x, &ws.dh, m, &mut ws.grad);
             }
         }
     }
@@ -598,6 +783,128 @@ mod tests {
                 }
             }
             assert!(covered.iter().all(|&c| c), "{}: layout has holes", m.name);
+        }
+    }
+
+    #[test]
+    fn grad_stages_tile_the_vector_in_completion_order() {
+        for m in ModelDef::zoo() {
+            let stages = m.grad_stages();
+            assert_eq!(stages.len(), m.n_stages(), "{}", m.name);
+            let mut covered = vec![false; m.param_count()];
+            for s in &stages {
+                assert!(s.len > 0, "{}: empty stage", m.name);
+                for i in s.offset..s.end() {
+                    assert!(!covered[i], "{}: stage overlap at {i}", m.name);
+                    covered[i] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "{}: stages have holes", m.name);
+            // Stage 0 is the head (the first slice backward finalizes).
+            let c = m.classes;
+            let w = m.width;
+            match m.family {
+                Family::Vgg => assert_eq!(stages[0], GradStage { offset: 0, len: c + w * c }),
+                Family::Resnet => assert_eq!(stages[0].len, c + w * c),
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_plans_are_contiguous_and_recoverable() {
+        for m in ModelDef::zoo() {
+            let stages = m.grad_stages();
+            let pc = m.param_count();
+            for target_bytes in [0usize, 1, 8 << 10, 32 << 10, 4 * pc, usize::MAX / 8] {
+                let plan = m.bucket_plan(target_bytes);
+                // Stage runs concatenate to exactly 0..n_stages.
+                let mut next = 0usize;
+                let mut total = 0usize;
+                for b in &plan {
+                    assert_eq!(b.stages.start, next, "{}: gap in stage runs", m.name);
+                    next = b.stages.end;
+                    total += b.len;
+                    // Bucket window is exactly the union of its stages.
+                    let lo = b.stages.clone().map(|k| stages[k].offset).min().unwrap();
+                    let hi = b.stages.clone().map(|k| stages[k].end()).max().unwrap();
+                    let sum: usize = b.stages.clone().map(|k| stages[k].len).sum();
+                    assert_eq!((b.offset, b.len), (lo, hi - lo), "{}", m.name);
+                    assert_eq!(sum, b.len, "{}: bucket window has holes", m.name);
+                    // The shard can recover the run from the wire fields.
+                    assert_eq!(
+                        m.stages_for_range(b.stages.start, b.offset, b.len),
+                        Some(b.stages.clone()),
+                        "{}: stages_for_range disagrees",
+                        m.name
+                    );
+                }
+                assert_eq!(next, m.n_stages(), "{}", m.name);
+                assert_eq!(total, pc, "{}: plan does not tile the gradient", m.name);
+            }
+            assert_eq!(m.bucket_plan(0).len(), m.n_stages(), "{}", m.name);
+            assert_eq!(m.bucket_plan(4 * pc).len(), 1, "{}", m.name);
+            // A mid-run or misaligned window must not resolve.
+            assert_eq!(m.stages_for_range(1, 0, pc), None);
+            assert_eq!(m.stages_for_range(0, 0, pc - 1), None);
+            assert_eq!(m.stages_for_range(0, 1, stages[0].len), None);
+        }
+    }
+
+    #[test]
+    fn stage_folds_write_only_their_declared_slice() {
+        // Run the staged backward one stage at a time against a sentinel
+        // gradient buffer: prep never touches grad, and fold k writes only
+        // inside grad_stages()[k] — the property that makes shipping bucket
+        // k over the wire while stage k+1 computes safe.
+        use super::super::exec::Pool;
+        use super::super::workspace::Workspace;
+        for name in ["vgg11_mini", "resnet34_mini"] {
+            let m = def(name);
+            let p = m.init(6);
+            let mut rng = crate::util::rng::Rng::new(23);
+            let rows = 5usize;
+            let x: Vec<f32> = (0..rows * m.feature_dim).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..rows).map(|_| rng.below(m.classes) as i32).collect();
+            let mask = vec![1.0f32; rows];
+            let pool = Pool::sequential();
+
+            let fused = {
+                let acts = m.forward(&p, &x, rows);
+                let lo = masked_ce_loss(&acts.logits, &y, &mask, rows, m.classes);
+                m.backward(&p, &acts, &x, &lo.dlogits, rows)
+            };
+
+            let mut ws = Workspace::default();
+            ws.begin_step();
+            m.forward_ws(&pool, &p, &x, rows, &mut ws);
+            let logits = std::mem::take(&mut ws.logits);
+            let (mut lp, mut lt, mut cor, mut dl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            masked_ce_rows(&logits, &y, &mask, rows, m.classes, rows as f32, &mut lp, &mut lt, &mut cor, &mut dl);
+            ws.logits = logits;
+            ws.dlogits = dl;
+            ws.grad.clear();
+            ws.grad.resize(m.param_count(), 0.0);
+
+            let stages = m.grad_stages();
+            for k in 0..m.n_stages() {
+                let before = ws.grad.clone();
+                m.backward_stage_prep(&pool, &p, rows, &mut ws, k);
+                assert_eq!(ws.grad, before, "{name}: prep {k} touched grad");
+                m.backward_stage_fold(&pool, &p, &x, rows, &mut ws, k);
+                let s = stages[k];
+                for (i, (a, b)) in ws.grad.iter().zip(&before).enumerate() {
+                    if i < s.offset || i >= s.end() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{name}: fold {k} wrote outside its slice at {i}"
+                        );
+                    }
+                }
+            }
+            for (i, (a, b)) in ws.grad.iter().zip(&fused).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}: staged grad[{i}] != fused");
+            }
         }
     }
 

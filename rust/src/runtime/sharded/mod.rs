@@ -46,13 +46,20 @@ use crate::runtime::backend::{
 use crate::runtime::native::model::{
     apply_adam, apply_sgd, fold_masked_ce_partial, normalized_grad_stats,
 };
-use crate::runtime::native::NativeBackend;
+use crate::runtime::native::{CommLane, NativeBackend};
 use crate::sim::elastic;
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use transport::{loopback_pair, ShardMsg, ShardTransport};
+use transport::{loopback_pair, ShardMsg, ShardSender, ShardTransport};
+
+/// Default target bytes per gradient bucket (`DYNAMIX_BUCKET_KB`
+/// overrides). 32 KiB ≈ one mid-sized dense layer's gradient: small
+/// enough that the first hop starts long before the backward finishes,
+/// large enough that framing overhead stays negligible.
+const DEFAULT_BUCKET_BYTES: usize = 32 << 10;
 
 /// Contiguous row ranges of a `bucket`-row fused batch, one per shard (in
 /// shard order; inactive shards get empty ranges). Base assignment is
@@ -110,8 +117,103 @@ fn recv_reply(
             {
                 continue; // stale reply from an aborted step
             }
+            // An aborted overlapped step leaves bucket replies / fin
+            // frames unread; drain those too. A CURRENT-seq bucket frame
+            // falls through to the protocol error below, whose debug print
+            // names the offending seq and bucket id.
+            ShardMsg::GradBucket { .. } | ShardMsg::BucketFin { .. } if mseq < seq => {
+                continue;
+            }
             ShardMsg::Err { msg, .. } => anyhow::bail!("shard {shard}: {msg}"),
             other => return Ok(other),
+        }
+    }
+}
+
+/// Receive the reply for `bucket` of step `seq` from one ring position,
+/// draining stale frames the same way [`recv_reply`] does. Every error
+/// path names BOTH the offending `seq` and the bucket id — a mid-ring
+/// failure is only debuggable if it says *which hop* died.
+fn recv_bucket_reply(
+    link: &mut Box<dyn ShardTransport>,
+    shard: usize,
+    seq: u64,
+    bucket: usize,
+) -> anyhow::Result<(usize, Vec<f32>)> {
+    loop {
+        let msg = link.recv().map_err(|e| {
+            anyhow::anyhow!(
+                "shard {shard}: transport failed mid-ring at seq {seq} bucket {bucket}: {e:#}"
+            )
+        })?;
+        let mseq = msg.seq();
+        match msg {
+            ShardMsg::Fwd { .. }
+            | ShardMsg::GradOut { .. }
+            | ShardMsg::Err { .. }
+            | ShardMsg::GradBucket { .. }
+            | ShardMsg::BucketFin { .. }
+                if mseq < seq =>
+            {
+                continue; // stale frame from an aborted step
+            }
+            ShardMsg::Err { msg, .. } => {
+                anyhow::bail!("shard {shard}: bucket {bucket} of seq {seq}: {msg}")
+            }
+            ShardMsg::GradBucket { seq: rs, bucket: rb, offset, grad } => {
+                anyhow::ensure!(
+                    rs == seq && rb == bucket,
+                    "shard {shard}: bucket reply (seq {rs}, bucket {rb}) != expected \
+                     (seq {seq}, bucket {bucket})"
+                );
+                return Ok((offset, grad));
+            }
+            other => anyhow::bail!(
+                "shard {shard}: expected bucket {bucket} of seq {seq}, got {other:?}"
+            ),
+        }
+    }
+}
+
+/// Consume one shard's `BucketFin` — its acknowledgment that every stage
+/// of step `seq`'s backward folded and retired shard-side.
+fn recv_bucket_fin(
+    link: &mut Box<dyn ShardTransport>,
+    shard: usize,
+    seq: u64,
+    expected_buckets: usize,
+) -> anyhow::Result<()> {
+    loop {
+        let msg = link.recv().map_err(|e| {
+            anyhow::anyhow!(
+                "shard {shard}: transport failed mid-ring at seq {seq} awaiting bucket fin: {e:#}"
+            )
+        })?;
+        let mseq = msg.seq();
+        match msg {
+            ShardMsg::Fwd { .. }
+            | ShardMsg::GradOut { .. }
+            | ShardMsg::Err { .. }
+            | ShardMsg::GradBucket { .. }
+            | ShardMsg::BucketFin { .. }
+                if mseq < seq =>
+            {
+                continue;
+            }
+            ShardMsg::Err { msg, .. } => {
+                anyhow::bail!("shard {shard}: bucket fin of seq {seq}: {msg}")
+            }
+            ShardMsg::BucketFin { seq: rs, buckets } => {
+                anyhow::ensure!(
+                    rs == seq && buckets == expected_buckets,
+                    "shard {shard}: bucket fin (seq {rs}, {buckets} buckets) != expected \
+                     (seq {seq}, {expected_buckets} buckets)"
+                );
+                return Ok(());
+            }
+            other => anyhow::bail!(
+                "shard {shard}: expected bucket fin of seq {seq}, got {other:?}"
+            ),
         }
     }
 }
@@ -123,10 +225,21 @@ fn recv_reply(
 pub struct ShardedBackend {
     inner: Arc<NativeBackend>,
     links: Mutex<Vec<Box<dyn ShardTransport>>>,
+    /// Detached write halves (where the transport can supply one), cloned
+    /// into comm-lane jobs so ring sends run off the leader thread.
+    senders: Vec<Option<Arc<Mutex<Box<dyn ShardSender>>>>>,
+    /// The single send thread behind overlapped ring hops; lazily spawned
+    /// on the first overlapped train step.
+    lane: OnceLock<CommLane>,
     active: Mutex<Vec<bool>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     seq: AtomicU64,
     n: usize,
+    /// Pipelined bucket ring on/off (`DYNAMIX_OVERLAP`, read once at
+    /// construction; default on). Off reproduces the bulk PR 5 ring.
+    overlap: bool,
+    /// Target bytes per gradient bucket (`DYNAMIX_BUCKET_KB`).
+    bucket_bytes: usize,
 }
 
 impl ShardedBackend {
@@ -170,14 +283,35 @@ impl ShardedBackend {
             );
             links.push(Box::new(leader_end));
         }
+        let senders = links
+            .iter()
+            .map(|l| l.sender().map(|s| Arc::new(Mutex::new(s))))
+            .collect();
         ShardedBackend {
             inner,
             n,
             links: Mutex::new(links),
+            senders,
+            lane: OnceLock::new(),
             active: Mutex::new(vec![true; n]),
             handles: Mutex::new(handles),
             seq: AtomicU64::new(0),
+            overlap: crate::config::env::overlap().unwrap_or(true),
+            bucket_bytes: crate::config::env::bucket_kb()
+                .map(|kb| kb * 1024)
+                .unwrap_or(DEFAULT_BUCKET_BYTES),
         }
+    }
+
+    /// Pin the overlap axes — ring schedule and bucket target — without
+    /// touching the process environment (the parity sweeps pin every axis
+    /// explicitly; env vars would race across concurrent tests).
+    /// `bucket_bytes == 0` means one bucket per completion stage, the
+    /// finest legal plan.
+    pub fn with_overlap(mut self, overlap: bool, bucket_bytes: usize) -> Self {
+        self.overlap = overlap;
+        self.bucket_bytes = bucket_bytes;
+        self
     }
 
     /// Data plane over caller-supplied transports (e.g. TCP shard servers
@@ -188,13 +322,23 @@ impl ShardedBackend {
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(!links.is_empty(), "sharded backend needs at least one transport");
         let n = links.len();
+        let senders = links
+            .iter()
+            .map(|l| l.sender().map(|s| Arc::new(Mutex::new(s))))
+            .collect();
         Ok(ShardedBackend {
             inner,
             n,
             links: Mutex::new(links),
+            senders,
+            lane: OnceLock::new(),
             active: Mutex::new(vec![true; n]),
             handles: Mutex::new(Vec::new()),
             seq: AtomicU64::new(0),
+            overlap: crate::config::env::overlap().unwrap_or(true),
+            bucket_bytes: crate::config::env::bucket_kb()
+                .map(|kb| kb * 1024)
+                .unwrap_or(DEFAULT_BUCKET_BYTES),
         })
     }
 
@@ -275,21 +419,35 @@ impl ShardedBackend {
 
         // Phase B: the chained deterministic reduction — the accumulator
         // visits engaged shards in row order; each folds its rows in.
+        // Overlapped, the accumulator travels as completion-ordered
+        // buckets so hop k rides under the compute of stage k+1; bulk, it
+        // travels whole. Same seeds, same per-element fold order — the
+        // two schedules are bit-identical (`tests/overlap_parity.rs`).
         let grad = if train {
             let mut grad = vec![0.0f32; param_count];
-            for &s in &engaged {
-                links[s]
-                    .send(ShardMsg::GradSeed { seq, grad })
-                    .map_err(|e| {
-                        anyhow::anyhow!("shard {s}: transport failed mid-ring: {e:#}")
-                    })?;
-                grad = match recv_reply(&mut links[s], s, seq)? {
-                    ShardMsg::GradOut { seq: rs, grad } => {
-                        anyhow::ensure!(rs == seq, "shard {s}: GradOut seq {rs} != {seq}");
-                        grad
-                    }
-                    other => anyhow::bail!("shard {s}: expected GradOut, got {other:?}"),
-                };
+            if self.overlap && engaged.len() > 1 {
+                let r = self.ring_overlapped(&mut links, &engaged, seq, model, &mut grad);
+                // Settle the comm lane before surfacing anything: a failed
+                // step must not leak queued sends (or their errors) into
+                // the next one.
+                let sends = self.lane.get().map_or(Ok(()), |l| l.drain());
+                r?;
+                sends?;
+            } else {
+                for &s in &engaged {
+                    links[s]
+                        .send(ShardMsg::GradSeed { seq, grad })
+                        .map_err(|e| {
+                            anyhow::anyhow!("shard {s}: transport failed mid-ring: {e:#}")
+                        })?;
+                    grad = match recv_reply(&mut links[s], s, seq)? {
+                        ShardMsg::GradOut { seq: rs, grad } => {
+                            anyhow::ensure!(rs == seq, "shard {s}: GradOut seq {rs} != {seq}");
+                            grad
+                        }
+                        other => anyhow::bail!("shard {s}: expected GradOut, got {other:?}"),
+                    };
+                }
             }
             Some(grad)
         } else {
@@ -297,10 +455,141 @@ impl ShardedBackend {
         };
         Ok((loss_sum, acc_sum, denom, grad))
     }
+
+    /// The pipelined bucket ring (Phase B with overlap on): split the
+    /// traveling accumulator into the deterministic bucket plan (see
+    /// [`crate::runtime::native::model::ModelDef::bucket_plan`]) and drive
+    /// every bucket through the engaged shards in row order, keeping at
+    /// most `DEPTH` buckets in flight per link. While bucket `k` hops,
+    /// each shard is folding (or prepping) the stages behind bucket `k+1`
+    /// — the communication hides under backward compute instead of
+    /// serializing after it.
+    ///
+    /// PARITY: the schedule moves, the arithmetic does not. Bucket `k`'s
+    /// seed at position `j` is exactly the window position `j-1` produced
+    /// (zeros at position 0), and shards fold stages in completion order
+    /// under cursors that forbid reordering — so every per-element row
+    /// fold happens in the same sequence as the bulk ring and the fused
+    /// native step.
+    fn ring_overlapped(
+        &self,
+        links: &mut [Box<dyn ShardTransport>],
+        engaged: &[usize],
+        seq: u64,
+        model: &str,
+        grad: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let plan = self.inner.bucket_plan(model, self.bucket_bytes)?;
+        let nb = plan.len();
+        let p = engaged.len();
+        // Per-link in-flight cap. Pipelining needs at most one bucket on
+        // the wire plus one queued behind it; an unbounded window could
+        // fill a TCP send buffer while this thread is blocked reading a
+        // different link (send/recv deadlock against the shard).
+        const DEPTH: usize = 2;
+        let mut sent = vec![0usize; p];
+        let mut recvd = vec![0usize; p];
+        // Windows received from ring position j-1, awaiting the hop to j.
+        let mut staged: Vec<VecDeque<Vec<f32>>> = (0..p).map(|_| VecDeque::new()).collect();
+        while recvd[p - 1] < nb {
+            // Greedy sends: every bucket whose upstream window landed and
+            // whose link has window room goes out now. Position 0 seeds
+            // from the zeroed accumulator directly.
+            for j in 0..p {
+                while sent[j] < nb
+                    && sent[j] - recvd[j] < DEPTH
+                    && (j == 0 || !staged[j].is_empty())
+                {
+                    let b = sent[j];
+                    let payload = if j == 0 {
+                        grad[plan[b].offset..plan[b].offset + plan[b].len].to_vec()
+                    } else {
+                        staged[j].pop_front().expect("checked non-empty")
+                    };
+                    let msg = ShardMsg::GradBucket {
+                        seq,
+                        bucket: b,
+                        offset: plan[b].offset,
+                        grad: payload,
+                    };
+                    self.send_ring_hop(&mut links[engaged[j]], engaged[j], seq, b, msg)?;
+                    sent[j] += 1;
+                }
+            }
+            // Deterministic blocking recv: among positions with a reply
+            // outstanding, take the smallest (bucket, position) — the
+            // schedule never depends on arrival timing.
+            let j = (0..p)
+                .filter(|&j| recvd[j] < sent[j])
+                .min_by_key(|&j| (recvd[j], j))
+                .expect("overlapped ring stalled with buckets outstanding");
+            let b = recvd[j];
+            let s = engaged[j];
+            let (off, win) = recv_bucket_reply(&mut links[s], s, seq, b)?;
+            anyhow::ensure!(
+                off == plan[b].offset && win.len() == plan[b].len,
+                "shard {s}: bucket {b} of seq {seq} window [{off}, {}) != planned [{}, {})",
+                off + win.len(),
+                plan[b].offset,
+                plan[b].offset + plan[b].len
+            );
+            if j == p - 1 {
+                // Fully reduced: every engaged shard folded its rows in.
+                grad[off..off + win.len()].copy_from_slice(&win);
+            } else {
+                staged[j + 1].push_back(win);
+            }
+            recvd[j] += 1;
+        }
+        // Every link acknowledges full retirement before the step ends —
+        // a shard that silently skipped stages would fail here.
+        for &s in engaged {
+            recv_bucket_fin(&mut links[s], s, seq, nb)?;
+        }
+        Ok(())
+    }
+
+    /// One leader->shard bucket send. Runs on the comm lane (off the
+    /// leader thread, via the transport's detached write half) when the
+    /// transport supports it, inline otherwise; either way the error
+    /// names the seq and bucket of the hop that failed.
+    fn send_ring_hop(
+        &self,
+        link: &mut Box<dyn ShardTransport>,
+        shard: usize,
+        seq: u64,
+        bucket: usize,
+        msg: ShardMsg,
+    ) -> anyhow::Result<()> {
+        if let Some(half) = &self.senders[shard] {
+            let half = half.clone();
+            self.lane.get_or_init(CommLane::new).submit(move || {
+                half.lock()
+                    .map_err(|_| anyhow::anyhow!("sender half poisoned"))?
+                    .send(msg)
+                    .map_err(|e| {
+                        anyhow::anyhow!(
+                            "shard {shard}: transport failed mid-ring at seq {seq} \
+                             bucket {bucket}: {e:#}"
+                        )
+                    })
+            });
+            Ok(())
+        } else {
+            link.send(msg).map_err(|e| {
+                anyhow::anyhow!(
+                    "shard {shard}: transport failed mid-ring at seq {seq} bucket {bucket}: {e:#}"
+                )
+            })
+        }
+    }
 }
 
 impl Drop for ShardedBackend {
     fn drop(&mut self) {
+        // Retire the comm lane first: it flushes queued sends on drop, so
+        // no bucket frame can race the Shutdown below on a shared link.
+        drop(self.lane.take());
         if let Ok(mut links) = self.links.lock() {
             for l in links.iter_mut() {
                 let _ = l.send(ShardMsg::Shutdown);

@@ -16,8 +16,10 @@
 //!    shards run forward + per-row loss pieces in parallel;
 //! 2. `Fwd` back from each shard;
 //! 3. the gradient accumulator rings through the engaged shards in shard
-//!    order (`GradSeed` out, `GradOut` back) — the chained deterministic
-//!    reduction that makes the sum bit-identical to the fused backward;
+//!    order — as one whole-model hop (`GradSeed` out, `GradOut` back), or,
+//!    when overlap is on, as a pipeline of `GradBucket` windows so bucket
+//!    k's hop hides under stage k+1's backward compute. Each bucketed
+//!    backward ends with a `BucketFin` plan-agreement acknowledgement;
 //! 4. optionally `GradFin` broadcast (replica-holding deployments apply
 //!    the same optimizer update locally; stateless shards don't need it).
 
@@ -44,6 +46,16 @@ pub enum ShardMsg {
     GradSeed { seq: u64, grad: Vec<f32> },
     /// The accumulator after folding this shard's rows in.
     GradOut { seq: u64, grad: Vec<f32> },
+    /// One traveling **bucket** of the accumulator — a contiguous
+    /// `[offset, offset + grad.len())` window of the flat gradient, used
+    /// in both directions of a hop (seed in, folded window back).
+    /// `bucket` is the window's index in the step's deterministic plan,
+    /// carried for error attribution and in-order checking only — shards
+    /// re-derive the stage run from `offset`/length against the layout.
+    GradBucket { seq: u64, bucket: usize, offset: usize, grad: Vec<f32> },
+    /// Shard → leader: the bucketed backward for step `seq` completed
+    /// after exactly `buckets` buckets (the plan-agreement check).
+    BucketFin { seq: u64, buckets: usize },
     /// Fully-reduced gradient broadcast (replica deployments only).
     GradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
     /// The shard failed to process step `seq` but stays serviceable; the
@@ -60,6 +72,8 @@ impl ShardMsg {
             | ShardMsg::Fwd { seq, .. }
             | ShardMsg::GradSeed { seq, .. }
             | ShardMsg::GradOut { seq, .. }
+            | ShardMsg::GradBucket { seq, .. }
+            | ShardMsg::BucketFin { seq, .. }
             | ShardMsg::GradFin { seq, .. }
             | ShardMsg::Err { seq, .. } => *seq,
             ShardMsg::Shutdown => 0,
@@ -86,6 +100,15 @@ impl ShardMsg {
                 Msg::ShardGradSeed { seq: *seq, grad: grad.clone() }
             }
             ShardMsg::GradOut { seq, grad } => Msg::ShardGradOut { seq: *seq, grad: grad.clone() },
+            ShardMsg::GradBucket { seq, bucket, offset, grad } => Msg::ShardGradBucket {
+                seq: *seq,
+                bucket: *bucket as u32,
+                offset: *offset as u64,
+                grad: grad.clone(),
+            },
+            ShardMsg::BucketFin { seq, buckets } => {
+                Msg::ShardBucketFin { seq: *seq, buckets: *buckets as u32 }
+            }
             ShardMsg::GradFin { seq, loss, acc, grad } => Msg::ShardGradFin {
                 seq: *seq,
                 loss: *loss,
@@ -112,6 +135,15 @@ impl ShardMsg {
             }
             Msg::ShardGradSeed { seq, grad } => ShardMsg::GradSeed { seq, grad },
             Msg::ShardGradOut { seq, grad } => ShardMsg::GradOut { seq, grad },
+            Msg::ShardGradBucket { seq, bucket, offset, grad } => ShardMsg::GradBucket {
+                seq,
+                bucket: bucket as usize,
+                offset: offset as usize,
+                grad,
+            },
+            Msg::ShardBucketFin { seq, buckets } => {
+                ShardMsg::BucketFin { seq, buckets: buckets as usize }
+            }
             Msg::ShardGradFin { seq, loss, acc, grad } => {
                 ShardMsg::GradFin { seq, loss, acc, grad }
             }
@@ -126,6 +158,20 @@ impl ShardMsg {
 pub trait ShardTransport: Send {
     fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()>;
     fn recv(&mut self) -> anyhow::Result<ShardMsg>;
+
+    /// A detached write half sharing this link, if the carrier supports
+    /// one — lets the leader hand sends to the comm lane while it keeps
+    /// blocking on `recv`. `None` (the default) means sends stay inline.
+    fn sender(&self) -> Option<Box<dyn ShardSender>> {
+        None
+    }
+}
+
+/// Send-only half of a shard link (see [`ShardTransport::sender`]). Order
+/// is only guaranteed among messages pushed through the SAME half, which
+/// is why the comm lane is a single thread per process.
+pub trait ShardSender: Send {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()>;
 }
 
 /// In-process transport: plain channels, zero serialization.
@@ -152,6 +198,21 @@ impl ShardTransport for LoopbackTransport {
     fn recv(&mut self) -> anyhow::Result<ShardMsg> {
         self.rx.recv().map_err(|_| anyhow::anyhow!("shard peer closed"))
     }
+
+    fn sender(&self) -> Option<Box<dyn ShardSender>> {
+        Some(Box::new(LoopbackSender { tx: self.tx.clone() }))
+    }
+}
+
+/// Cloned write half of a loopback link.
+struct LoopbackSender {
+    tx: mpsc::Sender<ShardMsg>,
+}
+
+impl ShardSender for LoopbackSender {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()> {
+        self.tx.send(msg).map_err(|_| anyhow::anyhow!("shard peer closed"))
+    }
 }
 
 /// Wire transport: the same protocol over any framed `comm` transport
@@ -173,6 +234,23 @@ impl<T: Transport> ShardTransport for TcpShardTransport<T> {
 
     fn recv(&mut self) -> anyhow::Result<ShardMsg> {
         ShardMsg::from_wire(self.inner.recv()?)
+    }
+
+    fn sender(&self) -> Option<Box<dyn ShardSender>> {
+        self.inner
+            .clone_writer()
+            .map(|w| Box::new(WireSender { inner: w }) as Box<dyn ShardSender>)
+    }
+}
+
+/// Write half of a wire link (a cloned OS handle under the framed codec).
+struct WireSender {
+    inner: Box<dyn Transport + Send>,
+}
+
+impl ShardSender for WireSender {
+    fn send(&mut self, msg: ShardMsg) -> anyhow::Result<()> {
+        self.inner.send(&msg.to_wire())
     }
 }
 
@@ -197,6 +275,8 @@ mod tests {
             ShardMsg::Fwd { seq: 1, loss_terms: vec![1.0, 2.0], correct: vec![0.0, 1.0] },
             ShardMsg::GradSeed { seq: 1, grad: vec![0.0; 3] },
             ShardMsg::GradOut { seq: 1, grad: vec![0.1; 3] },
+            ShardMsg::GradBucket { seq: 1, bucket: 2, offset: 650, grad: vec![0.5; 4] },
+            ShardMsg::BucketFin { seq: 1, buckets: 3 },
             ShardMsg::GradFin { seq: 1, loss: 1.5, acc: 0.5, grad: vec![0.1; 3] },
             ShardMsg::Err { seq: 1, msg: "label 37 outside [0, 10)".into() },
             ShardMsg::Shutdown,
@@ -224,5 +304,25 @@ mod tests {
         }
         drop(b);
         assert!(a.recv().is_err(), "closed peer must error, not hang");
+    }
+
+    #[test]
+    fn detached_sender_shares_the_link_in_order() {
+        let (a, mut b) = loopback_pair();
+        let mut s1 = a.sender().expect("loopback supports a write half");
+        let mut s2 = a.sender().unwrap();
+        // Single-half ordering: everything through s1 arrives in push order.
+        for i in 0..4 {
+            s1.send(ShardMsg::BucketFin { seq: i, buckets: 1 }).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(b.recv().unwrap().seq(), i);
+        }
+        s2.send(ShardMsg::Shutdown).unwrap();
+        assert_eq!(b.recv().unwrap(), ShardMsg::Shutdown);
+        // The detached half keeps the channel open past the transport.
+        drop(a);
+        s1.send(ShardMsg::BucketFin { seq: 9, buckets: 1 }).unwrap();
+        assert_eq!(b.recv().unwrap().seq(), 9);
     }
 }

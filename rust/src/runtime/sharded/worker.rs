@@ -16,13 +16,72 @@ use std::sync::Arc;
 /// send back whatever it returns.
 pub struct ShardServer {
     backend: Arc<NativeBackend>,
-    /// In-flight step awaiting its GradSeed: (seq, params, forward state).
+    /// In-flight step awaiting its GradSeed / gradient buckets:
+    /// (seq, params, forward state).
     held: Option<(u64, Arc<Vec<f32>>, ShardCtx)>,
+    /// Buckets folded for the in-flight step (the overlapped ring's
+    /// in-order check: bucket `k` must be the `k`-th frame to arrive).
+    buckets_done: usize,
 }
 
 impl ShardServer {
     pub fn new(backend: Arc<NativeBackend>) -> Self {
-        ShardServer { backend, held: None }
+        ShardServer { backend, held: None, buckets_done: 0 }
+    }
+
+    /// Handle one gradient bucket of the overlapped ring: seed the
+    /// `[offset, offset + grad.len())` window, fold this bucket's stages,
+    /// and return the folded window as the reply. The caller must send
+    /// the reply FIRST and only then call [`Self::bucket_retire`] — the
+    /// follow-up work (prep-ahead / retirement) runs while the bucket
+    /// hops to the next shard, which is exactly the overlap this
+    /// pipeline exists for.
+    pub fn handle_bucket(
+        &mut self,
+        seq: u64,
+        bucket: usize,
+        offset: usize,
+        grad: Vec<f32>,
+    ) -> anyhow::Result<ShardMsg> {
+        let (held_seq, params, ctx) = self.held.as_mut().ok_or_else(|| {
+            anyhow::anyhow!("bucket {bucket} (seq {seq}) without an in-flight step")
+        })?;
+        anyhow::ensure!(
+            *held_seq == seq,
+            "bucket {bucket} seq {seq} != in-flight step {held_seq}"
+        );
+        anyhow::ensure!(
+            bucket == self.buckets_done,
+            "bucket {bucket} of seq {seq} arrived out of order (expected bucket {})",
+            self.buckets_done
+        );
+        let mut out = Vec::with_capacity(grad.len());
+        self.backend.shard_backward_bucket(params, ctx, offset, &grad, &mut out)?;
+        self.buckets_done += 1;
+        Ok(ShardMsg::GradBucket { seq, bucket, offset, grad: out })
+    }
+
+    /// Post-reply step of the bucket protocol: if every stage has folded,
+    /// retire the step and hand back the `BucketFin` frame to send;
+    /// otherwise pre-run the next stage's dx-propagation (the compute
+    /// that overlaps the in-flight bucket's ring hop) and return `None`.
+    pub fn bucket_retire(&mut self, seq: u64) -> anyhow::Result<Option<ShardMsg>> {
+        let Some((held_seq, params, ctx)) = self.held.as_mut() else {
+            return Ok(None);
+        };
+        if *held_seq != seq {
+            return Ok(None);
+        }
+        if self.backend.shard_backward_done(ctx)? {
+            let (_, _, ctx) = self.held.take().expect("held checked above");
+            self.backend.shard_finish(ctx)?;
+            let buckets = self.buckets_done;
+            self.buckets_done = 0;
+            Ok(Some(ShardMsg::BucketFin { seq, buckets }))
+        } else {
+            self.backend.shard_backward_prep_ahead(params, ctx)?;
+            Ok(None)
+        }
     }
 
     /// Handle one message; `Ok(Some(reply))` goes back to the leader.
@@ -35,10 +94,12 @@ impl ShardServer {
                 let params = params
                     .ok_or_else(|| anyhow::anyhow!("stateless shard got Step without params"))?;
                 // A stale held step means the leader abandoned a sequence
-                // (error recovery); recycle its workspace and move on.
+                // (error recovery); recycle its workspace and move on. A
+                // partially-bucketed backward is discarded the same way.
                 if let Some((_, _, ctx)) = self.held.take() {
                     self.backend.shard_discard(ctx);
                 }
+                self.buckets_done = 0;
                 let (ctx, fwd) = self.backend.shard_forward(
                     &rows.model,
                     &params,
@@ -59,6 +120,12 @@ impl ShardServer {
                 }))
             }
             ShardMsg::GradSeed { seq, mut grad } => {
+                anyhow::ensure!(
+                    self.buckets_done == 0,
+                    "GradSeed for seq {seq} after {} gradient buckets — a step reduces \
+                     through buckets or bulk, never both",
+                    self.buckets_done
+                );
                 let (held_seq, params, ctx) = self
                     .held
                     .take()
@@ -91,6 +158,26 @@ pub fn serve(mut transport: impl ShardTransport, backend: Arc<NativeBackend>) ->
             return Ok(());
         }
         let seq = msg.seq();
+        // Buckets are special-cased so the folded window goes on the wire
+        // BEFORE the follow-up compute: the next shard starts folding (and
+        // this shard preps its next stage) while later stages here are
+        // still pending — that concurrency is the comm/compute overlap.
+        if let ShardMsg::GradBucket { seq, bucket, offset, grad } = msg {
+            match server.handle_bucket(seq, bucket, offset, grad) {
+                Ok(reply) => {
+                    transport.send(reply)?;
+                    match server.bucket_retire(seq) {
+                        Ok(Some(fin)) => transport.send(fin)?,
+                        Ok(None) => {}
+                        Err(e) => {
+                            transport.send(ShardMsg::Err { seq, msg: format!("{e:#}") })?
+                        }
+                    }
+                }
+                Err(e) => transport.send(ShardMsg::Err { seq, msg: format!("{e:#}") })?,
+            }
+            continue;
+        }
         match server.handle(msg) {
             Ok(Some(reply)) => transport.send(reply)?,
             Ok(None) => {}
@@ -120,6 +207,44 @@ mod tests {
         assert!(s
             .handle(ShardMsg::Fwd { seq: 3, loss_terms: vec![], correct: vec![] })
             .is_err());
+    }
+
+    #[test]
+    fn bucket_frames_are_checked_before_any_fold() {
+        use crate::comm::ShardRows;
+        let b = Arc::new(NativeBackend::with_threads(1));
+        let fd = b.schema().feature_dim;
+        let params = Arc::new(b.init_params("vgg11_mini", 0).unwrap());
+        let mut s = ShardServer::new(b);
+        // Bucket with nothing in flight.
+        let err = s.handle_bucket(1, 0, 0, vec![0.0; 4]).unwrap_err().to_string();
+        assert!(err.contains("without an in-flight step"), "{err}");
+        s.handle(ShardMsg::Step {
+            seq: 5,
+            denom: 2.0,
+            train: true,
+            rows: Some(ShardRows {
+                model: "vgg11_mini".into(),
+                x: vec![0.1; 2 * fd],
+                y: vec![0, 1],
+                mask: vec![1.0, 1.0],
+            }),
+            params: Some(params),
+        })
+        .unwrap();
+        // Wrong seq: the error carries BOTH the seq and the bucket id.
+        let err = s.handle_bucket(9, 0, 0, vec![0.0; 4]).unwrap_err().to_string();
+        assert!(err.contains("seq 9") && err.contains("bucket 0"), "{err}");
+        // Out-of-order bucket index.
+        let err = s.handle_bucket(5, 3, 0, vec![0.0; 4]).unwrap_err().to_string();
+        assert!(err.contains("out of order") && err.contains("bucket 3"), "{err}");
+        // A window that is not a stage run at the fold cursor.
+        let err = s.handle_bucket(5, 0, 1, vec![0.0; 4]).unwrap_err().to_string();
+        assert!(err.contains("fold cursor"), "{err}");
+        // Rejected buckets folded nothing, so the bulk path still works.
+        let reply =
+            s.handle(ShardMsg::GradSeed { seq: 5, grad: vec![0.0; 25_546] }).unwrap().unwrap();
+        assert!(matches!(reply, ShardMsg::GradOut { seq: 5, .. }));
     }
 
     #[test]

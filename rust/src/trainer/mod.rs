@@ -278,6 +278,15 @@ pub struct BspTrainer {
     xs_scratch: Vec<f32>,
     ys_scratch: Vec<i32>,
     offsets_scratch: Vec<usize>,
+    /// Price the collective with the pipelined (comm/compute-overlapped)
+    /// timeline instead of the serialized one. Mirrors the data plane's
+    /// `DYNAMIX_OVERLAP` knob, read once at construction, so the RL comm
+    /// features (sync time, throughput) see the same savings the real
+    /// bucketed ring delivers.
+    overlap_sync: bool,
+    /// Target bytes per gradient bucket for the overlap timeline
+    /// (`DYNAMIX_BUCKET_KB`, same default as the data plane).
+    bucket_bytes: usize,
 }
 
 impl BspTrainer {
@@ -327,7 +336,17 @@ impl BspTrainer {
             xs_scratch: Vec::new(),
             ys_scratch: Vec::new(),
             offsets_scratch: Vec::new(),
+            overlap_sync: crate::config::env::overlap().unwrap_or(true),
+            bucket_bytes: crate::config::env::bucket_kb()
+                .map(|kb| kb * 1024)
+                .unwrap_or(32 << 10),
         })
+    }
+
+    /// Pin the collective pricing model (tests compare the two timelines
+    /// without touching the process environment).
+    pub fn set_overlap_sync(&mut self, on: bool) {
+        self.overlap_sync = on;
     }
 
     pub fn n_workers(&self) -> usize {
@@ -600,9 +619,23 @@ impl BspTrainer {
         // The collective only spans the machines that are present.
         let outcomes = self.cluster.compute_phase(&self.batches);
         let profiles = self.cluster.active_profiles();
-        let sync = self
-            .net
-            .sync(self.topology, &profiles, self.runtime.grad_bytes());
+        let grad_bytes = self.runtime.grad_bytes();
+        let sync = if self.overlap_sync {
+            // Pipelined pricing: buckets stream out as the straggler's
+            // backward produces them, so only the tail of the collective
+            // is exposed beyond compute. Bucket count mirrors the data
+            // plane's plan granularity (capped — a real plan never has
+            // more buckets than completion stages).
+            let nb = grad_bytes.div_ceil(self.bucket_bytes.max(1)).clamp(1, 64);
+            let straggler_s = outcomes
+                .iter()
+                .map(|o| o.compute_s)
+                .fold(0.0f64, f64::max);
+            self.net
+                .sync_overlapped(self.topology, &profiles, grad_bytes, straggler_s, nb)
+        } else {
+            self.net.sync(self.topology, &profiles, grad_bytes)
+        };
         let sim_dt = self.cluster.advance_iteration(&outcomes, sync.time_s);
         self.net.advance(sim_dt);
 

@@ -91,6 +91,26 @@ pub fn denom(mask: &[f32]) -> f32 {
 "#,
         },
         Fixture {
+            // The fold-order rule also covers the overlapped ring's bucket
+            // fold sites in `runtime/sharded/`: seeding a window and then
+            // folding rows into it is exactly the reduction whose order
+            // the parity oracle depends on.
+            rule: "fold-order",
+            path: "src/runtime/sharded/lintfix_bucket.rs",
+            bad: r#"
+pub fn fold_bucket(seed: f32, rows: &[f32]) -> f32 {
+    rows.iter().fold(seed, |acc, r| acc + r)
+}
+"#,
+            good: r#"
+pub fn fold_bucket(seed: f32, rows: &[f32]) -> f32 {
+    // PARITY: the seed enters BEFORE the row fold and rows fold in
+    // order — bucket k at ring position j must replay the fused sum.
+    rows.iter().fold(seed, |acc, r| acc + r)
+}
+"#,
+        },
+        Fixture {
             rule: "feature-detect",
             path: "src/runtime/native/lintfix3.rs",
             bad: r#"

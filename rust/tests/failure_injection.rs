@@ -344,9 +344,11 @@ fn shard_protocol_rejects_malformed_shard_steps() {
         .unwrap();
 }
 
-/// A TCP shard transport that severs its connection the moment it
-/// receives a `GradSeed` after the kill flag is raised — the leader's
-/// accumulator is then in flight, i.e. the socket dies **mid-ring**.
+/// A TCP shard transport that severs its connection the moment the
+/// traveling gradient reaches it after the kill flag is raised — on the
+/// bulk ring that is the `GradSeed`, on the overlapped ring the first
+/// `GradBucket` frame, i.e. the socket dies **mid-bucket-hop** with the
+/// leader's accumulator in flight either way.
 struct KillableTransport<T: dynamix::runtime::sharded::transport::ShardTransport> {
     inner: T,
     kill: Arc<std::sync::atomic::AtomicBool>,
@@ -365,6 +367,7 @@ impl<T: dynamix::runtime::sharded::transport::ShardTransport>
             && matches!(
                 msg,
                 dynamix::runtime::sharded::transport::ShardMsg::GradSeed { .. }
+                    | dynamix::runtime::sharded::transport::ShardMsg::GradBucket { .. }
             )
         {
             // Returning an error makes `serve` exit, dropping the TCP

@@ -1,0 +1,173 @@
+//! Bitwise-parity oracle for the **overlapped** (pipelined bucket ring)
+//! backward: `DYNAMIX_OVERLAP=on` ≡ `off` (bulk ring) ≡ native fused, to
+//! the last bit, across bucket plans (one bucket per completion stage,
+//! ~two-layer buckets, whole-model), kernel tiers × thread counts,
+//! awkward fused batches (including empty shards at n = 7), and both
+//! model families (the ResNet plan merges residual blocks across the
+//! stem/head adjacency; the VGG head bucket is never mergeable).
+//!
+//! The overlap changes the *schedule* — bucket `k` hops the ring while
+//! stage `k+1` is still folding — but not one arithmetic operation: seeds
+//! arrive before folds, stages fold in completion order, and every
+//! per-element row fold replays the fused sequence. These tests are the
+//! machine check of that claim.
+
+use dynamix::config::Optimizer;
+use dynamix::runtime::{
+    ComputeBackend, KernelTier, NativeBackend, OptState, ShardedBackend, TrainOut,
+};
+use dynamix::util::rng::Rng;
+
+/// Bucket-plan targets swept by the oracle: 0 = one bucket per completion
+/// stage (finest), 40 KiB ≈ two dense layers per bucket, 1 GiB = the
+/// whole-model single bucket (the degenerate plan that reduces the
+/// pipeline to a bulk ring with bucket framing).
+const PLANS: &[usize] = &[0, 40 << 10, 1 << 30];
+
+/// Awkward valid-batch ladder (as in `sharded_parity`): < 7 rows leaves
+/// empty shards at n = 7, 32 is exactly a bucket, 103/61 exercise live
+/// padding rows, 7 gives single-example shards.
+const BATCHES: &[usize] = &[5, 32, 103, 61, 7];
+
+fn batch(bucket: usize, fd: usize, n_valid: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; bucket * fd];
+    let mut y = vec![0i32; bucket];
+    let mut mask = vec![0.0f32; bucket];
+    for r in 0..n_valid {
+        for v in &mut x[r * fd..(r + 1) * fd] {
+            *v = rng.normal() as f32;
+        }
+        y[r] = rng.below(10) as i32;
+        mask[r] = 1.0;
+    }
+    (x, y, mask)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Multi-step train sequence + one eval, reduced to comparable bits.
+fn run_sequence(
+    b: &dyn ComputeBackend,
+    model: &str,
+    valid_batches: &[usize],
+) -> (Vec<(u32, u32, u32, Vec<u32>)>, Vec<u32>, Vec<u32>) {
+    let fd = b.schema().feature_dim;
+    let mut state = OptState::new(b.init_params(model, 0).unwrap(), Optimizer::Adam);
+    let mut steps = Vec::new();
+    let mut out = TrainOut::default();
+    for (i, &nv) in valid_batches.iter().enumerate() {
+        let bucket = b.schema().bucket_for(nv).unwrap();
+        let (x, y, mask) = batch(bucket, fd, nv, 4_400 + i as u64);
+        b.train_step_into(model, Optimizer::Adam, bucket, &mut state, &x, &y, &mask, 0.002, &mut out)
+            .unwrap();
+        steps.push((
+            out.loss.to_bits(),
+            out.acc.to_bits(),
+            out.grad_l2.to_bits(),
+            bits(&out.correct),
+        ));
+    }
+    (steps, bits(&state.params), bits(&state.v))
+}
+
+#[test]
+fn overlapped_equals_bulk_equals_native_across_bucket_plans() {
+    for model in ["vgg11_mini", "resnet34_mini"] {
+        let native = NativeBackend::with_threads(1);
+        let want = run_sequence(&native, model, BATCHES);
+        let bulk = ShardedBackend::loopback_with_threads(4, 1).with_overlap(false, 0);
+        assert_eq!(
+            run_sequence(&bulk, model, BATCHES),
+            want,
+            "{model}: bulk ring diverged from native"
+        );
+        for &target in PLANS {
+            for n in [2usize, 4, 7] {
+                let overlapped =
+                    ShardedBackend::loopback_with_threads(n, 1).with_overlap(true, target);
+                assert_eq!(
+                    run_sequence(&overlapped, model, BATCHES),
+                    want,
+                    "{model}: overlapped ring (n={n}, bucket_bytes={target}) diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_parity_holds_per_kernel_tier_and_thread_count() {
+    for tier in KernelTier::available() {
+        for threads in [1usize, 4] {
+            let native = NativeBackend::with_kernel(threads, tier);
+            let want = run_sequence(&native, "vgg11_mini", &[5, 32, 103]);
+            let overlapped = ShardedBackend::loopback_with_kernel(4, threads, tier)
+                .with_overlap(true, 40 << 10);
+            assert_eq!(
+                run_sequence(&overlapped, "vgg11_mini", &[5, 32, 103]),
+                want,
+                "overlapped ring ({tier:?}, threads={threads}) diverged from native"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_survives_preemption_mid_run() {
+    // Membership churn under the pipelined ring: drop a shard, step,
+    // revive, step — every output stays bit-identical to native. The
+    // surviving ring is shorter but folds the identical row sequence.
+    let native = NativeBackend::with_threads(1);
+    let sharded = ShardedBackend::loopback_with_threads(4, 1).with_overlap(true, 0);
+    let fd = native.schema().feature_dim;
+    let mut ns = OptState::new(native.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut ss = OptState::new(sharded.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut no = TrainOut::default();
+    let mut so = TrainOut::default();
+    let plan: &[(usize, Option<(usize, bool)>)] = &[
+        (96, None),
+        (96, Some((1, false))),
+        (103, None),
+        (103, Some((1, true))),
+        (64, None),
+    ];
+    for (i, &(nv, membership)) in plan.iter().enumerate() {
+        if let Some((shard, active)) = membership {
+            assert!(sharded.set_shard_active(shard, active));
+        }
+        let bucket = native.schema().bucket_for(nv).unwrap();
+        let (x, y, mask) = batch(bucket, fd, nv, 8_800 + i as u64);
+        native
+            .train_step_into("vgg11_mini", Optimizer::Sgd, bucket, &mut ns, &x, &y, &mask, 0.05, &mut no)
+            .unwrap();
+        sharded
+            .train_step_into("vgg11_mini", Optimizer::Sgd, bucket, &mut ss, &x, &y, &mask, 0.05, &mut so)
+            .unwrap();
+        assert_eq!(no.loss.to_bits(), so.loss.to_bits(), "step {i}: loss diverged");
+        assert_eq!(bits(&ns.params), bits(&ss.params), "step {i}: params diverged");
+    }
+}
+
+#[test]
+fn single_shard_and_eval_steps_bypass_the_pipeline() {
+    // n = 1 has no ring to pipeline; eval steps never reduce a gradient.
+    // Both must work unchanged with overlap enabled.
+    let native = NativeBackend::with_threads(1);
+    let sharded = ShardedBackend::loopback_with_threads(1, 1).with_overlap(true, 0);
+    let want = run_sequence(&native, "vgg11_mini", &[32, 7]);
+    assert_eq!(
+        run_sequence(&sharded, "vgg11_mini", &[32, 7]),
+        want,
+        "n=1 with overlap enabled diverged"
+    );
+    let fd = native.schema().feature_dim;
+    let params = native.init_params("vgg11_mini", 0).unwrap();
+    let (x, y, mask) = batch(96, fd, 96, 31);
+    let multi = ShardedBackend::loopback_with_threads(3, 1).with_overlap(true, 0);
+    let (nl, na) = native.eval_step("vgg11_mini", &params, &x, &y, &mask).unwrap();
+    let (sl, sa) = multi.eval_step("vgg11_mini", &params, &x, &y, &mask).unwrap();
+    assert_eq!((nl.to_bits(), na.to_bits()), (sl.to_bits(), sa.to_bits()));
+}

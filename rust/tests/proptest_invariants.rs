@@ -251,7 +251,7 @@ fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
 /// A random message spanning every wire variant — control plane and the
 /// shard-gradient data plane, including both Option branches of ShardStep.
 fn random_wire_msg(rng: &mut Rng) -> Msg {
-    match rng.below(12) {
+    match rng.below(14) {
         0 => Msg::Register { worker: rng.next_u64() as u32, max_batch: rng.next_u64() as u32 },
         1 => Msg::Welcome {
             worker: rng.next_u64() as u32,
@@ -309,9 +309,19 @@ fn random_wire_msg(rng: &mut Rng) -> Msg {
             acc: rng.uniform() as f32,
             grad: rand_f32s(rng, 48),
         },
-        _ => Msg::ShardErr {
+        11 => Msg::ShardErr {
             seq: rng.next_u64(),
             msg: format!("err-{}-\"quoted\"", rng.below(1000)),
+        },
+        12 => Msg::ShardGradBucket {
+            seq: rng.next_u64(),
+            bucket: rng.below(16) as u32,
+            offset: rng.next_u64() % 100_000,
+            grad: rand_f32s(rng, 48),
+        },
+        _ => Msg::ShardBucketFin {
+            seq: rng.next_u64(),
+            buckets: rng.below(64) as u32,
         },
     }
 }
