@@ -1,0 +1,109 @@
+//! `zero/bytes-per-step` — **modeled payload accounting, not wall-clock**:
+//! steady-state wire bytes on the gradient exchange's critical path, and
+//! per-shard resident parameter+optimizer floats, for the full-replica
+//! dense ring vs the ZeRO reduce-scatter plane under each slice codec.
+//!
+//!     cargo bench --bench zero
+//!
+//! Accounting (the same one `ModelRuntime::wire_bytes` feeds the netsim):
+//! every figure is an analytic function of the full-size parameter count
+//! `P` (paper models, DESIGN.md substitution table) through the *real*
+//! [`WireMode::payload_bytes`] codec arithmetic — framing excluded, so
+//! the numbers are exact and identical on every re-run (the regression
+//! gate sees any change as a codec/accounting change, not noise).
+//!
+//! * **replica-dense**: the chained ring serializes the full accumulator
+//!   through N−1 hops, then broadcasts full params — critical-path bytes
+//!   `2·(N−1)·4P`.
+//! * **zero-dense**: reduce-scatter + all-gather pipeline one slice of
+//!   `ceil(P/N)` params per hop-step — `2·(N−1)·4·ceil(P/N)`, an
+//!   `(N−1)/N` reduction (exact up to the ceil).
+//! * **zero-topk / zero-q8**: the same schedule with the compressed
+//!   per-slice payload (topk: 8 bytes per kept element at 1/4 density;
+//!   q8: 1 byte per element + a 4-byte scale) — strictly fewer bytes
+//!   than zero-dense at every N.
+//!
+//! Resident floats per shard: replica keeps `3P` (params + Adam m + v);
+//! zero keeps the full `P` param replica for compute but only the owned
+//! `ceil(P/N)`-sized m/v slices — `P + 2·ceil(P/N)`.
+//!
+//! The recorded `*_s` fields carry BYTES (wire rows) or FLOAT COUNTS
+//! (resident rows), not seconds — `bench_compare` only needs a stable
+//! scalar per name.
+
+use dynamix::comm::wire::WireMode;
+use dynamix::trainer::full_size_param_count;
+use dynamix::util::bench::{BenchResult, BenchSession};
+
+/// One recorded scalar (bytes or float count) under a stable name.
+fn push_value(s: &mut BenchSession, name: &str, v: f64) {
+    s.push(&BenchResult {
+        name: name.to_string(),
+        mean_s: v,
+        std_s: 0.0,
+        min_s: v,
+        p10_s: v,
+        p50_s: v,
+        p90_s: v,
+        n: 1,
+    });
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = "vgg16_mini";
+    let p = full_size_param_count(model);
+    let mut session = BenchSession::new("zero/bytes-per-step");
+    session.set_note(
+        "modeled payload accounting (values are bytes / resident f32 counts, NOT \
+         seconds), VGG16 full-size gradient: critical-path wire bytes per step \
+         and per-shard resident floats, replica ring vs zero reduce-scatter per \
+         slice codec; deterministic (exact arithmetic, zero-noise)",
+    );
+    println!("== {model}: P = {p} full-size params ==");
+    for n in [2usize, 4, 8, 16] {
+        let hops = 2 * (n - 1);
+        let slice = p.div_ceil(n);
+        let replica = hops * WireMode::Dense.payload_bytes(p);
+        let zero_dense = hops * WireMode::Dense.payload_bytes(slice);
+        let zero_topk = hops * WireMode::TopK.payload_bytes(slice);
+        let zero_q8 = hops * WireMode::Q8.payload_bytes(slice);
+        let reduction = (replica - zero_dense) as f64 / replica as f64;
+        println!(
+            "  n={n:>2}: replica {replica:>13} B  zero/dense {zero_dense:>12} B \
+             ({:.4}% cut)  topk {zero_topk:>11} B  q8 {zero_q8:>11} B",
+            100.0 * reduction
+        );
+        // The tentpole's headline claim, in executable form: the zero
+        // plane cuts wire bytes by (N−1)/N (exactly, up to the ceil on
+        // the slice size), and every compressed codec cuts further.
+        assert!(
+            reduction >= (n - 1) as f64 / n as f64 - 1e-6,
+            "n={n}: reduce-scatter reduction {reduction} below (N-1)/N"
+        );
+        assert!(
+            zero_topk < zero_dense && zero_q8 < zero_dense,
+            "n={n}: compressed codec not strictly cheaper ({zero_topk}/{zero_q8} vs {zero_dense})"
+        );
+        push_value(&mut session, &format!("n{n:02}/wire/replica-dense"), replica as f64);
+        push_value(&mut session, &format!("n{n:02}/wire/zero-dense"), zero_dense as f64);
+        push_value(&mut session, &format!("n{n:02}/wire/zero-topk"), zero_topk as f64);
+        push_value(&mut session, &format!("n{n:02}/wire/zero-q8"), zero_q8 as f64);
+
+        let resident_replica = 3 * p;
+        let resident_zero = p + 2 * slice;
+        assert!(resident_zero < resident_replica, "n={n}: zero plane grew resident state");
+        push_value(
+            &mut session,
+            &format!("n{n:02}/resident/replica-floats"),
+            resident_replica as f64,
+        );
+        push_value(
+            &mut session,
+            &format!("n{n:02}/resident/zero-floats"),
+            resident_zero as f64,
+        );
+    }
+    let path = session.flush()?;
+    println!("recorded run -> {}", path.display());
+    Ok(())
+}

@@ -7,13 +7,23 @@
 //! 1. the leader broadcasts `ShardStep { denom }` (the global batch's mask
 //!    sum); every worker draws its own shard rows at its current batch
 //!    size and runs the forward half, reporting per-row loss pieces;
-//! 2. the gradient accumulator rings through the workers in id order
-//!    (`ShardGradSeed`/`ShardGradOut`) — the same chained deterministic
-//!    reduction the loopback `ShardedBackend` uses, relayed by the leader;
-//! 3. the leader broadcasts the reduced gradient (`ShardGradFin`); every
-//!    worker applies the identical optimizer update to its parameter
-//!    replica, so replicas stay bit-identical without ever shipping
-//!    parameters.
+//! 2. the gradient accumulator rings through the workers in id order —
+//!    the same chained deterministic reduction the loopback
+//!    `ShardedBackend` uses, relayed by the leader. Under the default
+//!    **zero plane** it travels window-by-window as v4 slice frames
+//!    (compressible via `DYNAMIX_WIRE=dense|topk|q8`); under
+//!    `DYNAMIX_PLANE=replica` it travels whole
+//!    (`ShardGradSeed`/`ShardGradOut`);
+//! 3. **replica plane**: the leader broadcasts the reduced gradient
+//!    (`ShardGradFin`) and every worker applies the identical optimizer
+//!    update to its full parameter replica. **Zero plane**: each worker
+//!    owns one contiguous bucket-aligned parameter slice
+//!    (`param_partition`) and holds optimizer state for ONLY that slice —
+//!    `O(P/N)` resident floats — so the leader scatters each owner its
+//!    reduced slice, the owner applies `apply_*_slice` locally and
+//!    returns the updated params (`ShardParamSlice`), and the leader
+//!    all-gathers the slices back out; an empty-gradient `ShardGradFin`
+//!    then carries loss/acc as the step barrier.
 //!
 //! The control plane is unchanged: every `k` iterations workers report
 //! their window state, the leader's PPO arbitrator scores all workers in
@@ -22,6 +32,7 @@
 //! Worker-measured wall times are real, preserving the §VI-H overhead
 //! story. The leader writes a `RunRecord` under `runs/distributed/`.
 
+use crate::comm::wire::{self, WireMode};
 use crate::comm::{Msg, TcpTransport, Transport};
 use crate::config::{presets, Optimizer, Scale};
 use crate::metrics::{mean_std_usize, RunRecord, TracePoint};
@@ -31,7 +42,8 @@ use crate::rl::reward::RewardParams;
 use crate::rl::state::{GlobalState, StateBuilder};
 use crate::runtime::default_backend;
 use crate::runtime::native::model::{
-    apply_adam, apply_sgd, fold_masked_ce_partial, normalized_grad_stats,
+    apply_adam, apply_adam_slice, apply_sgd, apply_sgd_slice, fold_masked_ce_partial,
+    normalized_grad_stats,
 };
 use crate::runtime::native::{NativeBackend, ShardCtx};
 use crate::runtime::OptState;
@@ -39,6 +51,82 @@ use crate::sysmetrics::{SysSample, WindowAggregator};
 use crate::util::json::Json;
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
+
+/// Bucket target shared by the deployed reduce-scatter's travel plan and
+/// its ownership partition. Leader and workers derive both independently
+/// from the model layout — pure arithmetic, never transmitted — so the
+/// target must be one compile-time constant on both sides.
+const ZERO_BUCKET_BYTES: usize = 32 << 10;
+
+/// `DYNAMIX_PLANE` for the deployed data plane: zero (reduce-scatter)
+/// unless `replica` is requested. Read once at leader/worker start.
+fn zero_plane() -> bool {
+    crate::config::env::plane().as_deref() != Some("replica")
+}
+
+/// Wrap one traveling gradient window in the configured slice frame.
+fn encode_slice_msg(mode: WireMode, seq: u64, slice: u32, offset: usize, win: Vec<f32>) -> Msg {
+    match mode {
+        WireMode::Dense => Msg::ShardGradSlice { seq, slice, offset: offset as u64, grad: win },
+        WireMode::TopK => {
+            let len = win.len() as u64;
+            let (idx, val) = wire::topk_encode(&win);
+            Msg::ShardGradTopK { seq, slice, offset: offset as u64, len, idx, val }
+        }
+        WireMode::Q8 => {
+            let (scale, q) = wire::q8_encode(&win);
+            Msg::ShardGradQ8 { seq, slice, offset: offset as u64, scale, q }
+        }
+    }
+}
+
+/// Unpack any slice frame to `(seq, slice, offset, dense window)`.
+fn decode_slice_msg(msg: Msg) -> anyhow::Result<(u64, u32, usize, Vec<f32>)> {
+    match msg {
+        Msg::ShardGradSlice { seq, slice, offset, grad } => {
+            Ok((seq, slice, offset as usize, grad))
+        }
+        Msg::ShardGradTopK { seq, slice, offset, len, idx, val } => {
+            let dense = usize::try_from(len)
+                .map_err(|_| anyhow::anyhow!("topk dense length {len} overflows"))?;
+            Ok((seq, slice, offset as usize, wire::topk_decode(dense, &idx, &val)?))
+        }
+        Msg::ShardGradQ8 { seq, slice, offset, scale, q } => {
+            Ok((seq, slice, offset as usize, wire::q8_decode(scale, &q)?))
+        }
+        other => anyhow::bail!("expected a gradient slice frame, got {other:?}"),
+    }
+}
+
+/// Leader-side receive of worker `w`'s reply for ring hop `slice` of step
+/// `seq`: the frame kind must match the configured wire mode (a worker
+/// answering dense to a q8 hop is a protocol error, not a fallback).
+fn recv_slice_frame(
+    t: &mut TcpTransport,
+    w: usize,
+    seq: u64,
+    slice: u32,
+    mode: WireMode,
+) -> anyhow::Result<Msg> {
+    let frame = t.recv()?;
+    let (kind, rs, rb) = match &frame {
+        Msg::ShardGradSlice { seq, slice, .. } => (WireMode::Dense, *seq, *slice),
+        Msg::ShardGradTopK { seq, slice, .. } => (WireMode::TopK, *seq, *slice),
+        Msg::ShardGradQ8 { seq, slice, .. } => (WireMode::Q8, *seq, *slice),
+        other => anyhow::bail!("worker {w}: expected slice {slice} of seq {seq}, got {other:?}"),
+    };
+    anyhow::ensure!(
+        kind == mode,
+        "worker {w}: slice {slice} of seq {seq} replied in wire mode {} != configured {}",
+        kind.label(),
+        mode.label()
+    );
+    anyhow::ensure!(
+        rs == seq && rb == slice,
+        "worker {w}: slice reply (seq {rs}, slice {rb}) != expected (seq {seq}, slice {slice})"
+    );
+    Ok(frame)
+}
 
 /// Run the leader: accept the preset's worker count, drive
 /// `steps_per_episode` decision cycles, broadcast shutdown.
@@ -61,6 +149,17 @@ pub fn serve_n(
     cfg.steps_per_episode = cycles;
     let backend = default_backend()?;
     let pc = backend.schema().model(&cfg.train.model)?.param_count;
+    // Exchange plane + slice codec for the deployed data plane, read once
+    // at startup (leader and workers must agree via the same env).
+    let zero = zero_plane();
+    let wire_mode = crate::config::env::wire_mode().unwrap_or(WireMode::Dense);
+    // Layout oracle for the reduce-scatter travel plan and ownership
+    // partition: pure arithmetic on the model definition, derived
+    // identically worker-side and never transmitted.
+    let layout = NativeBackend::with_threads(1);
+    let plan = layout.bucket_plan(&cfg.train.model, ZERO_BUCKET_BYTES)?;
+    let part =
+        layout.param_partition(&cfg.train.model, &vec![true; n_workers], ZERO_BUCKET_BYTES)?;
     let mut agent = PpoAgent::new(backend, cfg.rl.clone(), cfg.train.seed)?;
     let rule = BatchRule {
         min: cfg.batch.min,
@@ -135,24 +234,109 @@ pub fn serve_n(
                     other => anyhow::bail!("worker {w}: expected ShardFwd, got {other:?}"),
                 }
             }
-            // Ring: the accumulator visits workers in id order.
-            let mut grad = vec![0.0f32; pc];
-            for (w, t) in transports.iter_mut().enumerate() {
-                t.send(&Msg::ShardGradSeed { seq, grad })?;
-                grad = match t.recv()? {
-                    Msg::ShardGradOut { seq: rs, grad } => {
-                        anyhow::ensure!(rs == seq, "worker {w}: GradOut seq {rs} != {seq}");
-                        grad
-                    }
-                    other => anyhow::bail!("worker {w}: expected ShardGradOut, got {other:?}"),
-                };
-            }
             let loss = (loss_sum / denom as f64) as f32;
             let acc = (acc_sum / denom as f64) as f32;
             (last_loss, last_acc) = (loss as f64, acc as f64);
-            let fin = Msg::ShardGradFin { seq, loss, acc, grad };
-            for t in transports.iter_mut() {
-                t.send(&fin)?;
+            if zero {
+                // Reduce-scatter: each travel-plan window rings through
+                // the workers in id order as a slice frame, compressed
+                // replies relayed verbatim; only the final hop decodes.
+                let mut grad = vec![0.0f32; pc];
+                for (b, win) in plan.iter().enumerate() {
+                    let mut frame = encode_slice_msg(
+                        wire_mode,
+                        seq,
+                        b as u32,
+                        win.offset,
+                        vec![0.0f32; win.len],
+                    );
+                    for (w, t) in transports.iter_mut().enumerate() {
+                        t.send(&frame)?;
+                        frame = recv_slice_frame(t, w, seq, b as u32, wire_mode)?;
+                    }
+                    let (_, _, off, dense) = decode_slice_msg(frame)?;
+                    anyhow::ensure!(
+                        off == win.offset && dense.len() == win.len,
+                        "slice {b} of seq {seq} window [{off}, {}) != planned [{}, {})",
+                        off + dense.len(),
+                        win.offset,
+                        win.offset + win.len
+                    );
+                    grad[off..off + dense.len()].copy_from_slice(&dense);
+                }
+                // Scatter each owner its reduced slice (param legs travel
+                // dense: compression is a gradient-wire trade only).
+                for (w, t) in transports.iter_mut().enumerate() {
+                    let r = part[w].clone();
+                    t.send(&Msg::ShardGradSlice {
+                        seq,
+                        slice: w as u32,
+                        offset: r.start as u64,
+                        grad: grad[r].to_vec(),
+                    })?;
+                }
+                // Gather every owner's updated params...
+                let mut slices: Vec<Vec<f32>> = vec![Vec::new(); transports.len()];
+                for (w, t) in transports.iter_mut().enumerate() {
+                    match t.recv()? {
+                        Msg::ShardParamSlice { seq: rs, slice, offset, params } => {
+                            anyhow::ensure!(
+                                rs == seq
+                                    && slice as usize == w
+                                    && offset as usize == part[w].start
+                                    && params.len() == part[w].len(),
+                                "worker {w}: param slice (seq {rs}, slice {slice}, \
+                                 [{offset}, +{})) != owned [{}, {})",
+                                params.len(),
+                                part[w].start,
+                                part[w].end
+                            );
+                            slices[w] = params;
+                        }
+                        other => {
+                            anyhow::bail!("worker {w}: expected ShardParamSlice, got {other:?}")
+                        }
+                    }
+                }
+                // ...and all-gather them back out (each worker already has
+                // its own slice).
+                for (w, t) in transports.iter_mut().enumerate() {
+                    for (u, s) in slices.iter().enumerate() {
+                        if u != w && !s.is_empty() {
+                            t.send(&Msg::ShardParamSlice {
+                                seq,
+                                slice: u as u32,
+                                offset: part[u].start as u64,
+                                params: s.clone(),
+                            })?;
+                        }
+                    }
+                }
+                // Step barrier + metrics; the empty gradient tells workers
+                // the update already applied slice-wise.
+                let fin = Msg::ShardGradFin { seq, loss, acc, grad: Vec::new() };
+                for t in transports.iter_mut() {
+                    t.send(&fin)?;
+                }
+            } else {
+                // Replica ring: the whole accumulator visits workers in id
+                // order, then the reduced gradient broadcasts for the
+                // full-replica optimizer apply.
+                let mut grad = vec![0.0f32; pc];
+                for (w, t) in transports.iter_mut().enumerate() {
+                    t.send(&Msg::ShardGradSeed { seq, grad })?;
+                    grad = match t.recv()? {
+                        Msg::ShardGradOut { seq: rs, grad } => {
+                            anyhow::ensure!(rs == seq, "worker {w}: GradOut seq {rs} != {seq}");
+                            grad
+                        }
+                        other => anyhow::bail!("worker {w}: expected ShardGradOut, got {other:?}"),
+                    };
+                }
+                let fin = Msg::ShardGradFin { seq, loss, acc, grad };
+                for t in transports.iter_mut() {
+                    t.send(&fin)?;
+                }
             }
         }
 
@@ -209,7 +393,8 @@ pub fn serve_n(
         crate::jobj! {
             "mode" => "tcp",
             "shard_count" => n_workers,
-            "reduction" => "chained-ring",
+            "reduction" => if zero { "reduce-scatter" } else { "chained-ring" },
+            "wire" => wire_mode.label(),
             "proto_version" => crate::comm::PROTO_VERSION as usize,
         },
     );
@@ -232,12 +417,20 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
     let info = native.schema().model(&cfg.train.model)?.clone();
     let fd = info.feature_dim;
     let dataset = crate::data::by_name(&info.dataset, fd, cfg.train.seed)?;
-    // Parameter replica: the same seeded init on every worker; identical
-    // ShardGradFin updates keep replicas bit-identical forever after.
-    let mut state = OptState::new(
-        native.init_params(&cfg.train.model, cfg.train.seed)?,
-        cfg.train.optimizer,
-    );
+    let zero = zero_plane();
+    let wire_mode = crate::config::env::wire_mode().unwrap_or(WireMode::Dense);
+    // Parameter replica: the same seeded init on every worker. Replica
+    // plane: identical ShardGradFin updates keep replicas bit-identical,
+    // with full-vector optimizer state. Zero plane: this worker holds
+    // optimizer state for ONLY its owned slice (allocated after Welcome,
+    // O(P/N) floats) and replicas stay identical through the
+    // scatter/all-gather of updated parameter slices.
+    let init = native.init_params(&cfg.train.model, cfg.train.seed)?;
+    let mut state = if zero {
+        OptState { params: init, m: Vec::new(), v: Vec::new(), step: 0.0 }
+    } else {
+        OptState::new(init, cfg.train.optimizer)
+    };
     let lr = cfg.train.lr;
 
     let mut t = TcpTransport::new(TcpStream::connect(addr)?)?;
@@ -263,6 +456,25 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
         dataset.train_size,
         cfg.train.seed,
     );
+    // Zero plane: the owned parameter slice (same layout arithmetic as
+    // the leader — `param_partition` is derived, never transmitted) and
+    // its slice-local optimizer state.
+    let rank = worker_id as usize % n_workers;
+    let my = if zero {
+        native.param_partition(&cfg.train.model, &vec![true; n_workers], ZERO_BUCKET_BYTES)?[rank]
+            .clone()
+    } else {
+        0..0
+    };
+    let mut slice_m = vec![0.0f32; my.len()];
+    let mut slice_v = vec![
+        0.0f32;
+        match cfg.train.optimizer {
+            Optimizer::Adam => my.len(),
+            Optimizer::Sgd => 0,
+        }
+    ];
+    let mut slice_step = 0.0f32;
 
     let builder = StateBuilder::default();
     let reward = RewardParams::default();
@@ -304,12 +516,104 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                 native.shard_backward_acc(&state.params, ctx, &mut grad)?;
                 t.send(&Msg::ShardGradOut { seq, grad })?;
             }
-            Msg::ShardGradFin { loss, grad, .. } => {
-                let (sn, sn2, _) = normalized_grad_stats(&grad);
-                match cfg.train.optimizer {
-                    Optimizer::Sgd => apply_sgd(&mut state, &grad, lr),
-                    Optimizer::Adam => apply_adam(&mut state, &grad, lr),
+            // Zero-plane ring leg: a traveling gradient window lands while
+            // a step is in flight — decode, fold this shard's rows in at
+            // the cursor, re-encode the reply in the SAME wire mode.
+            m @ (Msg::ShardGradSlice { .. }
+            | Msg::ShardGradTopK { .. }
+            | Msg::ShardGradQ8 { .. })
+                if held.is_some() =>
+            {
+                let (seq, slice, offset, dense) = decode_slice_msg(m)?;
+                let (held_seq, ctx) = held.as_mut().expect("guarded by held.is_some()");
+                anyhow::ensure!(*held_seq == seq, "slice {slice} seq {seq} != {held_seq}");
+                let mut out = Vec::with_capacity(dense.len());
+                native.shard_backward_bucket(&state.params, ctx, offset, &dense, &mut out)?;
+                t.send(&encode_slice_msg(wire_mode, seq, slice, offset, out))?;
+                if native.shard_backward_done(&held.as_ref().expect("still held").1)? {
+                    let (_, ctx) = held.take().expect("checked above");
+                    native.shard_finish(ctx)?;
                 }
+            }
+            // Zero-plane scatter leg (no step in flight): the reduced
+            // OWNED slice — apply the optimizer with the slice-local
+            // state and hand the updated params back for the all-gather.
+            Msg::ShardGradSlice { seq, slice, offset, grad } => {
+                anyhow::ensure!(
+                    zero
+                        && slice as usize == rank
+                        && offset as usize == my.start
+                        && grad.len() == my.len(),
+                    "unexpected reduced slice (slice {slice}, [{offset}, +{})) — own \
+                     [{}, {}) on the {} plane",
+                    grad.len(),
+                    my.start,
+                    my.end,
+                    if zero { "zero" } else { "replica" }
+                );
+                slice_step += 1.0;
+                match cfg.train.optimizer {
+                    Optimizer::Sgd => apply_sgd_slice(
+                        &mut state.params[my.clone()],
+                        &mut slice_m,
+                        &grad,
+                        lr,
+                    ),
+                    Optimizer::Adam => {
+                        // PARITY: one bias correction per step, computed
+                        // from the slice-local counter every owner bumps
+                        // exactly once per iteration.
+                        let step_t = slice_step as f64;
+                        apply_adam_slice(
+                            &mut state.params[my.clone()],
+                            &mut slice_m,
+                            &mut slice_v,
+                            &grad,
+                            lr,
+                            step_t,
+                        );
+                    }
+                }
+                t.send(&Msg::ShardParamSlice {
+                    seq,
+                    slice,
+                    offset,
+                    params: state.params[my.clone()].to_vec(),
+                })?;
+            }
+            // Zero-plane all-gather leg: another owner's updated slice
+            // lands in this replica.
+            Msg::ShardParamSlice { offset, params, .. } => {
+                let off = offset as usize;
+                anyhow::ensure!(
+                    off + params.len() <= state.params.len(),
+                    "param slice [{off}, +{}) overruns the replica ({} params)",
+                    params.len(),
+                    state.params.len()
+                );
+                state.params[off..off + params.len()].copy_from_slice(&params);
+            }
+            Msg::ShardGradFin { loss, grad, .. } => {
+                // An empty gradient is the zero plane's step barrier: the
+                // update already applied slice-wise, and the sigma-norm
+                // features are traded for the wire savings in the
+                // deployed demo (the loopback plane keeps them, computing
+                // stats leader-side on the assembled gradient).
+                let (sn, sn2) = if grad.is_empty() {
+                    (0.0f32, 0.0f32)
+                } else {
+                    anyhow::ensure!(
+                        !zero,
+                        "full-gradient ShardGradFin on the zero plane — leader and worker \
+                         disagree on DYNAMIX_PLANE"
+                    );
+                    let (sn, sn2, _) = normalized_grad_stats(&grad);
+                    match cfg.train.optimizer {
+                        Optimizer::Sgd => apply_sgd(&mut state, &grad, lr),
+                        Optimizer::Adam => apply_adam(&mut state, &grad, lr),
+                    }
+                    (sn, sn2)
+                };
                 window.push_iteration(
                     my_correct / my_rows.max(1) as f64,
                     loss as f64,

@@ -27,9 +27,12 @@ use wire::{Decoder, Encoder};
 /// Bumped to 2 when the shard-gradient data-plane frames landed
 /// (`ShardStep`/`ShardFwd`/`ShardGradSeed`/`ShardGradOut`/`ShardGradFin`);
 /// to 3 for the pipelined bucket frames
-/// (`ShardGradBucket`/`ShardBucketFin`). A peer speaking an older codec is
-/// rejected at decode with a version-mismatch error naming both versions.
-pub const PROTO_VERSION: u16 = 3;
+/// (`ShardGradBucket`/`ShardBucketFin`); to 4 for the ZeRO
+/// reduce-scatter / compressed-wire frames
+/// (`ShardGradSlice`/`ShardGradTopK`/`ShardGradQ8`/`ShardParamSlice`). A
+/// peer speaking an older codec is rejected at decode with a
+/// version-mismatch error naming both versions.
+pub const PROTO_VERSION: u16 = 4;
 
 /// Hard ceiling on one frame's body. Sized for the largest legitimate
 /// payload — a shard row slab at the top bucket (32768 x 128 features x
@@ -106,6 +109,25 @@ pub enum Msg {
     /// Data plane: a shard's bucketed backward completed after exactly
     /// `buckets` buckets (plan-agreement acknowledgement).
     ShardBucketFin { seq: u64, buckets: u32 },
+    /// Data plane (v4, ZeRO plane): one dense traveling gradient slice —
+    /// the window `[offset, offset + grad.len())` of the flat gradient,
+    /// hop `slice` of the step's partition-aligned plan. Same schedule as
+    /// `ShardGradBucket`; a distinct tag so a replica/ZeRO plane mismatch
+    /// fails loudly instead of folding the wrong protocol.
+    ShardGradSlice { seq: u64, slice: u32, offset: u64, grad: Vec<f32> },
+    /// Data plane (v4): a traveling slice under `DYNAMIX_WIRE=topk` —
+    /// `len` is the dense window length, `idx`/`val` the kept elements in
+    /// strictly increasing index order (`wire::topk_encode`). The decoder
+    /// validates `len`, counts and monotonicity BEFORE any dense
+    /// allocation.
+    ShardGradTopK { seq: u64, slice: u32, offset: u64, len: u64, idx: Vec<u32>, val: Vec<f32> },
+    /// Data plane (v4): a traveling slice under `DYNAMIX_WIRE=q8` —
+    /// symmetric int8 with a per-window power-of-two f32 `scale`
+    /// (`wire::q8_encode`); the dense length is `q.len()`.
+    ShardGradQ8 { seq: u64, slice: u32, offset: u64, scale: f32, q: Vec<i8> },
+    /// Data plane (v4): an owner's updated parameter slice, the
+    /// all-gather leg of the reduce-scatter plane.
+    ShardParamSlice { seq: u64, slice: u32, offset: u64, params: Vec<f32> },
 }
 
 const TAG_REGISTER: u8 = 1;
@@ -122,6 +144,10 @@ const TAG_SHARD_GRAD_FIN: u8 = 11;
 const TAG_SHARD_ERR: u8 = 12;
 const TAG_SHARD_GRAD_BUCKET: u8 = 13;
 const TAG_SHARD_BUCKET_FIN: u8 = 14;
+const TAG_SHARD_GRAD_SLICE: u8 = 15;
+const TAG_SHARD_GRAD_TOPK: u8 = 16;
+const TAG_SHARD_GRAD_Q8: u8 = 17;
+const TAG_SHARD_PARAM_SLICE: u8 = 18;
 
 impl Msg {
     /// Encode to a length-prefixed frame.
@@ -230,6 +256,38 @@ impl Msg {
                 e.u64(*seq);
                 e.u32(*buckets);
             }
+            Msg::ShardGradSlice { seq, slice, offset, grad } => {
+                e.u8(TAG_SHARD_GRAD_SLICE);
+                e.u64(*seq);
+                e.u32(*slice);
+                e.u64(*offset);
+                e.f32s(grad);
+            }
+            Msg::ShardGradTopK { seq, slice, offset, len, idx, val } => {
+                e.u8(TAG_SHARD_GRAD_TOPK);
+                e.u64(*seq);
+                e.u32(*slice);
+                e.u64(*offset);
+                e.u64(*len);
+                e.u32s(idx);
+                e.f32s(val);
+            }
+            Msg::ShardGradQ8 { seq, slice, offset, scale, q } => {
+                e.u8(TAG_SHARD_GRAD_Q8);
+                e.u64(*seq);
+                e.u32(*slice);
+                e.u64(*offset);
+                e.f32(*scale);
+                let raw: Vec<u8> = q.iter().map(|&v| v as u8).collect();
+                e.bytes(&raw);
+            }
+            Msg::ShardParamSlice { seq, slice, offset, params } => {
+                e.u8(TAG_SHARD_PARAM_SLICE);
+                e.u64(*seq);
+                e.u32(*slice);
+                e.u64(*offset);
+                e.f32s(params);
+            }
         }
         e.frame()
     }
@@ -311,6 +369,42 @@ impl Msg {
                 grad: d.f32s()?,
             },
             TAG_SHARD_BUCKET_FIN => Msg::ShardBucketFin { seq: d.u64()?, buckets: d.u32()? },
+            TAG_SHARD_GRAD_SLICE => Msg::ShardGradSlice {
+                seq: d.u64()?,
+                slice: d.u32()?,
+                offset: d.u64()?,
+                grad: d.f32s()?,
+            },
+            TAG_SHARD_GRAD_TOPK => {
+                let (seq, slice, offset) = (d.u64()?, d.u32()?, d.u64()?);
+                let len = d.u64()?;
+                let idx = d.u32s()?;
+                let val = d.f32s()?;
+                // Validate the DECLARED dense length (and the index/count
+                // invariants) at the protocol boundary, before any decoder
+                // downstream allocates a dense window from it. The frame's
+                // own arrays are already bounds-checked against the body.
+                let dense: usize = usize::try_from(len)
+                    .map_err(|_| anyhow::anyhow!("topk dense length {len} overflows"))?;
+                wire::topk_validate(dense, &idx, &val)?;
+                Msg::ShardGradTopK { seq, slice, offset, len, idx, val }
+            }
+            TAG_SHARD_GRAD_Q8 => {
+                let (seq, slice, offset) = (d.u64()?, d.u32()?, d.u64()?);
+                let scale = d.f32()?;
+                anyhow::ensure!(
+                    scale.is_finite() && scale >= 0.0,
+                    "q8 scale must be finite and non-negative"
+                );
+                let q: Vec<i8> = d.bytes()?.iter().map(|&b| b as i8).collect();
+                Msg::ShardGradQ8 { seq, slice, offset, scale, q }
+            }
+            TAG_SHARD_PARAM_SLICE => Msg::ShardParamSlice {
+                seq: d.u64()?,
+                slice: d.u32()?,
+                offset: d.u64()?,
+                params: d.f32s()?,
+            },
             t => anyhow::bail!("unknown message tag {t}"),
         };
         d.finish()?;
@@ -397,6 +491,9 @@ impl Transport for ChannelTransport {
         let frame = self.rx.recv().map_err(|_| anyhow::anyhow!("peer closed"))?;
         anyhow::ensure!(frame.len() >= 4, "short frame");
         let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+        // Same ceiling as TCP: in-process peers get no oversize privilege,
+        // so a frame that would be rejected on sockets never hides here.
+        anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
         anyhow::ensure!(frame.len() == len + 4, "frame length mismatch");
         Msg::decode(&frame[4..])
     }
@@ -440,6 +537,23 @@ mod tests {
             Msg::ShardGradBucket { seq: 9, bucket: 2, offset: 650, grad: vec![0.125; 4] },
             Msg::ShardGradBucket { seq: 9, bucket: 0, offset: 0, grad: vec![] },
             Msg::ShardBucketFin { seq: 9, buckets: 3 },
+            Msg::ShardGradSlice { seq: 11, slice: 1, offset: 640, grad: vec![-0.5; 6] },
+            Msg::ShardGradTopK {
+                seq: 11,
+                slice: 2,
+                offset: 64,
+                len: 8,
+                idx: vec![1, 5],
+                val: vec![0.75, -1.5],
+            },
+            Msg::ShardGradQ8 {
+                seq: 11,
+                slice: 3,
+                offset: 0,
+                scale: 0.015625,
+                q: vec![-127, 0, 64, 127],
+            },
+            Msg::ShardParamSlice { seq: 11, slice: 0, offset: 0, params: vec![0.25; 5] },
             // Shutdown stays LAST: the TCP roundtrip test's echo server
             // exits on it.
             Msg::Shutdown,
@@ -472,6 +586,68 @@ mod tests {
         let mut frame = Msg::Barrier { cycle: 1 }.encode();
         frame.push(0);
         assert!(Msg::decode(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn topk_frame_with_forged_dense_length_rejected_before_alloc() {
+        // The compressed frame is tiny, but its DECLARED dense length
+        // claims gigabytes: decode must reject at the protocol boundary,
+        // never letting a downstream dense-window allocation see it.
+        for forged in [u64::MAX, (MAX_FRAME as u64 / 4) + 1, u64::from(u32::MAX)] {
+            let mut e = Encoder::new();
+            e.u16(PROTO_VERSION);
+            e.u8(TAG_SHARD_GRAD_TOPK);
+            e.u64(9); // seq
+            e.u32(0); // slice
+            e.u64(0); // offset
+            e.u64(forged);
+            e.u32s(&[1, 5]);
+            e.f32s(&[0.5, -0.5]);
+            let frame = e.frame();
+            let err = Msg::decode(&frame[4..]).unwrap_err().to_string();
+            assert!(
+                err.contains("frame ceiling") || err.contains("overflows"),
+                "forged len {forged} escaped: {err}"
+            );
+        }
+        // Count and monotonicity forgeries die at the same boundary.
+        let good = Msg::ShardGradTopK {
+            seq: 9,
+            slice: 0,
+            offset: 0,
+            len: 8,
+            idx: vec![1, 5],
+            val: vec![0.5, -0.5],
+        };
+        assert!(Msg::decode(&good.encode()[4..]).is_ok());
+        for (idx, val) in [
+            (vec![5u32, 1], vec![0.5f32, -0.5]), // not increasing
+            (vec![1, 9], vec![0.5, -0.5]),       // out of range
+            (vec![1], vec![0.5]),                // wrong k for len 8
+        ] {
+            let bad = Msg::ShardGradTopK { seq: 9, slice: 0, offset: 0, len: 8, idx, val };
+            assert!(Msg::decode(&bad.encode()[4..]).is_err());
+        }
+    }
+
+    #[test]
+    fn q8_frame_with_hostile_scale_rejected() {
+        for scale in [f32::NAN, f32::INFINITY, -0.25] {
+            let bad = Msg::ShardGradQ8 { seq: 9, slice: 0, offset: 0, scale, q: vec![1, -1] };
+            assert!(Msg::decode(&bad.encode()[4..]).is_err(), "scale {scale} accepted");
+        }
+    }
+
+    #[test]
+    fn channel_transport_enforces_the_frame_ceiling() {
+        // A forged giant length prefix on the in-process transport errors
+        // exactly like TCP — before any body processing.
+        let (a, mut b) = channel_pair();
+        let mut raw = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        raw.extend_from_slice(&[0u8; 8]);
+        a.tx.send(raw).unwrap();
+        let err = b.recv().unwrap_err().to_string();
+        assert!(err.contains("frame too large"), "{err}");
     }
 
     #[test]

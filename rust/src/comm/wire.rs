@@ -61,6 +61,15 @@ impl Encoder {
         }
     }
 
+    /// `[count:u32][count x u32 LE]` — top-k index lists.
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
     /// UTF-8 string as length-prefixed bytes.
     pub fn str(&mut self, s: &str) {
         self.bytes(s.as_bytes());
@@ -165,6 +174,20 @@ impl<'a> Decoder<'a> {
             .collect())
     }
 
+    /// Counterpart of [`Encoder::u32s`]. Bounds-checked before any
+    /// allocation, like [`Decoder::f32s`].
+    pub fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("u32 array length overflow"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
     /// Counterpart of [`Encoder::str`].
     pub fn str(&mut self) -> anyhow::Result<String> {
         let b = self.bytes()?;
@@ -178,6 +201,165 @@ impl<'a> Decoder<'a> {
         anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes in frame");
         Ok(())
     }
+}
+
+/// Gradient-slice payload codec (`DYNAMIX_WIRE`): how a traveling
+/// window's floats are packed into a v4 hop frame.
+///
+/// The contract is **determinism vs parity**: `Dense` is bit-parity
+/// with the fused native fold; `TopK`/`Q8` are lossy vs dense, but
+/// every encode/decode here is a pure function of the input bits, so
+/// two runs with the same seeds produce identical bytes and identical
+/// training trajectories (`tests/zero_parity.rs` pins this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// Full f32 window — bit-parity with the fused native backward.
+    Dense,
+    /// Deterministic top-k sparsification: keep `ceil(len/4)` largest-
+    /// magnitude elements (stable index order), half the dense bytes.
+    TopK,
+    /// Symmetric int8 quantization with a per-window power-of-two f32
+    /// scale — about a quarter of the dense bytes.
+    Q8,
+}
+
+impl WireMode {
+    /// Parse a `DYNAMIX_WIRE` / config / CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dense" => Ok(WireMode::Dense),
+            "topk" => Ok(WireMode::TopK),
+            "q8" => Ok(WireMode::Q8),
+            other => anyhow::bail!("unknown wire mode {other:?} (dense|topk|q8)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WireMode::Dense => "dense",
+            WireMode::TopK => "topk",
+            WireMode::Q8 => "q8",
+        }
+    }
+
+    /// Modeled payload bytes for one `n`-float dense window under this
+    /// codec (framing/headers excluded — the accounting compares codecs,
+    /// not transports): Dense `4n`; TopK `8·ceil(n/4)` (u32 index + f32
+    /// value per kept element); Q8 `n + 4` (one i8 per element plus the
+    /// f32 scale).
+    pub fn payload_bytes(self, n: usize) -> usize {
+        match self {
+            WireMode::Dense => 4 * n,
+            WireMode::TopK => 8 * topk_k(n),
+            WireMode::Q8 => n + 4,
+        }
+    }
+}
+
+/// Dense-to-kept sparsification ratio of [`WireMode::TopK`].
+pub const TOPK_RATIO: usize = 4;
+
+/// Kept elements for a `len`-float window under top-k.
+pub fn topk_k(len: usize) -> usize {
+    len.div_ceil(TOPK_RATIO)
+}
+
+/// Deterministic top-k selection: order every index by (|value| desc,
+/// index asc) using the total order on |v|'s BITS — ties and non-finite
+/// values included, the comparison never consults platform float
+/// semantics — keep the first `topk_k(len)`, and emit them in strictly
+/// increasing index order. Pure function of the input bits.
+pub fn topk_encode(x: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let k = topk_k(x.len());
+    let mut order: Vec<u32> = (0..x.len() as u32).collect();
+    order.sort_unstable_by_key(|&i| (std::cmp::Reverse(x[i as usize].abs().to_bits()), i));
+    let mut idx = order[..k].to_vec();
+    idx.sort_unstable();
+    let val = idx.iter().map(|&i| x[i as usize]).collect();
+    (idx, val)
+}
+
+/// Rebuild the dense window: selected indices get their values, the
+/// rest exact zeros. Validates the *declared* dense length against
+/// [`crate::comm::MAX_FRAME`] BEFORE allocating — a hostile/corrupt
+/// length prefix cannot reserve a huge buffer — plus index bounds,
+/// strict monotonicity, and the `topk_k` count contract. Both the v4
+/// frame decoder and the shard fold path call this, so loopback and TCP
+/// validate identically.
+pub fn topk_decode(len: usize, idx: &[u32], val: &[f32]) -> anyhow::Result<Vec<f32>> {
+    topk_validate(len, idx, val)?;
+    let mut out = vec![0.0f32; len];
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] = v;
+    }
+    Ok(out)
+}
+
+/// The top-k frame invariants, checkable without allocating: declared
+/// dense length under the frame ceiling, `topk_k` count contract,
+/// indices strictly increasing and in range. `Msg::decode` runs this at
+/// the protocol boundary so a hostile frame is rejected before any
+/// dense-buffer allocation anywhere downstream.
+pub fn topk_validate(len: usize, idx: &[u32], val: &[f32]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        len.checked_mul(4).map_or(false, |b| b <= crate::comm::MAX_FRAME),
+        "topk dense length {len} exceeds the frame ceiling"
+    );
+    anyhow::ensure!(
+        idx.len() == val.len() && idx.len() == topk_k(len),
+        "topk count mismatch: {} idx / {} val, want {} for len {len}",
+        idx.len(),
+        val.len(),
+        topk_k(len)
+    );
+    let mut prev: Option<u32> = None;
+    for &i in idx {
+        anyhow::ensure!((i as usize) < len, "topk index {i} out of range {len}");
+        anyhow::ensure!(
+            prev.map_or(true, |p| i > p),
+            "topk indices must be strictly increasing"
+        );
+        prev = Some(i);
+    }
+    Ok(())
+}
+
+/// Symmetric int8 quantization with a power-of-two scale.
+///
+/// `scale = 2^(e-6)` where `e` is the unbiased exponent of the window's
+/// max |value|, so `q = round(x/scale)` lands in `(-128, 128)` before
+/// the clamp to ±127, and `q·scale` is an EXACT f32 product (power-of-
+/// two multiply). Exactness buys byte-stability: the decoded window's
+/// max |value| is `q_max·scale` with `q_max ∈ [64, 127]`, which keeps
+/// exponent `e`, so re-encoding recovers the identical scale and the
+/// identical bytes (`proptest_invariants` pins encode∘decode∘encode).
+/// Windows whose max |value| is zero, subnormal-tiny (`e < -120`), or
+/// non-finite flush to the all-zero frame with scale 0 — deterministic
+/// in, deterministic out.
+pub fn q8_encode(x: &[f32]) -> (f32, Vec<i8>) {
+    let max_bits = x.iter().map(|v| v.abs().to_bits()).max().unwrap_or(0);
+    let e = ((max_bits >> 23) & 0xFF) as i32 - 127;
+    if max_bits == 0 || !(-120..=127).contains(&e) {
+        return (0.0, vec![0; x.len()]);
+    }
+    let scale = f32::from_bits(((e - 6 + 127) as u32) << 23);
+    let q = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (scale, q)
+}
+
+/// Exact dequantization: `q·scale` with a power-of-two scale is a bit-
+/// exact f32 product. `scale` must be finite and non-negative (hostile
+/// frames rejected); the element count needs no separate guard — it is
+/// bounded by the received frame itself at one byte per element.
+pub fn q8_decode(scale: f32, q: &[i8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        scale.is_finite() && scale >= 0.0,
+        "q8 scale must be finite and non-negative"
+    );
+    Ok(q.iter().map(|&qi| qi as f32 * scale).collect())
 }
 
 #[cfg(test)]
@@ -258,5 +440,127 @@ mod tests {
     fn trailing_detected() {
         let d = Decoder::new(&[1]);
         assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn u32s_roundtrip_and_forged_count() {
+        let mut e = Encoder::new();
+        e.u32s(&[0, 7, u32::MAX]);
+        let frame = e.frame();
+        let mut d = Decoder::new(&frame[4..]);
+        assert_eq!(d.u32s().unwrap(), vec![0, 7, u32::MAX]);
+        d.finish().unwrap();
+        let mut e = Encoder::new();
+        e.u32(u32::MAX);
+        let frame = e.frame();
+        assert!(Decoder::new(&frame[4..]).u32s().is_err());
+    }
+
+    fn window(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..len).map(|_| rng.normal() as f32 * 0.37).collect()
+    }
+
+    #[test]
+    fn topk_roundtrip_keeps_largest_and_zeros_rest() {
+        for len in [1usize, 3, 4, 5, 64, 1023] {
+            let x = window(11 + len as u64, len);
+            let (idx, val) = topk_encode(&x);
+            assert_eq!(idx.len(), topk_k(len));
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not increasing");
+            let y = topk_decode(len, &idx, &val).unwrap();
+            let kept: std::collections::BTreeSet<u32> = idx.iter().copied().collect();
+            let min_kept = idx
+                .iter()
+                .map(|&i| x[i as usize].abs().to_bits())
+                .min()
+                .unwrap();
+            for i in 0..len {
+                if kept.contains(&(i as u32)) {
+                    assert_eq!(y[i].to_bits(), x[i].to_bits(), "kept value changed");
+                } else {
+                    assert_eq!(y[i].to_bits(), 0, "dropped value not zeroed");
+                    assert!(
+                        x[i].abs().to_bits() <= min_kept,
+                        "dropped |x[{i}]| above a kept magnitude"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_decode_rejects_hostile_frames() {
+        let x = window(5, 16);
+        let (idx, val) = topk_encode(&x);
+        // Declared dense length beyond the frame ceiling must fail BEFORE
+        // the output allocation (the satellite bugfix).
+        assert!(topk_decode(usize::MAX / 8, &idx, &val).is_err());
+        assert!(topk_decode(crate::comm::MAX_FRAME, &idx, &val).is_err());
+        // Count / bounds / monotonicity violations.
+        assert!(topk_decode(16, &idx[1..], &val[1..]).is_err(), "wrong k");
+        assert!(topk_decode(16, &idx, &val[1..]).is_err(), "idx/val mismatch");
+        let mut bad = idx.clone();
+        bad[0] = 16;
+        assert!(topk_decode(16, &bad, &val).is_err(), "index out of range");
+        let mut bad = idx.clone();
+        bad.swap(0, 1);
+        assert!(topk_decode(16, &bad, &val).is_err(), "non-increasing indices");
+    }
+
+    #[test]
+    fn q8_roundtrip_error_is_bounded_and_stable() {
+        for len in [1usize, 2, 31, 256] {
+            let x = window(40 + len as u64, len);
+            let (scale, q) = q8_encode(&x);
+            assert!(scale > 0.0 && scale.to_bits().trailing_zeros() >= 23, "power-of-two scale");
+            let y = q8_decode(scale, &q).unwrap();
+            // Rounding error is ≤ scale/2; the clamp at ±127 can stretch
+            // the max element's error toward (but never past) one scale.
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() <= scale, "{a} vs {b} (scale {scale})");
+            }
+            // Byte-stability: encode ∘ decode ∘ encode is the identity on
+            // the wire bytes (the power-of-two-scale property).
+            let (scale2, q2) = q8_encode(&y);
+            assert_eq!(scale2.to_bits(), scale.to_bits());
+            assert_eq!(q2, q);
+        }
+    }
+
+    #[test]
+    fn q8_flushes_degenerate_windows_to_zero() {
+        for x in [
+            vec![0.0f32; 7],
+            vec![1e-38f32.min(f32::MIN_POSITIVE / 2.0); 3],
+            vec![f32::NAN, 1.0, -2.0],
+            vec![f32::INFINITY, 0.5],
+        ] {
+            let (scale, q) = q8_encode(&x);
+            assert_eq!(scale, 0.0);
+            assert!(q.iter().all(|&v| v == 0));
+            assert!(q8_decode(scale, &q).unwrap().iter().all(|&v| v == 0.0));
+        }
+        assert!(q8_decode(f32::NAN, &[0]).is_err());
+        assert!(q8_decode(-1.0, &[0]).is_err());
+    }
+
+    #[test]
+    fn payload_bytes_match_codec_output() {
+        for len in [1usize, 4, 5, 1024] {
+            let x = window(9 + len as u64, len);
+            assert_eq!(WireMode::Dense.payload_bytes(len), 4 * len);
+            let (idx, val) = topk_encode(&x);
+            assert_eq!(WireMode::TopK.payload_bytes(len), 4 * idx.len() + 4 * val.len());
+            let (_, q) = q8_encode(&x);
+            assert_eq!(WireMode::Q8.payload_bytes(len), q.len() + 4);
+            // Compressed strictly under dense for every window size.
+            assert!(WireMode::TopK.payload_bytes(len) < WireMode::Dense.payload_bytes(len) || len < 2);
+            assert!(WireMode::Q8.payload_bytes(len) < WireMode::Dense.payload_bytes(len) || len < 2);
+        }
+        for (s, want) in [("dense", WireMode::Dense), (" TopK ", WireMode::TopK), ("q8", WireMode::Q8)] {
+            assert_eq!(WireMode::parse(s).unwrap(), want);
+        }
+        assert!(WireMode::parse("zstd").is_err());
     }
 }

@@ -71,6 +71,24 @@ pub fn bucket_kb() -> Option<usize> {
         .filter(|&n| n >= 1)
 }
 
+/// `DYNAMIX_WIRE`: gradient-slice payload codec for the ZeRO plane
+/// (`dense`/`topk`/`q8`). Unset or unrecognized -> `None` (caller
+/// default: dense). Read once at `ShardedBackend`/trainer construction —
+/// never mid-run.
+pub fn wire_mode() -> Option<crate::comm::wire::WireMode> {
+    crate::comm::wire::WireMode::parse(&raw("DYNAMIX_WIRE")?).ok()
+}
+
+/// `DYNAMIX_PLANE`: gradient exchange plane — `zero` (reduce-scatter
+/// parameter sharding, the default) or `replica` (the PR 4/7
+/// full-replica ring, kept as the parity reference). Unset or
+/// unrecognized -> `None` (caller default: zero). Read once at backend
+/// construction.
+pub fn plane() -> Option<String> {
+    let s = raw("DYNAMIX_PLANE")?.trim().to_ascii_lowercase();
+    matches!(s.as_str(), "zero" | "replica").then_some(s)
+}
+
 fn parse_switch(s: &str) -> Option<bool> {
     match s.trim().to_ascii_lowercase().as_str() {
         "on" | "1" | "true" => Some(true),
@@ -86,6 +104,15 @@ fn parse_switch(s: &str) -> Option<bool> {
 pub fn request_kernel(k: &str) {
     if kernel_choice().is_none() {
         std::env::set_var("DYNAMIX_KERNEL", k);
+    }
+}
+
+/// Set `DYNAMIX_WIRE` to the config-file request `w` unless the
+/// environment already picked a codec (the env always wins). Must run
+/// before the backend/trainer constructions that read the variable.
+pub fn request_wire(w: &str) {
+    if raw("DYNAMIX_WIRE").map_or(true, |s| s.is_empty()) {
+        std::env::set_var("DYNAMIX_WIRE", w);
     }
 }
 

@@ -245,6 +245,12 @@ pub struct ExperimentConfig {
     /// `runtime::apply_kernel_request` before backend construction;
     /// `DYNAMIX_KERNEL` in the environment wins over this field.
     pub kernel: Option<String>,
+    /// Zero-plane slice codec request (`dense`/`topk`/`q8`; None =
+    /// whatever the environment selects). `DYNAMIX_WIRE` in the
+    /// environment wins over this field. Compressed modes trade bit
+    /// parity with the fused step for wire bytes while staying exactly
+    /// reproducible run to run.
+    pub wire: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -260,6 +266,7 @@ impl Default for ExperimentConfig {
             scenario: None,
             shards: None,
             kernel: None,
+            wire: None,
         }
     }
 }
@@ -307,6 +314,10 @@ impl ExperimentConfig {
             // can never drift from what the CLI/env accept.
             crate::runtime::native::KernelTier::parse(k)
                 .map_err(|e| anyhow::anyhow!("config kernel: {e}"))?;
+        }
+        if let Some(w) = &self.wire {
+            crate::comm::wire::WireMode::parse(w)
+                .map_err(|e| anyhow::anyhow!("config wire: {e}"))?;
         }
         if let Some(s) = &self.scenario {
             s.validate(self.cluster.n_workers)?;
@@ -358,6 +369,9 @@ impl ExperimentConfig {
             }
             if let Some(k) = &self.kernel {
                 m.insert("kernel".into(), Json::Str(k.clone()));
+            }
+            if let Some(w) = &self.wire {
+                m.insert("wire".into(), Json::Str(w.clone()));
             }
         }
         j
@@ -418,6 +432,7 @@ impl ExperimentConfig {
         if let Some(v) = v.get("scenario") { c.scenario = Some(ScenarioScript::from_json(v)?); }
         if let Some(x) = u("shards") { c.shards = Some(x); }
         if let Some(x) = s("kernel") { c.kernel = Some(x); }
+        if let Some(x) = s("wire") { c.wire = Some(x); }
         c.validate()?;
         Ok(c)
     }
@@ -456,6 +471,7 @@ mod tests {
         c.scenario = Some(ScenarioScript::by_name("spot_chaos").unwrap());
         c.shards = Some(4);
         c.kernel = Some("simd".into());
+        c.wire = Some("q8".into());
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.train.optimizer, Optimizer::Adam);
@@ -465,11 +481,13 @@ mod tests {
         assert_eq!(c2.scenario, c.scenario, "scenario scripts must round-trip");
         assert_eq!(c2.shards, Some(4), "shard config must round-trip");
         assert_eq!(c2.kernel.as_deref(), Some("simd"), "kernel tier must round-trip");
-        // No scenario/shards/kernel keys -> None (defaults preserved).
+        assert_eq!(c2.wire.as_deref(), Some("q8"), "wire mode must round-trip");
+        // No scenario/shards/kernel/wire keys -> None (defaults preserved).
         let plain = ExperimentConfig::from_json(&ExperimentConfig::default().to_json()).unwrap();
         assert!(plain.scenario.is_none());
         assert!(plain.shards.is_none());
         assert!(plain.kernel.is_none());
+        assert!(plain.wire.is_none());
     }
 
     #[test]
@@ -504,6 +522,13 @@ mod tests {
         assert!(c.validate().is_err());
         for k in ["auto", "scalar", "blocked", "simd"] {
             c.kernel = Some(k.into());
+            c.validate().unwrap();
+        }
+        // Unknown wire modes are rejected; the three knowns pass.
+        c.wire = Some("zstd".into());
+        assert!(c.validate().is_err());
+        for w in ["dense", "topk", "q8"] {
+            c.wire = Some(w.into());
             c.validate().unwrap();
         }
     }

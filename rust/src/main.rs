@@ -87,6 +87,12 @@ GLOBAL FLAGS:
                   N loopback worker shards (sets DYNAMIX_BACKEND=sharded +
                   DYNAMIX_SHARDS; bit-identical to the native backend
                   under every kernel tier)
+  --plane P       gradient exchange plane: zero|replica (DYNAMIX_PLANE;
+                  zero = ZeRO-style reduce-scatter parameter sharding,
+                  the default; replica = the full-replica parity ring)
+  --wire M        zero-plane slice codec: dense|topk|q8 (DYNAMIX_WIRE;
+                  topk/q8 compress the gradient wire deterministically,
+                  trading bit parity with the fused step for bytes)
   --scenario S    scripted dynamic-environment timeline: a JSON file path
                   or a built-in name (preempt_rejoin bandwidth_collapse
                   congestion_storm load_shift spot_chaos)
@@ -147,6 +153,21 @@ fn run() -> anyhow::Result<()> {
         std::env::set_var("DYNAMIX_BACKEND", "sharded");
         std::env::set_var("DYNAMIX_SHARDS", s);
     }
+    // --plane / --wire pick the gradient exchange plane and its slice
+    // codec; like --kernel they must land in the environment before the
+    // backend (or TCP leader/worker) is constructed.
+    if let Some(p) = args.get("plane") {
+        let p = p.trim().to_ascii_lowercase();
+        anyhow::ensure!(
+            matches!(p.as_str(), "zero" | "replica"),
+            "--plane expects zero|replica, got {p:?}"
+        );
+        std::env::set_var("DYNAMIX_PLANE", p);
+    }
+    if let Some(w) = args.get("wire") {
+        dynamix::comm::wire::WireMode::parse(w)?; // validate loudly
+        std::env::set_var("DYNAMIX_WIRE", w);
+    }
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -175,10 +196,11 @@ fn run() -> anyhow::Result<()> {
             cfg.batch.initial = batch;
             cfg.scenario = scenario_arg(&args)?;
             cfg.validate()?;
-            // The config's shard/kernel requests apply when the
+            // The config's shard/kernel/wire requests apply when the
             // environment didn't pick them (see runtime::backend_for /
-            // apply_kernel_request).
+            // apply_kernel_request / apply_wire_request).
             dynamix::runtime::apply_kernel_request(cfg.kernel.as_deref());
+            dynamix::runtime::apply_wire_request(cfg.wire.as_deref());
             let store = dynamix::runtime::backend_for(cfg.shards)?;
             let cycles: usize = args
                 .get_or("cycles", &format!("{}", cfg.steps_per_episode))

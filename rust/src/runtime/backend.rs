@@ -311,6 +311,15 @@ pub fn apply_kernel_request(kernel: Option<&str>) {
     }
 }
 
+/// Apply a config-file slice-codec request: sets `DYNAMIX_WIRE` when the
+/// environment hasn't picked one (the env always wins). Must run before
+/// the backend/trainer constructions that read the variable once.
+pub fn apply_wire_request(wire: Option<&str>) {
+    if let Some(w) = wire {
+        crate::config::env::request_wire(w);
+    }
+}
+
 /// Backend honoring an explicit shard request from config/CLI: when
 /// `DYNAMIX_BACKEND` is unset and `shards` is `Some(n)`, a loopback
 /// sharded data plane; otherwise the environment selection wins.

@@ -28,12 +28,13 @@ mod store;
 mod xla_backend;
 
 pub use backend::{
-    apply_kernel_request, backend_for, default_backend, native_backend, sharded_backend, Backend,
+    apply_kernel_request, apply_wire_request, backend_for, default_backend, native_backend,
+    sharded_backend, Backend,
     ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
 };
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelInfo};
 pub use native::{KernelTier, NativeBackend};
-pub use sharded::ShardedBackend;
+pub use sharded::{Plane, ShardedBackend};
 #[cfg(feature = "backend-xla")]
 pub use store::{ArtifactStore, Outputs};
 #[cfg(feature = "backend-xla")]

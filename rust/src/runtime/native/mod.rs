@@ -150,6 +150,19 @@ impl NativeBackend {
         Ok(self.def(model)?.bucket_plan(target_bytes))
     }
 
+    /// ZeRO-plane parameter ownership map (see
+    /// [`ModelDef::param_partition`]): one contiguous bucket-aligned slice
+    /// of the flat parameter vector per shard, empty for inactive shards.
+    /// Pure layout arithmetic, like the bucket plan.
+    pub fn param_partition(
+        &self,
+        model: &str,
+        active: &[bool],
+        target_bytes: usize,
+    ) -> anyhow::Result<Vec<std::ops::Range<usize>>> {
+        Ok(self.def(model)?.param_partition(active, target_bytes))
+    }
+
     /// Forward half of one shard step: forward + per-row loss pieces for
     /// `m = mask.len()` rows that form a contiguous slice of a fused batch
     /// whose global mask sum is `denom`. Row counts are unconstrained (no

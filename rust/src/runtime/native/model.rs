@@ -411,6 +411,78 @@ impl ModelDef {
         (total == len && lo == offset && hi == offset + len).then_some(from_stage..k)
     }
 
+    /// ZeRO-style owner partition of the flat ravel_pytree parameter
+    /// buffer: `plan_rows` extended from batch rows to parameters. Cuts
+    /// the buffer into one contiguous `[start, end)` float range per
+    /// shard (shard order; inactive shards get empty ranges), with every
+    /// cut on a `bucket_plan(target_bytes)` bucket boundary so the PR 7
+    /// overlap machinery (bucket hops, stage cursors) composes with
+    /// ownership unchanged. Quotas are balanced, and an inactive shard's
+    /// quota folds onto survivors through the same `sim::elastic`
+    /// redistribution batch quotas use — ownership under churn follows
+    /// the exact policy the row plan already follows.
+    ///
+    /// Ownership decides who applies which optimizer slice and the
+    /// wire/memory accounting; it never changes how gradients fold, so
+    /// it is parity-neutral by construction.
+    pub fn param_partition(
+        &self,
+        active: &[bool],
+        target_bytes: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        let pc = self.param_count();
+        let n = active.len();
+        let mut counts: Vec<usize> =
+            (0..n).map(|s| pc / n + usize::from(s < pc % n)).collect();
+        let caps = vec![pc; n];
+        for s in 0..n {
+            if !active[s] && counts[s] > 0 {
+                crate::sim::elastic::redistribute_freed(
+                    counts[s],
+                    &mut counts,
+                    active,
+                    &caps,
+                    pc,
+                );
+                counts[s] = 0;
+            }
+        }
+        // Legal cut points: bucket END boundaries in memory order.
+        let mut ends: Vec<usize> = self
+            .bucket_plan(target_bytes)
+            .iter()
+            .map(|b| b.offset + b.len)
+            .collect();
+        ends.sort_unstable();
+        // Snap each cumulative quota to the nearest boundary (ties take
+        // the lower one), never moving backwards; the last active shard
+        // always closes at `pc` so the ranges tile the buffer exactly.
+        let last_active = active.iter().rposition(|&a| a);
+        let mut out = Vec::with_capacity(n);
+        let (mut cum, mut at) = (0usize, 0usize);
+        for s in 0..n {
+            if !active[s] {
+                out.push(at..at);
+                continue;
+            }
+            cum += counts[s];
+            let end = if Some(s) == last_active {
+                pc
+            } else {
+                let mut best = at;
+                for &e in &ends {
+                    if (e as i64 - cum as i64).abs() < (best as i64 - cum as i64).abs() {
+                        best = e;
+                    }
+                }
+                best.max(at)
+            };
+            out.push(at..end);
+            at = end;
+        }
+        out
+    }
+
     /// Stage `k`'s dx-propagation: every op needed before the stage's fold
     /// that does NOT read or write `ws.grad`. On a shard this runs as soon
     /// as stage `k-1`'s fold is done — overlapping the previous bucket's
@@ -699,9 +771,24 @@ pub fn apply_sgd(state: &mut OptState, g: &[f32], lr: f32) {
     debug_assert_eq!(state.params.len(), g.len());
     debug_assert_eq!(state.m.len(), g.len());
     state.step += 1.0;
+    apply_sgd_slice(&mut state.params, &mut state.m, g, lr);
+}
+
+/// One contiguous slice of the SGD-with-momentum update — the ZeRO
+/// owner's unit of optimizer work. `params`/`m`/`g` are the pre-sliced
+/// windows of one parameter range.
+///
+/// PARITY: the update is elementwise (no cross-index reduction), so
+/// applying the full vector as any tiling of disjoint slices, in any
+/// order, produces params/momentum bit-identical to the fused
+/// `apply_sgd` loop. The step counter advances once per *step*, not per
+/// slice — callers bump `OptState::step` before slicing.
+pub fn apply_sgd_slice(params: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(params.len(), g.len());
+    debug_assert_eq!(m.len(), g.len());
     for i in 0..g.len() {
-        state.m[i] = SGD_MOMENTUM * state.m[i] + g[i];
-        state.params[i] -= lr * state.m[i];
+        m[i] = SGD_MOMENTUM * m[i] + g[i];
+        params[i] -= lr * m[i];
     }
 }
 
@@ -712,14 +799,35 @@ pub fn apply_adam(state: &mut OptState, g: &[f32], lr: f32) {
     debug_assert_eq!(state.v.len(), g.len());
     state.step += 1.0;
     let t = state.step as f64;
+    apply_adam_slice(&mut state.params, &mut state.m, &mut state.v, g, lr, t);
+}
+
+/// One contiguous slice of the Adam update at an explicit step count
+/// `t` (the bias-correction exponent). `params`/`m`/`v`/`g` are the
+/// pre-sliced windows of one parameter range.
+///
+/// PARITY: elementwise like `apply_sgd_slice` — slice tiling and
+/// application order never change a bit; `t` is passed in so every
+/// slice of one step sees the identical bias correction.
+pub fn apply_adam_slice(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    t: f64,
+) {
+    debug_assert_eq!(params.len(), g.len());
+    debug_assert_eq!(m.len(), g.len());
+    debug_assert_eq!(v.len(), g.len());
     let c1 = (1.0 - (ADAM_B1 as f64).powf(t)) as f32;
     let c2 = (1.0 - (ADAM_B2 as f64).powf(t)) as f32;
     for i in 0..g.len() {
-        state.m[i] = ADAM_B1 * state.m[i] + (1.0 - ADAM_B1) * g[i];
-        state.v[i] = ADAM_B2 * state.v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-        let m_hat = state.m[i] / c1;
-        let v_hat = state.v[i] / c2;
-        state.params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let m_hat = m[i] / c1;
+        let v_hat = v[i] / c2;
+        params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
     }
 }
 
@@ -847,6 +955,105 @@ mod tests {
             assert_eq!(m.stages_for_range(1, 0, pc), None);
             assert_eq!(m.stages_for_range(0, 0, pc - 1), None);
             assert_eq!(m.stages_for_range(0, 1, stages[0].len), None);
+        }
+    }
+
+    #[test]
+    fn param_partition_tiles_on_bucket_boundaries() {
+        for m in ModelDef::zoo() {
+            let pc = m.param_count();
+            for target_bytes in [0usize, 32 << 10, 4 * pc] {
+                let mut ends: Vec<usize> = m
+                    .bucket_plan(target_bytes)
+                    .iter()
+                    .map(|b| b.offset + b.len)
+                    .collect();
+                ends.sort_unstable();
+                for n in [1usize, 2, 4, 7, 16] {
+                    let part = m.param_partition(&vec![true; n], target_bytes);
+                    assert_eq!(part.len(), n, "{}", m.name);
+                    let mut at = 0usize;
+                    for r in &part {
+                        assert_eq!(r.start, at, "{}: ranges must be contiguous", m.name);
+                        at = r.end;
+                        // Every cut sits on a bucket boundary (or 0/pc).
+                        assert!(
+                            r.end == 0 || ends.contains(&r.end),
+                            "{}: cut {} off bucket boundaries (n={n})",
+                            m.name,
+                            r.end
+                        );
+                    }
+                    assert_eq!(at, pc, "{}: partition does not tile the buffer", m.name);
+                }
+                // n = 1 owns everything.
+                assert_eq!(m.param_partition(&[true], target_bytes), vec![0..pc]);
+            }
+            // Inactive shards own nothing; survivors absorb their quota.
+            let part = m.param_partition(&[true, false, true, true], 0);
+            assert!(part[1].is_empty(), "{}", m.name);
+            assert_eq!(
+                part.iter().map(|r| r.len()).sum::<usize>(),
+                m.param_count(),
+                "{}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn slice_optimizer_application_matches_fused_bitwise() {
+        // PARITY oracle for the ZeRO owner update: the full vector applied
+        // as partition slices (any legal partition) is bit-identical to the
+        // fused apply_sgd / apply_adam — the property that lets each shard
+        // own only its optimizer slice.
+        let m = def("vgg11_mini");
+        let pc = m.param_count();
+        let mut rng = crate::util::rng::Rng::new(77);
+        let g: Vec<f32> = (0..pc).map(|_| rng.normal() as f32).collect();
+        let params = m.init(3);
+        for opt in ["sgd", "adam"] {
+            let mut fused = OptState {
+                params: params.clone(),
+                m: vec![0.0; pc],
+                v: vec![0.0; if opt == "adam" { pc } else { 1 }],
+                step: 0.0,
+            };
+            let mut sliced = fused.clone();
+            for step in 0..3 {
+                if opt == "sgd" {
+                    apply_sgd(&mut fused, &g, 0.05);
+                    sliced.step += 1.0;
+                    for r in m.param_partition(&vec![true; 4], 0) {
+                        apply_sgd_slice(
+                            &mut sliced.params[r.clone()],
+                            &mut sliced.m[r.clone()],
+                            &g[r],
+                            0.05,
+                        );
+                    }
+                } else {
+                    apply_adam(&mut fused, &g, 0.002);
+                    sliced.step += 1.0;
+                    let t = sliced.step as f64;
+                    for r in m.param_partition(&vec![true; 4], 0) {
+                        apply_adam_slice(
+                            &mut sliced.params[r.clone()],
+                            &mut sliced.m[r.clone()],
+                            &mut sliced.v[r.clone()],
+                            &g[r],
+                            0.002,
+                            t,
+                        );
+                    }
+                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&fused.params), bits(&sliced.params), "{opt} step {step}");
+                assert_eq!(bits(&fused.m), bits(&sliced.m), "{opt} step {step}");
+                if opt == "adam" {
+                    assert_eq!(bits(&fused.v), bits(&sliced.v), "{opt} step {step}");
+                }
+            }
         }
     }
 

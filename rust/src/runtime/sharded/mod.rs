@@ -34,6 +34,22 @@
 //! `sim::elastic` helper the BSP trainer uses for worker churn), and since
 //! any contiguous partition is exact, preemption mid-run never perturbs
 //! the math — only who computes which rows.
+//!
+//! ## Exchange planes: ZeRO reduce-scatter vs full replica
+//!
+//! [`Plane::Zero`] (the default; `DYNAMIX_PLANE=replica` restores the old
+//! ring) drives Phase B as a reduce-scatter: the accumulator's bucket
+//! windows travel as v4 `GradSlice` frames (or compressed
+//! `GradTopK`/`GradQ8` under `DYNAMIX_WIRE`), each shard owns the
+//! contiguous bucket-aligned parameter slice `param_partition` assigns
+//! it, and the optimizer applies slice-by-slice over that partition —
+//! `apply_*_slice` is elementwise, so the sliced application is bitwise
+//! the fused one. Dense zero rides the exact replica-ring schedule and
+//! fold order, so it stays bit-identical to the fused native step;
+//! compressed modes trade parity for wire bytes but remain exactly
+//! reproducible run to run (`tests/zero_parity.rs` pins both contracts).
+//! With overlap off the same slice pipeline runs at depth 1 (serialized
+//! hops, identical fold order).
 
 pub mod transport;
 pub mod worker;
@@ -43,8 +59,10 @@ use crate::config::{Optimizer, PpoVariant};
 use crate::runtime::backend::{
     ComputeBackend, OptState, PolicyOut, PpoHyper, PpoMinibatch, PpoStats, Schema, TrainOut,
 };
+use crate::comm::wire::{self, WireMode};
 use crate::runtime::native::model::{
-    apply_adam, apply_sgd, fold_masked_ce_partial, normalized_grad_stats,
+    apply_adam, apply_adam_slice, apply_sgd, apply_sgd_slice, fold_masked_ce_partial,
+    normalized_grad_stats,
 };
 use crate::runtime::native::{CommLane, NativeBackend};
 use crate::sim::elastic;
@@ -60,6 +78,28 @@ use transport::{loopback_pair, ShardMsg, ShardSender, ShardTransport};
 /// enough that the first hop starts long before the backward finishes,
 /// large enough that framing overhead stays negligible.
 const DEFAULT_BUCKET_BYTES: usize = 32 << 10;
+
+/// Gradient-exchange plane of the sharded data plane (`DYNAMIX_PLANE`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Plane {
+    /// PR 4/7 full-replica ring: every window is seeded, folded and
+    /// applied against the whole parameter vector leader-side. Kept as
+    /// the parity reference.
+    Replica,
+    /// ZeRO-style reduce-scatter (the default): windows travel as v4
+    /// slice frames — compressible via [`WireMode`] — and the optimizer
+    /// applies per owned parameter slice of the partition.
+    #[default]
+    Zero,
+}
+
+/// `DYNAMIX_PLANE` resolved to a [`Plane`] (unset/unrecognized -> zero).
+fn env_plane() -> Plane {
+    match crate::config::env::plane().as_deref() {
+        Some("replica") => Plane::Replica,
+        _ => Plane::Zero,
+    }
+}
 
 /// Contiguous row ranges of a `bucket`-row fused batch, one per shard (in
 /// shard order; inactive shards get empty ranges). Base assignment is
@@ -117,11 +157,18 @@ fn recv_reply(
             {
                 continue; // stale reply from an aborted step
             }
-            // An aborted overlapped step leaves bucket replies / fin
-            // frames unread; drain those too. A CURRENT-seq bucket frame
+            // An aborted overlapped step leaves bucket/slice replies and
+            // fin frames unread; drain those too. A CURRENT-seq frame
             // falls through to the protocol error below, whose debug print
             // names the offending seq and bucket id.
-            ShardMsg::GradBucket { .. } | ShardMsg::BucketFin { .. } if mseq < seq => {
+            ShardMsg::GradBucket { .. }
+            | ShardMsg::BucketFin { .. }
+            | ShardMsg::GradSlice { .. }
+            | ShardMsg::GradTopK { .. }
+            | ShardMsg::GradQ8 { .. }
+            | ShardMsg::ParamSlice { .. }
+                if mseq < seq =>
+            {
                 continue;
             }
             ShardMsg::Err { msg, .. } => anyhow::bail!("shard {shard}: {msg}"),
@@ -153,6 +200,10 @@ fn recv_bucket_reply(
             | ShardMsg::Err { .. }
             | ShardMsg::GradBucket { .. }
             | ShardMsg::BucketFin { .. }
+            | ShardMsg::GradSlice { .. }
+            | ShardMsg::GradTopK { .. }
+            | ShardMsg::GradQ8 { .. }
+            | ShardMsg::ParamSlice { .. }
                 if mseq < seq =>
             {
                 continue; // stale frame from an aborted step
@@ -196,6 +247,10 @@ fn recv_bucket_fin(
             | ShardMsg::Err { .. }
             | ShardMsg::GradBucket { .. }
             | ShardMsg::BucketFin { .. }
+            | ShardMsg::GradSlice { .. }
+            | ShardMsg::GradTopK { .. }
+            | ShardMsg::GradQ8 { .. }
+            | ShardMsg::ParamSlice { .. }
                 if mseq < seq =>
             {
                 continue;
@@ -218,6 +273,90 @@ fn recv_bucket_fin(
     }
 }
 
+/// Receive the reply for `slice` of step `seq` under the ZeRO plane: a
+/// slice frame whose kind matches the configured wire mode (a shard that
+/// answers dense to a q8 hop is a protocol error, not a silent fallback).
+/// Stale frames drain exactly as in [`recv_bucket_reply`].
+fn recv_slice_reply(
+    link: &mut Box<dyn ShardTransport>,
+    shard: usize,
+    seq: u64,
+    slice: usize,
+    mode: WireMode,
+) -> anyhow::Result<ShardMsg> {
+    loop {
+        let msg = link.recv().map_err(|e| {
+            anyhow::anyhow!(
+                "shard {shard}: transport failed mid-ring at seq {seq} slice {slice}: {e:#}"
+            )
+        })?;
+        let mseq = msg.seq();
+        match msg {
+            ShardMsg::Fwd { .. }
+            | ShardMsg::GradOut { .. }
+            | ShardMsg::Err { .. }
+            | ShardMsg::GradBucket { .. }
+            | ShardMsg::BucketFin { .. }
+            | ShardMsg::GradSlice { .. }
+            | ShardMsg::GradTopK { .. }
+            | ShardMsg::GradQ8 { .. }
+            | ShardMsg::ParamSlice { .. }
+                if mseq < seq =>
+            {
+                continue; // stale frame from an aborted step
+            }
+            ShardMsg::Err { msg, .. } => {
+                anyhow::bail!("shard {shard}: slice {slice} of seq {seq}: {msg}")
+            }
+            frame => {
+                let (rs, rslice, kind) = match &frame {
+                    ShardMsg::GradSlice { seq, slice, .. } => (*seq, *slice, WireMode::Dense),
+                    ShardMsg::GradTopK { seq, slice, .. } => (*seq, *slice, WireMode::TopK),
+                    ShardMsg::GradQ8 { seq, slice, .. } => (*seq, *slice, WireMode::Q8),
+                    other => anyhow::bail!(
+                        "shard {shard}: expected slice {slice} of seq {seq}, got {other:?}"
+                    ),
+                };
+                anyhow::ensure!(
+                    kind == mode,
+                    "shard {shard}: slice {slice} of seq {seq} replied in wire mode \
+                     {} != configured {}",
+                    kind.label(),
+                    mode.label()
+                );
+                anyhow::ensure!(
+                    rs == seq && rslice == slice,
+                    "shard {shard}: slice reply (seq {rs}, slice {rslice}) != expected \
+                     (seq {seq}, slice {slice})"
+                );
+                return Ok(frame);
+            }
+        }
+    }
+}
+
+/// `(offset, dense length)` a slice frame claims to cover. Callers check
+/// it against the bucket plan before staging or folding the frame.
+fn slice_extent(msg: &ShardMsg) -> (usize, usize) {
+    match msg {
+        ShardMsg::GradSlice { offset, grad, .. } => (*offset, grad.len()),
+        ShardMsg::GradTopK { offset, len, .. } => (*offset, *len),
+        ShardMsg::GradQ8 { offset, q, .. } => (*offset, q.len()),
+        other => unreachable!("slice_extent on non-slice frame {other:?}"),
+    }
+}
+
+/// Decode a slice frame's payload to its dense window (the final ring
+/// position's reply, folded by every engaged shard).
+fn decode_slice(msg: ShardMsg) -> anyhow::Result<Vec<f32>> {
+    match msg {
+        ShardMsg::GradSlice { grad, .. } => Ok(grad),
+        ShardMsg::GradTopK { len, idx, val, .. } => wire::topk_decode(len, &idx, &val),
+        ShardMsg::GradQ8 { scale, q, .. } => wire::q8_decode(scale, &q),
+        other => anyhow::bail!("decode_slice: not a slice frame: {other:?}"),
+    }
+}
+
 /// The sharded data plane. One leader (the caller's thread) plus N shard
 /// workers behind [`ShardTransport`]s — in-process loopback threads by
 /// default, or any framed-socket peers via
@@ -236,10 +375,16 @@ pub struct ShardedBackend {
     seq: AtomicU64,
     n: usize,
     /// Pipelined bucket ring on/off (`DYNAMIX_OVERLAP`, read once at
-    /// construction; default on). Off reproduces the bulk PR 5 ring.
+    /// construction; default on). Off reproduces the bulk PR 5 ring
+    /// under the replica plane, and serializes the slice pipeline to
+    /// depth 1 under the zero plane.
     overlap: bool,
     /// Target bytes per gradient bucket (`DYNAMIX_BUCKET_KB`).
     bucket_bytes: usize,
+    /// Exchange plane (`DYNAMIX_PLANE`, read once at construction).
+    plane: Plane,
+    /// Slice payload codec for the zero plane (`DYNAMIX_WIRE`).
+    wire: WireMode,
 }
 
 impl ShardedBackend {
@@ -300,6 +445,8 @@ impl ShardedBackend {
             bucket_bytes: crate::config::env::bucket_kb()
                 .map(|kb| kb * 1024)
                 .unwrap_or(DEFAULT_BUCKET_BYTES),
+            plane: env_plane(),
+            wire: crate::config::env::wire_mode().unwrap_or(WireMode::Dense),
         }
     }
 
@@ -312,6 +459,31 @@ impl ShardedBackend {
         self.overlap = overlap;
         self.bucket_bytes = bucket_bytes;
         self
+    }
+
+    /// Pin the exchange plane explicitly (the parity sweeps compare
+    /// `Plane::Zero` against `Plane::Replica` without touching the
+    /// process environment).
+    pub fn with_plane(mut self, plane: Plane) -> Self {
+        self.plane = plane;
+        self
+    }
+
+    /// Pin the zero-plane slice codec explicitly. Ignored under the
+    /// replica plane, whose frames are always dense buckets.
+    pub fn with_wire(mut self, wire: WireMode) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    /// The configured exchange plane.
+    pub fn plane(&self) -> Plane {
+        self.plane
+    }
+
+    /// The configured zero-plane slice codec.
+    pub fn wire(&self) -> WireMode {
+        self.wire
     }
 
     /// Data plane over caller-supplied transports (e.g. TCP shard servers
@@ -339,6 +511,8 @@ impl ShardedBackend {
             bucket_bytes: crate::config::env::bucket_kb()
                 .map(|kb| kb * 1024)
                 .unwrap_or(DEFAULT_BUCKET_BYTES),
+            plane: env_plane(),
+            wire: crate::config::env::wire_mode().unwrap_or(WireMode::Dense),
         })
     }
 
@@ -364,7 +538,7 @@ impl ShardedBackend {
         mask: &[f32],
         train: bool,
         mut correct_out: Option<&mut Vec<f32>>,
-    ) -> anyhow::Result<(f64, f64, f32, Option<Vec<f32>>)> {
+    ) -> anyhow::Result<(f64, f64, f32, Option<Vec<f32>>, Vec<bool>)> {
         let m = mask.len();
         anyhow::ensure!(x.len() == m * feature_dim, "x wrong size");
         anyhow::ensure!(y.len() == m, "y wrong size");
@@ -423,10 +597,15 @@ impl ShardedBackend {
         // buckets so hop k rides under the compute of stage k+1; bulk, it
         // travels whole. Same seeds, same per-element fold order — the
         // two schedules are bit-identical (`tests/overlap_parity.rs`).
+        // The zero plane always drives the pipelined schedule (depth 1
+        // when overlap is off) so its windows travel as slice frames; a
+        // single engaged shard exchanges nothing in a real deployment and
+        // takes the bulk path regardless of plane.
         let grad = if train {
             let mut grad = vec![0.0f32; param_count];
-            if self.overlap && engaged.len() > 1 {
-                let r = self.ring_overlapped(&mut links, &engaged, seq, model, &mut grad);
+            let ring = engaged.len() > 1 && (self.overlap || self.plane == Plane::Zero);
+            if ring {
+                let r = self.ring_pipelined(&mut links, &engaged, seq, model, &mut grad);
                 // Settle the comm lane before surfacing anything: a failed
                 // step must not leak queued sends (or their errors) into
                 // the next one.
@@ -453,25 +632,30 @@ impl ShardedBackend {
         } else {
             None
         };
-        Ok((loss_sum, acc_sum, denom, grad))
+        Ok((loss_sum, acc_sum, denom, grad, active))
     }
 
-    /// The pipelined bucket ring (Phase B with overlap on): split the
-    /// traveling accumulator into the deterministic bucket plan (see
+    /// The pipelined ring (Phase B): split the traveling accumulator into
+    /// the deterministic bucket plan (see
     /// [`crate::runtime::native::model::ModelDef::bucket_plan`]) and drive
-    /// every bucket through the engaged shards in row order, keeping at
-    /// most `DEPTH` buckets in flight per link. While bucket `k` hops,
-    /// each shard is folding (or prepping) the stages behind bucket `k+1`
+    /// every window through the engaged shards in row order, keeping at
+    /// most `depth` windows in flight per link. While window `k` hops,
+    /// each shard is folding (or prepping) the stages behind window `k+1`
     /// — the communication hides under backward compute instead of
-    /// serializing after it.
+    /// serializing after it. Under the replica plane windows travel as
+    /// `GradBucket` frames; under the zero plane they travel as the
+    /// configured slice frames, with compressed replies forwarded
+    /// verbatim hop to hop.
     ///
-    /// PARITY: the schedule moves, the arithmetic does not. Bucket `k`'s
+    /// PARITY: the schedule moves, the arithmetic does not. Window `k`'s
     /// seed at position `j` is exactly the window position `j-1` produced
     /// (zeros at position 0), and shards fold stages in completion order
     /// under cursors that forbid reordering — so every per-element row
     /// fold happens in the same sequence as the bulk ring and the fused
-    /// native step.
-    fn ring_overlapped(
+    /// native step. That makes replica-overlapped, zero-dense (any
+    /// depth) and fused-native bit-identical; topk/q8 fold DECODED
+    /// windows and are deterministic but not parity.
+    fn ring_pipelined(
         &self,
         links: &mut [Box<dyn ShardTransport>],
         engaged: &[usize],
@@ -482,35 +666,41 @@ impl ShardedBackend {
         let plan = self.inner.bucket_plan(model, self.bucket_bytes)?;
         let nb = plan.len();
         let p = engaged.len();
+        let zero = self.plane == Plane::Zero;
         // Per-link in-flight cap. Pipelining needs at most one bucket on
         // the wire plus one queued behind it; an unbounded window could
         // fill a TCP send buffer while this thread is blocked reading a
-        // different link (send/recv deadlock against the shard).
-        const DEPTH: usize = 2;
+        // different link (send/recv deadlock against the shard). With
+        // overlap off the cap drops to 1: hops serialize, and since the
+        // fold order is position-by-position identical either way, the
+        // two depths are bit-identical.
+        let depth: usize = if self.overlap { 2 } else { 1 };
         let mut sent = vec![0usize; p];
         let mut recvd = vec![0usize; p];
-        // Windows received from ring position j-1, awaiting the hop to j.
-        let mut staged: Vec<VecDeque<Vec<f32>>> = (0..p).map(|_| VecDeque::new()).collect();
+        // Frames received from ring position j-1, awaiting the hop to j.
+        // Under the zero plane a shard's reply is forwarded VERBATIM as
+        // the next hop's input — compressed payloads decode only at the
+        // fold site and at the final copy-out, never in transit.
+        let mut staged: Vec<VecDeque<ShardMsg>> = (0..p).map(|_| VecDeque::new()).collect();
         while recvd[p - 1] < nb {
             // Greedy sends: every bucket whose upstream window landed and
             // whose link has window room goes out now. Position 0 seeds
             // from the zeroed accumulator directly.
             for j in 0..p {
                 while sent[j] < nb
-                    && sent[j] - recvd[j] < DEPTH
+                    && sent[j] - recvd[j] < depth
                     && (j == 0 || !staged[j].is_empty())
                 {
                     let b = sent[j];
-                    let payload = if j == 0 {
-                        grad[plan[b].offset..plan[b].offset + plan[b].len].to_vec()
+                    let msg = if j == 0 {
+                        let win = grad[plan[b].offset..plan[b].offset + plan[b].len].to_vec();
+                        if zero {
+                            self.encode_slice(seq, b, plan[b].offset, win)
+                        } else {
+                            ShardMsg::GradBucket { seq, bucket: b, offset: plan[b].offset, grad: win }
+                        }
                     } else {
                         staged[j].pop_front().expect("checked non-empty")
-                    };
-                    let msg = ShardMsg::GradBucket {
-                        seq,
-                        bucket: b,
-                        offset: plan[b].offset,
-                        grad: payload,
                     };
                     self.send_ring_hop(&mut links[engaged[j]], engaged[j], seq, b, msg)?;
                     sent[j] += 1;
@@ -525,19 +715,42 @@ impl ShardedBackend {
                 .expect("overlapped ring stalled with buckets outstanding");
             let b = recvd[j];
             let s = engaged[j];
-            let (off, win) = recv_bucket_reply(&mut links[s], s, seq, b)?;
-            anyhow::ensure!(
-                off == plan[b].offset && win.len() == plan[b].len,
-                "shard {s}: bucket {b} of seq {seq} window [{off}, {}) != planned [{}, {})",
-                off + win.len(),
-                plan[b].offset,
-                plan[b].offset + plan[b].len
-            );
-            if j == p - 1 {
-                // Fully reduced: every engaged shard folded its rows in.
-                grad[off..off + win.len()].copy_from_slice(&win);
+            if zero {
+                let reply = recv_slice_reply(&mut links[s], s, seq, b, self.wire)?;
+                let (off, len) = slice_extent(&reply);
+                anyhow::ensure!(
+                    off == plan[b].offset && len == plan[b].len,
+                    "shard {s}: slice {b} of seq {seq} window [{off}, {}) != planned [{}, {})",
+                    off + len,
+                    plan[b].offset,
+                    plan[b].offset + plan[b].len
+                );
+                if j == p - 1 {
+                    // Fully reduced: every engaged shard folded its rows in.
+                    let win = decode_slice(reply)?;
+                    grad[off..off + win.len()].copy_from_slice(&win);
+                } else {
+                    staged[j + 1].push_back(reply);
+                }
             } else {
-                staged[j + 1].push_back(win);
+                let (off, win) = recv_bucket_reply(&mut links[s], s, seq, b)?;
+                anyhow::ensure!(
+                    off == plan[b].offset && win.len() == plan[b].len,
+                    "shard {s}: bucket {b} of seq {seq} window [{off}, {}) != planned [{}, {})",
+                    off + win.len(),
+                    plan[b].offset,
+                    plan[b].offset + plan[b].len
+                );
+                if j == p - 1 {
+                    grad[off..off + win.len()].copy_from_slice(&win);
+                } else {
+                    staged[j + 1].push_back(ShardMsg::GradBucket {
+                        seq,
+                        bucket: b,
+                        offset: off,
+                        grad: win,
+                    });
+                }
             }
             recvd[j] += 1;
         }
@@ -547,6 +760,25 @@ impl ShardedBackend {
             recv_bucket_fin(&mut links[s], s, seq, nb)?;
         }
         Ok(())
+    }
+
+    /// Wrap one accumulator window in the configured zero-plane slice
+    /// frame. Compression happens here (leader seed hop) and shard-side
+    /// on each reply — both directions of every hop carry the compressed
+    /// form.
+    fn encode_slice(&self, seq: u64, slice: usize, offset: usize, win: Vec<f32>) -> ShardMsg {
+        match self.wire {
+            WireMode::Dense => ShardMsg::GradSlice { seq, slice, offset, grad: win },
+            WireMode::TopK => {
+                let len = win.len();
+                let (idx, val) = wire::topk_encode(&win);
+                ShardMsg::GradTopK { seq, slice, offset, len, idx, val }
+            }
+            WireMode::Q8 => {
+                let (scale, q) = wire::q8_encode(&win);
+                ShardMsg::GradQ8 { seq, slice, offset, scale, q }
+            }
+        }
     }
 
     /// One leader->shard bucket send. Runs on the comm lane (off the
@@ -677,7 +909,7 @@ impl ComputeBackend for ShardedBackend {
         );
         anyhow::ensure!(mask.len() == bucket, "mask wrong size");
         out.correct.clear();
-        let (loss_sum, acc_sum, denom, grad) = self.exchange(
+        let (loss_sum, acc_sum, denom, grad, active) = self.exchange(
             model,
             &state.params,
             info.param_count,
@@ -690,9 +922,50 @@ impl ComputeBackend for ShardedBackend {
         )?;
         let grad = grad.expect("train exchange returns a gradient");
         let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
-        match optimizer {
-            Optimizer::Sgd => apply_sgd(state, &grad, lr),
-            Optimizer::Adam => apply_adam(state, &grad, lr),
+        match self.plane {
+            Plane::Replica => match optimizer {
+                Optimizer::Sgd => apply_sgd(state, &grad, lr),
+                Optimizer::Adam => apply_adam(state, &grad, lr),
+            },
+            // PARITY: the partition is a disjoint contiguous cover of the
+            // parameter vector and both optimizers are elementwise, so
+            // applying slice-by-slice (step bumped once, Adam's bias
+            // correction computed once) produces the fused application's
+            // bits exactly — `slice_optimizer_application_matches_fused_
+            // bitwise` in native::model pins this.
+            Plane::Zero => {
+                let parts = self.inner.param_partition(model, &active, self.bucket_bytes)?;
+                state.step += 1.0;
+                match optimizer {
+                    Optimizer::Sgd => {
+                        for r in parts {
+                            if !r.is_empty() {
+                                apply_sgd_slice(
+                                    &mut state.params[r.clone()],
+                                    &mut state.m[r.clone()],
+                                    &grad[r],
+                                    lr,
+                                );
+                            }
+                        }
+                    }
+                    Optimizer::Adam => {
+                        let t = state.step as f64;
+                        for r in parts {
+                            if !r.is_empty() {
+                                apply_adam_slice(
+                                    &mut state.params[r.clone()],
+                                    &mut state.m[r.clone()],
+                                    &mut state.v[r.clone()],
+                                    &grad[r],
+                                    lr,
+                                    t,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
         }
         out.loss = (loss_sum / denom as f64) as f32;
         out.acc = (acc_sum / denom as f64) as f32;
@@ -712,7 +985,7 @@ impl ComputeBackend for ShardedBackend {
     ) -> anyhow::Result<(f32, f32)> {
         let info = self.inner.schema().model(model)?.clone();
         anyhow::ensure!(params.len() == info.param_count, "params len mismatch");
-        let (loss_sum, acc_sum, denom, _) = self.exchange(
+        let (loss_sum, acc_sum, denom, _, _) = self.exchange(
             model,
             params,
             info.param_count,
@@ -788,6 +1061,21 @@ mod tests {
             assert_eq!(r.start, at);
             at = r.end;
         }
+    }
+
+    #[test]
+    fn plane_and_wire_builders_pin_the_exchange_axes() {
+        // Builder round-trip only — the env-derived defaults are not
+        // asserted here because CI sweeps DYNAMIX_PLANE/DYNAMIX_WIRE
+        // across the whole test binary.
+        let b = ShardedBackend::loopback_with_threads(2, 1)
+            .with_plane(Plane::Replica)
+            .with_wire(WireMode::Q8);
+        assert_eq!(b.plane(), Plane::Replica);
+        assert_eq!(b.wire(), WireMode::Q8);
+        let b = b.with_plane(Plane::Zero).with_wire(WireMode::TopK);
+        assert_eq!(b.plane(), Plane::Zero);
+        assert_eq!(b.wire(), WireMode::TopK);
     }
 
     #[test]

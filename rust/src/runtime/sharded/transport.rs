@@ -22,6 +22,12 @@
 //!    backward ends with a `BucketFin` plan-agreement acknowledgement;
 //! 4. optionally `GradFin` broadcast (replica-holding deployments apply
 //!    the same optimizer update locally; stateless shards don't need it).
+//!
+//! Under the ZeRO plane (the default; `DYNAMIX_PLANE=replica` restores
+//! the full-replica ring) step 3's windows travel as v4 `GradSlice`
+//! frames — or their compressed `GradTopK`/`GradQ8` forms under
+//! `DYNAMIX_WIRE` — and replica deployments exchange `ParamSlice`
+//! all-gather legs instead of a full `GradFin` gradient.
 
 use crate::comm::{Msg, ShardRows, Transport};
 use std::sync::mpsc;
@@ -56,6 +62,21 @@ pub enum ShardMsg {
     /// Shard → leader: the bucketed backward for step `seq` completed
     /// after exactly `buckets` buckets (the plan-agreement check).
     BucketFin { seq: u64, buckets: usize },
+    /// One traveling **slice** of the ZeRO plane's accumulator — the
+    /// dense window `[offset, offset + grad.len())`, hop `slice` of the
+    /// step's partition-aligned plan (same schedule as `GradBucket`, a
+    /// distinct frame so plane mismatches fail loudly).
+    GradSlice { seq: u64, slice: usize, offset: usize, grad: Vec<f32> },
+    /// A traveling slice under `DYNAMIX_WIRE=topk`: `len` is the dense
+    /// window length; `idx`/`val` the kept elements in strictly
+    /// increasing index order.
+    GradTopK { seq: u64, slice: usize, offset: usize, len: usize, idx: Vec<u32>, val: Vec<f32> },
+    /// A traveling slice under `DYNAMIX_WIRE=q8`: symmetric int8 with a
+    /// per-window power-of-two f32 scale; dense length is `q.len()`.
+    GradQ8 { seq: u64, slice: usize, offset: usize, scale: f32, q: Vec<i8> },
+    /// An owner's updated parameter slice — the all-gather leg of the
+    /// reduce-scatter plane (replica deployments only).
+    ParamSlice { seq: u64, slice: usize, offset: usize, params: Vec<f32> },
     /// Fully-reduced gradient broadcast (replica deployments only).
     GradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
     /// The shard failed to process step `seq` but stays serviceable; the
@@ -74,6 +95,10 @@ impl ShardMsg {
             | ShardMsg::GradOut { seq, .. }
             | ShardMsg::GradBucket { seq, .. }
             | ShardMsg::BucketFin { seq, .. }
+            | ShardMsg::GradSlice { seq, .. }
+            | ShardMsg::GradTopK { seq, .. }
+            | ShardMsg::GradQ8 { seq, .. }
+            | ShardMsg::ParamSlice { seq, .. }
             | ShardMsg::GradFin { seq, .. }
             | ShardMsg::Err { seq, .. } => *seq,
             ShardMsg::Shutdown => 0,
@@ -109,6 +134,33 @@ impl ShardMsg {
             ShardMsg::BucketFin { seq, buckets } => {
                 Msg::ShardBucketFin { seq: *seq, buckets: *buckets as u32 }
             }
+            ShardMsg::GradSlice { seq, slice, offset, grad } => Msg::ShardGradSlice {
+                seq: *seq,
+                slice: *slice as u32,
+                offset: *offset as u64,
+                grad: grad.clone(),
+            },
+            ShardMsg::GradTopK { seq, slice, offset, len, idx, val } => Msg::ShardGradTopK {
+                seq: *seq,
+                slice: *slice as u32,
+                offset: *offset as u64,
+                len: *len as u64,
+                idx: idx.clone(),
+                val: val.clone(),
+            },
+            ShardMsg::GradQ8 { seq, slice, offset, scale, q } => Msg::ShardGradQ8 {
+                seq: *seq,
+                slice: *slice as u32,
+                offset: *offset as u64,
+                scale: *scale,
+                q: q.clone(),
+            },
+            ShardMsg::ParamSlice { seq, slice, offset, params } => Msg::ShardParamSlice {
+                seq: *seq,
+                slice: *slice as u32,
+                offset: *offset as u64,
+                params: params.clone(),
+            },
             ShardMsg::GradFin { seq, loss, acc, grad } => Msg::ShardGradFin {
                 seq: *seq,
                 loss: *loss,
@@ -144,6 +196,34 @@ impl ShardMsg {
             Msg::ShardBucketFin { seq, buckets } => {
                 ShardMsg::BucketFin { seq, buckets: buckets as usize }
             }
+            Msg::ShardGradSlice { seq, slice, offset, grad } => ShardMsg::GradSlice {
+                seq,
+                slice: slice as usize,
+                offset: offset as usize,
+                grad,
+            },
+            Msg::ShardGradTopK { seq, slice, offset, len, idx, val } => ShardMsg::GradTopK {
+                seq,
+                slice: slice as usize,
+                offset: offset as usize,
+                len: usize::try_from(len)
+                    .map_err(|_| anyhow::anyhow!("topk dense length {len} overflows"))?,
+                idx,
+                val,
+            },
+            Msg::ShardGradQ8 { seq, slice, offset, scale, q } => ShardMsg::GradQ8 {
+                seq,
+                slice: slice as usize,
+                offset: offset as usize,
+                scale,
+                q,
+            },
+            Msg::ShardParamSlice { seq, slice, offset, params } => ShardMsg::ParamSlice {
+                seq,
+                slice: slice as usize,
+                offset: offset as usize,
+                params,
+            },
             Msg::ShardGradFin { seq, loss, acc, grad } => {
                 ShardMsg::GradFin { seq, loss, acc, grad }
             }
@@ -277,6 +357,17 @@ mod tests {
             ShardMsg::GradOut { seq: 1, grad: vec![0.1; 3] },
             ShardMsg::GradBucket { seq: 1, bucket: 2, offset: 650, grad: vec![0.5; 4] },
             ShardMsg::BucketFin { seq: 1, buckets: 3 },
+            ShardMsg::GradSlice { seq: 1, slice: 0, offset: 0, grad: vec![0.5; 4] },
+            ShardMsg::GradTopK {
+                seq: 1,
+                slice: 1,
+                offset: 640,
+                len: 8,
+                idx: vec![0, 6],
+                val: vec![1.5, -0.25],
+            },
+            ShardMsg::GradQ8 { seq: 1, slice: 2, offset: 64, scale: 0.03125, q: vec![3, -7, 127] },
+            ShardMsg::ParamSlice { seq: 1, slice: 0, offset: 0, params: vec![0.5; 4] },
             ShardMsg::GradFin { seq: 1, loss: 1.5, acc: 0.5, grad: vec![0.1; 3] },
             ShardMsg::Err { seq: 1, msg: "label 37 outside [0, 10)".into() },
             ShardMsg::Shutdown,

@@ -43,6 +43,20 @@ impl ShardServer {
         offset: usize,
         grad: Vec<f32>,
     ) -> anyhow::Result<ShardMsg> {
+        let out = self.fold_window(seq, bucket, offset, &grad)?;
+        Ok(ShardMsg::GradBucket { seq, bucket, offset, grad: out })
+    }
+
+    /// Shared in-order fold core of the bucketed replica ring and the
+    /// ZeRO slice plane: seed the `[offset, offset + grad.len())` window,
+    /// fold this window's stages, bump the in-order cursor.
+    fn fold_window(
+        &mut self,
+        seq: u64,
+        bucket: usize,
+        offset: usize,
+        grad: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
         let (held_seq, params, ctx) = self.held.as_mut().ok_or_else(|| {
             anyhow::anyhow!("bucket {bucket} (seq {seq}) without an in-flight step")
         })?;
@@ -56,9 +70,40 @@ impl ShardServer {
             self.buckets_done
         );
         let mut out = Vec::with_capacity(grad.len());
-        self.backend.shard_backward_bucket(params, ctx, offset, &grad, &mut out)?;
+        self.backend.shard_backward_bucket(params, ctx, offset, grad, &mut out)?;
         self.buckets_done += 1;
-        Ok(ShardMsg::GradBucket { seq, bucket, offset, grad: out })
+        Ok(out)
+    }
+
+    /// Handle one ZeRO-plane slice frame: decode its payload to the dense
+    /// window, fold with the same in-order machinery as
+    /// [`Self::handle_bucket`] (the slice id is the bucket index), and
+    /// re-encode the folded window in the SAME wire mode for the reply.
+    /// Same reply-before-retire contract as buckets. Compressed modes are
+    /// lossy on purpose: the fold input is the decoded window and the
+    /// reply re-compresses, which is deterministic but not bit-parity
+    /// with the dense plane.
+    pub fn handle_slice(&mut self, msg: ShardMsg) -> anyhow::Result<ShardMsg> {
+        use crate::comm::wire;
+        match msg {
+            ShardMsg::GradSlice { seq, slice, offset, grad } => {
+                let out = self.fold_window(seq, slice, offset, &grad)?;
+                Ok(ShardMsg::GradSlice { seq, slice, offset, grad: out })
+            }
+            ShardMsg::GradTopK { seq, slice, offset, len, idx, val } => {
+                let dense = wire::topk_decode(len, &idx, &val)?;
+                let out = self.fold_window(seq, slice, offset, &dense)?;
+                let (idx, val) = wire::topk_encode(&out);
+                Ok(ShardMsg::GradTopK { seq, slice, offset, len, idx, val })
+            }
+            ShardMsg::GradQ8 { seq, slice, offset, scale, q } => {
+                let dense = wire::q8_decode(scale, &q)?;
+                let out = self.fold_window(seq, slice, offset, &dense)?;
+                let (scale, q) = wire::q8_encode(&out);
+                Ok(ShardMsg::GradQ8 { seq, slice, offset, scale, q })
+            }
+            other => anyhow::bail!("handle_slice: not a slice frame: {other:?}"),
+        }
     }
 
     /// Post-reply step of the bucket protocol: if every stage has folded,
@@ -178,6 +223,28 @@ pub fn serve(mut transport: impl ShardTransport, backend: Arc<NativeBackend>) ->
             }
             continue;
         }
+        // ZeRO-plane slice frames follow the exact bucket discipline
+        // (reply first, retire/prep-ahead after) — the slice id rides the
+        // same in-order cursor.
+        if matches!(
+            msg,
+            ShardMsg::GradSlice { .. } | ShardMsg::GradTopK { .. } | ShardMsg::GradQ8 { .. }
+        ) {
+            match server.handle_slice(msg) {
+                Ok(reply) => {
+                    transport.send(reply)?;
+                    match server.bucket_retire(seq) {
+                        Ok(Some(fin)) => transport.send(fin)?,
+                        Ok(None) => {}
+                        Err(e) => {
+                            transport.send(ShardMsg::Err { seq, msg: format!("{e:#}") })?
+                        }
+                    }
+                }
+                Err(e) => transport.send(ShardMsg::Err { seq, msg: format!("{e:#}") })?,
+            }
+            continue;
+        }
         match server.handle(msg) {
             Ok(Some(reply)) => transport.send(reply)?,
             Ok(None) => {}
@@ -245,6 +312,63 @@ mod tests {
         let reply =
             s.handle(ShardMsg::GradSeed { seq: 5, grad: vec![0.0; 25_546] }).unwrap().unwrap();
         assert!(matches!(reply, ShardMsg::GradOut { seq: 5, .. }));
+    }
+
+    #[test]
+    fn slice_frames_fold_and_reply_in_their_own_wire_mode() {
+        use crate::comm::ShardRows;
+        let b = Arc::new(NativeBackend::with_threads(1));
+        let fd = b.schema().feature_dim;
+        let params = Arc::new(b.init_params("vgg11_mini", 0).unwrap());
+        let pc = params.len();
+        let mut s = ShardServer::new(b);
+        let step = |seq| ShardMsg::Step {
+            seq,
+            denom: 2.0,
+            train: true,
+            rows: Some(ShardRows {
+                model: "vgg11_mini".into(),
+                x: vec![0.1; 2 * fd],
+                y: vec![0, 1],
+                mask: vec![1.0, 1.0],
+            }),
+            params: Some(Arc::clone(&params)),
+        };
+        // Dense slice covering the whole model folds and replies GradSlice.
+        s.handle(step(5)).unwrap().unwrap();
+        let reply = s
+            .handle_slice(ShardMsg::GradSlice { seq: 5, slice: 0, offset: 0, grad: vec![0.0; pc] })
+            .unwrap();
+        let ShardMsg::GradSlice { seq: 5, slice: 0, offset: 0, grad } = reply else {
+            panic!("dense slice must reply GradSlice, got {reply:?}");
+        };
+        assert_eq!(grad.len(), pc);
+        assert!(grad.iter().any(|&g| g != 0.0), "fold produced an all-zero gradient");
+        assert!(matches!(
+            s.bucket_retire(5).unwrap(),
+            Some(ShardMsg::BucketFin { seq: 5, buckets: 1 })
+        ));
+        // Q8 slice decodes, folds, and replies Q8 (not dense).
+        s.handle(step(6)).unwrap().unwrap();
+        let reply = s
+            .handle_slice(ShardMsg::GradQ8 {
+                seq: 6,
+                slice: 0,
+                offset: 0,
+                scale: 0.0,
+                q: vec![0; pc],
+            })
+            .unwrap();
+        assert!(matches!(reply, ShardMsg::GradQ8 { seq: 6, slice: 0, offset: 0, .. }), "{reply:?}");
+        s.bucket_retire(6).unwrap();
+        // Non-slice frames are rejected by handle_slice, and a slice with
+        // nothing in flight is an error like any bucket.
+        assert!(s.handle_slice(ShardMsg::Shutdown).is_err());
+        let err = s
+            .handle_slice(ShardMsg::GradSlice { seq: 9, slice: 0, offset: 0, grad: vec![0.0; 4] })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("without an in-flight step"), "{err}");
     }
 
     #[test]

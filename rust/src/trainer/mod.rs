@@ -118,6 +118,16 @@ impl ModelRuntime {
         full_size_param_count(&self.model) * 4
     }
 
+    /// [`Self::grad_bytes`] under a slice codec: the analytic per-element
+    /// payload of `DYNAMIX_WIRE` applied to the full-size parameter count
+    /// (dense = 4 bytes/param, topk = 8 bytes per kept element, q8 = 1
+    /// byte/param + scale). Framing is excluded on purpose — the netsim
+    /// prices payload movement, and the committed `zero/bytes-per-step`
+    /// bench session uses the same accounting.
+    pub fn wire_bytes(&self, mode: crate::comm::wire::WireMode) -> usize {
+        mode.payload_bytes(full_size_param_count(&self.model))
+    }
+
     /// Execute one fused train step on `n_valid` samples padded to
     /// `bucket`. `xs`/`ys` must already be bucket-sized. The padding mask
     /// and the backend output live in persistent buffers: at a steady
@@ -287,6 +297,10 @@ pub struct BspTrainer {
     /// Target bytes per gradient bucket for the overlap timeline
     /// (`DYNAMIX_BUCKET_KB`, same default as the data plane).
     bucket_bytes: usize,
+    /// Slice codec the collective pricing assumes (`DYNAMIX_WIRE`, read
+    /// once at construction) — compressed modes shrink the priced
+    /// payload exactly as they shrink the data plane's frames.
+    wire_sync: crate::comm::wire::WireMode,
 }
 
 impl BspTrainer {
@@ -340,6 +354,8 @@ impl BspTrainer {
             bucket_bytes: crate::config::env::bucket_kb()
                 .map(|kb| kb * 1024)
                 .unwrap_or(32 << 10),
+            wire_sync: crate::config::env::wire_mode()
+                .unwrap_or(crate::comm::wire::WireMode::Dense),
         })
     }
 
@@ -347,6 +363,12 @@ impl BspTrainer {
     /// without touching the process environment).
     pub fn set_overlap_sync(&mut self, on: bool) {
         self.overlap_sync = on;
+    }
+
+    /// Pin the priced slice codec (tests compare wire modes without
+    /// touching the process environment).
+    pub fn set_wire_sync(&mut self, mode: crate::comm::wire::WireMode) {
+        self.wire_sync = mode;
     }
 
     pub fn n_workers(&self) -> usize {
@@ -619,7 +641,7 @@ impl BspTrainer {
         // The collective only spans the machines that are present.
         let outcomes = self.cluster.compute_phase(&self.batches);
         let profiles = self.cluster.active_profiles();
-        let grad_bytes = self.runtime.grad_bytes();
+        let grad_bytes = self.runtime.wire_bytes(self.wire_sync);
         let sync = if self.overlap_sync {
             // Pipelined pricing: buckets stream out as the straggler's
             // backward produces them, so only the tail of the collective

@@ -346,9 +346,10 @@ fn shard_protocol_rejects_malformed_shard_steps() {
 
 /// A TCP shard transport that severs its connection the moment the
 /// traveling gradient reaches it after the kill flag is raised — on the
-/// bulk ring that is the `GradSeed`, on the overlapped ring the first
-/// `GradBucket` frame, i.e. the socket dies **mid-bucket-hop** with the
-/// leader's accumulator in flight either way.
+/// bulk ring that is the `GradSeed`, on the overlapped replica ring the
+/// first `GradBucket` frame, and on the zero plane the first slice frame
+/// of any wire mode, i.e. the socket dies **mid-hop** with the leader's
+/// accumulator in flight whichever plane is configured.
 struct KillableTransport<T: dynamix::runtime::sharded::transport::ShardTransport> {
     inner: T,
     kill: Arc<std::sync::atomic::AtomicBool>,
@@ -368,6 +369,9 @@ impl<T: dynamix::runtime::sharded::transport::ShardTransport>
                 msg,
                 dynamix::runtime::sharded::transport::ShardMsg::GradSeed { .. }
                     | dynamix::runtime::sharded::transport::ShardMsg::GradBucket { .. }
+                    | dynamix::runtime::sharded::transport::ShardMsg::GradSlice { .. }
+                    | dynamix::runtime::sharded::transport::ShardMsg::GradTopK { .. }
+                    | dynamix::runtime::sharded::transport::ShardMsg::GradQ8 { .. }
             )
         {
             // Returning an error makes `serve` exit, dropping the TCP

@@ -249,9 +249,14 @@ fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
 }
 
 /// A random message spanning every wire variant — control plane and the
-/// shard-gradient data plane, including both Option branches of ShardStep.
+/// shard-gradient data plane, including both Option branches of ShardStep
+/// and the PROTO_VERSION 4 zero-plane slice frames. The compressed slice
+/// variants go through the real codecs so the decoder's structural
+/// validation (strict topk index monotonicity, count checks) accepts
+/// them; hostile frames are covered by the truncation property and the
+/// dedicated tests in `comm`.
 fn random_wire_msg(rng: &mut Rng) -> Msg {
-    match rng.below(14) {
+    match rng.below(18) {
         0 => Msg::Register { worker: rng.next_u64() as u32, max_batch: rng.next_u64() as u32 },
         1 => Msg::Welcome {
             worker: rng.next_u64() as u32,
@@ -319,11 +324,94 @@ fn random_wire_msg(rng: &mut Rng) -> Msg {
             offset: rng.next_u64() % 100_000,
             grad: rand_f32s(rng, 48),
         },
-        _ => Msg::ShardBucketFin {
+        13 => Msg::ShardBucketFin {
             seq: rng.next_u64(),
             buckets: rng.below(64) as u32,
         },
+        14 => Msg::ShardGradSlice {
+            seq: rng.next_u64(),
+            slice: rng.below(16) as u32,
+            offset: rng.next_u64() % 100_000,
+            grad: rand_f32s(rng, 48),
+        },
+        15 => {
+            let x = rand_f32s(rng, 48);
+            let (idx, val) = dynamix::comm::wire::topk_encode(&x);
+            Msg::ShardGradTopK {
+                seq: rng.next_u64(),
+                slice: rng.below(16) as u32,
+                offset: rng.next_u64() % 100_000,
+                len: x.len() as u64,
+                idx,
+                val,
+            }
+        }
+        16 => {
+            let x = rand_f32s(rng, 48);
+            let (scale, q) = dynamix::comm::wire::q8_encode(&x);
+            Msg::ShardGradQ8 {
+                seq: rng.next_u64(),
+                slice: rng.below(16) as u32,
+                offset: rng.next_u64() % 100_000,
+                scale,
+                q,
+            }
+        }
+        _ => Msg::ShardParamSlice {
+            seq: rng.next_u64(),
+            slice: rng.below(16) as u32,
+            offset: rng.next_u64() % 100_000,
+            params: rand_f32s(rng, 48),
+        },
     }
+}
+
+#[test]
+fn prop_q8_codec_is_byte_stable_and_exact_on_decoded_values() {
+    // The q8 scale is a power of two chosen so the quantized maximum
+    // lands in [64, 127]: decode is exact (no rounding in q * 2^e), so a
+    // second encode of the decoded vector reproduces the identical
+    // (scale, bytes) — the leader can forward compressed frames verbatim
+    // without decode/re-encode drift.
+    check("q8_byte_stable", 400, |rng, case| {
+        let x = rand_f32s(rng, 64);
+        let (scale, q) = dynamix::comm::wire::q8_encode(&x);
+        let decoded = dynamix::comm::wire::q8_decode(scale, &q).unwrap();
+        let (scale2, q2) = dynamix::comm::wire::q8_encode(&decoded);
+        assert_eq!(scale.to_bits(), scale2.to_bits(), "case {case}: scale moved");
+        assert_eq!(q, q2, "case {case}: bytes moved");
+        // And re-decode is a fixed point.
+        let decoded2 = dynamix::comm::wire::q8_decode(scale2, &q2).unwrap();
+        assert_eq!(
+            decoded.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            decoded2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "case {case}: decode not a fixed point"
+        );
+    });
+}
+
+#[test]
+fn prop_topk_indices_strictly_increasing_and_roundtrip_sparse() {
+    check("topk_monotone", 400, |rng, case| {
+        let x = rand_f32s(rng, 64);
+        let (idx, val) = dynamix::comm::wire::topk_encode(&x);
+        assert_eq!(idx.len(), dynamix::comm::wire::topk_k(x.len()), "case {case}");
+        assert_eq!(idx.len(), val.len(), "case {case}");
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "case {case}: indices not strictly increasing: {idx:?}");
+        }
+        let decoded = dynamix::comm::wire::topk_decode(x.len(), &idx, &val).unwrap();
+        assert_eq!(decoded.len(), x.len(), "case {case}");
+        // Every kept coordinate survives bitwise; every dropped one is 0.
+        let kept: std::collections::BTreeMap<u32, f32> =
+            idx.iter().copied().zip(val.iter().copied()).collect();
+        for (i, v) in decoded.iter().enumerate() {
+            match kept.get(&(i as u32)) {
+                Some(orig) => assert_eq!(v.to_bits(), orig.to_bits(), "case {case}: idx {i}"),
+                None => assert_eq!(*v, 0.0, "case {case}: dropped idx {i} nonzero"),
+            }
+        }
+    });
 }
 
 #[test]

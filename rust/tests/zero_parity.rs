@@ -1,0 +1,235 @@
+//! Parity + determinism oracle for the **ZeRO plane** (reduce-scatter →
+//! per-owner optimizer slice → all-gather) introduced in PR 8.
+//!
+//! Contract under test, exactly as documented in `runtime/sharded`:
+//!
+//! * **dense** wire: the zero plane is *bitwise identical* to the
+//!   full-replica ring and to the fused native backend — same travel
+//!   plan, same fold order, only the optimizer-application grouping and
+//!   the accounting differ. Checked across shard counts (including the
+//!   n = 1 and eval bypasses), bucket plans, kernel tiers, overlap
+//!   on/off, and mid-run preemption.
+//! * **topk/q8** wire: bit parity with the fused step is deliberately
+//!   traded for wire bytes, but the codecs are deterministic — two fresh
+//!   backends replay the identical bit sequence — and training still
+//!   converges on a repeated batch.
+//!
+//! Every backend here pins plane and wire through the builders, never the
+//! environment: CI sweeps `DYNAMIX_PLANE`/`DYNAMIX_WIRE` across whole
+//! test binaries and these oracles must hold under any ambient setting.
+
+use dynamix::comm::wire::WireMode;
+use dynamix::config::Optimizer;
+use dynamix::runtime::{
+    ComputeBackend, KernelTier, NativeBackend, OptState, Plane, ShardedBackend, TrainOut,
+};
+use dynamix::util::rng::Rng;
+
+/// Bucket-plan targets: finest (one bucket per completion stage), ~two
+/// dense layers per bucket, and the whole-model single bucket.
+const PLANS: &[usize] = &[0, 40 << 10, 1 << 30];
+
+/// Awkward valid-batch ladder (see `overlap_parity`): empty shards at
+/// n = 7, exact bucket, live padding rows, single-example shards.
+const BATCHES: &[usize] = &[5, 32, 103, 61, 7];
+
+fn batch(bucket: usize, fd: usize, n_valid: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; bucket * fd];
+    let mut y = vec![0i32; bucket];
+    let mut mask = vec![0.0f32; bucket];
+    for r in 0..n_valid {
+        for v in &mut x[r * fd..(r + 1) * fd] {
+            *v = rng.normal() as f32;
+        }
+        y[r] = rng.below(10) as i32;
+        mask[r] = 1.0;
+    }
+    (x, y, mask)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Multi-step Adam train sequence reduced to comparable bits (losses,
+/// accuracies, per-example corrects, final params + second moments).
+fn run_sequence(
+    b: &dyn ComputeBackend,
+    model: &str,
+    valid_batches: &[usize],
+) -> (Vec<(u32, u32, u32, Vec<u32>)>, Vec<u32>, Vec<u32>) {
+    let fd = b.schema().feature_dim;
+    let mut state = OptState::new(b.init_params(model, 0).unwrap(), Optimizer::Adam);
+    let mut steps = Vec::new();
+    let mut out = TrainOut::default();
+    for (i, &nv) in valid_batches.iter().enumerate() {
+        let bucket = b.schema().bucket_for(nv).unwrap();
+        let (x, y, mask) = batch(bucket, fd, nv, 4_400 + i as u64);
+        b.train_step_into(model, Optimizer::Adam, bucket, &mut state, &x, &y, &mask, 0.002, &mut out)
+            .unwrap();
+        steps.push((
+            out.loss.to_bits(),
+            out.acc.to_bits(),
+            out.grad_l2.to_bits(),
+            bits(&out.correct),
+        ));
+    }
+    (steps, bits(&state.params), bits(&state.v))
+}
+
+fn zero(n: usize, wire: WireMode, overlap: bool, target: usize) -> ShardedBackend {
+    ShardedBackend::loopback_with_threads(n, 1)
+        .with_overlap(overlap, target)
+        .with_plane(Plane::Zero)
+        .with_wire(wire)
+}
+
+#[test]
+fn zero_dense_equals_replica_equals_native_across_plans_and_shards() {
+    for model in ["vgg11_mini", "resnet34_mini"] {
+        let native = NativeBackend::with_threads(1);
+        let want = run_sequence(&native, model, BATCHES);
+        for &target in PLANS {
+            for n in [1usize, 2, 4, 7] {
+                for overlap in [false, true] {
+                    let zb = zero(n, WireMode::Dense, overlap, target);
+                    assert_eq!(
+                        run_sequence(&zb, model, BATCHES),
+                        want,
+                        "{model}: zero/dense (n={n}, overlap={overlap}, \
+                         bucket_bytes={target}) diverged from native"
+                    );
+                }
+                let replica = ShardedBackend::loopback_with_threads(n, 1)
+                    .with_overlap(true, target)
+                    .with_plane(Plane::Replica);
+                assert_eq!(
+                    run_sequence(&replica, model, BATCHES),
+                    want,
+                    "{model}: replica ring (n={n}, bucket_bytes={target}) diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_dense_parity_holds_per_kernel_tier() {
+    for tier in KernelTier::available() {
+        let native = NativeBackend::with_kernel(1, tier);
+        let want = run_sequence(&native, "vgg11_mini", &[5, 32, 103]);
+        let zb = ShardedBackend::loopback_with_kernel(4, 1, tier)
+            .with_overlap(true, 40 << 10)
+            .with_plane(Plane::Zero)
+            .with_wire(WireMode::Dense);
+        assert_eq!(
+            run_sequence(&zb, "vgg11_mini", &[5, 32, 103]),
+            want,
+            "zero/dense ({tier:?}) diverged from native"
+        );
+    }
+}
+
+#[test]
+fn zero_dense_survives_preemption_mid_run() {
+    // Membership churn re-partitions parameter ownership (the freed
+    // slice redistributes to survivors), but dense-wire outputs must
+    // stay bit-identical to native throughout: ownership only groups
+    // optimizer application, it never reorders a fold.
+    let native = NativeBackend::with_threads(1);
+    let sharded = zero(4, WireMode::Dense, true, 0);
+    let fd = native.schema().feature_dim;
+    let mut ns = OptState::new(native.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut ss = OptState::new(sharded.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
+    let mut no = TrainOut::default();
+    let mut so = TrainOut::default();
+    let plan: &[(usize, Option<(usize, bool)>)] = &[
+        (96, None),
+        (96, Some((1, false))),
+        (103, None),
+        (103, Some((1, true))),
+        (64, None),
+    ];
+    for (i, &(nv, membership)) in plan.iter().enumerate() {
+        if let Some((shard, active)) = membership {
+            assert!(sharded.set_shard_active(shard, active));
+        }
+        let bucket = native.schema().bucket_for(nv).unwrap();
+        let (x, y, mask) = batch(bucket, fd, nv, 8_800 + i as u64);
+        native
+            .train_step_into("vgg11_mini", Optimizer::Sgd, bucket, &mut ns, &x, &y, &mask, 0.05, &mut no)
+            .unwrap();
+        sharded
+            .train_step_into("vgg11_mini", Optimizer::Sgd, bucket, &mut ss, &x, &y, &mask, 0.05, &mut so)
+            .unwrap();
+        assert_eq!(no.loss.to_bits(), so.loss.to_bits(), "step {i}: loss diverged");
+        assert_eq!(bits(&ns.params), bits(&ss.params), "step {i}: params diverged");
+    }
+}
+
+#[test]
+fn compressed_wire_is_run_to_run_deterministic() {
+    // topk/q8 drop bit parity with the fused step by design; what they
+    // must never drop is determinism. Two fresh backends with identical
+    // inputs replay the identical bit sequence — the codecs have no
+    // hidden iteration-order or floating-environment dependence.
+    for wire in [WireMode::TopK, WireMode::Q8] {
+        for n in [2usize, 4, 7] {
+            let a = run_sequence(&zero(n, wire, true, 40 << 10), "vgg11_mini", BATCHES);
+            let b = run_sequence(&zero(n, wire, true, 40 << 10), "vgg11_mini", BATCHES);
+            assert_eq!(a, b, "zero/{wire:?} (n={n}) is not run-to-run deterministic");
+        }
+    }
+}
+
+#[test]
+fn compressed_wire_still_converges_on_a_repeated_batch() {
+    // Lossy codecs must remain usable: six Adam steps on one repeated
+    // batch strictly reduce the loss below the first step's.
+    for wire in [WireMode::TopK, WireMode::Q8] {
+        let b = zero(4, wire, true, 40 << 10);
+        let fd = b.schema().feature_dim;
+        let mut state = OptState::new(b.init_params("vgg11_mini", 0).unwrap(), Optimizer::Adam);
+        let mut out = TrainOut::default();
+        let bucket = b.schema().bucket_for(64).unwrap();
+        let (x, y, mask) = batch(bucket, fd, 64, 777);
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            b.train_step_into(
+                "vgg11_mini", Optimizer::Adam, bucket, &mut state, &x, &y, &mask, 0.002, &mut out,
+            )
+            .unwrap();
+            losses.push(out.loss);
+        }
+        let first = losses[0];
+        let min = losses.iter().copied().fold(f32::INFINITY, f32::min);
+        assert!(
+            min < first,
+            "zero/{wire:?}: loss never improved over 6 repeated steps ({losses:?})"
+        );
+    }
+}
+
+#[test]
+fn single_shard_and_eval_steps_bypass_the_zero_exchange() {
+    // n = 1 has nothing to scatter (the bulk path runs, compressed or
+    // not); eval steps never touch a gradient. Both must match native
+    // bitwise even under a compressed wire setting.
+    let native = NativeBackend::with_threads(1);
+    for wire in [WireMode::Dense, WireMode::TopK, WireMode::Q8] {
+        let single = zero(1, wire, true, 0);
+        assert_eq!(
+            run_sequence(&single, "vgg11_mini", &[32, 7]),
+            run_sequence(&native, "vgg11_mini", &[32, 7]),
+            "n=1 zero/{wire:?} diverged"
+        );
+    }
+    let fd = native.schema().feature_dim;
+    let params = native.init_params("vgg11_mini", 0).unwrap();
+    let (x, y, mask) = batch(96, fd, 96, 31);
+    let multi = zero(3, WireMode::Q8, true, 0);
+    let (nl, na) = native.eval_step("vgg11_mini", &params, &x, &y, &mask).unwrap();
+    let (sl, sa) = multi.eval_step("vgg11_mini", &params, &x, &y, &mask).unwrap();
+    assert_eq!((nl.to_bits(), na.to_bits()), (sl.to_bits(), sa.to_bits()));
+}
