@@ -1,0 +1,1173 @@
+//! Crash-consistent checkpoint/restore + event-sourced run journal.
+//!
+//! Durable elastic runs: the coordinator periodically captures **every**
+//! piece of mutable run state — model/optimizer, cluster + fabric
+//! processes (with their raw RNG streams), shard samplers, the remaining
+//! scenario timeline, the RL agent (policy params + Adam moments +
+//! exploration RNG), convergence detector, calibration refs and the
+//! record-so-far — into one binary [`ResumeState`] image. All of that
+//! state is flat buffers and scalars, so serialization is a straight
+//! field walk over `comm::wire`'s [`Encoder`]/[`Decoder`]; nothing is
+//! approximated, which is what makes a restored run continue the
+//! original **bit-for-bit** (`tests/checkpoint_restore.rs` pins a
+//! SIGKILL-mid-run → restore → bitwise-identical-record oracle).
+//!
+//! Crash consistency is temp-file + rename: a checkpoint is visible under
+//! its final `ckpt-<step>.bin` name only after its bytes are durably
+//! written, so a kill at ANY point leaves either the previous checkpoint
+//! or a complete new one — never a torn file. Restore picks the
+//! highest-step image in the directory.
+//!
+//! Every image opens with a fingerprint header ([`CkptHeader`]): the
+//! gradient plane (`DYNAMIX_PLANE`), wire codec (`DYNAMIX_WIRE`), seed,
+//! worker count and model. A restore under a different deployment is
+//! rejected loudly, naming both values — resuming a zero-plane run on the
+//! replica plane (or across wire codecs) would silently diverge instead
+//! of resuming, exactly the mixed-deployment hazard the sharded
+//! handshake already rejects.
+//!
+//! The run **journal** (`journal.jsonl`) is the event-sourced side: one
+//! JSON line per decision cycle, per applied scenario/membership event
+//! and per checkpoint, each stamped with the SIM clock (never wall time —
+//! `dynamix-lint`'s wall-clock rule covers this module). The journal is
+//! append-only and a reader tolerates a torn final line, so it survives
+//! kill -9 too and lets a restore (or a human) re-trace how the timeline
+//! was re-armed mid-run.
+
+use crate::comm::wire::{Decoder, Encoder, WireMode};
+use crate::metrics::{DetectorState, RunRecord, TracePoint};
+use crate::rl::agent::AgentState;
+use crate::runtime::OptState;
+use crate::sim::engine::QueueState;
+use crate::sim::process::ProcessState;
+use crate::sim::scenario::ScenarioEvent;
+use crate::trainer::TrainerState;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// File magic: identifies a DYNAMIX checkpoint image.
+pub const MAGIC: &[u8; 8] = b"DYNXCKPT";
+/// Bump on any layout change; old images are rejected loudly.
+pub const CKPT_VERSION: u16 = 1;
+
+/// Deployment fingerprint. A checkpoint taken under one deployment must
+/// not silently resume under another: the restored trajectory would
+/// diverge from the original instead of continuing it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptHeader {
+    /// Gradient exchange plane (`DYNAMIX_PLANE`: `zero` | `replica`).
+    pub plane: String,
+    /// Gradient-slice wire codec (`DYNAMIX_WIRE`: `dense` | `topk` | `q8`).
+    pub wire: String,
+    pub seed: u64,
+    pub n_workers: usize,
+    pub model: String,
+}
+
+impl CkptHeader {
+    fn encode(&self, e: &mut Encoder) {
+        e.str(&self.plane);
+        e.str(&self.wire);
+        e.u64(self.seed);
+        e.u64(self.n_workers as u64);
+        e.str(&self.model);
+    }
+
+    fn decode(d: &mut Decoder) -> anyhow::Result<CkptHeader> {
+        Ok(CkptHeader {
+            plane: d.str()?,
+            wire: d.str()?,
+            seed: d.u64()?,
+            n_workers: d.u64()? as usize,
+            model: d.str()?,
+        })
+    }
+
+    /// Reject a cross-deployment restore, naming both values.
+    pub fn check(&self, expect: &CkptHeader) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.plane == expect.plane,
+            "checkpoint was taken under DYNAMIX_PLANE={:?} but this run uses \
+             DYNAMIX_PLANE={:?}; a cross-plane resume would diverge instead of \
+             continuing — restart fresh or match the plane",
+            self.plane,
+            expect.plane
+        );
+        anyhow::ensure!(
+            self.wire == expect.wire,
+            "checkpoint was taken under DYNAMIX_WIRE={:?} but this run uses \
+             DYNAMIX_WIRE={:?}; a cross-codec resume would diverge instead of \
+             continuing — restart fresh or match the codec",
+            self.wire,
+            expect.wire
+        );
+        anyhow::ensure!(
+            self.seed == expect.seed,
+            "checkpoint seed {} != this run's seed {}",
+            self.seed,
+            expect.seed
+        );
+        anyhow::ensure!(
+            self.n_workers == expect.n_workers,
+            "checkpoint is for {} workers, this run has {}",
+            self.n_workers,
+            expect.n_workers
+        );
+        anyhow::ensure!(
+            self.model == expect.model,
+            "checkpoint model {:?} != this run's model {:?}",
+            self.model,
+            expect.model
+        );
+        Ok(())
+    }
+}
+
+/// Plain-data image of the pending `CycleOutcome` (the window summary the
+/// next action will be chosen from).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CycleSnap {
+    pub states: Vec<Vec<f32>>,
+    pub rewards: Vec<f64>,
+    pub active: Vec<bool>,
+    pub sim_clock: f64,
+    pub train_acc: f64,
+    pub eval_acc: f64,
+    pub loss: f64,
+}
+
+/// Everything a resumed inference run needs to continue bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct ResumeState {
+    /// Decision-cycle index to resume AT (the checkpoint was taken at the
+    /// top of this cycle, before its trace point was recorded).
+    pub step: usize,
+    pub trainer: TrainerState,
+    pub agent: AgentState,
+    pub detector: DetectorState,
+    pub eval_history: Vec<f64>,
+    pub calibrated: bool,
+    /// `StateBuilder::iter_time_ref` (first-window calibration).
+    pub state_iter_time_ref: f64,
+    /// `RewardParams::iter_time_ref`.
+    pub reward_iter_time_ref: f64,
+    /// The record as of this checkpoint (points for cycles `< step`).
+    pub record: RunRecord,
+    /// The pending cycle outcome the resumed loop acts on.
+    pub cycle: CycleSnap,
+}
+
+// --- field-walk codecs ---
+
+fn enc_opt(e: &mut Encoder, o: &OptState) {
+    e.f32s(&o.params);
+    e.f32s(&o.m);
+    e.f32s(&o.v);
+    e.f32(o.step);
+}
+
+fn dec_opt(d: &mut Decoder) -> anyhow::Result<OptState> {
+    Ok(OptState {
+        params: d.f32s()?,
+        m: d.f32s()?,
+        v: d.f32s()?,
+        step: d.f32()?,
+    })
+}
+
+fn enc_process(e: &mut Encoder, p: &ProcessState) {
+    e.f64(p.level);
+    e.f64(p.mean);
+    e.f64(p.rate);
+    e.f64(p.vol);
+    e.f64(p.burst_rate);
+    e.f64(p.burst_level);
+    e.f64(p.lo);
+    e.f64(p.hi);
+    enc_rng(e, &p.rng);
+}
+
+fn dec_process(d: &mut Decoder) -> anyhow::Result<ProcessState> {
+    Ok(ProcessState {
+        level: d.f64()?,
+        mean: d.f64()?,
+        rate: d.f64()?,
+        vol: d.f64()?,
+        burst_rate: d.f64()?,
+        burst_level: d.f64()?,
+        lo: d.f64()?,
+        hi: d.f64()?,
+        rng: dec_rng(d)?,
+    })
+}
+
+fn enc_rng(e: &mut Encoder, s: &[u64; 4]) {
+    for &w in s {
+        e.u64(w);
+    }
+}
+
+fn dec_rng(d: &mut Decoder) -> anyhow::Result<[u64; 4]> {
+    Ok([d.u64()?, d.u64()?, d.u64()?, d.u64()?])
+}
+
+fn enc_profile(e: &mut Encoder, p: &crate::cluster::WorkerProfile) {
+    e.f64(p.speed);
+    e.f64(p.mem_mib);
+    e.f64(p.bandwidth_gbps);
+    e.f64(p.latency_ms);
+    e.f64(p.load_mean);
+    e.f64(p.load_rate);
+    e.f64(p.load_vol);
+    e.f64(p.burst_rate);
+    e.f64(p.burst_level);
+}
+
+fn dec_profile(d: &mut Decoder) -> anyhow::Result<crate::cluster::WorkerProfile> {
+    Ok(crate::cluster::WorkerProfile {
+        speed: d.f64()?,
+        mem_mib: d.f64()?,
+        bandwidth_gbps: d.f64()?,
+        latency_ms: d.f64()?,
+        load_mean: d.f64()?,
+        load_rate: d.f64()?,
+        load_vol: d.f64()?,
+        burst_rate: d.f64()?,
+        burst_level: d.f64()?,
+    })
+}
+
+fn enc_option_f64(e: &mut Encoder, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            e.u8(1);
+            e.f64(x);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn dec_option_f64(d: &mut Decoder) -> anyhow::Result<Option<f64>> {
+    Ok(match d.u8()? {
+        0 => None,
+        _ => Some(d.f64()?),
+    })
+}
+
+fn enc_trainer(e: &mut Encoder, t: &TrainerState) {
+    enc_opt(e, &t.opt);
+    e.f64(t.cluster.clock);
+    e.f64(t.cluster.barrier_s);
+    e.f64(t.cluster.cost.base_us_per_sample);
+    e.f64(t.cluster.cost.fixed_us);
+    e.u32(t.cluster.workers.len() as u32);
+    for w in &t.cluster.workers {
+        e.u8(w.active as u8);
+        enc_profile(e, &w.profile);
+        enc_profile(e, &w.base);
+        enc_process(e, &w.load);
+    }
+    enc_rng(e, &t.net.rng);
+    enc_process(e, &t.net.congestion);
+    e.f64(t.net.base_mean);
+    e.u8(t.net.noisy as u8);
+    e.f64(t.net.retx_per_gib);
+    e.u32(t.samplers.len() as u32);
+    for s in &t.samplers {
+        e.u64(s.worker as u64);
+        e.u64(s.n_workers as u64);
+        e.u64(s.train_size as u64);
+        e.u64(s.seed);
+        e.u64(s.epoch);
+        e.u64(s.cursor as u64);
+    }
+    e.u32(t.batches.len() as u32);
+    for &b in &t.batches {
+        e.u64(b as u64);
+    }
+    e.u64(t.iter as u64);
+    e.u32(t.scenario_queue.entries.len() as u32);
+    for (time, seq, ev) in &t.scenario_queue.entries {
+        e.f64(*time);
+        e.u64(*seq);
+        e.str(&ev.to_json().to_string());
+    }
+    e.u64(t.scenario_queue.seq);
+    e.f64(t.scenario_queue.last_popped);
+    e.u32(t.events_applied.len() as u32);
+    for (at, desc) in &t.events_applied {
+        e.f64(*at);
+        e.str(desc);
+    }
+    e.u64(t.shard_seed);
+    e.u64(t.membership_rev);
+    e.u8(t.overlap_sync as u8);
+    e.u64(t.bucket_bytes as u64);
+    e.str(t.wire_sync.label());
+}
+
+fn dec_trainer(d: &mut Decoder) -> anyhow::Result<TrainerState> {
+    let opt = dec_opt(d)?;
+    let clock = d.f64()?;
+    let barrier_s = d.f64()?;
+    let cost = crate::cluster::ComputeCostModel {
+        base_us_per_sample: d.f64()?,
+        fixed_us: d.f64()?,
+    };
+    let nw = d.u32()? as usize;
+    let mut workers = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        workers.push(crate::cluster::WorkerSnap {
+            active: d.u8()? != 0,
+            profile: dec_profile(d)?,
+            base: dec_profile(d)?,
+            load: dec_process(d)?,
+        });
+    }
+    let cluster = crate::cluster::ClusterState {
+        clock,
+        barrier_s,
+        cost,
+        workers,
+    };
+    let net = crate::netsim::NetSimState {
+        rng: dec_rng(d)?,
+        congestion: dec_process(d)?,
+        base_mean: d.f64()?,
+        noisy: d.u8()? != 0,
+        retx_per_gib: d.f64()?,
+    };
+    let ns = d.u32()? as usize;
+    let mut samplers = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        samplers.push(crate::data::SamplerState {
+            worker: d.u64()? as usize,
+            n_workers: d.u64()? as usize,
+            train_size: d.u64()? as usize,
+            seed: d.u64()?,
+            epoch: d.u64()?,
+            cursor: d.u64()? as usize,
+        });
+    }
+    let nb = d.u32()? as usize;
+    let mut batches = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        batches.push(d.u64()? as usize);
+    }
+    let iter = d.u64()? as usize;
+    let nq = d.u32()? as usize;
+    let mut entries = Vec::with_capacity(nq);
+    for _ in 0..nq {
+        let time = d.f64()?;
+        let seq = d.u64()?;
+        let ev = ScenarioEvent::from_json(&Json::parse(&d.str()?)?)?;
+        entries.push((time, seq, ev));
+    }
+    let scenario_queue = QueueState {
+        entries,
+        seq: d.u64()?,
+        last_popped: d.f64()?,
+    };
+    let ne = d.u32()? as usize;
+    let mut events_applied = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        events_applied.push((d.f64()?, d.str()?));
+    }
+    Ok(TrainerState {
+        opt,
+        cluster,
+        net,
+        samplers,
+        batches,
+        iter,
+        scenario_queue,
+        events_applied,
+        shard_seed: d.u64()?,
+        membership_rev: d.u64()?,
+        overlap_sync: d.u8()? != 0,
+        bucket_bytes: d.u64()? as usize,
+        wire_sync: WireMode::parse(&d.str()?)?,
+    })
+}
+
+fn enc_record(e: &mut Encoder, r: &RunRecord) {
+    e.str(&r.name);
+    e.u32(r.points.len() as u32);
+    for p in &r.points {
+        e.u64(p.iter as u64);
+        e.f64(p.sim_time);
+        e.f64(p.train_acc);
+        e.f64(p.eval_acc);
+        e.f64(p.loss);
+        e.f64(p.batch_mean);
+        e.f64(p.batch_std);
+        e.u64(p.global_batch as u64);
+    }
+    e.f64(r.final_eval_acc);
+    enc_option_f64(e, r.convergence_time);
+    e.f64(r.total_sim_time);
+    e.u64(r.total_iters as u64);
+    e.str(&Json::Obj(r.extra.clone()).to_string());
+}
+
+fn dec_record(d: &mut Decoder) -> anyhow::Result<RunRecord> {
+    let name = d.str()?;
+    let np = d.u32()? as usize;
+    let mut points = Vec::with_capacity(np);
+    for _ in 0..np {
+        points.push(TracePoint {
+            iter: d.u64()? as usize,
+            sim_time: d.f64()?,
+            train_acc: d.f64()?,
+            eval_acc: d.f64()?,
+            loss: d.f64()?,
+            batch_mean: d.f64()?,
+            batch_std: d.f64()?,
+            global_batch: d.u64()? as usize,
+        });
+    }
+    let final_eval_acc = d.f64()?;
+    let convergence_time = dec_option_f64(d)?;
+    let total_sim_time = d.f64()?;
+    let total_iters = d.u64()? as usize;
+    let extra = match Json::parse(&d.str()?)? {
+        Json::Obj(m) => m,
+        other => anyhow::bail!("record extras must be a JSON object, got {other:?}"),
+    };
+    Ok(RunRecord {
+        name,
+        points,
+        final_eval_acc,
+        convergence_time,
+        total_sim_time,
+        total_iters,
+        extra,
+    })
+}
+
+fn enc_cycle(e: &mut Encoder, c: &CycleSnap) {
+    e.u32(c.states.len() as u32);
+    for s in &c.states {
+        e.f32s(s);
+    }
+    e.u32(c.rewards.len() as u32);
+    for &r in &c.rewards {
+        e.f64(r);
+    }
+    e.u32(c.active.len() as u32);
+    for &a in &c.active {
+        e.u8(a as u8);
+    }
+    e.f64(c.sim_clock);
+    e.f64(c.train_acc);
+    e.f64(c.eval_acc);
+    e.f64(c.loss);
+}
+
+fn dec_cycle(d: &mut Decoder) -> anyhow::Result<CycleSnap> {
+    let ns = d.u32()? as usize;
+    let mut states = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        states.push(d.f32s()?);
+    }
+    let nr = d.u32()? as usize;
+    let mut rewards = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        rewards.push(d.f64()?);
+    }
+    let na = d.u32()? as usize;
+    let mut active = Vec::with_capacity(na);
+    for _ in 0..na {
+        active.push(d.u8()? != 0);
+    }
+    Ok(CycleSnap {
+        states,
+        rewards,
+        active,
+        sim_clock: d.f64()?,
+        train_acc: d.f64()?,
+        eval_acc: d.f64()?,
+        loss: d.f64()?,
+    })
+}
+
+/// Serialize `(header, state)` into one image (magic + version + body).
+pub fn encode(header: &CkptHeader, s: &ResumeState) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.u16(CKPT_VERSION);
+    header.encode(&mut e);
+    e.u64(s.step as u64);
+    enc_trainer(&mut e, &s.trainer);
+    enc_opt(&mut e, &s.agent.opt);
+    enc_rng(&mut e, &s.agent.rng);
+    e.f64(s.detector.target_acc);
+    e.u64(s.detector.patience as u64);
+    e.u64(s.detector.hits as u64);
+    enc_option_f64(&mut e, s.detector.streak_start);
+    e.u8(s.detector.latched as u8);
+    e.u32(s.eval_history.len() as u32);
+    for &v in &s.eval_history {
+        e.f64(v);
+    }
+    e.u8(s.calibrated as u8);
+    e.f64(s.state_iter_time_ref);
+    e.f64(s.reward_iter_time_ref);
+    enc_record(&mut e, &s.record);
+    enc_cycle(&mut e, &s.cycle);
+    let body = e.frame();
+    let mut out = Vec::with_capacity(body.len() + MAGIC.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body[4..]); // drop the frame length: file-sized
+    out
+}
+
+/// Deserialize an image, validating magic/version and the deployment
+/// fingerprint against `expect`.
+pub fn decode(bytes: &[u8], expect: &CkptHeader) -> anyhow::Result<ResumeState> {
+    anyhow::ensure!(
+        bytes.len() > MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC,
+        "not a DYNAMIX checkpoint (bad magic)"
+    );
+    let mut d = Decoder::new(&bytes[MAGIC.len()..]);
+    let version = d.u16()?;
+    anyhow::ensure!(
+        version == CKPT_VERSION,
+        "checkpoint version {version} unsupported (expected {CKPT_VERSION})"
+    );
+    let header = CkptHeader::decode(&mut d)?;
+    header.check(expect)?;
+    let step = d.u64()? as usize;
+    let trainer = dec_trainer(&mut d)?;
+    let agent = AgentState {
+        opt: dec_opt(&mut d)?,
+        rng: dec_rng(&mut d)?,
+    };
+    let detector = DetectorState {
+        target_acc: d.f64()?,
+        patience: d.u64()? as usize,
+        hits: d.u64()? as usize,
+        streak_start: dec_option_f64(&mut d)?,
+        latched: d.u8()? != 0,
+    };
+    let nh = d.u32()? as usize;
+    let mut eval_history = Vec::with_capacity(nh);
+    for _ in 0..nh {
+        eval_history.push(d.f64()?);
+    }
+    let calibrated = d.u8()? != 0;
+    let state_iter_time_ref = d.f64()?;
+    let reward_iter_time_ref = d.f64()?;
+    let record = dec_record(&mut d)?;
+    let cycle = dec_cycle(&mut d)?;
+    d.finish()?;
+    Ok(ResumeState {
+        step,
+        trainer,
+        agent,
+        detector,
+        eval_history,
+        calibrated,
+        state_iter_time_ref,
+        reward_iter_time_ref,
+        record,
+        cycle,
+    })
+}
+
+/// Checkpoint filename for a decision-cycle step.
+pub fn file_name(step: usize) -> String {
+    format!("ckpt-{step}.bin")
+}
+
+/// Write `bytes` to `dir/name` atomically: they land in a dot-prefixed
+/// temp file first and are `rename`d into place, so a crash at any
+/// instant leaves either the previous image or a complete new one.
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(".{name}.tmp"));
+    let fin = dir.join(name);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, &fin)?;
+    Ok(fin)
+}
+
+/// Atomically write `ckpt-<step>.bin` under `dir` (see [`write_atomic`]).
+pub fn save_atomic(dir: &Path, header: &CkptHeader, s: &ResumeState) -> anyhow::Result<PathBuf> {
+    write_atomic(dir, &file_name(s.step), &encode(header, s))
+}
+
+/// Highest-step `ckpt-<step>.bin` under `dir`, if any. Temp files and
+/// foreign names are ignored.
+pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let entry = entry.ok()?;
+        let name = entry.file_name();
+        let name = name.to_str()?;
+        let step = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(step) = step {
+            if best.as_ref().map_or(true, |(b, _)| step > *b) {
+                best = Some((step, entry.path()));
+            }
+        }
+    }
+    best
+}
+
+/// Load and validate the image at `path`.
+pub fn load(path: &Path, expect: &CkptHeader) -> anyhow::Result<ResumeState> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("checkpoint {path:?}: {e}"))?;
+    decode(&bytes, expect).map_err(|e| anyhow::anyhow!("checkpoint {path:?}: {e}"))
+}
+
+/// File magic of a deployed-leader checkpoint image.
+pub const LEADER_MAGIC: &[u8; 8] = b"DYNXLDRC";
+
+/// Durable snapshot of the deployed TCP leader (`comm::leader::serve_n`):
+/// the leader's mirror of the trained parameters (its own optimizer
+/// replica on the replica plane; the all-gathered slices on the zero
+/// plane, where the slice-local optimizer moments live worker-side and
+/// are not captured), the per-worker batch assignment, and the cycle
+/// index. This is the warm-start artifact of a deployed run — the
+/// single-process Coordinator has the full bitwise [`ResumeState`]
+/// restore; a distributed restore additionally re-registers the workers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaderCkpt {
+    pub header: CkptHeader,
+    /// Decision cycles completed when the image was taken.
+    pub cycle: usize,
+    pub opt: OptState,
+    /// Per-worker batch assignment at the checkpoint (registered-id order).
+    pub batches: Vec<u64>,
+}
+
+impl LeaderCkpt {
+    /// `leader-<cycle>.bin`.
+    pub fn file_name(cycle: usize) -> String {
+        format!("leader-{cycle}.bin")
+    }
+
+    /// Serialize into one image (magic + version + fingerprint + body).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u16(CKPT_VERSION);
+        self.header.encode(&mut e);
+        e.u64(self.cycle as u64);
+        enc_opt(&mut e, &self.opt);
+        e.u32(self.batches.len() as u32);
+        for &b in &self.batches {
+            e.u64(b);
+        }
+        let body = e.frame();
+        let mut out = Vec::with_capacity(body.len() + LEADER_MAGIC.len());
+        out.extend_from_slice(LEADER_MAGIC);
+        out.extend_from_slice(&body[4..]);
+        out
+    }
+
+    /// Deserialize, validating magic/version and the deployment
+    /// fingerprint against `expect`.
+    pub fn decode(bytes: &[u8], expect: &CkptHeader) -> anyhow::Result<LeaderCkpt> {
+        anyhow::ensure!(
+            bytes.len() > LEADER_MAGIC.len() && &bytes[..LEADER_MAGIC.len()] == LEADER_MAGIC,
+            "not a DYNAMIX leader checkpoint (bad magic)"
+        );
+        let mut d = Decoder::new(&bytes[LEADER_MAGIC.len()..]);
+        let version = d.u16()?;
+        anyhow::ensure!(
+            version == CKPT_VERSION,
+            "leader checkpoint version {version} unsupported (expected {CKPT_VERSION})"
+        );
+        let header = CkptHeader::decode(&mut d)?;
+        header.check(expect)?;
+        let cycle = d.u64()? as usize;
+        let opt = dec_opt(&mut d)?;
+        let nb = d.u32()? as usize;
+        let mut batches = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            batches.push(d.u64()?);
+        }
+        d.finish()?;
+        Ok(LeaderCkpt { header, cycle, opt, batches })
+    }
+
+    /// Atomically write `leader-<cycle>.bin` under `dir`.
+    pub fn save_atomic(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        write_atomic(dir, &Self::file_name(self.cycle), &self.encode())
+    }
+
+    /// Highest-cycle `leader-<cycle>.bin` under `dir`, if any.
+    pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
+        let mut best: Option<(usize, PathBuf)> = None;
+        for entry in std::fs::read_dir(dir).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let cycle = name
+                .strip_prefix("leader-")
+                .and_then(|s| s.strip_suffix(".bin"))
+                .and_then(|s| s.parse::<usize>().ok());
+            if let Some(cycle) = cycle {
+                if best.as_ref().map_or(true, |(b, _)| cycle > *b) {
+                    best = Some((cycle, entry.path()));
+                }
+            }
+        }
+        best
+    }
+
+    /// Load and validate the image at `path`.
+    pub fn load(path: &Path, expect: &CkptHeader) -> anyhow::Result<LeaderCkpt> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("leader checkpoint {path:?}: {e}"))?;
+        Self::decode(&bytes, expect)
+            .map_err(|e| anyhow::anyhow!("leader checkpoint {path:?}: {e}"))
+    }
+}
+
+/// Append-only run journal: one JSON line per applied scenario event,
+/// membership change, decision cycle and checkpoint. Lines carry the sim
+/// clock only — never wall time — so a journal is as replayable as the
+/// run it describes.
+pub struct Journal {
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open (creating the directory if needed) `journal.jsonl` under `dir`.
+    pub fn open(dir: &Path) -> anyhow::Result<Journal> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Journal {
+            path: dir.join("journal.jsonl"),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one line. Each call opens/appends/closes so a crash between
+    /// lines never holds a torn buffer — at worst the final line is torn,
+    /// which [`Journal::read`] tolerates.
+    pub fn append(&self, line: &Json) -> anyhow::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{line}")?;
+        Ok(())
+    }
+
+    /// One decision cycle: `step` index, sim clock, iteration counter,
+    /// global batch, eval accuracy.
+    pub fn cycle(
+        &self,
+        step: usize,
+        sim_time: f64,
+        iter: usize,
+        global_batch: usize,
+        eval_acc: f64,
+    ) -> anyhow::Result<()> {
+        self.append(&crate::jobj! {
+            "kind" => "cycle",
+            "step" => step,
+            "sim_time" => sim_time,
+            "iter" => iter,
+            "global_batch" => global_batch,
+            "eval_acc" => eval_acc,
+        })
+    }
+
+    /// One applied scenario/membership event (sim-time stamped).
+    pub fn event(&self, at_s: f64, desc: &str) -> anyhow::Result<()> {
+        self.append(&crate::jobj! {
+            "kind" => "event",
+            "at_s" => at_s,
+            "event" => desc.to_string(),
+        })
+    }
+
+    /// One checkpoint written at `step` / sim clock.
+    pub fn checkpoint(&self, step: usize, sim_time: f64) -> anyhow::Result<()> {
+        self.append(&crate::jobj! {
+            "kind" => "ckpt",
+            "step" => step,
+            "sim_time" => sim_time,
+        })
+    }
+
+    /// Read every parseable line under `dir`. A torn FINAL line (the kill
+    /// -9 case) is skipped; corruption anywhere else is an error. Missing
+    /// file reads as empty.
+    pub fn read(dir: &Path) -> anyhow::Result<Vec<Json>> {
+        let path = dir.join("journal.jsonl");
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(anyhow::anyhow!("journal {path:?}: {e}")),
+        };
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let mut out = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            match Json::parse(line) {
+                Ok(v) => out.push(v),
+                Err(_) if i + 1 == lines.len() => break, // torn tail
+                Err(e) => {
+                    anyhow::bail!("journal {path:?} line {}: {e}", i + 1)
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, ComputeCostModel, WorkerProfile, WorkerSnap};
+    use crate::data::SamplerState;
+    use crate::netsim::NetSimState;
+
+    fn profile(x: f64) -> WorkerProfile {
+        WorkerProfile {
+            speed: x,
+            mem_mib: 24_000.0,
+            bandwidth_gbps: 25.0,
+            latency_ms: 0.15,
+            load_mean: 0.05,
+            load_rate: 0.5,
+            load_vol: 0.05,
+            burst_rate: 0.005,
+            burst_level: 0.3,
+        }
+    }
+
+    fn process(l: f64) -> ProcessState {
+        ProcessState {
+            level: l,
+            mean: 0.1,
+            rate: 0.5,
+            vol: 0.05,
+            burst_rate: 0.01,
+            burst_level: 0.3,
+            lo: 0.0,
+            hi: 0.95,
+            rng: [1, 2, 3, 4],
+        }
+    }
+
+    fn header() -> CkptHeader {
+        CkptHeader {
+            plane: "zero".into(),
+            wire: "dense".into(),
+            seed: 42,
+            n_workers: 2,
+            model: "vgg11_mini".into(),
+        }
+    }
+
+    fn sample_state() -> ResumeState {
+        let opt = OptState {
+            params: vec![1.0, -2.5, 0.0],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.4],
+            step: 7.0,
+        };
+        let trainer = TrainerState {
+            opt: opt.clone(),
+            cluster: ClusterState {
+                clock: 1.25,
+                barrier_s: 0.002,
+                cost: ComputeCostModel {
+                    base_us_per_sample: 12.0,
+                    fixed_us: 8_000.0,
+                },
+                workers: vec![
+                    WorkerSnap {
+                        active: true,
+                        profile: profile(1.0),
+                        base: profile(1.0),
+                        load: process(0.1),
+                    },
+                    WorkerSnap {
+                        active: false,
+                        profile: profile(0.5),
+                        base: profile(1.0),
+                        load: process(0.6),
+                    },
+                ],
+            },
+            net: NetSimState {
+                rng: [9, 8, 7, 6],
+                congestion: process(0.3),
+                base_mean: 0.05,
+                noisy: true,
+                retx_per_gib: 900.0,
+            },
+            samplers: vec![
+                SamplerState {
+                    worker: 0,
+                    n_workers: 2,
+                    train_size: 50_000,
+                    seed: 42,
+                    epoch: 1,
+                    cursor: 123,
+                },
+                SamplerState {
+                    worker: 1,
+                    n_workers: 2,
+                    train_size: 50_000,
+                    seed: 42,
+                    epoch: 1,
+                    cursor: 124,
+                },
+            ],
+            batches: vec![64, 96],
+            iter: 17,
+            scenario_queue: QueueState {
+                entries: vec![
+                    (2.0, 3, ScenarioEvent::CongestionRelax),
+                    (
+                        5.0,
+                        1,
+                        ScenarioEvent::RejoinWorker { worker: 1 },
+                    ),
+                ],
+                seq: 4,
+                last_popped: 1.2,
+            },
+            events_applied: vec![(0.5, "preempt_worker w1".into())],
+            shard_seed: 42,
+            membership_rev: 1,
+            overlap_sync: true,
+            bucket_bytes: 32 << 10,
+            wire_sync: WireMode::Dense,
+        };
+        let mut record = RunRecord::new("test-run");
+        record.push(TracePoint {
+            iter: 4,
+            sim_time: 0.8,
+            train_acc: 0.4,
+            eval_acc: 0.35,
+            loss: 1.7,
+            batch_mean: 80.0,
+            batch_std: 16.0,
+            global_batch: 160,
+        });
+        record.extra.insert("scenario".into(), Json::Str("t".into()));
+        ResumeState {
+            step: 2,
+            trainer,
+            agent: AgentState {
+                opt,
+                rng: [11, 12, 13, 14],
+            },
+            detector: DetectorState {
+                target_acc: 0.8,
+                patience: 2,
+                hits: 1,
+                streak_start: Some(0.8),
+                latched: false,
+            },
+            eval_history: vec![0.2, 0.35],
+            calibrated: true,
+            state_iter_time_ref: 0.09,
+            reward_iter_time_ref: 0.09,
+            record,
+            cycle: CycleSnap {
+                states: vec![vec![0.1; 16], vec![0.0; 16]],
+                rewards: vec![1.5, 0.0],
+                active: vec![true, false],
+                sim_clock: 1.25,
+                train_acc: 0.41,
+                eval_acc: 0.35,
+                loss: 1.68,
+            },
+        }
+    }
+
+    fn assert_state_eq(a: &ResumeState, b: &ResumeState) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.trainer.opt.params, b.trainer.opt.params);
+        assert_eq!(a.trainer.opt.m, b.trainer.opt.m);
+        assert_eq!(a.trainer.opt.v, b.trainer.opt.v);
+        assert_eq!(a.trainer.opt.step, b.trainer.opt.step);
+        assert_eq!(a.trainer.cluster.clock, b.trainer.cluster.clock);
+        assert_eq!(
+            a.trainer.cluster.workers.len(),
+            b.trainer.cluster.workers.len()
+        );
+        for (x, y) in a
+            .trainer
+            .cluster
+            .workers
+            .iter()
+            .zip(&b.trainer.cluster.workers)
+        {
+            assert_eq!(x.active, y.active);
+            assert_eq!(x.profile.speed, y.profile.speed);
+            assert_eq!(x.load, y.load);
+        }
+        assert_eq!(a.trainer.net, b.trainer.net);
+        assert_eq!(a.trainer.samplers, b.trainer.samplers);
+        assert_eq!(a.trainer.batches, b.trainer.batches);
+        assert_eq!(a.trainer.iter, b.trainer.iter);
+        assert_eq!(
+            a.trainer.scenario_queue.entries,
+            b.trainer.scenario_queue.entries
+        );
+        assert_eq!(a.trainer.scenario_queue.seq, b.trainer.scenario_queue.seq);
+        assert_eq!(
+            a.trainer.scenario_queue.last_popped,
+            b.trainer.scenario_queue.last_popped
+        );
+        assert_eq!(a.trainer.events_applied, b.trainer.events_applied);
+        assert_eq!(a.trainer.wire_sync, b.trainer.wire_sync);
+        assert_eq!(a.agent.opt.params, b.agent.opt.params);
+        assert_eq!(a.agent.rng, b.agent.rng);
+        assert_eq!(a.detector, b.detector);
+        assert_eq!(a.eval_history, b.eval_history);
+        assert_eq!(a.calibrated, b.calibrated);
+        assert_eq!(a.state_iter_time_ref, b.state_iter_time_ref);
+        assert_eq!(a.record.points.len(), b.record.points.len());
+        assert_eq!(a.record.name, b.record.name);
+        assert_eq!(a.record.extra, b.record.extra);
+        assert_eq!(a.cycle, b.cycle);
+    }
+
+    #[test]
+    fn image_roundtrips_every_field() {
+        let h = header();
+        let s = sample_state();
+        let bytes = encode(&h, &s);
+        let back = decode(&bytes, &h).unwrap();
+        assert_state_eq(&s, &back);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_version_and_truncation() {
+        let h = header();
+        let s = sample_state();
+        let bytes = encode(&h, &s);
+        // Magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad, &h).unwrap_err().to_string().contains("magic"));
+        // Version.
+        let mut bad = bytes.clone();
+        bad[8] ^= 0xFF;
+        assert!(decode(&bad, &h)
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+        // Truncation (a torn write that bypassed the atomic rename).
+        assert!(decode(&bytes[..bytes.len() - 3], &h).is_err());
+    }
+
+    #[test]
+    fn rejects_cross_deployment_restore_naming_both_values() {
+        let h = header();
+        let bytes = encode(&h, &sample_state());
+        let mut other = header();
+        other.plane = "replica".into();
+        let err = decode(&bytes, &other).unwrap_err().to_string();
+        assert!(err.contains("\"zero\"") && err.contains("\"replica\""), "{err}");
+        assert!(err.contains("DYNAMIX_PLANE"), "{err}");
+        let mut other = header();
+        other.wire = "q8".into();
+        let err = decode(&bytes, &other).unwrap_err().to_string();
+        assert!(err.contains("\"dense\"") && err.contains("\"q8\""), "{err}");
+        assert!(err.contains("DYNAMIX_WIRE"), "{err}");
+        let mut other = header();
+        other.seed = 7;
+        assert!(decode(&bytes, &other).is_err());
+    }
+
+    #[test]
+    fn save_atomic_and_latest_pick_highest_step() {
+        let dir = std::env::temp_dir().join(format!("dynamix_ckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let h = header();
+        let mut s = sample_state();
+        for step in [0usize, 4, 2] {
+            s.step = step;
+            save_atomic(&dir, &h, &s).unwrap();
+        }
+        // A stray temp file and a foreign file must both be ignored.
+        std::fs::write(dir.join(".ckpt-9.tmp"), b"junk").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"junk").unwrap();
+        let (step, path) = latest(&dir).expect("checkpoints exist");
+        assert_eq!(step, 4);
+        let back = load(&path, &h).unwrap();
+        assert_eq!(back.step, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn leader_image_roundtrips_and_rejects_cross_deployment() {
+        let dir =
+            std::env::temp_dir().join(format!("dynamix_leaderckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let lc = LeaderCkpt {
+            header: header(),
+            cycle: 3,
+            opt: OptState {
+                params: vec![0.5, -1.5],
+                m: vec![0.1, 0.2],
+                v: vec![0.3],
+                step: 9.0,
+            },
+            batches: vec![64, 96],
+        };
+        lc.save_atomic(&dir).unwrap();
+        let mut later = lc.clone();
+        later.cycle = 7;
+        later.save_atomic(&dir).unwrap();
+        let (cycle, path) = LeaderCkpt::latest(&dir).expect("leader images exist");
+        assert_eq!(cycle, 7);
+        let back = LeaderCkpt::load(&path, &header()).unwrap();
+        assert_eq!(back, later);
+        // The same fingerprint gate as the full image: cross-plane load
+        // must fail naming both values.
+        let mut other = header();
+        other.plane = "replica".into();
+        let err = LeaderCkpt::load(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("\"zero\"") && err.contains("\"replica\""), "{err}");
+        // Bad magic: a full-image file is not a leader image.
+        let full = encode(&header(), &sample_state());
+        let err = LeaderCkpt::decode(&full, &header()).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_appends_and_tolerates_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("dynamix_journal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let j = Journal::open(&dir).unwrap();
+        j.cycle(0, 0.5, 2, 256, 0.3).unwrap();
+        j.event(0.4, "preempt_worker w3").unwrap();
+        j.checkpoint(1, 0.5).unwrap();
+        // Simulate a kill -9 mid-append: a torn final line.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(j.path())
+                .unwrap();
+            f.write_all(b"{\"kind\":\"cycle\",\"ste").unwrap();
+        }
+        let lines = Journal::read(&dir).unwrap();
+        assert_eq!(lines.len(), 3, "torn tail skipped");
+        assert_eq!(lines[0].get("kind").and_then(Json::as_str), Some("cycle"));
+        assert_eq!(lines[1].get("kind").and_then(Json::as_str), Some("event"));
+        assert_eq!(lines[2].get("kind").and_then(Json::as_str), Some("ckpt"));
+        assert_eq!(Journal::read(&dir.join("missing")).unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

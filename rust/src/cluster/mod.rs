@@ -24,7 +24,7 @@
 //! dynamic environments the paper motivates but never simulates.
 
 use crate::config::ClusterPreset;
-use crate::sim::process::{ContentionProcess, DynamicsProcess};
+use crate::sim::process::{ContentionProcess, DynamicsProcess, ProcessState};
 use crate::util::rng::Rng;
 
 /// Static capability description of one worker.
@@ -374,6 +374,67 @@ impl SimCluster {
         }
         self.clock = 0.0;
     }
+
+    /// Checkpoint image: the sim clock plus every worker's membership,
+    /// current + pristine profiles, and load-process state (including its
+    /// RNG stream), so a restored cluster replays bit-for-bit.
+    pub fn snapshot(&self) -> ClusterState {
+        ClusterState {
+            clock: self.clock,
+            barrier_s: self.barrier_s,
+            cost: self.cost,
+            workers: self
+                .workers
+                .iter()
+                .map(|ws| WorkerSnap {
+                    active: ws.active,
+                    profile: ws.profile.clone(),
+                    base: ws.base.clone(),
+                    load: ws.load.snapshot(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore from a [`SimCluster::snapshot`]; worker counts must match
+    /// (the checkpoint header's fingerprint rejects a mismatched config
+    /// before this is reached).
+    pub fn restore(&mut self, s: &ClusterState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            s.workers.len() == self.workers.len(),
+            "cluster snapshot has {} workers, this cluster has {}",
+            s.workers.len(),
+            self.workers.len()
+        );
+        self.clock = s.clock;
+        self.barrier_s = s.barrier_s;
+        self.cost = s.cost;
+        for (ws, snap) in self.workers.iter_mut().zip(&s.workers) {
+            ws.active = snap.active;
+            ws.profile = snap.profile.clone();
+            ws.base = snap.base.clone();
+            ws.load.restore(&snap.load);
+        }
+        Ok(())
+    }
+}
+
+/// Checkpoint image of one worker (see [`SimCluster::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct WorkerSnap {
+    pub active: bool,
+    pub profile: WorkerProfile,
+    pub base: WorkerProfile,
+    pub load: ProcessState,
+}
+
+/// Checkpoint image of the whole simulated cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub clock: f64,
+    pub barrier_s: f64,
+    pub cost: ComputeCostModel,
+    pub workers: Vec<WorkerSnap>,
 }
 
 #[cfg(test)]
@@ -513,6 +574,42 @@ mod tests {
             c.advance_iteration(&out, 0.0);
         }
         assert!(last > 0.4, "load did not climb toward shifted mean: {last}");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise_with_mutations() {
+        let mut c = SimCluster::new(ClusterPreset::SpotMarket, 4, 7);
+        // Walk the load processes and mutate mid-run state.
+        for _ in 0..25 {
+            let out = c.compute_phase(&vec![96; 4]);
+            c.advance_iteration(&out, 0.002);
+        }
+        c.scale_speed(1, 0.5);
+        c.set_load_mean(2, 0.6);
+        c.set_active(3, false);
+        let snap = c.snapshot();
+        let tail = |c: &mut SimCluster| -> Vec<u64> {
+            let mut bits = Vec::new();
+            for _ in 0..30 {
+                let out = c.compute_phase(&vec![96; 4]);
+                for o in &out {
+                    bits.push(o.compute_s.to_bits());
+                    bits.push(o.load.to_bits());
+                }
+                bits.push(c.advance_iteration(&out, 0.002).to_bits());
+            }
+            bits.push(c.clock.to_bits());
+            bits
+        };
+        let want = tail(&mut c);
+        // Restore over a freshly constructed cluster (the restore path).
+        let mut r = SimCluster::new(ClusterPreset::SpotMarket, 4, 7);
+        r.restore(&snap).unwrap();
+        assert!(!r.is_active(3));
+        assert_eq!(tail(&mut r), want);
+        // Mismatched worker counts are rejected.
+        let mut bad = SimCluster::new(ClusterPreset::SpotMarket, 3, 7);
+        assert!(bad.restore(&snap).is_err());
     }
 
     #[test]

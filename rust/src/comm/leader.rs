@@ -23,7 +23,11 @@
 //!    reduced slice, the owner applies `apply_*_slice` locally and
 //!    returns the updated params (`ShardParamSlice`), and the leader
 //!    all-gathers the slices back out; an empty-gradient `ShardGradFin`
-//!    then carries loss/acc as the step barrier.
+//!    then carries loss/acc as the step barrier. On BOTH planes the fin
+//!    carries the step's normalized gradient moments (v5), computed
+//!    leader-side from the full reduced gradient, so the zero plane's
+//!    empty-gradient barrier no longer blacks out the workers' sigma-stat
+//!    RL features.
 //!
 //! The control plane is unchanged: every `k` iterations workers report
 //! their window state, the leader's PPO arbitrator scores all workers in
@@ -31,7 +35,17 @@
 //! register -> welcome -> state/action cycles -> shutdown lifecycle).
 //! Worker-measured wall times are real, preserving the §VI-H overhead
 //! story. The leader writes a `RunRecord` under `runs/distributed/`.
+//!
+//! **Durable runs** (opt-in via `--ckpt-dir` / `DYNAMIX_CKPT_DIR`): the
+//! leader appends a run journal (registrations, decision cycles,
+//! checkpoints) and writes an atomic [`LeaderCkpt`] image every
+//! `DYNAMIX_CKPT_EVERY` cycles — its parameter mirror (maintained at zero
+//! extra traffic: the replica plane's reduced gradient / the zero plane's
+//! all-gathered slices pass through the leader anyway), the per-worker
+//! batch assignment and the cycle index, fingerprinted against
+//! cross-deployment restores like the coordinator's full image.
 
+use crate::ckpt::{CkptHeader, Journal, LeaderCkpt};
 use crate::comm::wire::{self, WireMode};
 use crate::comm::{Msg, TcpTransport, Transport};
 use crate::config::{presets, Optimizer, Scale};
@@ -209,6 +223,43 @@ pub fn serve_n(
     let mut batches: Vec<usize> = regs.iter().map(|(_, _, b)| *b).collect();
     let mut transports: Vec<TcpTransport> = regs.into_iter().map(|(_, t, _)| t).collect();
 
+    // Durable-run hooks, armed only when a checkpoint directory is
+    // configured. The leader mirrors the trained parameters so an image
+    // can be cut without asking any worker: on the replica plane it
+    // applies the same reduced update every worker applies; on the zero
+    // plane the all-gathered slices it relays ARE the updated params
+    // (the slice-local optimizer moments live worker-side and are not
+    // captured there).
+    let ckpt_dir = crate::config::env::ckpt_dir();
+    let ckpt_every = crate::config::env::ckpt_every().unwrap_or(1);
+    let journal = match &ckpt_dir {
+        Some(dir) => Some(Journal::open(dir)?),
+        None => None,
+    };
+    let ckpt_header = CkptHeader {
+        plane: (if zero { "zero" } else { "replica" }).to_string(),
+        wire: wire_mode.label().to_string(),
+        seed: cfg.train.seed,
+        n_workers: cfg.cluster.n_workers,
+        model: cfg.train.model.clone(),
+    };
+    if let Some(j) = &journal {
+        for (w, b) in worker_ids.iter().zip(&batches) {
+            j.event(0.0, &format!("register worker {w} batch={b}"))?;
+        }
+    }
+    let mut mirror: Option<OptState> = match &ckpt_dir {
+        Some(_) => {
+            let init = layout.init_params(&cfg.train.model, cfg.train.seed)?;
+            Some(if zero {
+                OptState { params: init, m: Vec::new(), v: Vec::new(), step: 0.0 }
+            } else {
+                OptState::new(init, cfg.train.optimizer)
+            })
+        }
+        None => None,
+    };
+
     let mut record = RunRecord::new(&format!("{preset}-distributed"));
     let mut seq = 0u64;
     let (mut last_loss, mut last_acc) = (0.0f64, 0.0f64);
@@ -298,6 +349,15 @@ pub fn serve_n(
                         }
                     }
                 }
+                if let Some(mir) = mirror.as_mut() {
+                    // The gathered slices ARE the post-update parameters.
+                    for (u, s) in slices.iter().enumerate() {
+                        if !s.is_empty() {
+                            mir.params[part[u].clone()].copy_from_slice(s);
+                        }
+                    }
+                    mir.step += 1.0;
+                }
                 // ...and all-gather them back out (each worker already has
                 // its own slice).
                 for (w, t) in transports.iter_mut().enumerate() {
@@ -313,8 +373,19 @@ pub fn serve_n(
                     }
                 }
                 // Step barrier + metrics; the empty gradient tells workers
-                // the update already applied slice-wise.
-                let fin = Msg::ShardGradFin { seq, loss, acc, grad: Vec::new() };
+                // the update already applied slice-wise. The moment triple
+                // carries the sigma stats the workers can no longer derive
+                // (they never see the assembled gradient on this plane).
+                let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
+                let fin = Msg::ShardGradFin {
+                    seq,
+                    loss,
+                    acc,
+                    sigma_norm,
+                    sigma_norm2,
+                    grad_l2,
+                    grad: Vec::new(),
+                };
                 for t in transports.iter_mut() {
                     t.send(&fin)?;
                 }
@@ -333,7 +404,23 @@ pub fn serve_n(
                         other => anyhow::bail!("worker {w}: expected ShardGradOut, got {other:?}"),
                     };
                 }
-                let fin = Msg::ShardGradFin { seq, loss, acc, grad };
+                let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
+                if let Some(mir) = mirror.as_mut() {
+                    // The identical update every full replica applies.
+                    match cfg.train.optimizer {
+                        Optimizer::Sgd => apply_sgd(mir, &grad, cfg.train.lr),
+                        Optimizer::Adam => apply_adam(mir, &grad, cfg.train.lr),
+                    }
+                }
+                let fin = Msg::ShardGradFin {
+                    seq,
+                    loss,
+                    acc,
+                    sigma_norm,
+                    sigma_norm2,
+                    grad_l2,
+                    grad,
+                };
                 for t in transports.iter_mut() {
                     t.send(&fin)?;
                 }
@@ -382,6 +469,30 @@ pub fn serve_n(
             "[leader] cycle {cycle}: loss={last_loss:.3} acc={last_acc:.3} \
              mean_reward={mean_r:+.3} batches={batches:?}"
         );
+        if let Some(j) = &journal {
+            j.cycle(
+                cycle as usize,
+                clock,
+                (cycle as usize + 1) * cfg.rl.k,
+                batches.iter().sum(),
+                0.0, // no held-out eval in the deployed demo
+            )?;
+        }
+        if let (Some(dir), Some(mir)) = (&ckpt_dir, &mirror) {
+            if (cycle as usize + 1) % ckpt_every == 0 {
+                let image = LeaderCkpt {
+                    header: ckpt_header.clone(),
+                    cycle: cycle as usize + 1,
+                    opt: mir.clone(),
+                    batches: batches.iter().map(|&b| b as u64).collect(),
+                };
+                let path = image.save_atomic(dir)?;
+                if let Some(j) = &journal {
+                    j.checkpoint(cycle as usize + 1, clock)?;
+                }
+                println!("[leader] checkpoint -> {}", path.display());
+            }
+        }
     }
     // Workers idle at the next ShardStep recv; Shutdown lands there
     // (Algorithm 1 line 33).
@@ -593,27 +704,24 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                 );
                 state.params[off..off + params.len()].copy_from_slice(&params);
             }
-            Msg::ShardGradFin { loss, grad, .. } => {
+            Msg::ShardGradFin { loss, sigma_norm, sigma_norm2, grad, .. } => {
                 // An empty gradient is the zero plane's step barrier: the
-                // update already applied slice-wise, and the sigma-norm
-                // features are traded for the wire savings in the
-                // deployed demo (the loopback plane keeps them, computing
-                // stats leader-side on the assembled gradient).
-                let (sn, sn2) = if grad.is_empty() {
-                    (0.0f32, 0.0f32)
-                } else {
+                // update already applied slice-wise. Either way the
+                // leader-computed moment triple (v5) feeds the sigma-stat
+                // RL features — workers never derive them locally, so the
+                // zero plane's features match the replica plane's for the
+                // same reduced gradient (the blackout fix).
+                if !grad.is_empty() {
                     anyhow::ensure!(
                         !zero,
                         "full-gradient ShardGradFin on the zero plane — leader and worker \
                          disagree on DYNAMIX_PLANE"
                     );
-                    let (sn, sn2, _) = normalized_grad_stats(&grad);
                     match cfg.train.optimizer {
                         Optimizer::Sgd => apply_sgd(&mut state, &grad, lr),
                         Optimizer::Adam => apply_adam(&mut state, &grad, lr),
                     }
-                    (sn, sn2)
-                };
+                }
                 window.push_iteration(
                     my_correct / my_rows.max(1) as f64,
                     loss as f64,
@@ -621,8 +729,8 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                     0.0, // single-host demo: no fabric measurement
                     0,
                     SysSample { cpu_time_ratio: 1.0, mem_util: 0.2 },
-                    sn as f64,
-                    sn2 as f64,
+                    sigma_norm as f64,
+                    sigma_norm2 as f64,
                 );
                 iters_in_cycle += 1;
                 if iters_in_cycle == k {

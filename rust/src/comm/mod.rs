@@ -29,10 +29,13 @@ use wire::{Decoder, Encoder};
 /// to 3 for the pipelined bucket frames
 /// (`ShardGradBucket`/`ShardBucketFin`); to 4 for the ZeRO
 /// reduce-scatter / compressed-wire frames
-/// (`ShardGradSlice`/`ShardGradTopK`/`ShardGradQ8`/`ShardParamSlice`). A
-/// peer speaking an older codec is rejected at decode with a
+/// (`ShardGradSlice`/`ShardGradTopK`/`ShardGradQ8`/`ShardParamSlice`); to
+/// 5 when `ShardGradFin` grew the per-step gradient-moment triple
+/// (`sigma_norm`/`sigma_norm2`/`grad_l2`), fixing the zero-plane
+/// sigma-stat blackout (an empty-gradient fin left worker RL features at
+/// 0.0). A peer speaking an older codec is rejected at decode with a
 /// version-mismatch error naming both versions.
-pub const PROTO_VERSION: u16 = 4;
+pub const PROTO_VERSION: u16 = 5;
 
 /// Hard ceiling on one frame's body. Sized for the largest legitimate
 /// payload — a shard row slab at the top bucket (32768 x 128 features x
@@ -97,7 +100,21 @@ pub enum Msg {
     ShardGradOut { seq: u64, grad: Vec<f32> },
     /// Data plane: fully-reduced gradient broadcast. Replica-holding
     /// shards apply the same optimizer update, staying bit-identical.
-    ShardGradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
+    /// `sigma_norm`/`sigma_norm2`/`grad_l2` (v5) carry the step's
+    /// normalized gradient moments, computed by the leader from the full
+    /// reduced gradient: the zero plane's fin has an EMPTY `grad` (the
+    /// slices already traveled), so without the triple a worker's
+    /// sigma-stat RL features would silently read 0.0 — the zero-plane
+    /// blackout this field fixes.
+    ShardGradFin {
+        seq: u64,
+        loss: f32,
+        acc: f32,
+        sigma_norm: f32,
+        sigma_norm2: f32,
+        grad_l2: f32,
+        grad: Vec<f32>,
+    },
     /// Data plane: a shard failed to process step `seq` (bad inputs,
     /// protocol abuse). The shard stays alive and serviceable; the leader
     /// surfaces the message as the step's error.
@@ -232,11 +249,14 @@ impl Msg {
                 e.u64(*seq);
                 e.f32s(grad);
             }
-            Msg::ShardGradFin { seq, loss, acc, grad } => {
+            Msg::ShardGradFin { seq, loss, acc, sigma_norm, sigma_norm2, grad_l2, grad } => {
                 e.u8(TAG_SHARD_GRAD_FIN);
                 e.u64(*seq);
                 e.f32(*loss);
                 e.f32(*acc);
+                e.f32(*sigma_norm);
+                e.f32(*sigma_norm2);
+                e.f32(*grad_l2);
                 e.f32s(grad);
             }
             Msg::ShardErr { seq, msg } => {
@@ -359,6 +379,9 @@ impl Msg {
                 seq: d.u64()?,
                 loss: d.f32()?,
                 acc: d.f32()?,
+                sigma_norm: d.f32()?,
+                sigma_norm2: d.f32()?,
+                grad_l2: d.f32()?,
                 grad: d.f32s()?,
             },
             TAG_SHARD_ERR => Msg::ShardErr { seq: d.u64()?, msg: d.str()? },
@@ -532,7 +555,25 @@ mod tests {
             Msg::ShardFwd { seq: 9, loss_terms: vec![2.3, 0.0], correct: vec![1.0, 0.0] },
             Msg::ShardGradSeed { seq: 9, grad: vec![0.0; 5] },
             Msg::ShardGradOut { seq: 9, grad: vec![0.125; 5] },
-            Msg::ShardGradFin { seq: 9, loss: 2.3, acc: 0.5, grad: vec![0.125; 5] },
+            Msg::ShardGradFin {
+                seq: 9,
+                loss: 2.3,
+                acc: 0.5,
+                sigma_norm: 0.75,
+                sigma_norm2: 0.5625,
+                grad_l2: 1.25,
+                grad: vec![0.125; 5],
+            },
+            // The zero-plane shape: empty grad, stats carried in the triple.
+            Msg::ShardGradFin {
+                seq: 10,
+                loss: 1.9,
+                acc: 0.625,
+                sigma_norm: 0.25,
+                sigma_norm2: 0.0625,
+                grad_l2: 0.5,
+                grad: vec![],
+            },
             Msg::ShardErr { seq: 9, msg: "label 37 outside [0, 10)".into() },
             Msg::ShardGradBucket { seq: 9, bucket: 2, offset: 650, grad: vec![0.125; 4] },
             Msg::ShardGradBucket { seq: 9, bucket: 0, offset: 0, grad: vec![] },

@@ -89,6 +89,32 @@ pub fn plane() -> Option<String> {
     matches!(s.as_str(), "zero" | "replica").then_some(s)
 }
 
+/// `DYNAMIX_CKPT_DIR`: checkpoint + journal directory for durable runs.
+/// Unset or empty -> `None` (checkpointing off). Dedicate a directory per
+/// run: restore picks the highest-step `ckpt-<step>.bin` it finds.
+pub fn ckpt_dir() -> Option<PathBuf> {
+    raw("DYNAMIX_CKPT_DIR")
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from)
+}
+
+/// `DYNAMIX_CKPT_EVERY`: decision-cycle cadence between checkpoints
+/// (>= 1). Unset/invalid -> `None` (caller default: 1, every cycle).
+pub fn ckpt_every() -> Option<usize> {
+    raw("DYNAMIX_CKPT_EVERY")?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
+/// `DYNAMIX_RESUME`: resume from the latest checkpoint in
+/// `DYNAMIX_CKPT_DIR` instead of starting fresh. `on`/`1`/`true` ->
+/// resume; anything else (including unset) -> fresh start.
+pub fn resume() -> bool {
+    raw("DYNAMIX_RESUME").as_deref().and_then(parse_switch) == Some(true)
+}
+
 fn parse_switch(s: &str) -> Option<bool> {
     match s.trim().to_ascii_lowercase().as_str() {
         "on" | "1" | "true" => Some(true),

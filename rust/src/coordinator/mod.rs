@@ -19,7 +19,8 @@
 //!   greedy actions, runs to convergence or the step cap, records the
 //!   trajectory.
 
-use crate::config::ExperimentConfig;
+use crate::ckpt::{self, CkptHeader, CycleSnap, Journal, ResumeState};
+use crate::config::{env, ExperimentConfig};
 use crate::metrics::{mean_std, mean_std_usize, median, ConvergenceDetector, RunRecord, TracePoint};
 use crate::rl::action::BatchRule;
 use crate::rl::agent::{PpoAgent, UpdateStats};
@@ -81,6 +82,11 @@ pub struct Coordinator {
     rule: BatchRule,
     eval_history: Vec<f64>,
     calibrated: bool,
+    /// Durable-run policy (env-seeded: `DYNAMIX_CKPT_DIR` / `_EVERY` /
+    /// `_RESUME`; overridable via [`Coordinator::set_ckpt_policy`]).
+    ckpt_dir: Option<std::path::PathBuf>,
+    ckpt_every: usize,
+    resume: bool,
 }
 
 impl Coordinator {
@@ -115,7 +121,71 @@ impl Coordinator {
             rule,
             eval_history: Vec::new(),
             calibrated: false,
+            ckpt_dir: env::ckpt_dir(),
+            ckpt_every: env::ckpt_every().unwrap_or(1),
+            resume: env::resume(),
         })
+    }
+
+    /// Enable (or disable) durable-run checkpointing: write one image to
+    /// `dir` every `every` decision cycles. Overrides the env-seeded
+    /// policy; tests and the CLI use this rather than mutating the
+    /// process environment.
+    pub fn set_ckpt_policy(&mut self, dir: Option<std::path::PathBuf>, every: usize) {
+        self.ckpt_dir = dir;
+        self.ckpt_every = every.max(1);
+    }
+
+    /// Request that the next [`Coordinator::run_inference`] resume from
+    /// the latest checkpoint under the configured directory.
+    pub fn set_resume(&mut self, on: bool) {
+        self.resume = on;
+    }
+
+    /// Deployment fingerprint stamped into every checkpoint image; a
+    /// resume under a different plane/wire/seed/worker-count/model is
+    /// rejected loudly at load.
+    fn ckpt_header(&self) -> CkptHeader {
+        CkptHeader {
+            plane: env::plane().unwrap_or_else(|| "zero".into()),
+            wire: self.trainer.wire_label().to_string(),
+            seed: self.cfg.train.seed,
+            n_workers: self.cfg.cluster.n_workers,
+            model: self.cfg.train.model.clone(),
+        }
+    }
+
+    /// Capture everything a resumed run needs to continue bit-for-bit:
+    /// trainer (model/optimizer, cluster + fabric RNG streams, samplers,
+    /// remaining scenario timeline), agent, detector, calibration refs and
+    /// the record-so-far, plus the pending cycle outcome.
+    fn capture(
+        &self,
+        step: usize,
+        detector: &ConvergenceDetector,
+        record: &RunRecord,
+        cycle: &CycleOutcome,
+    ) -> ResumeState {
+        ResumeState {
+            step,
+            trainer: self.trainer.snapshot(),
+            agent: self.agent.snapshot(),
+            detector: detector.snapshot(),
+            eval_history: self.eval_history.clone(),
+            calibrated: self.calibrated,
+            state_iter_time_ref: self.state_builder.iter_time_ref,
+            reward_iter_time_ref: self.reward.iter_time_ref,
+            record: record.clone(),
+            cycle: CycleSnap {
+                states: cycle.states.iter().map(|s| s.0.clone()).collect(),
+                rewards: cycle.rewards.clone(),
+                active: cycle.active.clone(),
+                sim_clock: cycle.sim_clock,
+                train_acc: cycle.train_acc,
+                eval_acc: cycle.eval_acc,
+                loss: cycle.loss,
+            },
+        }
     }
 
     /// Run k training iterations and summarize every worker's window.
@@ -254,21 +324,102 @@ impl Coordinator {
 
     /// Frozen-policy inference run (§VI-D): greedy actions until the
     /// convergence target is sustained or `max_cycles` elapse.
+    ///
+    /// With a checkpoint directory configured, the run is **durable**: an
+    /// image is written atomically every `ckpt_every` cycles (at the TOP
+    /// of the cycle, before its trace point lands in `record`) and every
+    /// cycle/scenario-event/checkpoint appends a sim-time-stamped line to
+    /// the run journal. Under `resume`, the latest image is loaded, the
+    /// deployment fingerprint checked, and the loop re-entered exactly
+    /// where the image was taken — the resumed record is bit-for-bit the
+    /// uninterrupted one.
     pub fn run_inference(
         &mut self,
         max_cycles: usize,
         record: &mut RunRecord,
     ) -> anyhow::Result<InferenceSummary> {
-        self.trainer
-            .reset_episode(self.cfg.train.seed, self.cfg.batch.initial)?;
-        self.eval_history.clear();
-        self.calibrated = false;
-        let mut detector = ConvergenceDetector::new(self.cfg.train.target_acc, 2);
-        let mut batch_trace = Vec::new();
-        let mut cycle = self.run_cycle(0.0)?;
-        let mut final_eval = cycle.eval_acc;
+        let journal = match &self.ckpt_dir {
+            Some(dir) => Some(Journal::open(dir)?),
+            None => None,
+        };
+        let restored = if self.resume {
+            let dir = self.ckpt_dir.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "resume requested but no checkpoint directory set \
+                     (--ckpt-dir / DYNAMIX_CKPT_DIR)"
+                )
+            })?;
+            let (_, path) = ckpt::latest(dir).ok_or_else(|| {
+                anyhow::anyhow!("resume requested but no ckpt-<step>.bin under {dir:?}")
+            })?;
+            Some(ckpt::load(&path, &self.ckpt_header())?)
+        } else {
+            None
+        };
 
-        for step in 0..max_cycles {
+        let mut detector;
+        let mut batch_trace: Vec<(usize, f64, f64)>;
+        let mut cycle;
+        let mut final_eval;
+        let start_step;
+        // Scenario events already journaled (resume: everything the image
+        // carries was journaled before the crash).
+        let mut events_logged;
+        if let Some(s) = restored {
+            self.trainer.restore(&s.trainer)?;
+            self.agent.restore(&s.agent)?;
+            self.eval_history = s.eval_history.clone();
+            self.calibrated = s.calibrated;
+            self.state_builder.iter_time_ref = s.state_iter_time_ref;
+            self.reward.iter_time_ref = s.reward_iter_time_ref;
+            detector = ConvergenceDetector::from_snapshot(&s.detector);
+            *record = s.record.clone();
+            batch_trace = record
+                .points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (i, p.batch_mean, p.batch_std))
+                .collect();
+            cycle = CycleOutcome {
+                states: s.cycle.states.iter().cloned().map(StateVector).collect(),
+                rewards: s.cycle.rewards.clone(),
+                active: s.cycle.active.clone(),
+                sim_clock: s.cycle.sim_clock,
+                train_acc: s.cycle.train_acc,
+                eval_acc: s.cycle.eval_acc,
+                loss: s.cycle.loss,
+            };
+            final_eval = s.cycle.eval_acc;
+            start_step = s.step;
+            events_logged = self.trainer.events_applied.len();
+        } else {
+            self.trainer
+                .reset_episode(self.cfg.train.seed, self.cfg.batch.initial)?;
+            self.eval_history.clear();
+            self.calibrated = false;
+            detector = ConvergenceDetector::new(self.cfg.train.target_acc, 2);
+            batch_trace = Vec::new();
+            events_logged = 0;
+            cycle = self.run_cycle(0.0)?;
+            final_eval = cycle.eval_acc;
+            if let Some(j) = &journal {
+                for (at, desc) in &self.trainer.events_applied[events_logged..] {
+                    j.event(*at, desc)?;
+                }
+                events_logged = self.trainer.events_applied.len();
+            }
+        }
+
+        for step in start_step..max_cycles {
+            if let Some(dir) = &self.ckpt_dir {
+                if step % self.ckpt_every == 0 {
+                    let image = self.capture(step, &detector, record, &cycle);
+                    ckpt::save_atomic(dir, &self.ckpt_header(), &image)?;
+                    if let Some(j) = &journal {
+                        j.checkpoint(step, cycle.sim_clock)?;
+                    }
+                }
+            }
             // Trace statistics span the LIVE membership only.
             let (bm, bs) = mean_std_usize(&self.trainer.active_batches());
             batch_trace.push((step, bm, bs));
@@ -284,12 +435,27 @@ impl Coordinator {
             });
             detector.observe(cycle.eval_acc, cycle.sim_clock);
             final_eval = cycle.eval_acc;
+            if let Some(j) = &journal {
+                j.cycle(
+                    step,
+                    cycle.sim_clock,
+                    self.trainer.iter,
+                    self.trainer.global_batch(),
+                    cycle.eval_acc,
+                )?;
+            }
             if detector.converged() {
                 break;
             }
             let samples = self.agent.act(&cycle.states, false)?;
             self.apply_actions(&samples.iter().map(|s| s.action).collect::<Vec<_>>());
             cycle = self.run_cycle((step + 1) as f64 / max_cycles as f64)?;
+            if let Some(j) = &journal {
+                for (at, desc) in &self.trainer.events_applied[events_logged..] {
+                    j.event(*at, desc)?;
+                }
+                events_logged = self.trainer.events_applied.len();
+            }
         }
 
         record.final_eval_acc = final_eval;
@@ -421,6 +587,105 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert!(results[0].mean_return.is_finite());
         assert!(results[0].update.minibatches > 0, "masked workers still leave a batch");
+    }
+
+    fn assert_records_bitwise_eq(a: &RunRecord, b: &RunRecord) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.points.len(), b.points.len(), "point counts differ");
+        for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+            assert_eq!(p.iter, q.iter, "point {i} iter");
+            assert_eq!(p.sim_time.to_bits(), q.sim_time.to_bits(), "point {i} sim_time");
+            assert_eq!(p.train_acc.to_bits(), q.train_acc.to_bits(), "point {i} train_acc");
+            assert_eq!(p.eval_acc.to_bits(), q.eval_acc.to_bits(), "point {i} eval_acc");
+            assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "point {i} loss");
+            assert_eq!(p.batch_mean.to_bits(), q.batch_mean.to_bits(), "point {i} bm");
+            assert_eq!(p.batch_std.to_bits(), q.batch_std.to_bits(), "point {i} bs");
+            assert_eq!(p.global_batch, q.global_batch, "point {i} global_batch");
+        }
+        assert_eq!(a.final_eval_acc.to_bits(), b.final_eval_acc.to_bits());
+        assert_eq!(
+            a.convergence_time.map(f64::to_bits),
+            b.convergence_time.map(f64::to_bits)
+        );
+        assert_eq!(a.total_sim_time.to_bits(), b.total_sim_time.to_bits());
+        assert_eq!(a.total_iters, b.total_iters);
+        assert_eq!(a.extra, b.extra, "record extras differ");
+    }
+
+    #[test]
+    fn checkpointed_inference_resumes_bitwise() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!(
+            "dynamix_coord_ckpt_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        // Uninterrupted reference run.
+        let mut a = Coordinator::new(cfg(), backend()).unwrap();
+        let mut ra = RunRecord::new("durable");
+        a.run_inference(6, &mut ra).unwrap();
+        // Checkpointed run over the SAME horizon (progress = step /
+        // max_cycles feeds the policy state, so a resume must share the
+        // original horizon). Simulate a crash after the step-2 image by
+        // deleting every later one.
+        let mut b = Coordinator::new(cfg(), backend()).unwrap();
+        b.set_ckpt_policy(Some(dir.clone()), 2);
+        let mut rb = RunRecord::new("durable");
+        b.run_inference(6, &mut rb).unwrap();
+        while let Some((step, path)) = crate::ckpt::latest(&dir) {
+            if step <= 2 {
+                break;
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+        let latest = crate::ckpt::latest(&dir).map(|(s, _)| s);
+        assert!(latest.map_or(false, |s| s <= 2), "latest image {latest:?}");
+        // Resume in a FRESH coordinator and run to the full horizon.
+        let mut c = Coordinator::new(cfg(), backend()).unwrap();
+        c.set_ckpt_policy(Some(dir.clone()), 2);
+        c.set_resume(true);
+        let mut rc = RunRecord::new("overwritten-by-restore");
+        c.run_inference(6, &mut rc).unwrap();
+        assert_records_bitwise_eq(&ra, &rc);
+        // The journal saw cycles, checkpoints, and only sim-time stamps.
+        let lines = crate::ckpt::Journal::read(&dir).unwrap();
+        assert!(lines
+            .iter()
+            .any(|l| l.get("kind").and_then(Json::as_str) == Some("ckpt")));
+        assert!(lines
+            .iter()
+            .any(|l| l.get("kind").and_then(Json::as_str) == Some("cycle")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_cross_plane_checkpoint() {
+        let dir = std::env::temp_dir().join(format!(
+            "dynamix_coord_xplane_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut a = Coordinator::new(cfg(), backend()).unwrap();
+        a.set_ckpt_policy(Some(dir.clone()), 1);
+        let mut ra = RunRecord::new("xplane");
+        a.run_inference(2, &mut ra).unwrap();
+        // Rewrite the latest image under the other plane's fingerprint.
+        let (_, path) = crate::ckpt::latest(&dir).unwrap();
+        let mut h = a.ckpt_header();
+        let image = crate::ckpt::load(&path, &h).unwrap();
+        h.plane = "replica".into();
+        crate::ckpt::save_atomic(&dir, &h, &image).unwrap();
+        // A zero-plane resume must refuse it, naming both planes.
+        let mut b = Coordinator::new(cfg(), backend()).unwrap();
+        b.set_ckpt_policy(Some(dir.clone()), 1);
+        b.set_resume(true);
+        let mut rb = RunRecord::new("xplane");
+        let err = b.run_inference(2, &mut rb).unwrap_err().to_string();
+        assert!(
+            err.contains("DYNAMIX_PLANE") && err.contains("\"replica\"") && err.contains("\"zero\""),
+            "{err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

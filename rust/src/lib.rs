@@ -24,6 +24,7 @@ pub mod sysmetrics;
 pub mod comm;
 pub mod rl;
 pub mod trainer;
+pub mod ckpt;
 pub mod coordinator;
 pub mod baselines;
 pub mod metrics;

@@ -96,6 +96,15 @@ GLOBAL FLAGS:
   --scenario S    scripted dynamic-environment timeline: a JSON file path
                   or a built-in name (preempt_rejoin bandwidth_collapse
                   congestion_storm load_shift spot_chaos)
+  --ckpt-dir D    durable runs: write crash-consistent checkpoints + an
+                  append-only run journal under D (DYNAMIX_CKPT_DIR;
+                  dedicate a directory per run)
+  --ckpt-every N  decision cycles between checkpoints (DYNAMIX_CKPT_EVERY,
+                  default 1 = every cycle)
+  --resume        resume from the latest checkpoint under --ckpt-dir
+                  (DYNAMIX_RESUME; the deployment fingerprint —
+                  plane/wire/seed/workers/model — must match, and the run
+                  must use the same cycle horizon as the original)
 
 SERVE FLAGS:
   --workers N --cycles C   demo/smoke sizes for the TCP leader (defaults:
@@ -167,6 +176,28 @@ fn run() -> anyhow::Result<()> {
     if let Some(w) = args.get("wire") {
         dynamix::comm::wire::WireMode::parse(w)?; // validate loudly
         std::env::set_var("DYNAMIX_WIRE", w);
+    }
+    // --ckpt-dir / --ckpt-every / --resume configure durable runs; the
+    // coordinator reads these at construction, so they must land in the
+    // environment first like every other global flag.
+    if let Some(d) = args.get("ckpt-dir") {
+        anyhow::ensure!(!d.is_empty(), "--ckpt-dir expects a directory path");
+        std::env::set_var("DYNAMIX_CKPT_DIR", d);
+    }
+    if let Some(n) = args.get("ckpt-every") {
+        let every: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--ckpt-every expects a positive integer, got {n:?}"))?;
+        anyhow::ensure!(every >= 1, "--ckpt-every must be >= 1");
+        std::env::set_var("DYNAMIX_CKPT_EVERY", n);
+    }
+    if args.get("resume").is_some() {
+        anyhow::ensure!(
+            args.get("ckpt-dir").is_some() || dynamix::config::env::ckpt_dir().is_some(),
+            "--resume needs --ckpt-dir (or DYNAMIX_CKPT_DIR) pointing at an \
+             existing run's checkpoint directory"
+        );
+        std::env::set_var("DYNAMIX_RESUME", "1");
     }
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {

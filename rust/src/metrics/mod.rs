@@ -186,6 +186,38 @@ impl ConvergenceDetector {
             None
         }
     }
+
+    /// Checkpoint image (the streak counters are mid-run state).
+    pub fn snapshot(&self) -> DetectorState {
+        DetectorState {
+            target_acc: self.target_acc,
+            patience: self.patience,
+            hits: self.hits,
+            streak_start: self.streak_start,
+            latched: self.latched,
+        }
+    }
+
+    /// Rebuild a detector mid-streak from a [`DetectorState`].
+    pub fn from_snapshot(s: &DetectorState) -> Self {
+        ConvergenceDetector {
+            target_acc: s.target_acc,
+            patience: s.patience,
+            hits: s.hits,
+            streak_start: s.streak_start,
+            latched: s.latched,
+        }
+    }
+}
+
+/// Serializable checkpoint image of a [`ConvergenceDetector`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DetectorState {
+    pub target_acc: f64,
+    pub patience: usize,
+    pub hits: usize,
+    pub streak_start: Option<f64>,
+    pub latched: bool,
 }
 
 /// Mean/std of a slice (population std).
@@ -280,6 +312,20 @@ mod tests {
         assert!(!d.converged());
         d.observe(0.9, 30.0);
         assert_eq!(d.observe(0.9, 40.0), Some(30.0));
+    }
+
+    #[test]
+    fn detector_snapshot_preserves_mid_streak_state() {
+        let mut d = ConvergenceDetector::new(0.8, 3);
+        d.observe(0.85, 10.0);
+        d.observe(0.82, 20.0); // 2 hits of 3 — mid-streak
+        let mut r = ConvergenceDetector::from_snapshot(&d.snapshot());
+        assert_eq!(r.observe(0.81, 30.0), Some(10.0), "third hit converges");
+        assert_eq!(d.observe(0.81, 30.0), Some(10.0), "original agrees");
+        // Latched state survives a roundtrip too.
+        let l = ConvergenceDetector::from_snapshot(&r.snapshot());
+        assert!(l.converged());
+        assert_eq!(l.time(), Some(10.0));
     }
 
     #[test]

@@ -23,7 +23,7 @@
 
 use crate::cluster::WorkerProfile;
 use crate::config::Topology;
-use crate::sim::process::{DynamicsProcess, OuProcess};
+use crate::sim::process::{DynamicsProcess, OuProcess, ProcessState};
 use crate::util::rng::Rng;
 
 /// Result of simulating one synchronization round.
@@ -263,6 +263,29 @@ impl NetworkSim {
         }
     }
 
+    /// Capture the full fabric state (checkpointing): the retransmission
+    /// RNG stream, the OU congestion process, and the scalars `reset`
+    /// would otherwise rebuild from the seed.
+    pub fn snapshot(&self) -> NetSimState {
+        NetSimState {
+            rng: self.rng.state(),
+            congestion: self.congestion.snapshot(),
+            base_mean: self.base_mean,
+            noisy: self.noisy,
+            retx_per_gib: self.retx_per_gib,
+        }
+    }
+
+    /// Overwrite every field from a [`NetSimState`]: the restored fabric
+    /// continues the original trajectory bit-for-bit.
+    pub fn restore(&mut self, s: &NetSimState) {
+        self.rng = Rng::from_state(s.rng);
+        self.congestion.restore(&s.congestion);
+        self.base_mean = s.base_mean;
+        self.noisy = s.noisy;
+        self.retx_per_gib = s.retx_per_gib;
+    }
+
     /// Reset the congestion process (new episode). Storm-shifted means
     /// restore to the construction baseline.
     pub fn reset(&mut self, seed: u64) {
@@ -272,6 +295,21 @@ impl NetworkSim {
             Self::new(seed)
         };
     }
+}
+
+/// Serializable checkpoint image of a [`NetworkSim`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetSimState {
+    /// Retransmission-draw stream.
+    pub rng: [u64; 4],
+    /// Shared OU congestion process.
+    pub congestion: ProcessState,
+    /// Baseline congestion mean ([`NetworkSim::relax`] target).
+    pub base_mean: f64,
+    /// Construction flavour.
+    pub noisy: bool,
+    /// Retransmissions per (GiB × unit congestion).
+    pub retx_per_gib: f64,
 }
 
 #[cfg(test)]
@@ -449,6 +487,34 @@ mod tests {
             assert!(saving > last_saving, "saving shrank at {bw} Gbps: {saving}");
             last_saving = saving;
         }
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise_through_a_storm() {
+        let profs = uniform(8);
+        let mut net = NetworkSim::noisy(21);
+        for _ in 0..15 {
+            net.advance(0.4);
+            net.sync(Topology::RingAllReduce, &profs, 64 << 20);
+        }
+        net.storm(0.7); // snapshot mid-storm: shifted mean must survive
+        let snap = net.snapshot();
+        let tail = |n: &mut NetworkSim| {
+            let mut out = Vec::new();
+            for i in 0..40 {
+                n.advance(0.4);
+                if i == 10 {
+                    n.relax(); // relax must restore the ORIGINAL base mean
+                }
+                let o = n.sync(Topology::RingAllReduce, &profs, 64 << 20);
+                out.push((o.time_s.to_bits(), o.retransmissions, o.congestion.to_bits()));
+            }
+            out
+        };
+        let want = tail(&mut net);
+        let mut fresh = NetworkSim::new(0); // wrong seed + wrong flavour
+        fresh.restore(&snap);
+        assert_eq!(tail(&mut fresh), want);
     }
 
     #[test]

@@ -366,7 +366,9 @@ pub struct ShardedBackend {
     links: Mutex<Vec<Box<dyn ShardTransport>>>,
     /// Detached write halves (where the transport can supply one), cloned
     /// into comm-lane jobs so ring sends run off the leader thread.
-    senders: Vec<Option<Arc<Mutex<Box<dyn ShardSender>>>>>,
+    /// Behind a lock so [`ShardedBackend::reattach_transport`] can swap a
+    /// rejoining shard's half together with its link.
+    senders: Mutex<Vec<Option<Arc<Mutex<Box<dyn ShardSender>>>>>>,
     /// The single send thread behind overlapped ring hops; lazily spawned
     /// on the first overlapped train step.
     lane: OnceLock<CommLane>,
@@ -436,7 +438,7 @@ impl ShardedBackend {
             inner,
             n,
             links: Mutex::new(links),
-            senders,
+            senders: Mutex::new(senders),
             lane: OnceLock::new(),
             active: Mutex::new(vec![true; n]),
             handles: Mutex::new(handles),
@@ -502,7 +504,7 @@ impl ShardedBackend {
             inner,
             n,
             links: Mutex::new(links),
-            senders,
+            senders: Mutex::new(senders),
             lane: OnceLock::new(),
             active: Mutex::new(vec![true; n]),
             handles: Mutex::new(Vec::new()),
@@ -514,6 +516,36 @@ impl ShardedBackend {
             plane: env_plane(),
             wire: crate::config::env::wire_mode().unwrap_or(WireMode::Dense),
         })
+    }
+
+    /// Re-admit a dropped shard by attaching a fresh transport — the
+    /// data-plane half of the reconnect/rejoin handshake. Shards hold no
+    /// cross-step state (`Step` ships rows + params every iteration), so
+    /// swapping the link is a complete rejoin: after this returns, flip
+    /// the shard back in with `set_shard_active(shard, true)` (or let the
+    /// trainer's `rejoin_worker` scenario handling do it — its resumed
+    /// batch comes from `sim::elastic::rejoin_batch`). The shard must be
+    /// OUT of the membership while its link is swapped; queued comm-lane
+    /// sends still holding the dead write half fail harmlessly against
+    /// the closed socket.
+    pub fn reattach_transport(
+        &self,
+        shard: usize,
+        link: Box<dyn ShardTransport>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(shard < self.n, "shard {shard} out of range (n = {})", self.n);
+        anyhow::ensure!(
+            !self.shard_membership()[shard],
+            "shard {shard} is still in the membership — deactivate it before reattaching"
+        );
+        let sender = link.sender().map(|s| Arc::new(Mutex::new(s)));
+        // Swap under both locks (links before senders, the ring-hop
+        // order) so no hop can pair the new link with the old half.
+        let mut links = self.links.lock().unwrap();
+        let mut senders = self.senders.lock().unwrap();
+        links[shard] = link;
+        senders[shard] = sender;
+        Ok(())
     }
 
     /// The wrapped single-process backend (schema + policy ops source).
@@ -793,8 +825,8 @@ impl ShardedBackend {
         bucket: usize,
         msg: ShardMsg,
     ) -> anyhow::Result<()> {
-        if let Some(half) = &self.senders[shard] {
-            let half = half.clone();
+        let half = self.senders.lock().unwrap()[shard].clone();
+        if let Some(half) = half {
             self.lane.get_or_init(CommLane::new).submit(move || {
                 half.lock()
                     .map_err(|_| anyhow::anyhow!("sender half poisoned"))?

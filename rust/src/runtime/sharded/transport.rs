@@ -77,8 +77,18 @@ pub enum ShardMsg {
     /// An owner's updated parameter slice — the all-gather leg of the
     /// reduce-scatter plane (replica deployments only).
     ParamSlice { seq: u64, slice: usize, offset: usize, params: Vec<f32> },
-    /// Fully-reduced gradient broadcast (replica deployments only).
-    GradFin { seq: u64, loss: f32, acc: f32, grad: Vec<f32> },
+    /// Fully-reduced gradient broadcast (replica deployments only). The
+    /// moment triple mirrors wire v5's `ShardGradFin` — leader-computed
+    /// stats ride the fin so an empty-gradient barrier still carries them.
+    GradFin {
+        seq: u64,
+        loss: f32,
+        acc: f32,
+        sigma_norm: f32,
+        sigma_norm2: f32,
+        grad_l2: f32,
+        grad: Vec<f32>,
+    },
     /// The shard failed to process step `seq` but stays serviceable; the
     /// leader surfaces `msg` as the step's error.
     Err { seq: u64, msg: String },
@@ -161,12 +171,17 @@ impl ShardMsg {
                 offset: *offset as u64,
                 params: params.clone(),
             },
-            ShardMsg::GradFin { seq, loss, acc, grad } => Msg::ShardGradFin {
-                seq: *seq,
-                loss: *loss,
-                acc: *acc,
-                grad: grad.clone(),
-            },
+            ShardMsg::GradFin { seq, loss, acc, sigma_norm, sigma_norm2, grad_l2, grad } => {
+                Msg::ShardGradFin {
+                    seq: *seq,
+                    loss: *loss,
+                    acc: *acc,
+                    sigma_norm: *sigma_norm,
+                    sigma_norm2: *sigma_norm2,
+                    grad_l2: *grad_l2,
+                    grad: grad.clone(),
+                }
+            }
             ShardMsg::Err { seq, msg } => Msg::ShardErr { seq: *seq, msg: msg.clone() },
             ShardMsg::Shutdown => Msg::Shutdown,
         }
@@ -224,8 +239,8 @@ impl ShardMsg {
                 offset: offset as usize,
                 params,
             },
-            Msg::ShardGradFin { seq, loss, acc, grad } => {
-                ShardMsg::GradFin { seq, loss, acc, grad }
+            Msg::ShardGradFin { seq, loss, acc, sigma_norm, sigma_norm2, grad_l2, grad } => {
+                ShardMsg::GradFin { seq, loss, acc, sigma_norm, sigma_norm2, grad_l2, grad }
             }
             Msg::ShardErr { seq, msg } => ShardMsg::Err { seq, msg },
             Msg::Shutdown => ShardMsg::Shutdown,
@@ -368,7 +383,15 @@ mod tests {
             },
             ShardMsg::GradQ8 { seq: 1, slice: 2, offset: 64, scale: 0.03125, q: vec![3, -7, 127] },
             ShardMsg::ParamSlice { seq: 1, slice: 0, offset: 0, params: vec![0.5; 4] },
-            ShardMsg::GradFin { seq: 1, loss: 1.5, acc: 0.5, grad: vec![0.1; 3] },
+            ShardMsg::GradFin {
+                seq: 1,
+                loss: 1.5,
+                acc: 0.5,
+                sigma_norm: 0.75,
+                sigma_norm2: 0.5625,
+                grad_l2: 1.25,
+                grad: vec![0.1; 3],
+            },
             ShardMsg::Err { seq: 1, msg: "label 37 outside [0, 10)".into() },
             ShardMsg::Shutdown,
         ]

@@ -126,6 +126,50 @@ impl<T> EventQueue<T> {
         }
         out
     }
+
+    /// Checkpoint image: every pending `(time, seq, item)` sorted by
+    /// `(time, seq)`, plus the sequence counter and the pop frontier.
+    pub fn snapshot(&self) -> QueueState<T>
+    where
+        T: Clone,
+    {
+        let mut entries: Vec<(f64, u64, T)> = self
+            .heap
+            .iter()
+            .map(|e| (e.time, e.seq, e.item.clone()))
+            .collect();
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        QueueState {
+            entries,
+            seq: self.seq,
+            last_popped: self.last_popped,
+        }
+    }
+
+    /// Rebuild the queue from a [`QueueState`]. Entries keep their
+    /// ORIGINAL sequence numbers (a plain `push` would renumber them and
+    /// perturb FIFO tie order), and the counter/frontier are restored
+    /// verbatim, so the drained timeline continues exactly where the
+    /// snapshot left off.
+    pub fn restore(&mut self, state: QueueState<T>) {
+        self.heap.clear();
+        for (time, seq, item) in state.entries {
+            self.heap.push(Entry { time, seq, item });
+        }
+        self.seq = state.seq;
+        self.last_popped = state.last_popped;
+    }
+}
+
+/// Serializable checkpoint image of an [`EventQueue`].
+#[derive(Clone, Debug)]
+pub struct QueueState<T> {
+    /// Pending entries as `(time, original seq, item)`, `(time, seq)`-sorted.
+    pub entries: Vec<(f64, u64, T)>,
+    /// The queue's next-sequence counter.
+    pub seq: u64,
+    /// Largest time ever popped (the monotone frontier).
+    pub last_popped: f64,
 }
 
 #[cfg(test)]
@@ -185,6 +229,33 @@ mod tests {
         let all = q.drain_due(0.0);
         assert_eq!(all.len(), 3);
         assert!(all.iter().all(|(t, _)| *t == 0.0));
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_order_frontier_and_seq() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a");
+        q.push(3.0, "c1");
+        q.push(3.0, "c2"); // FIFO tie — original seqs must survive restore
+        assert_eq!(q.pop_due(2.0), Some((1.0, "a")));
+        let snap = q.snapshot();
+        let mut r: EventQueue<&str> = EventQueue::new();
+        r.restore(snap);
+        // Late pushes clamp to the restored frontier, not to zero.
+        r.push(0.5, "late");
+        assert_eq!(
+            r.drain_due(10.0),
+            vec![(1.0, "late"), (3.0, "c1"), (3.0, "c2")]
+        );
+        // The restored seq counter keeps post-restore pushes behind the
+        // snapshot's entries among ties.
+        let mut q2 = EventQueue::new();
+        q2.push(2.0, "x");
+        let snap2 = q2.snapshot();
+        let mut r2: EventQueue<&str> = EventQueue::new();
+        r2.restore(snap2);
+        r2.push(2.0, "y");
+        assert_eq!(r2.drain_due(2.0), vec![(2.0, "x"), (2.0, "y")]);
     }
 
     #[test]

@@ -30,6 +30,23 @@ pub trait DynamicsProcess {
     fn set_level(&mut self, level: f64);
 }
 
+/// Checkpoint image of one process: every scalar plus the raw RNG state.
+/// Shared by [`OuProcess`] and [`ContentionProcess`] (the OU subset —
+/// burst parameters ride in the contention-specific fields and are zero
+/// for a plain OU process).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ProcessState {
+    pub level: f64,
+    pub mean: f64,
+    pub rate: f64,
+    pub vol: f64,
+    pub burst_rate: f64,
+    pub burst_level: f64,
+    pub lo: f64,
+    pub hi: f64,
+    pub rng: [u64; 4],
+}
+
 /// Clamped Ornstein–Uhlenbeck process:
 /// `dX = rate·(mean − X)·dt + vol·√dt·N(0,1)`, clamped to `[lo, hi]`.
 #[derive(Clone, Debug)]
@@ -54,6 +71,33 @@ impl OuProcess {
             hi,
             rng,
         }
+    }
+
+    /// Capture the full process state (checkpointing).
+    pub fn snapshot(&self) -> ProcessState {
+        ProcessState {
+            level: self.level,
+            mean: self.mean,
+            rate: self.rate,
+            vol: self.vol,
+            burst_rate: 0.0,
+            burst_level: 0.0,
+            lo: self.lo,
+            hi: self.hi,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Overwrite every field from a [`ProcessState`]: the restored
+    /// process continues the original trajectory bit-for-bit.
+    pub fn restore(&mut self, s: &ProcessState) {
+        self.level = s.level;
+        self.mean = s.mean;
+        self.rate = s.rate;
+        self.vol = s.vol;
+        self.lo = s.lo;
+        self.hi = s.hi;
+        self.rng = Rng::from_state(s.rng);
     }
 }
 
@@ -123,6 +167,35 @@ impl ContentionProcess {
             hi,
             rng,
         }
+    }
+
+    /// Capture the full process state (checkpointing).
+    pub fn snapshot(&self) -> ProcessState {
+        ProcessState {
+            level: self.level,
+            mean: self.mean,
+            rate: self.rate,
+            vol: self.vol,
+            burst_rate: self.burst_rate,
+            burst_level: self.burst_level,
+            lo: self.lo,
+            hi: self.hi,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Overwrite every field from a [`ProcessState`]: the restored
+    /// process continues the original trajectory bit-for-bit.
+    pub fn restore(&mut self, s: &ProcessState) {
+        self.level = s.level;
+        self.mean = s.mean;
+        self.rate = s.rate;
+        self.vol = s.vol;
+        self.burst_rate = s.burst_rate;
+        self.burst_level = s.burst_level;
+        self.lo = s.lo;
+        self.hi = s.hi;
+        self.rng = Rng::from_state(s.rng);
     }
 }
 
@@ -217,6 +290,39 @@ mod tests {
             assert!((0.0..=0.95).contains(&bursty.value()));
         }
         assert!(sum_b > sum_q * 1.5, "bursts had no effect: {sum_b} vs {sum_q}");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise() {
+        let mut p = ContentionProcess::new(0.2, 0.4, 0.1, 0.05, 0.4, 0.0, 0.95, Rng::new(11));
+        for _ in 0..37 {
+            p.advance(0.3);
+        }
+        let snap = p.snapshot();
+        let tail: Vec<u64> = (0..50)
+            .map(|_| {
+                p.advance(0.3);
+                p.value().to_bits()
+            })
+            .collect();
+        let mut q = ContentionProcess::new(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, Rng::new(0));
+        q.restore(&snap);
+        let tail2: Vec<u64> = (0..50)
+            .map(|_| {
+                q.advance(0.3);
+                q.value().to_bits()
+            })
+            .collect();
+        assert_eq!(tail, tail2);
+
+        let mut o = OuProcess::new(0.3, 0.5, 0.2, 0.0, 0.9, Rng::new(12));
+        o.advance(1.0);
+        let snap = o.snapshot();
+        let mut o2 = OuProcess::new(0.0, 0.0, 0.0, 0.0, 1.0, Rng::new(0));
+        o2.restore(&snap);
+        o.advance(0.7);
+        o2.advance(0.7);
+        assert_eq!(o.value().to_bits(), o2.value().to_bits());
     }
 
     #[test]

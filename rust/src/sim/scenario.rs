@@ -555,6 +555,22 @@ impl ScenarioRuntime {
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
+
+    /// Checkpoint image of the armed queue — pending entries with their
+    /// ORIGINAL sequence numbers plus the pop frontier, so derived
+    /// (mid-run [`ScenarioRuntime::schedule`]d) events like a storm's
+    /// auto-relax survive a checkpoint/restore even though they would not
+    /// survive a [`ScenarioRuntime::rearm`].
+    pub fn snapshot_queue(&self) -> crate::sim::engine::QueueState<ScenarioEvent> {
+        self.queue.snapshot()
+    }
+
+    /// Restore the armed queue mid-timeline (checkpoint restore). The
+    /// script itself is rebuilt by the caller from config; this overwrites
+    /// whatever `rearm` loaded with the snapshot's exact pending set.
+    pub fn restore_queue(&mut self, state: crate::sim::engine::QueueState<ScenarioEvent>) {
+        self.queue.restore(state);
+    }
 }
 
 #[cfg(test)]
@@ -659,6 +675,22 @@ mod tests {
         assert_eq!(rt.pending(), 1);
         rt.rearm();
         assert_eq!(rt.pending(), 0);
+    }
+
+    #[test]
+    fn queue_snapshot_preserves_derived_events_mid_timeline() {
+        let s = ScenarioScript::by_name("preempt_rejoin").unwrap();
+        let mut rt = ScenarioRuntime::new(s.clone());
+        let drained = rt.pop_due(1.5);
+        assert_eq!(drained.len(), 2);
+        // A derived event (storm auto-relax style) that rearm would drop.
+        rt.schedule(2.0, ScenarioEvent::CongestionRelax);
+        let snap = rt.snapshot_queue();
+        let expect: Vec<(f64, ScenarioEvent)> = rt.pop_due(1e9);
+        // Fresh runtime as a restore would build it: rearm then overwrite.
+        let mut rt2 = ScenarioRuntime::new(s);
+        rt2.restore_queue(snap);
+        assert_eq!(rt2.pop_due(1e9), expect);
     }
 
     #[test]

@@ -19,13 +19,14 @@
 //! The trainer knows nothing about RL — the coordinator (or a baseline
 //! schedule) mutates `batches` between iterations.
 
-use crate::cluster::SimCluster;
+use crate::cluster::{ClusterState, SimCluster};
 use crate::config::{ExperimentConfig, Optimizer, Topology};
-use crate::data::{ShardSampler, SyntheticDataset};
+use crate::data::{SamplerState, ShardSampler, SyntheticDataset};
 use crate::metrics::RunRecord;
-use crate::netsim::NetworkSim;
+use crate::netsim::{NetSimState, NetworkSim};
 use crate::runtime::{Backend, OptState, Schema, TrainOut};
 use crate::sim::elastic;
+use crate::sim::engine::QueueState;
 use crate::sim::scenario::{ScenarioEvent, ScenarioRuntime, ScenarioScript};
 use crate::sysmetrics::{Collector, WindowAggregator};
 use crate::util::json::Json;
@@ -107,6 +108,24 @@ impl ModelRuntime {
     pub fn reset(&mut self, seed: u64) -> anyhow::Result<()> {
         let params = self.backend.init_params(&self.model, seed)?;
         self.state = OptState::new(params, self.optimizer);
+        Ok(())
+    }
+
+    /// Borrow the flat model/optimizer state (checkpointing).
+    pub fn opt_state(&self) -> &OptState {
+        &self.state
+    }
+
+    /// Overwrite the model/optimizer state from a checkpoint image.
+    pub fn restore_opt_state(&mut self, s: &OptState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            s.params.len() == self.state.params.len(),
+            "opt snapshot has {} params, model {:?} has {}",
+            s.params.len(),
+            self.model,
+            self.state.params.len()
+        );
+        self.state = s.clone();
         Ok(())
     }
 
@@ -369,6 +388,12 @@ impl BspTrainer {
     /// touching the process environment).
     pub fn set_wire_sync(&mut self, mode: crate::comm::wire::WireMode) {
         self.wire_sync = mode;
+    }
+
+    /// Wire-codec label of the priced slice codec (checkpoint headers
+    /// fingerprint it so a resume under a different codec is rejected).
+    pub fn wire_label(&self) -> &'static str {
+        self.wire_sync.label()
     }
 
     pub fn n_workers(&self) -> usize {
@@ -704,6 +729,66 @@ impl BspTrainer {
         })
     }
 
+    /// Capture every piece of mutable trainer state a resumed run needs to
+    /// continue bit-for-bit: optimizer, cluster, fabric, samplers, batch
+    /// assignments, the remaining scenario timeline (including events the
+    /// runtime derived mid-run, e.g. a storm's auto-relax) and the applied
+    /// trace. Take it at a window boundary (every [`WindowAggregator`]
+    /// freshly finished) — window contents are NOT captured.
+    pub fn snapshot(&self) -> TrainerState {
+        TrainerState {
+            opt: self.runtime.opt_state().clone(),
+            cluster: self.cluster.snapshot(),
+            net: self.net.snapshot(),
+            samplers: self.samplers.iter().map(|s| s.snapshot()).collect(),
+            batches: self.batches.clone(),
+            iter: self.iter,
+            scenario_queue: self.scenario.snapshot_queue(),
+            events_applied: self.events_applied.clone(),
+            shard_seed: self.shard_seed,
+            membership_rev: self.membership_rev,
+            overlap_sync: self.overlap_sync,
+            bucket_bytes: self.bucket_bytes,
+            wire_sync: self.wire_sync,
+        }
+    }
+
+    /// Overwrite this trainer from a [`TrainerState`]. Windows reset to
+    /// empty (snapshots are taken at window boundaries) and the data
+    /// plane's shard membership is re-aligned to the restored cluster.
+    pub fn restore(&mut self, s: &TrainerState) -> anyhow::Result<()> {
+        let n = self.n_workers();
+        anyhow::ensure!(
+            s.batches.len() == n && s.samplers.len() == n,
+            "trainer snapshot is for {} workers, this trainer has {n}",
+            s.batches.len()
+        );
+        self.runtime.restore_opt_state(&s.opt)?;
+        self.cluster.restore(&s.cluster)?;
+        self.net.restore(&s.net);
+        self.samplers = s.samplers.iter().map(ShardSampler::from_snapshot).collect();
+        self.batches = s.batches.clone();
+        self.iter = s.iter;
+        self.scenario.restore_queue(s.scenario_queue.clone());
+        self.events_applied = s.events_applied.clone();
+        self.shard_seed = s.shard_seed;
+        self.membership_rev = s.membership_rev;
+        self.overlap_sync = s.overlap_sync;
+        self.bucket_bytes = s.bucket_bytes;
+        self.wire_sync = s.wire_sync;
+        for w in &mut self.windows {
+            *w = WindowAggregator::default();
+        }
+        if self.runtime.backend().shard_count() == n {
+            for w in 0..n {
+                self.runtime
+                    .backend()
+                    .set_shard_active(w, self.cluster.is_active(w));
+            }
+        }
+        Ok(())
+    }
+
     /// Held-out eval accuracy: (loss, acc).
     pub fn eval(&mut self) -> anyhow::Result<(f64, f64)> {
         self.runtime.eval(&self.dataset)
@@ -733,6 +818,28 @@ impl BspTrainer {
         self.runtime.reset(0)?;
         Ok(())
     }
+}
+
+/// Serializable checkpoint image of a [`BspTrainer`]'s mutable state.
+#[derive(Clone, Debug)]
+pub struct TrainerState {
+    /// Flat model params + optimizer moments + step counter.
+    pub opt: OptState,
+    pub cluster: ClusterState,
+    pub net: NetSimState,
+    /// One per worker (preempted workers keep a stale shard — exactly as
+    /// the live trainer does until the next reshard).
+    pub samplers: Vec<SamplerState>,
+    pub batches: Vec<usize>,
+    pub iter: usize,
+    /// Remaining scenario events, original seqs + pop frontier included.
+    pub scenario_queue: QueueState<ScenarioEvent>,
+    pub events_applied: Vec<(f64, String)>,
+    pub shard_seed: u64,
+    pub membership_rev: u64,
+    pub overlap_sync: bool,
+    pub bucket_bytes: usize,
+    pub wire_sync: crate::comm::wire::WireMode,
 }
 
 #[cfg(test)]
@@ -968,6 +1075,59 @@ mod tests {
         }
         assert!(t.net.congestion_mean() < 0.1, "auto-relax restored the baseline");
         assert_eq!(t.events_applied.len(), 2, "storm + derived relax recorded");
+    }
+
+    #[test]
+    fn trainer_snapshot_restore_resumes_bitwise_mid_scenario() {
+        use crate::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+        let mut cfg = small_cfg();
+        cfg.scenario = Some(ScenarioScript {
+            name: "ckpt".into(),
+            events: vec![
+                TimedEvent {
+                    at_s: 0.0,
+                    event: ScenarioEvent::PreemptWorker { worker: 3 },
+                },
+                TimedEvent {
+                    at_s: 0.02,
+                    event: ScenarioEvent::CongestionStorm {
+                        level: 0.7,
+                        duration_s: 0.1,
+                    },
+                },
+                TimedEvent {
+                    at_s: 0.3,
+                    event: ScenarioEvent::RejoinWorker { worker: 3 },
+                },
+            ],
+        });
+        let mut t = BspTrainer::new(&cfg, backend()).unwrap();
+        // Past the preempt + storm: the snapshot must carry the shrunken
+        // membership, the storm-shifted fabric AND the derived auto-relax
+        // event still pending in the queue.
+        for _ in 0..6 {
+            t.iterate().unwrap();
+        }
+        let snap = t.snapshot();
+        let tail = |t: &mut BspTrainer| {
+            (0..20)
+                .map(|_| {
+                    let o = t.iterate().unwrap();
+                    (
+                        o.loss.to_bits(),
+                        o.acc.to_bits(),
+                        o.sim_clock.to_bits(),
+                        o.retransmissions,
+                        o.global_batch,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let want = tail(&mut t);
+        let mut r = BspTrainer::new(&cfg, backend()).unwrap();
+        r.restore(&snap).unwrap();
+        assert_eq!(tail(&mut r), want);
+        assert_eq!(r.events_applied.len(), t.events_applied.len());
     }
 
     #[test]

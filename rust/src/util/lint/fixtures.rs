@@ -111,6 +111,23 @@ pub fn fold_bucket(seed: f32, rows: &[f32]) -> f32 {
 "#,
         },
         Fixture {
+            // The wall-clock rule also scopes `src/ckpt/`: checkpoint
+            // images and journal lines must stamp the SIM clock — a wall
+            // time in either would make a restored run unreplayable.
+            rule: "wall-clock",
+            path: "src/ckpt/lintfix.rs",
+            bad: r#"
+pub fn journal_stamp_is_fresh() -> bool {
+    std::time::SystemTime::now().elapsed().is_ok()
+}
+"#,
+            good: r#"
+pub fn journal_stamp(sim_clock_s: f64) -> f64 {
+    sim_clock_s
+}
+"#,
+        },
+        Fixture {
             rule: "feature-detect",
             path: "src/runtime/native/lintfix3.rs",
             bad: r#"

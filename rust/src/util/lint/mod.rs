@@ -165,6 +165,7 @@ fn env_read_allowlisted(rel: &str) -> bool {
 fn wall_clock_scoped(rel: &str) -> bool {
     rel.starts_with("src/sim/")
         || rel.starts_with("src/runtime/sharded/")
+        || rel.starts_with("src/ckpt/")
         || rel == "src/runtime/native/linalg.rs"
         || rel == "src/comm/wire.rs"
 }

@@ -1,0 +1,229 @@
+//! Payoff oracle for durable elastic runs: kill a checkpointed inference
+//! run mid-flight, restore from the latest image, and the resumed
+//! [`RunRecord`] must be **bitwise identical** to the uninterrupted run.
+//!
+//! Two crash shapes:
+//! * in-process "crash" — the coordinator is dropped and every image
+//!   after the chosen resume point is deleted, swept across gradient
+//!   plane {zero, replica} × backward/comm overlap on/off, under a
+//!   scenario script whose preemption + rejoin straddle the resume
+//!   point (the restored `ScenarioRuntime` must re-arm mid-timeline);
+//! * a real `kill -9` — the test re-execs itself, SIGKILLs the child
+//!   between checkpoints, and resumes in the parent.
+//!
+//! Plane and overlap are pinned through the [`ShardedBackend`] builders,
+//! never the environment (CI sweeps `DYNAMIX_PLANE`/`DYNAMIX_WIRE` across
+//! whole test binaries); every run also pins the checkpoint policy via
+//! `set_ckpt_policy`/`set_resume` so ambient `DYNAMIX_CKPT_*` settings
+//! cannot leak in. The SIGKILL child is the one deliberate exception: it
+//! inherits the parent's environment, which carries the checkpoint dir.
+
+use dynamix::comm::wire::WireMode;
+use dynamix::config::ExperimentConfig;
+use dynamix::coordinator::Coordinator;
+use dynamix::metrics::RunRecord;
+use dynamix::runtime::{native_backend, Backend, Plane, ShardedBackend};
+use dynamix::sim::scenario::{ScenarioEvent, ScenarioScript, TimedEvent};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Decision-cycle horizon shared by every run in this file: `progress =
+/// step / max_cycles` feeds the policy state, so a resume is only exact
+/// over the original horizon.
+const HORIZON: usize = 6;
+
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.cluster.n_workers = 2;
+    c.batch.initial = 64;
+    c.rl.k = 2;
+    c.steps_per_episode = HORIZON;
+    c.train.max_steps = 100;
+    c.train.eval_every = 2;
+    // Mid-run churn: worker 1 drops early and rejoins late, so a resume
+    // from the step-1 image re-arms the timeline with the preemption
+    // either already applied (in the image) or still queued — both paths
+    // must replay to the identical record.
+    c.scenario = Some(ScenarioScript {
+        name: "ckpt-churn".into(),
+        events: vec![
+            TimedEvent { at_s: 0.05, event: ScenarioEvent::PreemptWorker { worker: 1 } },
+            TimedEvent { at_s: 0.30, event: ScenarioEvent::RejoinWorker { worker: 1 } },
+        ],
+    });
+    c
+}
+
+fn sharded(plane: Plane, overlap: bool) -> Backend {
+    Arc::new(
+        ShardedBackend::loopback_with_threads(2, 1)
+            .with_overlap(overlap, 40 << 10)
+            .with_plane(plane)
+            .with_wire(WireMode::Dense),
+    )
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dynamix_ckres_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// One inference run over a FRESH coordinator + backend with an explicit
+/// checkpoint policy (hermetic against ambient `DYNAMIX_CKPT_*`).
+fn run(backend: Backend, dir: Option<PathBuf>, resume: bool) -> RunRecord {
+    let mut coord = Coordinator::new(cfg(), backend).unwrap();
+    coord.set_ckpt_policy(dir, 1);
+    coord.set_resume(resume);
+    let mut record = RunRecord::new("durable");
+    coord.run_inference(HORIZON, &mut record).unwrap();
+    record
+}
+
+fn assert_records_bitwise_eq(tag: &str, a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.name, b.name, "{tag}: name");
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point counts differ");
+    for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(p.iter, q.iter, "{tag}: point {i} iter");
+        assert_eq!(p.sim_time.to_bits(), q.sim_time.to_bits(), "{tag}: point {i} sim_time");
+        assert_eq!(p.train_acc.to_bits(), q.train_acc.to_bits(), "{tag}: point {i} train_acc");
+        assert_eq!(p.eval_acc.to_bits(), q.eval_acc.to_bits(), "{tag}: point {i} eval_acc");
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "{tag}: point {i} loss");
+        assert_eq!(p.batch_mean.to_bits(), q.batch_mean.to_bits(), "{tag}: point {i} batch_mean");
+        assert_eq!(p.batch_std.to_bits(), q.batch_std.to_bits(), "{tag}: point {i} batch_std");
+        assert_eq!(p.global_batch, q.global_batch, "{tag}: point {i} global_batch");
+    }
+    assert_eq!(a.final_eval_acc.to_bits(), b.final_eval_acc.to_bits(), "{tag}: final_eval_acc");
+    assert_eq!(
+        a.convergence_time.map(f64::to_bits),
+        b.convergence_time.map(f64::to_bits),
+        "{tag}: convergence_time"
+    );
+    assert_eq!(a.total_sim_time.to_bits(), b.total_sim_time.to_bits(), "{tag}: total_sim_time");
+    assert_eq!(a.total_iters, b.total_iters, "{tag}: total_iters");
+    assert_eq!(a.extra, b.extra, "{tag}: record extras differ");
+}
+
+/// Delete every image after `keep` — the in-process stand-in for a crash
+/// right after the step-`keep` checkpoint landed.
+fn truncate_to(dir: &PathBuf, keep: usize) {
+    while let Some((step, path)) = dynamix::ckpt::latest(dir) {
+        if step <= keep {
+            break;
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+    assert!(
+        dynamix::ckpt::latest(dir).map_or(false, |(s, _)| s <= keep),
+        "no image at or before step {keep} under {dir:?}"
+    );
+}
+
+#[test]
+fn drop_and_resume_is_bitwise_across_planes_and_overlap() {
+    for (plane, label) in [(Plane::Zero, "zero"), (Plane::Replica, "replica")] {
+        for overlap in [false, true] {
+            let tag = format!("{label}_overlap_{overlap}");
+            let dir = temp_dir(&tag);
+            // Uninterrupted reference.
+            let reference = run(sharded(plane, overlap), None, false);
+            // Checkpointed run; the coordinator drops at the end of the
+            // closure — the in-process crash — and the image trail is
+            // truncated to the step-1 checkpoint.
+            let killed = run(sharded(plane, overlap), Some(dir.clone()), false);
+            assert_records_bitwise_eq(&tag, &reference, &killed);
+            truncate_to(&dir, 1);
+            // Resume in a fresh coordinator + fresh backend.
+            let resumed = run(sharded(plane, overlap), Some(dir.clone()), true);
+            assert_records_bitwise_eq(&tag, &reference, &resumed);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn journal_replays_the_churn_timeline_across_a_resume() {
+    use dynamix::util::json::Json;
+    let dir = temp_dir("journal");
+    let reference = run(sharded(Plane::Zero, true), None, false);
+    run(sharded(Plane::Zero, true), Some(dir.clone()), false);
+    truncate_to(&dir, 1);
+    let resumed = run(sharded(Plane::Zero, true), Some(dir.clone()), true);
+    assert_records_bitwise_eq("journal", &reference, &resumed);
+    // The journal saw the scenario's membership events (sim-time stamped)
+    // plus cycles and checkpoints from both lives of the run.
+    let lines = dynamix::ckpt::Journal::read(&dir).unwrap();
+    let kinds: Vec<&str> = lines
+        .iter()
+        .filter_map(|l| l.get("kind").and_then(Json::as_str))
+        .collect();
+    assert!(kinds.contains(&"cycle"), "no cycle lines in {kinds:?}");
+    assert!(kinds.contains(&"ckpt"), "no ckpt lines in {kinds:?}");
+    let events: Vec<&str> = lines
+        .iter()
+        .filter(|l| l.get("kind").and_then(Json::as_str) == Some("event"))
+        .filter_map(|l| l.get("event").and_then(Json::as_str))
+        .collect();
+    assert!(
+        events.iter().any(|e| e.contains("preempt_worker")),
+        "preemption never journaled: {events:?}"
+    );
+    assert!(
+        events.iter().any(|e| e.contains("rejoin_worker")),
+        "rejoin never journaled: {events:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Not a standalone test: the SIGKILL oracle below re-execs this binary
+/// with `DYNAMIX_CKPT_CHILD` set (plus the `DYNAMIX_CKPT_*` policy in the
+/// environment — the one env-seeded coordinator in this file) and kills
+/// the child between checkpoints. Without the gate it is a no-op.
+#[test]
+fn child_runs_durable_inference_to_completion() {
+    if std::env::var("DYNAMIX_CKPT_CHILD").is_err() {
+        return;
+    }
+    let mut coord = Coordinator::new(cfg(), native_backend()).unwrap();
+    let mut record = RunRecord::new("durable");
+    coord.run_inference(HORIZON, &mut record).unwrap();
+}
+
+#[test]
+fn sigkill_mid_run_then_restore_is_bitwise() {
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+    let dir = temp_dir("sigkill");
+    let exe = std::env::current_exe().unwrap();
+    let mut child = Command::new(exe)
+        .args(["child_runs_durable_inference_to_completion", "--exact", "--nocapture"])
+        .env("DYNAMIX_CKPT_CHILD", "1")
+        .env("DYNAMIX_CKPT_DIR", &dir)
+        .env("DYNAMIX_CKPT_EVERY", "1")
+        .env_remove("DYNAMIX_RESUME")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    // Kill -9 as soon as the step-2 image lands. If the child outruns the
+    // poll and exits first, the trail is complete — the resume below is
+    // then a pure tail-replay, which must ALSO be bitwise.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if dynamix::ckpt::latest(&dir).map_or(false, |(s, _)| s >= 2) {
+            child.kill().ok();
+            break;
+        }
+        if child.try_wait().unwrap().is_some() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "child never reached the step-2 checkpoint");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    child.wait().unwrap();
+
+    let reference = run(native_backend(), None, false);
+    let resumed = run(native_backend(), Some(dir.clone()), true);
+    assert_records_bitwise_eq("sigkill", &reference, &resumed);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -402,14 +402,21 @@ fn tcp_shard_killed_mid_ring_surfaces_clean_error_and_recovers() {
     use std::net::TcpListener;
     use std::sync::atomic::{AtomicBool, Ordering};
 
-    // The timeline: kill shard 1 at t = 2.5 (the BSP clock below ticks
-    // 1.0s per step, so the event lands before step index 2's ring).
+    // The timeline: kill shard 1 at t = 2.5, re-admit it at t = 4.5 (the
+    // BSP clock below ticks 1.0s per step, so the kill lands before step
+    // index 2's ring and the rejoin before step index 4's).
     let script = ScenarioScript {
         name: "kill-tcp-shard".into(),
-        events: vec![TimedEvent {
-            at_s: 2.5,
-            event: ScenarioEvent::PreemptWorker { worker: 1 },
-        }],
+        events: vec![
+            TimedEvent {
+                at_s: 2.5,
+                event: ScenarioEvent::PreemptWorker { worker: 1 },
+            },
+            TimedEvent {
+                at_s: 4.5,
+                event: ScenarioEvent::RejoinWorker { worker: 1 },
+            },
+        ],
     };
     let mut timeline = ScenarioRuntime::new(script);
     let kill = Arc::new(AtomicBool::new(false));
@@ -447,13 +454,46 @@ fn tcp_shard_killed_mid_ring_surfaces_clean_error_and_recovers() {
     let mut ns = OptState::new(native.init_params("vgg11_mini", 0).unwrap(), Optimizer::Sgd);
     let mut clock = 0.0f64;
     let mut killed = false;
-    for step in 0..5u64 {
+    let mut rejoined = false;
+    for step in 0..7u64 {
         clock += 1.0;
         for (_, ev) in timeline.pop_due(clock) {
-            if let ScenarioEvent::PreemptWorker { worker } = ev {
-                assert_eq!(worker, 1);
-                kill.store(true, Ordering::SeqCst);
-                killed = true;
+            match ev {
+                ScenarioEvent::PreemptWorker { worker } => {
+                    assert_eq!(worker, 1);
+                    kill.store(true, Ordering::SeqCst);
+                    killed = true;
+                }
+                // The reconnect/rejoin handshake: a fresh TCP shard
+                // server comes up, the leader attaches the new link and
+                // flips the shard back into the membership. No state
+                // re-sync protocol — Step ships rows + params, so the
+                // very next iteration trains through the rejoined shard.
+                ScenarioEvent::RejoinWorker { worker } => {
+                    assert_eq!(worker, 1);
+                    assert!(killed, "rejoin fired before the kill");
+                    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                    let addr = listener.local_addr().unwrap();
+                    handles.push(std::thread::spawn(move || {
+                        let (stream, _) = listener.accept().unwrap();
+                        let t = TcpShardTransport::new(
+                            dynamix::comm::TcpTransport::new(stream).unwrap(),
+                        );
+                        let _ = shard_worker::serve(t, Arc::new(NativeBackend::with_threads(1)));
+                    }));
+                    let stream = std::net::TcpStream::connect(addr).unwrap();
+                    sharded
+                        .reattach_transport(
+                            1,
+                            Box::new(TcpShardTransport::new(
+                                dynamix::comm::TcpTransport::new(stream).unwrap(),
+                            )),
+                        )
+                        .unwrap();
+                    assert!(sharded.set_shard_active(1, true), "rejoin must re-enter membership");
+                    rejoined = true;
+                }
+                other => panic!("unexpected scenario event {other:?}"),
             }
         }
         let mut rng = Rng::new(9000 + step);
@@ -499,12 +539,15 @@ fn tcp_shard_killed_mid_ring_surfaces_clean_error_and_recovers() {
         );
     }
     assert!(killed, "the scenario timeline never fired");
+    assert!(rejoined, "the rejoin event never fired");
     assert_eq!(
         sharded.shard_membership(),
-        vec![true, false],
-        "dead shard must be out of the membership"
+        vec![true, true],
+        "rejoined shard must be back in the membership"
     );
-    drop(sharded); // Shutdown to shard 0; shard 1's thread already exited
+    // Shutdown to shard 0 and the rejoined shard 1 server; the killed
+    // shard 1 thread already exited on the injected error.
+    drop(sharded);
     for h in handles {
         let _ = h.join();
     }

@@ -250,7 +250,7 @@ fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
 
 /// A random message spanning every wire variant — control plane and the
 /// shard-gradient data plane, including both Option branches of ShardStep
-/// and the PROTO_VERSION 4 zero-plane slice frames. The compressed slice
+/// and the PROTO_VERSION 5 zero-plane slice frames. The compressed slice
 /// variants go through the real codecs so the decoder's structural
 /// validation (strict topk index monotonicity, count checks) accepts
 /// them; hostile frames are covered by the truncation property and the
@@ -312,7 +312,12 @@ fn random_wire_msg(rng: &mut Rng) -> Msg {
             seq: rng.next_u64(),
             loss: rng.normal() as f32,
             acc: rng.uniform() as f32,
-            grad: rand_f32s(rng, 48),
+            sigma_norm: rng.uniform() as f32,
+            sigma_norm2: rng.uniform() as f32,
+            grad_l2: rng.uniform() as f32,
+            // Half the draws take the zero plane's barrier shape (empty
+            // gradient, stats only in the v5 triple).
+            grad: if rng.uniform() < 0.5 { Vec::new() } else { rand_f32s(rng, 48) },
         },
         11 => Msg::ShardErr {
             seq: rng.next_u64(),

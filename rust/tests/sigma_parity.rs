@@ -1,0 +1,210 @@
+//! Regression oracle for the **zero-plane sigma-stat blackout** (fixed by
+//! wire protocol v5).
+//!
+//! The bug: on the deployed TCP zero plane the step barrier is an
+//! empty-gradient `ShardGradFin` (the reduced gradient travels slice-wise
+//! and never reassembles worker-side), so workers had nothing to derive
+//! their sigma-stat RL features from and silently pushed 0.0 into the
+//! window aggregator — the policy saw a different (blacked-out) state
+//! distribution on the zero plane than on the replica plane for the SAME
+//! training run. Since v5 the fin carries the leader-computed normalized
+//! gradient-moment triple on BOTH planes and the worker consumes the
+//! carried values instead of deriving its own.
+//!
+//! The oracle drives the REAL [`dynamix::comm::leader::worker`] loop over
+//! a REAL TCP socket, with the test acting as the leader (n = 1 makes the
+//! ring protocol exact and small), once per plane with the identical
+//! preset/seed. The worker's `StateReport` vector must have nonzero
+//! sigma features, bitwise identical across planes.
+//!
+//! Single `#[test]`: the worker reads `DYNAMIX_PLANE`/`DYNAMIX_WIRE` from
+//! the environment at startup, so this binary pins both and must not run
+//! concurrent env-sensitive tests.
+
+use dynamix::comm::{leader, Msg, TcpTransport, Transport};
+use dynamix::config::{presets, Scale};
+use dynamix::rl::state::{idx, StateVector};
+use dynamix::runtime::native::model::{fold_masked_ce_partial, normalized_grad_stats};
+use dynamix::runtime::{ComputeBackend, NativeBackend};
+use std::net::TcpListener;
+
+/// Bucket target of the deployed reduce-scatter (`leader::ZERO_BUCKET_BYTES`
+/// is a compile-time protocol constant derived on both sides, never
+/// transmitted — the test-leader must agree with the worker's arithmetic).
+const ZERO_BUCKET_BYTES: usize = 32 << 10;
+
+/// Act as the leader for ONE real TCP worker through one full control
+/// cycle (`k` data-plane iterations + the state report), returning the
+/// worker's state vector. `zero` selects which plane's frames we speak;
+/// the worker's side of the plane comes from `DYNAMIX_PLANE`, which the
+/// caller pins to match.
+fn drive_one_worker(zero: bool) -> StateVector {
+    let cfg = presets::scaled(presets::by_name("vgg11-sgd").unwrap(), Scale::Quick);
+    let model = cfg.train.model.clone();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let wh = std::thread::spawn(move || leader::worker(&addr, "vgg11-sgd", Scale::Quick, 0));
+    let (stream, _) = listener.accept().unwrap();
+    let mut t = TcpTransport::new(stream).unwrap();
+
+    let batch = match t.recv().unwrap() {
+        Msg::Register { worker, max_batch } => {
+            assert_eq!(worker, 0);
+            cfg.batch.initial.min(max_batch as usize)
+        }
+        other => panic!("expected Register, got {other:?}"),
+    };
+    t.send(&Msg::Welcome {
+        worker: 0,
+        k: cfg.rl.k as u32,
+        initial_batch: batch as u32,
+        n_workers: 1,
+        cycles: 1,
+    })
+    .unwrap();
+
+    let native = NativeBackend::with_threads(1);
+    let pc = native.schema().model(&model).unwrap().param_count;
+    let plan = native.bucket_plan(&model, ZERO_BUCKET_BYTES).unwrap();
+    let part = native.param_partition(&model, &[true], ZERO_BUCKET_BYTES).unwrap();
+
+    let mut seq = 0u64;
+    for _ in 0..cfg.rl.k {
+        seq += 1;
+        let denom = batch as f32;
+        t.send(&Msg::ShardStep { seq, denom, train: true, rows: None, params: None })
+            .unwrap();
+        let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+        match t.recv().unwrap() {
+            Msg::ShardFwd { seq: rs, loss_terms, correct } => {
+                assert_eq!(rs, seq);
+                fold_masked_ce_partial(&loss_terms, &correct, &mut loss_sum, &mut acc_sum);
+            }
+            other => panic!("expected ShardFwd, got {other:?}"),
+        }
+        let loss = (loss_sum / denom as f64) as f32;
+        let acc = (acc_sum / denom as f64) as f32;
+
+        let grad = if zero {
+            // Reduce-scatter: ring every travel-plan window through the
+            // sole worker, then scatter it its (whole-model) owned slice
+            // and take the updated params back; the all-gather leg is
+            // empty with one owner.
+            let mut grad = vec![0.0f32; pc];
+            for (b, win) in plan.iter().enumerate() {
+                t.send(&Msg::ShardGradSlice {
+                    seq,
+                    slice: b as u32,
+                    offset: win.offset as u64,
+                    grad: vec![0.0f32; win.len],
+                })
+                .unwrap();
+                match t.recv().unwrap() {
+                    Msg::ShardGradSlice { offset, grad: dense, .. } => {
+                        let off = offset as usize;
+                        grad[off..off + dense.len()].copy_from_slice(&dense);
+                    }
+                    other => panic!("expected folded slice, got {other:?}"),
+                }
+            }
+            let r = part[0].clone();
+            t.send(&Msg::ShardGradSlice {
+                seq,
+                slice: 0,
+                offset: r.start as u64,
+                grad: grad[r].to_vec(),
+            })
+            .unwrap();
+            match t.recv().unwrap() {
+                Msg::ShardParamSlice { seq: rs, .. } => assert_eq!(rs, seq),
+                other => panic!("expected ShardParamSlice, got {other:?}"),
+            }
+            grad
+        } else {
+            // Replica ring: the whole accumulator makes its single hop.
+            t.send(&Msg::ShardGradSeed { seq, grad: vec![0.0f32; pc] }).unwrap();
+            match t.recv().unwrap() {
+                Msg::ShardGradOut { seq: rs, grad } => {
+                    assert_eq!(rs, seq);
+                    grad
+                }
+                other => panic!("expected ShardGradOut, got {other:?}"),
+            }
+        };
+
+        let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
+        assert!(grad_l2 > 0.0, "reduced gradient unexpectedly zero at seq {seq}");
+        t.send(&Msg::ShardGradFin {
+            seq,
+            loss,
+            acc,
+            sigma_norm,
+            sigma_norm2,
+            grad_l2,
+            grad: if zero { Vec::new() } else { grad },
+        })
+        .unwrap();
+    }
+
+    let state = match t.recv().unwrap() {
+        Msg::StateReport { state, .. } => state,
+        other => panic!("expected StateReport, got {other:?}"),
+    };
+    t.send(&Msg::Shutdown).unwrap();
+    wh.join().unwrap().unwrap();
+    state
+}
+
+#[test]
+fn tcp_worker_sigma_features_nonzero_and_identical_across_planes() {
+    let prev_plane = std::env::var("DYNAMIX_PLANE").ok();
+    let prev_wire = std::env::var("DYNAMIX_WIRE").ok();
+    // Dense wire: the compressed codecs trade bit parity by design, and
+    // the blackout was never about compression.
+    std::env::set_var("DYNAMIX_WIRE", "dense");
+
+    std::env::set_var("DYNAMIX_PLANE", "zero");
+    let zs = drive_one_worker(true);
+    std::env::set_var("DYNAMIX_PLANE", "replica");
+    let rs = drive_one_worker(false);
+
+    match prev_plane {
+        Some(v) => std::env::set_var("DYNAMIX_PLANE", v),
+        None => std::env::remove_var("DYNAMIX_PLANE"),
+    }
+    match prev_wire {
+        Some(v) => std::env::set_var("DYNAMIX_WIRE", v),
+        None => std::env::remove_var("DYNAMIX_WIRE"),
+    }
+
+    // The blackout symptom: these read 0.0 on the zero plane pre-v5.
+    assert!(
+        zs.0[idx::SIGMA_NORM] != 0.0 && zs.0[idx::SIGMA_NORM2] != 0.0,
+        "zero-plane sigma features blacked out: {zs:?}"
+    );
+    assert!(
+        rs.0[idx::SIGMA_NORM] != 0.0 && rs.0[idx::SIGMA_NORM2] != 0.0,
+        "replica-plane sigma features zero: {rs:?}"
+    );
+    // Plane parity: same preset, same seed, dense wire — the reduced
+    // gradient is bitwise identical across planes (the zero_parity
+    // contract), so the carried sigma stats must be too.
+    assert_eq!(
+        zs.0[idx::SIGMA_NORM].to_bits(),
+        rs.0[idx::SIGMA_NORM].to_bits(),
+        "sigma_norm differs across planes: zero={} replica={}",
+        zs.0[idx::SIGMA_NORM],
+        rs.0[idx::SIGMA_NORM]
+    );
+    assert_eq!(
+        zs.0[idx::SIGMA_NORM2].to_bits(),
+        rs.0[idx::SIGMA_NORM2].to_bits(),
+        "sigma_norm2 differs across planes: zero={} replica={}",
+        zs.0[idx::SIGMA_NORM2],
+        rs.0[idx::SIGMA_NORM2]
+    );
+    // Accuracy is deterministic too (wall-clock features are not, which
+    // is why the assertion set stops here).
+    assert_eq!(zs.0[idx::ACC_MEAN].to_bits(), rs.0[idx::ACC_MEAN].to_bits());
+}
