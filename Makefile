@@ -28,20 +28,25 @@ lint:
 	cd rust && $(CARGO) run --release --bin dynamix-lint
 
 # Miri over the unsafe concurrency core (WorkerSet queue/latch/panic
-# paths, Workspace/PanelCache generation tagging, wire codec bounds).
+# paths, Workspace/PanelCache generation tagging, wire codec bounds, and
+# the linalg SIMD lane dispatch — every new `unsafe` block's pointer
+# discipline runs under the interpreter).
 # Needs: rustup +nightly component add miri. Leak checking is off because
 # the persistent worker threads are parked, never joined at process exit.
 miri:
 	cd rust && MIRIFLAGS="-Zmiri-ignore-leaks" $(CARGO) +nightly miri test --lib -- \
-		runtime::native::exec runtime::native::workspace comm::wire
+		runtime::native::exec runtime::native::workspace runtime::native::linalg comm::wire
 
 # ThreadSanitizer (advisory): data-race detection on the pool + parity
-# tests. Needs: rustup +nightly component add rust-src.
+# tests (linalg tiers AND the wire-codec/worker scratch reuse paths).
+# Needs: rustup +nightly component add rust-src.
 tsan:
 	cd rust && RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -Zbuild-std \
 		--target x86_64-unknown-linux-gnu --lib -- runtime::native::exec
 	cd rust && RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -Zbuild-std \
 		--target x86_64-unknown-linux-gnu --test linalg_parity
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -Zbuild-std \
+		--target x86_64-unknown-linux-gnu --test codec_parity
 
 # Full benchmark sweep. Every bench binary appends a machine-readable run
 # record (git rev, DYNAMIX_THREADS, p10/p50/p90, samples/s) to

@@ -5,15 +5,19 @@
 //! (scalar/blocked/simd backends pinned per entry, independent of
 //! `DYNAMIX_KERNEL`) and prices the persistent worker pool against the old
 //! scoped-spawn execution at a small-bucket matmul, recording the delta in
-//! the session's `note` field. Appends a machine-readable run record
+//! the session's `note` field. The non-GEMM hot path gets its own entries:
+//! tiered elementwise/row-softmax/optimizer kernels (`ops/*` per tier) and
+//! the wire codecs (`wire/topk_select`, `wire/q8_codec` at the ambient
+//! process tier). Appends a machine-readable run record
 //! (bucket, samples/s, p10/p50/p90, thread count, kernel tier, git rev) to
 //! `BENCH_native.json` — the repo's perf trajectory.
 //!
 //!     cargo bench --bench train_step
 //!     DYNAMIX_KERNEL=blocked DYNAMIX_BENCH_NOTE=pre-simd cargo bench --bench train_step
 
+use dynamix::comm::wire;
 use dynamix::runtime::native::exec::{run_scoped, KernelTier, Pool};
-use dynamix::runtime::native::linalg::matmul_acc;
+use dynamix::runtime::native::linalg::{adam_apply, log_softmax, matmul_acc, relu};
 use dynamix::runtime::{default_backend, Backend, NativeBackend};
 use dynamix::trainer::ModelRuntime;
 use dynamix::util::bench::{bench, iters, throughput, BenchSession};
@@ -103,6 +107,63 @@ fn main() -> anyhow::Result<()> {
             );
             session.push_items(&r, bucket);
         }
+    }
+
+    println!("\n== non-GEMM ops per tier (elementwise / row-softmax / optimizer) ==");
+    // The tiered elementwise/optimizer kernels, pinned per entry like the
+    // train-step tier sweep. Sizes sit past the pool's parallel cutoff so
+    // the chunked fan-out (not just the SIMD lanes) is on the clock.
+    for tier in KernelTier::available() {
+        let pool = Pool::with_config(threads, tier);
+        let len = 1 << 18; // 256k floats
+        let base: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let mut buf = base.clone();
+        let (wu, it) = iters(10, 60);
+        let r = bench(&format!("ops/relu/{}", tier.as_str()), wu, it, || {
+            buf.copy_from_slice(&base);
+            relu(&pool, &mut buf);
+        });
+        session.push_items(&r, len);
+
+        let (m, n) = (2048usize, 128usize);
+        let logits: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut logp = vec![0.0f32; m * n];
+        let r = bench(&format!("ops/log_softmax/{}", tier.as_str()), wu, it, || {
+            log_softmax(&pool, &logits, m, n, &mut logp);
+        });
+        session.push_items(&r, m);
+
+        let g: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let mut params: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let mut mm = vec![0.0f32; len];
+        let mut vv = vec![0.0f32; len];
+        let r = bench(&format!("ops/adam_apply/{}", tier.as_str()), wu, it, || {
+            adam_apply(
+                &pool, &mut params, &mut mm, &mut vv, &g, 1e-3, 0.9, 0.999, 1e-8, 0.1, 0.001,
+            );
+        });
+        session.push_items(&r, len);
+    }
+
+    println!("\n== wire codecs on a 64k-float gradient window (ambient tier) ==");
+    // The q8/topk hot paths dispatch on the PROCESS tier (DYNAMIX_KERNEL),
+    // not a pinned pool, so these record whatever tier the run resolved —
+    // the session header carries it for cross-run comparison.
+    {
+        let len = 1 << 16;
+        let x: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let (wu, it) = iters(10, 100);
+        let (mut order, mut idx, mut val) = (Vec::new(), Vec::new(), Vec::new());
+        let r = bench("wire/topk_select", wu, it, || {
+            wire::topk_encode_into(&x, &mut order, &mut idx, &mut val);
+        });
+        session.push_items(&r, len);
+        let (mut q, mut dense) = (Vec::new(), Vec::new());
+        let r = bench("wire/q8_codec", wu, it, || {
+            let scale = wire::q8_encode_into(&x, &mut q);
+            wire::q8_decode_into(scale, &q, &mut dense).unwrap();
+        });
+        session.push_items(&r, len);
     }
 
     println!("\n== persistent pool vs scoped-spawn at a small-bucket matmul ==");

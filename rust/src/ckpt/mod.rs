@@ -617,6 +617,55 @@ pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
     best
 }
 
+/// Retention GC over numbered checkpoint images: delete every
+/// `<prefix><n>.bin` under `dir` except the `keep` highest-numbered ones.
+/// Runs AFTER a successful atomic write, so the newest image is always in
+/// the kept set; the journal and every non-matching file are untouched.
+/// Best-effort by design — an unreadable directory or a failed unlink is
+/// a warning on stderr, never an error: losing a prune is benign (the
+/// next save retries), while failing a save over it would not be.
+/// Returns the paths actually removed (the unit tests pin the set).
+pub fn prune_numbered(dir: &Path, prefix: &str, keep: usize) -> Vec<PathBuf> {
+    let mut found: Vec<(usize, PathBuf)> = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[ckpt] retention scan of {dir:?} failed: {e}");
+            return Vec::new();
+        }
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let num = name
+            .strip_prefix(prefix)
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(num) = num {
+            found.push((num, entry.path()));
+        }
+    }
+    if found.len() <= keep {
+        return Vec::new();
+    }
+    // Newest first; everything past the first `keep` goes.
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    let mut removed = Vec::new();
+    for (_, path) in found.drain(keep..) {
+        match std::fs::remove_file(&path) {
+            Ok(()) => removed.push(path),
+            Err(e) => eprintln!("[ckpt] retention prune of {path:?} failed: {e}"),
+        }
+    }
+    removed
+}
+
+/// Retention GC for the single-process coordinator's `ckpt-<step>.bin`
+/// images (`DYNAMIX_CKPT_KEEP` / `--ckpt-keep`).
+pub fn prune(dir: &Path, keep: usize) -> Vec<PathBuf> {
+    prune_numbered(dir, "ckpt-", keep)
+}
+
 /// Load and validate the image at `path`.
 pub fn load(path: &Path, expect: &CkptHeader) -> anyhow::Result<ResumeState> {
     let bytes =
@@ -718,6 +767,12 @@ impl LeaderCkpt {
             }
         }
         best
+    }
+
+    /// Retention GC for `leader-<cycle>.bin` images — same
+    /// keep-the-newest-k, warn-don't-fail contract as [`prune`].
+    pub fn prune(dir: &Path, keep: usize) -> Vec<PathBuf> {
+        prune_numbered(dir, "leader-", keep)
     }
 
     /// Load and validate the image at `path`.
@@ -1105,6 +1160,66 @@ mod tests {
         assert_eq!(step, 4);
         let back = load(&path, &h).unwrap();
         assert_eq!(back.step, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_keeps_newest_k_and_spares_everything_else() {
+        let dir = std::env::temp_dir().join(format!("dynamix_prune_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let h = header();
+        let mut s = sample_state();
+        // Out-of-order writes: retention ranks by step, not mtime.
+        for step in [3usize, 11, 1, 7, 5] {
+            s.step = step;
+            save_atomic(&dir, &h, &s).unwrap();
+        }
+        // The journal, temp files, foreign names, and leader images must
+        // all survive a ckpt- prune.
+        std::fs::write(dir.join("journal.jsonl"), b"{}\n").unwrap();
+        std::fs::write(dir.join(".ckpt-99.tmp"), b"junk").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"junk").unwrap();
+        std::fs::write(dir.join("leader-2.bin"), b"junk").unwrap();
+        std::fs::write(dir.join("ckpt-x.bin"), b"junk").unwrap();
+
+        let removed = prune(&dir, 2);
+        let mut gone: Vec<String> = removed
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        gone.sort();
+        assert_eq!(gone, ["ckpt-1.bin", "ckpt-3.bin", "ckpt-5.bin"]);
+        assert!(dir.join("ckpt-11.bin").exists());
+        assert!(dir.join("ckpt-7.bin").exists());
+        assert!(dir.join("journal.jsonl").exists(), "the journal is never pruned");
+        assert!(dir.join(".ckpt-99.tmp").exists());
+        assert!(dir.join("notes.txt").exists());
+        assert!(dir.join("leader-2.bin").exists(), "ckpt- prune must not touch leader images");
+        assert!(dir.join("ckpt-x.bin").exists(), "non-numeric names are foreign");
+        // The survivors still restore, and latest() still resolves.
+        let (step, path) = latest(&dir).expect("kept checkpoints exist");
+        assert_eq!(step, 11);
+        assert_eq!(load(&path, &h).unwrap().step, 11);
+
+        // At or under the retention floor: a no-op, not an error.
+        assert!(prune(&dir, 2).is_empty());
+        assert!(prune(&dir, 10).is_empty());
+        // A missing directory warns and removes nothing.
+        assert!(prune(&dir.join("nope"), 1).is_empty());
+
+        // Leader-image retention uses the same core on its own prefix.
+        for cycle in [2usize, 9, 4] {
+            std::fs::write(dir.join(LeaderCkpt::file_name(cycle)), b"junk").unwrap();
+        }
+        let removed = LeaderCkpt::prune(&dir, 1);
+        let mut gone: Vec<String> = removed
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        gone.sort();
+        assert_eq!(gone, ["leader-2.bin", "leader-4.bin"]);
+        assert!(dir.join("leader-9.bin").exists());
+        assert!(dir.join("ckpt-11.bin").exists(), "leader prune must not touch ckpt images");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -59,6 +59,7 @@ use crate::runtime::native::model::{
     apply_adam, apply_adam_slice, apply_sgd, apply_sgd_slice, fold_masked_ce_partial,
     normalized_grad_stats,
 };
+use crate::runtime::native::exec::Pool;
 use crate::runtime::native::{NativeBackend, ShardCtx};
 use crate::runtime::OptState;
 use crate::sysmetrics::{SysSample, WindowAggregator};
@@ -232,6 +233,7 @@ pub fn serve_n(
     // captured there).
     let ckpt_dir = crate::config::env::ckpt_dir();
     let ckpt_every = crate::config::env::ckpt_every().unwrap_or(1);
+    let ckpt_keep = crate::config::env::ckpt_keep();
     let journal = match &ckpt_dir {
         Some(dir) => Some(Journal::open(dir)?),
         None => None,
@@ -408,8 +410,8 @@ pub fn serve_n(
                 if let Some(mir) = mirror.as_mut() {
                     // The identical update every full replica applies.
                     match cfg.train.optimizer {
-                        Optimizer::Sgd => apply_sgd(mir, &grad, cfg.train.lr),
-                        Optimizer::Adam => apply_adam(mir, &grad, cfg.train.lr),
+                        Optimizer::Sgd => apply_sgd(&Pool::sequential(), mir, &grad, cfg.train.lr),
+                        Optimizer::Adam => apply_adam(&Pool::sequential(), mir, &grad, cfg.train.lr),
                     }
                 }
                 let fin = Msg::ShardGradFin {
@@ -487,6 +489,12 @@ pub fn serve_n(
                     batches: batches.iter().map(|&b| b as u64).collect(),
                 };
                 let path = image.save_atomic(dir)?;
+                // Retention GC after the successful write: the newest
+                // image always survives; failures warn and never abort
+                // the serving loop.
+                if let Some(keep) = ckpt_keep {
+                    LeaderCkpt::prune(dir, keep);
+                }
                 if let Some(j) = &journal {
                     j.checkpoint(cycle as usize + 1, clock)?;
                 }
@@ -665,6 +673,7 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                 slice_step += 1.0;
                 match cfg.train.optimizer {
                     Optimizer::Sgd => apply_sgd_slice(
+                        native.pool(),
                         &mut state.params[my.clone()],
                         &mut slice_m,
                         &grad,
@@ -676,6 +685,7 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                         // exactly once per iteration.
                         let step_t = slice_step as f64;
                         apply_adam_slice(
+                            native.pool(),
                             &mut state.params[my.clone()],
                             &mut slice_m,
                             &mut slice_v,
@@ -718,8 +728,8 @@ pub fn worker(addr: &str, preset: &str, scale: Scale, worker_id: u32) -> anyhow:
                          disagree on DYNAMIX_PLANE"
                     );
                     match cfg.train.optimizer {
-                        Optimizer::Sgd => apply_sgd(&mut state, &grad, lr),
-                        Optimizer::Adam => apply_adam(&mut state, &grad, lr),
+                        Optimizer::Sgd => apply_sgd(native.pool(), &mut state, &grad, lr),
+                        Optimizer::Adam => apply_adam(native.pool(), &mut state, &grad, lr),
                     }
                 }
                 window.push_iteration(

@@ -1,4 +1,16 @@
-//! Little-endian binary encoder/decoder with length-prefixed framing.
+//! Little-endian binary encoder/decoder with length-prefixed framing,
+//! plus the gradient-slice payload codecs (`topk`/`q8`).
+//!
+//! Codec hot-path discipline: every codec has an `_into` variant over
+//! caller buffers (the ring touches these once per hop — the owned-`Vec`
+//! wrappers exist for tests and one-off callers), the top-k encode is an
+//! O(n) partial select rather than a full sort, and the q8 encode/decode
+//! carry AVX2 lanes dispatched on the process-wide resolved kernel tier
+//! ([`global_tier`] — no env re-reads here). Tier never changes bytes:
+//! the SIMD lanes reproduce the scalar rounding sequence exactly, so the
+//! PR 8 run-to-run determinism pins hold on every tier.
+
+use crate::runtime::native::exec::{global_tier, KernelTier};
 
 /// Append-only encoder; `frame()` prepends the u32 length.
 pub struct Encoder {
@@ -269,14 +281,46 @@ pub fn topk_k(len: usize) -> usize {
 /// values included, the comparison never consults platform float
 /// semantics — keep the first `topk_k(len)`, and emit them in strictly
 /// increasing index order. Pure function of the input bits.
+/// Owned-buffer wrapper over [`topk_encode_into`].
 pub fn topk_encode(x: &[f32]) -> (Vec<u32>, Vec<f32>) {
-    let k = topk_k(x.len());
-    let mut order: Vec<u32> = (0..x.len() as u32).collect();
-    order.sort_unstable_by_key(|&i| (std::cmp::Reverse(x[i as usize].abs().to_bits()), i));
-    let mut idx = order[..k].to_vec();
-    idx.sort_unstable();
-    let val = idx.iter().map(|&i| x[i as usize]).collect();
+    let (mut order, mut idx, mut val) = (Vec::new(), Vec::new(), Vec::new());
+    topk_encode_into(x, &mut order, &mut idx, &mut val);
     (idx, val)
+}
+
+/// Allocation-free top-k encode into caller buffers (`order` is index
+/// scratch whose capacity persists across hops). O(n + k log k): a
+/// quickselect partition on the (|v| bits desc, index asc) key replaces
+/// the historical full sort. The key is a duplicate-free total order —
+/// every index appears exactly once — so the k-element prefix after the
+/// partition is EXACTLY the set the full sort would keep, magnitude
+/// ties resolved by index and all; `tests/codec_parity.rs` pins
+/// bit-identity against the sort-based reference on adversarial ties.
+pub fn topk_encode_into(
+    x: &[f32],
+    order: &mut Vec<u32>,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    let k = topk_k(x.len());
+    idx.clear();
+    val.clear();
+    if k == 0 {
+        return;
+    }
+    order.clear();
+    order.extend(0..x.len() as u32);
+    if k < order.len() {
+        // PARITY: the partition key (|v| bits desc, idx asc) is duplicate-
+        // free, so the selected prefix is identical to the full-sort
+        // reference — ties never consult unstable comparison order.
+        order.select_nth_unstable_by_key(k - 1, |&i| {
+            (std::cmp::Reverse(x[i as usize].abs().to_bits()), i)
+        });
+    }
+    idx.extend_from_slice(&order[..k]);
+    idx.sort_unstable();
+    val.extend(idx.iter().map(|&i| x[i as usize]));
 }
 
 /// Rebuild the dense window: selected indices get their values, the
@@ -285,14 +329,29 @@ pub fn topk_encode(x: &[f32]) -> (Vec<u32>, Vec<f32>) {
 /// length prefix cannot reserve a huge buffer — plus index bounds,
 /// strict monotonicity, and the `topk_k` count contract. Both the v4
 /// frame decoder and the shard fold path call this, so loopback and TCP
-/// validate identically.
+/// validate identically. Owned-buffer wrapper over [`topk_decode_into`].
 pub fn topk_decode(len: usize, idx: &[u32], val: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::new();
+    topk_decode_into(len, idx, val, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free top-k decode: clears and fills `out` (capacity
+/// persists across hops — steady-state ring traffic allocates nothing).
+/// Same validation contract as [`topk_decode`].
+pub fn topk_decode_into(
+    len: usize,
+    idx: &[u32],
+    val: &[f32],
+    out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
     topk_validate(len, idx, val)?;
-    let mut out = vec![0.0f32; len];
+    out.clear();
+    out.resize(len, 0.0);
     for (&i, &v) in idx.iter().zip(val) {
         out[i as usize] = v;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// The top-k frame invariants, checkable without allocating: declared
@@ -336,30 +395,176 @@ pub fn topk_validate(len: usize, idx: &[u32], val: &[f32]) -> anyhow::Result<()>
 /// Windows whose max |value| is zero, subnormal-tiny (`e < -120`), or
 /// non-finite flush to the all-zero frame with scale 0 — deterministic
 /// in, deterministic out.
+/// Owned-buffer wrapper over [`q8_encode_into`].
 pub fn q8_encode(x: &[f32]) -> (f32, Vec<i8>) {
-    let max_bits = x.iter().map(|v| v.abs().to_bits()).max().unwrap_or(0);
+    let mut q = Vec::new();
+    let scale = q8_encode_into(x, &mut q);
+    (scale, q)
+}
+
+/// Allocation-free q8 encode into a caller buffer (capacity persists
+/// across hops): clears and fills `q`, returns the scale. Dispatches
+/// the abs-max scan and the quantize loop to AVX2 lanes on the `simd`
+/// tier — byte-identical to the scalar path (see [`q8_quantize`]).
+pub fn q8_encode_into(x: &[f32], q: &mut Vec<i8>) -> f32 {
+    q.clear();
+    q.resize(x.len(), 0);
+    let max_bits = q8_abs_max_bits(x);
     let e = ((max_bits >> 23) & 0xFF) as i32 - 127;
     if max_bits == 0 || !(-120..=127).contains(&e) {
-        return (0.0, vec![0; x.len()]);
+        return 0.0;
     }
     let scale = f32::from_bits(((e - 6 + 127) as u32) << 23);
-    let q = x
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    (scale, q)
+    q8_quantize(x, scale, q);
+    scale
+}
+
+/// Max over the windows' |value| BITS (u32 compare — monotone with
+/// magnitude, total on non-finite payloads, and order-free, so the SIMD
+/// lane's lane-wise fold is exact).
+fn q8_abs_max_bits(x: &[f32]) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    if global_tier() == KernelTier::Simd {
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        return unsafe { simd::abs_max_bits(x) };
+    }
+    x.iter().map(|v| v.abs().to_bits()).max().unwrap_or(0)
+}
+
+/// `q[i] = round(x[i]/scale)` clamped to ±127, rounding half away from
+/// zero (`f32::round`). The SIMD lane reproduces this byte-for-byte:
+/// the power-of-two divide is exact in every lane, and the half-to-even
+/// `roundps` result is corrected on exact-tie lanes (detectable exactly,
+/// since `t - round(t)` is computed without error) — so tier choice
+/// never changes wire bytes.
+fn q8_quantize(x: &[f32], scale: f32, q: &mut [i8]) {
+    #[cfg(target_arch = "x86_64")]
+    if global_tier() == KernelTier::Simd {
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        unsafe { simd::quantize(x, scale, q) };
+        return;
+    }
+    for (qi, &v) in q.iter_mut().zip(x) {
+        *qi = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
 }
 
 /// Exact dequantization: `q·scale` with a power-of-two scale is a bit-
 /// exact f32 product. `scale` must be finite and non-negative (hostile
 /// frames rejected); the element count needs no separate guard — it is
 /// bounded by the received frame itself at one byte per element.
+/// Owned-buffer wrapper over [`q8_decode_into`].
 pub fn q8_decode(scale: f32, q: &[i8]) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::new();
+    q8_decode_into(scale, q, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free q8 decode: clears and fills `out` (capacity persists
+/// across hops). The SIMD lane performs the identical single `q·scale`
+/// multiply per element, so bytes match the scalar path on any scale.
+pub fn q8_decode_into(scale: f32, q: &[i8], out: &mut Vec<f32>) -> anyhow::Result<()> {
     anyhow::ensure!(
         scale.is_finite() && scale >= 0.0,
         "q8 scale must be finite and non-negative"
     );
-    Ok(q.iter().map(|&qi| qi as f32 * scale).collect())
+    out.clear();
+    out.resize(q.len(), 0.0);
+    #[cfg(target_arch = "x86_64")]
+    if global_tier() == KernelTier::Simd {
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        unsafe { simd::dequantize(scale, q, out) };
+        return Ok(());
+    }
+    for (o, &qi) in out.iter_mut().zip(q) {
+        *o = qi as f32 * scale;
+    }
+    Ok(())
+}
+
+/// AVX2 lanes for the q8 codec. Byte-stability discipline: every
+/// operation is one correctly-rounded IEEE op (div/round/sub/add/
+/// min/max/convert — no FMA, no approximations), so each lane computes
+/// the exact scalar rounding sequence and the emitted bytes are
+/// identical to the scalar codec on every input. The round-half-to-even
+/// of `roundps` is corrected to `f32::round`'s half-away-from-zero on
+/// exact ties (see `quantize`).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use core::arch::x86_64::*;
+
+    /// SAFETY: unsafe solely because of `target_feature` — reached only
+    /// through the `global_tier()` dispatch above, which holds `Simd`
+    /// only when avx2+fma were detected at tier resolution.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn abs_max_bits(x: &[f32]) -> u32 {
+        let sign_clear = _mm256_set1_epi32(0x7FFF_FFFF);
+        let mut acc = _mm256_setzero_si256();
+        let mut chunks = x.chunks_exact(8);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            acc = _mm256_max_epu32(acc, _mm256_and_si256(v, sign_clear));
+        }
+        let mut lanes = [0u32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut m = lanes.into_iter().max().unwrap_or(0);
+        for &v in chunks.remainder() {
+            m = m.max(v.abs().to_bits());
+        }
+        m
+    }
+
+    /// SAFETY: same contract as `abs_max_bits` — tier-dispatch gated.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize(x: &[f32], scale: f32, q: &mut [i8]) {
+        debug_assert_eq!(x.len(), q.len());
+        let vscale = _mm256_set1_ps(scale);
+        let sign = _mm256_set1_ps(-0.0);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let lo = _mm256_set1_ps(-127.0);
+        let hi = _mm256_set1_ps(127.0);
+        let n8 = x.len() / 8 * 8;
+        for i in (0..n8).step_by(8) {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            // Exact: the power-of-two divisor only shifts the exponent.
+            let t = _mm256_div_ps(v, vscale);
+            // Half-to-even round, then push exact .5 ties away from zero
+            // to match scalar `f32::round`: `t - r` is exact (|t - r| <=
+            // 0.5, Sterbenz), so a tie is exactly `copysign(0.5, t)`.
+            let r = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(t);
+            let ts = _mm256_and_ps(t, sign);
+            let tie = _mm256_cmp_ps::<_CMP_EQ_OQ>(_mm256_sub_ps(t, r), _mm256_or_ps(half, ts));
+            let fix = _mm256_and_ps(tie, _mm256_or_ps(one, ts));
+            let r = _mm256_max_ps(lo, _mm256_min_ps(hi, _mm256_add_ps(r, fix)));
+            let qi = _mm256_cvtps_epi32(r);
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, qi);
+            for (j, &l) in lanes.iter().enumerate() {
+                q[i + j] = l as i8;
+            }
+        }
+        for i in n8..x.len() {
+            q[i] = (x[i] / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    /// SAFETY: same contract as `abs_max_bits` — tier-dispatch gated.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize(scale: f32, q: &[i8], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        let vscale = _mm256_set1_ps(scale);
+        let n8 = q.len() / 8 * 8;
+        for i in (0..n8).step_by(8) {
+            let b = _mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_cvtepi8_epi32(b);
+            let f = _mm256_cvtepi32_ps(w);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(f, vscale));
+        }
+        for i in n8..q.len() {
+            out[i] = q[i] as f32 * scale;
+        }
+    }
 }
 
 #[cfg(test)]

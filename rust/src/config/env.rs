@@ -108,6 +108,18 @@ pub fn ckpt_every() -> Option<usize> {
         .filter(|&n| n >= 1)
 }
 
+/// `DYNAMIX_CKPT_KEEP`: checkpoint retention — how many of the newest
+/// `ckpt-<step>.bin` / `leader-<cycle>.bin` images survive the post-save
+/// prune (>= 1; the just-written image always survives). Unset/invalid ->
+/// `None` (retention off, every image kept).
+pub fn ckpt_keep() -> Option<usize> {
+    raw("DYNAMIX_CKPT_KEEP")?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
 /// `DYNAMIX_RESUME`: resume from the latest checkpoint in
 /// `DYNAMIX_CKPT_DIR` instead of starting fresh. `on`/`1`/`true` ->
 /// resume; anything else (including unset) -> fresh start.

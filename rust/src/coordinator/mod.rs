@@ -83,9 +83,12 @@ pub struct Coordinator {
     eval_history: Vec<f64>,
     calibrated: bool,
     /// Durable-run policy (env-seeded: `DYNAMIX_CKPT_DIR` / `_EVERY` /
-    /// `_RESUME`; overridable via [`Coordinator::set_ckpt_policy`]).
+    /// `_KEEP` / `_RESUME`; overridable via [`Coordinator::set_ckpt_policy`]).
     ckpt_dir: Option<std::path::PathBuf>,
     ckpt_every: usize,
+    /// Retention: prune to the newest k images after each save (`None`
+    /// keeps everything).
+    ckpt_keep: Option<usize>,
     resume: bool,
 }
 
@@ -123,6 +126,7 @@ impl Coordinator {
             calibrated: false,
             ckpt_dir: env::ckpt_dir(),
             ckpt_every: env::ckpt_every().unwrap_or(1),
+            ckpt_keep: env::ckpt_keep(),
             resume: env::resume(),
         })
     }
@@ -134,6 +138,13 @@ impl Coordinator {
     pub fn set_ckpt_policy(&mut self, dir: Option<std::path::PathBuf>, every: usize) {
         self.ckpt_dir = dir;
         self.ckpt_every = every.max(1);
+    }
+
+    /// Retention policy: keep only the newest `keep` checkpoint images
+    /// after each save (`None` disables pruning). Overrides
+    /// `DYNAMIX_CKPT_KEEP`.
+    pub fn set_ckpt_keep(&mut self, keep: Option<usize>) {
+        self.ckpt_keep = keep.map(|k| k.max(1));
     }
 
     /// Request that the next [`Coordinator::run_inference`] resume from
@@ -415,6 +426,12 @@ impl Coordinator {
                 if step % self.ckpt_every == 0 {
                     let image = self.capture(step, &detector, record, &cycle);
                     ckpt::save_atomic(dir, &self.ckpt_header(), &image)?;
+                    // Retention GC strictly after the successful write:
+                    // the image just saved is the newest, so it always
+                    // survives; prune failures are warnings, never fatal.
+                    if let Some(keep) = self.ckpt_keep {
+                        ckpt::prune(dir, keep);
+                    }
                     if let Some(j) = &journal {
                         j.checkpoint(step, cycle.sim_clock)?;
                     }

@@ -101,6 +101,9 @@ GLOBAL FLAGS:
                   dedicate a directory per run)
   --ckpt-every N  decision cycles between checkpoints (DYNAMIX_CKPT_EVERY,
                   default 1 = every cycle)
+  --ckpt-keep K   retention: after each save, prune all but the newest K
+                  checkpoint images (DYNAMIX_CKPT_KEEP; default keeps
+                  everything; the journal is never pruned)
   --resume        resume from the latest checkpoint under --ckpt-dir
                   (DYNAMIX_RESUME; the deployment fingerprint —
                   plane/wire/seed/workers/model — must match, and the run
@@ -177,7 +180,8 @@ fn run() -> anyhow::Result<()> {
         dynamix::comm::wire::WireMode::parse(w)?; // validate loudly
         std::env::set_var("DYNAMIX_WIRE", w);
     }
-    // --ckpt-dir / --ckpt-every / --resume configure durable runs; the
+    // --ckpt-dir / --ckpt-every / --ckpt-keep / --resume configure durable
+    // runs; the
     // coordinator reads these at construction, so they must land in the
     // environment first like every other global flag.
     if let Some(d) = args.get("ckpt-dir") {
@@ -190,6 +194,13 @@ fn run() -> anyhow::Result<()> {
             .map_err(|_| anyhow::anyhow!("--ckpt-every expects a positive integer, got {n:?}"))?;
         anyhow::ensure!(every >= 1, "--ckpt-every must be >= 1");
         std::env::set_var("DYNAMIX_CKPT_EVERY", n);
+    }
+    if let Some(k) = args.get("ckpt-keep") {
+        let keep: usize = k
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--ckpt-keep expects a positive integer, got {k:?}"))?;
+        anyhow::ensure!(keep >= 1, "--ckpt-keep must be >= 1 (the newest image always survives)");
+        std::env::set_var("DYNAMIX_CKPT_KEEP", k);
     }
     if args.get("resume").is_some() {
         anyhow::ensure!(

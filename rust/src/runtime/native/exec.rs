@@ -319,6 +319,13 @@ fn global_cfg() -> &'static GlobalCfg {
     })
 }
 
+/// The process-wide resolved kernel tier (`DYNAMIX_KERNEL`, read once).
+/// Exposed for pool-less hot paths — the wire codecs in `comm::wire`
+/// dispatch their SIMD lanes on this without re-reading the environment.
+pub fn global_tier() -> KernelTier {
+    global_cfg().tier
+}
+
 fn threads_from_env() -> usize {
     std::env::var("DYNAMIX_THREADS")
         .ok()

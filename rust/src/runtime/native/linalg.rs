@@ -25,7 +25,17 @@
 //! * [`matmul_at`] — each `dw[kk,j]` accumulates rows `i = 0..m` in order,
 //!   one `mul`+`add` rounding pair per step; the simd tier deliberately
 //!   avoids FMA here so all three tiers produce **identical bits**.
-//! * [`col_sums`] — one shared implementation for every tier.
+//! * [`col_sums`] — parallelism partitions output *columns*; each
+//!   element's row fold stays sequential in every tier.
+//!
+//! The **elementwise layer** ([`relu`]/[`tanh`] + backwards, [`add_bias`],
+//! [`log_softmax`]) and the **pooled optimizer apply** ([`sgd_apply`],
+//! [`adam_apply`]) are order-free per element, so every tier, chunk plan
+//! and thread count is BITWISE identical to the scalar reference: the simd
+//! lanes use only correctly-rounded ops (no FMA contraction), libm-bound
+//! ops (`tanh`, `exp`, `ln`) stay scalar per element and parallelize at
+//! chunk/row granularity only, and per-row folds (`log_softmax`'s
+//! log-sum-exp) never split a row.
 //!
 //! This is what lets the sharded data plane chain shard backwards through
 //! a traveling accumulator and reproduce the fused gradient bit for bit
@@ -113,6 +123,143 @@ pub mod scalar {
                     dwrow[j] += a * dyrow[j];
                 }
             }
+        }
+    }
+
+    // --- elementwise / activation references -----------------------------
+    //
+    // Per-element ops with no cross-element data flow: any disjoint
+    // tiling, thread count, or vector width that reproduces the exact
+    // per-element rounding sequence below is BITWISE identical to these
+    // loops. They are the ground truth the tier dispatch and the simd
+    // lanes are pinned against (`tests/linalg_parity.rs`).
+
+    /// `out[i*n..][j] += b[j]` — broadcast-add a bias row.
+    pub fn add_bias(out: &mut [f32], b: &[f32], m: usize, n: usize) {
+        for i in 0..m {
+            let row = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                row[j] += b[j];
+            }
+        }
+    }
+
+    /// `db[j] += sum_i dy[i, j0 + j]` over the column window owned by
+    /// `db`. The row fold per output element is sequential (`i = 0..m`,
+    /// one add per step), so column-partitioned runs and shard-chained
+    /// folds replay it exactly.
+    pub fn col_sums_cols(dy: &[f32], m: usize, n: usize, j0: usize, db: &mut [f32]) {
+        let w = db.len();
+        for i in 0..m {
+            let row = &dy[i * n + j0..i * n + j0 + w];
+            for j in 0..w {
+                db[j] += row[j];
+            }
+        }
+    }
+
+    /// In-place ReLU. Deliberately `if v < 0 { 0 }` rather than
+    /// `max(0, v)`: NaN and `-0.0` pass through unchanged, and the simd
+    /// lane mirrors that with a compare+blend.
+    pub fn relu(x: &mut [f32]) {
+        for v in x.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// In-place tanh. libm-bound: there is no simd lane for this (a
+    /// polynomial approximation would break bitwise parity with the
+    /// scalar tier), only chunk-level pool parallelism.
+    pub fn tanh(x: &mut [f32]) {
+        for v in x.iter_mut() {
+            *v = v.tanh();
+        }
+    }
+
+    /// Zero `grad` wherever the post-activation `act` is <= 0 (ReLU
+    /// derivative, using the identity `relu(z) > 0 <=> z > 0`).
+    pub fn relu_backward(grad: &mut [f32], act: &[f32]) {
+        for (g, &a) in grad.iter_mut().zip(act) {
+            if a <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// Scale `grad` by `1 - act^2` (tanh derivative from the
+    /// post-activation). Rounding sequence per element: `a*a`, `1 - _`,
+    /// `g * _` — three roundings the simd lane reproduces with
+    /// `mul`/`sub`/`mul` (no FMA contraction).
+    pub fn tanh_backward(grad: &mut [f32], act: &[f32]) {
+        for (g, &a) in grad.iter_mut().zip(act) {
+            *g *= 1.0 - a * a;
+        }
+    }
+
+    /// Row-wise log-softmax of `logits[M,N]` into `logp` (may alias
+    /// shapes, not storage). Numerically stable (max-subtracted).
+    pub fn log_softmax(logits: &[f32], m: usize, n: usize, logp: &mut [f32]) {
+        for i in 0..m {
+            let row = &logits[i * n..(i + 1) * n];
+            let out = &mut logp[i * n..(i + 1) * n];
+            let mut mx = f32::NEG_INFINITY;
+            for &v in row {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            // PARITY: the log-sum-exp fold is sequential left-to-right
+            // within each row in every tier and chunk plan — rows are the
+            // parallel unit, never the elements of one row.
+            let mut lse = 0.0f32;
+            for &v in row {
+                lse += (v - mx).exp();
+            }
+            let lse = lse.ln() + mx;
+            for j in 0..n {
+                out[j] = row[j] - lse;
+            }
+        }
+    }
+
+    // --- optimizer references --------------------------------------------
+
+    /// One SGD-with-momentum step over a parameter window:
+    /// `mom = momentum*mom + g; p -= lr*mom`. Elementwise — any disjoint
+    /// tiling of (params, mom, g) applies bit-identically.
+    pub fn sgd_apply(params: &mut [f32], mom: &mut [f32], g: &[f32], lr: f32, momentum: f32) {
+        for i in 0..g.len() {
+            mom[i] = momentum * mom[i] + g[i];
+            params[i] -= lr * mom[i];
+        }
+    }
+
+    /// One Adam step over a parameter window. `c1`/`c2` are the caller's
+    /// bias corrections (computed once per step from the step count — NOT
+    /// per window, so tiled applies match the fused loop bitwise). Every
+    /// operation (`mul`/`add`/`sub`/`div`/`sqrt`) is correctly rounded,
+    /// which is what lets the simd lane reproduce this sequence exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adam_apply(
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        c1: f32,
+        c2: f32,
+    ) {
+        for i in 0..g.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let m_hat = m[i] / c1;
+            let v_hat = v[i] / c2;
+            params[i] -= lr * m_hat / (v_hat.sqrt() + eps);
         }
     }
 }
@@ -383,10 +530,10 @@ mod simd {
                         let mut j = 0;
                         while j + LANE <= n {
                             let mut o = _mm256_loadu_ps(orow.as_ptr().add(j));
-                            o = _mm256_fmadd_ps(va0, _mm256_loadu_ps(w0.as_ptr().add(j)), o);
-                            o = _mm256_fmadd_ps(va1, _mm256_loadu_ps(w1.as_ptr().add(j)), o);
-                            o = _mm256_fmadd_ps(va2, _mm256_loadu_ps(w2.as_ptr().add(j)), o);
-                            o = _mm256_fmadd_ps(va3, _mm256_loadu_ps(w3.as_ptr().add(j)), o);
+                            o = _mm256_fmadd_ps(va0, _mm256_loadu_ps(w0.as_ptr().add(j)), o); // PARITY: fma — forward path, 1e-5 tier contract
+                            o = _mm256_fmadd_ps(va1, _mm256_loadu_ps(w1.as_ptr().add(j)), o); // PARITY: fma — forward path, 1e-5 tier contract
+                            o = _mm256_fmadd_ps(va2, _mm256_loadu_ps(w2.as_ptr().add(j)), o); // PARITY: fma — forward path, 1e-5 tier contract
+                            o = _mm256_fmadd_ps(va3, _mm256_loadu_ps(w3.as_ptr().add(j)), o); // PARITY: fma — forward path, 1e-5 tier contract
                             _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
                             j += LANE;
                         }
@@ -403,7 +550,7 @@ mod simd {
                         let mut j = 0;
                         while j + LANE <= n {
                             let mut o = _mm256_loadu_ps(orow.as_ptr().add(j));
-                            o = _mm256_fmadd_ps(va, _mm256_loadu_ps(wrow.as_ptr().add(j)), o);
+                            o = _mm256_fmadd_ps(va, _mm256_loadu_ps(wrow.as_ptr().add(j)), o); // PARITY: fma — forward path, 1e-5 tier contract
                             _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
                             j += LANE;
                         }
@@ -444,7 +591,7 @@ mod simd {
                 let mut acc = _mm256_setzero_ps();
                 let mut j = 0;
                 while j + LANE <= n {
-                    acc = _mm256_fmadd_ps(
+                    acc = _mm256_fmadd_ps( // PARITY: fma — input-grad path, 1e-5 tier contract
                         _mm256_loadu_ps(dyrow.as_ptr().add(j)),
                         _mm256_loadu_ps(wrow.as_ptr().add(j)),
                         acc,
@@ -487,7 +634,7 @@ mod simd {
                 let mut kk = 0;
                 while kk + LANE <= k {
                     let mut o = _mm256_loadu_ps(dxrow.as_ptr().add(kk));
-                    o = _mm256_fmadd_ps(vd, _mm256_loadu_ps(wtrow.as_ptr().add(kk)), o);
+                    o = _mm256_fmadd_ps(vd, _mm256_loadu_ps(wtrow.as_ptr().add(kk)), o); // PARITY: fma — input-grad path, 1e-5 tier contract
                     _mm256_storeu_ps(dxrow.as_mut_ptr().add(kk), o);
                     kk += LANE;
                 }
@@ -539,6 +686,240 @@ mod simd {
                     j += 1;
                 }
             }
+        }
+    }
+
+    // --- elementwise / optimizer lanes ------------------------------------
+    //
+    // Bitwise-parity-critical, like `matmul_at_block`: NO fmadd anywhere
+    // in this section (an fma would contract the scalar reference's two
+    // roundings into one). Only `mul`/`add`/`sub`/`div`/`sqrt`/compare/
+    // blend — each correctly rounded, reproducing `scalar`'s per-element
+    // sequence bit for bit. The lanes are `avx2`-only; dispatch still
+    // requires AVX2+FMA (one tier, one gate).
+
+    // SAFETY: unsafe solely because of `target_feature` — reached only
+    // through the tier dispatch below, which holds `KernelTier::Simd`
+    // only after runtime AVX2+FMA detection. Unaligned `loadu`/`storeu`
+    // through slice-derived pointers, every vector access guarded by
+    // `j + LANE <= n` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_bias_block(out: &mut [f32], b: &[f32], rows: usize, n: usize) {
+        for i in 0..rows {
+            let row = &mut out[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + LANE <= n {
+                let o = _mm256_add_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                    _mm256_loadu_ps(b.as_ptr().add(j)),
+                );
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), o);
+                j += LANE;
+            }
+            while j < n {
+                row[j] += b[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// Column-window bias gradient: per output element the row fold is
+    /// sequential (`i = 0..m`, one add per step) — vectorizing across
+    /// columns `j` never reorders any element's fold.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= w` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn col_sums_block(dy: &[f32], m: usize, n: usize, j0: usize, db: &mut [f32]) {
+        let w = db.len();
+        for i in 0..m {
+            let row = &dy[i * n + j0..i * n + j0 + w];
+            let mut j = 0;
+            while j + LANE <= w {
+                let o = _mm256_add_ps(
+                    _mm256_loadu_ps(db.as_ptr().add(j)),
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                );
+                _mm256_storeu_ps(db.as_mut_ptr().add(j), o);
+                j += LANE;
+            }
+            while j < w {
+                db[j] += row[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// `if v < 0 { 0 }` as compare+blend: `-0.0` and NaN lanes pass
+    /// through untouched, exactly like the scalar branch.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= n` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn relu_block(x: &mut [f32]) {
+        let zero = _mm256_setzero_ps();
+        let n = x.len();
+        let mut j = 0;
+        while j + LANE <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(j));
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+            _mm256_storeu_ps(x.as_mut_ptr().add(j), _mm256_blendv_ps(v, zero, lt));
+            j += LANE;
+        }
+        while j < n {
+            if x[j] < 0.0 {
+                x[j] = 0.0;
+            }
+            j += 1;
+        }
+    }
+
+    /// `if a <= 0 { g = 0 }` as compare+andnot (the mask is all-ones or
+    /// all-zeros per lane, so the bit-select is exact); NaN activations
+    /// compare false and leave the gradient lane untouched, like scalar.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= n` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn relu_backward_block(grad: &mut [f32], act: &[f32]) {
+        let zero = _mm256_setzero_ps();
+        let n = grad.len();
+        let mut j = 0;
+        while j + LANE <= n {
+            let a = _mm256_loadu_ps(act.as_ptr().add(j));
+            let g = _mm256_loadu_ps(grad.as_ptr().add(j));
+            let le = _mm256_cmp_ps::<_CMP_LE_OQ>(a, zero);
+            _mm256_storeu_ps(grad.as_mut_ptr().add(j), _mm256_andnot_ps(le, g));
+            j += LANE;
+        }
+        while j < n {
+            if act[j] <= 0.0 {
+                grad[j] = 0.0;
+            }
+            j += 1;
+        }
+    }
+
+    /// `g *= 1 - a*a` with the scalar's three roundings: `mul`, `sub`,
+    /// `mul` — no fma contraction.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= n` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tanh_backward_block(grad: &mut [f32], act: &[f32]) {
+        let one = _mm256_set1_ps(1.0);
+        let n = grad.len();
+        let mut j = 0;
+        while j + LANE <= n {
+            let a = _mm256_loadu_ps(act.as_ptr().add(j));
+            let g = _mm256_loadu_ps(grad.as_ptr().add(j));
+            let d = _mm256_sub_ps(one, _mm256_mul_ps(a, a));
+            _mm256_storeu_ps(grad.as_mut_ptr().add(j), _mm256_mul_ps(g, d));
+            j += LANE;
+        }
+        while j < n {
+            grad[j] *= 1.0 - act[j] * act[j];
+            j += 1;
+        }
+    }
+
+    /// SGD window step: `mom = momentum*mom + g` (mul, add), then
+    /// `p -= lr*mom` (mul, sub) — four roundings, same as scalar.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= n` with scalar tails.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sgd_apply_block(
+        params: &mut [f32],
+        mom: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) {
+        let vmu = _mm256_set1_ps(momentum);
+        let vlr = _mm256_set1_ps(lr);
+        let n = g.len();
+        let mut j = 0;
+        while j + LANE <= n {
+            let mj = _mm256_add_ps(
+                _mm256_mul_ps(vmu, _mm256_loadu_ps(mom.as_ptr().add(j))),
+                _mm256_loadu_ps(g.as_ptr().add(j)),
+            );
+            _mm256_storeu_ps(mom.as_mut_ptr().add(j), mj);
+            let p = _mm256_sub_ps(
+                _mm256_loadu_ps(params.as_ptr().add(j)),
+                _mm256_mul_ps(vlr, mj),
+            );
+            _mm256_storeu_ps(params.as_mut_ptr().add(j), p);
+            j += LANE;
+        }
+        while j < n {
+            mom[j] = momentum * mom[j] + g[j];
+            params[j] -= lr * mom[j];
+            j += 1;
+        }
+    }
+
+    /// Adam window step, mirroring `scalar::adam_apply` operation for
+    /// operation: `b1*m + (1-b1)*g` is add(mul, mul); the second-moment
+    /// term keeps the scalar's left association `((1-b2)*g)*g`; `div` and
+    /// `sqrt` are IEEE correctly rounded, so the whole update is bitwise.
+    // SAFETY: same contract as `add_bias_block` — unsafe only for
+    // `target_feature`, dispatch-gated on detected AVX2+FMA, unaligned
+    // slice-derived accesses bounded by `j + LANE <= n` with scalar tails.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn adam_apply_block(
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        c1: f32,
+        c2: f32,
+    ) {
+        let vb1 = _mm256_set1_ps(b1);
+        let vb1c = _mm256_set1_ps(1.0 - b1);
+        let vb2 = _mm256_set1_ps(b2);
+        let vb2c = _mm256_set1_ps(1.0 - b2);
+        let vlr = _mm256_set1_ps(lr);
+        let veps = _mm256_set1_ps(eps);
+        let vc1 = _mm256_set1_ps(c1);
+        let vc2 = _mm256_set1_ps(c2);
+        let n = g.len();
+        let mut j = 0;
+        while j + LANE <= n {
+            let gj = _mm256_loadu_ps(g.as_ptr().add(j));
+            let mj = _mm256_add_ps(
+                _mm256_mul_ps(vb1, _mm256_loadu_ps(m.as_ptr().add(j))),
+                _mm256_mul_ps(vb1c, gj),
+            );
+            _mm256_storeu_ps(m.as_mut_ptr().add(j), mj);
+            let vj = _mm256_add_ps(
+                _mm256_mul_ps(vb2, _mm256_loadu_ps(v.as_ptr().add(j))),
+                _mm256_mul_ps(_mm256_mul_ps(vb2c, gj), gj),
+            );
+            _mm256_storeu_ps(v.as_mut_ptr().add(j), vj);
+            let m_hat = _mm256_div_ps(mj, vc1);
+            let v_hat = _mm256_div_ps(vj, vc2);
+            let den = _mm256_add_ps(_mm256_sqrt_ps(v_hat), veps);
+            let p = _mm256_sub_ps(
+                _mm256_loadu_ps(params.as_ptr().add(j)),
+                _mm256_div_ps(_mm256_mul_ps(vlr, m_hat), den),
+            );
+            _mm256_storeu_ps(params.as_mut_ptr().add(j), p);
+            j += LANE;
+        }
+        while j < n {
+            m[j] = b1 * m[j] + (1.0 - b1) * g[j];
+            v[j] = b2 * v[j] + (1.0 - b2) * g[j] * g[j];
+            let m_hat = m[j] / c1;
+            let v_hat = v[j] / c2;
+            params[j] -= lr * m_hat / (v_hat.sqrt() + eps);
+            j += 1;
         }
     }
 }
@@ -735,91 +1116,329 @@ pub fn matmul_at(pool: &Pool, x: &[f32], dy: &[f32], m: usize, k: usize, n: usiz
     );
 }
 
-/// `out[i*n..][j] += b[j]` — broadcast-add a bias row.
-pub fn add_bias(out: &mut [f32], b: &[f32], m: usize, n: usize) {
+// --- elementwise / activation layer (pooled + tier-dispatched) -----------
+//
+// Every op below is BITWISE identical across {scalar,blocked,simd} × any
+// thread count: per-element rounding sequences are fixed (see the
+// `scalar` references), chunks are disjoint, and the simd lanes use no
+// FMA and no libm approximations. The `blocked` tier shares the scalar
+// bodies (there is nothing to cache-block in a streaming elementwise op)
+// but still fans out across the pool.
+
+/// Approximate per-element flop weight of one libm call (`tanh`, `exp`);
+/// feeds [`Pool::rows_per_chunk`] so libm-bound ops fan out much earlier
+/// than single-flop stream ops.
+const LIBM_FLOPS: usize = 32;
+
+fn elem_block(tier: KernelTier, x: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::relu_block(x) },
+        _ => scalar::relu(x),
+    }
+}
+
+fn relu_bwd_block(tier: KernelTier, grad: &mut [f32], act: &[f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::relu_backward_block(grad, act) },
+        _ => scalar::relu_backward(grad, act),
+    }
+}
+
+fn tanh_bwd_block(tier: KernelTier, grad: &mut [f32], act: &[f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::tanh_backward_block(grad, act) },
+        _ => scalar::tanh_backward(grad, act),
+    }
+}
+
+fn bias_block(tier: KernelTier, out: &mut [f32], b: &[f32], rows: usize, n: usize) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::add_bias_block(out, b, rows, n) },
+        _ => scalar::add_bias(out, b, rows, n),
+    }
+}
+
+fn cs_block(tier: KernelTier, dy: &[f32], m: usize, n: usize, j0: usize, db: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::col_sums_block(dy, m, n, j0, db) },
+        _ => scalar::col_sums_cols(dy, m, n, j0, db),
+    }
+}
+
+fn sgd_block(tier: KernelTier, params: &mut [f32], mom: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe { simd::sgd_apply_block(params, mom, g, lr, mu) },
+        _ => scalar::sgd_apply(params, mom, g, lr, mu),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_block(
+    tier: KernelTier,
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    c1: f32,
+    c2: f32,
+) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolved tiers hold Simd only when avx2+fma are present.
+        KernelTier::Simd => unsafe {
+            simd::adam_apply_block(params, m, v, g, lr, b1, b2, eps, c1, c2)
+        },
+        _ => scalar::adam_apply(params, m, v, g, lr, b1, b2, eps, c1, c2),
+    }
+}
+
+/// `out[i*n..][j] += b[j]` — broadcast-add a bias row. Row-partitioned;
+/// BITWISE across tiers and thread counts.
+pub fn add_bias(pool: &Pool, out: &mut [f32], b: &[f32], m: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
     debug_assert_eq!(b.len(), n);
-    for i in 0..m {
-        let row = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            row[j] += b[j];
-        }
+    if m == 0 || n == 0 {
+        return;
     }
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::add_bias(out, b, m, n);
+        return;
+    }
+    let per = pool.rows_per_chunk(m, n);
+    if per >= m {
+        bias_block(tier, out, b, m, n);
+        return;
+    }
+    pool.run(
+        out.chunks_mut(per * n)
+            .map(|oc| move || bias_block(tier, oc, b, oc.len() / n, n))
+            .collect(),
+    );
 }
 
 /// `db[j] += sum_i dy[i,j]` — bias gradient (column sums; accumulates).
-/// One shared implementation for every kernel tier: the row fold per
-/// output element is sequential, so shard-chained folds replay it exactly
-/// and cross-tier results are identical by construction.
-pub fn col_sums(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
+/// Parallelism partitions the N output *columns*: each chunk owns a
+/// disjoint `db` window and folds rows `i = 0..m` sequentially per
+/// element, so shard-chained folds replay exactly and every tier/thread
+/// combination is identical by construction (BITWISE).
+pub fn col_sums(pool: &Pool, dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(db.len(), n);
-    for i in 0..m {
-        let row = &dy[i * n..(i + 1) * n];
-        for j in 0..n {
-            db[j] += row[j];
-        }
+    if m == 0 || n == 0 {
+        return;
     }
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::col_sums_cols(dy, m, n, 0, db);
+        return;
+    }
+    let per = pool.rows_per_chunk(n, 2 * m);
+    if per >= n {
+        cs_block(tier, dy, m, n, 0, db);
+        return;
+    }
+    pool.run(
+        db.chunks_mut(per)
+            .enumerate()
+            .map(|(ci, dbc)| move || cs_block(tier, dy, m, n, ci * per, dbc))
+            .collect(),
+    );
 }
 
-/// In-place ReLU.
-pub fn relu(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
+/// In-place ReLU (`if v < 0 { 0 }`; NaN/`-0.0` untouched). Chunk-
+/// partitioned; BITWISE across tiers and thread counts.
+pub fn relu(pool: &Pool, x: &mut [f32]) {
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::relu(x);
+        return;
     }
+    let per = pool.rows_per_chunk(x.len(), 1);
+    if per >= x.len() {
+        elem_block(tier, x);
+        return;
+    }
+    pool.run(x.chunks_mut(per).map(|c| move || elem_block(tier, c)).collect());
 }
 
-/// In-place tanh.
-pub fn tanh(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v = v.tanh();
+/// In-place tanh. libm-bound: every tier runs the same scalar `tanh` per
+/// element (a vector approximation would break bitwise parity), so the
+/// only speedup is chunk-level pool fan-out — still BITWISE everywhere.
+pub fn tanh(pool: &Pool, x: &mut [f32]) {
+    if pool.tier() == KernelTier::Scalar {
+        scalar::tanh(x);
+        return;
     }
+    let per = pool.rows_per_chunk(x.len(), LIBM_FLOPS);
+    if per >= x.len() {
+        scalar::tanh(x);
+        return;
+    }
+    pool.run(x.chunks_mut(per).map(|c| move || scalar::tanh(c)).collect());
 }
 
 /// Zero `grad` wherever the post-activation `act` is <= 0 (ReLU derivative,
-/// using the identity `relu(z) > 0 <=> z > 0`).
-pub fn relu_backward(grad: &mut [f32], act: &[f32]) {
+/// using the identity `relu(z) > 0 <=> z > 0`). BITWISE across tiers and
+/// thread counts.
+pub fn relu_backward(pool: &Pool, grad: &mut [f32], act: &[f32]) {
     debug_assert_eq!(grad.len(), act.len());
-    for (g, &a) in grad.iter_mut().zip(act) {
-        if a <= 0.0 {
-            *g = 0.0;
-        }
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::relu_backward(grad, act);
+        return;
     }
+    let per = pool.rows_per_chunk(grad.len(), 1);
+    if per >= grad.len() {
+        relu_bwd_block(tier, grad, act);
+        return;
+    }
+    pool.run(
+        grad.chunks_mut(per)
+            .zip(act.chunks(per))
+            .map(|(gc, ac)| move || relu_bwd_block(tier, gc, ac))
+            .collect(),
+    );
 }
 
 /// Scale `grad` by `1 - act^2` (tanh derivative from the post-activation).
-pub fn tanh_backward(grad: &mut [f32], act: &[f32]) {
+/// BITWISE across tiers and thread counts (mul/sub/mul, no fma).
+pub fn tanh_backward(pool: &Pool, grad: &mut [f32], act: &[f32]) {
     debug_assert_eq!(grad.len(), act.len());
-    for (g, &a) in grad.iter_mut().zip(act) {
-        *g *= 1.0 - a * a;
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::tanh_backward(grad, act);
+        return;
     }
+    let per = pool.rows_per_chunk(grad.len(), 3);
+    if per >= grad.len() {
+        tanh_bwd_block(tier, grad, act);
+        return;
+    }
+    pool.run(
+        grad.chunks_mut(per)
+            .zip(act.chunks(per))
+            .map(|(gc, ac)| move || tanh_bwd_block(tier, gc, ac))
+            .collect(),
+    );
 }
 
 /// Row-wise log-softmax of `logits[M,N]` into `logp` (may alias shapes, not
-/// storage). Numerically stable (max-subtracted).
-pub fn log_softmax(logits: &[f32], m: usize, n: usize, logp: &mut [f32]) {
+/// storage). Numerically stable (max-subtracted). Rows are the parallel
+/// unit; within a row the log-sum-exp fold is sequential in every tier
+/// (see `scalar::log_softmax`'s PARITY note), so all tier/thread
+/// combinations agree BITWISE.
+pub fn log_softmax(pool: &Pool, logits: &[f32], m: usize, n: usize, logp: &mut [f32]) {
     debug_assert_eq!(logits.len(), m * n);
     debug_assert_eq!(logp.len(), m * n);
-    for i in 0..m {
-        let row = &logits[i * n..(i + 1) * n];
-        let out = &mut logp[i * n..(i + 1) * n];
-        let mut mx = f32::NEG_INFINITY;
-        for &v in row {
-            if v > mx {
-                mx = v;
-            }
-        }
-        let mut lse = 0.0f32;
-        for &v in row {
-            lse += (v - mx).exp();
-        }
-        let lse = lse.ln() + mx;
-        for j in 0..n {
-            out[j] = row[j] - lse;
-        }
+    if m == 0 || n == 0 {
+        return;
     }
+    if pool.tier() == KernelTier::Scalar {
+        scalar::log_softmax(logits, m, n, logp);
+        return;
+    }
+    let per = pool.rows_per_chunk(m, LIBM_FLOPS * n);
+    if per >= m {
+        scalar::log_softmax(logits, m, n, logp);
+        return;
+    }
+    pool.run(
+        logits
+            .chunks(per * n)
+            .zip(logp.chunks_mut(per * n))
+            .map(|(lc, oc)| move || scalar::log_softmax(lc, oc.len() / n, n, oc))
+            .collect(),
+    );
+}
+
+// --- pooled optimizer apply ----------------------------------------------
+
+/// Tiled SGD-with-momentum over a parameter window. The update is
+/// elementwise, so any disjoint chunk partition applies bit-identically
+/// to the fused loop — callers on the replica and zero planes share this
+/// entry point. BITWISE across tiers and thread counts.
+pub fn sgd_apply(pool: &Pool, params: &mut [f32], mom: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(params.len(), g.len());
+    debug_assert_eq!(mom.len(), g.len());
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::sgd_apply(params, mom, g, lr, mu);
+        return;
+    }
+    let per = pool.rows_per_chunk(g.len(), 4);
+    if per >= g.len() {
+        sgd_block(tier, params, mom, g, lr, mu);
+        return;
+    }
+    pool.run(
+        params
+            .chunks_mut(per)
+            .zip(mom.chunks_mut(per))
+            .zip(g.chunks(per))
+            .map(|((pc, mc), gc)| move || sgd_block(tier, pc, mc, gc, lr, mu))
+            .collect(),
+    );
+}
+
+/// Tiled Adam over a parameter window. `c1`/`c2` are the bias corrections
+/// computed ONCE per optimizer step by the caller (from the step count),
+/// never per tile — that is what keeps sliced/tiled application bitwise
+/// identical to the fused loop. BITWISE across tiers and thread counts.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_apply(
+    pool: &Pool,
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    c1: f32,
+    c2: f32,
+) {
+    debug_assert_eq!(params.len(), g.len());
+    debug_assert_eq!(m.len(), g.len());
+    debug_assert_eq!(v.len(), g.len());
+    let tier = pool.tier();
+    if tier == KernelTier::Scalar {
+        scalar::adam_apply(params, m, v, g, lr, b1, b2, eps, c1, c2);
+        return;
+    }
+    let per = pool.rows_per_chunk(g.len(), 16);
+    if per >= g.len() {
+        adam_block(tier, params, m, v, g, lr, b1, b2, eps, c1, c2);
+        return;
+    }
+    pool.run(
+        params
+            .chunks_mut(per)
+            .zip(m.chunks_mut(per))
+            .zip(v.chunks_mut(per))
+            .zip(g.chunks(per))
+            .map(|(((pc, mc), vc), gc)| {
+                move || adam_block(tier, pc, mc, vc, gc, lr, b1, b2, eps, c1, c2)
+            })
+            .collect(),
+    );
 }
 
 #[cfg(test)]
@@ -991,7 +1610,7 @@ mod tests {
     fn log_softmax_rows_normalize() {
         let logits = [1.0f32, 2.0, 3.0, -5.0, 0.0, 5.0];
         let mut lp = [0.0f32; 6];
-        log_softmax(&logits, 2, 3, &mut lp);
+        log_softmax(&seq(), &logits, 2, 3, &mut lp);
         for i in 0..2 {
             let total: f32 = lp[i * 3..(i + 1) * 3].iter().map(|l| l.exp()).sum();
             assert!((total - 1.0).abs() < 1e-5, "row {i}: {total}");
@@ -1003,10 +1622,10 @@ mod tests {
     #[test]
     fn activation_derivative_masks() {
         let mut g = [1.0f32, 1.0, 1.0];
-        relu_backward(&mut g, &[0.5, 0.0, 2.0]);
+        relu_backward(&seq(), &mut g, &[0.5, 0.0, 2.0]);
         assert_eq!(g, [1.0, 0.0, 1.0]);
         let mut g = [1.0f32, 1.0];
-        tanh_backward(&mut g, &[0.0, 0.5]);
+        tanh_backward(&seq(), &mut g, &[0.0, 0.5]);
         assert!((g[0] - 1.0).abs() < 1e-6 && (g[1] - 0.75).abs() < 1e-6);
     }
 }

@@ -131,6 +131,12 @@ impl NativeBackend {
         self.ws.stats()
     }
 
+    /// The backend's worker pool — shared with the sharded/zero planes so
+    /// their sliced optimizer applies fan out over the same threads.
+    pub(crate) fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
     fn def(&self, model: &str) -> anyhow::Result<&ModelDef> {
         self.defs
             .get(model)
@@ -202,6 +208,7 @@ impl NativeBackend {
         def.forward_ws(&self.pool, params, &x, m, &mut ws);
         let mut out = ShardFwdOut { loss_terms: Vec::new(), correct: Vec::new() };
         masked_ce_rows(
+            &self.pool,
             &ws.logits,
             y,
             mask,
@@ -469,6 +476,7 @@ impl ComputeBackend for NativeBackend {
         ws.begin_step();
         def.forward_ws(&self.pool, &state.params, x, bucket, &mut ws);
         let (loss, acc) = masked_ce_loss_ws(
+            &self.pool,
             &ws.logits,
             y,
             mask,
@@ -482,8 +490,8 @@ impl ComputeBackend for NativeBackend {
         def.backward_ws(&self.pool, &state.params, x, bucket, &mut ws);
         let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&ws.grad);
         match optimizer {
-            Optimizer::Sgd => apply_sgd(state, &ws.grad, lr),
-            Optimizer::Adam => apply_adam(state, &ws.grad, lr),
+            Optimizer::Sgd => apply_sgd(&self.pool, state, &ws.grad, lr),
+            Optimizer::Adam => apply_adam(&self.pool, state, &ws.grad, lr),
         }
         out.loss = loss;
         out.acc = acc;
@@ -513,6 +521,7 @@ impl ComputeBackend for NativeBackend {
         ws.begin_step();
         def.forward_ws(&self.pool, params, x, m, &mut ws);
         let (loss, acc) = masked_ce_loss_ws(
+            &self.pool,
             &ws.logits,
             y,
             mask,

@@ -8,7 +8,7 @@
 //! keys sorted lexicographically, `b` before `w`, weights `[fan_in,
 //! fan_out]` row-major) so snapshots interchange with the XLA backend.
 
-use super::exec::Pool;
+use super::exec::{KernelTier, Pool};
 use super::linalg::*;
 use super::workspace::{PanelCache, Workspace};
 use crate::runtime::backend::OptState;
@@ -50,7 +50,7 @@ impl DenseRef {
         y.clear();
         y.resize(m * self.n, 0.0);
         matmul_acc(pool, x, self.weight(p), m, self.k, self.n, y);
-        add_bias(y, self.bias(p), m, self.n);
+        add_bias(pool, y, self.bias(p), m, self.n);
     }
 
     /// Input gradient only: dx = dy @ w^T, streamed through a
@@ -80,7 +80,7 @@ impl DenseRef {
     /// element INTO the existing values of `g` — the traveling-accumulator
     /// contract every bucket fold in the sharded ring relies on.
     fn backward_params(&self, pool: &Pool, x: &[f32], dy: &[f32], m: usize, g: &mut [f32]) {
-        col_sums(dy, m, self.n, &mut g[self.b..self.b + self.n]);
+        col_sums(pool, dy, m, self.n, &mut g[self.b..self.b + self.n]);
         matmul_at(pool, x, dy, m, self.k, self.n, &mut g[self.w..self.w + self.k * self.n]);
     }
 
@@ -264,28 +264,28 @@ impl ModelDef {
             Family::Vgg => {
                 let (layers, head) = self.vgg_refs();
                 layers[0].forward_into(pool, p, x, m, &mut ws.hs[0]);
-                relu(&mut ws.hs[0]);
+                relu(pool, &mut ws.hs[0]);
                 for li in 1..self.depth {
                     let (prev, rest) = ws.hs.split_at_mut(li);
                     layers[li].forward_into(pool, p, &prev[li - 1], m, &mut rest[0]);
-                    relu(&mut rest[0]);
+                    relu(pool, &mut rest[0]);
                 }
                 head.forward_into(pool, p, &ws.hs[self.depth - 1], m, &mut ws.logits);
             }
             Family::Resnet => {
                 let (stem, blocks, head) = self.resnet_refs();
                 stem.forward_into(pool, p, x, m, &mut ws.hs[0]);
-                relu(&mut ws.hs[0]);
+                relu(pool, &mut ws.hs[0]);
                 for (i, (fc1, fc2)) in blocks.iter().enumerate() {
                     fc1.forward_into(pool, p, &ws.hs[i], m, &mut ws.us[i]);
-                    relu(&mut ws.us[i]);
+                    relu(pool, &mut ws.us[i]);
                     let (prev, rest) = ws.hs.split_at_mut(i + 1);
                     let z = &mut rest[0];
                     fc2.forward_into(pool, p, &ws.us[i], m, z);
                     for (zi, hi) in z.iter_mut().zip(&prev[i]) {
                         *zi += *hi; // skip connection
                     }
-                    relu(z);
+                    relu(pool, z);
                 }
                 head.forward_into(pool, p, &ws.hs[self.depth], m, &mut ws.logits);
             }
@@ -496,7 +496,7 @@ impl ModelDef {
                     0 => {}
                     1 => {
                         head.backward_dx(pool, p, &ws.dlogits, m, &mut ws.dh, &mut ws.panels, gen);
-                        relu_backward(&mut ws.dh, &ws.hs[self.depth - 1]);
+                        relu_backward(pool, &mut ws.dh, &ws.hs[self.depth - 1]);
                     }
                     _ => {
                         let i = self.depth - k; // layer this stage folds
@@ -504,7 +504,7 @@ impl ModelDef {
                             pool, p, &ws.dh, m, &mut ws.dtmp, &mut ws.panels, gen,
                         );
                         std::mem::swap(&mut ws.dh, &mut ws.dtmp);
-                        relu_backward(&mut ws.dh, &ws.hs[i]);
+                        relu_backward(pool, &mut ws.dh, &ws.hs[i]);
                     }
                 }
             }
@@ -514,7 +514,7 @@ impl ModelDef {
                     0 => {}
                     1 => {
                         head.backward_dx(pool, p, &ws.dlogits, m, &mut ws.dh, &mut ws.panels, gen);
-                        relu_backward(&mut ws.dh, &ws.hs[self.depth]);
+                        relu_backward(pool, &mut ws.dh, &ws.hs[self.depth]);
                     }
                     _ => {
                         // Descend one activation level: the previous
@@ -528,7 +528,7 @@ impl ModelDef {
                         for (a, b) in ws.dh.iter_mut().zip(&ws.dtmp) {
                             *a += *b; // residual: dz flows to h_in directly too
                         }
-                        relu_backward(&mut ws.dh, &ws.hs[j]);
+                        relu_backward(pool, &mut ws.dh, &ws.hs[j]);
                     }
                 }
             }
@@ -578,7 +578,7 @@ impl ModelDef {
                     // dh is dz = d(loss)/d(h_in + fc2(u)) after prep's ReLU.
                     fc2.backward_params(pool, &ws.us[i], &ws.dh, m, &mut ws.grad);
                     fc2.backward_dx(pool, p, &ws.dh, m, &mut ws.du, &mut ws.panels, gen);
-                    relu_backward(&mut ws.du, &ws.us[i]);
+                    relu_backward(pool, &mut ws.du, &ws.us[i]);
                     fc1.backward_params(pool, &ws.hs[i], &ws.du, m, &mut ws.grad);
                 }
             }
@@ -630,6 +630,7 @@ pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usiz
     let (mut logp, mut loss_terms, mut correct, mut dlogits) =
         (Vec::new(), Vec::new(), Vec::new(), Vec::new());
     let (loss, acc) = masked_ce_loss_ws(
+        &Pool::sequential(),
         logits, y, mask, m, n, &mut logp, &mut loss_terms, &mut correct, &mut dlogits,
     );
     LossOut { loss, acc, correct, dlogits }
@@ -643,6 +644,7 @@ pub fn masked_ce_loss(logits: &[f32], y: &[i32], mask: &[f32], m: usize, n: usiz
 /// execution share one source of truth (and stay bit-identical).
 #[allow(clippy::too_many_arguments)]
 pub fn masked_ce_loss_ws(
+    pool: &Pool,
     logits: &[f32],
     y: &[i32],
     mask: &[f32],
@@ -657,7 +659,7 @@ pub fn masked_ce_loss_ws(
     // computes the same denominator over the full mask before splitting
     // rows, so this association must never change (bit-identical losses).
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-    masked_ce_rows(logits, y, mask, m, n, denom, logp, loss_terms, correct, dlogits);
+    masked_ce_rows(pool, logits, y, mask, m, n, denom, logp, loss_terms, correct, dlogits);
     fold_masked_ce(loss_terms, correct, denom)
 }
 
@@ -670,6 +672,7 @@ pub fn masked_ce_loss_ws(
 /// fused computation over the whole batch.
 #[allow(clippy::too_many_arguments)]
 pub fn masked_ce_rows(
+    pool: &Pool,
     logits: &[f32],
     y: &[i32],
     mask: &[f32],
@@ -683,13 +686,62 @@ pub fn masked_ce_rows(
 ) {
     logp.clear();
     logp.resize(m * n, 0.0);
-    log_softmax(logits, m, n, logp);
+    log_softmax(pool, logits, m, n, logp);
     loss_terms.clear();
     loss_terms.resize(m, 0.0);
     correct.clear();
     correct.resize(m, 0.0);
     dlogits.clear();
     dlogits.resize(m * n, 0.0);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Rows are independent (see the doc above), so the per-row pieces are
+    // row-partitioned across the pool — every chunk plan is BITWISE
+    // identical to the sequential loop.
+    let per = if pool.tier() == KernelTier::Scalar {
+        m
+    } else {
+        pool.rows_per_chunk(m, 8 * n)
+    };
+    if per >= m {
+        ce_rows_chunk(logits, y, mask, logp, n, denom, loss_terms, correct, dlogits);
+        return;
+    }
+    let logp: &[f32] = logp;
+    pool.run(
+        logits
+            .chunks(per * n)
+            .zip(logp.chunks(per * n))
+            .zip(y.chunks(per))
+            .zip(mask.chunks(per))
+            .zip(loss_terms.chunks_mut(per))
+            .zip(correct.chunks_mut(per))
+            .zip(dlogits.chunks_mut(per * n))
+            .map(|((((((lc, lpc), yc), mc), ltc), cc), dc)| {
+                move || ce_rows_chunk(lc, yc, mc, lpc, n, denom, ltc, cc, dc)
+            })
+            .collect(),
+    );
+}
+
+/// The per-row CE body over one contiguous row chunk (`y.len()` rows):
+/// loss term, first-max-wins argmax correctness, and the `dlogits` row
+/// scaled by the global `denom`. Pure per-row outputs — chunking is
+/// invisible to the results.
+#[allow(clippy::too_many_arguments)]
+fn ce_rows_chunk(
+    logits: &[f32],
+    y: &[i32],
+    mask: &[f32],
+    logp: &[f32],
+    n: usize,
+    denom: f32,
+    loss_terms: &mut [f32],
+    correct: &mut [f32],
+    dlogits: &mut [f32],
+) {
+    let m = y.len();
     for i in 0..m {
         let yi = y[i] as usize;
         debug_assert!(yi < n, "label {yi} out of range {n}");
@@ -767,11 +819,11 @@ pub fn normalized_grad_stats(g: &[f32]) -> (f32, f32, f32) {
 }
 
 /// SGD with momentum (`train_step.py` `optimizer == "sgd"`).
-pub fn apply_sgd(state: &mut OptState, g: &[f32], lr: f32) {
+pub fn apply_sgd(pool: &Pool, state: &mut OptState, g: &[f32], lr: f32) {
     debug_assert_eq!(state.params.len(), g.len());
     debug_assert_eq!(state.m.len(), g.len());
     state.step += 1.0;
-    apply_sgd_slice(&mut state.params, &mut state.m, g, lr);
+    apply_sgd_slice(pool, &mut state.params, &mut state.m, g, lr);
 }
 
 /// One contiguous slice of the SGD-with-momentum update — the ZeRO
@@ -780,26 +832,24 @@ pub fn apply_sgd(state: &mut OptState, g: &[f32], lr: f32) {
 ///
 /// PARITY: the update is elementwise (no cross-index reduction), so
 /// applying the full vector as any tiling of disjoint slices, in any
-/// order, produces params/momentum bit-identical to the fused
-/// `apply_sgd` loop. The step counter advances once per *step*, not per
-/// slice — callers bump `OptState::step` before slicing.
-pub fn apply_sgd_slice(params: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
+/// order — including the pool's chunk partition inside
+/// `linalg::sgd_apply` — produces params/momentum bit-identical to the
+/// fused `apply_sgd` loop. The step counter advances once per *step*,
+/// not per slice — callers bump `OptState::step` before slicing.
+pub fn apply_sgd_slice(pool: &Pool, params: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
     debug_assert_eq!(params.len(), g.len());
     debug_assert_eq!(m.len(), g.len());
-    for i in 0..g.len() {
-        m[i] = SGD_MOMENTUM * m[i] + g[i];
-        params[i] -= lr * m[i];
-    }
+    sgd_apply(pool, params, m, g, lr, SGD_MOMENTUM);
 }
 
 /// Adam with bias correction (`train_step.py` / `policy.py::_adam`).
-pub fn apply_adam(state: &mut OptState, g: &[f32], lr: f32) {
+pub fn apply_adam(pool: &Pool, state: &mut OptState, g: &[f32], lr: f32) {
     debug_assert_eq!(state.params.len(), g.len());
     debug_assert_eq!(state.m.len(), g.len());
     debug_assert_eq!(state.v.len(), g.len());
     state.step += 1.0;
     let t = state.step as f64;
-    apply_adam_slice(&mut state.params, &mut state.m, &mut state.v, g, lr, t);
+    apply_adam_slice(pool, &mut state.params, &mut state.m, &mut state.v, g, lr, t);
 }
 
 /// One contiguous slice of the Adam update at an explicit step count
@@ -807,9 +857,11 @@ pub fn apply_adam(state: &mut OptState, g: &[f32], lr: f32) {
 /// pre-sliced windows of one parameter range.
 ///
 /// PARITY: elementwise like `apply_sgd_slice` — slice tiling and
-/// application order never change a bit; `t` is passed in so every
-/// slice of one step sees the identical bias correction.
+/// application order (pool chunks included) never change a bit; `t` is
+/// passed in so every slice of one step sees the identical bias
+/// correction, computed once here rather than per chunk.
 pub fn apply_adam_slice(
+    pool: &Pool,
     params: &mut [f32],
     m: &mut [f32],
     v: &mut [f32],
@@ -822,13 +874,7 @@ pub fn apply_adam_slice(
     debug_assert_eq!(v.len(), g.len());
     let c1 = (1.0 - (ADAM_B1 as f64).powf(t)) as f32;
     let c2 = (1.0 - (ADAM_B2 as f64).powf(t)) as f32;
-    for i in 0..g.len() {
-        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-        let m_hat = m[i] / c1;
-        let v_hat = v[i] / c2;
-        params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
-    }
+    adam_apply(pool, params, m, v, g, lr, ADAM_B1, ADAM_B2, ADAM_EPS, c1, c2);
 }
 
 /// FNV-1a over bytes — stable model-name → seed-stream tag.
@@ -1021,11 +1067,13 @@ mod tests {
             };
             let mut sliced = fused.clone();
             for step in 0..3 {
+                let seq = Pool::sequential();
                 if opt == "sgd" {
-                    apply_sgd(&mut fused, &g, 0.05);
+                    apply_sgd(&seq, &mut fused, &g, 0.05);
                     sliced.step += 1.0;
                     for r in m.param_partition(&vec![true; 4], 0) {
                         apply_sgd_slice(
+                            &seq,
                             &mut sliced.params[r.clone()],
                             &mut sliced.m[r.clone()],
                             &g[r],
@@ -1033,11 +1081,12 @@ mod tests {
                         );
                     }
                 } else {
-                    apply_adam(&mut fused, &g, 0.002);
+                    apply_adam(&seq, &mut fused, &g, 0.002);
                     sliced.step += 1.0;
                     let t = sliced.step as f64;
                     for r in m.param_partition(&vec![true; 4], 0) {
                         apply_adam_slice(
+                            &seq,
                             &mut sliced.params[r.clone()],
                             &mut sliced.m[r.clone()],
                             &mut sliced.v[r.clone()],
@@ -1086,7 +1135,7 @@ mod tests {
             m.forward_ws(&pool, &p, &x, rows, &mut ws);
             let logits = std::mem::take(&mut ws.logits);
             let (mut lp, mut lt, mut cor, mut dl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-            masked_ce_rows(&logits, &y, &mask, rows, m.classes, rows as f32, &mut lp, &mut lt, &mut cor, &mut dl);
+            masked_ce_rows(&pool, &logits, &y, &mask, rows, m.classes, rows as f32, &mut lp, &mut lt, &mut cor, &mut dl);
             ws.logits = logits;
             ws.dlogits = dl;
             ws.grad.clear();
@@ -1302,7 +1351,7 @@ mod tests {
                     let logits = std::mem::take(&mut ws.logits);
                     let (mut lp, mut dl) = (Vec::new(), Vec::new());
                     masked_ce_rows(
-                        &logits, &y[lo..hi], &mask[lo..hi], c, m.classes, denom,
+                        &pool, &logits, &y[lo..hi], &mask[lo..hi], c, m.classes, denom,
                         &mut lp, &mut lt, &mut cor, &mut dl,
                     );
                     ws.logits = logits;
@@ -1343,8 +1392,8 @@ mod tests {
             let acts_s = m.forward(&p, xs, hi - lo);
             let (mut lp, mut lt, mut cor, mut dl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
             masked_ce_rows(
-                &acts_s.logits, &y[lo..hi], &mask[lo..hi], hi - lo, m.classes, denom,
-                &mut lp, &mut lt, &mut cor, &mut dl,
+                &Pool::sequential(), &acts_s.logits, &y[lo..hi], &mask[lo..hi], hi - lo,
+                m.classes, denom, &mut lp, &mut lt, &mut cor, &mut dl,
             );
             fold_masked_ce_partial(&lt, &cor, &mut lsum, &mut asum);
         }
@@ -1360,7 +1409,7 @@ mod tests {
         // so every touched parameter moves by ~ -lr * sign(g).
         let g = [0.5f32, -2.0, 0.0, 1e-3];
         let mut s = OptState::adam(vec![1.0; 4]);
-        apply_adam(&mut s, &g, 0.01);
+        apply_adam(&Pool::sequential(), &mut s, &g, 0.01);
         assert!((s.params[0] - (1.0 - 0.01)).abs() < 1e-4);
         assert!((s.params[1] - (1.0 + 0.01)).abs() < 1e-4);
         assert_eq!(s.params[2], 1.0);
@@ -1372,9 +1421,10 @@ mod tests {
     fn sgd_momentum_accumulates() {
         let g = [1.0f32];
         let mut s = OptState::new(vec![0.0], crate::config::Optimizer::Sgd);
-        apply_sgd(&mut s, &g, 0.1);
+        let seq = Pool::sequential();
+        apply_sgd(&seq, &mut s, &g, 0.1);
         assert!((s.params[0] + 0.1).abs() < 1e-7); // -lr * 1
-        apply_sgd(&mut s, &g, 0.1);
+        apply_sgd(&seq, &mut s, &g, 0.1);
         // m = 0.9*1 + 1 = 1.9 -> total -0.1 - 0.19
         assert!((s.params[0] + 0.29).abs() < 1e-6);
     }

@@ -62,19 +62,19 @@ fn trunk_into(
     h1.clear();
     h1.resize(m * HIDDEN, 0.0);
     matmul_acc(pool, states, &theta[FC0.w..FC0.w + FC0.k * FC0.n], m, STATE_DIM, HIDDEN, h1);
-    add_bias(h1, &theta[FC0.b..FC0.b + HIDDEN], m, HIDDEN);
-    tanh(h1);
+    add_bias(pool, h1, &theta[FC0.b..FC0.b + HIDDEN], m, HIDDEN);
+    tanh(pool, h1);
 
     h2.clear();
     h2.resize(m * HIDDEN, 0.0);
     matmul_acc(pool, h1, &theta[FC1.w..FC1.w + FC1.k * FC1.n], m, HIDDEN, HIDDEN, h2);
-    add_bias(h2, &theta[FC1.b..FC1.b + HIDDEN], m, HIDDEN);
-    tanh(h2);
+    add_bias(pool, h2, &theta[FC1.b..FC1.b + HIDDEN], m, HIDDEN);
+    tanh(pool, h2);
 
     logits.clear();
     logits.resize(m * N_ACTIONS, 0.0);
     matmul_acc(pool, h2, &theta[PI.w..PI.w + PI.k * PI.n], m, HIDDEN, N_ACTIONS, logits);
-    add_bias(logits, &theta[PI.b..PI.b + N_ACTIONS], m, N_ACTIONS);
+    add_bias(pool, logits, &theta[PI.b..PI.b + N_ACTIONS], m, N_ACTIONS);
 
     values.clear();
     values.resize(m, 0.0);
@@ -107,7 +107,7 @@ pub fn policy_forward(theta: &[f32], states: &[f32]) -> anyhow::Result<PolicyOut
     let m = states.len() / STATE_DIM;
     let (_h1, _h2, logits, values) = trunk(theta, states, m);
     let mut logp = vec![0.0f32; m * N_ACTIONS];
-    log_softmax(&logits, m, N_ACTIONS, &mut logp);
+    log_softmax(&Pool::sequential(), &logits, m, N_ACTIONS, &mut logp);
     Ok(PolicyOut { logp, values })
 }
 
@@ -164,7 +164,7 @@ pub fn policy_update_ws(
     trunk_into(pool, theta, mb.states, b, h1, h2, logits, values);
     logp.clear();
     logp.resize(b * N_ACTIONS, 0.0);
-    log_softmax(logits, b, N_ACTIONS, logp);
+    log_softmax(pool, logits, b, N_ACTIONS, logp);
     // PARITY: sequential left-to-right mask fold, mirrored by the
     // finite-difference test's loss recomputation — keep associations
     // identical or the gradient check drifts.
@@ -244,7 +244,7 @@ pub fn policy_update_ws(
     g.clear();
     g.resize(PARAM_COUNT, 0.0);
     // pi head: dh2 from logits.
-    col_sums(dlogits, b, N_ACTIONS, &mut g[PI.b..PI.b + N_ACTIONS]);
+    col_sums(pool, dlogits, b, N_ACTIONS, &mut g[PI.b..PI.b + N_ACTIONS]);
     matmul_at(pool, h2, dlogits, b, HIDDEN, N_ACTIONS, &mut g[PI.w..PI.w + HIDDEN * N_ACTIONS]);
     dh2.clear();
     dh2.resize(b * HIDDEN, 0.0);
@@ -268,8 +268,8 @@ pub fn policy_update_ws(
         g[VF.w + k] = gw;
     }
 
-    tanh_backward(dh2, h2);
-    col_sums(dh2, b, HIDDEN, &mut g[FC1.b..FC1.b + HIDDEN]);
+    tanh_backward(pool, dh2, h2);
+    col_sums(pool, dh2, b, HIDDEN, &mut g[FC1.b..FC1.b + HIDDEN]);
     matmul_at(pool, h1, dh2, b, HIDDEN, HIDDEN, &mut g[FC1.w..FC1.w + HIDDEN * HIDDEN]);
     dh1.clear();
     dh1.resize(b * HIDDEN, 0.0);
@@ -277,11 +277,11 @@ pub fn policy_update_ws(
         pool, panels, gen, FC1.w, dh2, &theta[FC1.w..FC1.w + HIDDEN * HIDDEN],
         b, HIDDEN, HIDDEN, dh1,
     );
-    tanh_backward(dh1, h1);
-    col_sums(dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
+    tanh_backward(pool, dh1, h1);
+    col_sums(pool, dh1, b, HIDDEN, &mut g[FC0.b..FC0.b + HIDDEN]);
     matmul_at(pool, mb.states, dh1, b, STATE_DIM, HIDDEN, &mut g[FC0.w..FC0.w + STATE_DIM * HIDDEN]);
 
-    apply_adam(opt, g, hp.lr);
+    apply_adam(pool, opt, g, hp.lr);
 
     Ok(PpoStats { loss, pg_loss, v_loss, entropy, approx_kl })
 }
@@ -414,7 +414,7 @@ mod tests {
             let b = mb.mask.len();
             let (_h1, _h2, logits, values) = super::trunk(theta, mb.states, b);
             let mut logp = vec![0.0f32; b * N_ACTIONS];
-            log_softmax(&logits, b, N_ACTIONS, &mut logp);
+            log_softmax(&Pool::sequential(), &logits, b, N_ACTIONS, &mut logp);
             // PARITY: same fold as `policy_update_ws`'s denominator.
             let denom: f32 = mb.mask.iter().sum::<f32>().max(1.0);
             let (mut pg, mut vl, mut ent) = (0.0f64, 0.0f64, 0.0f64);

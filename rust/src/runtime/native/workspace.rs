@@ -179,6 +179,29 @@ impl Workspace {
     }
 }
 
+/// Reusable decode/fold buffers for the compressed gradient wire: one
+/// per ring endpoint, reused hop after hop so the steady-state slice
+/// path (decode → fold → re-encode) allocates nothing. Capacities only
+/// grow, and only until the largest window has passed through once —
+/// the zero-allocation regression test pins `capacity_bytes` flat.
+#[derive(Default)]
+pub struct WireScratch {
+    /// Decoded dense window (topk/q8 hop payloads land here).
+    pub dense: Vec<f32>,
+    /// The folded window under construction for the reply frame.
+    pub fold: Vec<f32>,
+    /// Index scratch for the top-k partial select.
+    pub order: Vec<u32>,
+}
+
+impl WireScratch {
+    /// Total reserved bytes across the scratch buffers (the allocation
+    /// regression probe).
+    pub fn capacity_bytes(&self) -> usize {
+        self.dense.capacity() * 4 + self.fold.capacity() * 4 + self.order.capacity() * 4
+    }
+}
+
 /// Lock-guarded free list of workspaces. `take` pops (or creates) one;
 /// `put` returns it for reuse. The lock is held only for the push/pop.
 #[derive(Default)]

@@ -64,6 +64,7 @@ use crate::runtime::native::model::{
     apply_adam, apply_adam_slice, apply_sgd, apply_sgd_slice, fold_masked_ce_partial,
     normalized_grad_stats,
 };
+use crate::runtime::native::workspace::WireScratch;
 use crate::runtime::native::{CommLane, NativeBackend};
 use crate::sim::elastic;
 use std::collections::VecDeque;
@@ -346,13 +347,19 @@ fn slice_extent(msg: &ShardMsg) -> (usize, usize) {
     }
 }
 
-/// Decode a slice frame's payload to its dense window (the final ring
-/// position's reply, folded by every engaged shard).
-fn decode_slice(msg: ShardMsg) -> anyhow::Result<Vec<f32>> {
+/// Decode a slice frame's payload into `out` (the final ring position's
+/// reply, folded by every engaged shard). Targets a caller buffer so the
+/// leader's steady-state decode allocates nothing once `out`'s capacity
+/// covers the largest window.
+fn decode_slice_into(msg: &ShardMsg, out: &mut Vec<f32>) -> anyhow::Result<()> {
     match msg {
-        ShardMsg::GradSlice { grad, .. } => Ok(grad),
-        ShardMsg::GradTopK { len, idx, val, .. } => wire::topk_decode(len, &idx, &val),
-        ShardMsg::GradQ8 { scale, q, .. } => wire::q8_decode(scale, &q),
+        ShardMsg::GradSlice { grad, .. } => {
+            out.clear();
+            out.extend_from_slice(grad);
+            Ok(())
+        }
+        ShardMsg::GradTopK { len, idx, val, .. } => wire::topk_decode_into(*len, idx, val, out),
+        ShardMsg::GradQ8 { scale, q, .. } => wire::q8_decode_into(*scale, q, out),
         other => anyhow::bail!("decode_slice: not a slice frame: {other:?}"),
     }
 }
@@ -387,6 +394,9 @@ pub struct ShardedBackend {
     plane: Plane,
     /// Slice payload codec for the zero plane (`DYNAMIX_WIRE`).
     wire: WireMode,
+    /// Leader-side decode scratch for the final ring hop — reused across
+    /// steps so the steady-state decode path allocates nothing.
+    scratch: Mutex<WireScratch>,
 }
 
 impl ShardedBackend {
@@ -449,6 +459,7 @@ impl ShardedBackend {
                 .unwrap_or(DEFAULT_BUCKET_BYTES),
             plane: env_plane(),
             wire: crate::config::env::wire_mode().unwrap_or(WireMode::Dense),
+            scratch: Mutex::default(),
         }
     }
 
@@ -515,6 +526,7 @@ impl ShardedBackend {
                 .unwrap_or(DEFAULT_BUCKET_BYTES),
             plane: env_plane(),
             wire: crate::config::env::wire_mode().unwrap_or(WireMode::Dense),
+            scratch: Mutex::default(),
         })
     }
 
@@ -758,9 +770,12 @@ impl ShardedBackend {
                     plan[b].offset + plan[b].len
                 );
                 if j == p - 1 {
-                    // Fully reduced: every engaged shard folded its rows in.
-                    let win = decode_slice(reply)?;
-                    grad[off..off + win.len()].copy_from_slice(&win);
+                    // Fully reduced: every engaged shard folded its rows
+                    // in. Decode into the pooled scratch — no per-step
+                    // window allocation.
+                    let mut scratch = self.scratch.lock().unwrap();
+                    decode_slice_into(&reply, &mut scratch.dense)?;
+                    grad[off..off + scratch.dense.len()].copy_from_slice(&scratch.dense);
                 } else {
                     staged[j + 1].push_back(reply);
                 }
@@ -956,8 +971,8 @@ impl ComputeBackend for ShardedBackend {
         let (sigma_norm, sigma_norm2, grad_l2) = normalized_grad_stats(&grad);
         match self.plane {
             Plane::Replica => match optimizer {
-                Optimizer::Sgd => apply_sgd(state, &grad, lr),
-                Optimizer::Adam => apply_adam(state, &grad, lr),
+                Optimizer::Sgd => apply_sgd(self.inner.pool(), state, &grad, lr),
+                Optimizer::Adam => apply_adam(self.inner.pool(), state, &grad, lr),
             },
             // PARITY: the partition is a disjoint contiguous cover of the
             // parameter vector and both optimizers are elementwise, so
@@ -973,6 +988,7 @@ impl ComputeBackend for ShardedBackend {
                         for r in parts {
                             if !r.is_empty() {
                                 apply_sgd_slice(
+                                    self.inner.pool(),
                                     &mut state.params[r.clone()],
                                     &mut state.m[r.clone()],
                                     &grad[r],
@@ -986,6 +1002,7 @@ impl ComputeBackend for ShardedBackend {
                         for r in parts {
                             if !r.is_empty() {
                                 apply_adam_slice(
+                                    self.inner.pool(),
                                     &mut state.params[r.clone()],
                                     &mut state.m[r.clone()],
                                     &mut state.v[r.clone()],

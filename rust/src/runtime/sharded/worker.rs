@@ -9,6 +9,7 @@
 //! because they sample rows locally and apply `GradFin` updates.
 
 use super::transport::{ShardMsg, ShardTransport};
+use crate::runtime::native::workspace::WireScratch;
 use crate::runtime::native::{NativeBackend, ShardCtx};
 use std::sync::Arc;
 
@@ -22,41 +23,54 @@ pub struct ShardServer {
     /// Buckets folded for the in-flight step (the overlapped ring's
     /// in-order check: bucket `k` must be the `k`-th frame to arrive).
     buckets_done: usize,
+    /// Per-hop decode/fold buffers — reply payloads additionally reuse
+    /// the incoming frame's own vectors, so a steady-state hop performs
+    /// zero heap allocations (regression-tested).
+    scratch: WireScratch,
 }
 
 impl ShardServer {
     pub fn new(backend: Arc<NativeBackend>) -> Self {
-        ShardServer { backend, held: None, buckets_done: 0 }
+        ShardServer { backend, held: None, buckets_done: 0, scratch: WireScratch::default() }
+    }
+
+    /// Bytes reserved in the per-hop decode/fold scratch — flat across
+    /// steady-state hops (the zero-allocation regression test pins it).
+    pub fn scratch_capacity_bytes(&self) -> usize {
+        self.scratch.capacity_bytes()
     }
 
     /// Handle one gradient bucket of the overlapped ring: seed the
     /// `[offset, offset + grad.len())` window, fold this bucket's stages,
-    /// and return the folded window as the reply. The caller must send
-    /// the reply FIRST and only then call [`Self::bucket_retire`] — the
-    /// follow-up work (prep-ahead / retirement) runs while the bucket
-    /// hops to the next shard, which is exactly the overlap this
-    /// pipeline exists for.
+    /// and return the folded window as the reply (in the incoming frame's
+    /// recycled buffer). The caller must send the reply FIRST and only
+    /// then call [`Self::bucket_retire`] — the follow-up work (prep-ahead
+    /// / retirement) runs while the bucket hops to the next shard, which
+    /// is exactly the overlap this pipeline exists for.
     pub fn handle_bucket(
         &mut self,
         seq: u64,
         bucket: usize,
         offset: usize,
-        grad: Vec<f32>,
+        mut grad: Vec<f32>,
     ) -> anyhow::Result<ShardMsg> {
-        let out = self.fold_window(seq, bucket, offset, &grad)?;
-        Ok(ShardMsg::GradBucket { seq, bucket, offset, grad: out })
+        self.fold_window(seq, bucket, offset, &grad)?;
+        grad.clear();
+        grad.extend_from_slice(&self.scratch.fold);
+        Ok(ShardMsg::GradBucket { seq, bucket, offset, grad })
     }
 
     /// Shared in-order fold core of the bucketed replica ring and the
     /// ZeRO slice plane: seed the `[offset, offset + grad.len())` window,
-    /// fold this window's stages, bump the in-order cursor.
+    /// fold this window's stages, bump the in-order cursor. The folded
+    /// window lands in `self.scratch.fold` (valid until the next call).
     fn fold_window(
         &mut self,
         seq: u64,
         bucket: usize,
         offset: usize,
         grad: &[f32],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<()> {
         let (held_seq, params, ctx) = self.held.as_mut().ok_or_else(|| {
             anyhow::anyhow!("bucket {bucket} (seq {seq}) without an in-flight step")
         })?;
@@ -69,10 +83,10 @@ impl ShardServer {
             "bucket {bucket} of seq {seq} arrived out of order (expected bucket {})",
             self.buckets_done
         );
-        let mut out = Vec::with_capacity(grad.len());
-        self.backend.shard_backward_bucket(params, ctx, offset, grad, &mut out)?;
+        self.backend
+            .shard_backward_bucket(params, ctx, offset, grad, &mut self.scratch.fold)?;
         self.buckets_done += 1;
-        Ok(out)
+        Ok(())
     }
 
     /// Handle one ZeRO-plane slice frame: decode its payload to the dense
@@ -82,24 +96,36 @@ impl ShardServer {
     /// Same reply-before-retire contract as buckets. Compressed modes are
     /// lossy on purpose: the fold input is the decoded window and the
     /// reply re-compresses, which is deterministic but not bit-parity
-    /// with the dense plane.
+    /// with the dense plane. Decode targets the pooled scratch and the
+    /// reply payloads recycle the incoming frame's vectors — no per-hop
+    /// allocations once the buffers are warm.
     pub fn handle_slice(&mut self, msg: ShardMsg) -> anyhow::Result<ShardMsg> {
         use crate::comm::wire;
         match msg {
-            ShardMsg::GradSlice { seq, slice, offset, grad } => {
-                let out = self.fold_window(seq, slice, offset, &grad)?;
-                Ok(ShardMsg::GradSlice { seq, slice, offset, grad: out })
+            ShardMsg::GradSlice { seq, slice, offset, mut grad } => {
+                self.fold_window(seq, slice, offset, &grad)?;
+                grad.clear();
+                grad.extend_from_slice(&self.scratch.fold);
+                Ok(ShardMsg::GradSlice { seq, slice, offset, grad })
             }
-            ShardMsg::GradTopK { seq, slice, offset, len, idx, val } => {
-                let dense = wire::topk_decode(len, &idx, &val)?;
-                let out = self.fold_window(seq, slice, offset, &dense)?;
-                let (idx, val) = wire::topk_encode(&out);
+            ShardMsg::GradTopK { seq, slice, offset, len, mut idx, mut val } => {
+                let mut dense = std::mem::take(&mut self.scratch.dense);
+                let folded = wire::topk_decode_into(len, &idx, &val, &mut dense)
+                    .and_then(|()| self.fold_window(seq, slice, offset, &dense));
+                self.scratch.dense = dense;
+                folded?;
+                let mut order = std::mem::take(&mut self.scratch.order);
+                wire::topk_encode_into(&self.scratch.fold, &mut order, &mut idx, &mut val);
+                self.scratch.order = order;
                 Ok(ShardMsg::GradTopK { seq, slice, offset, len, idx, val })
             }
-            ShardMsg::GradQ8 { seq, slice, offset, scale, q } => {
-                let dense = wire::q8_decode(scale, &q)?;
-                let out = self.fold_window(seq, slice, offset, &dense)?;
-                let (scale, q) = wire::q8_encode(&out);
+            ShardMsg::GradQ8 { seq, slice, offset, scale, mut q } => {
+                let mut dense = std::mem::take(&mut self.scratch.dense);
+                let folded = wire::q8_decode_into(scale, &q, &mut dense)
+                    .and_then(|()| self.fold_window(seq, slice, offset, &dense));
+                self.scratch.dense = dense;
+                folded?;
+                let scale = wire::q8_encode_into(&self.scratch.fold, &mut q);
                 Ok(ShardMsg::GradQ8 { seq, slice, offset, scale, q })
             }
             other => anyhow::bail!("handle_slice: not a slice frame: {other:?}"),

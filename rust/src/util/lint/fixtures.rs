@@ -128,6 +128,47 @@ pub fn journal_stamp(sim_clock_s: f64) -> f64 {
 "#,
         },
         Fixture {
+            // The fold-order rule also covers the wire codec's quickselect
+            // partition: the selected prefix must equal the full-sort
+            // reference bit-for-bit, which only holds when the key is a
+            // duplicate-free total order — a property the marker forces
+            // the author to state.
+            rule: "fold-order",
+            path: "src/runtime/native/lintfix_select.rs",
+            bad: r#"
+pub fn cut(order: &mut [u32], k: usize) {
+    order.select_nth_unstable(k - 1);
+}
+"#,
+            good: r#"
+pub fn cut(order: &mut [u32], k: usize) {
+    // PARITY: indices are distinct, so the selected prefix is exactly
+    // the full-sort prefix — ties cannot reach the unstable partition.
+    order.select_nth_unstable(k - 1);
+}
+"#,
+        },
+        Fixture {
+            // The feature-detect rule's second token: `#[target_feature]`
+            // lanes may only live in the SIMD module allowlist (exec.rs,
+            // linalg.rs, comm/wire.rs) where the tier dispatch and its
+            // SAFETY obligations stay in one auditable place.
+            rule: "feature-detect",
+            path: "src/runtime/sharded/lintfix_simd.rs",
+            bad: r#"
+// SAFETY: callers prove avx2 before taking this lane.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bump_lane(x: &mut [f32]) {
+    x[0] += 1.0;
+}
+"#,
+            good: r#"
+pub fn bump(pool: &crate::runtime::native::exec::Pool, x: &mut [f32]) {
+    crate::runtime::native::linalg::relu(pool, x);
+}
+"#,
+        },
+        Fixture {
             rule: "feature-detect",
             path: "src/runtime/native/lintfix3.rs",
             bad: r#"

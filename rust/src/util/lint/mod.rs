@@ -12,8 +12,8 @@
 //! | `env-read`          | `std::env::var` only in the config/exec/bench allowlist (read-once) |
 //! | `wall-clock`        | no `Instant::now`/`SystemTime` in determinism-critical modules |
 //! | `nondet-collection` | no `HashMap`/`HashSet` in reduce/wire/record-emitting modules |
-//! | `fold-order`        | float reductions in parity-critical paths carry a `// PARITY:` marker |
-//! | `feature-detect`    | raw `is_x86_feature_detected!` only inside `exec.rs` tier detection |
+//! | `fold-order`        | float reductions, top-k partial selects, and FMA intrinsics in parity-critical paths carry a `// PARITY:` marker |
+//! | `feature-detect`    | raw `is_x86_feature_detected!` only inside `exec.rs`; `#[target_feature]` lanes only in exec.rs / linalg.rs / comm/wire.rs |
 //! | `suppression`       | every `lint:allow` names a known rule and justifies itself |
 //!
 //! A finding is suppressed by attaching `lint:allow(env-read): reason`
@@ -46,8 +46,8 @@ pub const RULES: &[(&str, &str)] = &[
     ("env-read", "`std::env::var` outside the config/exec/bench allowlist"),
     ("wall-clock", "wall-clock read in a determinism-critical module"),
     ("nondet-collection", "iteration-order-nondeterministic collection in a reduce/wire/record module"),
-    ("fold-order", "float reduction in a parity-critical path without a `PARITY:` marker"),
-    ("feature-detect", "raw CPU feature detection outside `exec.rs` tier resolution"),
+    ("fold-order", "float reduction / partial select / FMA in a parity-critical path without a `PARITY:` marker"),
+    ("feature-detect", "CPU feature probe outside `exec.rs`, or a `#[target_feature]` lane outside the SIMD module allowlist"),
     ("suppression", "`lint:allow` with an unknown rule id or no justification"),
 ];
 
@@ -191,6 +191,17 @@ fn feature_detect_allowlisted(rel: &str) -> bool {
     rel == "src/runtime/native/exec.rs"
 }
 
+/// L6 (second token): modules allowed to declare `#[target_feature]`
+/// lanes. SIMD implementations live next to their scalar references so
+/// the tier dispatch (and its SAFETY obligations) stays auditable in one
+/// place per subsystem: tier resolution in `exec.rs`, compute kernels in
+/// `linalg.rs`, wire codecs in `comm/wire.rs`.
+fn target_feature_allowlisted(rel: &str) -> bool {
+    rel == "src/runtime/native/exec.rs"
+        || rel == "src/runtime/native/linalg.rs"
+        || rel == "src/comm/wire.rs"
+}
+
 /// Run the full rule catalogue over one file's source. `rel` is the
 /// crate-relative path (forward slashes) used for rule scoping.
 pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
@@ -287,10 +298,22 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
             }
         }
 
-        // L5 — fold-order.
+        // L5 — fold-order. Beyond literal folds, two SIMD-era patterns
+        // carry the same ordering burden: a quickselect partition feeding
+        // the top-k wire (its selected set must match the sort reference
+        // bit-for-bit) and an FMA intrinsic (contracted rounding — only
+        // legal on the 1e-5 forward/input-grad paths, never in a
+        // bitwise-parity kernel). `select_nth_unstable` matches with
+        // prefix_ok so `_by`/`_by_key` variants are caught too.
         if fold_scoped(rel) {
-            for pat in ["sum::<f32>", "sum::<f64>", ".fold("] {
-                if count_tokens(code, pat, false) > 0 {
+            for (pat, prefix_ok) in [
+                ("sum::<f32>", false),
+                ("sum::<f64>", false),
+                (".fold(", false),
+                ("select_nth_unstable", true),
+                ("_mm256_fmadd_ps", false),
+            ] {
+                if count_tokens(code, pat, prefix_ok) > 0 {
                     let ctx = attached_lines(&lines, i);
                     if !has_marker(&lines, &ctx, "PARITY:")
                         && !is_allowed(&lines, &ctx, "fold-order")
@@ -317,6 +340,21 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
                     rel,
                     i + 1,
                     "raw feature detection outside `exec.rs`; dispatch through `KernelTier::resolved`".to_string(),
+                ));
+            }
+        }
+        // L6 (second token) — a `#[target_feature]` lane outside the SIMD
+        // module allowlist: new lanes must live beside their scalar
+        // reference and reach callers through the tier dispatch, never as
+        // free-floating feature-gated functions.
+        if !target_feature_allowlisted(rel) && count_tokens(code, "target_feature", false) > 0 {
+            let ctx = attached_lines(&lines, i);
+            if !is_allowed(&lines, &ctx, "feature-detect") {
+                out.push(violation(
+                    "feature-detect",
+                    rel,
+                    i + 1,
+                    "`#[target_feature]` outside the SIMD module allowlist (exec.rs, linalg.rs, comm/wire.rs)".to_string(),
                 ));
             }
         }
@@ -430,9 +468,10 @@ mod tests {
 
     #[test]
     fn safety_attaches_through_attributes_and_continuations() {
-        // Comment above attribute lines.
+        // Comment above attribute lines (a target_feature-allowlisted
+        // path — the attribute itself is legal only there).
         let src = "// SAFETY: unsafe solely for target_feature; no pointer preconditions.\n#[inline]\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
-        assert!(scan_source("src/runtime/native/x.rs", src).is_empty());
+        assert!(scan_source("src/runtime/native/linalg.rs", src).is_empty());
         // Comment above a multi-line `let … =` head.
         let src = "// SAFETY: the latch below outlives every borrow.\nlet job: Box<F> =\n    unsafe { transmute(j) };\n";
         assert!(scan_source("src/runtime/native/x.rs", src).is_empty());
@@ -471,6 +510,39 @@ mod tests {
         assert!(scan_source("src/runtime/native/model.rs", marked).is_empty());
         // Out of scope: no marker needed.
         assert!(scan_source("src/metrics/mod.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn fold_order_covers_partial_select_and_fma() {
+        // The `_by_key` suffix must not hide the partition from the rule.
+        let bare = "order.select_nth_unstable_by_key(k - 1, key);\n";
+        assert_eq!(scan_source("src/comm/wire.rs", bare).len(), 1);
+        let marked = "// PARITY: duplicate-free key — prefix equals the sort reference.\norder.select_nth_unstable_by_key(k - 1, key);\n";
+        assert!(scan_source("src/comm/wire.rs", marked).is_empty());
+        // An FMA intrinsic in a parity path needs the same marker.
+        let fma = "let acc = unsafe { _mm256_fmadd_ps(a, b, acc) }; // SAFETY: avx2 checked by tier.\n";
+        assert_eq!(scan_source("src/runtime/native/linalg.rs", fma).len(), 1);
+        let fma_ok = "// PARITY: fwd/input-grad path — contracted rounding under the 1e-5 contract.\n// SAFETY: avx2 checked by tier.\nlet acc = unsafe { _mm256_fmadd_ps(a, b, acc) };\n";
+        assert!(scan_source("src/runtime/native/linalg.rs", fma_ok).is_empty());
+        // Out of the fold scope neither token fires.
+        assert!(scan_source("src/metrics/mod.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn target_feature_is_confined_to_the_simd_module_allowlist() {
+        let lane = "// SAFETY: callers hold the avx2 witness from the tier dispatch.\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
+        // Outside the allowlist: flagged even with a SAFETY proof.
+        let vs = scan_source("src/runtime/sharded/worker.rs", lane);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "feature-detect");
+        // The three SIMD homes pass.
+        for rel in ["src/runtime/native/exec.rs", "src/runtime/native/linalg.rs", "src/comm/wire.rs"]
+        {
+            assert!(scan_source(rel, lane).is_empty(), "{rel} should allow lanes");
+        }
+        // A justified allow still works for one-off exceptions.
+        let allowed = "// lint:allow(feature-detect): scalar-only test shim, never dispatched.\n// SAFETY: avx2 proven by the caller.\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
+        assert!(scan_source("src/runtime/sharded/worker.rs", allowed).is_empty());
     }
 
     #[test]

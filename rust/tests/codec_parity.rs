@@ -1,0 +1,269 @@
+//! Wire-codec hot-path parity suite.
+//!
+//! The top-k encoder replaced its full sort with an O(n) quickselect
+//! partition, and the q8 codec grew AVX2 lanes behind the process-wide
+//! kernel tier. Neither is allowed to change a single wire byte: the
+//! partial select is pinned bit-identical to the sort-based reference on
+//! random AND adversarial-tie inputs, the dispatched q8 codec is pinned
+//! byte-identical to an in-test scalar transliteration on every length
+//! crossing a lane boundary (the CI kernel sweep runs this binary under
+//! `DYNAMIX_KERNEL=scalar|blocked|simd`, so the SIMD lanes are held to
+//! the same bytes as the scalar loops), and the `_into` variants must be
+//! indistinguishable from the owned wrappers even when their buffers are
+//! recycled across differently-shaped calls. The last test pins the
+//! zero-allocation property the `_into` family exists for: a shard
+//! server's decode/fold/re-encode scratch stops growing after warmup.
+
+use dynamix::comm::wire;
+use dynamix::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// The historical sort-based top-k reference: order EVERY index by
+/// (|v| bits desc, index asc), keep the first k, emit in index order.
+fn topk_sort_ref(x: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let k = wire::topk_k(x.len());
+    let mut order: Vec<u32> = (0..x.len() as u32).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(x[i as usize].abs().to_bits()), i));
+    let mut idx: Vec<u32> = order[..k].to_vec();
+    idx.sort_unstable();
+    let val = idx.iter().map(|&i| x[i as usize]).collect();
+    (idx, val)
+}
+
+/// Scalar transliteration of the q8 encoder (the pre-SIMD loop).
+fn q8_scalar_ref(x: &[f32]) -> (f32, Vec<i8>) {
+    let max_bits = x.iter().map(|v| v.abs().to_bits()).max().unwrap_or(0);
+    let e = ((max_bits >> 23) & 0xFF) as i32 - 127;
+    if max_bits == 0 || !(-120..=127).contains(&e) {
+        return (0.0, vec![0; x.len()]);
+    }
+    let scale = f32::from_bits(((e - 6 + 127) as u32) << 23);
+    let q = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (scale, q)
+}
+
+fn assert_topk_eq(x: &[f32], what: &str) {
+    let (idx, val) = wire::topk_encode(x);
+    let (ridx, rval) = topk_sort_ref(x);
+    assert_eq!(idx, ridx, "{what}: kept index set diverged from sort reference");
+    let got: Vec<u32> = val.iter().map(|v| v.to_bits()).collect();
+    let want: Vec<u32> = rval.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "{what}: kept values diverged from sort reference");
+}
+
+#[test]
+fn topk_partial_select_matches_sort_reference_on_random_inputs() {
+    let mut rng = Rng::new(0x70CC);
+    for &len in &[1usize, 2, 3, 4, 5, 7, 8, 9, 31, 64, 100, 1000, 4097] {
+        for round in 0..4 {
+            let x = rand_vec(&mut rng, len);
+            assert_topk_eq(&x, &format!("random len={len} round={round}"));
+        }
+    }
+}
+
+#[test]
+fn topk_partial_select_matches_sort_reference_on_adversarial_ties() {
+    // Magnitude ties are where an unstable partition could legally differ
+    // from an unstable sort — the (|v| bits, index) key must make the
+    // outcome unique anyway.
+    let cases: Vec<(&str, Vec<f32>)> = vec![
+        ("all equal", vec![1.0; 37]),
+        ("all zero", vec![0.0; 16]),
+        ("signed zeros", vec![0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0]),
+        ("sign-only ties", vec![2.0, -2.0, 2.0, -2.0, 2.0, -2.0, 2.0, -2.0, 2.0]),
+        (
+            "two magnitude classes straddling k",
+            // k = 3 of 12; five elements tie at the cut magnitude.
+            vec![9.0, 5.0, 5.0, -5.0, 5.0, -5.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+        ),
+        ("tie exactly at the cut", vec![3.0, 3.0, 3.0, 3.0]),
+        (
+            "non-finite payloads",
+            vec![f32::INFINITY, f32::NAN, -f32::INFINITY, f32::NAN, 1.0, 0.0, -1.0, f32::MAX],
+        ),
+        ("descending already", (0..33).map(|i| 33.0 - i as f32).collect()),
+        ("ascending worst case", (0..33).map(|i| i as f32).collect()),
+    ];
+    for (what, x) in &cases {
+        assert_topk_eq(x, what);
+    }
+    // Dense tie grids at every small length (select pivot paths differ by
+    // length parity and k position).
+    for len in 1..=24usize {
+        let x: Vec<f32> = (0..len).map(|i| if i % 2 == 0 { 4.0 } else { -4.0 }).collect();
+        assert_topk_eq(&x, &format!("tie grid len={len}"));
+    }
+}
+
+#[test]
+fn q8_codec_matches_scalar_reference_bytes() {
+    let mut rng = Rng::new(0x9B);
+    // Every length crossing the 8-lane boundary, random payloads.
+    for len in 1..=33usize {
+        for round in 0..3 {
+            let x = rand_vec(&mut rng, len);
+            let (scale, q) = wire::q8_encode(&x);
+            let (rs, rq) = q8_scalar_ref(&x);
+            assert_eq!(scale.to_bits(), rs.to_bits(), "scale len={len} round={round}");
+            assert_eq!(q, rq, "bytes len={len} round={round}");
+            // Decode parity: q·scale is one exact multiply in every lane.
+            let dec = wire::q8_decode(scale, &q).unwrap();
+            for (i, (d, &b)) in dec.iter().zip(&q).enumerate() {
+                assert_eq!(
+                    d.to_bits(),
+                    (b as f32 * scale).to_bits(),
+                    "decode[{i}] len={len}"
+                );
+            }
+        }
+    }
+    // Engineered rounding ties: max |v| = 64.0 pins e = 6, scale = 1.0,
+    // so each t = v/scale tie sits exactly on a half. Half-away-from-zero
+    // must survive the SIMD lane's half-to-even roundps + correction.
+    let ties = vec![
+        64.0, 2.5, -2.5, 0.5, -0.5, 1.5, -1.5, 63.5, -63.5, 3.5, -3.5, 10.5, -10.5, 0.0, -0.0,
+        7.5, -7.5,
+    ];
+    let (scale, q) = wire::q8_encode(&ties);
+    assert_eq!(scale, 1.0, "64.0 window must quantize at scale 1.0");
+    let (rs, rq) = q8_scalar_ref(&ties);
+    assert_eq!(scale.to_bits(), rs.to_bits());
+    assert_eq!(q, rq, "tie bytes diverged from round-half-away reference");
+    assert_eq!(q[1], 3, "2.5 rounds away from zero");
+    assert_eq!(q[2], -3, "-2.5 rounds away from zero");
+    assert_eq!(q[3], 1, "0.5 rounds away from zero");
+    assert_eq!(q[4], -1, "-0.5 rounds away from zero");
+    // Same ties at a non-unit power-of-two scale (max 128.0 → scale 2.0).
+    let scaled: Vec<f32> = ties.iter().map(|v| v * 2.0).collect();
+    let (scale2, q2) = wire::q8_encode(&scaled);
+    assert_eq!(scale2, 2.0);
+    assert_eq!(q2, rq, "scaling by the wire's own power of two must not move any byte");
+    // Degenerate windows flush identically through both paths.
+    for degenerate in [vec![0.0f32; 9], vec![f32::NAN; 5], vec![1e-39f32; 7]] {
+        let (scale, q) = wire::q8_encode(&degenerate);
+        let (rs, rq) = q8_scalar_ref(&degenerate);
+        assert_eq!(scale.to_bits(), rs.to_bits());
+        assert_eq!(q, rq);
+        assert_eq!(scale, 0.0, "degenerate window must flush to scale 0");
+        assert!(q.iter().all(|&b| b == 0));
+    }
+}
+
+#[test]
+fn into_variants_match_owned_wrappers_across_recycled_buffers() {
+    // One set of buffers, reused across differently-sized windows in both
+    // directions (grow, shrink, grow) — every call must behave exactly
+    // like a fresh owned-wrapper call.
+    let mut rng = Rng::new(0x1E70);
+    let (mut order, mut idx, mut val) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut q, mut dense) = (Vec::new(), Vec::new());
+    for &len in &[100usize, 9, 1000, 1, 64, 0, 33] {
+        let x = rand_vec(&mut rng, len);
+
+        wire::topk_encode_into(&x, &mut order, &mut idx, &mut val);
+        let (oidx, oval) = wire::topk_encode(&x);
+        assert_eq!(idx, oidx, "topk_encode_into len={len}");
+        assert_eq!(
+            val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            oval.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "topk_encode_into values len={len}"
+        );
+        wire::topk_decode_into(len, &idx, &val, &mut dense).unwrap();
+        let owned = wire::topk_decode(len, &idx, &val).unwrap();
+        assert_eq!(
+            dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            owned.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "topk_decode_into len={len}"
+        );
+
+        let scale = wire::q8_encode_into(&x, &mut q);
+        let (oscale, oq) = wire::q8_encode(&x);
+        assert_eq!(scale.to_bits(), oscale.to_bits(), "q8_encode_into scale len={len}");
+        assert_eq!(q, oq, "q8_encode_into bytes len={len}");
+        wire::q8_decode_into(scale, &q, &mut dense).unwrap();
+        let owned = wire::q8_decode(scale, &q).unwrap();
+        assert_eq!(
+            dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            owned.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "q8_decode_into len={len}"
+        );
+    }
+    // A failed decode must not poison the buffers for the next call.
+    assert!(wire::topk_decode_into(50, &[60], &[1.0; 1], &mut dense).is_err());
+    assert!(wire::q8_decode_into(f32::NAN, &[1, 2, 3], &mut dense).is_err());
+    wire::q8_decode_into(0.5, &[2, -4], &mut dense).unwrap();
+    assert_eq!(dense, vec![1.0, -2.0]);
+}
+
+#[test]
+fn worker_slice_hops_allocate_nothing_at_steady_state() {
+    use dynamix::comm::ShardRows;
+    use dynamix::runtime::native::NativeBackend;
+    use dynamix::runtime::sharded::transport::ShardMsg;
+    use dynamix::runtime::sharded::worker::ShardServer;
+    use dynamix::runtime::ComputeBackend;
+    use std::sync::Arc;
+
+    let b = Arc::new(NativeBackend::with_threads(1));
+    let fd = b.schema().feature_dim;
+    let params = Arc::new(b.init_params("vgg11_mini", 0).unwrap());
+    let pc = params.len();
+    let mut s = ShardServer::new(b);
+    let mut rng = Rng::new(0xA110C);
+
+    let mut warm_capacity = 0usize;
+    for hop in 0..8u64 {
+        let seq = hop + 1;
+        s.handle(ShardMsg::Step {
+            seq,
+            denom: 2.0,
+            train: true,
+            rows: Some(ShardRows {
+                model: "vgg11_mini".into(),
+                x: (0..2 * fd).map(|_| rng.normal() as f32).collect(),
+                y: vec![0, 1],
+                mask: vec![1.0, 1.0],
+            }),
+            params: Some(Arc::clone(&params)),
+        })
+        .unwrap()
+        .unwrap();
+        // Alternate the compressed wire modes so BOTH decode paths and
+        // both re-encodes run through the same scratch.
+        let window = rand_vec(&mut rng, pc);
+        let reply = if hop % 2 == 0 {
+            let (idx, val) = wire::topk_encode(&window);
+            s.handle_slice(ShardMsg::GradTopK { seq, slice: 0, offset: 0, len: pc, idx, val })
+                .unwrap()
+        } else {
+            let (scale, q) = wire::q8_encode(&window);
+            s.handle_slice(ShardMsg::GradQ8 { seq, slice: 0, offset: 0, scale, q }).unwrap()
+        };
+        match reply {
+            ShardMsg::GradTopK { len, .. } => assert_eq!(len, pc),
+            ShardMsg::GradQ8 { ref q, .. } => assert_eq!(q.len(), pc),
+            other => panic!("unexpected slice reply {other:?}"),
+        }
+        s.bucket_retire(seq).unwrap();
+
+        // Both wire modes have passed through once after hop 1: from then
+        // on the decode/fold/re-encode scratch must never grow again.
+        if hop == 1 {
+            warm_capacity = s.scratch_capacity_bytes();
+            assert!(warm_capacity > 0, "scratch should be warm after both wire modes");
+        } else if hop > 1 {
+            assert_eq!(
+                s.scratch_capacity_bytes(),
+                warm_capacity,
+                "steady-state hop {hop} grew the decode/fold scratch"
+            );
+        }
+    }
+}

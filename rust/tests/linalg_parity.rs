@@ -40,6 +40,13 @@ fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
 }
 
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}[{i}]: {a} != {b}");
+    }
+}
+
 fn assert_close(got: &[f32], want: &[f32], what: &str) {
     assert_eq!(got.len(), want.len(), "{what}: length mismatch");
     for (i, (a, b)) in got.iter().zip(want).enumerate() {
@@ -125,14 +132,169 @@ fn reduce_sensitive_kernels_are_bitwise_identical_across_tiers() {
         // col_sums: one shared implementation; chaining row slices in
         // order must replay the fused fold exactly (the property the
         // shard ring relies on).
+        let seq = Pool::sequential();
         let mut fused = vec![0.0f32; n];
-        linalg::col_sums(&dy, m, n, &mut fused);
+        linalg::col_sums(&seq, &dy, m, n, &mut fused);
         let mut chained = vec![0.0f32; n];
         let split = m / 2;
-        linalg::col_sums(&dy[..split * n], split, n, &mut chained);
-        linalg::col_sums(&dy[split * n..], m - split, n, &mut chained);
+        linalg::col_sums(&seq, &dy[..split * n], split, n, &mut chained);
+        linalg::col_sums(&seq, &dy[split * n..], m - split, n, &mut chained);
         for (a, b) in chained.iter().zip(&fused) {
             assert_eq!(a.to_bits(), b.to_bits(), "col_sums chain diverged");
+        }
+        // ...and the pooled/SIMD col_sums must replay the same fold bitwise
+        // across every tier and thread count (column partition: each output
+        // column is owned by exactly one chunk, folded in row order).
+        for tier in KernelTier::available() {
+            for threads in [1usize, 2, 7] {
+                let pool = Pool::with_config(threads, tier);
+                let mut cs = vec![0.0f32; n];
+                linalg::col_sums(&pool, &dy, m, n, &mut cs);
+                for (i, (a, b)) in cs.iter().zip(&fused).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "col_sums[{i}] {}/t{threads} diverged",
+                        tier.as_str()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bitwise_identical_across_tiers_and_threads() {
+    // relu/tanh(+backwards) and bias add are order-free per element: the
+    // SIMD lanes use only correctly-rounded IEEE ops (no FMA) and the pool
+    // partition assigns each element to exactly one chunk, so every tier ×
+    // thread combination is held BITWISE to the scalar reference. Lengths
+    // cover sub-lane, off-lane, and large-enough-to-actually-thread.
+    let mut rng = Rng::new(0xE1E);
+    for &len in &[1usize, 7, 33, 1000, 300_000] {
+        let base = rand_vec(&mut rng, len);
+        let act = rand_vec(&mut rng, len);
+
+        let mut relu_ref = base.clone();
+        scalar::relu(&mut relu_ref);
+        let mut tanh_ref = base.clone();
+        scalar::tanh(&mut tanh_ref);
+        let mut rbwd_ref = base.clone();
+        scalar::relu_backward(&mut rbwd_ref, &act);
+        let mut tbwd_ref = base.clone();
+        scalar::tanh_backward(&mut tbwd_ref, &act);
+
+        for tier in KernelTier::available() {
+            for threads in [1usize, 2, 7] {
+                let pool = Pool::with_config(threads, tier);
+                let tag = format!("{}/len{len}t{threads}", tier.as_str());
+
+                let mut v = base.clone();
+                linalg::relu(&pool, &mut v);
+                assert_bits(&v, &relu_ref, &format!("relu/{tag}"));
+
+                let mut v = base.clone();
+                linalg::tanh(&pool, &mut v);
+                assert_bits(&v, &tanh_ref, &format!("tanh/{tag}"));
+
+                let mut v = base.clone();
+                linalg::relu_backward(&pool, &mut v, &act);
+                assert_bits(&v, &rbwd_ref, &format!("relu_bwd/{tag}"));
+
+                let mut v = base.clone();
+                linalg::tanh_backward(&pool, &mut v, &act);
+                assert_bits(&v, &tbwd_ref, &format!("tanh_bwd/{tag}"));
+            }
+        }
+    }
+    // add_bias over awkward (m, n) shapes, including one past the
+    // parallel cutoff.
+    for &(m, n) in &[(1usize, 1usize), (3, 7), (17, 33), (700, 512)] {
+        let b = rand_vec(&mut rng, n);
+        let base = rand_vec(&mut rng, m * n);
+        let mut bias_ref = base.clone();
+        scalar::add_bias(&mut bias_ref, &b, m, n);
+        for tier in KernelTier::available() {
+            for threads in [1usize, 2, 7] {
+                let pool = Pool::with_config(threads, tier);
+                let mut v = base.clone();
+                linalg::add_bias(&pool, &mut v, &b, m, n);
+                assert_bits(
+                    &v,
+                    &bias_ref,
+                    &format!("add_bias/{}/m{m}n{n}t{threads}", tier.as_str()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn log_softmax_is_bitwise_identical_across_tiers_and_threads() {
+    // The row fold (max, then exp-sum in column order) is sequential in
+    // every tier — exp/ln are libm-bound, so the pooled form only
+    // partitions ROWS across threads. Bitwise, not 1e-5.
+    let mut rng = Rng::new(0x105);
+    for &(m, n) in &[(1usize, 1usize), (3, 7), (40, 10), (1024, 64)] {
+        let logits = rand_vec(&mut rng, m * n);
+        let mut lp_ref = vec![0.0f32; m * n];
+        scalar::log_softmax(&logits, m, n, &mut lp_ref);
+        for tier in KernelTier::available() {
+            for threads in [1usize, 2, 7] {
+                let pool = Pool::with_config(threads, tier);
+                let mut lp = vec![0.0f32; m * n];
+                linalg::log_softmax(&pool, &logits, m, n, &mut lp);
+                assert_bits(
+                    &lp,
+                    &lp_ref,
+                    &format!("log_softmax/{}/m{m}n{n}t{threads}", tier.as_str()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn optimizer_applies_are_bitwise_identical_across_tiers_and_threads() {
+    // The sliced optimizer apply fans each parameter window across the
+    // pool; every parameter is touched by exactly one chunk with the same
+    // per-element arithmetic (no FMA in the SIMD lanes), so the result is
+    // BITWISE equal to the fused sequential loop in every tier × thread
+    // combination — the invariant the zero plane's per-rank slices and the
+    // replica plane's fused apply both stand on.
+    let mut rng = Rng::new(0xADA);
+    for &len in &[1usize, 7, 33, 5000, 40_000] {
+        let g = rand_vec(&mut rng, len);
+        let p0 = rand_vec(&mut rng, len);
+        let m0 = rand_vec(&mut rng, len);
+        let v0: Vec<f32> = rand_vec(&mut rng, len).iter().map(|v| v.abs()).collect();
+
+        let (mut p_ref, mut m_ref) = (p0.clone(), m0.clone());
+        scalar::sgd_apply(&mut p_ref, &mut m_ref, &g, 0.05, 0.9);
+        let (mut ap_ref, mut am_ref, mut av_ref) = (p0.clone(), m0.clone(), v0.clone());
+        let (c1, c2) = (0.1f32, 0.001f32);
+        scalar::adam_apply(
+            &mut ap_ref, &mut am_ref, &mut av_ref, &g, 0.001, 0.9, 0.999, 1e-8, c1, c2,
+        );
+
+        for tier in KernelTier::available() {
+            for threads in [1usize, 2, 7] {
+                let pool = Pool::with_config(threads, tier);
+                let tag = format!("{}/len{len}t{threads}", tier.as_str());
+
+                let (mut p, mut mm) = (p0.clone(), m0.clone());
+                linalg::sgd_apply(&pool, &mut p, &mut mm, &g, 0.05, 0.9);
+                assert_bits(&p, &p_ref, &format!("sgd_p/{tag}"));
+                assert_bits(&mm, &m_ref, &format!("sgd_m/{tag}"));
+
+                let (mut p, mut mm, mut vv) = (p0.clone(), m0.clone(), v0.clone());
+                linalg::adam_apply(
+                    &pool, &mut p, &mut mm, &mut vv, &g, 0.001, 0.9, 0.999, 1e-8, c1, c2,
+                );
+                assert_bits(&p, &ap_ref, &format!("adam_p/{tag}"));
+                assert_bits(&mm, &am_ref, &format!("adam_m/{tag}"));
+                assert_bits(&vv, &av_ref, &format!("adam_v/{tag}"));
+            }
         }
     }
 }

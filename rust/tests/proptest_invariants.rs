@@ -420,6 +420,64 @@ fn prop_topk_indices_strictly_increasing_and_roundtrip_sparse() {
 }
 
 #[test]
+fn prop_topk_partial_select_matches_full_sort_reference() {
+    // The O(n) quickselect encoder must keep EXACTLY the set the
+    // historical full sort kept, ties and all. Values are drawn from a
+    // tiny magnitude alphabet so nearly every draw is riddled with
+    // magnitude ties straddling the k cut — the case where an unstable
+    // partition could legally differ from an unstable sort if the key
+    // were not duplicate-free.
+    check("topk_select_vs_sort", 400, |rng, case| {
+        let len = 1 + rng.below(97);
+        let x: Vec<f32> = (0..len)
+            .map(|_| {
+                let mag = [0.0f32, 1.0, 1.0, 2.0, 4.0][rng.below(5)];
+                if rng.uniform() < 0.5 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        let (idx, val) = dynamix::comm::wire::topk_encode(&x);
+        let k = dynamix::comm::wire::topk_k(len);
+        let mut order: Vec<u32> = (0..len as u32).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(x[i as usize].abs().to_bits()), i));
+        let mut ridx = order[..k].to_vec();
+        ridx.sort_unstable();
+        assert_eq!(idx, ridx, "case {case}: partial select kept a different set");
+        for (&i, v) in ridx.iter().zip(&val) {
+            assert_eq!(v.to_bits(), x[i as usize].to_bits(), "case {case}: idx {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_q8_dispatched_codec_matches_scalar_transliteration() {
+    // Whatever tier `DYNAMIX_KERNEL` resolved for this process, the wire
+    // bytes must equal the plain scalar loops (the CI kernel sweep runs
+    // this under every tier, which is what pins the AVX2 lanes).
+    check("q8_vs_scalar", 400, |rng, case| {
+        let x: Vec<f32> = rand_f32s(rng, 70);
+        let (scale, q) = dynamix::comm::wire::q8_encode(&x);
+        let max_bits = x.iter().map(|v| v.abs().to_bits()).max().unwrap_or(0);
+        let e = ((max_bits >> 23) & 0xFF) as i32 - 127;
+        let (rs, rq): (f32, Vec<i8>) = if max_bits == 0 || !(-120..=127).contains(&e) {
+            (0.0, vec![0; x.len()])
+        } else {
+            let s = f32::from_bits(((e - 6 + 127) as u32) << 23);
+            (s, x.iter().map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8).collect())
+        };
+        assert_eq!(scale.to_bits(), rs.to_bits(), "case {case}: scale");
+        assert_eq!(q, rq, "case {case}: bytes");
+        let dec = dynamix::comm::wire::q8_decode(scale, &q).unwrap();
+        for (i, (d, &b)) in dec.iter().zip(&q).enumerate() {
+            assert_eq!(d.to_bits(), (b as f32 * scale).to_bits(), "case {case}: decode {i}");
+        }
+    });
+}
+
+#[test]
 fn prop_wire_roundtrip_random_messages() {
     check("wire_roundtrip", 600, |rng, case| {
         let msg = random_wire_msg(rng);
